@@ -1,0 +1,74 @@
+//! Inspect the four ReLU circuit generations: gate composition, input
+//! layout, garbled sizes, and a live garble/evaluate trace of one ReLU.
+//!
+//! ```bash
+//! cargo run --release --example gc_inspect -- --k 12
+//! ```
+
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::circuits::stoch_sign_gc;
+use circa::field::Fp;
+use circa::gc::size::CircuitCost;
+use circa::protocol::offline::{build_circuit, server_input_base};
+use circa::ss::SharePair;
+use circa::util::args::Args;
+use circa::util::{Rng, Timer};
+
+fn main() {
+    let args = Args::from_env();
+    let k = args.get_u64("k", 12) as u32;
+
+    println!("Circa circuit inspector (k = {k})\n");
+    let variants = [
+        ReluVariant::BaselineRelu,
+        ReluVariant::NaiveSign,
+        ReluVariant::StochasticSign { mode: FaultMode::PosZero },
+        ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero },
+    ];
+
+    println!(
+        "{:<22} {:>6} {:>6} {:>8} {:>8} {:>10} {:>10}",
+        "variant", "ANDs", "XORs", "cli-in", "srv-in", "table B", "total B"
+    );
+    for v in variants {
+        let c = build_circuit(v);
+        let cost = CircuitCost::of(&c);
+        let srv_base = server_input_base(v);
+        println!(
+            "{:<22} {:>6} {:>6} {:>8} {:>8} {:>10} {:>10}",
+            v.name(),
+            cost.n_and,
+            cost.n_xor,
+            srv_base,
+            cost.n_inputs - srv_base,
+            cost.table_bytes(),
+            cost.total_bytes()
+        );
+    }
+
+    // Live trace: garble + evaluate one truncated stochastic sign.
+    println!("\n--- live garble/evaluate trace (~sign_{k}, x = -5000) ---");
+    let mut rng = Rng::new(7);
+    let circuit = stoch_sign_gc::build_truncated(k, FaultMode::PosZero);
+    let t = Timer::new();
+    let (gc, enc) = circa::gc::garble(&circuit, &mut rng);
+    println!("garble     : {:>8.1} us ({} table bytes)", t.elapsed_us() as f64, gc.table_bytes());
+
+    let x = Fp::from_i64(-5000);
+    let tt = circa::field::random_fp(&mut rng);
+    let shares = SharePair::share_with_t(x, tt);
+    let r = circa::field::random_fp(&mut rng);
+    let inputs = stoch_sign_gc::encode_inputs(shares.client, shares.server, r, k);
+    let labels = enc.encode_all(&inputs);
+
+    let t = Timer::new();
+    let out = circa::gc::evaluate(&circuit, &gc, &labels);
+    println!("evaluate   : {:>8.1} us", t.elapsed_us() as f64);
+
+    let decoded = gc.decode(&out);
+    let vs = circa::circuits::spec::bits_fp(&decoded);
+    let v = vs + r;
+    println!("sign share : {} -> v = {} (x = {}, exact sign {})",
+        vs.to_i64(), v.to_i64(), x.to_i64(), x.is_nonneg() as i64);
+    println!("\n(the multiply x*v then runs on Beaver triples — outside the GC)");
+}

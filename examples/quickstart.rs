@@ -1,0 +1,81 @@
+//! Quickstart: one private inference with Circa's truncated stochastic
+//! ReLU on a tiny network, printing what each optimization buys.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use circa::bench_harness::relu_cost;
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::circuits::{relu_gc, stoch_sign_gc};
+use circa::field::Fp;
+use circa::gc::size::CircuitCost;
+use circa::protocol::linear::{LinearOp, Matrix};
+use circa::protocol::server::{offline_network, run_inference, NetworkPlan};
+use circa::util::Rng;
+use std::sync::Arc;
+
+fn main() {
+    println!("Circa quickstart — stochastic ReLUs for private inference\n");
+    let mut rng = Rng::new(1);
+
+    // 1. What the garbled circuits look like.
+    let baseline = CircuitCost::of(&relu_gc::build());
+    let circa = CircuitCost::of(&stoch_sign_gc::build_truncated(12, FaultMode::PosZero));
+    println!("per-ReLU garbled circuit:");
+    println!("  baseline ReLU GC : {baseline}");
+    println!("  Circa ~sign_12   : {circa}");
+    println!(
+        "  -> {:.1}x smaller tables\n",
+        baseline.table_bytes() as f64 / circa.table_bytes() as f64
+    );
+
+    // 2. Measured per-ReLU cost of both variants (real protocol).
+    let base_cost = relu_cost(ReluVariant::BaselineRelu, 512, &mut rng);
+    let circa_cost = relu_cost(
+        ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero },
+        512,
+        &mut rng,
+    );
+    println!("measured online cost per ReLU:");
+    println!("  baseline: {:.2} us", base_cost.online_s * 1e6);
+    println!(
+        "  Circa   : {:.2} us  ({:.1}x faster)\n",
+        circa_cost.online_s * 1e6,
+        base_cost.online_s / circa_cost.online_s
+    );
+
+    // 3. A full 2-party private inference on a small MLP.
+    let linears: Vec<Arc<dyn LinearOp>> = vec![
+        Arc::new(Matrix::random(16, 8, 50, &mut rng)),
+        Arc::new(Matrix::random(8, 16, 50, &mut rng)),
+        Arc::new(Matrix::random(4, 8, 50, &mut rng)),
+    ];
+    let plan = NetworkPlan::unscaled(
+        linears,
+        ReluVariant::TruncatedSign { k: 6, mode: FaultMode::PosZero },
+    );
+    let (client_net, server_net, offline_bytes) = offline_network(&plan, &mut rng);
+    let input: Vec<Fp> = (0..8).map(|i| Fp::from_i64(2000 + 37 * i)).collect();
+    let (logits, stats) = run_inference(&client_net, &server_net, &input);
+
+    // Plaintext check.
+    let mut want = input.clone();
+    for (i, op) in plan.linears.iter().enumerate() {
+        want = op.apply(&want);
+        if i + 1 < plan.linears.len() {
+            want = want.iter().map(|&v| circa::field::relu_exact(v)).collect();
+        }
+    }
+    println!("2-party inference on an 8->16->8->4 MLP (24 stochastic ReLUs):");
+    println!("  logits (private) : {:?}", logits.iter().map(|v| v.to_i64()).collect::<Vec<_>>());
+    println!("  logits (plain)   : {:?}", want.iter().map(|v| v.to_i64()).collect::<Vec<_>>());
+    println!("  online time      : {:.2} ms", stats.online_s * 1e3);
+    println!(
+        "  online traffic   : {} B down / {} B up",
+        stats.bytes_to_client, stats.bytes_to_server
+    );
+    println!("  offline material : {offline_bytes} B (garbled circuits + OT + triples + HE)");
+    assert_eq!(logits, want, "stochastic faults are ~impossible at these magnitudes");
+    println!("\nOK — private result matches plaintext.");
+}

@@ -1,0 +1,123 @@
+//! End-to-end serving driver (EXPERIMENTS.md §E2E): load the *trained*
+//! demo CNN from `artifacts/`, stand up the PI serving coordinator
+//! (offline-material bank + batcher + worker pool), push the real test
+//! set through the full 2-party protocol, and report accuracy,
+//! latency percentiles, throughput, and communication — for baseline
+//! ReLU GCs vs Circa's truncated stochastic ReLUs.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_pi -- --requests 64 --k 12
+//! ```
+
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::coordinator::{PiService, ServiceConfig};
+
+use circa::nn::weights::{load_dataset, load_weights};
+use circa::protocol::server::NetworkPlan;
+use circa::runtime::ArtifactDir;
+use circa::util::args::Args;
+use circa::util::Timer;
+use std::sync::Arc;
+
+fn run_variant(
+    name: &str,
+    variant: ReluVariant,
+    rescale_bits: Vec<u32>,
+    linears: Vec<Arc<dyn circa::protocol::linear::LinearOp>>,
+    dataset: &circa::nn::weights::Dataset,
+    n_requests: usize,
+    workers: usize,
+) {
+    println!("\n=== serving with {name} ===");
+    let plan = Arc::new(NetworkPlan { linears, variant, rescale_bits });
+    let svc = PiService::start(
+        plan,
+        ServiceConfig { workers, pool_target: 2 * n_requests.min(64), pool_dealers: workers, ..Default::default() },
+    );
+    eprintln!("warming material bank ...");
+    svc.warmup(n_requests.min(16));
+
+    let t = Timer::new();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let idx = i % dataset.n;
+            svc.submit(dataset.image(idx).to_vec())
+        })
+        .collect();
+    let mut correct = 0;
+    let mut latencies = Vec::new();
+    let mut bytes = 0u64;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("response");
+        let pred = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| v.to_i64())
+            .map(|(c, _)| c as u32)
+            .unwrap();
+        if pred == dataset.labels[i % dataset.n] {
+            correct += 1;
+        }
+        latencies.push((resp.queue_us + resp.online_us) as f64 / 1e3);
+        bytes += resp.bytes;
+    }
+    let wall = t.elapsed_s();
+    let snap = svc.metrics.snapshot();
+
+    println!("  requests          : {n_requests}");
+    println!("  accuracy (private): {:.2}%", 100.0 * correct as f64 / n_requests as f64);
+    println!("  throughput        : {:.1} inf/s", n_requests as f64 / wall);
+    println!(
+        "  latency ms        : p50 {:.1}  p99 {:.1}  mean {:.1}",
+        circa::util::stats::percentile(&latencies, 50.0),
+        circa::util::stats::percentile(&latencies, 99.0),
+        circa::util::stats::mean(&latencies)
+    );
+    println!("  online bytes/req  : {}", bytes / n_requests as u64);
+    println!(
+        "  bank: produced {} sessions, dry leases {}",
+        svc.pool.produced(),
+        snap.pool_dry_events
+    );
+    svc.shutdown();
+}
+
+fn main() {
+    let args = Args::from_env();
+    let n_requests = args.get_usize("requests", 48);
+    let workers = args.get_usize("workers", 4);
+    let k = args.get_u64("k", 12) as u32;
+
+    let dir = ArtifactDir::discover().expect("run `make artifacts` first");
+    let net = load_weights(&dir.path("weights.bin")).expect("weights");
+    let ds = load_dataset(&dir.path("dataset.bin")).expect("dataset");
+    println!(
+        "loaded {}: {} linear layers, {} ReLUs/inference, {} test images",
+        net.name,
+        net.layers.len(),
+        net.total_relus(),
+        ds.n
+    );
+    let q_acc = dir.manifest_f64("cnn_quantized_acc").unwrap_or(0.0);
+    println!("plaintext quantized accuracy (exact ReLU): {:.2}%", q_acc * 100.0);
+
+    run_variant(
+        &format!("Circa ~sign_k (k={k}, PosZero)"),
+        ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero },
+        net.rescale_bits(),
+        net.linears(),
+        &ds,
+        n_requests,
+        workers,
+    );
+    run_variant(
+        "baseline ReLU GC (Delphi/Gazelle)",
+        ReluVariant::BaselineRelu,
+        net.rescale_bits(),
+        net.linears(),
+        &ds,
+        n_requests,
+        workers,
+    );
+}

@@ -1,0 +1,75 @@
+//! Truncation sweep through the PJRT-compiled JAX model: how accuracy
+//! and fault rate respond to `k` in both fault modes (the Fig. 4 shape,
+//! interactive version).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example sweep_truncation -- --batches 2
+//! ```
+
+use circa::field::{Fp, PRIME};
+use circa::nn::weights::{accuracy, load_dataset};
+use circa::runtime::model_exec::{MODE_EXACT, MODE_NEGPASS, MODE_POSZERO};
+use circa::runtime::{ArtifactDir, CnnExecutable};
+use circa::util::args::Args;
+use circa::util::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let n_batches = args.get_usize("batches", 2);
+    let net = args.get_or("net", "cnn").to_string();
+
+    let dir = ArtifactDir::discover().expect("run `make artifacts` first");
+    let client = xla::PjRtClient::cpu().expect("pjrt");
+    let exe = if net == "mlp" {
+        CnnExecutable::load_mlp(&client, &dir).unwrap()
+    } else {
+        CnnExecutable::load_cnn(&client, &dir).unwrap()
+    };
+    let ds = load_dataset(&dir.path("dataset.bin")).unwrap();
+    let b = exe.batch;
+    let per_ex = exe.relus_per_example();
+    let (n1, n2) = if per_ex == 768 { (512, 256) } else { (128, 64) };
+    let mut rng = Rng::new(7);
+
+    let mut point = |k: i32, mode: i32, rng: &mut Rng| -> (f64, f64) {
+        let mut correct = 0.0;
+        let mut faults = 0i64;
+        for batch in 0..n_batches {
+            let base = batch * b;
+            let images: Vec<i32> = ds.images[base * ds.dim..(base + b) * ds.dim]
+                .iter()
+                .map(|f| f.to_i64() as i32)
+                .collect();
+            let t1: Vec<i32> = (0..b * n1).map(|_| rng.below(PRIME) as i32).collect();
+            let t2: Vec<i32> = (0..b * n2).map(|_| rng.below(PRIME) as i32).collect();
+            let out = exe.run(&images, &t1, &t2, k, mode).unwrap();
+            let logits: Vec<Vec<Fp>> = (0..b)
+                .map(|i| {
+                    out.logits[i * 10..(i + 1) * 10]
+                        .iter()
+                        .map(|&v| Fp::from_i64(v as i64))
+                        .collect()
+                })
+                .collect();
+            correct += accuracy(&logits, &ds.labels[base..base + b]) * b as f64;
+            faults += out.total_faults();
+        }
+        (correct / (n_batches * b) as f64, faults as f64 / (n_batches * b * per_ex) as f64)
+    };
+
+    let (exact_acc, _) = point(0, MODE_EXACT, &mut rng);
+    println!("net={net}  batches={n_batches}  baseline(exact) accuracy {:.2}%\n", exact_acc * 100.0);
+    println!("{:>4}  {:>9} {:>8}   {:>9} {:>8}", "k", "PZ acc%", "PZ fr", "NP acc%", "NP fr");
+    for k in (8..=24).step_by(2) {
+        let (pa, pf) = point(k, MODE_POSZERO, &mut rng);
+        let (na, nf) = point(k, MODE_NEGPASS, &mut rng);
+        let marker = if exact_acc - pa <= 0.01 { " <= within 1%" } else { "" };
+        println!(
+            "{k:>4}  {:>8.2} {:>8.3}   {:>8.2} {:>8.3}{marker}",
+            pa * 100.0,
+            pf,
+            na * 100.0,
+            nf
+        );
+    }
+}

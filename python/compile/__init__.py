@@ -1,0 +1,13 @@
+"""Build-time compile path: JAX model + Pallas kernels + AOT lowering.
+
+Never imported at runtime — the Rust binary consumes only the artifacts
+this package writes (`make artifacts`).
+
+x64 is enabled globally: the field arithmetic needs exact int64
+(`raw + t` exceeds int32 for a 31-bit prime); float dtypes are kept
+explicit (`float32`) throughout the training code.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,262 @@
+"""AOT artifact builder: train the demo nets, quantize, dump weights +
+dataset in the Rust binary format, and lower the L2 model to HLO *text*
+(NOT ``.serialize()`` — the image's xla_extension 0.5.1 rejects jax>=0.5
+64-bit-id protos; the text parser reassigns ids. See
+/opt/xla-example/README.md).
+
+Outputs (``make artifacts`` -> artifacts/):
+  demo_cnn.hlo.txt   forward_cnn(images,t1,t2,k,mode,w1,b1,w2,b2,w3,b3)
+  demo_mlp.hlo.txt   forward_mlp(...)
+  stoch_relu.hlo.txt standalone batched kernel (x,t,k,mode) -> (y,faults)
+  weights.bin        quantized CNN parameters      (magic CIRCAW01)
+  weights_mlp.bin    quantized MLP parameters
+  dataset.bin        quantized eval set            (magic CIRCAD01)
+  manifest.json      human-readable summary + float/quantized accuracy
+
+Python runs ONCE, at build time; the Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import train as train_mod
+from .model import (
+    CNN_SHAPES,
+    INPUT_SCALE,
+    MLP_DIMS,
+    RESCALE,
+    forward_cnn,
+    forward_mlp,
+    quantize_input,
+)
+
+BATCH = 128
+RELU_N = 1 << 16  # standalone kernel size
+
+
+# --------------------------------------------------------------------------
+# Binary writers (mirrors rust util::bytes little-endian framing).
+# --------------------------------------------------------------------------
+
+def _w_u8(buf, v):
+    buf.append(struct.pack("<B", v))
+
+
+def _w_u32(buf, v):
+    buf.append(struct.pack("<I", v))
+
+
+def _w_u64(buf, v):
+    buf.append(struct.pack("<Q", v))
+
+
+def _w_string(buf, s):
+    raw = s.encode()
+    _w_u64(buf, len(raw))
+    buf.append(raw)
+
+
+def _w_i32_vec(buf, arr):
+    arr = np.asarray(arr, np.int32).reshape(-1)
+    _w_u64(buf, arr.size)
+    buf.append(arr.tobytes())
+
+
+def write_weights(path, name, layers):
+    """layers: list of ('conv', dims..., w, b, rescale) / ('dense', ...)."""
+    buf = [b"CIRCAW01"]
+    _w_string(buf, name)
+    _w_u32(buf, len(layers))
+    for layer in layers:
+        if layer[0] == "conv":
+            (_, in_c, in_h, in_w, out_c, k, stride, pad, w, b, rescale) = layer
+            _w_u8(buf, 0)
+            for v in (in_c, in_h, in_w, out_c, k, stride, pad):
+                _w_u32(buf, v)
+            _w_i32_vec(buf, w)
+            _w_i32_vec(buf, b)
+            _w_u32(buf, rescale)
+        else:
+            (_, in_dim, out_dim, w, b, rescale) = layer
+            _w_u8(buf, 1)
+            _w_u32(buf, in_dim)
+            _w_u32(buf, out_dim)
+            _w_i32_vec(buf, w)
+            _w_i32_vec(buf, b)
+            _w_u32(buf, rescale)
+    with open(path, "wb") as f:
+        f.write(b"".join(buf))
+
+
+def write_dataset(path, images_q, labels):
+    n, dim = images_q.shape[0], int(np.prod(images_q.shape[1:]))
+    buf = [b"CIRCAD01"]
+    _w_u32(buf, n)
+    _w_u32(buf, dim)
+    _w_u32(buf, int(labels.max()) + 1)
+    _w_i32_vec(buf, images_q.reshape(n, dim))
+    for y in labels:
+        _w_u32(buf, int(y))
+    with open(path, "wb") as f:
+        f.write(b"".join(buf))
+
+
+# --------------------------------------------------------------------------
+# HLO lowering (text interchange — see module docstring).
+# --------------------------------------------------------------------------
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_cnn():
+    c = CNN_SHAPES
+    specs = (
+        _i32((BATCH, 1, 16, 16)),                 # images
+        _i32((BATCH, 8, 8, 8)),                   # t1
+        _i32((BATCH, 16, 4, 4)),                  # t2
+        _i32(()),                                 # k
+        _i32(()),                                 # mode
+        _i32((c["conv1"]["out_c"], 1, 3, 3)),     # w1
+        _i32((c["conv1"]["out_c"],)),             # b1
+        _i32((c["conv2"]["out_c"], c["conv2"]["in_c"], 3, 3)),  # w2
+        _i32((c["conv2"]["out_c"],)),             # b2
+        _i32((c["dense"]["out_dim"], c["dense"]["in_dim"])),    # w3
+        _i32((c["dense"]["out_dim"],)),           # b3
+    )
+    return to_hlo_text(jax.jit(forward_cnn).lower(*specs))
+
+
+def lower_mlp():
+    d = MLP_DIMS
+    specs = (
+        _i32((BATCH, d[0])),
+        _i32((BATCH, d[1])),
+        _i32((BATCH, d[2])),
+        _i32(()),
+        _i32(()),
+        _i32((d[1], d[0])),
+        _i32((d[1],)),
+        _i32((d[2], d[1])),
+        _i32((d[2],)),
+        _i32((d[3], d[2])),
+        _i32((d[3],)),
+    )
+    return to_hlo_text(jax.jit(forward_mlp).lower(*specs))
+
+
+def lower_stoch_relu():
+    from .kernels.stochastic_sign import stoch_relu
+
+    def fn(x, t, k, mode):
+        return stoch_relu(x, t, k, mode)
+
+    specs = (_i32((RELU_N,)), _i32((RELU_N,)), _i32(()), _i32(()))
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+# --------------------------------------------------------------------------
+# Main.
+# --------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=1200)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+
+    print("[aot] training demo models ...", flush=True)
+    res = train_mod.train_demo_models(steps=args.steps)
+    cw = res["cnn_params"]
+    mw = res["mlp_params"]
+
+    c = CNN_SHAPES
+    write_weights(
+        os.path.join(args.out, "weights.bin"),
+        "demo_cnn",
+        [
+            ("conv", 1, 16, 16, c["conv1"]["out_c"], 3, 2, 1, cw[0], cw[1], RESCALE),
+            ("conv", c["conv2"]["in_c"], 8, 8, c["conv2"]["out_c"], 3, 2, 1, cw[2], cw[3], RESCALE),
+            ("dense", c["dense"]["in_dim"], c["dense"]["out_dim"], cw[4], cw[5], 0),
+        ],
+    )
+    d = MLP_DIMS
+    write_weights(
+        os.path.join(args.out, "weights_mlp.bin"),
+        "demo_mlp",
+        [
+            ("dense", d[0], d[1], mw[0], mw[1], RESCALE),
+            ("dense", d[1], d[2], mw[2], mw[3], RESCALE),
+            ("dense", d[2], d[3], mw[4], mw[5], 0),
+        ],
+    )
+
+    imgs_q = np.asarray(quantize_input(jnp.asarray(res["test_images"])))
+    write_dataset(os.path.join(args.out, "dataset.bin"), imgs_q, res["test_labels"])
+
+    # Quantized exact-ReLU accuracy (the Tables 1/2 "Baseline Acc" at
+    # demo scale), computed through the same jitted path rust will run.
+    qs = [jnp.asarray(x) for x in cw]
+    zt1 = jnp.zeros((imgs_q.shape[0], 8, 8, 8), jnp.int32)
+    zt2 = jnp.zeros((imgs_q.shape[0], 16, 4, 4), jnp.int32)
+    logits, _ = forward_cnn(jnp.asarray(imgs_q), zt1, zt2, 0, 2, *qs)
+    q_acc = float(jnp.mean(jnp.argmax(logits, 1) == jnp.asarray(res["test_labels"])))
+
+    print("[aot] lowering HLO artifacts ...", flush=True)
+    for name, text in [
+        ("demo_cnn.hlo.txt", lower_cnn()),
+        ("demo_mlp.hlo.txt", lower_mlp()),
+        ("stoch_relu.hlo.txt", lower_stoch_relu()),
+    ]:
+        with open(os.path.join(args.out, name), "w") as f:
+            f.write(text)
+        print(f"[aot]   {name}: {len(text)} chars")
+
+    manifest = dict(
+        version="circa-artifacts-1",
+        batch=BATCH,
+        relu_n=RELU_N,
+        input_scale=INPUT_SCALE,
+        rescale=RESCALE,
+        cnn_float_acc=res["cnn_float_acc"],
+        mlp_float_acc=res["mlp_float_acc"],
+        cnn_quantized_acc=q_acc,
+        n_test=int(imgs_q.shape[0]),
+        train_steps=args.steps,
+        entries=dict(
+            demo_cnn="forward_cnn(images[B,1,16,16], t1[B,8,8,8], t2[B,16,4,4], k, mode, w1,b1,w2,b2,w3,b3) -> (logits[B,10], faults[2])",
+            demo_mlp="forward_mlp(images[B,256], t1[B,128], t2[B,64], k, mode, w1,b1,w2,b2,w3,b3) -> (logits[B,10], faults[2])",
+            stoch_relu="stoch_relu(x[N], t[N], k, mode) -> (y[N], faults[N])",
+        ),
+    )
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    print(
+        f"[aot] done in {time.time() - t0:.1f}s — float acc "
+        f"cnn={res['cnn_float_acc']:.3f} mlp={res['mlp_float_acc']:.3f}, "
+        f"quantized cnn={q_acc:.3f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Deterministic synthetic image dataset (DESIGN.md §5 substitution).
+
+CIFAR/TinyImageNet are not available offline, and the accuracy claims
+under test (Fig. 4's flat-then-cliff accuracy-vs-k, PosZero vs NegPass)
+depend on the *activation distribution relative to 2^k*, not on natural
+images. This generator produces a 10-class 16x16 grayscale task that a
+small CNN learns to >90%: each class is a smoothed random template with
+per-sample amplitude jitter, additive noise, and random shifts.
+"""
+
+import numpy as np
+
+N_CLASSES = 10
+HW = 16
+
+
+def _smooth(img):
+    """3x3 box blur (keeps templates low-frequency => learnable)."""
+    out = img.copy()
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            if dy == 0 and dx == 0:
+                continue
+            out += np.roll(np.roll(img, dy, 0), dx, 1)
+    return out / 9.0
+
+
+def make_dataset(n, seed):
+    """Return (images [n,1,HW,HW] float32 in [0, ~1.5], labels [n] int32)."""
+    rng = np.random.default_rng(seed)
+    templates = np.stack(
+        [_smooth(_smooth(rng.normal(0.0, 1.0, (HW, HW)))) for _ in range(N_CLASSES)]
+    )
+    # Normalize templates to unit peak so classes share a scale.
+    templates /= np.abs(templates).max(axis=(1, 2), keepdims=True)
+
+    labels = rng.integers(0, N_CLASSES, size=n).astype(np.int32)
+    amp = rng.uniform(0.5, 1.4, size=(n, 1, 1)).astype(np.float32)
+    noise = rng.normal(0.0, 0.55, size=(n, HW, HW)).astype(np.float32)
+    imgs = amp * templates[labels] + noise
+    # Random +-2 pixel shifts for translation variance.
+    shifts = rng.integers(-2, 3, size=(n, 2))
+    for i in range(n):
+        imgs[i] = np.roll(np.roll(imgs[i], shifts[i, 0], 0), shifts[i, 1], 1)
+    # ReLU-like clamp into a non-negative input range (images are
+    # non-negative in the paper's pipelines too).
+    imgs = np.clip(imgs + 0.5, 0.0, 1.5).astype(np.float32)
+    return imgs[:, None, :, :], labels
+
+
+def train_test_split(n_train, n_test, seed):
+    imgs, labels = make_dataset(n_train + n_test, seed)
+    return (
+        (imgs[:n_train], labels[:n_train]),
+        (imgs[n_train:], labels[n_train:]),
+    )

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for Circa.
+
+``stochastic_sign`` is the paper's compute hot-spot: the truncated
+stochastic sign test over secret shares (Eq. 2/3), applied as
+``ReLU_k(x) = x * sign_k(x)``. ``field_matmul`` is the exact int matmul
+used by the quantized linear layers. ``ref`` holds the pure-jnp oracles
+the kernels are pytest/hypothesis-checked against.
+
+All kernels lower with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and correctness (not TPU wallclock) is what the
+artifact path needs. See DESIGN.md §Hardware-Adaptation for the real-TPU
+mapping (VMEM block schedule, VPU elementwise sign, MXU limb-decomposed
+matmul).
+"""

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+These implement the *normative* semantics (bit-exact to the Rust GC
+comparator in ``rust/src/simfault``): pytest/hypothesis checks the Pallas
+kernels against these, and the Rust integration tests check the PJRT-run
+artifacts against the Rust fault model, closing the loop
+GC ⇔ rust model ⇔ jnp ref ⇔ pallas kernel.
+"""
+
+import jax.numpy as jnp
+
+# The paper's 31-bit prime (§4.1).
+PRIME = 2_138_816_513
+# Positive/negative encoding boundary: x is negative iff raw >= HALF.
+HALF = PRIME // 2
+
+# Fault modes (0/1 match rust circuits::spec::FaultMode; 2 = exact ReLU).
+MODE_POSZERO = 0
+MODE_NEGPASS = 1
+MODE_EXACT = 2
+
+
+def to_field(x):
+    """Signed int -> canonical field representative in [0, p)."""
+    x = jnp.asarray(x, jnp.int64)
+    return jnp.where(x >= 0, x, x + PRIME)
+
+
+def stoch_sign_bit(x, t, k, mode):
+    """The stochastic sign bit exactly as the GC computes it.
+
+    x: signed activations (int32/int64, |x| < p/2)
+    t: uniform field elements in [0, p) (int32 raw < 2^31)
+    k: truncation bits (scalar)
+    mode: MODE_POSZERO / MODE_NEGPASS / MODE_EXACT
+    Returns int32 1 where the computed sign is non-negative.
+    """
+    x = jnp.asarray(x, jnp.int64)
+    t = jnp.asarray(t, jnp.int64)
+    raw = to_field(x)
+    xs = (raw + t) % PRIME          # server share <x>_s = x + t mod p
+    a = xs >> k                     # truncated comparands
+    b = t >> k                      # p - <x>_c = t, truncated
+    is_neg_stoch = jnp.where(mode == MODE_NEGPASS, a < b, a <= b)
+    exact_nonneg = x >= 0
+    nonneg = jnp.where(mode == MODE_EXACT, exact_nonneg, ~is_neg_stoch)
+    return nonneg.astype(jnp.int32)
+
+
+def stoch_relu(x, t, k, mode):
+    """ReLU_k(x) = x * sign_k(x); returns (y, fault) both int32.
+
+    ``fault`` flags sign decisions that differ from the exact sign (for
+    x == 0 the PosZero path always "faults" in sign but not in value —
+    matching rust simfault::fault_prob).
+    """
+    x = jnp.asarray(x, jnp.int32)
+    s = stoch_sign_bit(x, t, k, mode)
+    y = jnp.where(s == 1, x, 0).astype(jnp.int32)
+    fault = (s != (x >= 0).astype(jnp.int32)).astype(jnp.int32)
+    return y, fault
+
+
+def int_matmul(a, b):
+    """Exact (a @ b) for quantized ints in int64.
+
+    With |a|, |b| < 2^15 and K <= 2^16 the int64 accumulation is exact and
+    equals the signed decode of the mod-p product — the regime every
+    quantized layer here operates in.
+    """
+    return jnp.matmul(jnp.asarray(a, jnp.int64), jnp.asarray(b, jnp.int64))

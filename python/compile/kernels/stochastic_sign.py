@@ -1,0 +1,108 @@
+"""Pallas kernel: the truncated stochastic ReLU (Circa's hot-spot).
+
+The kernel streams activation/randomness blocks HBM->VMEM and applies the
+share-comparison sign test elementwise on the VPU:
+
+    raw = x mod p                       (signed -> field encode)
+    <x>_s = raw + t mod p               (server share)
+    sign  = !( <x>_s >> k  <=/<  t >> k )
+    y     = sign ? x : 0
+
+Block schedule: 1-D grid over ``BLOCK``-sized row blocks; four live
+buffers per block (x, t, y, fault) at int32 = 16 B/elem -> a 64 Ki block
+costs 1 MiB VMEM, comfortably double-bufferable within a 16 MiB budget
+(DESIGN.md §Perf). ``k``/``mode`` ride along as (1,1) SMEM-like operands.
+
+Lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); on a real TPU this kernel is pure VPU work.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MODE_NEGPASS, MODE_EXACT, PRIME
+
+# Default element block; callers may override for small shapes.
+BLOCK = 65536
+
+
+def _kernel(x_ref, t_ref, k_ref, mode_ref, y_ref, fault_ref):
+    x = x_ref[...].astype(jnp.int64)
+    t = t_ref[...].astype(jnp.int64)
+    k = k_ref[0]
+    mode = mode_ref[0]
+
+    raw = jnp.where(x >= 0, x, x + PRIME)
+    xs = raw + t
+    xs = jnp.where(xs >= PRIME, xs - PRIME, xs)  # single conditional sub
+    a = jax.lax.shift_right_logical(xs, k.astype(jnp.int64))
+    b = jax.lax.shift_right_logical(t, k.astype(jnp.int64))
+    is_neg_stoch = jnp.where(mode == MODE_NEGPASS, a < b, a <= b)
+    exact_nonneg = x >= 0
+    nonneg = jnp.where(mode == MODE_EXACT, exact_nonneg, ~is_neg_stoch)
+
+    y_ref[...] = jnp.where(nonneg, x, 0).astype(jnp.int32)
+    fault_ref[...] = (nonneg != exact_nonneg).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def stoch_relu(x, t, k, mode, block=BLOCK):
+    """Apply the truncated stochastic ReLU elementwise.
+
+    x:    int32 signed activations, any shape (flattened internally)
+    t:    int32 uniform field elements in [0, p), same shape
+    k:    int32 scalar — truncation bits
+    mode: int32 scalar — 0 PosZero / 1 NegPass / 2 exact
+    Returns (y, fault) with x's shape, both int32.
+    """
+    shape = x.shape
+    xf = x.reshape(-1)
+    tf = t.reshape(-1)
+    n = xf.shape[0]
+    blk = min(block, n)
+    # Pad to a whole number of blocks (padding lane: x=0, t=0 is inert).
+    pad = (-n) % blk
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad,), jnp.int32)])
+        tf = jnp.concatenate([tf, jnp.zeros((pad,), jnp.int32)])
+    grid = xf.shape[0] // blk
+
+    k_arr = jnp.asarray(k, jnp.int32).reshape(1)
+    mode_arr = jnp.asarray(mode, jnp.int32).reshape(1)
+
+    y, fault = pl.pallas_call(
+        _kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(xf.shape, jnp.int32),
+            jax.ShapeDtypeStruct(xf.shape, jnp.int32),
+        ],
+        interpret=True,
+    )(xf, tf, k_arr, mode_arr)
+
+    if pad:
+        y = y[:n]
+        fault = fault[:n]
+    return y.reshape(shape), fault.reshape(shape)
+
+
+def vmem_bytes(block=BLOCK):
+    """Estimated live VMEM per grid step (4 int32 buffers + int64 temps).
+
+    Used by the §Perf notes: int32 in/out (4 bufs) plus the int64
+    intermediates the compiler keeps live (~2 bufs worst case).
+    """
+    return block * (4 * 4 + 2 * 8)

@@ -1,0 +1,112 @@
+"""Layer-2: the quantized field-arithmetic model with Circa's stochastic
+ReLU, written in JAX and calling the Pallas kernel.
+
+Two demo networks (the accuracy workloads of Figs. 3/4 and the accuracy
+columns of Tables 1/2 at demo scale):
+
+* ``forward_cnn`` — conv(1->8, s2) / ReLU_k / conv(8->16, s2) / ReLU_k /
+  dense(256->10) on 16x16 inputs;
+* ``forward_mlp`` — 256 -> 128 / ReLU_k / 64 / ReLU_k / 10 (the "second
+  architecture" of Fig. 4's bottom row).
+
+Fixed-point scheme (matches rust nn::weights and DESIGN.md §4):
+inputs at scale 2^INPUT_SCALE, weights at 2^WEIGHT_SCALE, so every ReLU
+sees activations at scale 2^ACT_SCALE = 2^(INPUT+WEIGHT); after the ReLU
+the activations are rescaled back by RESCALE = WEIGHT_SCALE bits.
+Truncation k therefore bites values below 2^k at ACT scale — the same
+regime the paper's Fig. 3 histogram shows.
+
+``k`` and ``mode`` are runtime scalars, so ONE lowered artifact serves
+every point of the Fig. 4 sweep (mode 2 = exact ReLU baseline).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.stochastic_sign import stoch_relu
+
+INPUT_SCALE = 7
+WEIGHT_SCALE = 8
+ACT_SCALE = INPUT_SCALE + WEIGHT_SCALE  # 15, as Delphi's 15-bit scheme
+RESCALE = WEIGHT_SCALE
+
+# Architecture constants shared with train.py / aot.py / rust.
+CNN_SHAPES = dict(
+    conv1=dict(in_c=1, out_c=8, k=3, stride=2, pad=1, in_hw=16),
+    conv2=dict(in_c=8, out_c=16, k=3, stride=2, pad=1, in_hw=8),
+    dense=dict(in_dim=16 * 4 * 4, out_dim=10),
+)
+MLP_DIMS = (256, 128, 64, 10)
+
+
+def conv2d_int(x, w, b, stride, pad):
+    """Exact integer conv (NCHW / OIHW), int64 accumulation."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.int64),
+        w.astype(jnp.int64),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b.astype(jnp.int64)[None, :, None, None]
+
+
+def _relu_rescale(x, t, k, mode):
+    """Stochastic ReLU at ACT scale, then arithmetic-shift rescale.
+
+    Returns (y_rescaled int32, fault_count int64).
+    """
+    y, fault = stoch_relu(x.astype(jnp.int32), t, k, mode)
+    y = jnp.right_shift(y.astype(jnp.int32), RESCALE)
+    return y, jnp.sum(fault.astype(jnp.int64))
+
+
+def forward_cnn(images, t1, t2, k, mode, w1, b1, w2, b2, w3, b3):
+    """Quantized CNN forward with stochastic-ReLU fault injection.
+
+    images: int32 [B,1,16,16] at scale 2^INPUT_SCALE
+    t1:     int32 [B,8,8,8]   uniform field randomness for ReLU layer 1
+    t2:     int32 [B,16,4,4]  — for ReLU layer 2
+    k,mode: int32 scalars (mode 0/1/2 = PosZero/NegPass/exact)
+    w*/b*:  quantized int32 parameters (weights 2^WEIGHT_SCALE,
+            biases 2^ACT_SCALE)
+    Returns (logits int32 [B,10] at scale 2^ACT_SCALE, faults int64 [2]).
+    """
+    c = CNN_SHAPES
+    x = conv2d_int(images, w1, b1, c["conv1"]["stride"], c["conv1"]["pad"])
+    x, f1 = _relu_rescale(x, t1, k, mode)
+    x = conv2d_int(x, w2, b2, c["conv2"]["stride"], c["conv2"]["pad"])
+    x, f2 = _relu_rescale(x, t2, k, mode)
+    x = x.reshape(x.shape[0], -1)
+    logits = jnp.matmul(x.astype(jnp.int64), w3.astype(jnp.int64).T) + b3.astype(jnp.int64)
+    return logits.astype(jnp.int32), jnp.stack([f1, f2])
+
+
+def forward_mlp(images, t1, t2, k, mode, w1, b1, w2, b2, w3, b3):
+    """Quantized MLP forward (same conventions as ``forward_cnn``).
+
+    images: int32 [B,256]; t1: int32 [B,128]; t2: int32 [B,64].
+    """
+    x = images.astype(jnp.int64)
+    x = jnp.matmul(x, w1.astype(jnp.int64).T) + b1.astype(jnp.int64)
+    x, f1 = _relu_rescale(x, t1, k, mode)
+    x = jnp.matmul(x.astype(jnp.int64), w2.astype(jnp.int64).T) + b2.astype(jnp.int64)
+    x, f2 = _relu_rescale(x, t2, k, mode)
+    logits = jnp.matmul(x.astype(jnp.int64), w3.astype(jnp.int64).T) + b3.astype(jnp.int64)
+    return logits.astype(jnp.int32), jnp.stack([f1, f2])
+
+
+def quantize_input(images_f32):
+    """Float images -> int32 at scale 2^INPUT_SCALE."""
+    return jnp.asarray(
+        jnp.round(images_f32 * (1 << INPUT_SCALE)), jnp.int32
+    )
+
+
+def relu_count_cnn(batch):
+    """Per-layer ReLU element counts for a CNN batch (t tensor shapes)."""
+    return [(batch, 8, 8, 8), (batch, 16, 4, 4)]
+
+
+def relu_count_mlp(batch):
+    return [(batch, 128), (batch, 64)]

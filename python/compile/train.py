@@ -1,0 +1,145 @@
+"""Build-time training of the demo networks (float32, pure jnp SGD) and
+Delphi-style quantization of the result.
+
+Runs once inside ``make artifacts``; the quantized weights are dumped to
+``weights.bin``/``weights_mlp.bin`` for the Rust side and baked into the
+accuracy HLO artifacts' parameter lists.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import data
+from .model import ACT_SCALE, CNN_SHAPES, INPUT_SCALE, MLP_DIMS, WEIGHT_SCALE
+
+QUANT_MAX = (1 << 14) - 1  # 15-bit signed, matches rust field::fixed
+
+
+# --------------------------------------------------------------------------
+# Float reference models (training only).
+# --------------------------------------------------------------------------
+
+def _conv_f(x, w, b, stride, pad):
+    out = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b[None, :, None, None]
+
+
+def cnn_forward_f(params, x):
+    w1, b1, w2, b2, w3, b3 = params
+    c = CNN_SHAPES
+    x = jax.nn.relu(_conv_f(x, w1, b1, c["conv1"]["stride"], c["conv1"]["pad"]))
+    x = jax.nn.relu(_conv_f(x, w2, b2, c["conv2"]["stride"], c["conv2"]["pad"]))
+    x = x.reshape(x.shape[0], -1)
+    return x @ w3.T + b3
+
+
+def mlp_forward_f(params, x):
+    w1, b1, w2, b2, w3, b3 = params
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ w1.T + b1)
+    x = jax.nn.relu(x @ w2.T + b2)
+    return x @ w3.T + b3
+
+
+def _init_cnn(rng):
+    c = CNN_SHAPES
+    k1 = (c["conv1"]["out_c"], c["conv1"]["in_c"], 3, 3)
+    k2 = (c["conv2"]["out_c"], c["conv2"]["in_c"], 3, 3)
+    k3 = (c["dense"]["out_dim"], c["dense"]["in_dim"])
+    def he(shape, fan_in):
+        return jnp.asarray(
+            rng.normal(0, np.sqrt(2.0 / fan_in), shape), jnp.float32
+        )
+    return [
+        he(k1, 9), jnp.zeros(k1[0], jnp.float32),
+        he(k2, 72), jnp.zeros(k2[0], jnp.float32),
+        he(k3, k3[1]), jnp.zeros(k3[0], jnp.float32),
+    ]
+
+
+def _init_mlp(rng):
+    d = MLP_DIMS
+    def he(shape, fan_in):
+        return jnp.asarray(
+            rng.normal(0, np.sqrt(2.0 / fan_in), shape), jnp.float32
+        )
+    return [
+        he((d[1], d[0]), d[0]), jnp.zeros(d[1], jnp.float32),
+        he((d[2], d[1]), d[1]), jnp.zeros(d[2], jnp.float32),
+        he((d[3], d[2]), d[2]), jnp.zeros(d[3], jnp.float32),
+    ]
+
+
+def _loss(forward, params, x, y):
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def train(forward, params, train_set, steps, lr=0.05, batch=128, seed=0):
+    """Plain SGD with momentum 0.9 (no optax in this environment)."""
+    xs, ys = train_set
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.int32)
+    momentum = [jnp.zeros_like(p) for p in params]
+    grad_fn = jax.jit(jax.grad(lambda p, x, y: _loss(forward, p, x, y)))
+    rng = np.random.default_rng(seed)
+    n = xs.shape[0]
+    for step in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        g = grad_fn(params, xs[idx], ys[idx])
+        momentum = [0.9 * m + gi for m, gi in zip(momentum, g)]
+        params = [p - lr * m for p, m in zip(params, momentum)]
+    return params
+
+
+def accuracy_f(forward, params, test_set):
+    xs, ys = test_set
+    logits = forward(params, jnp.asarray(xs, jnp.float32))
+    return float(jnp.mean(jnp.argmax(logits, axis=1) == jnp.asarray(ys)))
+
+
+# --------------------------------------------------------------------------
+# Quantization (Delphi-style 15-bit, §4.1).
+# --------------------------------------------------------------------------
+
+def quantize_params(params):
+    """Float params -> int32: weights at 2^WEIGHT_SCALE (15-bit clamped),
+    biases at 2^ACT_SCALE (accumulator scale — clamped only by the field
+    headroom, not the 15-bit operand bound)."""
+    BIAS_MAX = 1 << 28  # well under p/2, far above any trained bias
+    out = []
+    for i, p in enumerate(params):
+        if i % 2 == 0:
+            q = np.clip(np.round(np.asarray(p) * (1 << WEIGHT_SCALE)), -QUANT_MAX, QUANT_MAX)
+        else:
+            q = np.clip(np.round(np.asarray(p) * (1 << ACT_SCALE)), -BIAS_MAX, BIAS_MAX)
+        out.append(q.astype(np.int32))
+    return out
+
+
+def train_demo_models(n_train=6000, n_test=2000, steps=1200, seed=7):
+    """Train + quantize both demo nets. Returns a dict of results."""
+    train_set, test_set = data.train_test_split(n_train, n_test, seed)
+
+    cnn_p = _init_cnn(np.random.default_rng(seed))
+    cnn_p = train(cnn_forward_f, cnn_p, train_set, steps, seed=seed)
+    cnn_acc = accuracy_f(cnn_forward_f, cnn_p, test_set)
+
+    mlp_p = _init_mlp(np.random.default_rng(seed + 1))
+    mlp_p = train(mlp_forward_f, mlp_p, train_set, steps, seed=seed + 1)
+    mlp_acc = accuracy_f(mlp_forward_f, mlp_p, test_set)
+
+    return dict(
+        cnn_params=quantize_params(cnn_p),
+        mlp_params=quantize_params(mlp_p),
+        cnn_float_acc=cnn_acc,
+        mlp_float_acc=mlp_acc,
+        test_images=test_set[0],
+        test_labels=test_set[1],
+        input_scale=INPUT_SCALE,
+    )

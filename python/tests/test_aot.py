@@ -1,0 +1,92 @@
+"""AOT path: HLO lowering sanity and binary artifact framing."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+import compile  # noqa: F401
+from compile import aot
+
+
+def test_lower_stoch_relu_is_hlo_text():
+    text = aot.lower_stoch_relu()
+    assert "HloModule" in text
+    assert "s32" in text  # int32 params
+    # tuple return (return_tuple=True)
+    assert "tuple" in text.lower()
+
+
+def _entry_params(text):
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    out = []
+    for line in lines[start:]:
+        if "parameter(" in line:
+            out.append(line.strip())
+        if line.strip() == "}":
+            break
+    return out
+
+
+def test_lower_cnn_has_all_params():
+    text = aot.lower_cnn()
+    assert "HloModule" in text
+    # 11 ENTRY parameters: images, t1, t2, k, mode, 6 weight tensors.
+    params = _entry_params(text)
+    assert len(params) == 11, params
+    assert "s32[128,1,16,16]" in params[0]
+
+
+def test_weights_bin_roundtrip(tmp_path):
+    w = np.arange(18, dtype=np.int32).reshape(2, 1, 3, 3)
+    b = np.array([1, -2], np.int32)
+    path = tmp_path / "w.bin"
+    aot.write_weights(
+        str(path), "t", [("conv", 1, 4, 4, 2, 3, 1, 1, w, b, 7)]
+    )
+    raw = path.read_bytes()
+    assert raw[:8] == b"CIRCAW01"
+    # name
+    (nlen,) = struct.unpack_from("<Q", raw, 8)
+    off = 16 + nlen
+    (n_layers,) = struct.unpack_from("<I", raw, off)
+    assert n_layers == 1
+    off += 4
+    assert raw[off] == 0  # conv kind
+    dims = struct.unpack_from("<7I", raw, off + 1)
+    assert dims == (1, 4, 4, 2, 3, 1, 1)
+
+
+def test_dataset_bin_roundtrip(tmp_path):
+    imgs = np.arange(8, dtype=np.int32).reshape(2, 4)
+    labels = np.array([3, 1], np.int32)
+    path = tmp_path / "d.bin"
+    aot.write_dataset(str(path), imgs, labels)
+    raw = path.read_bytes()
+    assert raw[:8] == b"CIRCAD01"
+    n, dim, classes = struct.unpack_from("<3I", raw, 8)
+    assert (n, dim, classes) == (2, 4, 4)
+    (veclen,) = struct.unpack_from("<Q", raw, 20)
+    assert veclen == 8
+    vals = struct.unpack_from("<8i", raw, 28)
+    assert vals == tuple(range(8))
+    y0, y1 = struct.unpack_from("<2I", raw, 28 + 32)
+    assert (y0, y1) == (3, 1)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_built_manifest_is_consistent():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["version"] == "circa-artifacts-1"
+    assert m["cnn_quantized_acc"] > 0.85, "demo CNN should be well-trained"
+    for name in ("demo_cnn.hlo.txt", "demo_mlp.hlo.txt", "stoch_relu.hlo.txt",
+                 "weights.bin", "weights_mlp.bin", "dataset.bin"):
+        assert os.path.exists(os.path.join(root, name)), name

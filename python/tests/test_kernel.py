@@ -1,0 +1,133 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, truncation levels, modes, and value regimes;
+every case asserts bit-exact agreement (integer kernel — no tolerance).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import compile  # noqa: F401  (enables x64)
+from compile.kernels import ref
+from compile.kernels.stochastic_sign import stoch_relu, vmem_bytes
+
+PRIME = ref.PRIME
+
+
+def _run_both(x, t, k, mode, block=256):
+    y_ref, f_ref = ref.stoch_relu(x, t, k, mode)
+    y_ker, f_ker = stoch_relu(jnp.asarray(x), jnp.asarray(t), k, mode, block=block)
+    return (np.asarray(y_ref), np.asarray(f_ref), np.asarray(y_ker), np.asarray(f_ker))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(1, 2048),
+    k=st.integers(0, 28),
+    mode=st.sampled_from([0, 1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+    mag_bits=st.integers(1, 29),
+)
+def test_kernel_matches_ref(n, k, mode, seed, mag_bits):
+    rng = np.random.default_rng(seed)
+    lim = 1 << mag_bits
+    x = rng.integers(-lim, lim, size=n).astype(np.int32)
+    t = rng.integers(0, PRIME, size=n).astype(np.int32)
+    y_ref, f_ref, y_ker, f_ker = _run_both(x, t, k, mode)
+    np.testing.assert_array_equal(y_ref, y_ker)
+    np.testing.assert_array_equal(f_ref, f_ker)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    block=st.sampled_from([64, 100, 256, 1000]),
+    n=st.integers(1, 3000),
+    seed=st.integers(0, 1000),
+)
+def test_block_size_invariance(block, n, seed):
+    """Padding/blocking must not change results."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-(1 << 20), 1 << 20, size=n).astype(np.int32)
+    t = rng.integers(0, PRIME, size=n).astype(np.int32)
+    y_a, f_a = stoch_relu(jnp.asarray(x), jnp.asarray(t), 12, 0, block=block)
+    y_b, f_b = stoch_relu(jnp.asarray(x), jnp.asarray(t), 12, 0, block=2048)
+    np.testing.assert_array_equal(np.asarray(y_a), np.asarray(y_b))
+    np.testing.assert_array_equal(np.asarray(f_a), np.asarray(f_b))
+
+
+def test_exact_mode_is_relu():
+    x = np.array([-5, -1, 0, 1, 7, -(2**29), 2**29], np.int32)
+    t = np.full_like(x, 123456789)
+    y, f = stoch_relu(jnp.asarray(x), jnp.asarray(t), 25, ref.MODE_EXACT)
+    np.testing.assert_array_equal(np.asarray(y), np.maximum(x, 0))
+    assert np.asarray(f).sum() == 0
+
+
+def test_multidim_shapes_preserved():
+    rng = np.random.default_rng(0)
+    x = rng.integers(-1000, 1000, size=(4, 3, 5, 5)).astype(np.int32)
+    t = rng.integers(0, PRIME, size=(4, 3, 5, 5)).astype(np.int32)
+    y, f = stoch_relu(jnp.asarray(x), jnp.asarray(t), 8, 0)
+    assert y.shape == x.shape and f.shape == x.shape
+
+
+def test_thm31_fault_rate():
+    """Sign-fault rate = |x|/p (Thm 3.1), k = 0."""
+    n = 200_000
+    mag = PRIME // 8
+    rng = np.random.default_rng(1)
+    x = np.full(n, mag, np.int32)
+    t = rng.integers(0, PRIME, size=n).astype(np.int32)
+    _, f = stoch_relu(jnp.asarray(x), jnp.asarray(t), 0, 0)
+    rate = float(np.asarray(f).mean())
+    assert abs(rate - 0.125) < 0.01, rate
+
+
+def test_thm32_trunc_fault_rate():
+    """Truncation-fault rate = (2^k - x)/2^k for 0 <= x < 2^k (Thm 3.2)."""
+    k = 16
+    n = 100_000
+    x_val = (1 << k) // 4
+    rng = np.random.default_rng(2)
+    x = np.full(n, x_val, np.int32)
+    t = rng.integers(0, PRIME, size=n).astype(np.int32)
+    _, f = stoch_relu(jnp.asarray(x), jnp.asarray(t), k, 0)
+    rate = float(np.asarray(f).mean())
+    assert abs(rate - 0.75) < 0.01, rate
+
+
+def test_poszero_vs_negpass_sides():
+    """PosZero faults positives only; NegPass negatives only (|x| < 2^k,
+    sign-fault term negligible)."""
+    k = 14
+    n = 50_000
+    rng = np.random.default_rng(3)
+    t = rng.integers(0, PRIME, size=n).astype(np.int32)
+    pos = np.full(n, 100, np.int32)
+    neg = np.full(n, -100, np.int32)
+    _, f = stoch_relu(jnp.asarray(pos), jnp.asarray(t), k, ref.MODE_NEGPASS)
+    assert np.asarray(f).sum() == 0
+    _, f = stoch_relu(jnp.asarray(neg), jnp.asarray(t), k, ref.MODE_POSZERO)
+    assert np.asarray(f).sum() == 0
+    _, f = stoch_relu(jnp.asarray(neg), jnp.asarray(t), k, ref.MODE_NEGPASS)
+    assert float(np.asarray(f).mean()) > 0.98
+
+
+def test_negpass_passes_values_through():
+    """A NegPass fault *passes* x (y = x), never zeroes it."""
+    k = 14
+    rng = np.random.default_rng(4)
+    x = np.full(1000, -37, np.int32)
+    t = rng.integers(0, PRIME, size=1000).astype(np.int32)
+    y, f = stoch_relu(jnp.asarray(x), jnp.asarray(t), k, ref.MODE_NEGPASS)
+    y = np.asarray(y)
+    f = np.asarray(f)
+    assert set(np.unique(y[f == 1])) == {-37}
+    assert set(np.unique(y[f == 0])) <= {0}
+
+
+def test_vmem_budget():
+    """DESIGN.md §Perf: default block fits VMEM with double-buffer room."""
+    assert vmem_bytes() <= 2 * 1024 * 1024

@@ -1,0 +1,121 @@
+"""L2 correctness: the quantized JAX model vs a numpy oracle, plus the
+fault-injection semantics the accuracy experiments rely on."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import compile  # noqa: F401
+from compile import data, model
+from compile.kernels import ref
+
+
+def _rand_params(rng):
+    c = model.CNN_SHAPES
+    w1 = rng.integers(-50, 50, (c["conv1"]["out_c"], 1, 3, 3)).astype(np.int32)
+    b1 = rng.integers(-2000, 2000, (c["conv1"]["out_c"],)).astype(np.int32)
+    w2 = rng.integers(-50, 50, (c["conv2"]["out_c"], c["conv2"]["in_c"], 3, 3)).astype(np.int32)
+    b2 = rng.integers(-2000, 2000, (c["conv2"]["out_c"],)).astype(np.int32)
+    w3 = rng.integers(-50, 50, (10, c["dense"]["in_dim"])).astype(np.int32)
+    b3 = rng.integers(-2000, 2000, (10,)).astype(np.int32)
+    return [jnp.asarray(v) for v in (w1, b1, w2, b2, w3, b3)]
+
+
+def _np_conv(x, w, b, stride, pad):
+    B, C, H, W = x.shape
+    O, _, K, _ = w.shape
+    oh = (H + 2 * pad - K) // stride + 1
+    ow = (W + 2 * pad - K) // stride + 1
+    xp = np.zeros((B, C, H + 2 * pad, W + 2 * pad), np.int64)
+    xp[:, :, pad : pad + H, pad : pad + W] = x
+    out = np.zeros((B, O, oh, ow), np.int64)
+    for o in range(O):
+        for yy in range(oh):
+            for xx in range(ow):
+                patch = xp[:, :, yy * stride : yy * stride + K, xx * stride : xx * stride + K]
+                out[:, o, yy, xx] = np.einsum("bchw,chw->b", patch, w[o].astype(np.int64))
+        out[:, o] += b[o]
+    return out
+
+
+def _np_forward_exact(params, images):
+    w1, b1, w2, b2, w3, b3 = [np.asarray(p, np.int64) for p in params]
+    x = _np_conv(images.astype(np.int64), w1, b1, 2, 1)
+    x = np.maximum(x, 0) >> model.RESCALE
+    x = _np_conv(x, w2, b2, 2, 1)
+    x = np.maximum(x, 0) >> model.RESCALE
+    x = x.reshape(x.shape[0], -1)
+    return x @ w3.T + b3
+
+
+def test_exact_mode_matches_numpy_oracle():
+    rng = np.random.default_rng(0)
+    params = _rand_params(rng)
+    images = jnp.asarray(rng.integers(0, 128, (4, 1, 16, 16)), jnp.int32)
+    zt1 = jnp.zeros((4, 8, 8, 8), jnp.int32)
+    zt2 = jnp.zeros((4, 16, 4, 4), jnp.int32)
+    logits, faults = model.forward_cnn(images, zt1, zt2, 0, ref.MODE_EXACT, *params)
+    want = _np_forward_exact(params, np.asarray(images))
+    np.testing.assert_array_equal(np.asarray(logits, np.int64), want)
+    assert np.asarray(faults).sum() == 0
+
+
+def test_stochastic_agrees_with_exact_when_k_small():
+    """k = 1 and comfortable magnitudes: faults are ~impossible, so the
+    stochastic forward must equal the exact forward."""
+    rng = np.random.default_rng(1)
+    params = _rand_params(rng)
+    images = jnp.asarray(rng.integers(64, 128, (4, 1, 16, 16)), jnp.int32)
+    t1 = jnp.asarray(rng.integers(0, ref.PRIME, (4, 8, 8, 8)), jnp.int32)
+    t2 = jnp.asarray(rng.integers(0, ref.PRIME, (4, 16, 4, 4)), jnp.int32)
+    exact, _ = model.forward_cnn(images, t1, t2, 0, ref.MODE_EXACT, *params)
+    stoch, faults = model.forward_cnn(images, t1, t2, 1, ref.MODE_POSZERO, *params)
+    # Allow the rare activation that lands exactly in [0, 2): identical
+    # in practice for this seed.
+    np.testing.assert_array_equal(np.asarray(exact), np.asarray(stoch))
+
+
+def test_large_k_degrades_into_faults():
+    rng = np.random.default_rng(2)
+    params = _rand_params(rng)
+    images = jnp.asarray(rng.integers(0, 128, (8, 1, 16, 16)), jnp.int32)
+    t1 = jnp.asarray(rng.integers(0, ref.PRIME, (8, 8, 8, 8)), jnp.int32)
+    t2 = jnp.asarray(rng.integers(0, ref.PRIME, (8, 16, 4, 4)), jnp.int32)
+    _, faults = model.forward_cnn(images, t1, t2, 24, ref.MODE_POSZERO, *params)
+    assert int(np.asarray(faults).sum()) > 100
+
+
+def test_mlp_shapes_and_exact_mode():
+    rng = np.random.default_rng(3)
+    d = model.MLP_DIMS
+    params = [
+        jnp.asarray(rng.integers(-30, 30, (d[1], d[0])), jnp.int32),
+        jnp.asarray(rng.integers(-500, 500, (d[1],)), jnp.int32),
+        jnp.asarray(rng.integers(-30, 30, (d[2], d[1])), jnp.int32),
+        jnp.asarray(rng.integers(-500, 500, (d[2],)), jnp.int32),
+        jnp.asarray(rng.integers(-30, 30, (d[3], d[2])), jnp.int32),
+        jnp.asarray(rng.integers(-500, 500, (d[3],)), jnp.int32),
+    ]
+    x = jnp.asarray(rng.integers(0, 128, (4, 256)), jnp.int32)
+    t1 = jnp.zeros((4, 128), jnp.int32)
+    t2 = jnp.zeros((4, 64), jnp.int32)
+    logits, faults = model.forward_mlp(x, t1, t2, 0, ref.MODE_EXACT, *params)
+    assert logits.shape == (4, 10)
+    assert np.asarray(faults).shape == (2,)
+
+
+def test_dataset_is_learnable_and_deterministic():
+    a_imgs, a_labels = data.make_dataset(100, 42)
+    b_imgs, b_labels = data.make_dataset(100, 42)
+    np.testing.assert_array_equal(a_imgs, b_imgs)
+    np.testing.assert_array_equal(a_labels, b_labels)
+    assert a_imgs.shape == (100, 1, 16, 16)
+    assert a_imgs.min() >= 0.0 and a_imgs.max() <= 1.5
+    assert set(np.unique(a_labels)) <= set(range(10))
+
+
+def test_quantize_input_scale():
+    imgs = np.array([[[[0.0, 1.0], [0.5, 1.5]]]], np.float32)
+    q = np.asarray(model.quantize_input(jnp.asarray(imgs)))
+    s = 1 << model.INPUT_SCALE
+    np.testing.assert_array_equal(q[0, 0], [[0, s], [s // 2, s + s // 2]])

@@ -1,0 +1,105 @@
+//! Ablation bench — isolates the design choices DESIGN.md calls out:
+//!
+//! 1. truncation level k vs online cost (where does the paper's chosen
+//!    k = 12–15 sit on the cost curve?);
+//! 2. PosZero vs NegPass (must be cost-identical — the mode only flips a
+//!    comparator's strictness);
+//! 3. AES batching (§Perf iterations 1–2): pipelined `hash4`/`hash2` vs
+//!    scalar hashing;
+//! 4. where Circa's online win comes from: GC evaluation vs the extra
+//!    Beaver round it introduces.
+
+use circa::bench_harness::{relu_cost, write_csv};
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::prf::{GarbleHash, Label};
+use circa::util::{Rng, Timer};
+
+fn main() {
+    let mut rng = Rng::new(0xAB1A7E);
+    let sample = 3000;
+
+    // 1. k sweep.
+    println!("=== ablation 1: online cost vs truncation k ===");
+    let mut rows = Vec::new();
+    for k in [0u32, 4, 8, 12, 16, 20, 24] {
+        let c = relu_cost(
+            ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero },
+            sample,
+            &mut rng,
+        );
+        println!(
+            "  k={k:>2}: online {:>5.2} us/ReLU, {:>4.0} B, storage {:>5.0} B",
+            c.online_s * 1e6,
+            c.online_bytes,
+            c.storage_bytes
+        );
+        rows.push(format!("{k},{},{},{}", c.online_s, c.online_bytes, c.storage_bytes));
+    }
+    write_csv("ablation_k_sweep.csv", "k,online_s,online_bytes,storage_bytes", &rows);
+
+    // 2. Fault-mode parity.
+    println!("\n=== ablation 2: PosZero vs NegPass cost parity ===");
+    let pz = relu_cost(ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero }, sample, &mut rng);
+    let np = relu_cost(ReluVariant::TruncatedSign { k: 12, mode: FaultMode::NegPass }, sample, &mut rng);
+    println!("  PosZero: {:.2} us   NegPass: {:.2} us", pz.online_s * 1e6, np.online_s * 1e6);
+    let ratio = pz.online_s / np.online_s;
+    assert!(
+        (0.7..1.4).contains(&ratio),
+        "fault modes should cost the same: ratio {ratio}"
+    );
+
+    // 3. AES batching.
+    println!("\n=== ablation 3: scalar vs pipelined AES hashing ===");
+    let h = GarbleHash::shared();
+    let labels: Vec<Label> = (0..4096).map(|_| Label::random(&mut rng)).collect();
+    let iters = 2000;
+    let t = Timer::new();
+    let mut acc = 0u128;
+    for it in 0..iters {
+        for (i, &l) in labels.iter().enumerate() {
+            acc ^= h.hash(l, (it * 4096 + i) as u64).0;
+        }
+    }
+    let scalar = t.elapsed_s() / (iters * labels.len()) as f64;
+    let t = Timer::new();
+    for it in 0..iters {
+        for (i, chunk) in labels.chunks_exact(4).enumerate() {
+            let tw = (it * 4096 + 4 * i) as u64;
+            let out = h.hash4(
+                [chunk[0], chunk[1], chunk[2], chunk[3]],
+                [tw, tw + 1, tw + 2, tw + 3],
+            );
+            acc ^= out[0].0 ^ out[1].0 ^ out[2].0 ^ out[3].0;
+        }
+    }
+    let batched = t.elapsed_s() / (iters * labels.len()) as f64;
+    std::hint::black_box(acc);
+    println!(
+        "  scalar {:.2} ns/hash, pipelined {:.2} ns/hash ({:.2}x)",
+        scalar * 1e9,
+        batched * 1e9,
+        scalar / batched
+    );
+
+    // 4. Decompose Circa's online cost: GC-only (drop Beaver by using the
+    // naive-sign GC at truncated width? not expressible) — approximate by
+    // comparing StochasticSign (m-bit compare + Beaver) vs BaselineRelu
+    // (8m-gate GC, no Beaver).
+    println!("\n=== ablation 4: GC shrink vs Beaver overhead ===");
+    let base = relu_cost(ReluVariant::BaselineRelu, sample, &mut rng);
+    let stoch = relu_cost(
+        ReluVariant::StochasticSign { mode: FaultMode::PosZero },
+        sample,
+        &mut rng,
+    );
+    println!(
+        "  baseline (233-AND GC, no Beaver): {:.2} us",
+        base.online_s * 1e6
+    );
+    println!(
+        "  ~sign    ( 62-AND GC, + Beaver) : {:.2} us  -> the Beaver round costs \
+         far less than the 171 ANDs it displaces",
+        stoch.online_s * 1e6
+    );
+    assert!(stoch.online_s < base.online_s);
+}

@@ -1,0 +1,92 @@
+//! Fig. 3: validating the stochastic-ReLU fault model.
+//!
+//! (a) the closed-form fault-probability curve of `s̃ign_18` (PosZero)
+//!     against the histogram of the demo CNN's first-layer activations
+//!     (the paper uses ResNet-18's first conv — same experiment, demo
+//!     substrate, see DESIGN.md §5);
+//! (b) model-predicted vs Monte-Carlo-measured fault rates (total and
+//!     positive-only) across truncation levels — measured through the
+//!     same comparator rule the GC evaluates, which the integration
+//!     tests verify against the *actual* garbled circuit.
+
+use circa::bench_harness::write_csv;
+use circa::circuits::spec::FaultMode;
+use circa::field::Fp;
+use circa::nn::weights::{load_dataset, load_weights};
+use circa::runtime::ArtifactDir;
+use circa::simfault::{self, montecarlo};
+use circa::util::Rng;
+
+fn main() {
+    let dir = ArtifactDir::discover().expect("run `make artifacts` first");
+    let net = load_weights(&dir.path("weights.bin")).unwrap();
+    let ds = load_dataset(&dir.path("dataset.bin")).unwrap();
+
+    // First-layer activations over a few hundred images.
+    let mut acts: Vec<Fp> = Vec::new();
+    for i in 0..256.min(ds.n) {
+        acts.extend(net.layers[0].op.apply(ds.image(i)));
+    }
+    println!("=== Fig. 3(a): fault probability vs activation histogram ===");
+    println!("activations: {} samples from conv1 over {} images", acts.len(), 256.min(ds.n));
+
+    // Histogram in log2 magnitude buckets, split by sign.
+    let mut hist_pos = [0u64; 32];
+    let mut hist_neg = [0u64; 32];
+    for a in &acts {
+        let b = (64 - a.magnitude().max(1).leading_zeros() as usize - 1).min(31);
+        if a.is_nonneg() {
+            hist_pos[b] += 1;
+        } else {
+            hist_neg[b] += 1;
+        }
+    }
+    let k = 18u32;
+    let mut rows = Vec::new();
+    println!("\n log2|x|   #pos     #neg     P_fault(PosZero,k=18)");
+    for b in 0..28 {
+        let x = Fp::from_i64(1i64 << b);
+        let p = simfault::fault_prob(x, k, FaultMode::PosZero);
+        println!("  {b:>6}  {:>7}  {:>7}   {p:.4}", hist_pos[b], hist_neg[b]);
+        rows.push(format!("{b},{},{},{p}", hist_pos[b], hist_neg[b]));
+    }
+    write_csv("fig3a_hist_model.csv", "log2_mag,count_pos,count_neg,fault_prob_k18", &rows);
+
+    // (b) model vs measured across k, on the real activation population.
+    println!("\n=== Fig. 3(b): model vs measured fault rates (PosZero) ===");
+    println!("{:>4} {:>14} {:>14} {:>14} {:>14}", "k", "total(meas)", "total(model)", "pos(meas)", "pos(model)");
+    let mut rng = Rng::new(42);
+    let sample: Vec<Fp> = {
+        let mut v = acts.clone();
+        rng.shuffle(&mut v);
+        v.truncate(20_000);
+        v
+    };
+    let mut rows = Vec::new();
+    for k in (6..=28).step_by(2) {
+        let r = montecarlo::measure(&sample, k, FaultMode::PosZero, 4, &mut rng);
+        println!(
+            "{k:>4} {:>14.4} {:>14.4} {:>14.4} {:>14.4}",
+            r.total_measured, r.total_model, r.positive_measured, r.positive_model
+        );
+        rows.push(format!(
+            "{k},{},{},{},{}",
+            r.total_measured, r.total_model, r.positive_measured, r.positive_model
+        ));
+        assert!(
+            (r.total_measured - r.total_model).abs() < 0.02,
+            "model diverges from implementation at k={k}"
+        );
+    }
+    write_csv(
+        "fig3b_model_vs_measured.csv",
+        "k,total_measured,total_model,positive_measured,positive_model",
+        &rows,
+    );
+    println!("\npaper check: with 28-bit truncation all positives fault; total < positive");
+    let r = montecarlo::measure(&sample, 28, FaultMode::PosZero, 2, &mut rng);
+    println!(
+        "  k=28: positive rate {:.3} (paper: ~1.0), total rate {:.3} (paper: ~0.6)",
+        r.positive_measured, r.total_measured
+    );
+}

@@ -1,0 +1,123 @@
+//! Fig. 4: accuracy and fault rate vs truncated bits, NegPass & PosZero,
+//! for two architectures (demo CNN = "vanilla" row, demo MLP = the
+//! second-architecture row) — executed through the AOT-compiled JAX
+//! model on the PJRT runtime (one compilation, k/mode as runtime
+//! scalars).
+
+use circa::bench_harness::write_csv;
+use circa::field::{Fp, PRIME};
+use circa::nn::weights::{accuracy, load_dataset, Dataset};
+use circa::runtime::model_exec::{MODE_EXACT, MODE_NEGPASS, MODE_POSZERO};
+use circa::runtime::{ArtifactDir, CnnExecutable};
+use circa::util::Rng;
+
+struct SweepResult {
+    acc: f64,
+    fault_rate: f64,
+}
+
+fn sweep_point(
+    exe: &CnnExecutable,
+    ds: &Dataset,
+    n_batches: usize,
+    k: i32,
+    mode: i32,
+    rng: &mut Rng,
+) -> SweepResult {
+    let b = exe.batch;
+    let relus = exe.relus_per_example() * b;
+    let (t1_n, t2_n) = match exe.relus_per_example() {
+        768 => (b * 512, b * 256), // CNN
+        192 => (b * 128, b * 64),  // MLP
+        other => panic!("unexpected relu count {other}"),
+    };
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut faults = 0i64;
+    for batch in 0..n_batches {
+        let base = batch * b;
+        if base + b > ds.n {
+            break;
+        }
+        let images: Vec<i32> =
+            ds.images[base * ds.dim..(base + b) * ds.dim].iter().map(|f| f.to_i64() as i32).collect();
+        let t1: Vec<i32> = (0..t1_n).map(|_| rng.below(PRIME) as i32).collect();
+        let t2: Vec<i32> = (0..t2_n).map(|_| rng.below(PRIME) as i32).collect();
+        let out = exe.run(&images, &t1, &t2, k, mode).expect("exec");
+        let logits: Vec<Vec<Fp>> = (0..b)
+            .map(|i| {
+                out.logits[i * 10..(i + 1) * 10].iter().map(|&v| Fp::from_i64(v as i64)).collect()
+            })
+            .collect();
+        correct += (accuracy(&logits, &ds.labels[base..base + b]) * b as f64).round() as usize;
+        total += b;
+        faults += out.total_faults();
+    }
+    SweepResult {
+        acc: correct as f64 / total as f64,
+        fault_rate: faults as f64 / (relus * n_batches) as f64,
+    }
+}
+
+fn run_net(name: &str, exe: &CnnExecutable, ds: &Dataset, n_batches: usize) {
+    let mut rng = Rng::new(0xF16_4);
+    let exact = sweep_point(exe, ds, n_batches, 0, MODE_EXACT, &mut rng);
+    println!("\n--- {name}: baseline (exact ReLU) accuracy {:.2}% ---", exact.acc * 100.0);
+    println!(
+        "{:>4} {:>12} {:>12} {:>12} {:>12}",
+        "k", "PosZero acc", "PZ faults", "NegPass acc", "NP faults"
+    );
+    let mut rows = vec![format!("{name},exact,-,{:.4},0", exact.acc)];
+    for k in 6..=24 {
+        let pz = sweep_point(exe, ds, n_batches, k, MODE_POSZERO, &mut rng);
+        let np = sweep_point(exe, ds, n_batches, k, MODE_NEGPASS, &mut rng);
+        println!(
+            "{k:>4} {:>11.2}% {:>11.4} {:>11.2}% {:>11.4}",
+            pz.acc * 100.0,
+            pz.fault_rate,
+            np.acc * 100.0,
+            np.fault_rate
+        );
+        rows.push(format!("{name},poszero,{k},{:.4},{:.4}", pz.acc, pz.fault_rate));
+        rows.push(format!("{name},negpass,{k},{:.4},{:.4}", np.acc, np.fault_rate));
+    }
+    write_csv(
+        &format!("fig4_{}.csv", name),
+        "net,mode,k,accuracy,fault_rate",
+        &rows,
+    );
+
+    // The paper's claim: some k in 12..=19 keeps accuracy within 1% of
+    // baseline at a ≥5% fault rate.
+    let mut best_k = 0;
+    for k in (6..=24).rev() {
+        let mut rng2 = Rng::new(0xF16_4 ^ k as u64);
+        let pz = sweep_point(exe, ds, n_batches, k, MODE_POSZERO, &mut rng2);
+        if exact.acc - pz.acc <= 0.01 {
+            best_k = k;
+            break;
+        }
+    }
+    println!(
+        "  -> max PosZero k within 1% of baseline: {best_k} (paper: 11–16 across nets/datasets)"
+    );
+}
+
+fn main() {
+    let dir = ArtifactDir::discover().expect("run `make artifacts` first");
+    let client = xla::PjRtClient::cpu().expect("pjrt");
+    let ds = load_dataset(&dir.path("dataset.bin")).unwrap();
+    let n_batches = std::env::var("FIG4_BATCHES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4usize);
+
+    println!("=== Fig. 4: accuracy & fault rate vs truncation (PJRT sweep) ===");
+    println!("batches of 128 per point: {n_batches}");
+
+    let cnn = CnnExecutable::load_cnn(&client, &dir).unwrap();
+    run_net("demo_cnn", &cnn, &ds, n_batches);
+
+    let mlp = CnnExecutable::load_mlp(&client, &dir).unwrap();
+    run_net("demo_mlp", &mlp, &ds, n_batches);
+}

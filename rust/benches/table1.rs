@@ -1,0 +1,80 @@
+//! Table 1: Circa accuracy + PI runtime on the baseline networks.
+//!
+//! Runtime: the real protocol's per-ReLU online cost is measured on a
+//! sample (garble + label + evaluate + decode + Beaver, the same code
+//! the serving path runs), then composed with each architecture's exact
+//! ReLU/MAC counts. The paper's testbed numbers are printed alongside;
+//! the claim under test is the *speedup column* (2.6–3.1×).
+
+use circa::bench_harness::tables::table1;
+use circa::bench_harness::{mac_cost, network_runtime_s, print_row, relu_cost, write_csv};
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0x7AB1E1);
+    let sample = std::env::var("RELU_SAMPLE").ok().and_then(|v| v.parse().ok()).unwrap_or(4000);
+    eprintln!("measuring per-ReLU costs (sample={sample}) ...");
+    let base = relu_cost(ReluVariant::BaselineRelu, sample, &mut rng);
+    let per_mac = mac_cost(&mut rng);
+    eprintln!(
+        "  baseline: online {:.2} us/ReLU, storage {:.0} B/ReLU; linear {:.2} ns/MAC",
+        base.online_s * 1e6,
+        base.storage_bytes,
+        per_mac * 1e9
+    );
+
+    println!("\n=== Table 1: Circa on baseline networks ===");
+    let widths = [14, 9, 11, 11, 9, 11, 11, 8, 8];
+    print_row(
+        &[
+            "network", "#ReLUs K", "base s", "circa s", "speedup", "paper base", "paper circa",
+            "paper x", "bits",
+        ]
+        .map(String::from),
+        &widths,
+    );
+
+    let mut rows = Vec::new();
+    for row in table1() {
+        let spec = (row.spec)();
+        let k = row.poszero_bits;
+        let circa = relu_cost(
+            ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero },
+            sample,
+            &mut rng,
+        );
+        let relus = spec.total_relus();
+        let macs = spec.total_macs();
+        let base_s = network_runtime_s(relus, macs, &base, per_mac);
+        let circa_s = network_runtime_s(relus, macs, &circa, per_mac);
+        let speedup = base_s / circa_s;
+        print_row(
+            &[
+                row.name.to_string(),
+                format!("{:.1}", spec.total_relus() as f64 / 1000.0),
+                format!("{base_s:.2}"),
+                format!("{circa_s:.2}"),
+                format!("{speedup:.1}x"),
+                format!("{:.2}", row.baseline_runtime_s),
+                format!("{:.2}", row.circa_runtime_s),
+                format!("{:.1}x", row.speedup),
+                format!("{k}"),
+            ],
+            &widths,
+        );
+        rows.push(format!(
+            "{},{},{},{base_s:.4},{circa_s:.4},{speedup:.3},{},{},{}",
+            row.name, relus, macs, row.baseline_runtime_s, row.circa_runtime_s, row.speedup
+        ));
+    }
+    write_csv(
+        "table1.csv",
+        "network,relus,macs,ours_base_s,ours_circa_s,ours_speedup,paper_base_s,paper_circa_s,paper_speedup",
+        &rows,
+    );
+    println!(
+        "\naccuracy columns: regenerated on the demo workload by `cargo bench --bench fig4` \
+         (paper nets need CIFAR/Tiny — unavailable offline; see DESIGN.md §5)"
+    );
+}

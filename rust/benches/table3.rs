@@ -1,0 +1,74 @@
+//! Table 3 (Appendix): PI runtime per optimization stage — baseline ReLU,
+//! naive sign, stochastic sign, truncated stochastic sign — showing the
+//! three optimizations compose multiplicatively.
+
+use circa::bench_harness::tables::table3;
+use circa::bench_harness::{mac_cost, network_runtime_s, print_row, relu_cost, write_csv};
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0x7AB1E3);
+    let sample = std::env::var("RELU_SAMPLE").ok().and_then(|v| v.parse().ok()).unwrap_or(4000);
+    eprintln!("measuring per-ReLU costs for all four stages (sample={sample}) ...");
+    let relu = relu_cost(ReluVariant::BaselineRelu, sample, &mut rng);
+    let sign = relu_cost(ReluVariant::NaiveSign, sample, &mut rng);
+    let stoch = relu_cost(
+        ReluVariant::StochasticSign { mode: FaultMode::PosZero },
+        sample,
+        &mut rng,
+    );
+    let per_mac = mac_cost(&mut rng);
+    eprintln!(
+        "  per-ReLU online us: relu {:.2}, sign {:.2}, ~sign {:.2}",
+        relu.online_s * 1e6,
+        sign.online_s * 1e6,
+        stoch.online_s * 1e6
+    );
+
+    println!("\n=== Table 3: runtime (s) per optimization stage ===");
+    let widths = [12, 9, 22, 22, 22, 22];
+    print_row(
+        &["network", "#ReLUs K", "ReLU ours(paper)", "Sign ours(paper)", "~Sign ours(paper)",
+          "~Sign_k ours(paper)"]
+            .map(String::from),
+        &widths,
+    );
+    let mut rows = Vec::new();
+    for row in table3() {
+        let spec = (row.spec)();
+        let trunc = relu_cost(
+            ReluVariant::TruncatedSign { k: row.trunc_bits, mode: FaultMode::PosZero },
+            sample,
+            &mut rng,
+        );
+        let relus = spec.total_relus();
+        let macs = spec.total_macs();
+        let t_relu = network_runtime_s(relus, macs, &relu, per_mac);
+        let t_sign = network_runtime_s(relus, macs, &sign, per_mac);
+        let t_stoch = network_runtime_s(relus, macs, &stoch, per_mac);
+        let t_trunc = network_runtime_s(relus, macs, &trunc, per_mac);
+        print_row(
+            &[
+                row.name.to_string(),
+                format!("{:.1}", relus as f64 / 1000.0),
+                format!("{t_relu:.2} ({:.2})", row.relu_s),
+                format!("{t_sign:.2} ({:.2})", row.sign_s),
+                format!("{t_stoch:.2} ({:.2})", row.stoch_sign_s),
+                format!("{t_trunc:.2} ({:.2})", row.trunc_sign_s),
+            ],
+            &widths,
+        );
+        rows.push(format!(
+            "{},{relus},{t_relu:.4},{t_sign:.4},{t_stoch:.4},{t_trunc:.4},{},{},{},{}",
+            row.name, row.relu_s, row.sign_s, row.stoch_sign_s, row.trunc_sign_s
+        ));
+        // Invariant from the paper: strictly decreasing stage runtimes.
+        assert!(t_relu > t_sign && t_sign > t_stoch && t_stoch > t_trunc, "{}", row.name);
+    }
+    write_csv(
+        "table3.csv",
+        "network,relus,ours_relu,ours_sign,ours_stoch,ours_trunc,paper_relu,paper_sign,paper_stoch,paper_trunc",
+        &rows,
+    );
+}

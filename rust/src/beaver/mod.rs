@@ -1,0 +1,159 @@
+//! Beaver multiplication triples (§2.2) — the SS-side half of Circa's
+//! refactored ReLU (`y = x · sign(x)` runs here, not in the GC).
+//!
+//! Offline a dealer samples `(a, b, ab)` and hands each party additive
+//! shares. Online, to multiply shared `x` and `y`, the parties open
+//! `e = x − a` and `f = y − b` (which leak nothing since `a, b` are
+//! uniform) and each computes its share of
+//! `xy = ef + e·b + f·a + ab`, with the public `ef` added by one side.
+
+use crate::field::{random_fp, Fp};
+use crate::ss::{Share, SharePair};
+use crate::util::Rng;
+
+/// One party's portion of a Beaver triple.
+#[derive(Clone, Copy, Debug)]
+pub struct TripleShare {
+    pub a: Share,
+    pub b: Share,
+    pub ab: Share,
+}
+
+/// Dealer-generated triple: shares for both parties.
+#[derive(Clone, Copy, Debug)]
+pub struct Triple {
+    pub p1: TripleShare,
+    pub p2: TripleShare,
+}
+
+/// Generate one triple (trusted-dealer / offline phase).
+pub fn gen_triple(rng: &mut Rng) -> Triple {
+    let a = random_fp(rng);
+    let b = random_fp(rng);
+    let ab = a * b;
+    let sa = SharePair::share(a, rng);
+    let sb = SharePair::share(b, rng);
+    let sab = SharePair::share(ab, rng);
+    Triple {
+        p1: TripleShare { a: sa.client, b: sb.client, ab: sab.client },
+        p2: TripleShare { a: sa.server, b: sb.server, ab: sab.server },
+    }
+}
+
+/// Generate a batch of triples.
+pub fn gen_triples(n: usize, rng: &mut Rng) -> Vec<Triple> {
+    (0..n).map(|_| gen_triple(rng)).collect()
+}
+
+/// The opening message each party broadcasts in the online phase.
+#[derive(Clone, Copy, Debug)]
+pub struct Opening {
+    pub e: Fp, // share of x - a
+    pub f: Fp, // share of y - b
+}
+
+/// Step 1 (each party): compute its opening shares from its input shares
+/// and its triple share.
+pub fn open(x: Share, y: Share, t: &TripleShare) -> Opening {
+    Opening { e: x - t.a, f: y - t.b }
+}
+
+/// Step 2 (each party): given both openings (now public `e`, `f`), produce
+/// this party's share of `x·y`. Exactly one party must set `add_ef`.
+pub fn mul_share(e: Fp, f: Fp, t: &TripleShare, add_ef: bool) -> Share {
+    let mut out = e * t.b + f * t.a + t.ab;
+    if add_ef {
+        out = out + e * f;
+    }
+    out
+}
+
+/// Convenience: run the whole 2-party multiply locally (used by the
+/// simulator and tests; the protocol layer splits the steps across the
+/// channel).
+pub fn mul_pair(x: SharePair, y: SharePair, triple: &Triple) -> SharePair {
+    let o1 = open(x.client, y.client, &triple.p1);
+    let o2 = open(x.server, y.server, &triple.p2);
+    let e = o1.e + o2.e;
+    let f = o1.f + o2.f;
+    SharePair {
+        client: mul_share(e, f, &triple.p1, true),
+        server: mul_share(e, f, &triple.p2, false),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ss::SharePair;
+
+    #[test]
+    fn triple_consistency() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let t = gen_triple(&mut rng);
+            let a = t.p1.a + t.p2.a;
+            let b = t.p1.b + t.p2.b;
+            let ab = t.p1.ab + t.p2.ab;
+            assert_eq!(a * b, ab);
+        }
+    }
+
+    #[test]
+    fn multiply_correct() {
+        let mut rng = Rng::new(2);
+        for _ in 0..500 {
+            let x = random_fp(&mut rng);
+            let y = random_fp(&mut rng);
+            let sx = SharePair::share(x, &mut rng);
+            let sy = SharePair::share(y, &mut rng);
+            let t = gen_triple(&mut rng);
+            let out = mul_pair(sx, sy, &t);
+            assert_eq!(out.reconstruct(), x * y);
+        }
+    }
+
+    #[test]
+    fn multiply_signed_semantics() {
+        // ReLU refactoring multiplies x by a {0,1} sign bit in the field.
+        let mut rng = Rng::new(3);
+        for xv in [-1234i64, -1, 0, 1, 98765] {
+            let x = Fp::from_i64(xv);
+            let sign = if xv >= 0 { Fp::ONE } else { Fp::ZERO };
+            let sx = SharePair::share(x, &mut rng);
+            let ss_ = SharePair::share(sign, &mut rng);
+            let t = gen_triple(&mut rng);
+            let out = mul_pair(sx, ss_, &t).reconstruct();
+            assert_eq!(out.to_i64(), xv.max(0));
+        }
+    }
+
+    #[test]
+    fn openings_leak_nothing_statistically() {
+        // e = x - a with uniform a is uniform: check rough uniformity.
+        let mut rng = Rng::new(4);
+        let x = Fp::from_i64(42);
+        let n = 4000;
+        let mut low = 0;
+        for _ in 0..n {
+            let sx = SharePair::share(x, &mut rng);
+            let sy = SharePair::share(x, &mut rng);
+            let t = gen_triple(&mut rng);
+            let o1 = open(sx.client, sy.client, &t.p1);
+            let o2 = open(sx.server, sy.server, &t.p2);
+            let e = (o1.e + o2.e).raw();
+            if e < crate::field::PRIME / 2 {
+                low += 1;
+            }
+        }
+        let frac = low as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.05, "opening biased: {frac}");
+    }
+
+    #[test]
+    fn batch_generation() {
+        let mut rng = Rng::new(5);
+        let ts = gen_triples(64, &mut rng);
+        assert_eq!(ts.len(), 64);
+    }
+}

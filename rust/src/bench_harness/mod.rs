@@ -1,0 +1,155 @@
+//! Shared measurement/reporting used by `cargo bench` to regenerate every
+//! table and figure of the paper (criterion is not in the offline vendor
+//! set, so benches are `harness = false` binaries built on this module).
+//!
+//! * [`relu_cost`] — measured per-ReLU offline/online cost of a variant;
+//! * [`mac_cost`] — measured per-MAC cost of the SS linear layer;
+//! * [`tables`] — the network roster with the paper's published numbers
+//!   (ReLU counts, runtimes, accuracy, chosen truncation bits) so every
+//!   bench prints paper-vs-measured side by side;
+//! * CSV emission under `bench_out/`.
+
+pub mod tables;
+
+use crate::circuits::spec::ReluVariant;
+use crate::field::{random_fp, Fp};
+use crate::protocol::linear::{LinearOp, Matrix};
+use crate::protocol::offline::offline_relu_layer;
+use crate::protocol::online::online_relu_layer;
+use crate::ss::SharePair;
+use crate::util::{Rng, Timer};
+use std::io::Write;
+use std::path::Path;
+
+/// Measured cost of one ReLU under a protocol variant.
+#[derive(Clone, Copy, Debug)]
+pub struct PerReluCost {
+    /// Offline: garble + OT + triples, per ReLU (seconds).
+    pub offline_s: f64,
+    /// Online: labels + GC eval + decode + Beaver + resharing (seconds).
+    pub online_s: f64,
+    /// Online bytes per ReLU (both directions).
+    pub online_bytes: f64,
+    /// Client-side storage per ReLU (garbled tables + labels, bytes).
+    pub storage_bytes: f64,
+}
+
+/// Measure per-ReLU costs by running the real protocol on `sample`
+/// ReLUs (shares of plausible activation magnitudes).
+pub fn relu_cost(variant: ReluVariant, sample: usize, rng: &mut Rng) -> PerReluCost {
+    let xs: Vec<Fp> = (0..sample)
+        .map(|_| {
+            let mag = rng.below(1 << 20) as i64;
+            Fp::from_i64(if rng.bool() { mag } else { -mag })
+        })
+        .collect();
+    let shares: Vec<SharePair> = xs.iter().map(|&x| SharePair::share(x, rng)).collect();
+    let xc: Vec<Fp> = shares.iter().map(|s| s.client).collect();
+    let xsrv: Vec<Fp> = shares.iter().map(|s| s.server).collect();
+
+    let t = Timer::new();
+    let (cm, sm) = offline_relu_layer(variant, &xc, rng);
+    let offline_s = t.elapsed_s() / sample as f64;
+
+    let storage_bytes = cm.offline_bytes as f64 / sample as f64;
+
+    let t = Timer::new();
+    let (_, _, stats) = online_relu_layer(&cm, &sm, &xc, &xsrv);
+    let online_s = t.elapsed_s() / sample as f64;
+
+    PerReluCost {
+        offline_s,
+        online_s,
+        online_bytes: stats.bytes_total() as f64 / sample as f64,
+        storage_bytes,
+    }
+}
+
+/// Measure the per-MAC cost of the online SS linear layer with a
+/// representative dense matrix (the server-side `W·(y−r)+s`).
+pub fn mac_cost(rng: &mut Rng) -> f64 {
+    let (rows, cols) = (256, 1024);
+    let w = Matrix::random(rows, cols, 1 << 14, rng);
+    let x: Vec<Fp> = (0..cols).map(|_| random_fp(rng)).collect();
+    // Warm + measure enough iterations to be stable.
+    let mut sink = Fp::ZERO;
+    let t = Timer::new();
+    let iters = 20;
+    for _ in 0..iters {
+        let out = w.apply(&x);
+        sink = sink + out[0];
+    }
+    let per_mac = t.elapsed_s() / (iters * rows * cols) as f64;
+    std::hint::black_box(sink);
+    per_mac
+}
+
+/// Estimated end-to-end online runtime of a network under a variant:
+/// measured per-ReLU cost × ReLU count + measured per-MAC cost × MACs.
+pub fn network_runtime_s(
+    relus: u64,
+    macs: u64,
+    per_relu: &PerReluCost,
+    per_mac_s: f64,
+) -> f64 {
+    relus as f64 * per_relu.online_s + macs as f64 * per_mac_s
+}
+
+/// Append rows to a CSV under `bench_out/` (created on demand).
+pub fn write_csv(name: &str, header: &str, rows: &[String]) {
+    let dir = Path::new("bench_out");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(name);
+    let mut f = std::fs::File::create(&path).expect("create csv");
+    writeln!(f, "{header}").unwrap();
+    for r in rows {
+        writeln!(f, "{r}").unwrap();
+    }
+    eprintln!("  [csv] wrote {}", path.display());
+}
+
+/// Fixed-width table printing.
+pub fn print_row(cols: &[String], widths: &[usize]) {
+    let mut line = String::new();
+    for (c, w) in cols.iter().zip(widths) {
+        line.push_str(&format!("{:>w$}  ", c, w = w));
+    }
+    println!("{line}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::FaultMode;
+
+    #[test]
+    fn relu_cost_sane_and_ordered() {
+        let mut rng = Rng::new(1);
+        let base = relu_cost(ReluVariant::BaselineRelu, 64, &mut rng);
+        let circa =
+            relu_cost(ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero }, 64, &mut rng);
+        assert!(base.online_s > 0.0 && circa.online_s > 0.0);
+        // Circa must be meaningfully faster online and smaller at rest.
+        assert!(circa.online_s < base.online_s, "{circa:?} vs {base:?}");
+        assert!(circa.storage_bytes < base.storage_bytes);
+    }
+
+    #[test]
+    fn mac_cost_positive_and_fast() {
+        let mut rng = Rng::new(2);
+        let c = mac_cost(&mut rng);
+        assert!(c > 0.0 && c < 1e-6, "per-MAC {c}");
+    }
+
+    #[test]
+    fn runtime_model_composes() {
+        let per_relu = PerReluCost {
+            offline_s: 1e-5,
+            online_s: 1e-6,
+            online_bytes: 400.0,
+            storage_bytes: 2000.0,
+        };
+        let s = network_runtime_s(1000, 1_000_000, &per_relu, 1e-9);
+        assert!((s - (1e-3 + 1e-3)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,139 @@
+//! The paper's published numbers (Tables 1–3, Fig. 5), kept verbatim so
+//! every bench prints paper-vs-measured side by side.
+
+use crate::nn::graph::NetworkSpec;
+use crate::nn::{deepreduce, resnet, vgg};
+
+/// One row of Table 1 (baseline networks).
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub name: &'static str,
+    pub relus_k: f64,
+    pub baseline_acc: f64,
+    pub negpass_acc: f64,
+    pub negpass_bits: u32,
+    pub poszero_acc: f64,
+    pub poszero_bits: u32,
+    pub baseline_runtime_s: f64,
+    pub circa_runtime_s: f64,
+    pub speedup: f64,
+    /// Builder for the architecture spec (exact ReLU counts + MACs).
+    pub spec: fn() -> NetworkSpec,
+}
+
+pub fn table1() -> Vec<Table1Row> {
+    vec![
+        Table1Row { name: "ResNet32-C10", relus_k: 303.1, baseline_acc: 92.43, negpass_acc: 91.47, negpass_bits: 12, poszero_acc: 91.85, poszero_bits: 12, baseline_runtime_s: 6.32, circa_runtime_s: 2.47, speedup: 2.6, spec: || resnet::resnet32(32, 10) },
+        Table1Row { name: "ResNet18-C10", relus_k: 557.1, baseline_acc: 94.66, negpass_acc: 93.77, negpass_bits: 11, poszero_acc: 94.24, poszero_bits: 11, baseline_runtime_s: 11.05, circa_runtime_s: 3.89, speedup: 2.8, spec: || resnet::resnet18(32, 10) },
+        Table1Row { name: "VGG16-C10", relus_k: 284.7, baseline_acc: 94.00, negpass_acc: 93.77, negpass_bits: 12, poszero_acc: 93.61, poszero_bits: 13, baseline_runtime_s: 5.89, circa_runtime_s: 2.25, speedup: 2.6, spec: || vgg::vgg16(32, 10) },
+        Table1Row { name: "ResNet32-C100", relus_k: 303.1, baseline_acc: 67.32, negpass_acc: 66.41, negpass_bits: 14, poszero_acc: 66.32, poszero_bits: 13, baseline_runtime_s: 6.32, circa_runtime_s: 2.47, speedup: 2.6, spec: || resnet::resnet32(32, 100) },
+        Table1Row { name: "ResNet18-C100", relus_k: 557.1, baseline_acc: 74.24, negpass_acc: 73.80, negpass_bits: 13, poszero_acc: 73.76, poszero_bits: 12, baseline_runtime_s: 11.05, circa_runtime_s: 4.15, speedup: 2.7, spec: || resnet::resnet18(32, 100) },
+        Table1Row { name: "VGG16-C100", relus_k: 284.7, baseline_acc: 73.94, negpass_acc: 73.25, negpass_bits: 12, poszero_acc: 73.19, poszero_bits: 12, baseline_runtime_s: 5.89, circa_runtime_s: 2.25, speedup: 2.6, spec: || vgg::vgg16(32, 100) },
+        Table1Row { name: "ResNet32-Tiny", relus_k: 1212.4, baseline_acc: 55.53, negpass_acc: 55.15, negpass_bits: 16, poszero_acc: 54.56, poszero_bits: 15, baseline_runtime_s: 24.24, circa_runtime_s: 9.04, speedup: 2.7, spec: || resnet::resnet32(64, 200) },
+        Table1Row { name: "ResNet18-Tiny", relus_k: 2228.2, baseline_acc: 61.60, negpass_acc: 60.60, negpass_bits: 13, poszero_acc: 60.65, poszero_bits: 12, baseline_runtime_s: 44.55, circa_runtime_s: 14.28, speedup: 3.1, spec: || resnet::resnet18(64, 200) },
+        Table1Row { name: "VGG16-Tiny", relus_k: 1114.1, baseline_acc: 50.85, negpass_acc: 50.73, negpass_bits: 12, poszero_acc: 50.30, poszero_bits: 12, baseline_runtime_s: 21.41, circa_runtime_s: 6.96, speedup: 3.1, spec: || vgg::vgg16(64, 200) },
+    ]
+}
+
+/// One row of Table 2 (DeepReDuce models).
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub name: &'static str,
+    pub relus_k: f64,
+    pub baseline_acc: f64,
+    pub negpass_bits: u32,
+    pub poszero_bits: u32,
+    pub baseline_runtime_s: f64,
+    pub circa_runtime_s: f64,
+    pub speedup: f64,
+    pub spec: fn() -> NetworkSpec,
+}
+
+pub fn table2() -> Vec<Table2Row> {
+    vec![
+        Table2Row { name: "DeepReD1-C100", relus_k: 229.4, baseline_acc: 76.22, negpass_bits: 13, poszero_bits: 12, baseline_runtime_s: 3.18, circa_runtime_s: 1.84, speedup: 1.7, spec: || deepreduce::deepreduce(1, 32, 100) },
+        Table2Row { name: "DeepReD2-C100", relus_k: 114.7, baseline_acc: 74.72, negpass_bits: 13, poszero_bits: 13, baseline_runtime_s: 1.71, circa_runtime_s: 1.05, speedup: 1.6, spec: || deepreduce::deepreduce(2, 32, 100) },
+        Table2Row { name: "DeepReD3-C100", relus_k: 196.6, baseline_acc: 75.51, negpass_bits: 13, poszero_bits: 13, baseline_runtime_s: 2.76, circa_runtime_s: 1.65, speedup: 1.7, spec: || deepreduce::deepreduce(3, 32, 100) },
+        Table2Row { name: "DeepReD4-C100", relus_k: 98.3, baseline_acc: 71.95, negpass_bits: 13, poszero_bits: 13, baseline_runtime_s: 1.48, circa_runtime_s: 0.903, speedup: 1.6, spec: || deepreduce::deepreduce(4, 32, 100) },
+        Table2Row { name: "DeepReD1-Tiny", relus_k: 917.5, baseline_acc: 64.66, negpass_bits: 14, poszero_bits: 14, baseline_runtime_s: 12.27, circa_runtime_s: 6.68, speedup: 1.8, spec: || deepreduce::deepreduce(1, 64, 200) },
+        Table2Row { name: "DeepReD2-Tiny", relus_k: 458.8, baseline_acc: 62.26, negpass_bits: 15, poszero_bits: 15, baseline_runtime_s: 6.50, circa_runtime_s: 3.94, speedup: 1.6, spec: || deepreduce::deepreduce(2, 64, 200) },
+        Table2Row { name: "DeepReD5-Tiny", relus_k: 393.2, baseline_acc: 61.65, negpass_bits: 15, poszero_bits: 15, baseline_runtime_s: 5.38, circa_runtime_s: 3.21, speedup: 1.7, spec: || deepreduce::deepreduce(5, 64, 200) },
+        Table2Row { name: "DeepReD6-Tiny", relus_k: 229.4, baseline_acc: 59.18, negpass_bits: 15, poszero_bits: 15, baseline_runtime_s: 3.18, circa_runtime_s: 2.01, speedup: 1.6, spec: || deepreduce::deepreduce(6, 64, 200) },
+    ]
+}
+
+/// One row of Table 3 (runtime per optimization stage).
+#[derive(Clone, Debug)]
+pub struct Table3Row {
+    pub name: &'static str,
+    pub relus_k: f64,
+    pub relu_s: f64,
+    pub sign_s: f64,
+    pub stoch_sign_s: f64,
+    pub trunc_sign_s: f64,
+    pub trunc_bits: u32,
+    pub spec: fn() -> NetworkSpec,
+}
+
+pub fn table3() -> Vec<Table3Row> {
+    vec![
+        Table3Row { name: "Res32-C100", relus_k: 303.10, relu_s: 6.32, sign_s: 5.51, stoch_sign_s: 4.50, trunc_sign_s: 2.47, trunc_bits: 13, spec: || resnet::resnet32(32, 100) },
+        Table3Row { name: "Res18-C100", relus_k: 557.00, relu_s: 11.05, sign_s: 9.83, stoch_sign_s: 8.15, trunc_sign_s: 4.15, trunc_bits: 12, spec: || resnet::resnet18(32, 100) },
+        Table3Row { name: "VGG16-C100", relus_k: 284.67, relu_s: 5.89, sign_s: 5.01, stoch_sign_s: 4.59, trunc_sign_s: 2.25, trunc_bits: 12, spec: || vgg::vgg16(32, 100) },
+        Table3Row { name: "Res32-Tiny", relus_k: 1212.42, relu_s: 24.24, sign_s: 19.45, stoch_sign_s: 16.00, trunc_sign_s: 9.04, trunc_bits: 15, spec: || resnet::resnet32(64, 200) },
+        Table3Row { name: "Res18-Tiny", relus_k: 2228.24, relu_s: 44.55, sign_s: 35.74, stoch_sign_s: 29.40, trunc_sign_s: 14.28, trunc_bits: 12, spec: || resnet::resnet18(64, 200) },
+        Table3Row { name: "VGG16-Tiny", relus_k: 1114.10, relu_s: 21.41, sign_s: 17.91, stoch_sign_s: 14.68, trunc_sign_s: 6.96, trunc_bits: 12, spec: || vgg::vgg16(64, 200) },
+    ]
+}
+
+/// Fig. 5's published GC sizes (KB per ReLU) for the 31-bit field.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig5Paper {
+    pub baseline_kb: f64,
+    pub sign_kb: f64,
+    pub stoch_kb: f64,
+    pub trunc12_kb: f64,
+}
+
+/// Fig. 5 as printed (17.2 KB baseline; 1.4× / 1.9× / 4.7× reductions).
+pub const FIG5_PAPER: Fig5Paper =
+    Fig5Paper { baseline_kb: 17.2, sign_kb: 12.3, stoch_kb: 9.05, trunc12_kb: 3.66 };
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_match_published_relu_counts() {
+        for row in table1() {
+            let spec = (row.spec)();
+            let got_k = spec.total_relus() as f64 / 1000.0;
+            assert!(
+                (got_k - row.relus_k).abs() < 0.15,
+                "{}: spec {} vs paper {}",
+                row.name,
+                got_k,
+                row.relus_k
+            );
+        }
+        for row in table2() {
+            let spec = (row.spec)();
+            let got_k = spec.total_relus() as f64 / 1000.0;
+            assert!(
+                (got_k - row.relus_k).abs() < 0.15,
+                "{}: spec {} vs paper {}",
+                row.name,
+                got_k,
+                row.relus_k
+            );
+        }
+    }
+
+    #[test]
+    fn paper_speedups_consistent() {
+        for row in table1() {
+            let implied = row.baseline_runtime_s / row.circa_runtime_s;
+            assert!((implied - row.speedup).abs() < 0.2, "{}", row.name);
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! The paper's Fig. 2 ReLU circuit variants.
+//!
+//! Four generations, each strictly smaller than the last:
+//!
+//! | variant | module | GC contents | faults |
+//! |---|---|---|---|
+//! | baseline ReLU (Fig. 2a) | [`relu_gc`] | mod-reconstruct + compare + MUX(0,x) + mod-share | none |
+//! | naive sign (Fig. 2b) | [`sign_gc`] | mod-reconstruct + compare + MUX(−r, 1−r) | none |
+//! | stochastic sign (Fig. 2c) | [`stoch_sign_gc`] | share compare + MUX | `|x|/p` (Thm 3.1) |
+//! | truncated stochastic sign (Eq. 3) | [`trunc_sign_gc`] | (m−k)-bit compare + MUX | + `(2^k−|x|)/2^k` for `|x|<2^k` (Thm 3.2) |
+//!
+//! [`spec`] carries the shared input/output conventions and the
+//! [`spec::ReluVariant`] enum the protocol and benches dispatch on.
+
+pub mod relu_gc;
+pub mod sign_gc;
+pub mod spec;
+pub mod stoch_sign_gc;
+pub mod trunc_sign_gc;
+
+pub use spec::{FaultMode, ReluVariant};

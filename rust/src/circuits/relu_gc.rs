@@ -1,0 +1,146 @@
+//! Baseline ReLU garbled circuit — Fig. 2(a), the Gazelle/Delphi design.
+//!
+//! Inputs (in order): client share `⟨x⟩_c`, client randomness `r`, server
+//! share `⟨x⟩_s`. The circuit:
+//!
+//! 1. reconstructs `x = ⟨x⟩_c + ⟨x⟩_s mod p` — an (m+1)-bit add, a
+//!    subtract of `p`, and a MUX on the overflow check;
+//! 2. compares `x` against `p/2` and MUXes `0` or `x` (the ReLU);
+//! 3. outputs the *server's share* of the result: `ReLU(x) − r mod p` —
+//!    another subtract / conditional-add-p pair.
+//!
+//! This is the cost Circa attacks; everything here runs inside the GC.
+
+use crate::field::{Fp, FIELD_BITS, HALF, PRIME};
+use crate::gc::build::Builder;
+use crate::gc::circuit::Circuit;
+
+/// Input layout of the baseline ReLU circuit.
+pub const N_CLIENT_INPUTS: usize = 2 * FIELD_BITS; // ⟨x⟩_c, r
+pub const N_SERVER_INPUTS: usize = FIELD_BITS; // ⟨x⟩_s
+
+/// Build the Fig. 2(a) circuit. Output: m-bit bus of `ReLU(x) − r mod p`.
+pub fn build() -> Circuit {
+    let m = FIELD_BITS;
+    let mut bld = Builder::new();
+    let xc = bld.input_bus(m); // client share
+    let r = bld.input_bus(m); // client randomness
+    let xs = bld.input_bus(m); // server share
+
+    // x = xc + xs mod p: compute z (m+1 bits) and z - p; select on borrow.
+    let xc_ext = bld.zext(&xc, m + 1);
+    let xs_ext = bld.zext(&xs, m + 1);
+    let (z, _) = bld.add(&xc_ext, &xs_ext);
+    let p_bus = bld.const_bus(PRIME, m + 1);
+    let (z_minus_p, no_wrap_needed) = bld.sub(&z, &p_bus);
+    // If z >= p (no borrow from z-p), take z-p, else z.
+    let wrap = bld.not(no_wrap_needed); // wrap==true means z >= p? borrow==1 means z<p
+    let x = bld.mux_bus(wrap, &z_minus_p[..m], &z[..m]);
+
+    // ReLU select: x is "negative" iff x ≥ (p−1)/2 in field encoding.
+    let half_bus = bld.const_bus(HALF, m);
+    let is_neg = bld.geq(&x, &half_bus);
+    let is_pos = bld.not(is_neg);
+    let zero = bld.const_bus(0, m);
+    let relu = bld.mux_bus(is_pos, &x, &zero);
+
+    // Server share: relu - r mod p = relu - r, plus p if it borrowed.
+    let (d, borrow) = bld.sub(&relu, &r);
+    let d_ext = bld.zext(&d, m + 1);
+    let p_bus_m1 = bld.const_bus(PRIME, m + 1);
+    let (d_plus_p, _) = bld.add(&d_ext, &p_bus_m1);
+    let out = bld.mux_bus(borrow, &d_plus_p[..m], &d);
+    bld.output_bus(&out);
+    bld.build()
+}
+
+/// Plaintext reference of what the circuit computes (for tests and the
+/// fault model: the baseline is exact).
+pub fn reference(xc: Fp, r: Fp, xs: Fp) -> Fp {
+    let x = xc + xs;
+    let relu = if x.is_nonneg() { x } else { Fp::ZERO };
+    relu - r
+}
+
+/// Encode the inputs in circuit order.
+pub fn encode_inputs(xc: Fp, r: Fp, xs: Fp) -> Vec<bool> {
+    let mut bits = super::spec::fp_bits(xc);
+    bits.extend(super::spec::fp_bits(r));
+    bits.extend(super::spec::fp_bits(xs));
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::bits_fp;
+    use crate::field::random_fp;
+    use crate::ss::SharePair;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_reference_on_random_shares() {
+        let c = build();
+        let mut rng = Rng::new(1);
+        for _ in 0..300 {
+            let x = random_fp(&mut rng);
+            let sh = SharePair::share(x, &mut rng);
+            let r = random_fp(&mut rng);
+            let out = c.eval_plain(&encode_inputs(sh.client, r, sh.server));
+            let got = bits_fp(&out);
+            assert_eq!(got, reference(sh.client, r, sh.server));
+        }
+    }
+
+    #[test]
+    fn relu_semantics_end_to_end() {
+        // Reconstruct client+server outputs: client sets ⟨y⟩_c = r, so
+        // y = (ReLU(x) − r) + r must equal ReLU(x).
+        let c = build();
+        let mut rng = Rng::new(2);
+        for signed in [-500_000i64, -77, -1, 0, 1, 42, 123_456] {
+            let x = Fp::from_i64(signed);
+            let sh = SharePair::share(x, &mut rng);
+            let r = random_fp(&mut rng);
+            let out_share = bits_fp(&c.eval_plain(&encode_inputs(sh.client, r, sh.server)));
+            let y = out_share + r;
+            assert_eq!(y.to_i64(), signed.max(0), "x={signed}");
+        }
+    }
+
+    #[test]
+    fn is_exact_for_boundary_values() {
+        let c = build();
+        let mut rng = Rng::new(3);
+        for raw in [0u64, 1, HALF - 1, HALF, HALF + 1, PRIME - 1] {
+            let x = Fp::new(raw);
+            for _ in 0..20 {
+                let sh = SharePair::share(x, &mut rng);
+                let r = random_fp(&mut rng);
+                let out = bits_fp(&c.eval_plain(&encode_inputs(sh.client, r, sh.server)));
+                assert_eq!(out, reference(sh.client, r, sh.server), "raw={raw}");
+            }
+        }
+    }
+
+    #[test]
+    fn input_layout_constants() {
+        let c = build();
+        assert_eq!(c.n_inputs as usize, N_CLIENT_INPUTS + N_SERVER_INPUTS);
+        assert_eq!(c.outputs.len(), FIELD_BITS);
+    }
+
+    #[test]
+    fn garbles_and_evaluates() {
+        let c = build();
+        let mut rng = Rng::new(4);
+        let (gc, enc) = crate::gc::garble(&c, &mut rng);
+        let x = Fp::from_i64(-12345);
+        let sh = SharePair::share(x, &mut rng);
+        let r = random_fp(&mut rng);
+        let labels = enc.encode_all(&encode_inputs(sh.client, r, sh.server));
+        let out = crate::gc::evaluate(&c, &gc, &labels);
+        let got = bits_fp(&gc.decode(&out));
+        assert_eq!((got + r).to_i64(), 0);
+    }
+}

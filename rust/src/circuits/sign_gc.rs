@@ -1,0 +1,133 @@
+//! Naive sign garbled circuit — Fig. 2(b), Eq. 1 (Circa optimization #1).
+//!
+//! The ReLU is refactored to `x · sign(x)`; only `sign` stays in the GC
+//! and the multiply moves to Beaver triples. The client *pre-computes*
+//! `−r` and `1−r` outside the GC (it knows `r` in plaintext), saving two
+//! ADD/SUB modules relative to Fig. 2(a). The GC still reconstructs
+//! `x = ⟨x⟩_c + ⟨x⟩_s mod p` exactly, so it is fault-free:
+//!
+//! ```text
+//! sign(⟨x⟩_c, ⟨x⟩_s, −r, 1−r) = −r     if x mod p > p/2   (negative)
+//!                               1−r    otherwise           (non-negative)
+//! ```
+
+use crate::field::{Fp, FIELD_BITS, HALF, PRIME};
+use crate::gc::build::Builder;
+use crate::gc::circuit::Circuit;
+
+/// Input layout: client `⟨x⟩_c`, `−r`, `1−r`; then server `⟨x⟩_s`.
+pub const N_CLIENT_INPUTS: usize = 3 * FIELD_BITS;
+pub const N_SERVER_INPUTS: usize = FIELD_BITS;
+
+/// Build the Fig. 2(b) circuit. Output: m-bit bus of `⟨v⟩_s = sign(x) − r`.
+pub fn build() -> Circuit {
+    let m = FIELD_BITS;
+    let mut bld = Builder::new();
+    let xc = bld.input_bus(m);
+    let neg_r = bld.input_bus(m); // −r mod p, precomputed by client
+    let one_minus_r = bld.input_bus(m); // 1−r mod p, precomputed by client
+    let xs = bld.input_bus(m);
+
+    // Exact reconstruction x = xc + xs mod p (as in the baseline).
+    let xc_ext = bld.zext(&xc, m + 1);
+    let xs_ext = bld.zext(&xs, m + 1);
+    let (z, _) = bld.add(&xc_ext, &xs_ext);
+    let p_bus = bld.const_bus(PRIME, m + 1);
+    let (z_minus_p, borrow) = bld.sub(&z, &p_bus);
+    let wrap = bld.not(borrow);
+    let x = bld.mux_bus(wrap, &z_minus_p[..m], &z[..m]);
+
+    // sign select: negative iff x ≥ (p−1)/2.
+    let half_bus = bld.const_bus(HALF, m);
+    let is_neg = bld.geq(&x, &half_bus);
+
+    // Output −r when negative, 1−r otherwise (Eq. 1).
+    let out = bld.mux_bus(is_neg, &neg_r, &one_minus_r);
+    bld.output_bus(&out);
+    bld.build()
+}
+
+/// Plaintext reference: the server's sign share (exact — no faults).
+pub fn reference(xc: Fp, xs: Fp, r: Fp) -> Fp {
+    let x = xc + xs;
+    let sign = if x.is_nonneg() { Fp::ONE } else { Fp::ZERO };
+    sign - r
+}
+
+/// Encode inputs in circuit order given the plaintext `r`.
+pub fn encode_inputs(xc: Fp, xs: Fp, r: Fp) -> Vec<bool> {
+    let mut bits = super::spec::fp_bits(xc);
+    bits.extend(super::spec::fp_bits(-r));
+    bits.extend(super::spec::fp_bits(Fp::ONE - r));
+    bits.extend(super::spec::fp_bits(xs));
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::bits_fp;
+    use crate::field::random_fp;
+    use crate::ss::SharePair;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_reference() {
+        let c = build();
+        let mut rng = Rng::new(1);
+        for _ in 0..300 {
+            let x = random_fp(&mut rng);
+            let sh = SharePair::share(x, &mut rng);
+            let r = random_fp(&mut rng);
+            let out = bits_fp(&c.eval_plain(&encode_inputs(sh.client, sh.server, r)));
+            assert_eq!(out, reference(sh.client, sh.server, r));
+        }
+    }
+
+    #[test]
+    fn sign_reconstructs_to_zero_or_one() {
+        let c = build();
+        let mut rng = Rng::new(2);
+        for signed in [-1_000_000i64, -2, -1, 0, 1, 2, 999_999] {
+            let x = Fp::from_i64(signed);
+            let sh = SharePair::share(x, &mut rng);
+            let r = random_fp(&mut rng);
+            let vs = bits_fp(&c.eval_plain(&encode_inputs(sh.client, sh.server, r)));
+            let v = vs + r; // client share is r
+            let want = if signed >= 0 { 1 } else { 0 };
+            assert_eq!(v.to_i64(), want, "x={signed}");
+        }
+    }
+
+    #[test]
+    fn exact_no_faults_exhaustive_small() {
+        // The naive sign must be exact for every share split of small x.
+        let c = build();
+        let mut rng = Rng::new(3);
+        for mag in [0i64, 1, 3] {
+            for &signv in &[1i64, -1] {
+                let x = Fp::from_i64(mag * signv);
+                for _ in 0..50 {
+                    let t = random_fp(&mut rng);
+                    let sh = crate::ss::SharePair::share_with_t(x, t);
+                    let r = random_fp(&mut rng);
+                    let vs = bits_fp(&c.eval_plain(&encode_inputs(sh.client, sh.server, r)));
+                    let v = (vs + r).to_i64();
+                    assert_eq!(v, (x.is_nonneg()) as i64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cheaper_than_baseline() {
+        let baseline = crate::circuits::relu_gc::build();
+        let sign = build();
+        assert!(
+            sign.n_and() < baseline.n_and(),
+            "sign {} !< baseline {}",
+            sign.n_and(),
+            baseline.n_and()
+        );
+    }
+}

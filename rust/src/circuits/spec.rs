@@ -1,0 +1,124 @@
+//! Shared conventions for the ReLU circuit family.
+//!
+//! All circuits operate on `m = 31`-bit little-endian buses of field
+//! elements. Inputs always arrive in the order the figures draw them:
+//! client inputs first (so the OT accounting can split them off), then
+//! server inputs.
+
+use crate::field::{Fp, FIELD_BITS, PRIME};
+use crate::gc::build::{bits_to_u64, u64_to_bits};
+
+/// Truncation fault mode (§3.2, "Putting it All Together").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultMode {
+    /// Small positives `x ∈ [0, 2^k)` zeroed with prob `(2^k−|x|)/2^k`
+    /// (non-strict comparator `⟨x⟩_s ≤ t`).
+    PosZero,
+    /// Small negatives `x ∈ (−2^k, 0)` passed through with the same
+    /// probability (strict comparator `⟨x⟩_s < t`).
+    NegPass,
+}
+
+impl FaultMode {
+    pub fn parse(s: &str) -> Option<FaultMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "poszero" | "pos_zero" | "pz" => Some(FaultMode::PosZero),
+            "negpass" | "neg_pass" | "np" => Some(FaultMode::NegPass),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultMode::PosZero => "PosZero",
+            FaultMode::NegPass => "NegPass",
+        }
+    }
+}
+
+/// Which generation of the Fig. 2 family a protocol instance uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReluVariant {
+    /// Fig. 2(a): the Gazelle/Delphi ReLU GC. No Beaver multiply needed.
+    BaselineRelu,
+    /// Fig. 2(b): exact sign in GC + Beaver multiply.
+    NaiveSign,
+    /// Fig. 2(c): stochastic sign (no mod-reconstruct) + Beaver multiply.
+    StochasticSign { mode: FaultMode },
+    /// Eq. 3: truncated stochastic sign + Beaver multiply.
+    TruncatedSign { k: u32, mode: FaultMode },
+}
+
+impl ReluVariant {
+    pub fn name(self) -> String {
+        match self {
+            ReluVariant::BaselineRelu => "ReLU".into(),
+            ReluVariant::NaiveSign => "Sign".into(),
+            ReluVariant::StochasticSign { mode } => format!("~Sign[{}]", mode.name()),
+            ReluVariant::TruncatedSign { k, mode } => {
+                format!("~Sign_k[k={k},{}]", mode.name())
+            }
+        }
+    }
+
+    /// Does this variant consume a Beaver triple per ReLU?
+    pub fn uses_beaver(self) -> bool {
+        !matches!(self, ReluVariant::BaselineRelu)
+    }
+}
+
+/// Encode a field element onto an m-bit bus (little-endian bools).
+pub fn fp_bits(x: Fp) -> Vec<bool> {
+    u64_to_bits(x.raw(), FIELD_BITS)
+}
+
+/// Decode an m-bit bus back to a field element (reduces mod p).
+pub fn bits_fp(bits: &[bool]) -> Fp {
+    Fp::reduce(bits_to_u64(bits))
+}
+
+/// Sanity: p must fit the declared bus width.
+pub const _ASSERT_WIDTH: () = assert!(PRIME < (1 << FIELD_BITS as u64));
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp_bits_roundtrip() {
+        for v in [0u64, 1, 12345, PRIME - 1] {
+            let x = Fp::new(v);
+            assert_eq!(bits_fp(&fp_bits(x)), x);
+        }
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(FaultMode::parse("poszero"), Some(FaultMode::PosZero));
+        assert_eq!(FaultMode::parse("NegPass"), Some(FaultMode::NegPass));
+        assert_eq!(FaultMode::parse("np"), Some(FaultMode::NegPass));
+        assert_eq!(FaultMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn variant_names_distinct() {
+        let names: Vec<String> = [
+            ReluVariant::BaselineRelu,
+            ReluVariant::NaiveSign,
+            ReluVariant::StochasticSign { mode: FaultMode::PosZero },
+            ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero },
+        ]
+        .iter()
+        .map(|v| v.name())
+        .collect();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+
+    #[test]
+    fn beaver_usage() {
+        assert!(!ReluVariant::BaselineRelu.uses_beaver());
+        assert!(ReluVariant::NaiveSign.uses_beaver());
+    }
+}

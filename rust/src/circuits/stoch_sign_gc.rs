@@ -1,0 +1,213 @@
+//! Stochastic sign garbled circuit — Fig. 2(c), Eq. 2 (Circa opt. #2),
+//! generalized with truncation (Eq. 3) via `k` (`k = 0` is Eq. 2).
+//!
+//! Drops the exact mod-p reconstruction: the GC contains only a
+//! `(m−k)`-bit comparator and an m-bit MUX. Two things happen *outside*
+//! the GC at plaintext speed:
+//!
+//! * the client negates its share and sends `p − ⟨x⟩_c`;
+//! * both parties truncate their comparator operands to the top `m−k`
+//!   bits, so the circuit has `m−k`-bit share inputs — fewer AND gates
+//!   *and* fewer online labels.
+//!
+//! ```text
+//! s̃ign_k(⌊p−⟨x⟩_c⌋_k, ⌊⟨x⟩_s⌋_k, −r, 1−r) = −r   if ⌊⟨x⟩_s⌋_k ≤ ⌊p−⟨x⟩_c⌋_k
+//!                                            1−r  otherwise
+//! ```
+//!
+//! NegPass uses strict `<` (§3.2): truncation faults then land on small
+//! negatives instead of small positives. Fault probabilities: `|x|/p`
+//! (Thm 3.1) plus, for `|x| < 2^k`, `(2^k−|x|)/2^k` (Thm 3.2) —
+//! validated in the tests and at scale by `cargo bench --bench fig3`.
+
+use super::spec::FaultMode;
+use crate::field::{Fp, FIELD_BITS, PRIME};
+use crate::gc::build::{u64_to_bits, Builder};
+use crate::gc::circuit::Circuit;
+
+/// Client input bits for truncation level `k`:
+/// `⌊p−⟨x⟩_c⌋_k` (m−k bits), `−r` (m bits), `1−r` (m bits).
+pub fn n_client_inputs(k: u32) -> usize {
+    (FIELD_BITS - k as usize) + 2 * FIELD_BITS
+}
+
+/// Server input bits: `⌊⟨x⟩_s⌋_k` (m−k bits).
+pub fn n_server_inputs(k: u32) -> usize {
+    FIELD_BITS - k as usize
+}
+
+/// Build the Fig. 2(c) circuit (`k = 0`).
+pub fn build(mode: FaultMode) -> Circuit {
+    build_truncated(0, mode)
+}
+
+/// Build the Eq. 3 circuit for truncation `k` (shares pre-truncated by
+/// the parties, so the comparator buses are `m−k` bits wide).
+pub fn build_truncated(k: u32, mode: FaultMode) -> Circuit {
+    let m = FIELD_BITS;
+    let k = k as usize;
+    assert!(k < m, "truncation must leave at least one bit");
+    let w = m - k;
+    let mut bld = Builder::new();
+    let neg_xc_t = bld.input_bus(w); // ⌊p − ⟨x⟩_c⌋_k, truncated by client
+    let neg_r = bld.input_bus(m);
+    let one_minus_r = bld.input_bus(m);
+    let xs_t = bld.input_bus(w); // ⌊⟨x⟩_s⌋_k, truncated by server
+
+    // PosZero: negative iff ⌊⟨x⟩_s⌋ ≤ ⌊p−⟨x⟩_c⌋; NegPass: strict <.
+    let is_neg = match mode {
+        FaultMode::PosZero => bld.leq(&xs_t, &neg_xc_t),
+        FaultMode::NegPass => bld.gt(&neg_xc_t, &xs_t),
+    };
+    let out = bld.mux_bus(is_neg, &neg_r, &one_minus_r);
+    bld.output_bus(&out);
+    bld.build()
+}
+
+/// Plaintext reference of the *stochastic* computation (matches the GC
+/// bit-for-bit, including its faults). Returns the server's sign share.
+pub fn reference(neg_xc: Fp, xs: Fp, r: Fp, k: u32, mode: FaultMode) -> Fp {
+    let a = xs.raw() >> k;
+    let b = neg_xc.raw() >> k;
+    let is_neg = match mode {
+        FaultMode::PosZero => a <= b,
+        FaultMode::NegPass => a < b,
+    };
+    let sign = if is_neg { Fp::ZERO } else { Fp::ONE };
+    sign - r
+}
+
+/// The client's negated share, computed at plaintext speed.
+pub fn negate_share(xc: Fp) -> Fp {
+    Fp::new((PRIME - xc.raw()) % PRIME)
+}
+
+/// Client input bits in circuit order for truncation `k`.
+pub fn client_input_bits(xc: Fp, r: Fp, k: u32) -> Vec<bool> {
+    let w = FIELD_BITS - k as usize;
+    let mut bits = u64_to_bits(negate_share(xc).raw() >> k, w);
+    bits.extend(super::spec::fp_bits(-r));
+    bits.extend(super::spec::fp_bits(Fp::ONE - r));
+    bits
+}
+
+/// Server input bits in circuit order for truncation `k`.
+pub fn server_input_bits(xs: Fp, k: u32) -> Vec<bool> {
+    u64_to_bits(xs.raw() >> k, FIELD_BITS - k as usize)
+}
+
+/// Full input assignment (client block then server block).
+pub fn encode_inputs(xc: Fp, xs: Fp, r: Fp, k: u32) -> Vec<bool> {
+    let mut bits = client_input_bits(xc, r, k);
+    bits.extend(server_input_bits(xs, k));
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::bits_fp;
+    use crate::field::random_fp;
+    use crate::ss::SharePair;
+    use crate::util::Rng;
+
+    fn run_gc(c: &Circuit, xc: Fp, xs: Fp, r: Fp, k: u32) -> Fp {
+        bits_fp(&c.eval_plain(&encode_inputs(xc, xs, r, k)))
+    }
+
+    #[test]
+    fn gc_matches_stochastic_reference() {
+        let mut rng = Rng::new(1);
+        for mode in [FaultMode::PosZero, FaultMode::NegPass] {
+            for k in [0u32, 8, 12, 18] {
+                let c = build_truncated(k, mode);
+                for _ in 0..150 {
+                    let x = random_fp(&mut rng);
+                    let t = random_fp(&mut rng);
+                    let sh = SharePair::share_with_t(x, t);
+                    let r = random_fp(&mut rng);
+                    let got = run_gc(&c, sh.client, sh.server, r, k);
+                    let want = reference(negate_share(sh.client), sh.server, r, k, mode);
+                    assert_eq!(got, want, "k={k} mode={mode:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn input_layout_matches_constants() {
+        for k in [0u32, 12, 20] {
+            let c = build_truncated(k, FaultMode::PosZero);
+            assert_eq!(c.n_inputs as usize, n_client_inputs(k) + n_server_inputs(k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn fault_rate_tracks_thm_3_1() {
+        // For |x| around p/8 the sign flips with probability ≈ 1/8.
+        let mut rng = Rng::new(2);
+        let c = build(FaultMode::PosZero);
+        let mag = (PRIME / 8) as i64;
+        let mut faults = 0u32;
+        let n = 2000;
+        for _ in 0..n {
+            let x = Fp::from_i64(mag);
+            let t = random_fp(&mut rng);
+            let sh = SharePair::share_with_t(x, t);
+            let r = random_fp(&mut rng);
+            let v = (run_gc(&c, sh.client, sh.server, r, 0) + r).to_i64();
+            if v != 1 {
+                faults += 1;
+            }
+        }
+        let rate = faults as f64 / n as f64;
+        assert!((rate - 0.125).abs() < 0.03, "rate {rate} != 0.125");
+    }
+
+    #[test]
+    fn small_magnitudes_rarely_fault_at_k0() {
+        let mut rng = Rng::new(3);
+        let c = build(FaultMode::PosZero);
+        let mut faults = 0;
+        let n = 2000;
+        for i in 0..n {
+            let x = Fp::from_i64(if i % 2 == 0 { 1000 } else { -1000 });
+            let t = random_fp(&mut rng);
+            let sh = SharePair::share_with_t(x, t);
+            let r = random_fp(&mut rng);
+            let v = (run_gc(&c, sh.client, sh.server, r, 0) + r).to_i64();
+            let want = x.is_nonneg() as i64;
+            if v != want {
+                faults += 1;
+            }
+        }
+        // P(fault) = 1000/p ≈ 5e-7, so ~zero faults in 2000 trials.
+        assert_eq!(faults, 0);
+    }
+
+    #[test]
+    fn much_cheaper_than_naive_sign() {
+        let naive = crate::circuits::sign_gc::build();
+        let stoch = build(FaultMode::PosZero);
+        assert!(stoch.n_and() * 2 < naive.n_and(), "{} vs {}", stoch.n_and(), naive.n_and());
+    }
+
+    #[test]
+    fn garbled_roundtrip() {
+        let mut rng = Rng::new(4);
+        for k in [0u32, 12] {
+            let c = build_truncated(k, FaultMode::NegPass);
+            let (gc, enc) = crate::gc::garble(&c, &mut rng);
+            let x = Fp::from_i64(777_777);
+            let t = random_fp(&mut rng);
+            let sh = SharePair::share_with_t(x, t);
+            let r = random_fp(&mut rng);
+            let labels = enc.encode_all(&encode_inputs(sh.client, sh.server, r, k));
+            let out = gc.decode(&crate::gc::evaluate(&c, &gc, &labels));
+            assert_eq!(
+                bits_fp(&out),
+                reference(negate_share(sh.client), sh.server, r, k, FaultMode::NegPass)
+            );
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Truncated stochastic sign — Eq. 3 (Circa optimization #3, the big one).
+//!
+//! Thin wrapper over [`stoch_sign_gc`](super::stoch_sign_gc) with `k > 0`:
+//! the parties truncate their own shares at plaintext speed, so the GC
+//! comparator *and* the online label traffic shrink from `m` to `m − k`
+//! bits. Truncation adds a second fault mode (Thm 3.2): values with
+//! `|x| < 2^k` flip with probability `(2^k − |x|)/2^k` — positives under
+//! PosZero, negatives under NegPass. The `(−r, 1−r)` MUX stays m-bit.
+
+use super::spec::FaultMode;
+use super::stoch_sign_gc;
+use crate::field::{Fp, FIELD_BITS};
+use crate::gc::circuit::Circuit;
+
+/// Build the Eq. 3 circuit: `(m−k)`-bit comparator + m-bit MUX.
+pub fn build(k: u32, mode: FaultMode) -> Circuit {
+    stoch_sign_gc::build_truncated(k, mode)
+}
+
+pub use super::stoch_sign_gc::{
+    client_input_bits, encode_inputs, negate_share, reference, server_input_bits,
+};
+
+/// AND-gate count as a function of k — used by Fig. 5 and sanity checks.
+pub fn expected_ands(k: u32) -> usize {
+    (FIELD_BITS - k as usize) + FIELD_BITS // comparator + MUX
+}
+
+/// Closed-form truncation fault probability (Thm 3.2) for a value `x`,
+/// *conditioned on* the stochastic sign being correct.
+pub fn trunc_fault_prob(x: Fp, k: u32, mode: FaultMode) -> f64 {
+    let two_k = 1u64 << k;
+    let mag = x.magnitude();
+    let side_hit = match mode {
+        FaultMode::PosZero => x.is_nonneg(),
+        FaultMode::NegPass => !x.is_nonneg(),
+    };
+    if side_hit && mag < two_k {
+        (two_k - mag) as f64 / two_k as f64
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::bits_fp;
+    use crate::field::random_fp;
+    use crate::ss::SharePair;
+    use crate::util::Rng;
+
+    fn sign_via_gc(c: &Circuit, x: Fp, t: Fp, r: Fp, k: u32) -> i64 {
+        let sh = SharePair::share_with_t(x, t);
+        let out = bits_fp(&c.eval_plain(&encode_inputs(sh.client, sh.server, r, k)));
+        (out + r).to_i64()
+    }
+
+    #[test]
+    fn k0_equals_stochastic_sign() {
+        let mut rng = Rng::new(1);
+        let c0 = build(0, FaultMode::PosZero);
+        let cs = stoch_sign_gc::build(FaultMode::PosZero);
+        for _ in 0..100 {
+            let x = random_fp(&mut rng);
+            let t = random_fp(&mut rng);
+            let r = random_fp(&mut rng);
+            assert_eq!(sign_via_gc(&c0, x, t, r, 0), sign_via_gc(&cs, x, t, r, 0));
+        }
+    }
+
+    #[test]
+    fn and_count_shrinks_with_k() {
+        for k in [0u32, 4, 12, 18, 24] {
+            let c = build(k, FaultMode::PosZero);
+            assert_eq!(c.n_and(), expected_ands(k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn online_label_count_shrinks_with_k() {
+        // The server's online labels per ReLU drop from m to m−k.
+        assert_eq!(stoch_sign_gc::n_server_inputs(0), FIELD_BITS);
+        assert_eq!(stoch_sign_gc::n_server_inputs(12), FIELD_BITS - 12);
+    }
+
+    #[test]
+    fn large_values_never_trunc_fault() {
+        // |x| >= 2^k: truncated compare must equal untruncated compare.
+        let mut rng = Rng::new(2);
+        let k = 12;
+        let ck = build(k, FaultMode::PosZero);
+        let c0 = build(0, FaultMode::PosZero);
+        for _ in 0..400 {
+            let mag = (1u64 << k) + rng.below(1 << 20);
+            let sign = if rng.bool() { 1 } else { -1 };
+            let x = Fp::from_i64(sign * mag as i64);
+            let t = random_fp(&mut rng);
+            let r = random_fp(&mut rng);
+            assert_eq!(
+                sign_via_gc(&ck, x, t, r, k),
+                sign_via_gc(&c0, x, t, r, 0),
+                "x={} t={}",
+                x.to_i64(),
+                t.raw()
+            );
+        }
+    }
+
+    #[test]
+    fn poszero_fault_rate_matches_thm_3_2() {
+        // x = 2^k / 4 should trunc-fault with prob (2^k − x)/2^k = 0.75.
+        let mut rng = Rng::new(3);
+        let k = 16;
+        let c = build(k, FaultMode::PosZero);
+        let x = Fp::from_i64((1i64 << k) / 4);
+        let n = 3000;
+        let mut faults = 0;
+        for _ in 0..n {
+            let t = random_fp(&mut rng);
+            let r = random_fp(&mut rng);
+            if sign_via_gc(&c, x, t, r, k) != 1 {
+                faults += 1;
+            }
+        }
+        let rate = faults as f64 / n as f64;
+        let want = trunc_fault_prob(x, k, FaultMode::PosZero);
+        assert!((want - 0.75).abs() < 1e-9);
+        assert!((rate - want).abs() < 0.04, "rate {rate} want {want}");
+    }
+
+    #[test]
+    fn poszero_never_faults_negatives_in_trunc_range() {
+        // Thm 3.2: in PosZero, negatives do not get extra faults.
+        let mut rng = Rng::new(4);
+        let k = 16;
+        let ck = build(k, FaultMode::PosZero);
+        let c0 = build(0, FaultMode::PosZero);
+        for _ in 0..500 {
+            let mag = 1 + rng.below((1 << k) - 1);
+            let x = Fp::from_i64(-(mag as i64));
+            let t = random_fp(&mut rng);
+            let r = random_fp(&mut rng);
+            assert_eq!(sign_via_gc(&ck, x, t, r, k), sign_via_gc(&c0, x, t, r, 0));
+        }
+    }
+
+    #[test]
+    fn negpass_faults_negatives_not_positives() {
+        let mut rng = Rng::new(5);
+        let k = 16;
+        let ck = build(k, FaultMode::NegPass);
+        let c0 = build(0, FaultMode::NegPass);
+        // Positives in trunc range: unchanged vs k=0.
+        for _ in 0..300 {
+            let mag = 1 + rng.below((1 << k) - 1);
+            let x = Fp::from_i64(mag as i64);
+            let t = random_fp(&mut rng);
+            let r = random_fp(&mut rng);
+            assert_eq!(sign_via_gc(&ck, x, t, r, k), sign_via_gc(&c0, x, t, r, 0));
+        }
+        // Negative x = −2^k/4: passes as positive ~75% of the time.
+        let x = Fp::from_i64(-((1i64 << k) / 4));
+        let n = 3000;
+        let mut faults = 0;
+        for _ in 0..n {
+            let t = random_fp(&mut rng);
+            let r = random_fp(&mut rng);
+            if sign_via_gc(&ck, x, t, r, k) != 0 {
+                faults += 1;
+            }
+        }
+        let rate = faults as f64 / n as f64;
+        let want = trunc_fault_prob(x, k, FaultMode::NegPass);
+        assert!((rate - want).abs() < 0.04, "rate {rate} want {want}");
+    }
+
+    #[test]
+    fn fault_prob_formula_edges() {
+        let k = 12;
+        assert_eq!(trunc_fault_prob(Fp::from_i64(0), k, FaultMode::PosZero), 1.0);
+        assert_eq!(trunc_fault_prob(Fp::from_i64(1 << k), k, FaultMode::PosZero), 0.0);
+        assert_eq!(trunc_fault_prob(Fp::from_i64(-5), k, FaultMode::PosZero), 0.0);
+        assert_eq!(trunc_fault_prob(Fp::from_i64(5), k, FaultMode::NegPass), 0.0);
+        assert!(trunc_fault_prob(Fp::from_i64(-5), k, FaultMode::NegPass) > 0.99);
+    }
+}

@@ -1,0 +1,93 @@
+//! Dynamic request batcher: max-size / max-delay grouping.
+//!
+//! PI requests are independent (each consumes its own material), so the
+//! batcher's job is *dispatch shaping*: group arrivals so the router can
+//! hand a worker a contiguous chunk, amortizing queue overhead and
+//! letting the metrics attribute queueing vs protocol time — the same
+//! role the batch scheduler plays in a clear-text serving stack.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_size: usize,
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_size: 8, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// Pull one batch from `rx` under the policy. Returns `None` when the
+/// channel is closed and drained.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Option<Vec<T>> {
+    // Block for the first element.
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_delay;
+    while batch.len() < policy.max_size {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_up_to_max_size() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_size: 4, max_delay: Duration::from_millis(50) };
+        let b = next_batch(&rx, policy).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = next_batch(&rx, policy).unwrap();
+        assert_eq!(b, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_delay() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let policy = BatchPolicy { max_size: 100, max_delay: Duration::from_millis(5) };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, policy).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn none_when_closed() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn drains_after_sender_drop() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        drop(tx);
+        let policy = BatchPolicy { max_size: 10, max_delay: Duration::from_millis(1) };
+        let b = next_batch(&rx, policy).unwrap();
+        assert_eq!(b, vec![7, 8]);
+        assert!(next_batch(&rx, policy).is_none());
+    }
+}

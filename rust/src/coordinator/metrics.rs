@@ -1,0 +1,84 @@
+//! Service metrics: counters + latency histograms.
+
+use crate::util::stats::Histogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared metrics sink (cheap atomics on the hot path; histograms behind
+/// a short-critical-section mutex).
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub pool_dry_events: AtomicU64,
+    pub bytes_online: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    online_us: Histogram,
+    queue_us: Histogram,
+    total_us: Histogram,
+}
+
+/// A snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub pool_dry_events: u64,
+    pub bytes_online: u64,
+    pub online_p50_us: u64,
+    pub online_p99_us: u64,
+    pub online_mean_us: f64,
+    pub queue_mean_us: f64,
+    pub total_p50_us: u64,
+    pub total_p99_us: u64,
+}
+
+impl Metrics {
+    pub fn record(&self, queue_us: u64, online_us: u64, bytes: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.bytes_online.fetch_add(bytes, Ordering::Relaxed);
+        let mut g = self.inner.lock().unwrap();
+        g.queue_us.record_us(queue_us);
+        g.online_us.record_us(online_us);
+        g.total_us.record_us(queue_us + online_us);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        Snapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            pool_dry_events: self.pool_dry_events.load(Ordering::Relaxed),
+            bytes_online: self.bytes_online.load(Ordering::Relaxed),
+            online_p50_us: g.online_us.percentile_us(50.0),
+            online_p99_us: g.online_us.percentile_us(99.0),
+            online_mean_us: g.online_us.mean_us(),
+            queue_mean_us: g.queue_us.mean_us(),
+            total_p50_us: g.total_us.percentile_us(50.0),
+            total_p99_us: g.total_us.percentile_us(99.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let m = Metrics::default();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.record(100, 1000, 64);
+        m.record(200, 2000, 64);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.bytes_online, 128);
+        assert!(s.online_mean_us >= 1000.0);
+        assert!(s.total_p99_us >= s.total_p50_us);
+    }
+}

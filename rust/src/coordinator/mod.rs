@@ -1,0 +1,29 @@
+//! The PI serving coordinator — Circa as a deployable service.
+//!
+//! Private inference has an unusual serving profile: every inference
+//! consumes single-use offline material (garbled circuits, OTs, Beaver
+//! triples — paper footnote 2), so a production server must *bank*
+//! material ahead of demand and spend it on the online path. The
+//! coordinator mirrors the vLLM-router shape adapted to that constraint:
+//!
+//! * [`pool`] — the offline-material bank: background dealer threads keep
+//!   `target` ready-to-serve sessions; the online path leases one per
+//!   request and never garbles inline unless the bank runs dry.
+//! * [`batcher`] — groups incoming requests into dispatch batches
+//!   (max-size / max-delay policy, the classic dynamic batcher).
+//! * [`router`] — a worker pool running the 2-party online protocol for
+//!   each leased session.
+//! * [`metrics`] — latency histograms (online / queue / total),
+//!   throughput counters, pool-dry counters.
+//! * [`service`] — the assembled `PiService` front-end used by
+//!   `examples/serve_pi.rs` and the `circa serve` CLI.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pool;
+pub mod router;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use pool::MaterialPool;
+pub use service::{PiService, ServiceConfig};

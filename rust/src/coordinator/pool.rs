@@ -1,0 +1,176 @@
+//! The offline-material bank.
+//!
+//! Each entry is a fully-prepared 2-party session (client + server nets:
+//! masks, HE-precomputes, garbled circuits, OT'd labels, triples) for one
+//! inference of a fixed network plan. Dealer threads refill toward
+//! `target`; `lease()` pops a ready session or — if the bank is dry —
+//! prepares one inline (counted, because it shows up as tail latency
+//! exactly like a real deployment's offline-throughput shortfall).
+
+use crate::protocol::client::ClientNet;
+use crate::protocol::server::{offline_network, NetworkPlan, ServerNet};
+use crate::util::Rng;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One ready-to-serve inference session.
+pub struct Session {
+    pub client: ClientNet,
+    pub server: ServerNet,
+    pub offline_bytes: u64,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Session>>,
+    ready: Condvar,
+    refill: Condvar,
+    stop: AtomicBool,
+    dry_leases: AtomicU64,
+    produced: AtomicU64,
+}
+
+/// Material bank with background dealer threads.
+pub struct MaterialPool {
+    plan: Arc<NetworkPlan>,
+    shared: Arc<Shared>,
+    target: usize,
+    dealers: Vec<JoinHandle<()>>,
+}
+
+impl MaterialPool {
+    /// Spawn a pool refilling toward `target` with `n_dealers` threads.
+    pub fn start(plan: Arc<NetworkPlan>, target: usize, n_dealers: usize, seed: u64) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            refill: Condvar::new(),
+            stop: AtomicBool::new(false),
+            dry_leases: AtomicU64::new(0),
+            produced: AtomicU64::new(0),
+        });
+        let mut dealers = Vec::new();
+        for d in 0..n_dealers.max(1) {
+            let shared = shared.clone();
+            let plan = plan.clone();
+            let mut rng = Rng::new(seed ^ (d as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            dealers.push(std::thread::spawn(move || loop {
+                // Wait until below target (or stopping).
+                {
+                    let mut q = shared.queue.lock().unwrap();
+                    while q.len() >= target && !shared.stop.load(Ordering::Relaxed) {
+                        q = shared.refill.wait(q).unwrap();
+                    }
+                }
+                if shared.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                // Produce outside the lock (garbling is the slow part).
+                let (client, server, offline_bytes) = offline_network(&plan, &mut rng);
+                shared.produced.fetch_add(1, Ordering::Relaxed);
+                let mut q = shared.queue.lock().unwrap();
+                q.push_back(Session { client, server, offline_bytes });
+                shared.ready.notify_one();
+            }));
+        }
+        Self { plan, shared, target, dealers }
+    }
+
+    /// Lease a session: pop a banked one, or deal inline when dry.
+    pub fn lease(&self, rng: &mut Rng) -> (Session, bool) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if let Some(s) = q.pop_front() {
+                self.shared.refill.notify_all();
+                return (s, false);
+            }
+        }
+        // Dry: prepare inline (this is what the latency histogram should
+        // see when offline throughput can't keep up).
+        self.shared.dry_leases.fetch_add(1, Ordering::Relaxed);
+        let (client, server, offline_bytes) = offline_network(&self.plan, rng);
+        ((Session { client, server, offline_bytes }), true)
+    }
+
+    /// Block until at least `n` sessions are banked (warmup).
+    pub fn wait_ready(&self, n: usize) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while q.len() < n.min(self.target) {
+            q = self.shared.ready.wait(q).unwrap();
+        }
+    }
+
+    pub fn banked(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    pub fn dry_leases(&self) -> u64 {
+        self.shared.dry_leases.load(Ordering::Relaxed)
+    }
+
+    pub fn produced(&self) -> u64 {
+        self.shared.produced.load(Ordering::Relaxed)
+    }
+
+    /// Stop dealers and drain.
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.refill.notify_all();
+        for d in self.dealers.drain(..) {
+            let _ = d.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::ReluVariant;
+    use crate::protocol::linear::{LinearOp, Matrix};
+
+    fn tiny_plan() -> Arc<NetworkPlan> {
+        let mut rng = Rng::new(1);
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(4, 6, 10, &mut rng)),
+            Arc::new(Matrix::random(3, 4, 10, &mut rng)),
+        ];
+        Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu))
+    }
+
+    #[test]
+    fn pool_fills_and_leases() {
+        let pool = MaterialPool::start(tiny_plan(), 4, 2, 7);
+        pool.wait_ready(4);
+        assert!(pool.banked() >= 4);
+        let mut rng = Rng::new(2);
+        let (s, was_dry) = pool.lease(&mut rng);
+        assert!(!was_dry);
+        assert!(s.offline_bytes > 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn dry_lease_still_serves() {
+        // Zero-target pool: every lease is dry but must still work.
+        let pool = MaterialPool::start(tiny_plan(), 0, 1, 8);
+        let mut rng = Rng::new(3);
+        let (_s, was_dry) = pool.lease(&mut rng);
+        assert!(was_dry);
+        assert_eq!(pool.dry_leases(), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn refill_after_lease() {
+        let pool = MaterialPool::start(tiny_plan(), 2, 1, 9);
+        pool.wait_ready(2);
+        let mut rng = Rng::new(4);
+        let _ = pool.lease(&mut rng);
+        // Dealer should replenish toward the target.
+        pool.wait_ready(2);
+        assert!(pool.banked() >= 1);
+        assert!(pool.produced() >= 3);
+        pool.shutdown();
+    }
+}

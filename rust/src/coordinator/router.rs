@@ -1,0 +1,130 @@
+//! Worker pool: runs the 2-party online protocol for leased sessions.
+
+use super::metrics::Metrics;
+use super::pool::MaterialPool;
+use crate::field::Fp;
+use crate::protocol::server::run_inference;
+use crate::util::{Rng, Timer};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One inference request.
+pub struct Request {
+    pub id: u64,
+    pub input: Vec<Fp>,
+    pub enqueued: Instant,
+    /// Where to deliver the response.
+    pub reply: Sender<Response>,
+}
+
+/// One inference response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<Fp>,
+    pub queue_us: u64,
+    pub online_us: u64,
+    pub bytes: u64,
+    pub served_from_bank: bool,
+}
+
+/// Spawn `n_workers` threads consuming request batches from `rx`.
+pub fn spawn_workers(
+    n_workers: usize,
+    rx: Receiver<Vec<Request>>,
+    pool: Arc<MaterialPool>,
+    metrics: Arc<Metrics>,
+    seed: u64,
+) -> Vec<JoinHandle<()>> {
+    let rx = Arc::new(Mutex::new(rx));
+    (0..n_workers.max(1))
+        .map(|w| {
+            let rx = rx.clone();
+            let pool = pool.clone();
+            let metrics = metrics.clone();
+            let mut rng = Rng::new(seed ^ (w as u64).wrapping_mul(0xA24BAED4963EE407));
+            std::thread::spawn(move || loop {
+                let batch = {
+                    let guard = rx.lock().unwrap();
+                    match guard.recv() {
+                        Ok(b) => b,
+                        Err(_) => return,
+                    }
+                };
+                for req in batch {
+                    let queue_us = req.enqueued.elapsed().as_micros() as u64;
+                    let (session, was_dry) = pool.lease(&mut rng);
+                    if was_dry {
+                        metrics.pool_dry_events.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    let t = Timer::new();
+                    let (logits, stats) =
+                        run_inference(&session.client, &session.server, &req.input);
+                    let online_us = t.elapsed_us();
+                    let bytes = stats.bytes_to_client + stats.bytes_to_server;
+                    metrics.record(queue_us, online_us, bytes);
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        logits,
+                        queue_us,
+                        online_us,
+                        bytes,
+                        served_from_bank: !was_dry,
+                    });
+                }
+            })
+        })
+        .collect()
+}
+
+/// Convenience used by tests: a (sender, receiver) pair of the batch
+/// channel type the router consumes.
+pub fn batch_channel() -> (Sender<Vec<Request>>, Receiver<Vec<Request>>) {
+    channel()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::ReluVariant;
+    use crate::protocol::linear::{LinearOp, Matrix};
+    use crate::protocol::server::NetworkPlan;
+
+    #[test]
+    fn workers_serve_requests() {
+        let mut rng = Rng::new(1);
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(4, 6, 10, &mut rng)),
+            Arc::new(Matrix::random(3, 4, 10, &mut rng)),
+        ];
+        let plan = Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu));
+        let pool = Arc::new(MaterialPool::start(plan, 4, 1, 2));
+        let metrics = Arc::new(Metrics::default());
+        let (btx, brx) = batch_channel();
+        let workers = spawn_workers(2, brx, pool.clone(), metrics.clone(), 3);
+
+        let (rtx, rrx) = channel();
+        let reqs: Vec<Request> = (0..4)
+            .map(|id| Request {
+                id,
+                input: (0..6).map(|i| Fp::from_i64(100 + i)).collect(),
+                enqueued: Instant::now(),
+                reply: rtx.clone(),
+            })
+            .collect();
+        btx.send(reqs).unwrap();
+        drop(btx);
+        drop(rtx);
+        let responses: Vec<Response> = rrx.iter().collect();
+        assert_eq!(responses.len(), 4);
+        for r in &responses {
+            assert_eq!(r.logits.len(), 3);
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+        assert_eq!(metrics.snapshot().completed, 4);
+    }
+}

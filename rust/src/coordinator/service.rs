@@ -1,0 +1,182 @@
+//! The assembled PI service: batcher thread + worker pool + material
+//! bank, fronted by a submit/await handle.
+
+use super::batcher::{next_batch, BatchPolicy};
+use super::metrics::Metrics;
+use super::pool::MaterialPool;
+use super::router::{spawn_workers, Request, Response};
+use crate::field::Fp;
+use crate::protocol::server::NetworkPlan;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    pub pool_target: usize,
+    pub pool_dealers: usize,
+    pub batch: BatchPolicy,
+    pub seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            pool_target: 16,
+            pool_dealers: 2,
+            batch: BatchPolicy::default(),
+            seed: 0xC1CA,
+        }
+    }
+}
+
+/// A running PI service.
+pub struct PiService {
+    ingress: Sender<Request>,
+    pub metrics: Arc<Metrics>,
+    pub pool: Arc<MaterialPool>,
+    next_id: AtomicU64,
+    batcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl PiService {
+    /// Start the service for a network plan.
+    pub fn start(plan: Arc<NetworkPlan>, cfg: ServiceConfig) -> Self {
+        let pool = Arc::new(MaterialPool::start(
+            plan,
+            cfg.pool_target,
+            cfg.pool_dealers,
+            cfg.seed,
+        ));
+        let metrics = Arc::new(Metrics::default());
+
+        let (ingress, ingress_rx): (Sender<Request>, Receiver<Request>) = channel();
+        let (batch_tx, batch_rx) = channel();
+        let policy = cfg.batch;
+        let batcher = std::thread::spawn(move || {
+            while let Some(batch) = next_batch(&ingress_rx, policy) {
+                if batch_tx.send(batch).is_err() {
+                    return;
+                }
+            }
+        });
+        let workers =
+            spawn_workers(cfg.workers, batch_rx, pool.clone(), metrics.clone(), cfg.seed ^ 0x77);
+
+        Self {
+            ingress,
+            metrics,
+            pool,
+            next_id: AtomicU64::new(0),
+            batcher: Some(batcher),
+            workers,
+        }
+    }
+
+    /// Block until the bank holds at least `n` sessions (warmup).
+    pub fn warmup(&self, n: usize) {
+        self.pool.wait_ready(n);
+    }
+
+    /// Submit one inference; returns a receiver for the response.
+    pub fn submit(&self, input: Vec<Fp>) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let _ = self.ingress.send(Request { id, input, enqueued: Instant::now(), reply: tx });
+        rx
+    }
+
+    /// Submit and wait (convenience).
+    pub fn infer(&self, input: Vec<Fp>) -> Response {
+        self.submit(input).recv().expect("service alive")
+    }
+
+    /// Graceful shutdown: stop intake, drain workers, stop dealers.
+    pub fn shutdown(mut self) {
+        drop(self.ingress);
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        match Arc::try_unwrap(self.pool) {
+            Ok(pool) => pool.shutdown(),
+            Err(_) => { /* metrics holder still alive; dealers die with process */ }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::{FaultMode, ReluVariant};
+    use crate::protocol::linear::{LinearOp, Matrix};
+    use crate::util::Rng;
+
+    fn plan(variant: ReluVariant) -> Arc<NetworkPlan> {
+        let mut rng = Rng::new(1);
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(5, 6, 10, &mut rng)),
+            Arc::new(Matrix::random(3, 5, 10, &mut rng)),
+        ];
+        Arc::new(NetworkPlan::unscaled(linears, variant))
+    }
+
+    #[test]
+    fn serve_roundtrip_with_correct_results() {
+        let p = plan(ReluVariant::TruncatedSign { k: 4, mode: FaultMode::PosZero });
+        // Plaintext oracle.
+        let oracle = |input: &[Fp]| -> Vec<Fp> {
+            let l0 = &p.linears[0];
+            let l1 = &p.linears[1];
+            let mid: Vec<Fp> =
+                l0.apply(input).iter().map(|&v| crate::field::relu_exact(v)).collect();
+            l1.apply(&mid)
+        };
+        let svc = PiService::start(p.clone(), ServiceConfig {
+            workers: 2,
+            pool_target: 8,
+            pool_dealers: 2,
+            ..Default::default()
+        });
+        svc.warmup(4);
+        let input: Vec<Fp> = (0..6).map(|i| Fp::from_i64(1000 + i)).collect();
+        let want = oracle(&input);
+        for _ in 0..6 {
+            let resp = svc.infer(input.clone());
+            assert_eq!(resp.logits, want);
+            assert!(resp.online_us > 0);
+        }
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.completed, 6);
+        assert!(snap.bytes_online > 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions() {
+        let svc = PiService::start(plan(ReluVariant::BaselineRelu), ServiceConfig {
+            workers: 3,
+            pool_target: 8,
+            pool_dealers: 2,
+            ..Default::default()
+        });
+        let rxs: Vec<_> = (0..12)
+            .map(|i| svc.submit((0..6).map(|j| Fp::from_i64((i * 10 + j) as i64)).collect()))
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.logits.len(), 3);
+        }
+        assert_eq!(svc.metrics.snapshot().completed, 12);
+        svc.shutdown();
+    }
+}

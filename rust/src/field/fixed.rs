@@ -1,0 +1,75 @@
+//! Delphi-style fixed-point quantization into `F_p`.
+//!
+//! The paper scales and quantizes model parameters and inputs to 15 bits
+//! (§4.1): a real `v` maps to `round(v · 2^SCALE_BITS)` clamped to 15-bit
+//! magnitude, so the product of two quantized values stays below the 31-bit
+//! prime. After each multiply-accumulate layer the result is rescaled by
+//! `2^-SCALE_BITS` (arithmetic shift on the signed decoding).
+
+use super::{Fp, HALF};
+
+/// Fractional bits of the fixed-point representation.
+pub const SCALE_BITS: u32 = 8;
+
+/// Magnitude cap for quantized *parameters/inputs*: 15-bit signed as in
+/// Delphi (1 sign bit + 14 magnitude bits), so a product of two quantized
+/// values stays below `p/2` and the signed decode is exact.
+pub const QUANT_MAX: i64 = (1 << 14) - 1;
+
+/// Quantize a real value to a field element (15-bit clamped).
+pub fn quantize(v: f32) -> Fp {
+    let scaled = (v as f64 * (1i64 << SCALE_BITS) as f64).round() as i64;
+    Fp::from_i64(scaled.clamp(-QUANT_MAX, QUANT_MAX))
+}
+
+/// Dequantize a field element back to a real value.
+pub fn dequantize(x: Fp) -> f32 {
+    (x.to_i64() as f64 / (1i64 << SCALE_BITS) as f64) as f32
+}
+
+/// Quantize a slice.
+pub fn quantize_all(vs: &[f32]) -> Vec<Fp> {
+    vs.iter().map(|&v| quantize(v)).collect()
+}
+
+/// Largest signed magnitude an *accumulator* may reach before decode breaks.
+pub const ACC_MAX: i64 = (HALF - 1) as i64;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_within_step() {
+        let step = 1.0 / (1i64 << SCALE_BITS) as f32;
+        // Representable range is ±QUANT_MAX/2^SCALE_BITS ≈ ±63.99.
+        for v in [-3.25f32, -0.5, 0.0, 0.004, 1.0, 60.5] {
+            let q = quantize(v);
+            assert!((dequantize(q) - v).abs() <= step, "v={v}");
+        }
+    }
+
+    #[test]
+    fn clamps_large_values() {
+        let q = quantize(1e9);
+        assert_eq!(q.to_i64(), QUANT_MAX);
+        let q = quantize(-1e9);
+        assert_eq!(q.to_i64(), -QUANT_MAX);
+    }
+
+    #[test]
+    fn product_fits_field() {
+        // Two max-magnitude quantized values must multiply without wrapping
+        // the signed decode: |a*b| = (2^15-1)^2 < p/2.
+        let prod = QUANT_MAX * QUANT_MAX;
+        assert!(prod < ACC_MAX);
+        let a = Fp::from_i64(QUANT_MAX);
+        let b = Fp::from_i64(-QUANT_MAX);
+        assert_eq!((a * b).to_i64(), -prod);
+    }
+
+    #[test]
+    fn quantize_all_length() {
+        assert_eq!(quantize_all(&[0.0, 1.0, 2.0]).len(), 3);
+    }
+}

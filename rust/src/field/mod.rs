@@ -1,0 +1,299 @@
+//! Arithmetic over the prime field `F_p` used by Delphi and Circa.
+//!
+//! The paper fixes `p = 2138816513` (a 31-bit prime) so that products of two
+//! 15-bit fixed-point values never exceed the field (§4.1). Values are
+//! encoded with positives in `[0, (p−1)/2)` and negatives in
+//! `[(p−1)/2, p)` (§2.2), so `sign(x) = 1 ⟺ x < p/2` in field encoding.
+
+pub mod fixed;
+
+/// The paper's 31-bit prime, `p = 2138816513`.
+pub const PRIME: u64 = 2_138_816_513;
+
+/// Bit width `m = ⌈log2 p⌉` of a field element.
+pub const FIELD_BITS: usize = 31;
+
+/// Half of the field: the positive/negative encoding boundary.
+pub const HALF: u64 = PRIME / 2; // floor((p-1)/2)
+
+/// An element of `F_p`, stored canonically in `[0, p)`.
+///
+/// All arithmetic is wrapping in the field. The representation fits in a
+/// `u32` but we store `u64` to keep intermediate products single-width
+/// (`u64 * u64` products are taken via `u128` in [`Fp::mul`]).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fp(u64);
+
+impl std::fmt::Debug for Fp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Fp({} = {})", self.0, self.to_i64())
+    }
+}
+
+impl Fp {
+    pub const ZERO: Fp = Fp(0);
+    pub const ONE: Fp = Fp(1);
+
+    /// Construct from a canonical value; debug-asserts range.
+    #[inline]
+    pub fn new(v: u64) -> Self {
+        debug_assert!(v < PRIME);
+        Fp(v)
+    }
+
+    /// Construct from any u64 by reduction.
+    #[inline]
+    pub fn reduce(v: u64) -> Self {
+        Fp(v % PRIME)
+    }
+
+    /// Encode a signed integer; `x` must satisfy `|x| < p/2`.
+    #[inline]
+    pub fn from_i64(x: i64) -> Self {
+        debug_assert!(x.unsigned_abs() < HALF, "magnitude too large for field: {x}");
+        if x >= 0 {
+            Fp(x as u64)
+        } else {
+            Fp(PRIME - x.unsigned_abs())
+        }
+    }
+
+    /// Decode to a signed integer using the paper's encoding:
+    /// values `< (p−1)/2` are positive, the rest negative.
+    #[inline]
+    pub fn to_i64(self) -> i64 {
+        if self.0 < HALF {
+            self.0 as i64
+        } else {
+            -((PRIME - self.0) as i64)
+        }
+    }
+
+    /// Raw canonical representative in `[0, p)`.
+    #[inline]
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+
+    /// `|x|` in the signed encoding.
+    #[inline]
+    pub fn magnitude(self) -> u64 {
+        if self.0 < HALF {
+            self.0
+        } else {
+            PRIME - self.0
+        }
+    }
+
+    /// Exact sign in the field encoding: `true` for non-negative.
+    #[inline]
+    pub fn is_nonneg(self) -> bool {
+        self.0 < HALF
+    }
+
+    #[inline]
+    pub fn add(self, rhs: Fp) -> Fp {
+        let s = self.0 + rhs.0;
+        Fp(if s >= PRIME { s - PRIME } else { s })
+    }
+
+    #[inline]
+    pub fn sub(self, rhs: Fp) -> Fp {
+        Fp(if self.0 >= rhs.0 { self.0 - rhs.0 } else { self.0 + PRIME - rhs.0 })
+    }
+
+    #[inline]
+    pub fn neg(self) -> Fp {
+        if self.0 == 0 {
+            Fp(0)
+        } else {
+            Fp(PRIME - self.0)
+        }
+    }
+
+    #[inline]
+    pub fn mul(self, rhs: Fp) -> Fp {
+        Fp(((self.0 as u128 * rhs.0 as u128) % PRIME as u128) as u64)
+    }
+
+    /// Modular exponentiation by squaring.
+    pub fn pow(self, mut e: u64) -> Fp {
+        let mut base = self;
+        let mut acc = Fp::ONE;
+        while e > 0 {
+            if e & 1 == 1 {
+                acc = acc.mul(base);
+            }
+            base = base.mul(base);
+            e >>= 1;
+        }
+        acc
+    }
+
+    /// Multiplicative inverse via Fermat (p is prime). Panics on zero.
+    pub fn inv(self) -> Fp {
+        assert!(self.0 != 0, "inverse of zero");
+        self.pow(PRIME - 2)
+    }
+
+    /// Delphi-style truncation after a fixed-point multiply: divide the
+    /// *signed* value by `2^s` (rounding toward zero) and re-encode.
+    #[inline]
+    pub fn rescale(self, s: u32) -> Fp {
+        Fp::from_i64(self.to_i64() >> s)
+    }
+}
+
+impl std::ops::Add for Fp {
+    type Output = Fp;
+    fn add(self, rhs: Fp) -> Fp {
+        Fp::add(self, rhs)
+    }
+}
+
+impl std::ops::Sub for Fp {
+    type Output = Fp;
+    fn sub(self, rhs: Fp) -> Fp {
+        Fp::sub(self, rhs)
+    }
+}
+
+impl std::ops::Mul for Fp {
+    type Output = Fp;
+    fn mul(self, rhs: Fp) -> Fp {
+        Fp::mul(self, rhs)
+    }
+}
+
+impl std::ops::Neg for Fp {
+    type Output = Fp;
+    fn neg(self) -> Fp {
+        Fp::neg(self)
+    }
+}
+
+/// Sample a uniform field element.
+#[inline]
+pub fn random_fp(rng: &mut crate::util::Rng) -> Fp {
+    Fp::new(rng.below(PRIME))
+}
+
+/// Exact plaintext ReLU in the field encoding.
+#[inline]
+pub fn relu_exact(x: Fp) -> Fp {
+    if x.is_nonneg() {
+        x
+    } else {
+        Fp::ZERO
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn prime_is_prime_ish() {
+        // Trial division by small primes (sanity; full primality in fixed.rs tests).
+        for d in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+            assert_ne!(PRIME % d, 0, "divisible by {d}");
+        }
+        assert_eq!(64 - (PRIME - 1).leading_zeros() as usize, FIELD_BITS);
+    }
+
+    #[test]
+    fn signed_roundtrip() {
+        for x in [-1_000_000i64, -1, 0, 1, 12345, (HALF as i64) - 1, -(HALF as i64) + 1] {
+            assert_eq!(Fp::from_i64(x).to_i64(), x, "x={x}");
+        }
+    }
+
+    #[test]
+    fn add_sub_inverse() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let a = random_fp(&mut rng);
+            let b = random_fp(&mut rng);
+            assert_eq!((a + b) - b, a);
+            assert_eq!(a - a, Fp::ZERO);
+            assert_eq!(a + (-a), Fp::ZERO);
+        }
+    }
+
+    #[test]
+    fn mul_matches_bigint() {
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            let a = random_fp(&mut rng);
+            let b = random_fp(&mut rng);
+            let want = ((a.raw() as u128 * b.raw() as u128) % PRIME as u128) as u64;
+            assert_eq!((a * b).raw(), want);
+        }
+    }
+
+    #[test]
+    fn field_axioms_sampled() {
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let a = random_fp(&mut rng);
+            let b = random_fp(&mut rng);
+            let c = random_fp(&mut rng);
+            assert_eq!((a + b) + c, a + (b + c));
+            assert_eq!((a * b) * c, a * (b * c));
+            assert_eq!(a * (b + c), a * b + a * c);
+            assert_eq!(a * Fp::ONE, a);
+        }
+    }
+
+    #[test]
+    fn inverse() {
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            let a = random_fp(&mut rng);
+            if a == Fp::ZERO {
+                continue;
+            }
+            assert_eq!(a * a.inv(), Fp::ONE);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_has_no_inverse() {
+        Fp::ZERO.inv();
+    }
+
+    #[test]
+    fn sign_encoding() {
+        assert!(Fp::from_i64(5).is_nonneg());
+        assert!(Fp::ZERO.is_nonneg());
+        assert!(!Fp::from_i64(-5).is_nonneg());
+        assert_eq!(Fp::from_i64(-5).magnitude(), 5);
+        assert_eq!(Fp::from_i64(7).magnitude(), 7);
+    }
+
+    #[test]
+    fn relu_exact_matches_signed() {
+        for x in [-100i64, -1, 0, 1, 100] {
+            let want = x.max(0);
+            assert_eq!(relu_exact(Fp::from_i64(x)).to_i64(), want);
+        }
+    }
+
+    #[test]
+    fn rescale_is_arithmetic_shift_on_signed() {
+        for x in [-(1i64 << 20), -4097, -1, 0, 1, 4097, 1 << 20] {
+            let f = Fp::from_i64(x).rescale(12);
+            assert_eq!(f.to_i64(), x >> 12, "x={x}");
+        }
+    }
+
+    #[test]
+    fn pow_small_cases() {
+        let a = Fp::from_i64(3);
+        assert_eq!(a.pow(0), Fp::ONE);
+        assert_eq!(a.pow(1), a);
+        assert_eq!(a.pow(4).to_i64(), 81);
+    }
+}

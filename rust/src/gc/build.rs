@@ -1,0 +1,433 @@
+//! Circuit builder with constant folding and m-bit bus combinators.
+//!
+//! All arithmetic components use the 1-AND-per-bit constructions that the
+//! free-XOR cost model rewards:
+//!
+//! * full adder: `s = a⊕b⊕c`, `c' = c ⊕ ((a⊕c)·(b⊕c))`
+//! * full subtractor (borrow): `bw' = b ⊕ ((a⊕bw)·(b⊕bw))`
+//! * 2:1 MUX: `out = b ⊕ (s·(a⊕b))`
+//!
+//! [`Bit`] carries compile-time constants so circuits that involve public
+//! constants (the prime `p`, the threshold `p/2`, a constant-zero MUX arm)
+//! shed AND gates automatically — this is where the baseline ReLU GC's
+//! cost goes and where Circa's variants win.
+
+use super::circuit::{Circuit, WireDef, WireId};
+
+/// A bit during construction: either a public constant or a live wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bit {
+    Const(bool),
+    Wire(WireId),
+}
+
+/// A little-endian bus of bits.
+pub type Bus = Vec<Bit>;
+
+/// Incremental circuit builder.
+#[derive(Default)]
+pub struct Builder {
+    circuit: Circuit,
+}
+
+impl Builder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn push(&mut self, def: WireDef) -> WireId {
+        let id = self.circuit.wires.len() as WireId;
+        self.circuit.wires.push(def);
+        id
+    }
+
+    /// Allocate one input bit. Inputs must be allocated in order but may
+    /// interleave with gates.
+    pub fn input(&mut self) -> Bit {
+        let k = self.circuit.n_inputs;
+        self.circuit.n_inputs += 1;
+        Bit::Wire(self.push(WireDef::Input(k)))
+    }
+
+    /// Allocate an m-bit little-endian input bus.
+    pub fn input_bus(&mut self, m: usize) -> Bus {
+        (0..m).map(|_| self.input()).collect()
+    }
+
+    /// A constant bus of width `m` from the low bits of `v`.
+    pub fn const_bus(&self, v: u64, m: usize) -> Bus {
+        (0..m).map(|i| Bit::Const((v >> i) & 1 == 1)).collect()
+    }
+
+    pub fn xor(&mut self, a: Bit, b: Bit) -> Bit {
+        match (a, b) {
+            (Bit::Const(x), Bit::Const(y)) => Bit::Const(x ^ y),
+            (Bit::Const(false), w) | (w, Bit::Const(false)) => w,
+            (Bit::Const(true), w) | (w, Bit::Const(true)) => self.not(w),
+            (Bit::Wire(x), Bit::Wire(y)) => {
+                if x == y {
+                    Bit::Const(false)
+                } else {
+                    Bit::Wire(self.push(WireDef::Xor(x, y)))
+                }
+            }
+        }
+    }
+
+    pub fn and(&mut self, a: Bit, b: Bit) -> Bit {
+        match (a, b) {
+            (Bit::Const(x), Bit::Const(y)) => Bit::Const(x & y),
+            (Bit::Const(false), _) | (_, Bit::Const(false)) => Bit::Const(false),
+            (Bit::Const(true), w) | (w, Bit::Const(true)) => w,
+            (Bit::Wire(x), Bit::Wire(y)) => {
+                if x == y {
+                    Bit::Wire(x)
+                } else {
+                    Bit::Wire(self.push(WireDef::And(x, y)))
+                }
+            }
+        }
+    }
+
+    pub fn not(&mut self, a: Bit) -> Bit {
+        match a {
+            Bit::Const(x) => Bit::Const(!x),
+            Bit::Wire(w) => Bit::Wire(self.push(WireDef::Not(w))),
+        }
+    }
+
+    pub fn or(&mut self, a: Bit, b: Bit) -> Bit {
+        // a | b = ¬(¬a & ¬b); NOTs are free.
+        let na = self.not(a);
+        let nb = self.not(b);
+        let n = self.and(na, nb);
+        self.not(n)
+    }
+
+    /// 2:1 MUX: `s ? a : b` at one AND.
+    pub fn mux(&mut self, s: Bit, a: Bit, b: Bit) -> Bit {
+        let d = self.xor(a, b);
+        let t = self.and(s, d);
+        self.xor(t, b)
+    }
+
+    /// Bus MUX: `s ? a : b` element-wise.
+    pub fn mux_bus(&mut self, s: Bit, a: &[Bit], b: &[Bit]) -> Bus {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(&x, &y)| self.mux(s, x, y)).collect()
+    }
+
+    /// Ripple-carry addition; returns `(sum, carry_out)`.
+    /// One AND per bit position (free-XOR full adder).
+    pub fn add(&mut self, a: &[Bit], b: &[Bit]) -> (Bus, Bit) {
+        assert_eq!(a.len(), b.len());
+        let mut carry = Bit::Const(false);
+        let mut out = Vec::with_capacity(a.len());
+        for (&x, &y) in a.iter().zip(b) {
+            let xc = self.xor(x, carry);
+            let yc = self.xor(y, carry);
+            let s = self.xor(xc, y);
+            let t = self.and(xc, yc);
+            carry = self.xor(carry, t);
+            out.push(s);
+        }
+        (out, carry)
+    }
+
+    /// Ripple-borrow subtraction; returns `(diff, borrow_out)`.
+    pub fn sub(&mut self, a: &[Bit], b: &[Bit]) -> (Bus, Bit) {
+        assert_eq!(a.len(), b.len());
+        let mut borrow = Bit::Const(false);
+        let mut out = Vec::with_capacity(a.len());
+        for (&x, &y) in a.iter().zip(b) {
+            let xb = self.xor(x, borrow);
+            let yb = self.xor(y, borrow);
+            let d = self.xor(xb, y);
+            let t = self.and(xb, yb);
+            borrow = self.xor(y, t);
+            out.push(d);
+        }
+        (out, borrow)
+    }
+
+    /// Unsigned `a >= b`: the complement of the subtraction borrow, at one
+    /// AND per bit (no difference bits materialized).
+    pub fn geq(&mut self, a: &[Bit], b: &[Bit]) -> Bit {
+        let (_, borrow) = self.sub_borrow_only(a, b);
+        self.not(borrow)
+    }
+
+    /// Unsigned `a > b` = ¬(b ≥ a).
+    pub fn gt(&mut self, a: &[Bit], b: &[Bit]) -> Bit {
+        let geq_ba = self.geq(b, a);
+        self.not(geq_ba)
+    }
+
+    /// Unsigned `a <= b` = b ≥ a.
+    pub fn leq(&mut self, a: &[Bit], b: &[Bit]) -> Bit {
+        self.geq(b, a)
+    }
+
+    /// Borrow chain only (comparator core).
+    fn sub_borrow_only(&mut self, a: &[Bit], b: &[Bit]) -> ((), Bit) {
+        assert_eq!(a.len(), b.len());
+        let mut borrow = Bit::Const(false);
+        for (&x, &y) in a.iter().zip(b) {
+            let xb = self.xor(x, borrow);
+            let yb = self.xor(y, borrow);
+            let t = self.and(xb, yb);
+            borrow = self.xor(y, t);
+        }
+        ((), borrow)
+    }
+
+    /// Zero-extend a bus.
+    pub fn zext(&self, a: &[Bit], m: usize) -> Bus {
+        assert!(m >= a.len());
+        let mut out = a.to_vec();
+        out.resize(m, Bit::Const(false));
+        out
+    }
+
+    /// Drop the `k` least-significant bits (the paper's `⌊·⌋_k`).
+    pub fn truncate_low(&self, a: &[Bit], k: usize) -> Bus {
+        a[k.min(a.len())..].to_vec()
+    }
+
+    /// Mark a bus as circuit output (constants are materialized through a
+    /// NOT-NOT pair on a dummy anchor only if needed; in practice outputs
+    /// are always live wires in our circuits).
+    pub fn output_bus(&mut self, bus: &[Bit]) {
+        for &b in bus {
+            let w = self.materialize(b);
+            self.circuit.outputs.push(w);
+        }
+    }
+
+    pub fn output(&mut self, b: Bit) {
+        let w = self.materialize(b);
+        self.circuit.outputs.push(w);
+    }
+
+    /// Turn a Bit into a concrete wire id. Constant outputs need an anchor
+    /// wire: we synthesize them from input 0 (x ⊕ x = 0) — valid because
+    /// every real circuit here has at least one input.
+    fn materialize(&mut self, b: Bit) -> WireId {
+        match b {
+            Bit::Wire(w) => w,
+            Bit::Const(c) => {
+                assert!(self.circuit.n_inputs > 0, "constant output in inputless circuit");
+                // Find wire id of input 0: it is the first Input def.
+                let w0 = self
+                    .circuit
+                    .wires
+                    .iter()
+                    .position(|w| matches!(w, WireDef::Input(0)))
+                    .expect("input 0 exists") as WireId;
+                let zero = self.push(WireDef::Xor(w0, w0));
+                if c {
+                    self.push(WireDef::Not(zero))
+                } else {
+                    zero
+                }
+            }
+        }
+    }
+
+    /// Finish and return the circuit.
+    pub fn build(self) -> Circuit {
+        debug_assert!(self.circuit.validate().is_ok());
+        self.circuit
+    }
+}
+
+/// Decode a little-endian bool slice to u64.
+pub fn bits_to_u64(bits: &[bool]) -> u64 {
+    bits.iter().enumerate().fold(0u64, |acc, (i, &b)| acc | ((b as u64) << i))
+}
+
+/// Encode the low `m` bits of `v` little-endian.
+pub fn u64_to_bits(v: u64, m: usize) -> Vec<bool> {
+    (0..m).map(|i| (v >> i) & 1 == 1).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn eval2(c: &Circuit, a: u64, b: u64, m: usize) -> Vec<bool> {
+        let mut inputs = u64_to_bits(a, m);
+        inputs.extend(u64_to_bits(b, m));
+        c.eval_plain(&inputs)
+    }
+
+    #[test]
+    fn adder_exhaustive_4bit() {
+        let mut bld = Builder::new();
+        let a = bld.input_bus(4);
+        let b = bld.input_bus(4);
+        let (sum, carry) = bld.add(&a, &b);
+        bld.output_bus(&sum);
+        bld.output(carry);
+        let c = bld.build();
+        assert_eq!(c.n_and(), 4);
+        for x in 0..16u64 {
+            for y in 0..16u64 {
+                let out = eval2(&c, x, y, 4);
+                let got = bits_to_u64(&out[..4]) | ((out[4] as u64) << 4);
+                assert_eq!(got, x + y, "{x}+{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn subtractor_exhaustive_4bit() {
+        let mut bld = Builder::new();
+        let a = bld.input_bus(4);
+        let b = bld.input_bus(4);
+        let (diff, borrow) = bld.sub(&a, &b);
+        bld.output_bus(&diff);
+        bld.output(borrow);
+        let c = bld.build();
+        for x in 0..16u64 {
+            for y in 0..16u64 {
+                let out = eval2(&c, x, y, 4);
+                let got = bits_to_u64(&out[..4]);
+                assert_eq!(got, x.wrapping_sub(y) & 0xF, "{x}-{y}");
+                assert_eq!(out[4], x < y, "borrow {x}-{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn comparators_exhaustive_4bit() {
+        let cases: [(&str, fn(&mut Builder, &[Bit], &[Bit]) -> Bit); 3] = [
+            ("geq", Builder::geq),
+            ("gt", Builder::gt),
+            ("leq", Builder::leq),
+        ];
+        for (name, f) in cases {
+            let mut bld = Builder::new();
+            let a = bld.input_bus(4);
+            let b = bld.input_bus(4);
+            let r = f(&mut bld, &a, &b);
+            bld.output(r);
+            let c = bld.build();
+            for x in 0..16u64 {
+                for y in 0..16u64 {
+                    let want = match name {
+                        "geq" => x >= y,
+                        "gt" => x > y,
+                        _ => x <= y,
+                    };
+                    assert_eq!(eval2(&c, x, y, 4)[0], want, "{name} {x} {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn comparator_cost_is_m_ands() {
+        let mut bld = Builder::new();
+        let a = bld.input_bus(31);
+        let b = bld.input_bus(31);
+        let r = bld.leq(&a, &b);
+        bld.output(r);
+        assert_eq!(bld.build().n_and(), 31);
+    }
+
+    #[test]
+    fn add_constant_costs_less() {
+        let mut bld = Builder::new();
+        let a = bld.input_bus(31);
+        let k = bld.const_bus(0x55aa55, 31);
+        let (s, _) = bld.add(&a, &k);
+        bld.output_bus(&s);
+        let with_const = bld.build().n_and();
+        assert!(with_const < 31, "constant folding failed: {with_const} ANDs");
+    }
+
+    #[test]
+    fn mux_exhaustive() {
+        let mut bld = Builder::new();
+        let s = bld.input();
+        let a = bld.input_bus(4);
+        let b = bld.input_bus(4);
+        let o = bld.mux_bus(s, &a, &b);
+        bld.output_bus(&o);
+        let c = bld.build();
+        assert_eq!(c.n_and(), 4);
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let sv = rng.bool();
+            let av = rng.below(16);
+            let bv = rng.below(16);
+            let mut inputs = vec![sv];
+            inputs.extend(u64_to_bits(av, 4));
+            inputs.extend(u64_to_bits(bv, 4));
+            let out = c.eval_plain(&inputs);
+            assert_eq!(bits_to_u64(&out), if sv { av } else { bv });
+        }
+    }
+
+    #[test]
+    fn mux_with_constant_zero_arm_is_cheaper() {
+        // Baseline ReLU uses MUX(0, x): out = s ? x : 0 = s & x — still m
+        // ANDs, but the XORs vanish. Verify semantic correctness.
+        let mut bld = Builder::new();
+        let s = bld.input();
+        let x = bld.input_bus(8);
+        let zero = bld.const_bus(0, 8);
+        let o = bld.mux_bus(s, &x, &zero);
+        bld.output_bus(&o);
+        let c = bld.build();
+        let mut inputs = vec![true];
+        inputs.extend(u64_to_bits(0xA5, 8));
+        assert_eq!(bits_to_u64(&c.eval_plain(&inputs)), 0xA5);
+        let mut inputs = vec![false];
+        inputs.extend(u64_to_bits(0xA5, 8));
+        assert_eq!(bits_to_u64(&c.eval_plain(&inputs)), 0);
+    }
+
+    #[test]
+    fn truncate_low_drops_bits() {
+        let bld = Builder::new();
+        let bus: Bus = (0..8).map(|i| Bit::Const(i % 2 == 0)).collect();
+        let t = bld.truncate_low(&bus, 3);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t[0], Bit::Const(false)); // original index 3
+    }
+
+    #[test]
+    fn or_truth_table() {
+        let mut bld = Builder::new();
+        let a = bld.input();
+        let b = bld.input();
+        let o = bld.or(a, b);
+        bld.output(o);
+        let c = bld.build();
+        for (x, y) in [(false, false), (false, true), (true, false), (true, true)] {
+            assert_eq!(c.eval_plain(&[x, y])[0], x | y);
+        }
+    }
+
+    #[test]
+    fn constant_output_materializes() {
+        let mut bld = Builder::new();
+        let a = bld.input();
+        bld.output(a);
+        bld.output(Bit::Const(true));
+        bld.output(Bit::Const(false));
+        let c = bld.build();
+        assert_eq!(c.eval_plain(&[true]), vec![true, true, false]);
+    }
+
+    #[test]
+    fn xor_self_folds_to_zero() {
+        let mut bld = Builder::new();
+        let a = bld.input();
+        let z = bld.xor(a, a);
+        assert_eq!(z, Bit::Const(false));
+    }
+}

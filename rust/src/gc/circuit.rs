@@ -1,0 +1,158 @@
+//! Boolean circuit IR.
+//!
+//! Wires form a single id space in topological order: the definition of
+//! wire `i` may only reference wires `< i`. Inputs are `Input(k)` wires
+//! (with `k` the input position), so the IR is valid by construction.
+
+/// Index of a wire in [`Circuit::wires`].
+pub type WireId = u32;
+
+/// Definition of one wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireDef {
+    /// The `k`-th circuit input.
+    Input(u32),
+    /// XOR of two earlier wires (free under free-XOR garbling).
+    Xor(WireId, WireId),
+    /// AND of two earlier wires (costs one garbled table entry).
+    And(WireId, WireId),
+    /// Negation (free: label-semantics flip).
+    Not(WireId),
+}
+
+/// A boolean circuit.
+#[derive(Clone, Debug, Default)]
+pub struct Circuit {
+    pub wires: Vec<WireDef>,
+    pub n_inputs: u32,
+    pub outputs: Vec<WireId>,
+}
+
+impl Circuit {
+    /// Number of AND gates (the garbling cost driver).
+    pub fn n_and(&self) -> usize {
+        self.wires.iter().filter(|w| matches!(w, WireDef::And(_, _))).count()
+    }
+
+    /// Number of XOR gates (free to garble, still counts toward build time).
+    pub fn n_xor(&self) -> usize {
+        self.wires.iter().filter(|w| matches!(w, WireDef::Xor(_, _))).count()
+    }
+
+    /// Plain (insecure) evaluation — the correctness oracle for the
+    /// garbling engine and for the Fig. 2 circuits.
+    pub fn eval_plain(&self, inputs: &[bool]) -> Vec<bool> {
+        assert_eq!(inputs.len(), self.n_inputs as usize, "input arity mismatch");
+        let mut vals: Vec<bool> = Vec::with_capacity(self.wires.len());
+        for w in &self.wires {
+            let v = match *w {
+                WireDef::Input(k) => inputs[k as usize],
+                WireDef::Xor(a, b) => vals[a as usize] ^ vals[b as usize],
+                WireDef::And(a, b) => vals[a as usize] & vals[b as usize],
+                WireDef::Not(a) => !vals[a as usize],
+            };
+            vals.push(v);
+        }
+        self.outputs.iter().map(|&o| vals[o as usize]).collect()
+    }
+
+    /// Validate topological ordering and input numbering; used in tests
+    /// and debug assertions.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut seen_inputs = 0u32;
+        for (i, w) in self.wires.iter().enumerate() {
+            let check = |x: WireId| -> Result<(), String> {
+                if x as usize >= i {
+                    Err(format!("wire {i} references later wire {x}"))
+                } else {
+                    Ok(())
+                }
+            };
+            match *w {
+                WireDef::Input(k) => {
+                    if k != seen_inputs {
+                        return Err(format!("input {k} out of order at wire {i}"));
+                    }
+                    seen_inputs += 1;
+                }
+                WireDef::Xor(a, b) | WireDef::And(a, b) => {
+                    check(a)?;
+                    check(b)?;
+                }
+                WireDef::Not(a) => check(a)?,
+            }
+        }
+        if seen_inputs != self.n_inputs {
+            return Err(format!("n_inputs {} != declared {}", seen_inputs, self.n_inputs));
+        }
+        for &o in &self.outputs {
+            if o as usize >= self.wires.len() {
+                return Err(format!("output {o} out of range"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xor_and_circuit() -> Circuit {
+        // out0 = (a ^ b), out1 = (a & b), out2 = !a
+        Circuit {
+            wires: vec![
+                WireDef::Input(0),
+                WireDef::Input(1),
+                WireDef::Xor(0, 1),
+                WireDef::And(0, 1),
+                WireDef::Not(0),
+            ],
+            n_inputs: 2,
+            outputs: vec![2, 3, 4],
+        }
+    }
+
+    #[test]
+    fn plain_eval_truth_table() {
+        let c = xor_and_circuit();
+        assert!(c.validate().is_ok());
+        for (a, b) in [(false, false), (false, true), (true, false), (true, true)] {
+            let out = c.eval_plain(&[a, b]);
+            assert_eq!(out, vec![a ^ b, a & b, !a]);
+        }
+    }
+
+    #[test]
+    fn gate_counts() {
+        let c = xor_and_circuit();
+        assert_eq!(c.n_and(), 1);
+        assert_eq!(c.n_xor(), 1);
+    }
+
+    #[test]
+    fn validate_rejects_forward_reference() {
+        let c = Circuit {
+            wires: vec![WireDef::Input(0), WireDef::Xor(0, 2), WireDef::Input(1)],
+            n_inputs: 2,
+            outputs: vec![1],
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_output() {
+        let c = Circuit {
+            wires: vec![WireDef::Input(0)],
+            n_inputs: 1,
+            outputs: vec![5],
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn eval_wrong_arity_panics() {
+        xor_and_circuit().eval_plain(&[true]);
+    }
+}

@@ -1,0 +1,280 @@
+//! Garbler: free-XOR + point-and-permute + half-gates.
+//!
+//! Per AND gate the garbler emits two ciphertexts (`T_G`, `T_E`) — 32
+//! bytes with 128-bit labels (Zahur–Rosulek–Evans 2015). XOR and NOT gates
+//! are free. This is the engine behind every ReLU variant in
+//! [`crate::circuits`], and the `32·#AND` size model behind Fig. 5.
+
+use super::circuit::{Circuit, WireDef};
+use crate::prf::{Delta, GarbleHash, Label};
+use crate::util::Rng;
+
+/// The garbler's secret encoding of the circuit inputs.
+#[derive(Clone, Debug)]
+pub struct InputEncoding {
+    /// `label0[i]` encodes value 0 on input `i`; value 1 is `label0 ⊕ Δ`.
+    pub label0: Vec<Label>,
+    pub delta: Delta,
+}
+
+impl InputEncoding {
+    /// Label for input `i` carrying value `v`.
+    pub fn encode(&self, i: usize, v: bool) -> Label {
+        if v {
+            self.label0[i] ^ self.delta.0
+        } else {
+            self.label0[i]
+        }
+    }
+
+    /// Encode a full input assignment.
+    pub fn encode_all(&self, vals: &[bool]) -> Vec<Label> {
+        assert_eq!(vals.len(), self.label0.len());
+        vals.iter().enumerate().map(|(i, &v)| self.encode(i, v)).collect()
+    }
+}
+
+/// The material sent to the evaluator (plus, separately, input labels).
+#[derive(Clone, Debug)]
+pub struct GarbledCircuit {
+    /// Two ciphertexts per AND gate, in gate order.
+    pub table: Vec<[Label; 2]>,
+    /// Point-and-permute decode bits: color of the 0-label of each output.
+    pub output_decode: Vec<bool>,
+}
+
+impl GarbledCircuit {
+    /// Size in bytes of the garbled tables (the paper's "GC size" driver).
+    pub fn table_bytes(&self) -> usize {
+        self.table.len() * 32
+    }
+
+    /// Decode output labels to cleartext bits.
+    pub fn decode(&self, labels: &[Label]) -> Vec<bool> {
+        assert_eq!(labels.len(), self.output_decode.len());
+        labels.iter().zip(&self.output_decode).map(|(l, &d)| l.color() ^ d).collect()
+    }
+}
+
+/// Garble a circuit. Returns the evaluator material and the garbler's
+/// input encoding (kept secret; labels are delivered directly for the
+/// garbler's own inputs and via OT for the evaluator's inputs).
+pub fn garble(circuit: &Circuit, rng: &mut Rng) -> (GarbledCircuit, InputEncoding) {
+    let mut scratch = Vec::new();
+    garble_with_scratch(circuit, rng, &mut scratch)
+}
+
+/// Allocation-free variant for the offline dealer loop (§Perf it. 4):
+/// the wire-label buffer is reused across the thousands of per-ReLU
+/// garblings of a layer.
+pub fn garble_with_scratch(
+    circuit: &Circuit,
+    rng: &mut Rng,
+    scratch: &mut Vec<Label>,
+) -> (GarbledCircuit, InputEncoding) {
+    let hash = GarbleHash::shared();
+    let delta = Delta::random(rng);
+    scratch.clear();
+    scratch.reserve(circuit.wires.len());
+    let label0 = scratch;
+    let mut input_label0 = vec![Label::ZERO; circuit.n_inputs as usize];
+    let mut table = Vec::with_capacity(circuit.n_and());
+    let mut and_idx: u64 = 0;
+
+    for def in &circuit.wires {
+        let l0 = match *def {
+            WireDef::Input(k) => {
+                let l = Label::random(rng);
+                input_label0[k as usize] = l;
+                l
+            }
+            WireDef::Xor(a, b) => label0[a as usize] ^ label0[b as usize],
+            WireDef::Not(a) => label0[a as usize] ^ delta.0,
+            WireDef::And(a, b) => {
+                let wa0 = label0[a as usize];
+                let wb0 = label0[b as usize];
+                let wa1 = wa0 ^ delta.0;
+                let wb1 = wb0 ^ delta.0;
+                let pa = wa0.color();
+                let pb = wb0.color();
+                let j = 2 * and_idx;
+                let jp = 2 * and_idx + 1;
+                and_idx += 1;
+
+                // One pipelined 4-block AES call per AND gate (§Perf it. 2).
+                let [h_wa0, h_wa1, h_wb0, h_wb1] =
+                    hash.hash4([wa0, wa1, wb0, wb1], [j, j, jp, jp]);
+
+                // Garbler half-gate.
+                let mut t_g = h_wa0 ^ h_wa1;
+                if pb {
+                    t_g = t_g ^ delta.0;
+                }
+                let mut w_g0 = h_wa0;
+                if pa {
+                    w_g0 = w_g0 ^ t_g;
+                }
+                // Evaluator half-gate.
+                let t_e = h_wb0 ^ h_wb1 ^ wa0;
+                let mut w_e0 = h_wb0;
+                if pb {
+                    w_e0 = w_e0 ^ t_e ^ wa0;
+                }
+                table.push([t_g, t_e]);
+                w_g0 ^ w_e0
+            }
+        };
+        label0.push(l0);
+    }
+
+    let output_decode = circuit.outputs.iter().map(|&o| label0[o as usize].color()).collect();
+    (
+        GarbledCircuit { table, output_decode },
+        InputEncoding { label0: input_label0, delta },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gc::build::{bits_to_u64, u64_to_bits, Builder};
+    use crate::gc::eval::evaluate;
+
+    /// Garble+evaluate roundtrip must match plain evaluation.
+    fn roundtrip(circuit: &Circuit, inputs: &[bool], rng: &mut Rng) -> Vec<bool> {
+        let (gc, enc) = garble(circuit, rng);
+        let in_labels = enc.encode_all(inputs);
+        let out_labels = evaluate(circuit, &gc, &in_labels);
+        gc.decode(&out_labels)
+    }
+
+    #[test]
+    fn single_and_gate_all_inputs() {
+        let mut bld = Builder::new();
+        let a = bld.input();
+        let b = bld.input();
+        let o = bld.and(a, b);
+        bld.output(o);
+        let c = bld.build();
+        let mut rng = Rng::new(1);
+        for (x, y) in [(false, false), (false, true), (true, false), (true, true)] {
+            assert_eq!(roundtrip(&c, &[x, y], &mut rng), vec![x & y], "{x} {y}");
+        }
+    }
+
+    #[test]
+    fn xor_not_free_gates() {
+        let mut bld = Builder::new();
+        let a = bld.input();
+        let b = bld.input();
+        let x = bld.xor(a, b);
+        let n = bld.not(x);
+        bld.output(x);
+        bld.output(n);
+        let c = bld.build();
+        let mut rng = Rng::new(2);
+        let (gc, _) = garble(&c, &mut rng);
+        assert_eq!(gc.table_bytes(), 0, "xor/not must garble for free");
+        for (x, y) in [(false, false), (false, true), (true, false), (true, true)] {
+            assert_eq!(roundtrip(&c, &[x, y], &mut rng), vec![x ^ y, !(x ^ y)]);
+        }
+    }
+
+    #[test]
+    fn adder_roundtrip() {
+        let mut bld = Builder::new();
+        let a = bld.input_bus(16);
+        let b = bld.input_bus(16);
+        let (s, carry) = bld.add(&a, &b);
+        bld.output_bus(&s);
+        bld.output(carry);
+        let c = bld.build();
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let x = rng.below(1 << 16);
+            let y = rng.below(1 << 16);
+            let mut inputs = u64_to_bits(x, 16);
+            inputs.extend(u64_to_bits(y, 16));
+            let out = roundtrip(&c, &inputs, &mut rng);
+            let got = bits_to_u64(&out[..16]) | ((out[16] as u64) << 16);
+            assert_eq!(got, x + y);
+        }
+    }
+
+    #[test]
+    fn random_circuits_match_plain_eval() {
+        // Property test: random DAGs of XOR/AND/NOT garble correctly.
+        let mut rng = Rng::new(4);
+        for trial in 0..30 {
+            let n_in = 2 + rng.below_usize(6);
+            let mut bld = Builder::new();
+            let mut pool: Vec<_> = (0..n_in).map(|_| bld.input()).collect();
+            for _ in 0..40 {
+                let a = pool[rng.below_usize(pool.len())];
+                let b = pool[rng.below_usize(pool.len())];
+                let v = match rng.below(3) {
+                    0 => bld.xor(a, b),
+                    1 => bld.and(a, b),
+                    _ => bld.not(a),
+                };
+                pool.push(v);
+            }
+            for _ in 0..4 {
+                let o = pool[rng.below_usize(pool.len())];
+                // Only output live wires (constants folded away are fine too)
+                bld.output(o);
+            }
+            let c = bld.build();
+            for _ in 0..8 {
+                let inputs: Vec<bool> = (0..n_in).map(|_| rng.bool()).collect();
+                let want = c.eval_plain(&inputs);
+                let got = roundtrip(&c, &inputs, &mut rng);
+                assert_eq!(got, want, "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn table_size_is_32_bytes_per_and() {
+        let mut bld = Builder::new();
+        let a = bld.input_bus(31);
+        let b = bld.input_bus(31);
+        let r = bld.leq(&a, &b);
+        bld.output(r);
+        let c = bld.build();
+        let mut rng = Rng::new(5);
+        let (gc, _) = garble(&c, &mut rng);
+        assert_eq!(gc.table_bytes(), c.n_and() * 32);
+    }
+
+    #[test]
+    fn labels_leak_nothing_obvious() {
+        // The two labels of a wire must differ in more than the color bit.
+        let mut bld = Builder::new();
+        let a = bld.input();
+        bld.output(a);
+        let c = bld.build();
+        let mut rng = Rng::new(6);
+        let (_, enc) = garble(&c, &mut rng);
+        let l0 = enc.encode(0, false);
+        let l1 = enc.encode(0, true);
+        assert!((l0.0 ^ l1.0).count_ones() > 10);
+    }
+
+    #[test]
+    fn fresh_garbling_gives_fresh_labels() {
+        // GCs cannot be reused across inferences (paper footnote 2): two
+        // garblings of the same circuit must produce unrelated material.
+        let mut bld = Builder::new();
+        let a = bld.input();
+        let b = bld.input();
+        let o = bld.and(a, b);
+        bld.output(o);
+        let c = bld.build();
+        let mut rng = Rng::new(7);
+        let (gc1, e1) = garble(&c, &mut rng);
+        let (gc2, e2) = garble(&c, &mut rng);
+        assert_ne!(gc1.table[0][0], gc2.table[0][0]);
+        assert_ne!(e1.label0[0], e2.label0[0]);
+    }
+}

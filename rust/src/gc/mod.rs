@@ -1,0 +1,24 @@
+//! Boolean garbled circuits: IR, combinators, garbling engine.
+//!
+//! This is the substrate the paper's Fig. 2 circuits are built on:
+//!
+//! * [`circuit`] — topologically-ordered gate IR (`XOR`/`AND`/`NOT`) with a
+//!   plain evaluator for testing.
+//! * [`build`] — bus combinators (ripple adders/subtractors at 1 AND/bit,
+//!   comparators, MUXes) with automatic constant folding, so circuits that
+//!   compare against public constants (`p`, `p/2`) get cheaper for free.
+//! * [`garble`] / [`eval`] — free-XOR + point-and-permute + half-gates
+//!   (2 ciphertexts = 32 bytes per AND gate; XOR and NOT are free).
+//! * [`size`] — byte accounting used for Fig. 5.
+
+pub mod build;
+pub mod circuit;
+pub mod eval;
+pub mod garble;
+pub mod size;
+
+pub use build::{Bit, Builder, Bus};
+pub use circuit::{Circuit, WireDef, WireId};
+pub use eval::evaluate;
+pub use garble::{garble, GarbledCircuit, InputEncoding};
+pub use size::CircuitCost;

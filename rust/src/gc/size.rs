@@ -1,0 +1,102 @@
+//! GC cost accounting — the substrate behind Fig. 5.
+//!
+//! The paper's "GC size" is the per-ReLU client-side storage: garbled
+//! tables plus input-label material. With half-gates each AND costs two
+//! 16-byte ciphertexts; each circuit input costs one 16-byte label
+//! (delivered directly for garbler inputs, via OT for evaluator inputs —
+//! the OT-extension asymptote is ~2 labels/bit, tracked separately in
+//! [`crate::ot`]).
+
+use super::circuit::Circuit;
+
+/// Byte/gate cost summary of one circuit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CircuitCost {
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+    pub n_and: usize,
+    pub n_xor: usize,
+}
+
+/// Bytes per AND gate under half-gates garbling.
+pub const BYTES_PER_AND: usize = 32;
+
+/// Bytes per transferred wire label.
+pub const BYTES_PER_LABEL: usize = 16;
+
+impl CircuitCost {
+    pub fn of(c: &Circuit) -> Self {
+        Self {
+            n_inputs: c.n_inputs as usize,
+            n_outputs: c.outputs.len(),
+            n_and: c.n_and(),
+            n_xor: c.n_xor(),
+        }
+    }
+
+    /// Garbled-table bytes (the dominant, reuse-proof storage).
+    pub fn table_bytes(&self) -> usize {
+        self.n_and * BYTES_PER_AND
+    }
+
+    /// Input-label bytes (one label per input bit).
+    pub fn label_bytes(&self) -> usize {
+        self.n_inputs * BYTES_PER_LABEL
+    }
+
+    /// Total client-side storage per circuit instance.
+    pub fn total_bytes(&self) -> usize {
+        self.table_bytes() + self.label_bytes()
+    }
+}
+
+impl std::fmt::Display for CircuitCost {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} AND / {} XOR, {} in / {} out, table {} B, labels {} B, total {} B",
+            self.n_and,
+            self.n_xor,
+            self.n_inputs,
+            self.n_outputs,
+            self.table_bytes(),
+            self.label_bytes(),
+            self.total_bytes()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gc::build::Builder;
+
+    #[test]
+    fn cost_counts_match_circuit() {
+        let mut bld = Builder::new();
+        let a = bld.input_bus(8);
+        let b = bld.input_bus(8);
+        let (s, c) = bld.add(&a, &b);
+        bld.output_bus(&s);
+        bld.output(c);
+        let circ = bld.build();
+        let cost = CircuitCost::of(&circ);
+        assert_eq!(cost.n_inputs, 16);
+        assert_eq!(cost.n_and, 8);
+        assert_eq!(cost.table_bytes(), 8 * 32);
+        assert_eq!(cost.label_bytes(), 16 * 16);
+        assert_eq!(cost.total_bytes(), 8 * 32 + 16 * 16);
+    }
+
+    #[test]
+    fn display_formats() {
+        let mut bld = Builder::new();
+        let a = bld.input();
+        let b = bld.input();
+        let o = bld.and(a, b);
+        bld.output(o);
+        let cost = CircuitCost::of(&bld.build());
+        let s = format!("{cost}");
+        assert!(s.contains("1 AND"));
+    }
+}

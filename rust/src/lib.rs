@@ -1,0 +1,61 @@
+//! # Circa: Stochastic ReLUs for Private Deep Learning
+//!
+//! Full-system reproduction of *Circa* (Ghodsi, Jha, Reagen, Garg — NeurIPS
+//! 2021) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Circa reduces the dominant cost of hybrid private inference (PI) — the
+//! per-ReLU garbled circuit — with three composable optimizations:
+//!
+//! 1. **Refactor** `ReLU(x) = x · sign(x)`: only `sign` stays in the garbled
+//!    circuit, the multiply moves to Beaver triples ([`beaver`]).
+//! 2. **Stochastic sign**: drop exact mod-p reconstruction inside the GC and
+//!    compare shares directly; faults with probability `|x|/p` (Thm 3.1).
+//! 3. **Truncated stochastic sign**: compare only the top `m−k` bits; adds
+//!    faults only for `|x| < 2^k` (Thm 3.2), in one of two modes —
+//!    **PosZero** (small positives zeroed) or **NegPass** (small negatives
+//!    passed through).
+//!
+//! ## Crate layout
+//!
+//! * [`field`] — arithmetic over `F_p`, `p = 2138816513`, plus Delphi-style
+//!   15-bit fixed-point quantization.
+//! * [`ss`] — additive secret sharing.
+//! * [`beaver`] — Beaver multiplication triples (dealer + online protocol).
+//! * [`prf`] — fixed-key AES garbling PRF and 128-bit wire labels.
+//! * [`gc`] — boolean circuit IR, bus combinators, and a free-XOR +
+//!   point-and-permute + half-gates garbling engine.
+//! * [`circuits`] — the four ReLU circuit variants of the paper's Fig. 2.
+//! * [`ot`] — (simulated) oblivious transfer for input-label delivery.
+//! * [`protocol`] — the Delphi-style layered 2-party protocol: offline
+//!   (randomness, HE-simulated linear precompute, garbling, triples) and
+//!   online (SS linear, GC ReLU, Beaver multiply) phases.
+//! * [`nn`] — field tensors, quantized layers, and the network zoo with the
+//!   paper's exact ReLU counts (ResNet-18/32, VGG-16, DeepReDuce D1–D6).
+//! * [`simfault`] — closed-form fault model (Thms 3.1/3.2) + Monte-Carlo
+//!   validation against the real GC evaluator.
+//! * [`coordinator`] — the PI serving front-end: offline-material pool,
+//!   request batcher, router, metrics.
+//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX
+//!   model (`artifacts/*.hlo.txt`) for accuracy experiments.
+//! * [`bench_harness`] — shared measurement/reporting used by
+//!   `cargo bench` to regenerate every table and figure in the paper.
+//!
+//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench_harness;
+pub mod beaver;
+pub mod circuits;
+pub mod coordinator;
+pub mod field;
+pub mod gc;
+pub mod nn;
+pub mod ot;
+pub mod prf;
+pub mod protocol;
+pub mod runtime;
+pub mod simfault;
+pub mod ss;
+pub mod util;
+
+pub use field::{Fp, PRIME};

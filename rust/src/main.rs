@@ -1,0 +1,203 @@
+//! `circa` — the PI serving coordinator CLI.
+//!
+//! ```text
+//! circa serve   [--requests N] [--workers W] [--k K] [--mode poszero|negpass|baseline]
+//! circa sizes                       # Fig. 5 circuit sizes
+//! circa sweep   [--batches N]       # Fig. 4 truncation sweep (PJRT)
+//! circa info                        # artifact + network zoo summary
+//! ```
+//!
+//! The experiment drivers live in `cargo bench` (one per paper table /
+//! figure) and `examples/`; this binary is the long-running service
+//! entrypoint plus quick introspection.
+
+use anyhow::Result;
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::coordinator::{PiService, ServiceConfig};
+use circa::nn::weights::{load_dataset, load_weights};
+use circa::protocol::server::NetworkPlan;
+use circa::runtime::ArtifactDir;
+use circa::util::args::Args;
+use circa::util::{Rng, Timer};
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("serve") => serve(&args),
+        Some("sizes") => {
+            sizes();
+            Ok(())
+        }
+        Some("info") => info(),
+        Some("sweep") => {
+            println!("run: cargo run --release --example sweep_truncation");
+            Ok(())
+        }
+        Some("perf") => {
+            perf(&args);
+            Ok(())
+        }
+        _ => {
+            println!("usage: circa <serve|sizes|sweep|info> [options]");
+            println!("  serve  --requests N --workers W --k K --mode poszero|negpass|baseline");
+            println!("  sizes  (Fig. 5 per-ReLU GC sizes)");
+            println!("  info   (artifacts + network zoo)");
+            Ok(())
+        }
+    }
+}
+
+fn variant_from(args: &Args) -> ReluVariant {
+    let k = args.get_u64("k", 12) as u32;
+    match args.get_or("mode", "poszero") {
+        "baseline" => ReluVariant::BaselineRelu,
+        "sign" => ReluVariant::NaiveSign,
+        m => ReluVariant::TruncatedSign {
+            k,
+            mode: FaultMode::parse(m).unwrap_or(FaultMode::PosZero),
+        },
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let dir = ArtifactDir::discover()?;
+    let net = load_weights(&dir.path("weights.bin"))?;
+    let ds = load_dataset(&dir.path("dataset.bin"))?;
+    let variant = variant_from(args);
+    let n = args.get_usize("requests", 32);
+    let workers = args.get_usize("workers", 4);
+    println!(
+        "serving {} with {} ({} ReLUs/inference) — {n} requests, {workers} workers",
+        net.name,
+        variant.name(),
+        net.total_relus()
+    );
+
+    let plan = Arc::new(NetworkPlan {
+        linears: net.linears(),
+        variant,
+        rescale_bits: net.rescale_bits(),
+    });
+    let svc = PiService::start(
+        plan,
+        ServiceConfig { workers, pool_target: 32, pool_dealers: workers, ..Default::default() },
+    );
+    svc.warmup(8);
+
+    let t = Timer::new();
+    let mut rng = Rng::new(1);
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            let idx = rng.below_usize(ds.n);
+            (idx, svc.submit(ds.image(idx).to_vec()))
+        })
+        .collect();
+    let mut correct = 0;
+    for (idx, rx) in rxs {
+        let resp = rx.recv().expect("service");
+        let pred = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| v.to_i64())
+            .map(|(c, _)| c as u32)
+            .unwrap();
+        if pred == ds.labels[idx] {
+            correct += 1;
+        }
+    }
+    let wall = t.elapsed_s();
+    let snap = svc.metrics.snapshot();
+    println!("done: {n} inferences in {wall:.2}s ({:.1} inf/s)", n as f64 / wall);
+    println!("accuracy {:.1}%", 100.0 * correct as f64 / n as f64);
+    println!(
+        "latency: online p50 {:.1} ms, p99 {:.1} ms; queue mean {:.1} ms; dry leases {}",
+        snap.online_p50_us as f64 / 1e3,
+        snap.online_p99_us as f64 / 1e3,
+        snap.queue_mean_us / 1e3,
+        snap.pool_dry_events
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+/// Hot-path microbenchmark used by the §Perf iteration log.
+fn perf(args: &Args) {
+    use circa::bench_harness::relu_cost;
+    let sample = args.get_usize("sample", 20_000);
+    let mut rng = Rng::new(0xBEEF);
+    for (name, variant) in [
+        ("baseline ReLU GC", ReluVariant::BaselineRelu),
+        ("circa ~sign_12", ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero }),
+    ] {
+        let c = relu_cost(variant, sample, &mut rng);
+        println!(
+            "{name:<18} offline {:>7.2} us/ReLU   online {:>6.2} us/ReLU   {:>5.0} B online",
+            c.offline_s * 1e6,
+            c.online_s * 1e6,
+            c.online_bytes
+        );
+    }
+}
+
+fn sizes() {
+    use circa::circuits::{relu_gc, sign_gc, stoch_sign_gc};
+    use circa::gc::size::CircuitCost;
+    println!("per-ReLU garbled circuit sizes (31-bit field):");
+    let rows: Vec<(String, CircuitCost)> = vec![
+        ("ReLU (baseline)".into(), CircuitCost::of(&relu_gc::build())),
+        ("Sign (naive)".into(), CircuitCost::of(&sign_gc::build())),
+        ("~Sign".into(), CircuitCost::of(&stoch_sign_gc::build(FaultMode::PosZero))),
+        (
+            "~Sign_12".into(),
+            CircuitCost::of(&stoch_sign_gc::build_truncated(12, FaultMode::PosZero)),
+        ),
+    ];
+    for (name, c) in rows {
+        println!("  {name:<18} {c}");
+    }
+}
+
+fn info() -> Result<()> {
+    match ArtifactDir::discover() {
+        Ok(dir) => {
+            println!("artifacts: {}", dir.root.display());
+            let net = load_weights(&dir.path("weights.bin"))?;
+            let ds = load_dataset(&dir.path("dataset.bin"))?;
+            println!(
+                "  demo model {}: {} layers, {} ReLUs; dataset: {} images, {} classes",
+                net.name,
+                net.layers.len(),
+                net.total_relus(),
+                ds.n,
+                ds.n_classes
+            );
+            println!(
+                "  quantized exact-ReLU accuracy: {:.2}%",
+                100.0 * dir.manifest_f64("cnn_quantized_acc").unwrap_or(0.0)
+            );
+        }
+        Err(e) => println!("artifacts: not built ({e})"),
+    }
+    println!("\nnetwork zoo (paper ReLU counts):");
+    for row in circa::bench_harness::tables::table1() {
+        let spec = (row.spec)();
+        println!(
+            "  {:<16} {:>9.1}K ReLUs  {:>6.2} GMACs",
+            row.name,
+            spec.total_relus() as f64 / 1e3,
+            spec.total_macs() as f64 / 1e9
+        );
+    }
+    for row in circa::bench_harness::tables::table2() {
+        let spec = (row.spec)();
+        println!(
+            "  {:<16} {:>9.1}K ReLUs  {:>6.2} GMACs",
+            row.name,
+            spec.total_relus() as f64 / 1e3,
+            spec.total_macs() as f64 / 1e9
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! DeepReDuce-optimized ResNet-18 variants (Jha et al., ICML 2021) — the
+//! state-of-the-art ReLU-culled models Circa stacks on in Table 2.
+//!
+//! DeepReDuce removes whole ReLU *stages* (convs stay; activations become
+//! identity) and optionally scales channel widths. The six configurations
+//! below reproduce the paper's Table 2 ReLU counts exactly:
+//!
+//! | model | mask (stem, s1..s4) | width | C100 #ReLUs | Tiny #ReLUs |
+//! |---|---|---|---|---|
+//! | D1 | stem+s2+s4 | 1.0  | 229.4 K | 917.5 K |
+//! | D2 | stem+s2+s4 | 0.5  | 114.7 K | 458.8 K |
+//! | D3 | stem+s2    | 1.0  | 196.6 K | —       |
+//! | D4 | stem+s2    | 0.5  |  98.3 K | —       |
+//! | D5 | stem+s4    | 1.0  | —       | 393.2 K |
+//! | D6 | stem+s2+s4 | 0.25 | —       | 229.4 K |
+
+use super::graph::NetworkSpec;
+use super::resnet::resnet18_masked;
+
+/// Configuration of one DeepReDuce variant.
+#[derive(Clone, Copy, Debug)]
+pub struct DeepReDuceCfg {
+    pub id: u32,
+    pub mask: [bool; 5],
+    pub scale: f64,
+}
+
+/// The six Table 2 configurations.
+pub const CONFIGS: [DeepReDuceCfg; 6] = [
+    DeepReDuceCfg { id: 1, mask: [true, false, true, false, true], scale: 1.0 },
+    DeepReDuceCfg { id: 2, mask: [true, false, true, false, true], scale: 0.5 },
+    DeepReDuceCfg { id: 3, mask: [true, false, true, false, false], scale: 1.0 },
+    DeepReDuceCfg { id: 4, mask: [true, false, true, false, false], scale: 0.5 },
+    DeepReDuceCfg { id: 5, mask: [true, false, false, false, true], scale: 1.0 },
+    DeepReDuceCfg { id: 6, mask: [true, false, true, false, true], scale: 0.25 },
+];
+
+/// Build DeepReDuce variant `id` (1–6) at input size `hw`.
+pub fn deepreduce(id: u32, hw: usize, classes: usize) -> NetworkSpec {
+    let cfg = CONFIGS
+        .iter()
+        .find(|c| c.id == id)
+        .unwrap_or_else(|| panic!("no DeepReDuce variant {id}"));
+    resnet18_masked(hw, classes, cfg.scale, cfg.mask, &format!("DeepReD{id}-{hw}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c100_relu_counts_match_table2() {
+        assert_eq!(deepreduce(1, 32, 100).total_relus(), 229_376); // 229.4K
+        assert_eq!(deepreduce(2, 32, 100).total_relus(), 114_688); // 114.7K
+        assert_eq!(deepreduce(3, 32, 100).total_relus(), 196_608); // 196.6K
+        assert_eq!(deepreduce(4, 32, 100).total_relus(), 98_304); // 98.3K
+    }
+
+    #[test]
+    fn tiny_relu_counts_match_table2() {
+        assert_eq!(deepreduce(1, 64, 200).total_relus(), 917_504); // 917.5K
+        assert_eq!(deepreduce(2, 64, 200).total_relus(), 458_752); // 458.8K
+        assert_eq!(deepreduce(5, 64, 200).total_relus(), 393_216); // 393.2K
+        assert_eq!(deepreduce(6, 64, 200).total_relus(), 229_376); // 229.4K
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_variant_panics() {
+        deepreduce(9, 32, 100);
+    }
+
+    #[test]
+    fn width_scaling_shrinks_macs() {
+        let d1 = deepreduce(1, 32, 100).total_macs();
+        let d2 = deepreduce(2, 32, 100).total_macs();
+        assert!(d2 < d1 / 3, "half-width should be ~¼ MACs: {d2} vs {d1}");
+    }
+}

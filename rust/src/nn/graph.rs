@@ -1,0 +1,113 @@
+//! Architecture specs: shapes + ReLU counts, independent of weights.
+//!
+//! The Tables 1–3 experiments need each network's exact per-layer ReLU
+//! counts and MAC counts (the protocol's online ReLU cost is per-element;
+//! the linear cost is per-MAC). Specs are cheap descriptions; actual
+//! `LinearOp` instances are only materialized for networks small enough
+//! to run end-to-end (the demo CNN and unit-test nets).
+
+/// One layer of an architecture spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerSpec {
+    Conv { in_c: usize, in_h: usize, in_w: usize, out_c: usize, k: usize, stride: usize, pad: usize },
+    Dense { in_dim: usize, out_dim: usize },
+    Pool2 { c: usize, h: usize, w: usize },
+    /// ReLU over `n` elements.
+    Relu { n: usize },
+}
+
+impl LayerSpec {
+    pub fn macs(&self) -> u64 {
+        match *self {
+            LayerSpec::Conv { in_c, in_h, in_w, out_c, k, stride, pad } => {
+                let oh = (in_h + 2 * pad - k) / stride + 1;
+                let ow = (in_w + 2 * pad - k) / stride + 1;
+                (out_c * oh * ow * in_c * k * k) as u64
+            }
+            LayerSpec::Dense { in_dim, out_dim } => (in_dim * out_dim) as u64,
+            LayerSpec::Pool2 { c, h, w } => (c * h * w) as u64,
+            LayerSpec::Relu { .. } => 0,
+        }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        match *self {
+            LayerSpec::Conv { in_h, in_w, out_c, k, stride, pad, .. } => {
+                let oh = (in_h + 2 * pad - k) / stride + 1;
+                let ow = (in_w + 2 * pad - k) / stride + 1;
+                out_c * oh * ow
+            }
+            LayerSpec::Dense { out_dim, .. } => out_dim,
+            LayerSpec::Pool2 { c, h, w } => c * (h / 2) * (w / 2),
+            LayerSpec::Relu { n } => n,
+        }
+    }
+}
+
+/// A named architecture.
+#[derive(Clone, Debug)]
+pub struct NetworkSpec {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl NetworkSpec {
+    /// Total ReLU count — the paper's headline per-network figure.
+    pub fn total_relus(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| if let LayerSpec::Relu { n } = l { *n as u64 } else { 0 })
+            .sum()
+    }
+
+    /// Total multiply-accumulates in linear layers.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Sizes of each ReLU layer, in order.
+    pub fn relu_layer_sizes(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .filter_map(|l| if let LayerSpec::Relu { n } = l { Some(*n) } else { None })
+            .collect()
+    }
+
+    /// ReLU count in thousands, as the paper prints it.
+    pub fn relus_k(&self) -> f64 {
+        self.total_relus() as f64 / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_spec_dims() {
+        let c = LayerSpec::Conv { in_c: 3, in_h: 32, in_w: 32, out_c: 64, k: 3, stride: 1, pad: 1 };
+        assert_eq!(c.out_dim(), 64 * 32 * 32);
+        assert_eq!(c.macs(), 64 * 32 * 32 * 3 * 3 * 3);
+    }
+
+    #[test]
+    fn strided_conv_dims() {
+        let c = LayerSpec::Conv { in_c: 64, in_h: 32, in_w: 32, out_c: 128, k: 3, stride: 2, pad: 1 };
+        assert_eq!(c.out_dim(), 128 * 16 * 16);
+    }
+
+    #[test]
+    fn relu_accounting() {
+        let net = NetworkSpec {
+            name: "t".into(),
+            layers: vec![
+                LayerSpec::Conv { in_c: 3, in_h: 8, in_w: 8, out_c: 4, k: 3, stride: 1, pad: 1 },
+                LayerSpec::Relu { n: 4 * 64 },
+                LayerSpec::Dense { in_dim: 256, out_dim: 10 },
+            ],
+        };
+        assert_eq!(net.total_relus(), 256);
+        assert_eq!(net.relu_layer_sizes(), vec![256]);
+        assert!((net.relus_k() - 0.256).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,372 @@
+//! Quantized layers over `F_p`, each implementing
+//! [`LinearOp`](crate::protocol::linear::LinearOp) on flattened CHW
+//! vectors so the protocol can run them on secret shares.
+//!
+//! Rescaling: products of two scale-`2^s` fixed-point values carry scale
+//! `2^{2s}`. After each multiplying layer the parties truncate their
+//! *shares locally* (SecureML / Mohassel–Zhang): correct up to ±1 with
+//! probability `1 − |x|·2^{ℓ+1}/p` — see [`truncate_share_local`]. The
+//! protocol applies it share-wise; plaintext forward passes apply the
+//! exact arithmetic shift.
+
+use crate::field::{Fp, HALF, PRIME};
+use crate::protocol::linear::LinearOp;
+
+/// SecureML local share truncation by `d` bits.
+///
+/// Party 1 (client convention: holds `r`-style shares) computes
+/// `⌊z/2^d⌋` on the raw representative; party 2 computes
+/// `p − ⌊(p − z)/2^d⌋`. Reconstruction yields `⌊x/2^d⌋ + e`,
+/// `e ∈ {−1, 0, +1}`, except with probability ≈ `2^{ℓ_x+1}/p` where
+/// `ℓ_x` bounds `|x|` (the same fault-tolerance budget Circa exploits).
+pub fn truncate_share_local(share: Fp, d: u32, is_party1: bool) -> Fp {
+    if is_party1 {
+        Fp::new(share.raw() >> d)
+    } else {
+        let neg = (PRIME - share.raw()) % PRIME;
+        Fp::new((PRIME - (neg >> d)) % PRIME)
+    }
+}
+
+/// 2-D convolution, stride `s`, zero padding `pad`, no bias folding
+/// (bias is added as a public constant server-side — see
+/// [`Conv2d::bias`]). Weight layout: `[out_c][in_c][kh][kw]`.
+pub struct Conv2d {
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_c: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub weight: Vec<Fp>,
+    pub bias: Vec<Fp>,
+}
+
+impl Conv2d {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// MAC count (for the linear cost model of the big-network benches).
+    pub fn macs(&self) -> u64 {
+        (self.out_c * self.out_h() * self.out_w() * self.in_c * self.k * self.k) as u64
+    }
+}
+
+impl Conv2d {
+    fn apply_inner(&self, input: &[Fp], with_bias: bool) -> Vec<Fp> {
+        assert_eq!(input.len(), self.in_dim());
+        let (oh, ow) = (self.out_h(), self.out_w());
+        let mut out = vec![Fp::ZERO; self.out_c * oh * ow];
+        for oc in 0..self.out_c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    // Accumulate in u128 to amortize the modulo: each
+                    // product < p² ≈ 2^62; u128 holds ~2^64 of them.
+                    let mut acc: u128 = 0;
+                    for ic in 0..self.in_c {
+                        for ky in 0..self.k {
+                            let iy = (oy * self.stride + ky) as isize - self.pad as isize;
+                            if iy < 0 || iy >= self.in_h as isize {
+                                continue;
+                            }
+                            for kx in 0..self.k {
+                                let ix = (ox * self.stride + kx) as isize - self.pad as isize;
+                                if ix < 0 || ix >= self.in_w as isize {
+                                    continue;
+                                }
+                                let w = self.weight
+                                    [((oc * self.in_c + ic) * self.k + ky) * self.k + kx];
+                                let x = input
+                                    [(ic * self.in_h + iy as usize) * self.in_w + ix as usize];
+                                acc += w.raw() as u128 * x.raw() as u128;
+                            }
+                        }
+                    }
+                    let mut v = Fp::reduce((acc % PRIME as u128) as u64);
+                    if with_bias {
+                        v = v + self.bias[oc];
+                    }
+                    out[(oc * oh + oy) * ow + ox] = v;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl LinearOp for Conv2d {
+    fn in_dim(&self) -> usize {
+        self.in_c * self.in_h * self.in_w
+    }
+
+    fn out_dim(&self) -> usize {
+        self.out_c * self.out_h() * self.out_w()
+    }
+
+    fn apply(&self, input: &[Fp]) -> Vec<Fp> {
+        self.apply_inner(input, true)
+    }
+
+    fn apply_no_bias(&self, input: &[Fp]) -> Vec<Fp> {
+        self.apply_inner(input, false)
+    }
+}
+
+/// Fully-connected layer; weight layout `[out][in]`, row-major.
+pub struct Dense {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub weight: Vec<Fp>,
+    pub bias: Vec<Fp>,
+}
+
+impl Dense {
+    pub fn macs(&self) -> u64 {
+        (self.in_dim * self.out_dim) as u64
+    }
+}
+
+impl Dense {
+    fn apply_inner(&self, input: &[Fp], with_bias: bool) -> Vec<Fp> {
+        assert_eq!(input.len(), self.in_dim);
+        let mut out = Vec::with_capacity(self.out_dim);
+        for o in 0..self.out_dim {
+            let row = &self.weight[o * self.in_dim..(o + 1) * self.in_dim];
+            let mut acc: u128 = 0;
+            for (w, x) in row.iter().zip(input) {
+                acc += w.raw() as u128 * x.raw() as u128;
+            }
+            let mut v = Fp::reduce((acc % PRIME as u128) as u64);
+            if with_bias {
+                v = v + self.bias[o];
+            }
+            out.push(v);
+        }
+        out
+    }
+}
+
+impl LinearOp for Dense {
+    fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    fn apply(&self, input: &[Fp]) -> Vec<Fp> {
+        self.apply_inner(input, true)
+    }
+
+    fn apply_no_bias(&self, input: &[Fp]) -> Vec<Fp> {
+        self.apply_inner(input, false)
+    }
+}
+
+/// 2×2 sum-pool (avg-pool × 4, keeping arithmetic in the field; the ÷4
+/// folds into the next layer's weight scale at training time).
+pub struct SumPool2 {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl LinearOp for SumPool2 {
+    fn in_dim(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    fn out_dim(&self) -> usize {
+        self.c * (self.h / 2) * (self.w / 2)
+    }
+
+    fn apply(&self, input: &[Fp]) -> Vec<Fp> {
+        assert_eq!(input.len(), self.in_dim());
+        let (oh, ow) = (self.h / 2, self.w / 2);
+        let mut out = vec![Fp::ZERO; self.c * oh * ow];
+        for c in 0..self.c {
+            for y in 0..oh {
+                for x in 0..ow {
+                    let mut acc = Fp::ZERO;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            acc = acc + input[(c * self.h + 2 * y + dy) * self.w + 2 * x + dx];
+                        }
+                    }
+                    out[(c * oh + y) * ow + x] = acc;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Exact plaintext ReLU over a vector (reference semantics).
+pub fn relu_vec(xs: &[Fp]) -> Vec<Fp> {
+    xs.iter().map(|&x| crate::field::relu_exact(x)).collect()
+}
+
+/// Exact plaintext rescale over a vector.
+pub fn rescale_vec(xs: &[Fp], d: u32) -> Vec<Fp> {
+    xs.iter().map(|&x| x.rescale(d)).collect()
+}
+
+/// Sanity bound used by tests: a |x| bound for which local share
+/// truncation is near-certainly correct (wrap-failure probability
+/// ≈ 2·MAG/p ≈ 1.5e-5 per truncation at 2^14).
+pub const TRUNC_SAFE_MAG: u64 = 1 << 14;
+const _: () = assert!(TRUNC_SAFE_MAG < HALF);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ss::SharePair;
+    use crate::util::Rng;
+
+    fn small_conv(rng: &mut Rng) -> Conv2d {
+        let (in_c, out_c, k) = (2, 3, 3);
+        let weight =
+            (0..out_c * in_c * k * k).map(|_| Fp::from_i64(rng.below(9) as i64 - 4)).collect();
+        let bias = (0..out_c).map(|_| Fp::from_i64(rng.below(5) as i64 - 2)).collect();
+        Conv2d { in_c, in_h: 6, in_w: 6, out_c, k, stride: 1, pad: 1, weight, bias }
+    }
+
+    /// Naive i128 reference convolution (signed domain).
+    fn conv_ref(c: &Conv2d, input: &[i64]) -> Vec<i64> {
+        let (oh, ow) = (c.out_h(), c.out_w());
+        let mut out = vec![0i64; c.out_c * oh * ow];
+        for oc in 0..c.out_c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0i64;
+                    for ic in 0..c.in_c {
+                        for ky in 0..c.k {
+                            for kx in 0..c.k {
+                                let iy = (oy * c.stride + ky) as isize - c.pad as isize;
+                                let ix = (ox * c.stride + kx) as isize - c.pad as isize;
+                                if iy < 0 || ix < 0 || iy >= c.in_h as isize || ix >= c.in_w as isize
+                                {
+                                    continue;
+                                }
+                                let w = c.weight[((oc * c.in_c + ic) * c.k + ky) * c.k + kx]
+                                    .to_i64();
+                                let x = input[(ic * c.in_h + iy as usize) * c.in_w + ix as usize];
+                                acc += w * x;
+                            }
+                        }
+                    }
+                    out[(oc * oh + oy) * ow + ox] = acc + c.bias[oc].to_i64();
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_matches_signed_reference() {
+        let mut rng = Rng::new(1);
+        let c = small_conv(&mut rng);
+        let input_i: Vec<i64> = (0..c.in_dim()).map(|_| rng.below(41) as i64 - 20).collect();
+        let input: Vec<Fp> = input_i.iter().map(|&v| Fp::from_i64(v)).collect();
+        let got: Vec<i64> = c.apply(&input).iter().map(|v| v.to_i64()).collect();
+        assert_eq!(got, conv_ref(&c, &input_i));
+    }
+
+    #[test]
+    fn conv_shapes() {
+        let mut rng = Rng::new(2);
+        let c = small_conv(&mut rng);
+        assert_eq!(c.out_h(), 6);
+        assert_eq!(c.out_dim(), 3 * 36);
+        assert_eq!(c.macs(), (3 * 6 * 6 * 2 * 3 * 3) as u64);
+    }
+
+    #[test]
+    fn conv_is_linear_over_shares() {
+        // apply(c_share) + apply(s_share) − bias must equal apply(x): the
+        // bias is added on both shares, so subtract one copy.
+        let mut rng = Rng::new(3);
+        let c = small_conv(&mut rng);
+        let xs: Vec<Fp> = (0..c.in_dim()).map(|_| Fp::from_i64(rng.below(21) as i64 - 10)).collect();
+        let shares: Vec<SharePair> = xs.iter().map(|&x| SharePair::share(x, &mut rng)).collect();
+        let cs: Vec<Fp> = shares.iter().map(|s| s.client).collect();
+        let ss_: Vec<Fp> = shares.iter().map(|s| s.server).collect();
+        let out_c = c.apply(&cs);
+        let out_s = c.apply(&ss_);
+        let whole = c.apply(&xs);
+        for i in 0..whole.len() {
+            let oc = i / (c.out_h() * c.out_w());
+            let rec = out_c[i] + out_s[i] - c.bias[oc];
+            assert_eq!(rec, whole[i]);
+        }
+    }
+
+    #[test]
+    fn dense_matches_reference() {
+        let mut rng = Rng::new(4);
+        let d = Dense {
+            in_dim: 8,
+            out_dim: 3,
+            weight: (0..24).map(|_| Fp::from_i64(rng.below(9) as i64 - 4)).collect(),
+            bias: vec![Fp::from_i64(1); 3],
+        };
+        let x: Vec<i64> = (0..8).map(|_| rng.below(21) as i64 - 10).collect();
+        let xf: Vec<Fp> = x.iter().map(|&v| Fp::from_i64(v)).collect();
+        let got = d.apply(&xf);
+        for o in 0..3 {
+            let want: i64 =
+                (0..8).map(|i| d.weight[o * 8 + i].to_i64() * x[i]).sum::<i64>() + 1;
+            assert_eq!(got[o].to_i64(), want);
+        }
+    }
+
+    #[test]
+    fn sumpool_sums_quads() {
+        let p = SumPool2 { c: 1, h: 4, w: 4 };
+        let input: Vec<Fp> = (0..16).map(|i| Fp::from_i64(i as i64)).collect();
+        let out = p.apply(&input);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].to_i64(), 0 + 1 + 4 + 5);
+        assert_eq!(out[3].to_i64(), 10 + 11 + 14 + 15);
+    }
+
+    #[test]
+    fn local_truncation_within_one_ulp() {
+        let mut rng = Rng::new(5);
+        let d = 8u32;
+        let mut exact = 0;
+        for _ in 0..2000 {
+            let mag = rng.below(TRUNC_SAFE_MAG) as i64;
+            let x = Fp::from_i64(if rng.bool() { mag } else { -mag });
+            let sh = SharePair::share(x, &mut rng);
+            let t1 = truncate_share_local(sh.client, d, true);
+            let t2 = truncate_share_local(sh.server, d, false);
+            let got = (t1 + t2).to_i64();
+            let want = x.to_i64() >> d;
+            let err = (got - want).abs();
+            assert!(err <= 1, "x={} got={got} want={want}", x.to_i64());
+            if err == 0 {
+                exact += 1;
+            }
+        }
+        assert!(exact > 900, "truncation almost never exact: {exact}/2000");
+    }
+
+    #[test]
+    fn relu_and_rescale_vec() {
+        let xs = vec![Fp::from_i64(-3), Fp::from_i64(5), Fp::from_i64(-1024), Fp::from_i64(1024)];
+        assert_eq!(relu_vec(&xs).iter().map(|v| v.to_i64()).collect::<Vec<_>>(), vec![0, 5, 0, 1024]);
+        // Arithmetic shift: −3 >> 2 = −1 (rounds toward −∞).
+        assert_eq!(
+            rescale_vec(&xs, 2).iter().map(|v| v.to_i64()).collect::<Vec<_>>(),
+            vec![-1, 1, -256, 256]
+        );
+    }
+}

@@ -1,0 +1,30 @@
+//! Quantized neural networks over `F_p` and the paper's network zoo.
+//!
+//! Two distinct consumers:
+//!
+//! * the **protocol path** (Tables 1–3): [`layers`] implement
+//!   [`crate::protocol::linear::LinearOp`] so real conv/dense layers run
+//!   inside the 2-party protocol; [`graph`] chains them and counts ReLUs;
+//!   [`resnet`]/[`vgg`]/[`deepreduce`] give the *architecture specs* with
+//!   the paper's exact ReLU counts (§4.1: ResNet-18/32, VGG-16 on
+//!   CIFAR/Tiny shapes, DeepReDuce D1–D6);
+//! * the **accuracy path** (Figs. 3–4): weights trained at build time by
+//!   `python/compile/train.py` are loaded by [`weights`] and either run
+//!   through the protocol (demo CNN) or through the PJRT runtime.
+//!
+//! Fixed-point semantics follow Delphi (15-bit signed quantization,
+//! 31-bit prime), with SecureML-style *local share truncation* after each
+//! multiplying layer — a stochastic rescale whose ±1 off-by-one faults
+//! are exactly the class of noise Circa's fault-tolerance argument
+//! already embraces (DESIGN.md §4).
+
+pub mod deepreduce;
+pub mod graph;
+pub mod layers;
+pub mod resnet;
+pub mod tensor;
+pub mod vgg;
+pub mod weights;
+
+pub use graph::{LayerSpec, NetworkSpec};
+pub use tensor::Tensor;

@@ -1,0 +1,168 @@
+//! ResNet-18 and ResNet-32 architecture specs (He et al. 2016), CIFAR
+//! (32×32) and TinyImageNet (64×64) variants, with ReLU counts matching
+//! the paper's Table 1 exactly:
+//!
+//! | network | dataset | #ReLUs |
+//! |---|---|---|
+//! | ResNet-32 | C10/C100 | 303.1 K |
+//! | ResNet-18 | C10/C100 | 557.1 K |
+//! | ResNet-32 | Tiny | 1212.4 K |
+//! | ResNet-18 | Tiny | 2228.2 K |
+
+use super::graph::{LayerSpec, NetworkSpec};
+
+/// A basic residual block: two 3×3 convs, two ReLUs (one post-add), plus
+/// a 1×1 projection shortcut when shape changes.
+fn basic_block(layers: &mut Vec<LayerSpec>, in_c: usize, out_c: usize, hw: usize, stride: usize) {
+    let out_hw = hw / stride;
+    layers.push(LayerSpec::Conv { in_c, in_h: hw, in_w: hw, out_c, k: 3, stride, pad: 1 });
+    layers.push(LayerSpec::Relu { n: out_c * out_hw * out_hw });
+    layers.push(LayerSpec::Conv {
+        in_c: out_c,
+        in_h: out_hw,
+        in_w: out_hw,
+        out_c,
+        k: 3,
+        stride: 1,
+        pad: 1,
+    });
+    if stride != 1 || in_c != out_c {
+        layers.push(LayerSpec::Conv { in_c, in_h: hw, in_w: hw, out_c, k: 1, stride, pad: 0 });
+    }
+    // Post-addition ReLU.
+    layers.push(LayerSpec::Relu { n: out_c * out_hw * out_hw });
+}
+
+/// ImageNet-style ResNet-18 adapted to small inputs (3×3 stem, no
+/// max-pool), the standard CIFAR adaptation. `hw` is the input spatial
+/// size (32 for CIFAR, 64 for Tiny). `scale` multiplies channel widths
+/// (used by the DeepReDuce variants); `relu_stage_mask[i]` keeps the
+/// ReLUs of stage `i` (0 = stem, 1..=4 = residual stages).
+pub fn resnet18_masked(
+    hw: usize,
+    classes: usize,
+    scale: f64,
+    relu_stage_mask: [bool; 5],
+    name: &str,
+) -> NetworkSpec {
+    let ch = |c: usize| -> usize { ((c as f64 * scale).round() as usize).max(1) };
+    let mut layers = Vec::new();
+    let stem_c = ch(64);
+    layers.push(LayerSpec::Conv { in_c: 3, in_h: hw, in_w: hw, out_c: stem_c, k: 3, stride: 1, pad: 1 });
+    layers.push(LayerSpec::Relu { n: stem_c * hw * hw });
+
+    let mut cur_hw = hw;
+    let mut in_c = stem_c;
+    let stage_channels = [64, 128, 256, 512];
+    for (si, &c) in stage_channels.iter().enumerate() {
+        let out_c = ch(c);
+        let stride = if si == 0 { 1 } else { 2 };
+        basic_block(&mut layers, in_c, out_c, cur_hw, stride);
+        cur_hw /= stride;
+        basic_block(&mut layers, out_c, out_c, cur_hw, 1);
+        in_c = out_c;
+    }
+
+    // Global average pool (sum-pool chain) + classifier.
+    layers.push(LayerSpec::Dense { in_dim: in_c, out_dim: classes });
+
+    // Apply the stage mask by deleting Relu entries belonging to masked
+    // stages. Stage boundaries: stem relu is index 1; each stage has 4
+    // relus (2 blocks × 2).
+    let spec = NetworkSpec { name: name.into(), layers };
+    apply_stage_mask(spec, relu_stage_mask)
+}
+
+/// Standard ResNet-18.
+pub fn resnet18(hw: usize, classes: usize) -> NetworkSpec {
+    resnet18_masked(hw, classes, 1.0, [true; 5], &format!("ResNet18-{hw}"))
+}
+
+/// CIFAR-style ResNet-32: 3 stages × 5 basic blocks, 16/32/64 channels.
+pub fn resnet32(hw: usize, classes: usize) -> NetworkSpec {
+    let mut layers = Vec::new();
+    layers.push(LayerSpec::Conv { in_c: 3, in_h: hw, in_w: hw, out_c: 16, k: 3, stride: 1, pad: 1 });
+    layers.push(LayerSpec::Relu { n: 16 * hw * hw });
+    let mut cur_hw = hw;
+    let mut in_c = 16;
+    for (si, &c) in [16usize, 32, 64].iter().enumerate() {
+        for b in 0..5 {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            basic_block(&mut layers, in_c, c, cur_hw, stride);
+            cur_hw /= stride;
+            in_c = c;
+        }
+    }
+    layers.push(LayerSpec::Dense { in_dim: 64, out_dim: classes });
+    NetworkSpec { name: format!("ResNet32-{hw}"), layers }
+}
+
+/// Remove the ReLU layers of masked-out stages (DeepReDuce-style culling:
+/// the convs stay, the activations become identity).
+fn apply_stage_mask(spec: NetworkSpec, mask: [bool; 5]) -> NetworkSpec {
+    // Relu entries in resnet18 order: stem (1), then 4 per stage.
+    let mut relu_idx = 0usize;
+    let layers = spec
+        .layers
+        .into_iter()
+        .filter(|l| {
+            if let LayerSpec::Relu { .. } = l {
+                let stage = if relu_idx == 0 { 0 } else { 1 + (relu_idx - 1) / 4 };
+                relu_idx += 1;
+                mask[stage]
+            } else {
+                true
+            }
+        })
+        .collect();
+    NetworkSpec { name: spec.name, layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_cifar_relu_count_matches_table1() {
+        assert_eq!(resnet18(32, 10).total_relus(), 557_056); // 557.1K
+    }
+
+    #[test]
+    fn resnet18_tiny_relu_count_matches_table1() {
+        assert_eq!(resnet18(64, 200).total_relus(), 2_228_224); // 2228.2K
+    }
+
+    #[test]
+    fn resnet32_cifar_relu_count_matches_table1() {
+        assert_eq!(resnet32(32, 10).total_relus(), 303_104); // 303.1K
+    }
+
+    #[test]
+    fn resnet32_tiny_relu_count_matches_table1() {
+        assert_eq!(resnet32(64, 200).total_relus(), 1_212_416); // 1212.4K
+    }
+
+    #[test]
+    fn stage_mask_removes_relus_only() {
+        let full = resnet18(32, 10);
+        let masked = resnet18_masked(32, 10, 1.0, [true, false, true, false, true], "m");
+        assert!(masked.total_relus() < full.total_relus());
+        // Linear structure unchanged: same MACs.
+        assert_eq!(masked.total_macs(), full.total_macs());
+    }
+
+    #[test]
+    fn relu_layer_count_structure() {
+        // ResNet-18: 1 stem + 8 blocks × 2 = 17 ReLU layers.
+        assert_eq!(resnet18(32, 10).relu_layer_sizes().len(), 17);
+        // ResNet-32: 1 stem + 15 blocks × 2 = 31 ReLU layers.
+        assert_eq!(resnet32(32, 10).relu_layer_sizes().len(), 31);
+    }
+
+    #[test]
+    fn macs_are_plausible() {
+        // ResNet-18 CIFAR ≈ 0.56 GMACs (standard figure ±shortcuts).
+        let macs = resnet18(32, 10).total_macs();
+        assert!(macs > 400_000_000 && macs < 700_000_000, "{macs}");
+    }
+}

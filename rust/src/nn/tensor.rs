@@ -1,0 +1,76 @@
+//! Minimal dense tensor of field elements (NCHW conventions, N folded
+//! out — the protocol processes one example at a time).
+
+use crate::field::Fp;
+
+/// A shaped buffer of field elements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<Fp>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![Fp::ZERO; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<Fp>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// CHW indexing.
+    #[inline]
+    pub fn at3(&self, c: usize, h: usize, w: usize) -> Fp {
+        let (ch, hh, ww) = (self.shape[0], self.shape[1], self.shape[2]);
+        debug_assert!(c < ch && h < hh && w < ww);
+        self.data[(c * hh + h) * ww + w]
+    }
+
+    #[inline]
+    pub fn set3(&mut self, c: usize, h: usize, w: usize, v: Fp) {
+        let (_, hh, ww) = (self.shape[0], self.shape[1], self.shape[2]);
+        self.data[(c * hh + h) * ww + w] = v;
+    }
+
+    /// Elementwise signed decode (for assertions/metrics).
+    pub fn to_i64(&self) -> Vec<i64> {
+        self.data.iter().map(|x| x.to_i64()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accounting() {
+        let t = Tensor::zeros(&[3, 4, 5]);
+        assert_eq!(t.len(), 60);
+        assert!(!t.is_empty());
+    }
+
+    #[test]
+    fn chw_indexing() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        t.set3(1, 2, 3, Fp::from_i64(7));
+        assert_eq!(t.at3(1, 2, 3).to_i64(), 7);
+        assert_eq!(t.data[(1 * 3 + 2) * 4 + 3].to_i64(), 7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_shape() {
+        Tensor::from_vec(&[2, 2], vec![Fp::ZERO; 3]);
+    }
+}

@@ -1,0 +1,59 @@
+//! VGG-16 spec (Simonyan & Zisserman), CIFAR/Tiny adaptation with two
+//! 4096-wide FC layers — ReLU counts match Table 1:
+//! 284.7 K at 32×32, 1114.1 K at 64×64.
+
+use super::graph::{LayerSpec, NetworkSpec};
+
+const CFG: [&[usize]; 5] =
+    [&[64, 64], &[128, 128], &[256, 256, 256], &[512, 512, 512], &[512, 512, 512]];
+
+/// VGG-16 at input size `hw` (32 for CIFAR, 64 for Tiny).
+pub fn vgg16(hw: usize, classes: usize) -> NetworkSpec {
+    let mut layers = Vec::new();
+    let mut in_c = 3;
+    let mut cur = hw;
+    for block in CFG {
+        for &c in block {
+            layers.push(LayerSpec::Conv {
+                in_c,
+                in_h: cur,
+                in_w: cur,
+                out_c: c,
+                k: 3,
+                stride: 1,
+                pad: 1,
+            });
+            layers.push(LayerSpec::Relu { n: c * cur * cur });
+            in_c = c;
+        }
+        layers.push(LayerSpec::Pool2 { c: in_c, h: cur, w: cur });
+        cur /= 2;
+    }
+    let flat = in_c * cur * cur;
+    layers.push(LayerSpec::Dense { in_dim: flat, out_dim: 4096 });
+    layers.push(LayerSpec::Relu { n: 4096 });
+    layers.push(LayerSpec::Dense { in_dim: 4096, out_dim: 4096 });
+    layers.push(LayerSpec::Relu { n: 4096 });
+    layers.push(LayerSpec::Dense { in_dim: 4096, out_dim: classes });
+    NetworkSpec { name: format!("VGG16-{hw}"), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cifar_relu_count_matches_table1() {
+        assert_eq!(vgg16(32, 10).total_relus(), 284_672); // 284.7K
+    }
+
+    #[test]
+    fn tiny_relu_count_matches_table1() {
+        assert_eq!(vgg16(64, 200).total_relus(), 1_114_112); // 1114.1K
+    }
+
+    #[test]
+    fn thirteen_conv_plus_two_fc_relus() {
+        assert_eq!(vgg16(32, 10).relu_layer_sizes().len(), 15);
+    }
+}

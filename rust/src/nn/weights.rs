@@ -1,0 +1,278 @@
+//! Loading build-time artifacts: trained demo-model weights and the
+//! synthetic evaluation dataset.
+//!
+//! `python/compile/train.py` trains the demo CNN/MLP at artifact-build
+//! time and `aot.py` dumps:
+//!
+//! * `weights.bin` — magic `CIRCAW01`, then per layer: kind, dims,
+//!   quantized int32 weights/bias, rescale bits (see [`load_weights`]);
+//! * `dataset.bin` — magic `CIRCAD01`, flattened quantized images +
+//!   labels (see [`load_dataset`]).
+//!
+//! Both use the little-endian framing of [`crate::util::bytes`] —
+//! `serde` is not in the offline vendor set.
+
+use crate::field::Fp;
+use crate::nn::layers::{Conv2d, Dense};
+use crate::protocol::linear::LinearOp;
+use crate::util::bytes::Reader;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// One loaded (quantized) layer with its post-layer rescale.
+pub struct LoadedLayer {
+    pub op: Arc<dyn LinearOp>,
+    pub rescale_bits: u32,
+    pub macs: u64,
+    /// Raw quantized tensors + dims as stored on disk — kept so the PJRT
+    /// runtime can feed them back as HLO parameters in ABI order.
+    pub w_raw: Vec<i32>,
+    pub b_raw: Vec<i32>,
+    pub w_dims: Vec<i64>,
+    pub b_dims: Vec<i64>,
+}
+
+/// A loaded network: alternating linear/ReLU with final linear.
+pub struct LoadedNet {
+    pub name: String,
+    pub layers: Vec<LoadedLayer>,
+}
+
+impl LoadedNet {
+    /// Exact plaintext forward pass (quantized arithmetic, exact ReLU) —
+    /// the accuracy baseline the stochastic variants are compared to.
+    pub fn forward_exact(&self, input: &[Fp]) -> Vec<Fp> {
+        let mut y = input.to_vec();
+        for (i, layer) in self.layers.iter().enumerate() {
+            y = layer.op.apply(&y);
+            if i + 1 < self.layers.len() {
+                y = crate::nn::layers::relu_vec(&y);
+                y = crate::nn::layers::rescale_vec(&y, layer.rescale_bits);
+            }
+        }
+        y
+    }
+
+    /// The linear ops + rescales as a protocol [`NetworkPlan`]
+    /// ingredient.
+    pub fn linears(&self) -> Vec<Arc<dyn LinearOp>> {
+        self.layers.iter().map(|l| l.op.clone()).collect()
+    }
+
+    pub fn rescale_bits(&self) -> Vec<u32> {
+        // One entry per ReLU layer = all but the last linear.
+        self.layers[..self.layers.len() - 1].iter().map(|l| l.rescale_bits).collect()
+    }
+
+    pub fn total_relus(&self) -> u64 {
+        self.layers[..self.layers.len() - 1].iter().map(|l| l.op.out_dim() as u64).sum()
+    }
+}
+
+fn fp_from_i32(v: i32) -> Fp {
+    Fp::from_i64(v as i64)
+}
+
+/// Load `weights.bin`.
+pub fn load_weights(path: &Path) -> Result<LoadedNet> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut r = Reader::new(&raw);
+    let magic = r.take(8)?;
+    if magic != b"CIRCAW01" {
+        bail!("bad weights magic {:?}", magic);
+    }
+    let name = r.string()?;
+    let n_layers = r.u32()? as usize;
+    let mut layers = Vec::with_capacity(n_layers);
+    for li in 0..n_layers {
+        let kind = r.u8()?;
+        match kind {
+            0 => {
+                let in_c = r.u32()? as usize;
+                let in_h = r.u32()? as usize;
+                let in_w = r.u32()? as usize;
+                let out_c = r.u32()? as usize;
+                let k = r.u32()? as usize;
+                let stride = r.u32()? as usize;
+                let pad = r.u32()? as usize;
+                let w_raw = r.i32_vec()?;
+                let b_raw = r.i32_vec()?;
+                let rescale_bits = r.u32()?;
+                if w_raw.len() != out_c * in_c * k * k {
+                    bail!("layer {li}: conv weight size mismatch");
+                }
+                let weight: Vec<Fp> = w_raw.iter().map(|&v| fp_from_i32(v)).collect();
+                let bias: Vec<Fp> = b_raw.iter().map(|&v| fp_from_i32(v)).collect();
+                let conv = Conv2d { in_c, in_h, in_w, out_c, k, stride, pad, weight, bias };
+                let macs = conv.macs();
+                layers.push(LoadedLayer {
+                    op: Arc::new(conv),
+                    rescale_bits,
+                    macs,
+                    w_dims: vec![out_c as i64, in_c as i64, k as i64, k as i64],
+                    b_dims: vec![out_c as i64],
+                    w_raw,
+                    b_raw,
+                });
+            }
+            1 => {
+                let in_dim = r.u32()? as usize;
+                let out_dim = r.u32()? as usize;
+                let w_raw = r.i32_vec()?;
+                let b_raw = r.i32_vec()?;
+                let rescale_bits = r.u32()?;
+                if w_raw.len() != in_dim * out_dim {
+                    bail!("layer {li}: dense weight size mismatch");
+                }
+                let weight: Vec<Fp> = w_raw.iter().map(|&v| fp_from_i32(v)).collect();
+                let bias: Vec<Fp> = b_raw.iter().map(|&v| fp_from_i32(v)).collect();
+                let dense = Dense { in_dim, out_dim, weight, bias };
+                let macs = dense.macs();
+                layers.push(LoadedLayer {
+                    op: Arc::new(dense),
+                    rescale_bits,
+                    macs,
+                    w_dims: vec![out_dim as i64, in_dim as i64],
+                    b_dims: vec![out_dim as i64],
+                    w_raw,
+                    b_raw,
+                });
+            }
+            other => bail!("layer {li}: unknown kind {other}"),
+        }
+    }
+    Ok(LoadedNet { name, layers })
+}
+
+/// The evaluation dataset: quantized flattened images + labels.
+pub struct Dataset {
+    pub n: usize,
+    pub dim: usize,
+    pub n_classes: usize,
+    /// Row-major `n × dim` quantized field elements.
+    pub images: Vec<Fp>,
+    pub labels: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn image(&self, i: usize) -> &[Fp] {
+        &self.images[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+/// Load `dataset.bin`.
+pub fn load_dataset(path: &Path) -> Result<Dataset> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut r = Reader::new(&raw);
+    let magic = r.take(8)?;
+    if magic != b"CIRCAD01" {
+        bail!("bad dataset magic {:?}", magic);
+    }
+    let n = r.u32()? as usize;
+    let dim = r.u32()? as usize;
+    let n_classes = r.u32()? as usize;
+    let images_raw = r.i32_vec()?;
+    if images_raw.len() != n * dim {
+        bail!("dataset image block size mismatch");
+    }
+    let images = images_raw.into_iter().map(fp_from_i32).collect();
+    let labels: Vec<u32> = (0..n).map(|_| r.u32()).collect::<Result<_>>()?;
+    Ok(Dataset { n, dim, n_classes, images, labels })
+}
+
+/// Classification accuracy of logits against labels.
+pub fn accuracy(logits: &[Vec<Fp>], labels: &[u32]) -> f64 {
+    let correct = logits
+        .iter()
+        .zip(labels)
+        .filter(|(l, &y)| {
+            let pred = l
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, v)| v.to_i64())
+                .map(|(i, _)| i as u32)
+                .unwrap();
+            pred == y
+        })
+        .count();
+    correct as f64 / labels.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::Writer;
+
+    fn write_tiny_weights() -> Vec<u8> {
+        let mut w = Writer::new();
+        w.buf.extend_from_slice(b"CIRCAW01");
+        w.string("tiny");
+        w.u32(2);
+        // conv 1->2, 4x4, k3 s1 p1
+        w.u8(0);
+        for v in [1u32, 4, 4, 2, 3, 1, 1] {
+            w.u32(v);
+        }
+        w.i32_vec(&vec![1; 2 * 1 * 3 * 3]);
+        w.i32_vec(&[0, 0]);
+        w.u32(2);
+        // dense 32 -> 3
+        w.u8(1);
+        w.u32(32);
+        w.u32(3);
+        w.i32_vec(&vec![1; 96]);
+        w.i32_vec(&[0, 0, 0]);
+        w.u32(0);
+        w.buf
+    }
+
+    #[test]
+    fn weights_roundtrip() {
+        let dir = std::env::temp_dir().join("circa_test_weights.bin");
+        std::fs::write(&dir, write_tiny_weights()).unwrap();
+        let net = load_weights(&dir).unwrap();
+        assert_eq!(net.name, "tiny");
+        assert_eq!(net.layers.len(), 2);
+        assert_eq!(net.layers[0].op.out_dim(), 32);
+        assert_eq!(net.rescale_bits(), vec![2]);
+        assert_eq!(net.total_relus(), 32);
+        let out = net.forward_exact(&vec![Fp::from_i64(4); 16]);
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("circa_test_badmagic.bin");
+        std::fs::write(&dir, b"NOTMAGIC").unwrap();
+        assert!(load_weights(&dir).is_err());
+    }
+
+    #[test]
+    fn dataset_roundtrip() {
+        let mut w = Writer::new();
+        w.buf.extend_from_slice(b"CIRCAD01");
+        w.u32(2); // n
+        w.u32(4); // dim
+        w.u32(3); // classes
+        w.i32_vec(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        w.u32(0);
+        w.u32(2);
+        let path = std::env::temp_dir().join("circa_test_dataset.bin");
+        std::fs::write(&path, &w.buf).unwrap();
+        let ds = load_dataset(&path).unwrap();
+        assert_eq!(ds.n, 2);
+        assert_eq!(ds.image(1).iter().map(|v| v.to_i64()).collect::<Vec<_>>(), vec![5, 6, 7, 8]);
+        assert_eq!(ds.labels, vec![0, 2]);
+    }
+
+    #[test]
+    fn accuracy_computation() {
+        let logits = vec![
+            vec![Fp::from_i64(10), Fp::from_i64(5)],  // pred 0
+            vec![Fp::from_i64(-3), Fp::from_i64(2)],  // pred 1
+            vec![Fp::from_i64(7), Fp::from_i64(-1)],  // pred 0
+        ];
+        assert!((accuracy(&logits, &[0, 1, 1]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,81 @@
+//! Oblivious transfer for client input-label delivery.
+//!
+//! In Delphi/Circa the client's GC inputs are all known **offline**
+//! (`⟨x⟩_c = W·r − s` comes out of the HE precomputation; `r`, `−r`,
+//! `1−r` are client-chosen), so the label OTs run entirely in the offline
+//! phase and never touch online latency.
+//!
+//! **Substitution (see DESIGN.md §5):** a real deployment would run
+//! IKNP-style OT extension. Both parties live in this process, so we use a
+//! *dealer-assisted* OT that is correct-by-construction and charges the
+//! OT-extension asymptote — 2 label-sized ciphertexts per selection bit —
+//! to the offline byte ledger. The online protocol is unaffected: every
+//! byte and every hash on the request path is real.
+
+pub mod iknp;
+
+use crate::gc::garble::InputEncoding;
+use crate::prf::Label;
+
+/// Bytes a 1-of-2 OT of one label costs under OT extension (two masked
+/// labels on the wire).
+pub const OT_BYTES_PER_BIT: usize = 32;
+
+/// Result of a batch of OTs: the chooser's labels plus the bytes the
+/// exchange would have cost on the wire.
+#[derive(Debug, Clone)]
+pub struct OtBatch {
+    pub labels: Vec<Label>,
+    pub bytes_on_wire: usize,
+}
+
+/// Dealer-assisted batch OT: for each selection bit `b_i` the chooser
+/// receives `enc.encode(base + i, b_i)` and learns nothing about the
+/// other label; the sender learns nothing about `b_i`.
+///
+/// `base` is the first input index of the chooser's contiguous input
+/// block within the circuit's input layout.
+pub fn ot_choose(enc: &InputEncoding, base: usize, bits: &[bool]) -> OtBatch {
+    let labels = bits.iter().enumerate().map(|(i, &b)| enc.encode(base + i, b)).collect();
+    OtBatch { labels, bytes_on_wire: bits.len() * OT_BYTES_PER_BIT }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gc::build::Builder;
+    use crate::gc::garble::garble;
+    use crate::util::Rng;
+
+    #[test]
+    fn chooser_gets_correct_labels() {
+        let mut bld = Builder::new();
+        let a = bld.input_bus(8);
+        let b = bld.input_bus(8);
+        let (s, _) = bld.add(&a, &b);
+        bld.output_bus(&s);
+        let c = bld.build();
+        let mut rng = Rng::new(1);
+        let (_, enc) = garble(&c, &mut rng);
+        let bits = vec![true, false, true, true, false, false, true, false];
+        let batch = ot_choose(&enc, 8, &bits); // choose the b-bus block
+        for (i, &bit) in bits.iter().enumerate() {
+            assert_eq!(batch.labels[i], enc.encode(8 + i, bit));
+        }
+        assert_eq!(batch.bytes_on_wire, 8 * OT_BYTES_PER_BIT);
+    }
+
+    #[test]
+    fn labels_differ_between_choices() {
+        let mut bld = Builder::new();
+        let _ = bld.input();
+        let a = bld.input();
+        bld.output(a);
+        let c = bld.build();
+        let mut rng = Rng::new(2);
+        let (_, enc) = garble(&c, &mut rng);
+        let l0 = ot_choose(&enc, 1, &[false]).labels[0];
+        let l1 = ot_choose(&enc, 1, &[true]).labels[0];
+        assert_ne!(l0, l1);
+    }
+}

@@ -1,0 +1,258 @@
+//! Wire labels and the garbling PRF.
+//!
+//! Labels are 128-bit values; the lowest bit is the *point-and-permute*
+//! color bit. The garbling hash is the standard fixed-key-AES
+//! construction `H(L, t) = AES_k(2L ⊕ t) ⊕ (2L ⊕ t)` (Bellare et al.,
+//! "Efficient Garbling from a Fixed-Key Blockcipher"), which is what
+//! half-gates assumes for its security proof.
+
+use aes::cipher::{BlockEncrypt, KeyInit};
+use aes::Aes128;
+use crate::util::Rng;
+
+/// A 128-bit wire label.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Label(pub u128);
+
+impl std::fmt::Debug for Label {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Label({:032x})", self.0)
+    }
+}
+
+impl Label {
+    pub const ZERO: Label = Label(0);
+
+    /// Random label.
+    pub fn random(rng: &mut Rng) -> Label {
+        Label(rng.next_u128())
+    }
+
+    /// The point-and-permute color bit (LSB).
+    #[inline]
+    pub fn color(self) -> bool {
+        self.0 & 1 == 1
+    }
+
+    /// XOR (free-XOR group operation).
+    #[inline]
+    pub fn xor(self, other: Label) -> Label {
+        Label(self.0 ^ other.0)
+    }
+
+    /// Doubling in GF(2^128) (the `2L` in the fixed-key hash); standard
+    /// carry-less shift with the GCM reduction polynomial.
+    #[inline]
+    pub fn double(self) -> Label {
+        let carry = self.0 >> 127;
+        let mut v = self.0 << 1;
+        if carry == 1 {
+            v ^= 0x87; // x^128 = x^7 + x^2 + x + 1
+        }
+        Label(v)
+    }
+
+    pub fn to_bytes(self) -> [u8; 16] {
+        self.0.to_le_bytes()
+    }
+
+    pub fn from_bytes(b: [u8; 16]) -> Label {
+        Label(u128::from_le_bytes(b))
+    }
+}
+
+impl std::ops::BitXor for Label {
+    type Output = Label;
+    fn bitxor(self, rhs: Label) -> Label {
+        self.xor(rhs)
+    }
+}
+
+/// The global free-XOR offset Δ. Its color bit is forced to 1 so that the
+/// two labels of every wire have opposite colors.
+#[derive(Clone, Copy, Debug)]
+pub struct Delta(pub Label);
+
+impl Delta {
+    pub fn random(rng: &mut Rng) -> Delta {
+        Delta(Label(rng.next_u128() | 1))
+    }
+}
+
+/// Fixed-key AES hasher used by the garbler and evaluator.
+///
+/// One instance is created per garbling session; the key is public (the
+/// security comes from the random labels, per the fixed-key model).
+pub struct GarbleHash {
+    cipher: Aes128,
+}
+
+impl GarbleHash {
+    /// Process-wide shared instance — the key is a public constant, so
+    /// one AES key schedule serves every garble/evaluate call (§Perf
+    /// iteration 1: removes a per-circuit `Aes128::new`).
+    pub fn shared() -> &'static GarbleHash {
+        static SHARED: std::sync::OnceLock<GarbleHash> = std::sync::OnceLock::new();
+        SHARED.get_or_init(GarbleHash::new)
+    }
+
+    /// Standard instantiation with a fixed public key.
+    pub fn new() -> Self {
+        // Any fixed constant works in the fixed-key model.
+        let key = [
+            0x43, 0x49, 0x52, 0x43, 0x41, 0x2d, 0x50, 0x49, // "CIRCA-PI"
+            0x67, 0x61, 0x72, 0x62, 0x6c, 0x65, 0x30, 0x31, // "garble01"
+        ];
+        Self { cipher: Aes128::new(&key.into()) }
+    }
+
+    /// `H(L, tweak) = AES(2L ⊕ tweak) ⊕ (2L ⊕ tweak)`.
+    #[inline]
+    pub fn hash(&self, label: Label, tweak: u64) -> Label {
+        let x = label.double().0 ^ (tweak as u128);
+        let mut block = x.to_le_bytes().into();
+        self.cipher.encrypt_block(&mut block);
+        let y = u128::from_le_bytes(block.into());
+        Label(y ^ x)
+    }
+
+    /// Hash four labels with explicit tweaks in one call; lets the AES
+    /// backend pipeline blocks (hot path of garbling: the four hashes of
+    /// one half-gates AND gate).
+    #[inline]
+    pub fn hash4(&self, labels: [Label; 4], tweaks: [u64; 4]) -> [Label; 4] {
+        use aes::cipher::generic_array::GenericArray;
+        let xs: [u128; 4] = [
+            labels[0].double().0 ^ (tweaks[0] as u128),
+            labels[1].double().0 ^ (tweaks[1] as u128),
+            labels[2].double().0 ^ (tweaks[2] as u128),
+            labels[3].double().0 ^ (tweaks[3] as u128),
+        ];
+        let mut blocks = [
+            GenericArray::clone_from_slice(&xs[0].to_le_bytes()),
+            GenericArray::clone_from_slice(&xs[1].to_le_bytes()),
+            GenericArray::clone_from_slice(&xs[2].to_le_bytes()),
+            GenericArray::clone_from_slice(&xs[3].to_le_bytes()),
+        ];
+        self.cipher.encrypt_blocks(&mut blocks);
+        let mut out = [Label::ZERO; 4];
+        for i in 0..4 {
+            let mut b = [0u8; 16];
+            b.copy_from_slice(&blocks[i]);
+            out[i] = Label(u128::from_le_bytes(b) ^ xs[i]);
+        }
+        out
+    }
+
+    /// Hash two labels in one call (the two hashes of one AND-gate
+    /// evaluation).
+    #[inline]
+    pub fn hash2(&self, l0: Label, t0: u64, l1: Label, t1: u64) -> [Label; 2] {
+        use aes::cipher::generic_array::GenericArray;
+        let x0 = l0.double().0 ^ (t0 as u128);
+        let x1 = l1.double().0 ^ (t1 as u128);
+        let mut blocks = [
+            GenericArray::clone_from_slice(&x0.to_le_bytes()),
+            GenericArray::clone_from_slice(&x1.to_le_bytes()),
+        ];
+        self.cipher.encrypt_blocks(&mut blocks);
+        let mut b0 = [0u8; 16];
+        b0.copy_from_slice(&blocks[0]);
+        let mut b1 = [0u8; 16];
+        b1.copy_from_slice(&blocks[1]);
+        [
+            Label(u128::from_le_bytes(b0) ^ x0),
+            Label(u128::from_le_bytes(b1) ^ x1),
+        ]
+    }
+}
+
+impl Default for GarbleHash {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_xor_group() {
+        let mut rng = Rng::new(1);
+        let a = Label::random(&mut rng);
+        let b = Label::random(&mut rng);
+        assert_eq!(a ^ b ^ b, a);
+        assert_eq!(a ^ Label::ZERO, a);
+    }
+
+    #[test]
+    fn delta_color_is_one() {
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let d = Delta::random(&mut rng);
+            assert!(d.0.color());
+        }
+    }
+
+    #[test]
+    fn opposite_colors_under_delta() {
+        let mut rng = Rng::new(3);
+        let d = Delta::random(&mut rng);
+        for _ in 0..100 {
+            let l0 = Label::random(&mut rng);
+            let l1 = l0 ^ d.0;
+            assert_ne!(l0.color(), l1.color());
+        }
+    }
+
+    #[test]
+    fn hash_deterministic_and_tweak_sensitive() {
+        let h = GarbleHash::new();
+        let l = Label(0x1234_5678_9abc_def0_1111_2222_3333_4444);
+        assert_eq!(h.hash(l, 7), h.hash(l, 7));
+        assert_ne!(h.hash(l, 7), h.hash(l, 8));
+        assert_ne!(h.hash(l, 7), h.hash(Label(l.0 ^ 1), 7));
+    }
+
+    #[test]
+    fn hash4_matches_hash() {
+        let h = GarbleHash::new();
+        let mut rng = Rng::new(4);
+        let ls = [
+            Label::random(&mut rng),
+            Label::random(&mut rng),
+            Label::random(&mut rng),
+            Label::random(&mut rng),
+        ];
+        let batch = h.hash4(ls, [100, 101, 102, 103]);
+        for i in 0..4 {
+            assert_eq!(batch[i], h.hash(ls[i], 100 + i as u64));
+        }
+    }
+
+    #[test]
+    fn double_is_linear_shift() {
+        // Doubling twice == shifting twice with reduction; spot-check
+        // against a known small value.
+        let l = Label(1u128 << 126);
+        let d = l.double(); // 1<<127
+        assert_eq!(d.0, 1u128 << 127);
+        let dd = d.double(); // overflow -> 0x87
+        assert_eq!(dd.0, 0x87);
+    }
+
+    #[test]
+    fn hash_output_bits_balanced() {
+        let h = GarbleHash::new();
+        let mut rng = Rng::new(5);
+        let mut ones = 0u32;
+        let n = 200;
+        for _ in 0..n {
+            let out = h.hash(Label::random(&mut rng), 1);
+            ones += out.0.count_ones();
+        }
+        let frac = ones as f64 / (n as f64 * 128.0);
+        assert!((frac - 0.5).abs() < 0.03, "biased hash output: {frac}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Byte-accounted duplex channels between the two parties.
+//!
+//! Both parties live in-process (DESIGN.md §5), so the "wire" is an mpsc
+//! queue; what the experiments need from it is the *byte ledger* — every
+//! message records its serialized size so benches report communication
+//! exactly as a 2-machine deployment would see it.
+
+use super::messages::Message;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel as mpsc_channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Shared byte counters for one direction of a duplex link.
+#[derive(Debug, Default)]
+pub struct ByteLedger {
+    pub to_server: AtomicU64,
+    pub to_client: AtomicU64,
+}
+
+impl ByteLedger {
+    pub fn total(&self) -> u64 {
+        self.to_server.load(Ordering::Relaxed) + self.to_client.load(Ordering::Relaxed)
+    }
+}
+
+/// One party's endpoint of the duplex channel.
+pub struct Channel {
+    tx: Sender<Message>,
+    rx: Receiver<Message>,
+    ledger: Arc<ByteLedger>,
+    /// True if this endpoint belongs to the client party.
+    is_client: bool,
+}
+
+impl Channel {
+    /// Create a connected (client, server) endpoint pair.
+    pub fn pair() -> (Channel, Channel) {
+        let (tx_cs, rx_cs) = mpsc_channel(); // client -> server
+        let (tx_sc, rx_sc) = mpsc_channel(); // server -> client
+        let ledger = Arc::new(ByteLedger::default());
+        let client = Channel { tx: tx_cs, rx: rx_sc, ledger: ledger.clone(), is_client: true };
+        let server = Channel { tx: tx_sc, rx: rx_cs, ledger, is_client: false };
+        (client, server)
+    }
+
+    /// Send a message, charging its serialized size to the ledger.
+    pub fn send(&self, msg: Message) {
+        let bytes = msg.wire_bytes() as u64;
+        if self.is_client {
+            self.ledger.to_server.fetch_add(bytes, Ordering::Relaxed);
+        } else {
+            self.ledger.to_client.fetch_add(bytes, Ordering::Relaxed);
+        }
+        // Receiver dropped means the peer finished/aborted; that's only
+        // reachable in tests that drop one endpoint early.
+        let _ = self.tx.send(msg);
+    }
+
+    /// Blocking receive.
+    pub fn recv(&self) -> Message {
+        self.rx.recv().expect("peer hung up")
+    }
+
+    /// Total bytes seen in both directions.
+    pub fn bytes_total(&self) -> u64 {
+        self.ledger.total()
+    }
+
+    pub fn bytes_to_server(&self) -> u64 {
+        self.ledger.to_server.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes_to_client(&self) -> u64 {
+        self.ledger.to_client.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::Fp;
+
+    #[test]
+    fn ping_pong_and_ledger() {
+        let (c, s) = Channel::pair();
+        c.send(Message::FieldVec(vec![Fp::ONE; 10]));
+        match s.recv() {
+            Message::FieldVec(v) => assert_eq!(v.len(), 10),
+            other => panic!("unexpected {other:?}"),
+        }
+        s.send(Message::Colors(vec![true; 8]));
+        match c.recv() {
+            Message::Colors(v) => assert_eq!(v.len(), 8),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(c.bytes_to_server(), 10 * 4);
+        assert_eq!(c.bytes_to_client(), 1);
+        assert_eq!(s.bytes_total(), 41);
+    }
+
+    #[test]
+    fn works_across_threads() {
+        let (c, s) = Channel::pair();
+        let h = std::thread::spawn(move || {
+            let m = s.recv();
+            s.send(m);
+        });
+        c.send(Message::FieldVec(vec![Fp::from_i64(7)]));
+        match c.recv() {
+            Message::FieldVec(v) => assert_eq!(v[0].to_i64(), 7),
+            other => panic!("unexpected {other:?}"),
+        }
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,168 @@
+//! Linear-layer protocol (Delphi §2.3, reused verbatim by Circa).
+//!
+//! Offline: the client holds mask `r` for the layer input and obtains
+//! `W·r − s` without the server learning `r` (HE in the paper — here an
+//! HE-*simulated* dealer with an attached cost model, see DESIGN.md §5).
+//! Online: the server computes `W·(y − r) + s` on its share — one
+//! plaintext-speed linear application — after which the parties hold
+//! additive shares of `x = W·y`.
+
+use crate::field::Fp;
+use crate::ss::Share;
+use crate::util::Rng;
+
+/// A plaintext-linear operation over field vectors (dense layer, conv,
+/// average-pool…). Implemented by [`crate::nn`] layers.
+pub trait LinearOp: Send + Sync {
+    fn in_dim(&self) -> usize;
+    fn out_dim(&self) -> usize;
+    /// Apply to a full vector, *including* any bias term. Used on the
+    /// server's online share so the bias enters the sum exactly once.
+    fn apply(&self, input: &[Fp]) -> Vec<Fp>;
+    /// Apply WITHOUT the bias term — used on the client's offline share
+    /// (`W·r − s`); the affine part must not be double-counted across
+    /// the two shares. Default: same as `apply` (bias-free ops).
+    fn apply_no_bias(&self, input: &[Fp]) -> Vec<Fp> {
+        self.apply(input)
+    }
+}
+
+/// Dense matrix `W` (row-major `out × in`) — the reference LinearOp.
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<Fp>,
+}
+
+impl Matrix {
+    pub fn random(rows: usize, cols: usize, max_mag: i64, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols)
+            .map(|_| Fp::from_i64(rng.below(2 * max_mag as u64 + 1) as i64 - max_mag))
+            .collect();
+        Matrix { rows, cols, data }
+    }
+}
+
+impl LinearOp for Matrix {
+    fn in_dim(&self) -> usize {
+        self.cols
+    }
+
+    fn out_dim(&self) -> usize {
+        self.rows
+    }
+
+    fn apply(&self, input: &[Fp]) -> Vec<Fp> {
+        assert_eq!(input.len(), self.cols);
+        let mut out = Vec::with_capacity(self.rows);
+        for r in 0..self.rows {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            let mut acc = Fp::ZERO;
+            for (w, x) in row.iter().zip(input) {
+                acc = acc + *w * *x;
+            }
+            out.push(acc);
+        }
+        out
+    }
+}
+
+/// HE cost model for the offline linear precompute (Delphi-style packed
+/// RLWE): one ciphertext per `HE_SLOTS` values each direction, `HE_CT_BYTES`
+/// per ciphertext. Only bytes are modeled — the offline phase is not on
+/// the latency path this repo measures.
+pub const HE_SLOTS: usize = 4096;
+pub const HE_CT_BYTES: usize = 1 << 17; // 128 KiB per ciphertext (n=4096, 2 moduli)
+
+/// Result of the offline linear phase.
+pub struct LinearOffline {
+    /// Client's (offline-known) share of the layer output `⟨x⟩_c = W·r − s`.
+    pub client_x_share: Vec<Share>,
+    /// Server's additive blind `s`.
+    pub s: Vec<Share>,
+    /// Modeled HE traffic for this layer.
+    pub he_bytes: u64,
+}
+
+/// Run the offline linear phase for one layer with client mask `r`.
+pub fn offline_linear(op: &dyn LinearOp, r: &[Fp], rng: &mut Rng) -> LinearOffline {
+    assert_eq!(r.len(), op.in_dim());
+    let s: Vec<Fp> = (0..op.out_dim()).map(|_| crate::field::random_fp(rng)).collect();
+    let wr = op.apply_no_bias(r);
+    let client_x_share: Vec<Fp> = wr.iter().zip(&s).map(|(&a, &b)| a - b).collect();
+    let ct_in = r.len().div_ceil(HE_SLOTS);
+    let ct_out = s.len().div_ceil(HE_SLOTS);
+    LinearOffline { client_x_share, s, he_bytes: ((ct_in + ct_out) * HE_CT_BYTES) as u64 }
+}
+
+/// Online linear phase: the server applies the layer to its share of the
+/// input and adds its blind: `⟨x⟩_s = W·(y − r) + s`.
+pub fn online_linear(op: &dyn LinearOp, y_server_share: &[Fp], s: &[Fp]) -> Vec<Fp> {
+    let mut out = op.apply(y_server_share);
+    for (o, &b) in out.iter_mut().zip(s) {
+        *o = *o + b;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::random_fp;
+    use crate::ss::reconstruct_vec;
+    use crate::util::Rng;
+
+    #[test]
+    fn shares_reconstruct_to_matmul() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::random(8, 16, 100, &mut rng);
+        // True input y, client mask r.
+        let y: Vec<Fp> = (0..16).map(|_| Fp::from_i64(rng.below(2001) as i64 - 1000)).collect();
+        let r: Vec<Fp> = (0..16).map(|_| random_fp(&mut rng)).collect();
+        let off = offline_linear(&w, &r, &mut rng);
+        // Server's online input share: y − r.
+        let ys: Vec<Fp> = y.iter().zip(&r).map(|(&a, &b)| a - b).collect();
+        let server_x = online_linear(&w, &ys, &off.s);
+        let got = reconstruct_vec(&off.client_x_share, &server_x);
+        assert_eq!(got, w.apply(&y));
+    }
+
+    #[test]
+    fn client_share_is_blinded() {
+        // ⟨x⟩_c = W·r − s with uniform s must be ~uniform: check the low
+        // bit balance across repetitions.
+        let mut rng = Rng::new(2);
+        let w = Matrix::random(1, 4, 10, &mut rng);
+        let r: Vec<Fp> = (0..4).map(|_| random_fp(&mut rng)).collect();
+        let mut low = 0;
+        let n = 2000;
+        for _ in 0..n {
+            let off = offline_linear(&w, &r, &mut rng);
+            if off.client_x_share[0].raw() % 2 == 0 {
+                low += 1;
+            }
+        }
+        let frac = low as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.05, "biased: {frac}");
+    }
+
+    #[test]
+    fn he_bytes_scale_with_dims() {
+        let mut rng = Rng::new(3);
+        let small = Matrix::random(4, 4, 10, &mut rng);
+        let big = Matrix::random(4096, 8192, 10, &mut rng);
+        let r_small: Vec<Fp> = (0..4).map(|_| random_fp(&mut rng)).collect();
+        let r_big: Vec<Fp> = (0..8192).map(|_| random_fp(&mut rng)).collect();
+        let off_small = offline_linear(&small, &r_small, &mut rng);
+        let off_big = offline_linear(&big, &r_big, &mut rng);
+        assert!(off_big.he_bytes > off_small.he_bytes);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dimension_mismatch_panics() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::random(2, 3, 10, &mut rng);
+        w.apply(&[Fp::ZERO; 5]);
+    }
+}

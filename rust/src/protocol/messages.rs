@@ -1,0 +1,76 @@
+//! Wire messages between the two parties, with exact size accounting.
+//!
+//! Serialization is structural (the parties share an address space), but
+//! [`Message::wire_bytes`] reports what each message would cost on a real
+//! wire so the byte ledger matches a 2-machine deployment.
+
+use crate::field::Fp;
+use crate::prf::Label;
+
+/// Messages exchanged during the online phase.
+#[derive(Debug, Clone)]
+pub enum Message {
+    /// Wire labels (16 B each): the server's input labels for a GC batch.
+    Labels(Vec<Label>),
+    /// Point-and-permute colors of output labels (1 bit each, byte-packed
+    /// on the wire; we charge ceil(n/8)).
+    Colors(Vec<bool>),
+    /// Field elements (4 B each on a 31-bit field): shares, Beaver
+    /// openings, resharing deltas.
+    FieldVec(Vec<Fp>),
+    /// Raw bytes (already-serialized payloads, e.g. garbled tables in the
+    /// offline phase).
+    Bytes(Vec<u8>),
+}
+
+impl Message {
+    /// Serialized size on the wire.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Message::Labels(v) => v.len() * 16,
+            Message::Colors(v) => v.len().div_ceil(8),
+            Message::FieldVec(v) => v.len() * 4,
+            Message::Bytes(v) => v.len(),
+        }
+    }
+
+    pub fn into_labels(self) -> Vec<Label> {
+        match self {
+            Message::Labels(v) => v,
+            other => panic!("expected Labels, got {other:?}"),
+        }
+    }
+
+    pub fn into_colors(self) -> Vec<bool> {
+        match self {
+            Message::Colors(v) => v,
+            other => panic!("expected Colors, got {other:?}"),
+        }
+    }
+
+    pub fn into_fields(self) -> Vec<Fp> {
+        match self {
+            Message::FieldVec(v) => v,
+            other => panic!("expected FieldVec, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_sizes() {
+        assert_eq!(Message::Labels(vec![Label::ZERO; 31]).wire_bytes(), 496);
+        assert_eq!(Message::Colors(vec![false; 31]).wire_bytes(), 4);
+        assert_eq!(Message::FieldVec(vec![Fp::ZERO; 3]).wire_bytes(), 12);
+        assert_eq!(Message::Bytes(vec![0; 100]).wire_bytes(), 100);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_variant_panics() {
+        Message::Colors(vec![]).into_labels();
+    }
+}

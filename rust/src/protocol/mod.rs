@@ -1,0 +1,26 @@
+//! The Delphi-style two-party PI protocol with Circa's ReLU variants.
+//!
+//! A network inference alternates linear layers (additive secret sharing,
+//! [`linear`]) and ReLU layers (garbled circuits + Beaver triples,
+//! [`online`]). Everything input-independent happens in [`offline`]:
+//! client randomness, the HE-simulated `W·r − s` precomputation, circuit
+//! garbling, input-label OTs, and triple generation. The online phase —
+//! the paper's headline metric — moves only what it must: the server's
+//! input labels, the GC evaluation, output colors, and (for Circa
+//! variants) one Beaver round plus a resharing element.
+//!
+//! [`channel`] gives byte-accounted duplex pipes so every experiment can
+//! report communication alongside latency; [`client`]/[`server`] wrap the
+//! per-party state machines used by the serving coordinator.
+
+pub mod channel;
+pub mod client;
+pub mod linear;
+pub mod messages;
+pub mod offline;
+pub mod online;
+pub mod server;
+
+pub use channel::Channel;
+pub use offline::{offline_relu_layer, ClientReluMaterial, ServerReluMaterial};
+pub use online::{online_relu_layer, OnlineReluStats};

@@ -1,0 +1,276 @@
+//! Online phase for one ReLU layer — the paper's headline cost.
+//!
+//! Message flow per layer (n ReLUs, batched into single messages):
+//!
+//! ```text
+//! server → client : n·(m−k) input labels for ⟨x⟩_s        (16 B each)
+//! client          : evaluates n garbled circuits           (the hot loop)
+//! client → server : n·m output colors                      (1 bit each)
+//! — Circa variants additionally —
+//! both   ⇄ both   : Beaver openings (2 field elems each way per ReLU)
+//! client → server : resharing delta (1 field elem per ReLU)
+//! ```
+//!
+//! The baseline (Fig. 2a) skips the Beaver round entirely — its GC already
+//! outputs the masked ReLU — but pays ~5× more AND gates per evaluation.
+
+use super::offline::{server_input_base, ClientReluMaterial, ServerReluMaterial};
+use crate::beaver;
+use crate::circuits::spec::{bits_fp, ReluVariant};
+use crate::circuits::stoch_sign_gc;
+use crate::field::{FIELD_BITS, Fp};
+use crate::gc::build::u64_to_bits;
+
+use crate::prf::Label;
+use crate::util::Timer;
+
+/// Measurements from one online ReLU layer execution.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OnlineReluStats {
+    /// Wall time of the whole online exchange (both parties' compute).
+    pub wall_s: f64,
+    /// Bytes server → client (labels).
+    pub bytes_to_client: u64,
+    /// Bytes client → server (colors, openings, deltas).
+    pub bytes_to_server: u64,
+    /// Communication rounds.
+    pub rounds: u32,
+}
+
+impl OnlineReluStats {
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_to_client + self.bytes_to_server
+    }
+}
+
+/// The server's per-ReLU online label encoding of its share.
+fn server_labels(
+    variant: ReluVariant,
+    enc: &crate::gc::garble::InputEncoding,
+    xs: Fp,
+) -> Vec<Label> {
+    let base = server_input_base(variant);
+    let bits = match variant {
+        ReluVariant::BaselineRelu | ReluVariant::NaiveSign => {
+            u64_to_bits(xs.raw(), FIELD_BITS)
+        }
+        ReluVariant::StochasticSign { .. } => stoch_sign_gc::server_input_bits(xs, 0),
+        ReluVariant::TruncatedSign { k, .. } => stoch_sign_gc::server_input_bits(xs, k),
+    };
+    bits.iter().enumerate().map(|(i, &b)| enc.encode(base + i, b)).collect()
+}
+
+/// Run the online phase of one ReLU layer, in-process but with every
+/// message byte-accounted as if on the wire.
+///
+/// Inputs: each party's shares of `x` (from the linear layer). Outputs:
+/// each party's shares of `y = ReLU(x)` (stochastic under Circa), with
+/// the client's share equal to its pre-chosen randomness (`r_out`),
+/// ready for the next linear layer.
+pub fn online_relu_layer(
+    client: &ClientReluMaterial,
+    server: &ServerReluMaterial,
+    xc: &[Fp],
+    xs: &[Fp],
+) -> (Vec<Fp>, Vec<Fp>, OnlineReluStats) {
+    let n = xc.len();
+    assert_eq!(n, xs.len());
+    assert_eq!(n, client.gcs.len(), "offline material arity");
+    let variant = client.variant;
+    let timer = Timer::new();
+    let mut stats = OnlineReluStats::default();
+
+    // --- Round 1: server encodes + sends its input labels. ---
+    let mut all_labels: Vec<Vec<Label>> = Vec::with_capacity(n);
+    for i in 0..n {
+        all_labels.push(server_labels(variant, &server.encodings[i], xs[i]));
+    }
+    stats.bytes_to_client += all_labels.iter().map(|l| l.len() as u64 * 16).sum::<u64>();
+    stats.rounds += 1;
+
+    // --- Client: evaluate all garbled circuits, return output colors. ---
+    // Scratch buffers reused across the n circuits (§Perf iteration 3).
+    let mut colors: Vec<bool> = Vec::with_capacity(n * FIELD_BITS);
+    let mut labels: Vec<Label> = Vec::new();
+    let mut scratch: Vec<Label> = Vec::new();
+    for i in 0..n {
+        labels.clear();
+        labels.extend_from_slice(&client.client_labels[i]);
+        labels.extend_from_slice(&all_labels[i]);
+        let out =
+            crate::gc::eval::evaluate_with_scratch(&client.circuit, &client.gcs[i], &labels, &mut scratch);
+        colors.extend(out.iter().map(|l| l.color()));
+    }
+    stats.bytes_to_server += (colors.len() as u64).div_ceil(8);
+    stats.rounds += 1;
+
+    // --- Server: decode its output share from the colors. ---
+    let mut server_out: Vec<Fp> = Vec::with_capacity(n);
+    for i in 0..n {
+        let slice = &colors[i * FIELD_BITS..(i + 1) * FIELD_BITS];
+        let bits: Vec<bool> =
+            slice.iter().zip(&server.output_decode[i]).map(|(&c, &d)| c ^ d).collect();
+        server_out.push(bits_fp(&bits));
+    }
+
+    if !variant.uses_beaver() {
+        // Baseline: GC output *is* the masked ReLU share.
+        let client_out = client.r_out.clone();
+        stats.wall_s = timer.elapsed_s();
+        return (client_out, server_out, stats);
+    }
+
+    // --- Circa variants: y = x · v via one batched Beaver round. ---
+    // Client share of v is r_v; server share came out of the GC.
+    let mut open_c = Vec::with_capacity(2 * n);
+    let mut open_s = Vec::with_capacity(2 * n);
+    for i in 0..n {
+        let oc = beaver::open(xc[i], client.r_v[i], &client.triples[i]);
+        let os = beaver::open(xs[i], server_out[i], &server.triples[i]);
+        open_c.push(oc.e);
+        open_c.push(oc.f);
+        open_s.push(os.e);
+        open_s.push(os.f);
+    }
+    // Exchange openings (one round, both directions).
+    stats.bytes_to_server += open_c.len() as u64 * 4;
+    stats.bytes_to_client += open_s.len() as u64 * 4;
+    stats.rounds += 1;
+
+    let mut client_y = Vec::with_capacity(n);
+    let mut server_y = Vec::with_capacity(n);
+    for i in 0..n {
+        let e = open_c[2 * i] + open_s[2 * i];
+        let f = open_c[2 * i + 1] + open_s[2 * i + 1];
+        client_y.push(beaver::mul_share(e, f, &client.triples[i], true));
+        server_y.push(beaver::mul_share(e, f, &server.triples[i], false));
+    }
+
+    // --- Resharing: client share becomes its pre-chosen r_out. ---
+    let deltas: Vec<Fp> =
+        (0..n).map(|i| client_y[i] - client.r_out[i]).collect();
+    stats.bytes_to_server += deltas.len() as u64 * 4;
+    stats.rounds += 1;
+    for i in 0..n {
+        server_y[i] = server_y[i] + deltas[i];
+    }
+
+    stats.wall_s = timer.elapsed_s();
+    (client.r_out.clone(), server_y, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::FaultMode;
+    use crate::field::random_fp;
+    use crate::protocol::offline::{circa_variant, offline_relu_layer};
+    use crate::ss::{reconstruct_vec, SharePair};
+    use crate::util::Rng;
+
+    fn run_layer(variant: ReluVariant, xs_signed: &[i64], seed: u64) -> Vec<i64> {
+        let mut rng = Rng::new(seed);
+        let shares: Vec<SharePair> =
+            xs_signed.iter().map(|&v| SharePair::share(Fp::from_i64(v), &mut rng)).collect();
+        let xc: Vec<Fp> = shares.iter().map(|s| s.client).collect();
+        let xsrv: Vec<Fp> = shares.iter().map(|s| s.server).collect();
+        let (cm, sm) = offline_relu_layer(variant, &xc, &mut rng);
+        let (yc, ys, stats) = online_relu_layer(&cm, &sm, &xc, &xsrv);
+        assert!(stats.bytes_total() > 0);
+        reconstruct_vec(&yc, &ys).iter().map(|y| y.to_i64()).collect()
+    }
+
+    #[test]
+    fn baseline_is_exact_relu() {
+        let vals = [-1_000_000i64, -321, -1, 0, 1, 7, 55_555, 1_000_000];
+        let got = run_layer(ReluVariant::BaselineRelu, &vals, 1);
+        let want: Vec<i64> = vals.iter().map(|&v| v.max(0)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn naive_sign_is_exact_relu() {
+        let vals = [-999_999i64, -5, -1, 0, 1, 2, 123_456];
+        let got = run_layer(ReluVariant::NaiveSign, &vals, 2);
+        let want: Vec<i64> = vals.iter().map(|&v| v.max(0)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn stochastic_sign_correct_for_moderate_values() {
+        // |x| ≪ p ⇒ fault probability ~0; must match exact ReLU.
+        let vals = [-800_000i64, -1000, -1, 1, 1000, 800_000];
+        let got = run_layer(ReluVariant::StochasticSign { mode: FaultMode::PosZero }, &vals, 3);
+        let want: Vec<i64> = vals.iter().map(|&v| v.max(0)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn truncated_sign_exact_above_2k() {
+        let k = 12u32;
+        let vals = [-(1i64 << 20), -(1 << 13), 1 << 13, 1 << 20];
+        let got = run_layer(circa_variant(k), &vals, 4);
+        let want: Vec<i64> = vals.iter().map(|&v| v.max(0)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn truncated_poszero_zeroes_small_positives_probabilistically() {
+        // x = 16 with k = 12: fault prob (2^12 − 16)/2^12 ≈ 0.996 ⇒ output
+        // should be 0 almost always; run several instances.
+        let k = 12u32;
+        let vals = vec![16i64; 64];
+        let got = run_layer(circa_variant(k), &vals, 5);
+        let zeros = got.iter().filter(|&&v| v == 0).count();
+        assert!(zeros >= 60, "only {zeros}/64 zeroed");
+    }
+
+    #[test]
+    fn truncated_negpass_passes_small_negatives() {
+        // x = −16, k = 12, NegPass: output ≈ x (passed through) with
+        // prob ≈ 0.996 — i.e. y = x·1 = x, NOT zero.
+        let k = 12u32;
+        let variant = ReluVariant::TruncatedSign { k, mode: FaultMode::NegPass };
+        let vals = vec![-16i64; 64];
+        let got = run_layer(variant, &vals, 6);
+        let passed = got.iter().filter(|&&v| v == -16).count();
+        assert!(passed >= 60, "only {passed}/64 passed through");
+    }
+
+    #[test]
+    fn online_bytes_smaller_for_circa() {
+        let mut rng = Rng::new(7);
+        let vals: Vec<Fp> = (0..32).map(|_| random_fp(&mut rng)).collect();
+        let shares: Vec<SharePair> = vals.iter().map(|&v| SharePair::share(v, &mut rng)).collect();
+        let xc: Vec<Fp> = shares.iter().map(|s| s.client).collect();
+        let xs: Vec<Fp> = shares.iter().map(|s| s.server).collect();
+
+        let (cm_b, sm_b) = offline_relu_layer(ReluVariant::BaselineRelu, &xc, &mut rng);
+        let (_, _, st_b) = online_relu_layer(&cm_b, &sm_b, &xc, &xs);
+
+        let (cm_t, sm_t) = offline_relu_layer(circa_variant(12), &xc, &mut rng);
+        let (_, _, st_t) = online_relu_layer(&cm_t, &sm_t, &xc, &xs);
+
+        // Labels dominate; Circa sends m−k=19 labels vs 31 + pays small
+        // Beaver/resharing overhead. Net must still be smaller.
+        assert!(
+            st_t.bytes_total() < st_b.bytes_total(),
+            "circa {} !< baseline {}",
+            st_t.bytes_total(),
+            st_b.bytes_total()
+        );
+    }
+
+    #[test]
+    fn client_output_share_is_prechosen_randomness() {
+        // The resharing step must leave the client holding exactly r_out,
+        // which the *next* layer's offline phase assumed.
+        let mut rng = Rng::new(8);
+        let x = Fp::from_i64(424_242);
+        let sh = SharePair::share(x, &mut rng);
+        let (cm, sm) = offline_relu_layer(circa_variant(12), &[sh.client], &mut rng);
+        let (yc, ys, _) = online_relu_layer(&cm, &sm, &[sh.client], &[sh.server]);
+        assert_eq!(yc[0], cm.r_out[0]);
+        assert_eq!((yc[0] + ys[0]).to_i64(), 424_242);
+    }
+}

@@ -1,0 +1,317 @@
+//! The server party: holds the model weights, blinds, garbling secrets,
+//! and runs the online phase over a [`Channel`]. Also provides
+//! [`offline_network`] (the full-network offline phase for both parties)
+//! and [`run_inference`] (two-thread end-to-end driver used by tests,
+//! examples, and the serving coordinator).
+
+use super::channel::Channel;
+use super::client::{run_client, ClientLayer, ClientNet};
+use super::linear::{offline_linear, online_linear, LinearOp};
+use super::messages::Message;
+use super::offline::{offline_relu_layer, server_input_base, ServerReluMaterial};
+use super::online::OnlineReluStats;
+use crate::beaver;
+use crate::circuits::spec::ReluVariant;
+use crate::circuits::stoch_sign_gc;
+use crate::field::{random_fp, Fp, FIELD_BITS};
+use crate::gc::build::u64_to_bits;
+use crate::prf::Label;
+use crate::ss::Share;
+use crate::util::{Rng, Timer};
+use std::sync::Arc;
+
+/// One server-side layer.
+pub enum ServerLayer {
+    Linear { op: Arc<dyn LinearOp>, s: Vec<Share> },
+    Relu { mat: Box<ServerReluMaterial>, rescale: u32 },
+}
+
+/// The server's offline-prepared network.
+pub struct ServerNet {
+    pub layers: Vec<ServerLayer>,
+}
+
+/// Statistics of one online inference, measured server-side.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InferenceStats {
+    pub online_s: f64,
+    pub bytes_to_client: u64,
+    pub bytes_to_server: u64,
+    pub relu_stats: OnlineReluStats,
+    pub offline_bytes: u64,
+}
+
+/// A network description for the offline phase: linear ops with a ReLU
+/// between consecutive pairs (the standard CNN alternation; the last
+/// linear layer has no ReLU).
+pub struct NetworkPlan {
+    pub linears: Vec<Arc<dyn LinearOp>>,
+    pub variant: ReluVariant,
+    /// Fixed-point rescale (bits) applied to the shares of each ReLU
+    /// layer's *output* via SecureML local truncation
+    /// ([`crate::nn::layers::truncate_share_local`]). One entry per ReLU
+    /// layer (i.e. `linears.len() − 1` entries); empty = no rescaling
+    /// (unit-test nets with small magnitudes).
+    pub rescale_bits: Vec<u32>,
+}
+
+impl NetworkPlan {
+    /// Plan without fixed-point rescaling.
+    pub fn unscaled(linears: Vec<Arc<dyn LinearOp>>, variant: ReluVariant) -> Self {
+        NetworkPlan { linears, variant, rescale_bits: Vec::new() }
+    }
+
+    fn rescale_of(&self, relu_idx: usize) -> u32 {
+        self.rescale_bits.get(relu_idx).copied().unwrap_or(0)
+    }
+}
+
+/// Run the full offline phase for a network: generates client masks,
+/// HE-simulated linear precomputes, garbled circuits, OTs, and triples
+/// for every layer. Returns both parties' materials plus offline bytes.
+pub fn offline_network(plan: &NetworkPlan, rng: &mut Rng) -> (ClientNet, ServerNet, u64) {
+    let mut client_layers = Vec::new();
+    let mut server_layers = Vec::new();
+    let mut offline_bytes = 0u64;
+
+    // The client's mask for the *input* of the next linear layer.
+    let mut r: Vec<Fp> = (0..plan.linears[0].in_dim()).map(|_| random_fp(rng)).collect();
+
+    for (li, op) in plan.linears.iter().enumerate() {
+        assert_eq!(op.in_dim(), r.len(), "layer {li} dimension chain");
+        let off = offline_linear(op.as_ref(), &r, rng);
+        offline_bytes += off.he_bytes;
+        let x_share = off.client_x_share.clone();
+        client_layers.push(ClientLayer::Linear { r: r.clone(), x_share: x_share.clone() });
+        server_layers.push(ServerLayer::Linear { op: op.clone(), s: off.s });
+
+        let is_last = li + 1 == plan.linears.len();
+        if !is_last {
+            // ReLU layer: the client's x-share is offline-known, so all
+            // offline ReLU material can be prepared now.
+            let (cm, sm) = offline_relu_layer(plan.variant, &x_share, rng);
+            offline_bytes += cm.offline_bytes;
+            // The client's output share of this ReLU (r_out) becomes the
+            // mask of the next linear layer's input — after the client's
+            // half of the fixed-point rescale (SecureML local share
+            // truncation; the server truncates its own half online).
+            let rescale = plan.rescale_of(li);
+            r = cm
+                .r_out
+                .iter()
+                .map(|&y| crate::nn::layers::truncate_share_local(y, rescale, true))
+                .collect();
+            client_layers.push(ClientLayer::Relu(Box::new(cm)));
+            server_layers.push(ServerLayer::Relu { mat: Box::new(sm), rescale });
+        }
+    }
+
+    (ClientNet { layers: client_layers }, ServerNet { layers: server_layers }, offline_bytes)
+}
+
+/// Server's half of the fixed-point rescale (no-op when `bits == 0`).
+fn rescale_shares(shares: Vec<Fp>, bits: u32) -> Vec<Fp> {
+    if bits == 0 {
+        return shares;
+    }
+    shares
+        .into_iter()
+        .map(|y| crate::nn::layers::truncate_share_local(y, bits, false))
+        .collect()
+}
+
+/// The server's per-ReLU online label encoding of its share.
+pub(crate) fn server_label_batch(
+    mat: &ServerReluMaterial,
+    xs: &[Fp],
+) -> Vec<Label> {
+    let base = server_input_base(mat.variant);
+    let k = super::offline::variant_k(mat.variant);
+    let mut out = Vec::with_capacity(xs.len() * stoch_sign_gc::n_server_inputs(k));
+    for (i, &x) in xs.iter().enumerate() {
+        let bits = match mat.variant {
+            ReluVariant::BaselineRelu | ReluVariant::NaiveSign => {
+                u64_to_bits(x.raw(), FIELD_BITS)
+            }
+            ReluVariant::StochasticSign { .. } => stoch_sign_gc::server_input_bits(x, 0),
+            ReluVariant::TruncatedSign { k, .. } => stoch_sign_gc::server_input_bits(x, k),
+        };
+        let enc = &mat.encodings[i];
+        out.extend(bits.iter().enumerate().map(|(j, &b)| enc.encode(base + j, b)));
+    }
+    out
+}
+
+/// Decode the client's returned colors into the server's output shares.
+pub(crate) fn decode_colors(mat: &ServerReluMaterial, colors: &[bool]) -> Vec<Fp> {
+    let m = FIELD_BITS;
+    let n = mat.encodings.len();
+    assert_eq!(colors.len(), n * m);
+    (0..n)
+        .map(|i| {
+            let bits: Vec<bool> = colors[i * m..(i + 1) * m]
+                .iter()
+                .zip(&mat.output_decode[i])
+                .map(|(&c, &d)| c ^ d)
+                .collect();
+            crate::circuits::spec::bits_fp(&bits)
+        })
+        .collect()
+}
+
+/// Run the server's online protocol for one inference.
+pub fn run_server(net: &ServerNet, chan: &Channel) -> InferenceStats {
+    let timer = Timer::new();
+    // Round 0: receive the blinded input (the server's share of y₁).
+    let mut y_share = chan.recv().into_fields();
+
+    let mut x_share: Vec<Fp> = Vec::new();
+    for layer in &net.layers {
+        match layer {
+            ServerLayer::Linear { op, s } => {
+                x_share = online_linear(op.as_ref(), &y_share, s);
+            }
+            ServerLayer::Relu { mat, rescale } => {
+                let n = mat.encodings.len();
+                assert_eq!(x_share.len(), n);
+                // Send input labels for this batch of ReLUs.
+                chan.send(Message::Labels(server_label_batch(mat, &x_share)));
+                // Receive output colors; decode the sign/ReLU share.
+                let colors = chan.recv().into_colors();
+                let decoded = decode_colors(mat, &colors);
+
+                if !mat.variant.uses_beaver() {
+                    // Baseline: decoded IS the masked ReLU output share.
+                    y_share = rescale_shares(decoded, *rescale);
+                    continue;
+                }
+
+                // Circa: Beaver multiply y = x·v, then apply resharing Δ.
+                let client_open = chan.recv().into_fields();
+                let mut openings = Vec::with_capacity(2 * n);
+                for i in 0..n {
+                    let o = beaver::open(x_share[i], decoded[i], &mat.triples[i]);
+                    openings.push(o.e);
+                    openings.push(o.f);
+                }
+                chan.send(Message::FieldVec(openings.clone()));
+                let deltas = chan.recv().into_fields();
+                y_share = rescale_shares(
+                    (0..n)
+                        .map(|i| {
+                            let e = client_open[2 * i] + openings[2 * i];
+                            let f = client_open[2 * i + 1] + openings[2 * i + 1];
+                            beaver::mul_share(e, f, &mat.triples[i], false) + deltas[i]
+                        })
+                        .collect(),
+                    *rescale,
+                );
+            }
+        }
+    }
+
+    // Send the final linear share to the client.
+    chan.send(Message::FieldVec(x_share));
+
+    InferenceStats {
+        online_s: timer.elapsed_s(),
+        bytes_to_client: chan.bytes_to_client(),
+        bytes_to_server: chan.bytes_to_server(),
+        ..Default::default()
+    }
+}
+
+/// End-to-end driver: run one private inference across two threads.
+/// Returns the reconstructed logits (client side) and server-side stats.
+pub fn run_inference(
+    client_net: &ClientNet,
+    server_net: &ServerNet,
+    input: &[Fp],
+) -> (Vec<Fp>, InferenceStats) {
+    std::thread::scope(|scope| {
+        let (c_chan, s_chan) = Channel::pair();
+        let server_handle = scope.spawn(move || run_server(server_net, &s_chan));
+        let logits = run_client(client_net, &c_chan, input);
+        let stats = server_handle.join().expect("server thread");
+        (logits, stats)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::FaultMode;
+    use crate::protocol::linear::Matrix;
+
+    fn tiny_plan(variant: ReluVariant, rng: &mut Rng) -> NetworkPlan {
+        // 6 -> 5 -> relu -> 5 -> 4 -> relu -> 4 -> 3
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(5, 6, 20, rng)),
+            Arc::new(Matrix::random(4, 5, 20, rng)),
+            Arc::new(Matrix::random(3, 4, 20, rng)),
+        ];
+        NetworkPlan::unscaled(linears, variant)
+    }
+
+    /// Plaintext oracle for the same network with *exact* ReLU.
+    fn plaintext_forward(plan: &NetworkPlan, input: &[Fp]) -> Vec<Fp> {
+        let mut y = input.to_vec();
+        for (i, op) in plan.linears.iter().enumerate() {
+            y = op.apply(&y);
+            if i + 1 < plan.linears.len() {
+                y = y.iter().map(|&v| crate::field::relu_exact(v)).collect();
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn e2e_matches_plaintext_for_all_variants() {
+        for (seed, variant) in [
+            (10u64, ReluVariant::BaselineRelu),
+            (11, ReluVariant::NaiveSign),
+            (12, ReluVariant::StochasticSign { mode: FaultMode::PosZero }),
+            // k=4 keeps trunc faults confined to |x|<16, and the input
+            // below keeps activations well above that.
+            (13, ReluVariant::TruncatedSign { k: 4, mode: FaultMode::PosZero }),
+        ] {
+            let mut rng = Rng::new(seed);
+            let plan = tiny_plan(variant, &mut rng);
+            let (cn, sn, off_bytes) = offline_network(&plan, &mut rng);
+            assert!(off_bytes > 0);
+            let input: Vec<Fp> =
+                (0..6).map(|_| Fp::from_i64(rng.below(2000) as i64 + 1000)).collect();
+            let (logits, stats) = run_inference(&cn, &sn, &input);
+            let want = plaintext_forward(&plan, &input);
+            assert_eq!(logits, want, "variant {variant:?}");
+            assert!(stats.online_s > 0.0);
+            assert!(stats.bytes_to_client > 0);
+        }
+    }
+
+    #[test]
+    fn material_is_consumed_per_inference_semantics() {
+        // Two inferences need two offline materializations (GCs are
+        // single-use); running the same material twice reuses labels and
+        // would be insecure — the API makes the caller re-run offline.
+        let mut rng = Rng::new(20);
+        let plan = tiny_plan(ReluVariant::BaselineRelu, &mut rng);
+        let (cn1, sn1, _) = offline_network(&plan, &mut rng);
+        let (cn2, sn2, _) = offline_network(&plan, &mut rng);
+        let input: Vec<Fp> = (0..6).map(|i| Fp::from_i64(100 + i as i64)).collect();
+        let (l1, _) = run_inference(&cn1, &sn1, &input);
+        let (l2, _) = run_inference(&cn2, &sn2, &input);
+        assert_eq!(l1, l2, "same input, fresh material, same result");
+    }
+
+    #[test]
+    fn online_bytes_dominated_by_labels() {
+        let mut rng = Rng::new(21);
+        let plan = tiny_plan(ReluVariant::BaselineRelu, &mut rng);
+        let (cn, sn, _) = offline_network(&plan, &mut rng);
+        let input: Vec<Fp> = (0..6).map(|_| Fp::from_i64(500)).collect();
+        let (_, stats) = run_inference(&cn, &sn, &input);
+        // 9 ReLUs × 31 labels × 16 B = 4464 B minimum to client.
+        assert!(stats.bytes_to_client >= 9 * 31 * 16);
+    }
+}

@@ -1,0 +1,105 @@
+//! Artifact directory discovery and validation.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A validated artifacts directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactDir {
+    pub root: PathBuf,
+}
+
+/// Files `make artifacts` must have produced.
+pub const REQUIRED: [&str; 7] = [
+    "manifest.json",
+    "demo_cnn.hlo.txt",
+    "demo_mlp.hlo.txt",
+    "stoch_relu.hlo.txt",
+    "weights.bin",
+    "weights_mlp.bin",
+    "dataset.bin",
+];
+
+impl ArtifactDir {
+    /// Open and validate a directory.
+    pub fn open(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        for f in REQUIRED {
+            let p = root.join(f);
+            if !p.exists() {
+                bail!("missing artifact {} — run `make artifacts`", p.display());
+            }
+        }
+        let manifest = std::fs::read_to_string(root.join("manifest.json"))
+            .context("reading manifest.json")?;
+        if !manifest.contains("\"circa-artifacts-1\"") {
+            bail!("unexpected artifact version in manifest.json");
+        }
+        Ok(Self { root })
+    }
+
+    /// Search upward from CWD (and the `ARTIFACTS_DIR` env var) — keeps
+    /// `cargo test`/`cargo bench` working from any workspace subdir.
+    pub fn discover() -> Result<Self> {
+        if let Ok(dir) = std::env::var("ARTIFACTS_DIR") {
+            return Self::open(dir);
+        }
+        let mut cur = std::env::current_dir()?;
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return Self::open(cand);
+            }
+            if !cur.pop() {
+                bail!("no artifacts/ directory found — run `make artifacts`");
+            }
+        }
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    /// Pull a numeric field out of the (flat) manifest without a JSON
+    /// dependency — fields are written by our own aot.py.
+    pub fn manifest_f64(&self, key: &str) -> Result<f64> {
+        let text = std::fs::read_to_string(self.path("manifest.json"))?;
+        let needle = format!("\"{key}\":");
+        let idx = text.find(&needle).with_context(|| format!("manifest key {key}"))?;
+        let rest = &text[idx + needle.len()..];
+        let val: String = rest
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-' || *c == 'e')
+            .collect();
+        val.parse().with_context(|| format!("parsing manifest {key}={val}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_rejects_missing_dir() {
+        assert!(ArtifactDir::open("/nonexistent/path").is_err());
+    }
+
+    #[test]
+    fn manifest_parse_helper() {
+        let dir = std::env::temp_dir().join("circa_artifacts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for f in REQUIRED {
+            std::fs::write(dir.join(f), "x").unwrap();
+        }
+        std::fs::write(
+            dir.join("manifest.json"),
+            "{\"version\": \"circa-artifacts-1\", \"batch\": 128, \"cnn_quantized_acc\": 0.93}",
+        )
+        .unwrap();
+        let a = ArtifactDir::open(&dir).unwrap();
+        assert_eq!(a.manifest_f64("batch").unwrap(), 128.0);
+        assert!((a.manifest_f64("cnn_quantized_acc").unwrap() - 0.93).abs() < 1e-9);
+        assert!(a.manifest_f64("nope").is_err());
+    }
+}

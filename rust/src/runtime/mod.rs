@@ -1,0 +1,19 @@
+//! PJRT runtime: load the AOT-compiled JAX model from `artifacts/` and
+//! execute it from Rust — no Python on this path.
+//!
+//! The interchange format is HLO **text** (`HloModuleProto::from_text_file`),
+//! not serialized protos: jax ≥ 0.5 emits 64-bit instruction ids that the
+//! image's xla_extension 0.5.1 rejects; the text parser reassigns ids
+//! (see /opt/xla-example/README.md).
+//!
+//! * [`artifacts`] — locate the artifact directory, check the manifest.
+//! * [`model_exec`] — compiled-executable wrappers for the three entry
+//!   points (`demo_cnn`, `demo_mlp`, `stoch_relu`) with typed call
+//!   signatures; each executable is compiled once and reused across the
+//!   whole sweep (k/mode are runtime scalars by design).
+
+pub mod artifacts;
+pub mod model_exec;
+
+pub use artifacts::ArtifactDir;
+pub use model_exec::{CnnExecutable, ModelOutput, StochReluExecutable};

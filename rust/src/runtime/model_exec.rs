@@ -1,0 +1,179 @@
+//! Typed wrappers around the compiled PJRT executables.
+//!
+//! Each wrapper compiles its HLO once (`PjRtClient::cpu` →
+//! `HloModuleProto::from_text_file` → `compile`) and then serves any
+//! number of `run` calls; `k` and `mode` are runtime scalar inputs so a
+//! whole Fig. 4 sweep reuses one compilation.
+
+use super::artifacts::ArtifactDir;
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Fault modes on the artifact ABI (matches python kernels/ref.py).
+pub const MODE_POSZERO: i32 = 0;
+pub const MODE_NEGPASS: i32 = 1;
+pub const MODE_EXACT: i32 = 2;
+
+/// Output of one model batch execution.
+#[derive(Clone, Debug)]
+pub struct ModelOutput {
+    /// Row-major `[batch][classes]` logits (ACT-scale fixed point).
+    pub logits: Vec<i32>,
+    pub n_classes: usize,
+    /// Per-ReLU-layer fault counts.
+    pub faults: Vec<i64>,
+}
+
+impl ModelOutput {
+    pub fn argmax(&self, row: usize) -> usize {
+        let r = &self.logits[row * self.n_classes..(row + 1) * self.n_classes];
+        r.iter().enumerate().max_by_key(|(_, v)| **v).map(|(i, _)| i).unwrap()
+    }
+
+    pub fn total_faults(&self) -> i64 {
+        self.faults.iter().sum()
+    }
+}
+
+fn compile(client: &PjRtClient, dir: &ArtifactDir, name: &str) -> Result<PjRtLoadedExecutable> {
+    let path = dir.path(name);
+    let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+        .with_context(|| format!("parsing {}", path.display()))?;
+    let comp = XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {name}"))
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+fn scalar_i32(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// The demo CNN/MLP executable (`demo_cnn.hlo.txt` / `demo_mlp.hlo.txt`).
+pub struct CnnExecutable {
+    exe: PjRtLoadedExecutable,
+    /// (shape dims of images, t1, t2) — per artifact ABI.
+    images_dims: Vec<i64>,
+    t1_dims: Vec<i64>,
+    t2_dims: Vec<i64>,
+    pub batch: usize,
+    n_classes: usize,
+    /// Quantized parameters in ABI order (w1,b1,w2,b2,w3,b3).
+    params: Vec<Literal>,
+}
+
+impl CnnExecutable {
+    /// Load the CNN entry with parameters from `weights.bin`.
+    pub fn load_cnn(client: &PjRtClient, dir: &ArtifactDir) -> Result<Self> {
+        let net = crate::nn::weights::load_weights(&dir.path("weights.bin"))?;
+        let batch = dir.manifest_f64("batch")? as usize;
+        Self::new(
+            compile(client, dir, "demo_cnn.hlo.txt")?,
+            vec![batch as i64, 1, 16, 16],
+            vec![batch as i64, 8, 8, 8],
+            vec![batch as i64, 16, 4, 4],
+            batch,
+            10,
+            &net,
+        )
+    }
+
+    /// Load the MLP entry with parameters from `weights_mlp.bin`.
+    pub fn load_mlp(client: &PjRtClient, dir: &ArtifactDir) -> Result<Self> {
+        let net = crate::nn::weights::load_weights(&dir.path("weights_mlp.bin"))?;
+        let batch = dir.manifest_f64("batch")? as usize;
+        Self::new(
+            compile(client, dir, "demo_mlp.hlo.txt")?,
+            vec![batch as i64, 256],
+            vec![batch as i64, 128],
+            vec![batch as i64, 64],
+            batch,
+            10,
+            &net,
+        )
+    }
+
+    fn new(
+        exe: PjRtLoadedExecutable,
+        images_dims: Vec<i64>,
+        t1_dims: Vec<i64>,
+        t2_dims: Vec<i64>,
+        batch: usize,
+        n_classes: usize,
+        net: &crate::nn::weights::LoadedNet,
+    ) -> Result<Self> {
+        // Flatten the loaded layers back to the ABI parameter tensors.
+        let mut params = Vec::new();
+        for layer in &net.layers {
+            params.push(lit_i32(&layer.w_raw, &layer.w_dims)?);
+            params.push(lit_i32(&layer.b_raw, &layer.b_dims)?);
+        }
+        Ok(Self { exe, images_dims, t1_dims, t2_dims, batch, n_classes, params })
+    }
+
+    /// Number of ReLU elements per example (t1 + t2 sizes / batch).
+    pub fn relus_per_example(&self) -> usize {
+        let n1: i64 = self.t1_dims.iter().product();
+        let n2: i64 = self.t2_dims.iter().product();
+        ((n1 + n2) as usize) / self.batch
+    }
+
+    /// Run one batch: `images` is row-major flattened (batch × dim),
+    /// `t1`/`t2` uniform field randomness, `k` truncation bits, `mode`
+    /// 0/1/2 (PosZero/NegPass/exact).
+    pub fn run(&self, images: &[i32], t1: &[i32], t2: &[i32], k: i32, mode: i32) -> Result<ModelOutput> {
+        let mut args: Vec<Literal> = Vec::with_capacity(5 + self.params.len());
+        args.push(lit_i32(images, &self.images_dims)?);
+        args.push(lit_i32(t1, &self.t1_dims)?);
+        args.push(lit_i32(t2, &self.t2_dims)?);
+        args.push(scalar_i32(k));
+        args.push(scalar_i32(mode));
+        for p in &self.params {
+            // Literal has no cheap clone in this crate version; round-trip
+            // through raw data only once per call (params are small).
+            args.push(clone_literal(p)?);
+        }
+        let result = self.exe.execute::<Literal>(&args)?[0][0].to_literal_sync()?;
+        let (logits_l, faults_l) = result.to_tuple2()?;
+        let logits = logits_l.to_vec::<i32>()?;
+        let faults_i32: Vec<i64> = faults_l.to_vec::<i64>()?;
+        Ok(ModelOutput { logits, n_classes: self.n_classes, faults: faults_i32 })
+    }
+}
+
+fn clone_literal(l: &Literal) -> Result<Literal> {
+    // Shape-preserving copy via raw data.
+    let shape = l.array_shape()?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    let data = l.to_vec::<i32>()?;
+    lit_i32(&data, &dims)
+}
+
+/// The standalone stochastic-ReLU kernel executable.
+pub struct StochReluExecutable {
+    exe: PjRtLoadedExecutable,
+    pub n: usize,
+}
+
+impl StochReluExecutable {
+    pub fn load(client: &PjRtClient, dir: &ArtifactDir) -> Result<Self> {
+        let n = dir.manifest_f64("relu_n")? as usize;
+        Ok(Self { exe: compile(client, dir, "stoch_relu.hlo.txt")?, n })
+    }
+
+    /// Run the kernel: returns (y, fault mask).
+    pub fn run(&self, x: &[i32], t: &[i32], k: i32, mode: i32) -> Result<(Vec<i32>, Vec<i32>)> {
+        anyhow::ensure!(x.len() == self.n && t.len() == self.n, "kernel arity is {}", self.n);
+        let args = vec![
+            lit_i32(x, &[self.n as i64])?,
+            lit_i32(t, &[self.n as i64])?,
+            scalar_i32(k),
+            scalar_i32(mode),
+        ];
+        let result = self.exe.execute::<Literal>(&args)?[0][0].to_literal_sync()?;
+        let (y, f) = result.to_tuple2()?;
+        Ok((y.to_vec::<i32>()?, f.to_vec::<i32>()?))
+    }
+}

@@ -1,0 +1,150 @@
+//! Closed-form stochastic-ReLU fault model (Thms 3.1 & 3.2) and the
+//! functional fault simulator used by the accuracy experiments.
+//!
+//! Two fault sources compose:
+//!
+//! * **sign fault** (truncation-independent): probability `|x|/p` for all
+//!   `x` — the share comparison misfires when `x + t` wraps;
+//! * **truncation fault**: for `|x| < 2^k`, probability `(2^k − |x|)/2^k`
+//!   on the PosZero side (positives zeroed) or NegPass side (negatives
+//!   passed through).
+//!
+//! [`fault_prob`] is the model line plotted in Fig. 3; [`apply`] is the
+//! bit-exact sampler (identical decision rule to the GC comparator —
+//! validated against the real evaluator in `rust/tests/fault_model.rs`
+//! and at scale by `cargo bench --bench fig3`); [`montecarlo`] measures
+//! empirical rates for the model-vs-implementation overlay.
+
+pub mod montecarlo;
+
+use crate::circuits::spec::FaultMode;
+use crate::field::{random_fp, Fp, PRIME};
+use crate::util::Rng;
+
+/// Closed-form fault probability of `s̃ign_k` for input `x` (Fig. 3a's
+/// model line): sign fault + truncation fault (disjoint events to first
+/// order; the truncation term only applies inside `[0, 2^k)`).
+pub fn fault_prob(x: Fp, k: u32, mode: FaultMode) -> f64 {
+    let sign_term = x.magnitude() as f64 / PRIME as f64;
+    let trunc_term = crate::circuits::trunc_sign_gc::trunc_fault_prob(x, k, mode);
+    (sign_term + trunc_term).min(1.0)
+}
+
+/// Sample the stochastic sign of `x` exactly as the GC computes it:
+/// draw `t`, form shares, compare truncated raw shares.
+/// Returns the computed sign bit (`true` = non-negative).
+pub fn sample_sign(x: Fp, k: u32, mode: FaultMode, rng: &mut Rng) -> bool {
+    let t = random_fp(rng);
+    sample_sign_with_t(x, t, k, mode)
+}
+
+/// Deterministic core of [`sample_sign`] (also used to cross-check the
+/// GC evaluator on identical `t`).
+pub fn sample_sign_with_t(x: Fp, t: Fp, k: u32, mode: FaultMode) -> bool {
+    // ⟨x⟩_s = x + t, ⟨x⟩_c = p − t, client sends p − ⟨x⟩_c = t.
+    let xs = (x.raw() + t.raw()) % PRIME;
+    let a = xs >> k;
+    let b = t.raw() >> k;
+    let is_neg = match mode {
+        FaultMode::PosZero => a <= b,
+        FaultMode::NegPass => a < b,
+    };
+    !is_neg
+}
+
+/// Apply the stochastic ReLU to one value: `y = x · s̃ign_k(x)`.
+pub fn apply(x: Fp, k: u32, mode: FaultMode, rng: &mut Rng) -> Fp {
+    if sample_sign(x, k, mode, rng) {
+        x
+    } else {
+        Fp::ZERO
+    }
+}
+
+/// Apply over a slice, counting faults against the exact sign.
+pub fn apply_vec(xs: &[Fp], k: u32, mode: FaultMode, rng: &mut Rng) -> (Vec<Fp>, u64) {
+    let mut faults = 0;
+    let out = xs
+        .iter()
+        .map(|&x| {
+            let s = sample_sign(x, k, mode, rng);
+            if s != x.is_nonneg() {
+                faults += 1;
+            }
+            if s {
+                x
+            } else {
+                Fp::ZERO
+            }
+        })
+        .collect();
+    (out, faults)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_input_sign_always_flips_but_relu_is_correct() {
+        // x = 0 under PosZero: the comparison `t ≤ t` always fires, so the
+        // *sign* is formally wrong with probability 1 (the model says so),
+        // yet ReLU(0) = 0·v = 0 is the correct value either way.
+        assert_eq!(fault_prob(Fp::ZERO, 0, FaultMode::PosZero), 1.0);
+        assert_eq!(fault_prob(Fp::ZERO, 12, FaultMode::PosZero), 1.0);
+        let mut rng = Rng::new(9);
+        assert_eq!(apply(Fp::ZERO, 12, FaultMode::PosZero, &mut rng), Fp::ZERO);
+        // NegPass uses strict `<`: x = 0 compares t < t = false ⇒ sign
+        // correct ⇒ no fault at k = 0.
+        assert_eq!(fault_prob(Fp::ZERO, 0, FaultMode::NegPass), 0.0);
+    }
+
+    #[test]
+    fn model_symmetry() {
+        // Sign term symmetric in |x|; trunc term side-dependent.
+        let k = 12;
+        let pos = Fp::from_i64(100);
+        let neg = Fp::from_i64(-100);
+        assert!(fault_prob(pos, k, FaultMode::PosZero) > 0.9);
+        assert!(fault_prob(neg, k, FaultMode::PosZero) < 1e-3);
+        assert!(fault_prob(neg, k, FaultMode::NegPass) > 0.9);
+        assert!(fault_prob(pos, k, FaultMode::NegPass) < 1e-3);
+    }
+
+    #[test]
+    fn sampler_matches_model_probability() {
+        let mut rng = Rng::new(1);
+        let k = 14;
+        for &mag in &[100i64, 4000, 16000, 1 << 14, 1 << 20] {
+            let x = Fp::from_i64(mag);
+            let want = fault_prob(x, k, FaultMode::PosZero);
+            let n = 4000;
+            let mut faults = 0;
+            for _ in 0..n {
+                if sample_sign(x, k, FaultMode::PosZero, &mut rng) != x.is_nonneg() {
+                    faults += 1;
+                }
+            }
+            let got = faults as f64 / n as f64;
+            assert!((got - want).abs() < 0.03, "mag={mag} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn apply_zeroes_or_passes() {
+        let mut rng = Rng::new(2);
+        let x = Fp::from_i64(123_456);
+        let y = apply(x, 12, FaultMode::PosZero, &mut rng);
+        assert!(y == x || y == Fp::ZERO);
+    }
+
+    #[test]
+    fn apply_vec_fault_count_consistency() {
+        let mut rng = Rng::new(3);
+        // All values deep inside the truncation range: ~100% faults.
+        let xs = vec![Fp::from_i64(1); 256];
+        let (out, faults) = apply_vec(&xs, 16, FaultMode::PosZero, &mut rng);
+        assert!(faults > 250, "faults={faults}");
+        assert!(out.iter().filter(|v| **v == Fp::ZERO).count() > 250);
+    }
+}

@@ -1,0 +1,113 @@
+//! Monte-Carlo fault-rate measurement — the "implementation" points of
+//! Fig. 3(b), measured through the same decision rule as the garbled
+//! comparator (and cross-checked against the *actual* GC evaluator in
+//! the integration tests).
+
+use super::{fault_prob, sample_sign};
+use crate::circuits::spec::FaultMode;
+use crate::field::Fp;
+use crate::util::Rng;
+
+/// Empirical vs model fault rates over a population of activations.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultRates {
+    /// Fraction of all activations that faulted.
+    pub total_measured: f64,
+    /// Fraction of positive activations that faulted.
+    pub positive_measured: f64,
+    /// Model predictions for the same population.
+    pub total_model: f64,
+    pub positive_model: f64,
+}
+
+/// Measure fault rates of `s̃ign_k` over the given activations,
+/// `reps` share-samplings per activation.
+pub fn measure(xs: &[Fp], k: u32, mode: FaultMode, reps: usize, rng: &mut Rng) -> FaultRates {
+    let mut total_faults = 0u64;
+    let mut pos_faults = 0u64;
+    let mut pos_count = 0u64;
+    let mut total_model = 0.0;
+    let mut pos_model = 0.0;
+
+    for &x in xs {
+        let p = fault_prob(x, k, mode);
+        total_model += p;
+        let is_pos = x.is_nonneg();
+        if is_pos {
+            pos_model += p;
+            pos_count += reps as u64;
+        }
+        for _ in 0..reps {
+            let got = sample_sign(x, k, mode, rng);
+            if got != is_pos {
+                total_faults += 1;
+                if is_pos {
+                    pos_faults += 1;
+                }
+            }
+        }
+    }
+
+    let n = (xs.len() * reps) as f64;
+    FaultRates {
+        total_measured: total_faults as f64 / n,
+        positive_measured: if pos_count > 0 { pos_faults as f64 / pos_count as f64 } else { 0.0 },
+        total_model: total_model / xs.len() as f64,
+        positive_model: if xs.iter().any(|x| x.is_nonneg()) {
+            pos_model / xs.iter().filter(|x| x.is_nonneg()).count() as f64
+        } else {
+            0.0
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A plausible activation population: mixed signs, mostly small.
+    fn population(rng: &mut Rng) -> Vec<Fp> {
+        (0..2000)
+            .map(|_| {
+                let mag = (rng.f64().powi(3) * (1 << 20) as f64) as i64;
+                Fp::from_i64(if rng.bool() { mag } else { -mag })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn measured_tracks_model() {
+        let mut rng = Rng::new(1);
+        let xs = population(&mut rng);
+        for k in [10u32, 14, 18] {
+            let rates = measure(&xs, k, FaultMode::PosZero, 4, &mut rng);
+            assert!(
+                (rates.total_measured - rates.total_model).abs() < 0.02,
+                "k={k}: {rates:?}"
+            );
+            assert!(
+                (rates.positive_measured - rates.positive_model).abs() < 0.03,
+                "k={k}: {rates:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn rates_increase_with_k() {
+        let mut rng = Rng::new(2);
+        let xs = population(&mut rng);
+        let lo = measure(&xs, 8, FaultMode::PosZero, 2, &mut rng);
+        let hi = measure(&xs, 20, FaultMode::PosZero, 2, &mut rng);
+        assert!(hi.total_measured > lo.total_measured);
+    }
+
+    #[test]
+    fn poszero_faults_are_mostly_positive() {
+        // With symmetric activations, PosZero's faults concentrate on the
+        // positive side: positive rate > total rate.
+        let mut rng = Rng::new(3);
+        let xs = population(&mut rng);
+        let r = measure(&xs, 16, FaultMode::PosZero, 2, &mut rng);
+        assert!(r.positive_measured > r.total_measured);
+    }
+}

@@ -1,0 +1,153 @@
+//! Additive secret sharing over `F_p` (§2.2).
+//!
+//! A value `x` splits into `⟨x⟩_1 = r` and `⟨x⟩_2 = x − r` for uniform `r`;
+//! reconstruction adds the shares. Addition and scalar/plaintext-linear
+//! operations act share-wise, which is what makes Delphi's online linear
+//! layers near-plaintext speed.
+
+use crate::field::{random_fp, Fp};
+use crate::util::Rng;
+
+/// One party's share of a secret value.
+pub type Share = Fp;
+
+/// A pair of shares `(client, server)` reconstructing to a secret.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SharePair {
+    pub client: Share,
+    pub server: Share,
+}
+
+impl SharePair {
+    /// Split `x` into uniform shares.
+    pub fn share(x: Fp, rng: &mut Rng) -> Self {
+        let r = random_fp(rng);
+        SharePair { client: r, server: x - r }
+    }
+
+    /// Split with the *client-holds-r* convention Circa's ReLU uses:
+    /// `⟨x⟩_s = x + t mod p`, `⟨x⟩_c = p − t` for the given `t`.
+    pub fn share_with_t(x: Fp, t: Fp) -> Self {
+        SharePair { client: -t, server: x + t }
+    }
+
+    /// Reconstruct the secret.
+    pub fn reconstruct(&self) -> Fp {
+        self.client + self.server
+    }
+}
+
+/// Share a vector of values.
+pub fn share_vec(xs: &[Fp], rng: &mut Rng) -> (Vec<Share>, Vec<Share>) {
+    let mut client = Vec::with_capacity(xs.len());
+    let mut server = Vec::with_capacity(xs.len());
+    for &x in xs {
+        let p = SharePair::share(x, rng);
+        client.push(p.client);
+        server.push(p.server);
+    }
+    (client, server)
+}
+
+/// Reconstruct a vector of values from share vectors.
+pub fn reconstruct_vec(client: &[Share], server: &[Share]) -> Vec<Fp> {
+    debug_assert_eq!(client.len(), server.len());
+    client.iter().zip(server).map(|(&c, &s)| c + s).collect()
+}
+
+/// Share-wise addition: each party adds locally.
+pub fn add_local(a: &[Share], b: &[Share]) -> Vec<Share> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x + y).collect()
+}
+
+/// Multiply shares by a public plaintext constant (each party locally).
+pub fn scale_local(a: &[Share], c: Fp) -> Vec<Share> {
+    a.iter().map(|&x| x * c).collect()
+}
+
+/// Add a public constant to a sharing: exactly one party adds it.
+pub fn add_public_one_side(shares: &mut [Share], consts: &[Fp]) {
+    for (s, &c) in shares.iter_mut().zip(consts) {
+        *s = *s + c;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::field::PRIME;
+
+    #[test]
+    fn share_reconstruct_roundtrip() {
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let x = random_fp(&mut rng);
+            let p = SharePair::share(x, &mut rng);
+            assert_eq!(p.reconstruct(), x);
+        }
+    }
+
+    #[test]
+    fn share_with_t_convention() {
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let x = random_fp(&mut rng);
+            let t = random_fp(&mut rng);
+            let p = SharePair::share_with_t(x, t);
+            assert_eq!(p.reconstruct(), x);
+            // server share is x + t mod p, client is p - t
+            assert_eq!(p.server.raw(), (x.raw() + t.raw()) % PRIME);
+            assert_eq!(p.client.raw(), (PRIME - t.raw()) % PRIME);
+        }
+    }
+
+    #[test]
+    fn vector_roundtrip_and_addition() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<Fp> = (0..64).map(|_| random_fp(&mut rng)).collect();
+        let ys: Vec<Fp> = (0..64).map(|_| random_fp(&mut rng)).collect();
+        let (xc, xs_srv) = share_vec(&xs, &mut rng);
+        let (yc, ys_srv) = share_vec(&ys, &mut rng);
+        let sum_c = add_local(&xc, &yc);
+        let sum_s = add_local(&xs_srv, &ys_srv);
+        let got = reconstruct_vec(&sum_c, &sum_s);
+        let want: Vec<Fp> = xs.iter().zip(&ys).map(|(&a, &b)| a + b).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn scalar_and_public_ops() {
+        let mut rng = Rng::new(4);
+        let xs: Vec<Fp> = (0..32).map(|_| random_fp(&mut rng)).collect();
+        let (c, s) = share_vec(&xs, &mut rng);
+        let k = Fp::from_i64(7);
+        let sc = scale_local(&c, k);
+        let ss_ = scale_local(&s, k);
+        let got = reconstruct_vec(&sc, &ss_);
+        assert_eq!(got, xs.iter().map(|&x| x * k).collect::<Vec<_>>());
+
+        let consts: Vec<Fp> = (0..32).map(|_| random_fp(&mut rng)).collect();
+        let mut s2 = s.clone();
+        add_public_one_side(&mut s2, &consts);
+        let got = reconstruct_vec(&c, &s2);
+        assert_eq!(got, xs.iter().zip(&consts).map(|(&x, &a)| x + a).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shares_look_uniform() {
+        // Each individual share of a fixed secret should be ~uniform.
+        let mut rng = Rng::new(5);
+        let x = Fp::from_i64(12345);
+        let n = 4000;
+        let mut low = 0u32;
+        for _ in 0..n {
+            let p = SharePair::share(x, &mut rng);
+            if p.client.raw() < PRIME / 2 {
+                low += 1;
+            }
+        }
+        let frac = low as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.05, "client share biased: {frac}");
+    }
+}

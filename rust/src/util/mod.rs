@@ -1,0 +1,13 @@
+//! Small shared utilities: PRNG, statistics, timers, CLI args, byte I/O.
+//!
+//! The offline vendor set has no `rand`, `clap`, or `criterion`, so this
+//! module carries the minimal replacements the rest of the crate needs.
+
+pub mod args;
+pub mod bytes;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,87 @@
+//! Wall-clock timing helpers for benches and metrics.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::new();
+    let out = f();
+    let s = t.elapsed_s();
+    (out, s)
+}
+
+/// Run a closure repeatedly until at least `min_time_s` has elapsed and at
+/// least `min_iters` iterations have run; returns seconds-per-iteration.
+///
+/// This is the measurement core of the hand-rolled bench harness
+/// (criterion is not in the offline vendor set).
+pub fn bench_seconds_per_iter(min_time_s: f64, min_iters: u64, mut f: impl FnMut()) -> f64 {
+    // Warmup.
+    f();
+    let t = Timer::new();
+    let mut iters = 0u64;
+    loop {
+        f();
+        iters += 1;
+        if iters >= min_iters && t.elapsed_s() >= min_time_s {
+            break;
+        }
+    }
+    t.elapsed_s() / iters as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_s() >= 0.004);
+        assert!(t.elapsed_us() >= 4000);
+    }
+
+    #[test]
+    fn time_returns_result() {
+        let (v, s) = time(|| 42);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn bench_runs_min_iters() {
+        let mut n = 0;
+        bench_seconds_per_iter(0.0, 10, || n += 1);
+        assert!(n >= 10);
+    }
+}

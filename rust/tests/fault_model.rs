@@ -1,0 +1,104 @@
+//! Cross-validation: the closed-form fault model (Thms 3.1/3.2), the
+//! functional sampler, and the *actual garbled circuit* must all agree.
+
+use circa::circuits::spec::{bits_fp, FaultMode};
+use circa::circuits::stoch_sign_gc;
+use circa::field::{random_fp, Fp, PRIME};
+use circa::gc::{evaluate, garble};
+use circa::simfault;
+use circa::ss::SharePair;
+use circa::util::Rng;
+
+/// The sampler and the garbled circuit must make the SAME decision on
+/// the same share split — not just the same distribution.
+#[test]
+fn gc_and_sampler_agree_pointwise() {
+    let mut rng = Rng::new(1);
+    for mode in [FaultMode::PosZero, FaultMode::NegPass] {
+        for k in [0u32, 8, 14, 20] {
+            let circuit = stoch_sign_gc::build_truncated(k, mode);
+            for _ in 0..40 {
+                let mag = rng.below(1 << 22) as i64;
+                let x = Fp::from_i64(if rng.bool() { mag } else { -mag });
+                let t = random_fp(&mut rng);
+                let r = random_fp(&mut rng);
+                let shares = SharePair::share_with_t(x, t);
+
+                // Through the actual GC.
+                let (gc, enc) = garble(&circuit, &mut rng);
+                let inputs = stoch_sign_gc::encode_inputs(shares.client, shares.server, r, k);
+                let out = gc.decode(&evaluate(&circuit, &gc, &enc.encode_all(&inputs)));
+                let v_gc = (bits_fp(&out) + r).to_i64();
+
+                // Through the functional sampler with the same t.
+                let want = simfault::sample_sign_with_t(x, t, k, mode) as i64;
+                assert_eq!(v_gc, want, "x={} t={} k={k} mode={mode:?}", x.to_i64(), t.raw());
+            }
+        }
+    }
+}
+
+/// Aggregate rates through the real GC must match the closed form.
+#[test]
+fn gc_fault_rates_match_closed_form() {
+    let mut rng = Rng::new(2);
+    let k = 14u32;
+    let mode = FaultMode::PosZero;
+    let circuit = stoch_sign_gc::build_truncated(k, mode);
+    let x = Fp::from_i64((1 << k) / 2); // expected fault rate 0.5
+    let n = 600;
+    let mut faults = 0;
+    for _ in 0..n {
+        let t = random_fp(&mut rng);
+        let r = random_fp(&mut rng);
+        let shares = SharePair::share_with_t(x, t);
+        let (gc, enc) = garble(&circuit, &mut rng);
+        let inputs = stoch_sign_gc::encode_inputs(shares.client, shares.server, r, k);
+        let out = gc.decode(&evaluate(&circuit, &gc, &enc.encode_all(&inputs)));
+        if (bits_fp(&out) + r).to_i64() != 1 {
+            faults += 1;
+        }
+    }
+    let rate = faults as f64 / n as f64;
+    let want = simfault::fault_prob(x, k, mode);
+    assert!((rate - want).abs() < 0.07, "rate {rate} want {want}");
+}
+
+/// Theorem 3.1's |x|/p law measured at several magnitudes.
+#[test]
+fn thm31_scaling_in_magnitude() {
+    let mut rng = Rng::new(3);
+    for frac in [16u64, 8, 4] {
+        let x = Fp::new(PRIME / frac); // positive value of magnitude p/frac
+        let n = 20_000;
+        let mut faults = 0;
+        for _ in 0..n {
+            if simfault::sample_sign(x, 0, FaultMode::PosZero, &mut rng) != x.is_nonneg() {
+                faults += 1;
+            }
+        }
+        let rate = faults as f64 / n as f64;
+        let want = 1.0 / frac as f64;
+        assert!((rate - want).abs() < 0.02, "frac={frac}: {rate} vs {want}");
+    }
+}
+
+/// Thm 3.2 is *conditional* on the stochastic sign being correct; the
+/// two fault sources must not interact for moderate x.
+#[test]
+fn fault_sources_compose() {
+    let mut rng = Rng::new(4);
+    let k = 10u32;
+    // x inside trunc range: trunc term dominates (sign term ~ 2^9/2^31).
+    let x = Fp::from_i64(1 << 9);
+    let want = simfault::fault_prob(x, k, FaultMode::PosZero);
+    assert!((want - 0.5).abs() < 0.01);
+    let n = 20_000;
+    let mut faults = 0;
+    for _ in 0..n {
+        if simfault::sample_sign(x, k, FaultMode::PosZero, &mut rng) != x.is_nonneg() {
+            faults += 1;
+        }
+    }
+    assert!((faults as f64 / n as f64 - want).abs() < 0.02);
+}

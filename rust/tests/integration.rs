@@ -1,0 +1,112 @@
+//! Cross-module integration: serving coordinator over the real demo CNN,
+//! failure injection, and whole-stack invariants. Requires
+//! `make artifacts`.
+
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::coordinator::{PiService, ServiceConfig};
+use circa::nn::weights::{load_dataset, load_weights};
+use circa::protocol::server::NetworkPlan;
+use circa::runtime::ArtifactDir;
+use std::sync::Arc;
+
+fn demo_plan(variant: ReluVariant) -> Arc<NetworkPlan> {
+    let dir = ArtifactDir::discover().expect("artifacts built");
+    let net = load_weights(&dir.path("weights.bin")).unwrap();
+    Arc::new(NetworkPlan { linears: net.linears(), variant, rescale_bits: net.rescale_bits() })
+}
+
+#[test]
+fn service_serves_demo_cnn_with_circa() {
+    let dir = ArtifactDir::discover().unwrap();
+    let ds = load_dataset(&dir.path("dataset.bin")).unwrap();
+    let plan = demo_plan(ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero });
+    let svc = PiService::start(
+        plan,
+        ServiceConfig { workers: 2, pool_target: 6, pool_dealers: 2, ..Default::default() },
+    );
+    svc.warmup(2);
+
+    let n = 8;
+    let mut correct = 0;
+    let rxs: Vec<_> = (0..n).map(|i| (i, svc.submit(ds.image(i).to_vec()))).collect();
+    for (i, rx) in rxs {
+        let resp = rx.recv().unwrap();
+        let pred = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| v.to_i64())
+            .map(|(c, _)| c as u32)
+            .unwrap();
+        if pred == ds.labels[i] {
+            correct += 1;
+        }
+        assert!(resp.online_us > 0);
+        assert!(resp.bytes > 0);
+    }
+    // Demo CNN is ~95% accurate; 8 draws at ≥5/8 is a very safe bar.
+    assert!(correct >= 5, "only {correct}/8 correct through the private path");
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.completed, n as u64);
+    assert!(snap.online_p50_us > 0);
+    svc.shutdown();
+}
+
+#[test]
+fn service_survives_dry_pool_bursts() {
+    // Pool target 1 with a burst of requests: most leases go dry and are
+    // dealt inline; every request must still complete correctly.
+    let plan = demo_plan(ReluVariant::TruncatedSign { k: 10, mode: FaultMode::PosZero });
+    let dir = ArtifactDir::discover().unwrap();
+    let ds = load_dataset(&dir.path("dataset.bin")).unwrap();
+    let svc = PiService::start(
+        plan,
+        ServiceConfig { workers: 3, pool_target: 1, pool_dealers: 1, ..Default::default() },
+    );
+    let rxs: Vec<_> = (0..6).map(|i| svc.submit(ds.image(i).to_vec())).collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.logits.len(), 10);
+    }
+    assert_eq!(svc.metrics.snapshot().completed, 6);
+    svc.shutdown();
+}
+
+#[test]
+fn artifact_and_protocol_accuracies_are_consistent() {
+    // The PJRT path (exact mode) and the protocol path (baseline GC)
+    // compute the same quantized network: spot-check one image end to
+    // end through both stacks.
+    use circa::protocol::server::{offline_network, run_inference};
+    use circa::runtime::model_exec::MODE_EXACT;
+    use circa::runtime::CnnExecutable;
+    use circa::util::Rng;
+
+    let dir = ArtifactDir::discover().unwrap();
+    let ds = load_dataset(&dir.path("dataset.bin")).unwrap();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let exe = CnnExecutable::load_cnn(&client, &dir).unwrap();
+    let b = exe.batch;
+
+    let images: Vec<i32> =
+        ds.images[..b * ds.dim].iter().map(|f| f.to_i64() as i32).collect();
+    let z1 = vec![0i32; b * 512];
+    let z2 = vec![0i32; b * 256];
+    let out = exe.run(&images, &z1, &z2, 0, MODE_EXACT).unwrap();
+
+    let plan = demo_plan(ReluVariant::BaselineRelu);
+    let mut rng = Rng::new(9);
+    let (cn, sn, _) = offline_network(&plan, &mut rng);
+    let (logits, _) = run_inference(&cn, &sn, ds.image(0));
+
+    // PJRT argmax == protocol argmax for image 0 (logits may differ by
+    // SecureML rescale noise on the protocol side).
+    let pjrt_argmax = out.argmax(0);
+    let proto_argmax = logits
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, v)| v.to_i64())
+        .map(|(i, _)| i)
+        .unwrap();
+    assert_eq!(pjrt_argmax, proto_argmax);
+}

@@ -1,0 +1,185 @@
+//! Property-based tests (hand-rolled — proptest is not in the offline
+//! vendor set): randomized invariants over the GC builders, the garbling
+//! scheme, the protocol algebra, and failure injection.
+
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::field::{random_fp, Fp, PRIME};
+use circa::gc::build::{bits_to_u64, u64_to_bits, Builder};
+use circa::gc::{evaluate, garble};
+use circa::protocol::offline::{offline_relu_layer};
+use circa::protocol::online::online_relu_layer;
+use circa::ss::{reconstruct_vec, SharePair};
+use circa::util::Rng;
+
+/// Random-width adders/subtractors/comparators vs u64 arithmetic.
+#[test]
+fn prop_bus_arithmetic_matches_u64() {
+    let mut rng = Rng::new(1);
+    for trial in 0..60 {
+        let m = 1 + rng.below_usize(24);
+        let a_val = rng.below(1 << m);
+        let b_val = rng.below(1 << m);
+
+        let mut bld = Builder::new();
+        let a = bld.input_bus(m);
+        let b = bld.input_bus(m);
+        let (sum, carry) = bld.add(&a, &b);
+        let (diff, borrow) = bld.sub(&a, &b);
+        let geq = bld.geq(&a, &b);
+        bld.output_bus(&sum);
+        bld.output(carry);
+        bld.output_bus(&diff);
+        bld.output(borrow);
+        bld.output(geq);
+        let c = bld.build();
+
+        let mut inputs = u64_to_bits(a_val, m);
+        inputs.extend(u64_to_bits(b_val, m));
+        let out = c.eval_plain(&inputs);
+
+        let sum_got = bits_to_u64(&out[..m]) | ((out[m] as u64) << m);
+        assert_eq!(sum_got, a_val + b_val, "trial {trial} m={m} add");
+        let diff_got = bits_to_u64(&out[m + 1..2 * m + 1]);
+        assert_eq!(diff_got, a_val.wrapping_sub(b_val) & ((1u64 << m) - 1), "sub");
+        assert_eq!(out[2 * m + 1], a_val < b_val, "borrow");
+        assert_eq!(out[2 * m + 2], a_val >= b_val, "geq");
+    }
+}
+
+/// Garbling correctness on random circuits with random input vectors —
+/// the garbled evaluation must equal plain evaluation every time.
+#[test]
+fn prop_garble_eval_equals_plain() {
+    let mut rng = Rng::new(2);
+    for _ in 0..20 {
+        let n_in = 2 + rng.below_usize(8);
+        let mut bld = Builder::new();
+        let mut pool: Vec<_> = (0..n_in).map(|_| bld.input()).collect();
+        for _ in 0..60 {
+            let a = pool[rng.below_usize(pool.len())];
+            let b = pool[rng.below_usize(pool.len())];
+            let v = match rng.below(4) {
+                0 => bld.xor(a, b),
+                1 => bld.and(a, b),
+                2 => bld.or(a, b),
+                _ => bld.not(a),
+            };
+            pool.push(v);
+        }
+        for _ in 0..6 {
+            let o = pool[rng.below_usize(pool.len())];
+            bld.output(o);
+        }
+        let c = bld.build();
+        let (gc, enc) = garble(&c, &mut rng);
+        for _ in 0..5 {
+            let inputs: Vec<bool> = (0..n_in).map(|_| rng.bool()).collect();
+            let got = gc.decode(&evaluate(&c, &gc, &enc.encode_all(&inputs)));
+            assert_eq!(got, c.eval_plain(&inputs));
+        }
+    }
+}
+
+/// Tampering with any single table entry must disturb the evaluation of
+/// the gate it belongs to (failure injection on the GC substrate).
+#[test]
+fn prop_table_tamper_detected_by_label_mismatch() {
+    let mut rng = Rng::new(3);
+    let mut bld = Builder::new();
+    let a = bld.input_bus(8);
+    let b = bld.input_bus(8);
+    let geq = bld.geq(&a, &b);
+    bld.output(geq);
+    let c = bld.build();
+    let (gc, enc) = garble(&c, &mut rng);
+    for gate in 0..gc.table.len() {
+        // Tamper both ciphertexts of one gate. A tampered row only
+        // affects evaluations whose color bits select it, so require the
+        // corruption to surface on at least one of several random inputs.
+        let mut bad_gc = gc.clone();
+        bad_gc.table[gate][0] = circa::prf::Label(bad_gc.table[gate][0].0 ^ 0xDEAD);
+        bad_gc.table[gate][1] = circa::prf::Label(bad_gc.table[gate][1].0 ^ 0xBEEF);
+        let mut detected = false;
+        for _ in 0..16 {
+            let mut inputs = u64_to_bits(rng.below(256), 8);
+            inputs.extend(u64_to_bits(rng.below(256), 8));
+            let labels = enc.encode_all(&inputs);
+            if evaluate(&c, &gc, &labels) != evaluate(&c, &bad_gc, &labels) {
+                detected = true;
+                break;
+            }
+        }
+        assert!(detected, "tamper at gate {gate} went unnoticed on 16 inputs");
+    }
+}
+
+/// Protocol algebra: for ANY share split of the same x, the reconstructed
+/// stochastic ReLU differs only through the sign decision (values are
+/// x or 0 / passed-through-x — never garbage).
+#[test]
+fn prop_online_outputs_are_x_or_zero() {
+    let mut rng = Rng::new(4);
+    for mode in [FaultMode::PosZero, FaultMode::NegPass] {
+        let variant = ReluVariant::TruncatedSign { k: 16, mode };
+        for _ in 0..10 {
+            let vals: Vec<i64> =
+                (0..16).map(|_| rng.below(1 << 18) as i64 - (1 << 17)).collect();
+            let shares: Vec<SharePair> =
+                vals.iter().map(|&v| SharePair::share(Fp::from_i64(v), &mut rng)).collect();
+            let xc: Vec<Fp> = shares.iter().map(|s| s.client).collect();
+            let xs: Vec<Fp> = shares.iter().map(|s| s.server).collect();
+            let (cm, sm) = offline_relu_layer(variant, &xc, &mut rng);
+            let (yc, ys, _) = online_relu_layer(&cm, &sm, &xc, &xs);
+            let ys_rec = reconstruct_vec(&yc, &ys);
+            for (y, &x) in ys_rec.iter().zip(&vals) {
+                let got = y.to_i64();
+                assert!(got == x || got == 0, "y={got} for x={x}");
+            }
+        }
+    }
+}
+
+/// Share-split invariance: the *exact-regime* outputs (|x| ≥ 2^k) must
+/// be identical across arbitrary re-sharings of the same inputs.
+#[test]
+fn prop_share_split_invariance_outside_trunc_range() {
+    let mut rng = Rng::new(5);
+    let k = 12u32;
+    let variant = ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero };
+    let vals: Vec<i64> = (0..8)
+        .map(|_| {
+            let mag = (1i64 << k) + rng.below(1 << 20) as i64;
+            if rng.bool() {
+                mag
+            } else {
+                -mag
+            }
+        })
+        .collect();
+    let want: Vec<i64> = vals.iter().map(|&v| v.max(0)).collect();
+    for _ in 0..8 {
+        let shares: Vec<SharePair> =
+            vals.iter().map(|&v| SharePair::share(Fp::from_i64(v), &mut rng)).collect();
+        let xc: Vec<Fp> = shares.iter().map(|s| s.client).collect();
+        let xs: Vec<Fp> = shares.iter().map(|s| s.server).collect();
+        let (cm, sm) = offline_relu_layer(variant, &xc, &mut rng);
+        let (yc, ys, _) = online_relu_layer(&cm, &sm, &xc, &xs);
+        let got: Vec<i64> = reconstruct_vec(&yc, &ys).iter().map(|y| y.to_i64()).collect();
+        assert_eq!(got, want);
+    }
+}
+
+/// Field sanity at scale: uniform elements round-trip the signed codec
+/// and the share codec.
+#[test]
+fn prop_field_codecs_roundtrip() {
+    let mut rng = Rng::new(6);
+    for _ in 0..5000 {
+        let x = random_fp(&mut rng);
+        assert_eq!(Fp::from_i64(x.to_i64()), x);
+        let t = random_fp(&mut rng);
+        let sh = SharePair::share_with_t(x, t);
+        assert_eq!(sh.reconstruct(), x);
+        assert!(x.raw() < PRIME);
+    }
+}

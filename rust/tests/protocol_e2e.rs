@@ -1,0 +1,105 @@
+//! End-to-end protocol tests on the *trained* demo CNN (requires
+//! `make artifacts`): full 2-party private inference through real conv
+//! layers, garbled circuits, Beaver triples, and SecureML rescaling —
+//! checked against the plaintext quantized forward pass.
+
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::nn::weights::{accuracy, load_dataset, load_weights};
+use circa::protocol::server::{offline_network, run_inference, NetworkPlan};
+use circa::runtime::ArtifactDir;
+use circa::util::Rng;
+
+fn plan(variant: ReluVariant) -> (NetworkPlan, circa::nn::weights::LoadedNet) {
+    let dir = ArtifactDir::discover().expect("artifacts built");
+    let net = load_weights(&dir.path("weights.bin")).unwrap();
+    (
+        NetworkPlan { linears: net.linears(), variant, rescale_bits: net.rescale_bits() },
+        net,
+    )
+}
+
+/// Private inference with Circa (k=12) must match the plaintext
+/// quantized forward at the argmax level and be within
+/// SecureML-truncation noise at the logit level.
+#[test]
+fn private_cnn_matches_plaintext_argmax() {
+    let variant = ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero };
+    let (p, net) = plan(variant);
+    let dir = ArtifactDir::discover().unwrap();
+    let ds = load_dataset(&dir.path("dataset.bin")).unwrap();
+    let mut rng = Rng::new(1);
+
+    let n = 6;
+    let mut priv_logits = Vec::new();
+    let mut plain_logits = Vec::new();
+    for i in 0..n {
+        let (cn, sn, _) = offline_network(&p, &mut rng);
+        let (logits, stats) = run_inference(&cn, &sn, ds.image(i));
+        assert!(stats.bytes_to_client > 0);
+        priv_logits.push(logits);
+        plain_logits.push(net.forward_exact(ds.image(i)));
+    }
+    let labels = &ds.labels[..n];
+    let acc_priv = accuracy(&priv_logits, labels);
+    let acc_plain = accuracy(&plain_logits, labels);
+    assert!(
+        (acc_priv - acc_plain).abs() <= 1.0 / n as f64 + 1e-9,
+        "private {acc_priv} vs plaintext {acc_plain}"
+    );
+    // Logits agree within the two legitimate noise sources: (a) ±1-ULP
+    // SecureML rescale noise amplified by downstream weights, (b) the
+    // k=12 truncation faults themselves (plaintext keeps activations
+    // < 2^12 that Circa zeroes). Both are small against typical logit
+    // gaps (~10^5 at the 2^15 logit scale).
+    for (pv, pl) in priv_logits.iter().zip(&plain_logits) {
+        for (a, b) in pv.iter().zip(pl) {
+            let diff = (a.to_i64() - b.to_i64()).abs();
+            assert!(diff < 50_000, "logit diff {diff} ({} vs {})", a.to_i64(), b.to_i64());
+        }
+    }
+}
+
+/// The baseline GC variant on the same network must also reconstruct
+/// correctly (exact ReLU; only rescale noise).
+#[test]
+fn private_cnn_baseline_variant() {
+    let (p, net) = plan(ReluVariant::BaselineRelu);
+    let dir = ArtifactDir::discover().unwrap();
+    let ds = load_dataset(&dir.path("dataset.bin")).unwrap();
+    let mut rng = Rng::new(2);
+    let (cn, sn, _) = offline_network(&p, &mut rng);
+    let (logits, _) = run_inference(&cn, &sn, ds.image(0));
+    let want = net.forward_exact(ds.image(0));
+    for (a, b) in logits.iter().zip(&want) {
+        // Baseline = exact ReLU, so only rescale noise remains.
+        assert!((a.to_i64() - b.to_i64()).abs() < 50_000);
+    }
+}
+
+/// NegPass at a destructive k on the real network: small negatives leak
+/// through — crash-freedom and mode-flag plumbing test.
+#[test]
+fn negpass_variant_runs() {
+    let (p, _) = plan(ReluVariant::TruncatedSign { k: 14, mode: FaultMode::NegPass });
+    let dir = ArtifactDir::discover().unwrap();
+    let ds = load_dataset(&dir.path("dataset.bin")).unwrap();
+    let mut rng = Rng::new(3);
+    let (cn, sn, _) = offline_network(&p, &mut rng);
+    let (logits, _) = run_inference(&cn, &sn, ds.image(0));
+    assert_eq!(logits.len(), 10);
+}
+
+/// Circa's offline material must be substantially smaller than the
+/// baseline's for the same network (the storage claim at network scale).
+#[test]
+fn offline_storage_shrinks() {
+    let (pb, _) = plan(ReluVariant::BaselineRelu);
+    let (pc, _) = plan(ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero });
+    let mut rng = Rng::new(4);
+    let (_, _, bytes_b) = offline_network(&pb, &mut rng);
+    let (_, _, bytes_c) = offline_network(&pc, &mut rng);
+    assert!(
+        (bytes_c as f64) < 0.6 * bytes_b as f64,
+        "circa {bytes_c} vs baseline {bytes_b}"
+    );
+}

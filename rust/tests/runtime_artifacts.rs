@@ -1,0 +1,155 @@
+//! Integration: the PJRT runtime executing the AOT artifacts, checked
+//! against the Rust-side oracles. Requires `make artifacts`.
+//!
+//! This closes the cross-language loop: the JAX/Pallas-lowered HLO run
+//! from Rust must agree bit-for-bit with (a) the Rust fault model
+//! (`simfault`) and (b) the Rust plaintext quantized forward
+//! (`nn::weights::LoadedNet::forward_exact`).
+
+use circa::circuits::spec::FaultMode;
+use circa::field::{Fp, PRIME};
+use circa::nn::weights::{accuracy, load_dataset, load_weights};
+use circa::runtime::model_exec::{MODE_EXACT, MODE_NEGPASS, MODE_POSZERO};
+use circa::runtime::{ArtifactDir, CnnExecutable, StochReluExecutable};
+use circa::simfault;
+use circa::util::Rng;
+
+fn client() -> xla::PjRtClient {
+    xla::PjRtClient::cpu().expect("PJRT CPU client")
+}
+
+#[test]
+fn stoch_relu_kernel_matches_rust_fault_model() {
+    let dir = ArtifactDir::discover().expect("artifacts built");
+    let c = client();
+    let exe = StochReluExecutable::load(&c, &dir).unwrap();
+    let mut rng = Rng::new(1);
+    let n = exe.n;
+    // Mixed-magnitude signed activations.
+    let x: Vec<i32> = (0..n)
+        .map(|i| {
+            let mag = rng.below(1 << (4 + (i % 24))) as i64;
+            (if rng.bool() { mag } else { -mag }) as i32
+        })
+        .collect();
+    let t: Vec<i32> = (0..n).map(|_| rng.below(PRIME) as i32).collect();
+
+    for (k, mode, fm) in [
+        (0, MODE_POSZERO, FaultMode::PosZero),
+        (12, MODE_POSZERO, FaultMode::PosZero),
+        (18, MODE_NEGPASS, FaultMode::NegPass),
+    ] {
+        let (y, f) = exe.run(&x, &t, k, mode).unwrap();
+        for i in 0..n {
+            let xi = Fp::from_i64(x[i] as i64);
+            let ti = Fp::new(t[i] as u64);
+            let want_sign = simfault::sample_sign_with_t(xi, ti, k as u32, fm);
+            let want_y = if want_sign { x[i] } else { 0 };
+            assert_eq!(y[i], want_y, "i={i} k={k} mode={mode}");
+            let want_fault = (want_sign != (x[i] >= 0)) as i32;
+            assert_eq!(f[i], want_fault, "fault i={i} k={k}");
+        }
+    }
+}
+
+#[test]
+fn exact_mode_kernel_is_relu() {
+    let dir = ArtifactDir::discover().expect("artifacts built");
+    let c = client();
+    let exe = StochReluExecutable::load(&c, &dir).unwrap();
+    let mut rng = Rng::new(2);
+    let x: Vec<i32> = (0..exe.n).map(|_| rng.below(2_000_001) as i32 - 1_000_000).collect();
+    let t: Vec<i32> = (0..exe.n).map(|_| rng.below(PRIME) as i32).collect();
+    let (y, f) = exe.run(&x, &t, 20, MODE_EXACT).unwrap();
+    assert!(f.iter().all(|&v| v == 0));
+    for i in 0..exe.n {
+        assert_eq!(y[i], x[i].max(0));
+    }
+}
+
+#[test]
+fn cnn_artifact_matches_rust_plaintext_forward() {
+    let dir = ArtifactDir::discover().expect("artifacts built");
+    let c = client();
+    let exe = CnnExecutable::load_cnn(&c, &dir).unwrap();
+    let net = load_weights(&dir.path("weights.bin")).unwrap();
+    let ds = load_dataset(&dir.path("dataset.bin")).unwrap();
+    let b = exe.batch;
+
+    // Exact mode (mode=2): PJRT logits must equal the Rust field-
+    // arithmetic forward pass exactly.
+    let images: Vec<i32> =
+        ds.images[..b * ds.dim].iter().map(|f| f.to_i64() as i32).collect();
+    let zeros1 = vec![0i32; b * 8 * 8 * 8];
+    let zeros2 = vec![0i32; b * 16 * 4 * 4];
+    let out = exe.run(&images, &zeros1, &zeros2, 0, MODE_EXACT).unwrap();
+    assert_eq!(out.total_faults(), 0);
+
+    for row in 0..8 {
+        let input: Vec<Fp> = ds.image(row).to_vec();
+        let want = net.forward_exact(&input);
+        let got = &out.logits[row * 10..(row + 1) * 10];
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(*g as i64, w.to_i64(), "row {row}");
+        }
+    }
+}
+
+#[test]
+fn cnn_accuracy_flat_then_cliff() {
+    // The Fig. 4 shape at smoke scale: accuracy(k=12) ≈ accuracy(exact),
+    // accuracy(k=22) ≈ chance.
+    let dir = ArtifactDir::discover().expect("artifacts built");
+    let c = client();
+    let exe = CnnExecutable::load_cnn(&c, &dir).unwrap();
+    let ds = load_dataset(&dir.path("dataset.bin")).unwrap();
+    let b = exe.batch;
+    let mut rng = Rng::new(3);
+
+    let images: Vec<i32> =
+        ds.images[..b * ds.dim].iter().map(|f| f.to_i64() as i32).collect();
+    let labels = &ds.labels[..b];
+    let t1: Vec<i32> = (0..b * 512).map(|_| rng.below(PRIME) as i32).collect();
+    let t2: Vec<i32> = (0..b * 256).map(|_| rng.below(PRIME) as i32).collect();
+
+    let acc_of = |out: &circa::runtime::ModelOutput| {
+        let logits: Vec<Vec<Fp>> = (0..b)
+            .map(|i| {
+                out.logits[i * 10..(i + 1) * 10].iter().map(|&v| Fp::from_i64(v as i64)).collect()
+            })
+            .collect();
+        accuracy(&logits, labels)
+    };
+
+    let exact = exe.run(&images, &t1, &t2, 0, MODE_EXACT).unwrap();
+    let k12 = exe.run(&images, &t1, &t2, 12, MODE_POSZERO).unwrap();
+    let k22 = exe.run(&images, &t1, &t2, 22, MODE_POSZERO).unwrap();
+
+    let (a_exact, a_12, a_22) = (acc_of(&exact), acc_of(&k12), acc_of(&k22));
+    assert!(a_exact > 0.85, "exact accuracy {a_exact}");
+    assert!((a_exact - a_12).abs() < 0.05, "k=12 hurt accuracy: {a_exact} vs {a_12}");
+    assert!(a_22 < 0.5, "k=22 should collapse: {a_22}");
+    assert!(k12.total_faults() > 0);
+    assert!(k22.total_faults() > k12.total_faults());
+}
+
+#[test]
+fn mlp_artifact_loads_and_runs() {
+    let dir = ArtifactDir::discover().expect("artifacts built");
+    let c = client();
+    let exe = CnnExecutable::load_mlp(&c, &dir).unwrap();
+    let ds = load_dataset(&dir.path("dataset.bin")).unwrap();
+    let b = exe.batch;
+    let mut rng = Rng::new(4);
+    let images: Vec<i32> =
+        ds.images[..b * ds.dim].iter().map(|f| f.to_i64() as i32).collect();
+    let t1: Vec<i32> = (0..b * 128).map(|_| rng.below(PRIME) as i32).collect();
+    let t2: Vec<i32> = (0..b * 64).map(|_| rng.below(PRIME) as i32).collect();
+    let out = exe.run(&images, &t1, &t2, 12, MODE_POSZERO).unwrap();
+    assert_eq!(out.logits.len(), b * 10);
+    let labels = &ds.labels[..b];
+    let logits: Vec<Vec<Fp>> = (0..b)
+        .map(|i| out.logits[i * 10..(i + 1) * 10].iter().map(|&v| Fp::from_i64(v as i64)).collect())
+        .collect();
+    assert!(accuracy(&logits, labels) > 0.8);
+}
