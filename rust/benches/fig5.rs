@@ -85,4 +85,27 @@ fn main() {
         "\nResNet-32 client storage: baseline {base_gb:.2} GB -> Circa(k=12) {circa_gb:.2} GB \
          (paper: ~5 GB -> ~1 GB at fancy-garbling sizes)"
     );
+
+    // Cross-check the size model against *materialized* layer batches:
+    // since the SoA refactor, per-ReLU storage is a buffer length divided
+    // by n, not a per-object sum.
+    use circa::circuits::spec::ReluVariant;
+    use circa::protocol::offline::{circa_variant, offline_relu_layer};
+    use circa::util::Rng;
+    let mut rng = Rng::new(5);
+    let n = 64usize;
+    let xc: Vec<circa::Fp> = (0..n as i64).map(circa::Fp::from_i64).collect();
+    println!("\nmaterialized layer batches (n = {n}) — bytes/ReLU from buffer lengths:");
+    for (name, variant, cost) in [
+        ("ReLU (baseline)", ReluVariant::BaselineRelu, &variants[0].1),
+        ("~Sign_k (k=12)", circa_variant(12), &variants[3].1),
+    ] {
+        let (cm, _) = offline_relu_layer(variant, &xc, &mut rng);
+        let per_relu_tables = cm.gc.table_bytes() / n;
+        assert_eq!(per_relu_tables, cost.table_bytes(), "{name}: size model drift");
+        println!(
+            "  {name:<18} tables {per_relu_tables} B/ReLU, offline total {} B/ReLU",
+            cm.offline_bytes as usize / n
+        );
+    }
 }

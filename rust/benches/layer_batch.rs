@@ -1,0 +1,151 @@
+//! Layer-batch ablation: per-ReLU heap objects vs the flat SoA layer
+//! batches that now back the offline material.
+//!
+//! The legacy representation (a `Vec<GarbledCircuit>` +
+//! `Vec<InputEncoding>` + `Vec<Vec<Label>>` forest, reconstructed here
+//! from the low-level GC primitives) is timed against the batched path
+//! ([`circa::gc::batch`]) on the same workload: offline garbling of one
+//! layer and the online GC hot loop (label encode → evaluate → color
+//! decode; the Beaver round is representation-independent and excluded
+//! from both sides). Results land in `BENCH_layer_batch.json` so the perf
+//! trajectory is tracked across PRs.
+
+use circa::bench_harness::print_row;
+use circa::bench_harness::tables::write_bench_json;
+use circa::circuits::spec::ReluVariant;
+use circa::field::{random_fp, Fp};
+use circa::gc::eval::evaluate_with_scratch;
+use circa::gc::garble::{garble_with_scratch, GarbledCircuit, InputEncoding};
+use circa::ot;
+use circa::prf::Label;
+use circa::protocol::offline::{circa_variant, offline_relu_layer};
+use circa::protocol::online::{decode_server_shares, encode_server_labels};
+use circa::ss::SharePair;
+use circa::util::{Rng, Timer};
+
+/// The seed-era per-ReLU object forest, kept as the bench baseline.
+struct LegacyLayer {
+    gcs: Vec<GarbledCircuit>,
+    encodings: Vec<InputEncoding>,
+    client_labels: Vec<Vec<Label>>,
+}
+
+fn legacy_offline(variant: ReluVariant, xc: &[Fp], rng: &mut Rng) -> LegacyLayer {
+    let spec = variant.spec();
+    let circuit = spec.build_circuit();
+    let mut scratch = Vec::new();
+    let mut gcs = Vec::new();
+    let mut encodings = Vec::new();
+    let mut client_labels = Vec::new();
+    for &x in xc {
+        let (gc, enc) = garble_with_scratch(&circuit, rng, &mut scratch);
+        let rv = random_fp(rng);
+        let rout = random_fp(rng);
+        let bits = spec.client_bits(x, rv, rout);
+        client_labels.push(ot::ot_choose(&enc, 0, &bits).labels);
+        if spec.uses_beaver() {
+            // Same dealer work as the batched offline path draws.
+            let _ = circa::beaver::gen_triple(rng);
+        }
+        gcs.push(gc);
+        encodings.push(enc);
+    }
+    LegacyLayer { gcs, encodings, client_labels }
+}
+
+fn legacy_online(variant: ReluVariant, layer: &LegacyLayer, xs: &[Fp]) -> Vec<bool> {
+    let spec = variant.spec();
+    let circuit = spec.build_circuit();
+    let base = spec.server_input_base();
+    let mut colors = Vec::with_capacity(xs.len() * spec.n_outputs);
+    let mut eval_labels: Vec<Label> = Vec::new();
+    let mut scratch: Vec<Label> = Vec::new();
+    for (i, &x) in xs.iter().enumerate() {
+        let bits = spec.server_bits(x);
+        eval_labels.clear();
+        eval_labels.extend_from_slice(&layer.client_labels[i]);
+        eval_labels
+            .extend(bits.iter().enumerate().map(|(j, &b)| layer.encodings[i].encode(base + j, b)));
+        let out = evaluate_with_scratch(&circuit, &layer.gcs[i], &eval_labels, &mut scratch);
+        colors.extend(out.iter().map(|l| l.color()));
+    }
+    colors
+}
+
+fn bench_variant(name: &str, variant: ReluVariant, n: usize, results: &mut Vec<(String, f64)>) {
+    let mut rng = Rng::new(0x1A7E5);
+    let shares: Vec<SharePair> = (0..n)
+        .map(|i| SharePair::share(Fp::from_i64(1000 + i as i64), &mut rng))
+        .collect();
+    let xc: Vec<Fp> = shares.iter().map(|s| s.client).collect();
+    let xs: Vec<Fp> = shares.iter().map(|s| s.server).collect();
+
+    // Legacy: per-ReLU heap objects.
+    let t = Timer::new();
+    let legacy = legacy_offline(variant, &xc, &mut rng);
+    let legacy_off_us = t.elapsed_s() * 1e6 / n as f64;
+    let t = Timer::new();
+    let legacy_colors = legacy_online(variant, &legacy, &xs);
+    let legacy_on_us = t.elapsed_s() * 1e6 / n as f64;
+
+    // Batched: flat SoA layer material.
+    let t = Timer::new();
+    let (cm, sm) = offline_relu_layer(variant, &xc, &mut rng);
+    let batch_off_us = t.elapsed_s() * 1e6 / n as f64;
+    let t = Timer::new();
+    let labels = encode_server_labels(&sm, &xs);
+    let mut batch_colors = Vec::with_capacity(legacy_colors.len());
+    cm.gc.eval_layer_colors(&cm.client_labels, &labels, &mut batch_colors);
+    let shares_out = decode_server_shares(&sm, &batch_colors);
+    let batch_on_us = t.elapsed_s() * 1e6 / n as f64;
+    assert_eq!(shares_out.len(), n);
+    assert_eq!(batch_colors.len(), legacy_colors.len());
+
+    let widths = [16, 12, 12, 12, 12, 8];
+    print_row(
+        &[
+            name.to_string(),
+            format!("{legacy_off_us:.2}"),
+            format!("{batch_off_us:.2}"),
+            format!("{legacy_on_us:.2}"),
+            format!("{batch_on_us:.2}"),
+            format!("{:.2}x", legacy_on_us / batch_on_us),
+        ],
+        &widths,
+    );
+    for (key, v) in [
+        ("legacy_offline_us_per_relu", legacy_off_us),
+        ("batch_offline_us_per_relu", batch_off_us),
+        ("legacy_online_us_per_relu", legacy_on_us),
+        ("batch_online_us_per_relu", batch_on_us),
+        ("online_speedup", legacy_on_us / batch_on_us),
+        ("offline_speedup", legacy_off_us / batch_off_us),
+    ] {
+        results.push((format!("{name}.{key}"), v));
+    }
+    results.push((format!("{name}.table_bytes_per_relu"), cm.gc.table_bytes() as f64 / n as f64));
+}
+
+fn main() {
+    let n = std::env::var("BATCH_RELUS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4096usize)
+        .max(1);
+    println!("=== layer batch vs per-ReLU objects (n = {n} ReLUs/layer) ===\n");
+    let widths = [16, 12, 12, 12, 12, 8];
+    print_row(
+        &["variant", "off us (old)", "off us (new)", "on us (old)", "on us (new)", "on x"]
+            .map(String::from),
+        &widths,
+    );
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    bench_variant("baseline", ReluVariant::BaselineRelu, n, &mut results);
+    bench_variant("circa_k12", circa_variant(12), n, &mut results);
+    results.push(("n_relus".to_string(), n as f64));
+
+    let entries: Vec<(&str, f64)> = results.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    write_bench_json("BENCH_layer_batch.json", &entries);
+    println!("\n(wrote bench_out/BENCH_layer_batch.json)");
+}

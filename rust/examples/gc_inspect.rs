@@ -9,7 +9,6 @@ use circa::circuits::spec::{FaultMode, ReluVariant};
 use circa::circuits::stoch_sign_gc;
 use circa::field::Fp;
 use circa::gc::size::CircuitCost;
-use circa::protocol::offline::{build_circuit, server_input_base};
 use circa::ss::SharePair;
 use circa::util::args::Args;
 use circa::util::{Rng, Timer};
@@ -31,9 +30,10 @@ fn main() {
         "variant", "ANDs", "XORs", "cli-in", "srv-in", "table B", "total B"
     );
     for v in variants {
-        let c = build_circuit(v);
+        let spec = v.spec();
+        let c = spec.build_circuit();
         let cost = CircuitCost::of(&c);
-        let srv_base = server_input_base(v);
+        let srv_base = spec.server_input_base();
         println!(
             "{:<22} {:>6} {:>6} {:>8} {:>8} {:>10} {:>10}",
             v.name(),

@@ -80,6 +80,13 @@ fn run_variant(
         svc.pool.produced(),
         snap.pool_dry_events
     );
+    if snap.pool_dry_events > 0 {
+        println!(
+            "  dry inline-deal ms: mean {:.1}  p99 {:.1}",
+            snap.dry_deal_mean_us / 1e3,
+            snap.dry_deal_p99_us as f64 / 1e3
+        );
+    }
     svc.shutdown();
 }
 

@@ -99,9 +99,35 @@ pub struct Fig5Paper {
 pub const FIG5_PAPER: Fig5Paper =
     Fig5Paper { baseline_kb: 17.2, sign_kb: 12.3, stoch_kb: 9.05, trunc12_kb: 3.66 };
 
+/// Write a flat JSON object of numeric benchmark results under
+/// `bench_out/` (no serde in the offline vendor set; a single flat map is
+/// all the perf-trajectory tooling reads). Used by
+/// `cargo bench --bench layer_batch` to emit `BENCH_layer_batch.json`.
+pub fn write_bench_json(name: &str, entries: &[(&str, f64)]) {
+    let dir = std::path::Path::new("bench_out");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(name);
+    let body: Vec<String> =
+        entries.iter().map(|(k, v)| format!("  \"{k}\": {v}")).collect();
+    let json = format!("{{\n{}\n}}\n", body.join(",\n"));
+    std::fs::write(&path, json).expect("write bench json");
+    eprintln!("  [json] wrote {}", path.display());
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bench_json_is_flat_and_parseable_shape() {
+        write_bench_json("test_bench.json", &[("a_us", 1.5), ("b_ratio", 2.0)]);
+        let text = std::fs::read_to_string("bench_out/test_bench.json").unwrap();
+        assert!(text.starts_with("{\n"));
+        assert!(text.contains("\"a_us\": 1.5"));
+        assert!(text.contains("\"b_ratio\": 2"));
+        assert!(text.trim_end().ends_with('}'));
+        let _ = std::fs::remove_file("bench_out/test_bench.json");
+    }
 
     #[test]
     fn specs_match_published_relu_counts() {

@@ -9,8 +9,10 @@
 //! | stochastic sign (Fig. 2c) | [`stoch_sign_gc`] | share compare + MUX | `|x|/p` (Thm 3.1) |
 //! | truncated stochastic sign (Eq. 3) | [`trunc_sign_gc`] | (m−k)-bit compare + MUX | + `(2^k−|x|)/2^k` for `|x|<2^k` (Thm 3.2) |
 //!
-//! [`spec`] carries the shared input/output conventions and the
-//! [`spec::ReluVariant`] enum the protocol and benches dispatch on.
+//! [`spec`] carries the shared input/output conventions, the
+//! [`spec::ReluVariant`] enum, and the resolved [`spec::VariantSpec`]
+//! behavior table the protocol layers dispatch through (circuit builder,
+//! input layout, `k`, and both parties' bit encoders).
 
 pub mod relu_gc;
 pub mod sign_gc;
@@ -18,4 +20,4 @@ pub mod spec;
 pub mod stoch_sign_gc;
 pub mod trunc_sign_gc;
 
-pub use spec::{FaultMode, ReluVariant};
+pub use spec::{FaultMode, ReluVariant, VariantSpec};

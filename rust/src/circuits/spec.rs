@@ -1,12 +1,20 @@
-//! Shared conventions for the ReLU circuit family.
+//! Shared conventions for the ReLU circuit family, and the single point
+//! of truth for per-variant behavior ([`VariantSpec`]).
 //!
 //! All circuits operate on `m = 31`-bit little-endian buses of field
 //! elements. Inputs always arrive in the order the figures draw them:
 //! client inputs first (so the OT accounting can split them off), then
 //! server inputs.
+//!
+//! Everything the protocol layers need to know about a variant — circuit
+//! builder, input layout and base offsets, truncation level `k`, and the
+//! client/server bit encoders — lives on [`VariantSpec`]. The protocol
+//! phases dispatch through it instead of re-matching on [`ReluVariant`],
+//! so adding a variant touches exactly this file plus its circuit module.
 
 use crate::field::{Fp, FIELD_BITS, PRIME};
 use crate::gc::build::{bits_to_u64, u64_to_bits};
+use crate::gc::circuit::Circuit;
 
 /// Truncation fault mode (§3.2, "Putting it All Together").
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -65,6 +73,108 @@ impl ReluVariant {
     pub fn uses_beaver(self) -> bool {
         !matches!(self, ReluVariant::BaselineRelu)
     }
+
+    /// The variant's resolved layout + behavior table.
+    pub fn spec(self) -> VariantSpec {
+        let (k, n_client_inputs) = match self {
+            ReluVariant::BaselineRelu => (0, super::relu_gc::N_CLIENT_INPUTS),
+            ReluVariant::NaiveSign => (0, super::sign_gc::N_CLIENT_INPUTS),
+            ReluVariant::StochasticSign { .. } => (0, super::stoch_sign_gc::n_client_inputs(0)),
+            ReluVariant::TruncatedSign { k, .. } => (k, super::stoch_sign_gc::n_client_inputs(k)),
+        };
+        let n_server_inputs = match self {
+            ReluVariant::BaselineRelu => super::relu_gc::N_SERVER_INPUTS,
+            ReluVariant::NaiveSign => super::sign_gc::N_SERVER_INPUTS,
+            ReluVariant::StochasticSign { .. } | ReluVariant::TruncatedSign { .. } => {
+                super::stoch_sign_gc::n_server_inputs(k)
+            }
+        };
+        VariantSpec { variant: self, k, n_client_inputs, n_server_inputs, n_outputs: FIELD_BITS }
+    }
+}
+
+/// Resolved per-variant behavior: circuit construction, input layout and
+/// base offsets, truncation level, and the two parties' bit encoders.
+/// This replaces the free-floating `match variant` ladders that used to
+/// be smeared across the protocol phase modules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VariantSpec {
+    pub variant: ReluVariant,
+    /// Truncation level (`0` for the non-truncated variants).
+    pub k: u32,
+    /// Client input bits per ReLU (the OT'd block at the front of the
+    /// circuit's input layout).
+    pub n_client_inputs: usize,
+    /// Server input bits per ReLU (the online-label block).
+    pub n_server_inputs: usize,
+    /// Circuit output bits per ReLU (always one field bus).
+    pub n_outputs: usize,
+}
+
+impl VariantSpec {
+    /// Index of the first server input bit within the input layout.
+    pub fn server_input_base(&self) -> usize {
+        self.n_client_inputs
+    }
+
+    /// Total circuit inputs per ReLU.
+    pub fn n_inputs(&self) -> usize {
+        self.n_client_inputs + self.n_server_inputs
+    }
+
+    /// Does this variant consume a Beaver triple per ReLU?
+    pub fn uses_beaver(&self) -> bool {
+        self.variant.uses_beaver()
+    }
+
+    /// Build the variant's circuit (one template per *layer* — every ReLU
+    /// in a layer garbles the same structure with fresh labels).
+    pub fn build_circuit(&self) -> Circuit {
+        match self.variant {
+            ReluVariant::BaselineRelu => super::relu_gc::build(),
+            ReluVariant::NaiveSign => super::sign_gc::build(),
+            ReluVariant::StochasticSign { mode } => super::stoch_sign_gc::build(mode),
+            ReluVariant::TruncatedSign { k, mode } => {
+                super::stoch_sign_gc::build_truncated(k, mode)
+            }
+        }
+    }
+
+    /// The client's GC input bits for one ReLU, given its offline-known
+    /// share `xc` and its chosen randomness (`r_v` feeds the sign
+    /// variants, `r_out` the baseline's output mask).
+    pub fn client_bits(&self, xc: Fp, r_v: Fp, r_out: Fp) -> Vec<bool> {
+        match self.variant {
+            ReluVariant::BaselineRelu => {
+                // Fig 2(a): ⟨x⟩_c then r (the output mask).
+                let mut bits = fp_bits(xc);
+                bits.extend(fp_bits(r_out));
+                bits
+            }
+            ReluVariant::NaiveSign => {
+                // Fig 2(b): ⟨x⟩_c, −r_v, 1−r_v.
+                let mut bits = fp_bits(xc);
+                bits.extend(fp_bits(-r_v));
+                bits.extend(fp_bits(Fp::ONE - r_v));
+                bits
+            }
+            ReluVariant::StochasticSign { .. } | ReluVariant::TruncatedSign { .. } => {
+                super::stoch_sign_gc::client_input_bits(xc, r_v, self.k)
+            }
+        }
+    }
+
+    /// The server's GC input bits for one ReLU, given its online share.
+    pub fn server_bits(&self, xs: Fp) -> Vec<bool> {
+        match self.variant {
+            ReluVariant::BaselineRelu | ReluVariant::NaiveSign => {
+                u64_to_bits(xs.raw(), FIELD_BITS)
+            }
+            ReluVariant::StochasticSign { .. } | ReluVariant::TruncatedSign { .. } => {
+                super::stoch_sign_gc::server_input_bits(xs, self.k)
+            }
+        }
+    }
 }
 
 /// Encode a field element onto an m-bit bus (little-endian bools).
@@ -120,5 +230,49 @@ mod tests {
     fn beaver_usage() {
         assert!(!ReluVariant::BaselineRelu.uses_beaver());
         assert!(ReluVariant::NaiveSign.uses_beaver());
+    }
+
+    fn all_variants() -> Vec<ReluVariant> {
+        vec![
+            ReluVariant::BaselineRelu,
+            ReluVariant::NaiveSign,
+            ReluVariant::StochasticSign { mode: FaultMode::PosZero },
+            ReluVariant::StochasticSign { mode: FaultMode::NegPass },
+            ReluVariant::TruncatedSign { k: 8, mode: FaultMode::PosZero },
+            ReluVariant::TruncatedSign { k: 12, mode: FaultMode::NegPass },
+        ]
+    }
+
+    #[test]
+    fn spec_layout_matches_built_circuit() {
+        for v in all_variants() {
+            let spec = v.spec();
+            let c = spec.build_circuit();
+            assert_eq!(c.n_inputs as usize, spec.n_inputs(), "{v:?}");
+            assert_eq!(c.outputs.len(), spec.n_outputs, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn spec_encoders_match_layout_widths() {
+        let mut rng = crate::util::Rng::new(9);
+        for v in all_variants() {
+            let spec = v.spec();
+            let (xc, rv, rout) = (
+                crate::field::random_fp(&mut rng),
+                crate::field::random_fp(&mut rng),
+                crate::field::random_fp(&mut rng),
+            );
+            assert_eq!(spec.client_bits(xc, rv, rout).len(), spec.n_client_inputs, "{v:?}");
+            assert_eq!(spec.server_bits(xc).len(), spec.n_server_inputs, "{v:?}");
+            assert_eq!(spec.server_input_base(), spec.n_client_inputs);
+        }
+    }
+
+    #[test]
+    fn spec_k_zero_unless_truncated() {
+        assert_eq!(ReluVariant::BaselineRelu.spec().k, 0);
+        assert_eq!(ReluVariant::StochasticSign { mode: FaultMode::PosZero }.spec().k, 0);
+        assert_eq!(ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero }.spec().k, 12);
     }
 }

@@ -20,6 +20,9 @@ struct Inner {
     online_us: Histogram,
     queue_us: Histogram,
     total_us: Histogram,
+    /// Inline-deal latency of pool-dry leases — the offline-throughput
+    /// shortfall as the request path actually pays it.
+    dry_deal_us: Histogram,
 }
 
 /// A snapshot for reporting.
@@ -35,6 +38,8 @@ pub struct Snapshot {
     pub queue_mean_us: f64,
     pub total_p50_us: u64,
     pub total_p99_us: u64,
+    pub dry_deal_mean_us: f64,
+    pub dry_deal_p99_us: u64,
 }
 
 impl Metrics {
@@ -45,6 +50,14 @@ impl Metrics {
         g.queue_us.record_us(queue_us);
         g.online_us.record_us(online_us);
         g.total_us.record_us(queue_us + online_us);
+    }
+
+    /// Record a pool-dry lease: bumps the counter and feeds the measured
+    /// inline-deal latency into its histogram, so pool-dry tail latency
+    /// is visible (e.g. in `serve_pi`), not just its frequency.
+    pub fn record_dry_deal(&self, deal_us: u64) {
+        self.pool_dry_events.fetch_add(1, Ordering::Relaxed);
+        self.inner.lock().unwrap().dry_deal_us.record_us(deal_us);
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -60,6 +73,8 @@ impl Metrics {
             queue_mean_us: g.queue_us.mean_us(),
             total_p50_us: g.total_us.percentile_us(50.0),
             total_p99_us: g.total_us.percentile_us(99.0),
+            dry_deal_mean_us: g.dry_deal_us.mean_us(),
+            dry_deal_p99_us: g.dry_deal_us.percentile_us(99.0),
         }
     }
 }
@@ -80,5 +95,17 @@ mod tests {
         assert_eq!(s.bytes_online, 128);
         assert!(s.online_mean_us >= 1000.0);
         assert!(s.total_p99_us >= s.total_p50_us);
+    }
+
+    #[test]
+    fn dry_deal_latency_recorded() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().dry_deal_mean_us, 0.0);
+        m.record_dry_deal(5_000);
+        m.record_dry_deal(15_000);
+        let s = m.snapshot();
+        assert_eq!(s.pool_dry_events, 2);
+        assert!((s.dry_deal_mean_us - 10_000.0).abs() < 1e-9);
+        assert!(s.dry_deal_p99_us >= 15_000);
     }
 }

@@ -3,18 +3,28 @@
 //! Private inference has an unusual serving profile: every inference
 //! consumes single-use offline material (garbled circuits, OTs, Beaver
 //! triples — paper footnote 2), so a production server must *bank*
-//! material ahead of demand and spend it on the online path. The
-//! coordinator mirrors the vLLM-router shape adapted to that constraint:
+//! material ahead of demand and spend it on the online path. Since the
+//! layer-batch refactor, that material is flat SoA per layer
+//! ([`crate::gc::batch`]): a banked session is a handful of contiguous
+//! buffers per ReLU layer (one circuit template, one table buffer, one
+//! label arena), which keeps dealer throughput allocation-light and makes
+//! a session's byte footprint an exact sum of buffer lengths — the shape
+//! wire serialization and cross-process session shipping need.
+//!
+//! The coordinator mirrors the vLLM-router shape adapted to that
+//! constraint:
 //!
 //! * [`pool`] — the offline-material bank: background dealer threads keep
 //!   `target` ready-to-serve sessions; the online path leases one per
-//!   request and never garbles inline unless the bank runs dry.
+//!   request. A dry lease deals inline and reports the measured deal
+//!   latency ([`pool::Lease`]) so the shortfall lands in the latency
+//!   histograms, not just a counter.
 //! * [`batcher`] — groups incoming requests into dispatch batches
 //!   (max-size / max-delay policy, the classic dynamic batcher).
 //! * [`router`] — a worker pool running the 2-party online protocol for
 //!   each leased session.
-//! * [`metrics`] — latency histograms (online / queue / total),
-//!   throughput counters, pool-dry counters.
+//! * [`metrics`] — latency histograms (online / queue / total /
+//!   dry-deal), throughput counters, pool-dry counters.
 //! * [`service`] — the assembled `PiService` front-end used by
 //!   `examples/serve_pi.rs` and the `circa serve` CLI.
 
@@ -25,5 +35,5 @@ pub mod router;
 pub mod service;
 
 pub use metrics::Metrics;
-pub use pool::MaterialPool;
+pub use pool::{Lease, MaterialPool};
 pub use service::{PiService, ServiceConfig};

@@ -9,7 +9,7 @@
 
 use crate::protocol::client::ClientNet;
 use crate::protocol::server::{offline_network, NetworkPlan, ServerNet};
-use crate::util::Rng;
+use crate::util::{Rng, Timer};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -20,6 +20,16 @@ pub struct Session {
     pub client: ClientNet,
     pub server: ServerNet,
     pub offline_bytes: u64,
+}
+
+/// Outcome of [`MaterialPool::lease`]: the session plus where it came
+/// from. A dry lease carries the inline-deal latency so the caller can
+/// surface it as tail latency (the serving metrics record it).
+pub struct Lease {
+    pub session: Session,
+    pub was_dry: bool,
+    /// Microseconds spent dealing inline (0 for banked sessions).
+    pub deal_us: u64,
 }
 
 struct Shared {
@@ -77,20 +87,27 @@ impl MaterialPool {
         Self { plan, shared, target, dealers }
     }
 
-    /// Lease a session: pop a banked one, or deal inline when dry.
-    pub fn lease(&self, rng: &mut Rng) -> (Session, bool) {
+    /// Lease a session: pop a banked one, or deal inline when dry. The
+    /// dry path measures the inline deal so callers can record it into
+    /// the serving [`super::Metrics`] — pool-dry tail latency is exactly
+    /// what a deployment's offline-throughput shortfall looks like.
+    pub fn lease(&self, rng: &mut Rng) -> Lease {
         {
             let mut q = self.shared.queue.lock().unwrap();
             if let Some(s) = q.pop_front() {
                 self.shared.refill.notify_all();
-                return (s, false);
+                return Lease { session: s, was_dry: false, deal_us: 0 };
             }
         }
-        // Dry: prepare inline (this is what the latency histogram should
-        // see when offline throughput can't keep up).
+        // Dry: prepare inline, and time it.
         self.shared.dry_leases.fetch_add(1, Ordering::Relaxed);
+        let t = Timer::new();
         let (client, server, offline_bytes) = offline_network(&self.plan, rng);
-        ((Session { client, server, offline_bytes }), true)
+        Lease {
+            session: Session { client, server, offline_bytes },
+            was_dry: true,
+            deal_us: t.elapsed_us(),
+        }
     }
 
     /// Block until at least `n` sessions are banked (warmup).
@@ -144,9 +161,10 @@ mod tests {
         pool.wait_ready(4);
         assert!(pool.banked() >= 4);
         let mut rng = Rng::new(2);
-        let (s, was_dry) = pool.lease(&mut rng);
-        assert!(!was_dry);
-        assert!(s.offline_bytes > 0);
+        let lease = pool.lease(&mut rng);
+        assert!(!lease.was_dry);
+        assert_eq!(lease.deal_us, 0);
+        assert!(lease.session.offline_bytes > 0);
         pool.shutdown();
     }
 
@@ -155,8 +173,9 @@ mod tests {
         // Zero-target pool: every lease is dry but must still work.
         let pool = MaterialPool::start(tiny_plan(), 0, 1, 8);
         let mut rng = Rng::new(3);
-        let (_s, was_dry) = pool.lease(&mut rng);
-        assert!(was_dry);
+        let lease = pool.lease(&mut rng);
+        assert!(lease.was_dry);
+        assert!(lease.deal_us > 0, "inline deal latency must be measured");
         assert_eq!(pool.dry_leases(), 1);
         pool.shutdown();
     }

@@ -55,13 +55,15 @@ pub fn spawn_workers(
                 };
                 for req in batch {
                     let queue_us = req.enqueued.elapsed().as_micros() as u64;
-                    let (session, was_dry) = pool.lease(&mut rng);
-                    if was_dry {
-                        metrics.pool_dry_events.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let lease = pool.lease(&mut rng);
+                    if lease.was_dry {
+                        // Counter + inline-deal latency histogram: a dry
+                        // bank shows up as measurable tail latency.
+                        metrics.record_dry_deal(lease.deal_us);
                     }
                     let t = Timer::new();
                     let (logits, stats) =
-                        run_inference(&session.client, &session.server, &req.input);
+                        run_inference(&lease.session.client, &lease.session.server, &req.input);
                     let online_us = t.elapsed_us();
                     let bytes = stats.bytes_to_client + stats.bytes_to_server;
                     metrics.record(queue_us, online_us, bytes);
@@ -71,7 +73,7 @@ pub fn spawn_workers(
                         queue_us,
                         online_us,
                         bytes,
-                        served_from_bank: !was_dry,
+                        served_from_bank: !lease.was_dry,
                     });
                 }
             })

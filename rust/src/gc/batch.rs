@@ -1,0 +1,326 @@
+//! Layer-level SoA batches of garbled material.
+//!
+//! Circa's costs scale with the ReLU count (CryptoNAS makes ReLUs *the*
+//! scaling axis), and every ReLU in a layer garbles the **same** circuit
+//! template with fresh labels. Storing the layer's offline material as a
+//! forest of per-ReLU heap objects (`Vec<GarbledCircuit>`,
+//! `Vec<InputEncoding>`, `Vec<Vec<Label>>`) therefore pays O(#ReLU)
+//! allocations and pointer chasing for material that is structurally one
+//! buffer. This module flattens it:
+//!
+//! * [`LayerGcBatch`] — one shared [`Circuit`] plus one contiguous
+//!   ciphertext buffer (`n × and_stride` table entries) and one
+//!   contiguous decode-bit buffer, with strided per-ReLU views;
+//! * [`LayerEncodingBatch`] — one contiguous `label0` arena
+//!   (`n × n_inputs` labels, the label0 of input `j` of ReLU `i` at
+//!   `i · stride + j`) plus one free-XOR delta per ReLU.
+//!
+//! Garbling and evaluation walk the shared circuit once per ReLU with an
+//! outer stride loop, reusing one wire-label scratch buffer across the
+//! whole layer — allocations drop from O(#ReLU) to O(#layer), and byte
+//! accounting falls out of `buffer.len()`.
+
+use super::circuit::Circuit;
+use super::eval;
+use super::garble::{self, EncodingView};
+use crate::prf::{Delta, Label};
+use crate::util::Rng;
+
+/// One layer's garbled tables: a single [`Circuit`] template and one
+/// contiguous table/decode buffer with fixed per-ReLU strides.
+pub struct LayerGcBatch {
+    /// The shared circuit template (one per layer, not per ReLU).
+    pub circuit: Circuit,
+    /// AND gates per instance — the table stride.
+    and_stride: usize,
+    /// Output bits per instance — the decode stride.
+    out_stride: usize,
+    /// `n × and_stride` ciphertext pairs, ReLU-major.
+    tables: Vec<[Label; 2]>,
+    /// `n × out_stride` point-and-permute decode bits, ReLU-major.
+    output_decode: Vec<bool>,
+    /// Number of garbled instances.
+    n: usize,
+}
+
+impl LayerGcBatch {
+    /// An empty batch for `n` ReLUs of `circuit` (filled by
+    /// [`LayerGcBatch::garble_next`]).
+    pub fn new(circuit: Circuit, n: usize) -> Self {
+        let and_stride = circuit.n_and();
+        let out_stride = circuit.outputs.len();
+        Self {
+            circuit,
+            and_stride,
+            out_stride,
+            tables: Vec::with_capacity(n * and_stride),
+            output_decode: Vec::with_capacity(n * out_stride),
+            n: 0,
+        }
+    }
+
+    /// Garble the next instance into this batch (and its input encoding
+    /// into `enc`), reusing `scratch` for the wire labels. RNG draw order
+    /// matches the standalone [`garble::garble_with_scratch`] exactly.
+    pub fn garble_next(
+        &mut self,
+        enc: &mut LayerEncodingBatch,
+        rng: &mut Rng,
+        scratch: &mut Vec<Label>,
+    ) {
+        let delta = garble::garble_append(
+            &self.circuit,
+            rng,
+            scratch,
+            &mut self.tables,
+            &mut enc.label0,
+            &mut self.output_decode,
+        );
+        enc.deltas.push(delta);
+        self.n += 1;
+    }
+
+    /// Number of garbled instances in the batch.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// This instance's stride of the contiguous table buffer.
+    pub fn table_of(&self, i: usize) -> &[[Label; 2]] {
+        &self.tables[i * self.and_stride..(i + 1) * self.and_stride]
+    }
+
+    /// This instance's stride of the contiguous decode-bit buffer.
+    pub fn decode_of(&self, i: usize) -> &[bool] {
+        &self.output_decode[i * self.out_stride..(i + 1) * self.out_stride]
+    }
+
+    /// The whole layer's decode bits (ReLU-major, stride
+    /// [`LayerGcBatch::out_stride`]).
+    pub fn output_decode(&self) -> &[bool] {
+        &self.output_decode
+    }
+
+    pub fn and_stride(&self) -> usize {
+        self.and_stride
+    }
+
+    pub fn out_stride(&self) -> usize {
+        self.out_stride
+    }
+
+    /// Garbled-table bytes of the whole layer — the paper's storage
+    /// metric, read straight off the buffer length.
+    pub fn table_bytes(&self) -> usize {
+        self.tables.len() * 32
+    }
+
+    /// Evaluate every instance against flat per-ReLU-major label arenas
+    /// (client block then server block per instance) and append one
+    /// output color per output bit to `colors`. One scratch + one input
+    /// buffer serve the whole layer.
+    pub fn eval_layer_colors(
+        &self,
+        client_labels: &[Label],
+        server_labels: &[Label],
+        colors: &mut Vec<bool>,
+    ) {
+        let n = self.n;
+        if n == 0 {
+            // Degenerate empty layer: nothing to evaluate (and no strides
+            // to derive).
+            assert!(client_labels.is_empty() && server_labels.is_empty(), "labels w/o batch");
+            return;
+        }
+        assert_eq!(client_labels.len() % n, 0, "client label arena stride");
+        assert_eq!(server_labels.len() % n, 0, "server label arena stride");
+        let c_stride = client_labels.len() / n;
+        let s_stride = server_labels.len() / n;
+        assert_eq!(c_stride + s_stride, self.circuit.n_inputs as usize, "input arity");
+
+        colors.reserve(n * self.out_stride);
+        let mut inputs: Vec<Label> = Vec::with_capacity(c_stride + s_stride);
+        let mut scratch: Vec<Label> = Vec::new();
+        let mut out: Vec<Label> = Vec::with_capacity(self.out_stride);
+        for i in 0..n {
+            inputs.clear();
+            inputs.extend_from_slice(&client_labels[i * c_stride..(i + 1) * c_stride]);
+            inputs.extend_from_slice(&server_labels[i * s_stride..(i + 1) * s_stride]);
+            out.clear();
+            eval::evaluate_append(&self.circuit, self.table_of(i), &inputs, &mut scratch, &mut out);
+            colors.extend(out.iter().map(|l| l.color()));
+        }
+    }
+}
+
+/// One layer's input encodings: a contiguous `label0` arena with stride =
+/// circuit inputs, plus one free-XOR delta per ReLU (labels must stay
+/// single-use across inferences — paper footnote 2 — so deltas are per
+/// instance, never per layer).
+pub struct LayerEncodingBatch {
+    /// Labels per instance (the arena stride).
+    stride: usize,
+    /// `n × stride` zero-labels, ReLU-major.
+    label0: Vec<Label>,
+    /// One delta per instance.
+    deltas: Vec<Delta>,
+}
+
+impl LayerEncodingBatch {
+    /// An empty arena for `n` instances of `stride` inputs each.
+    pub fn new(stride: usize, n: usize) -> Self {
+        Self { stride, label0: Vec::with_capacity(n * stride), deltas: Vec::with_capacity(n) }
+    }
+
+    /// Number of encoded instances.
+    pub fn len(&self) -> usize {
+        self.deltas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.deltas.is_empty()
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Borrowed view of instance `i`'s encoding (same shape a standalone
+    /// [`garble::InputEncoding`] exposes).
+    pub fn view(&self, i: usize) -> EncodingView<'_> {
+        EncodingView {
+            label0: &self.label0[i * self.stride..(i + 1) * self.stride],
+            delta: self.deltas[i],
+        }
+    }
+
+    /// Label bytes held by the arena (16 B per label).
+    pub fn label_bytes(&self) -> usize {
+        self.label0.len() * 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gc::build::{u64_to_bits, Builder};
+    use crate::gc::garble::garble_with_scratch;
+
+    fn adder_circuit(m: usize) -> Circuit {
+        let mut bld = Builder::new();
+        let a = bld.input_bus(m);
+        let b = bld.input_bus(m);
+        let (s, carry) = bld.add(&a, &b);
+        bld.output_bus(&s);
+        bld.output(carry);
+        bld.build()
+    }
+
+    #[test]
+    fn batch_matches_standalone_garbling_bit_for_bit() {
+        // Same seed, same circuit: the batch path and the per-instance
+        // path must produce identical tables, encodings, and decode bits.
+        let circuit = adder_circuit(8);
+        let n = 5;
+
+        let mut rng_a = Rng::new(42);
+        let mut scratch = Vec::new();
+        let mut batch = LayerGcBatch::new(circuit.clone(), n);
+        let mut enc = LayerEncodingBatch::new(circuit.n_inputs as usize, n);
+        for _ in 0..n {
+            batch.garble_next(&mut enc, &mut rng_a, &mut scratch);
+        }
+
+        let mut rng_b = Rng::new(42);
+        for i in 0..n {
+            let (gc, e) = garble_with_scratch(&circuit, &mut rng_b, &mut scratch);
+            assert_eq!(batch.table_of(i), &gc.table[..], "tables i={i}");
+            assert_eq!(batch.decode_of(i), &gc.output_decode[..], "decode i={i}");
+            assert_eq!(enc.view(i).label0, &e.label0[..], "label0 i={i}");
+            assert_eq!(enc.view(i).delta.0, e.delta.0, "delta i={i}");
+        }
+    }
+
+    #[test]
+    fn layer_eval_matches_plain_eval() {
+        let circuit = adder_circuit(8);
+        let n = 7;
+        let mut rng = Rng::new(7);
+        let mut scratch = Vec::new();
+        let mut batch = LayerGcBatch::new(circuit.clone(), n);
+        let mut enc = LayerEncodingBatch::new(circuit.n_inputs as usize, n);
+        for _ in 0..n {
+            batch.garble_next(&mut enc, &mut rng, &mut scratch);
+        }
+
+        // Treat the first 8 bits as the "client" block and the rest as the
+        // "server" block, as the protocol does.
+        let mut client_arena = Vec::new();
+        let mut server_arena = Vec::new();
+        let mut want = Vec::new();
+        for i in 0..n {
+            let a = rng.below(256);
+            let b = rng.below(256);
+            let mut bits = u64_to_bits(a, 8);
+            bits.extend(u64_to_bits(b, 8));
+            let view = enc.view(i);
+            client_arena.extend((0..8).map(|j| view.encode(j, bits[j])));
+            server_arena.extend((8..16).map(|j| view.encode(j, bits[j])));
+            // Plain oracle: colors = plain value XOR decode bit.
+            let plain = circuit.eval_plain(&bits);
+            want.extend(plain.iter().zip(batch.decode_of(i)).map(|(&v, &d)| v ^ d));
+        }
+
+        let mut colors = Vec::new();
+        batch.eval_layer_colors(&client_arena, &server_arena, &mut colors);
+        assert_eq!(colors, want);
+    }
+
+    #[test]
+    fn strides_and_byte_accounting() {
+        let circuit = adder_circuit(4);
+        let n_and = circuit.n_and();
+        let n_out = circuit.outputs.len();
+        let mut rng = Rng::new(3);
+        let mut scratch = Vec::new();
+        let mut batch = LayerGcBatch::new(circuit.clone(), 3);
+        let mut enc = LayerEncodingBatch::new(circuit.n_inputs as usize, 3);
+        for _ in 0..3 {
+            batch.garble_next(&mut enc, &mut rng, &mut scratch);
+        }
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.and_stride(), n_and);
+        assert_eq!(batch.out_stride(), n_out);
+        assert_eq!(batch.table_bytes(), 3 * n_and * 32);
+        assert_eq!(enc.len(), 3);
+        assert_eq!(enc.label_bytes(), 3 * circuit.n_inputs as usize * 16);
+    }
+
+    #[test]
+    fn empty_layer_is_a_no_op() {
+        let batch = LayerGcBatch::new(adder_circuit(4), 0);
+        let mut colors = Vec::new();
+        batch.eval_layer_colors(&[], &[], &mut colors);
+        assert!(colors.is_empty());
+    }
+
+    #[test]
+    fn fresh_labels_per_instance() {
+        // Footnote 2: two instances of the same template must not share
+        // material.
+        let circuit = adder_circuit(6);
+        let mut rng = Rng::new(11);
+        let mut scratch = Vec::new();
+        let mut batch = LayerGcBatch::new(circuit.clone(), 2);
+        let mut enc = LayerEncodingBatch::new(circuit.n_inputs as usize, 2);
+        batch.garble_next(&mut enc, &mut rng, &mut scratch);
+        batch.garble_next(&mut enc, &mut rng, &mut scratch);
+        assert_ne!(batch.table_of(0)[0][0], batch.table_of(1)[0][0]);
+        assert_ne!(enc.view(0).label0[0], enc.view(1).label0[0]);
+        assert_ne!(enc.view(0).delta.0, enc.view(1).delta.0);
+    }
+}

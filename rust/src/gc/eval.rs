@@ -28,6 +28,23 @@ pub fn evaluate_with_scratch(
     input_labels: &[Label],
     scratch: &mut Vec<Label>,
 ) -> Vec<Label> {
+    let mut out = Vec::with_capacity(circuit.outputs.len());
+    evaluate_append(circuit, &gc.table, input_labels, scratch, &mut out);
+    out
+}
+
+/// Low-level evaluation core for the layer-batched online path: the
+/// garbled table arrives as a raw ciphertext slice (one instance's stride
+/// of a layer's contiguous table buffer) and the output labels are
+/// appended to a caller-owned buffer. The batch walk calls this once per
+/// ReLU with the *same* circuit template and reused scratch.
+pub fn evaluate_append(
+    circuit: &Circuit,
+    table: &[[Label; 2]],
+    input_labels: &[Label],
+    scratch: &mut Vec<Label>,
+    out: &mut Vec<Label>,
+) {
     assert_eq!(input_labels.len(), circuit.n_inputs as usize, "input label arity");
     let hash = GarbleHash::shared();
     scratch.clear();
@@ -43,7 +60,7 @@ pub fn evaluate_with_scratch(
             WireDef::And(a, b) => {
                 let wa = labels[a as usize];
                 let wb = labels[b as usize];
-                let [t_g, t_e] = gc.table[and_idx as usize];
+                let [t_g, t_e] = table[and_idx as usize];
                 let j = 2 * and_idx;
                 let jp = 2 * and_idx + 1;
                 and_idx += 1;
@@ -62,7 +79,7 @@ pub fn evaluate_with_scratch(
         };
         labels.push(l);
     }
-    circuit.outputs.iter().map(|&o| labels[o as usize]).collect()
+    out.extend(circuit.outputs.iter().map(|&o| labels[o as usize]));
 }
 
 #[cfg(test)]

@@ -32,6 +32,38 @@ impl InputEncoding {
         assert_eq!(vals.len(), self.label0.len());
         vals.iter().enumerate().map(|(i, &v)| self.encode(i, v)).collect()
     }
+
+    /// Borrowed view (the shape the layer-batched arenas hand out).
+    pub fn view(&self) -> EncodingView<'_> {
+        EncodingView { label0: &self.label0, delta: self.delta }
+    }
+}
+
+/// A borrowed input encoding: one instance's `label0` stride inside a
+/// layer arena ([`crate::gc::batch::LayerEncodingBatch`]) or a standalone
+/// [`InputEncoding`]. All label-delivery paths (direct + OT) encode
+/// through this, so they are agnostic to how the labels are stored.
+#[derive(Clone, Copy, Debug)]
+pub struct EncodingView<'a> {
+    /// `label0[i]` encodes value 0 on input `i`.
+    pub label0: &'a [Label],
+    pub delta: Delta,
+}
+
+impl EncodingView<'_> {
+    /// Label for input `i` carrying value `v`.
+    #[inline]
+    pub fn encode(&self, i: usize, v: bool) -> Label {
+        if v {
+            self.label0[i] ^ self.delta.0
+        } else {
+            self.label0[i]
+        }
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.label0.len()
+    }
 }
 
 /// The material sent to the evaluator (plus, separately, input labels).
@@ -64,28 +96,54 @@ pub fn garble(circuit: &Circuit, rng: &mut Rng) -> (GarbledCircuit, InputEncodin
     garble_with_scratch(circuit, rng, &mut scratch)
 }
 
-/// Allocation-free variant for the offline dealer loop (§Perf it. 4):
-/// the wire-label buffer is reused across the thousands of per-ReLU
-/// garblings of a layer.
+/// Allocation-free variant for standalone garbling (tests, OT
+/// integration): the wire-label buffer is reused across calls. Delegates
+/// to [`garble_append`] so it consumes the RNG identically to the
+/// layer-batched path.
 pub fn garble_with_scratch(
     circuit: &Circuit,
     rng: &mut Rng,
     scratch: &mut Vec<Label>,
 ) -> (GarbledCircuit, InputEncoding) {
+    let mut table = Vec::with_capacity(circuit.n_and());
+    let mut input_label0 = Vec::with_capacity(circuit.n_inputs as usize);
+    let mut output_decode = Vec::with_capacity(circuit.outputs.len());
+    let delta =
+        garble_append(circuit, rng, scratch, &mut table, &mut input_label0, &mut output_decode);
+    (GarbledCircuit { table, output_decode }, InputEncoding { label0: input_label0, delta })
+}
+
+/// Low-level garbling core for the layer-batched offline path (§Perf
+/// it. 4 + the SoA refactor): appends this instance's garbled table,
+/// input `label0`s, and output decode bits to caller-owned flat buffers —
+/// one contiguous buffer per *layer*, not per ReLU — and returns the
+/// instance's free-XOR delta.
+///
+/// RNG draw order is the contract that keeps every garbling path
+/// bit-identical: delta first, then one label per input wire in wire
+/// order.
+pub fn garble_append(
+    circuit: &Circuit,
+    rng: &mut Rng,
+    scratch: &mut Vec<Label>,
+    table: &mut Vec<[Label; 2]>,
+    input_label0: &mut Vec<Label>,
+    output_decode: &mut Vec<bool>,
+) -> Delta {
     let hash = GarbleHash::shared();
     let delta = Delta::random(rng);
     scratch.clear();
     scratch.reserve(circuit.wires.len());
     let label0 = scratch;
-    let mut input_label0 = vec![Label::ZERO; circuit.n_inputs as usize];
-    let mut table = Vec::with_capacity(circuit.n_and());
+    let in_base = input_label0.len();
+    input_label0.resize(in_base + circuit.n_inputs as usize, Label::ZERO);
     let mut and_idx: u64 = 0;
 
     for def in &circuit.wires {
         let l0 = match *def {
             WireDef::Input(k) => {
                 let l = Label::random(rng);
-                input_label0[k as usize] = l;
+                input_label0[in_base + k as usize] = l;
                 l
             }
             WireDef::Xor(a, b) => label0[a as usize] ^ label0[b as usize],
@@ -127,11 +185,8 @@ pub fn garble_with_scratch(
         label0.push(l0);
     }
 
-    let output_decode = circuit.outputs.iter().map(|&o| label0[o as usize].color()).collect();
-    (
-        GarbledCircuit { table, output_decode },
-        InputEncoding { label0: input_label0, delta },
-    )
+    output_decode.extend(circuit.outputs.iter().map(|&o| label0[o as usize].color()));
+    delta
 }
 
 #[cfg(test)]

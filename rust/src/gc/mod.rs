@@ -9,16 +9,21 @@
 //!   compare against public constants (`p`, `p/2`) get cheaper for free.
 //! * [`garble`] / [`eval`] — free-XOR + point-and-permute + half-gates
 //!   (2 ciphertexts = 32 bytes per AND gate; XOR and NOT are free).
+//! * [`batch`] — layer-level SoA material: one circuit template + one
+//!   contiguous table/label buffer per ReLU layer with strided per-ReLU
+//!   views (the offline material's at-rest representation).
 //! * [`size`] — byte accounting used for Fig. 5.
 
+pub mod batch;
 pub mod build;
 pub mod circuit;
 pub mod eval;
 pub mod garble;
 pub mod size;
 
+pub use batch::{LayerEncodingBatch, LayerGcBatch};
 pub use build::{Bit, Builder, Bus};
 pub use circuit::{Circuit, WireDef, WireId};
 pub use eval::evaluate;
-pub use garble::{garble, GarbledCircuit, InputEncoding};
+pub use garble::{garble, EncodingView, GarbledCircuit, InputEncoding};
 pub use size::CircuitCost;

@@ -11,7 +11,7 @@
 //! figure) and `examples/`; this binary is the long-running service
 //! entrypoint plus quick introspection.
 
-use anyhow::Result;
+use circa::util::error::Result;
 use circa::circuits::spec::{FaultMode, ReluVariant};
 use circa::coordinator::{PiService, ServiceConfig};
 use circa::nn::weights::{load_dataset, load_weights};

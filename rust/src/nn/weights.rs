@@ -12,11 +12,12 @@
 //! Both use the little-endian framing of [`crate::util::bytes`] —
 //! `serde` is not in the offline vendor set.
 
+use crate::bail;
 use crate::field::Fp;
 use crate::nn::layers::{Conv2d, Dense};
 use crate::protocol::linear::LinearOp;
 use crate::util::bytes::Reader;
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
 use std::path::Path;
 use std::sync::Arc;
 

@@ -14,7 +14,7 @@
 
 pub mod iknp;
 
-use crate::gc::garble::InputEncoding;
+use crate::gc::garble::{EncodingView, InputEncoding};
 use crate::prf::Label;
 
 /// Bytes a 1-of-2 OT of one label costs under OT extension (two masked
@@ -36,8 +36,22 @@ pub struct OtBatch {
 /// `base` is the first input index of the chooser's contiguous input
 /// block within the circuit's input layout.
 pub fn ot_choose(enc: &InputEncoding, base: usize, bits: &[bool]) -> OtBatch {
-    let labels = bits.iter().enumerate().map(|(i, &b)| enc.encode(base + i, b)).collect();
-    OtBatch { labels, bytes_on_wire: bits.len() * OT_BYTES_PER_BIT }
+    let mut labels = Vec::with_capacity(bits.len());
+    let bytes_on_wire = ot_choose_into(enc.view(), base, bits, &mut labels);
+    OtBatch { labels, bytes_on_wire }
+}
+
+/// Arena-friendly dealer OT: encode the chooser's labels for one ReLU's
+/// [`EncodingView`] directly into a caller-owned flat label buffer (the
+/// layer's client-label arena). Returns the wire bytes charged.
+pub fn ot_choose_into(
+    enc: EncodingView<'_>,
+    base: usize,
+    bits: &[bool],
+    out: &mut Vec<Label>,
+) -> usize {
+    out.extend(bits.iter().enumerate().map(|(i, &b)| enc.encode(base + i, b)));
+    bits.len() * OT_BYTES_PER_BIT
 }
 
 #[cfg(test)]

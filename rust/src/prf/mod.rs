@@ -4,11 +4,14 @@
 //! color bit. The garbling hash is the standard fixed-key-AES
 //! construction `H(L, t) = AES_k(2L ⊕ t) ⊕ (2L ⊕ t)` (Bellare et al.,
 //! "Efficient Garbling from a Fixed-Key Blockcipher"), which is what
-//! half-gates assumes for its security proof.
+//! half-gates assumes for its security proof. The block cipher is the
+//! crate's own [`softaes`] (the `aes` crate is not guaranteed in the
+//! offline vendor set).
 
-use aes::cipher::{BlockEncrypt, KeyInit};
-use aes::Aes128;
+pub mod softaes;
+
 use crate::util::Rng;
+use softaes::Aes128;
 
 /// A 128-bit wire label.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -103,67 +106,28 @@ impl GarbleHash {
             0x43, 0x49, 0x52, 0x43, 0x41, 0x2d, 0x50, 0x49, // "CIRCA-PI"
             0x67, 0x61, 0x72, 0x62, 0x6c, 0x65, 0x30, 0x31, // "garble01"
         ];
-        Self { cipher: Aes128::new(&key.into()) }
+        Self { cipher: Aes128::new(key) }
     }
 
     /// `H(L, tweak) = AES(2L ⊕ tweak) ⊕ (2L ⊕ tweak)`.
     #[inline]
     pub fn hash(&self, label: Label, tweak: u64) -> Label {
         let x = label.double().0 ^ (tweak as u128);
-        let mut block = x.to_le_bytes().into();
-        self.cipher.encrypt_block(&mut block);
-        let y = u128::from_le_bytes(block.into());
-        Label(y ^ x)
+        Label(self.cipher.encrypt_u128(x) ^ x)
     }
 
-    /// Hash four labels with explicit tweaks in one call; lets the AES
-    /// backend pipeline blocks (hot path of garbling: the four hashes of
-    /// one half-gates AND gate).
+    /// Hash four labels with explicit tweaks in one call (hot path of
+    /// garbling: the four hashes of one half-gates AND gate).
     #[inline]
     pub fn hash4(&self, labels: [Label; 4], tweaks: [u64; 4]) -> [Label; 4] {
-        use aes::cipher::generic_array::GenericArray;
-        let xs: [u128; 4] = [
-            labels[0].double().0 ^ (tweaks[0] as u128),
-            labels[1].double().0 ^ (tweaks[1] as u128),
-            labels[2].double().0 ^ (tweaks[2] as u128),
-            labels[3].double().0 ^ (tweaks[3] as u128),
-        ];
-        let mut blocks = [
-            GenericArray::clone_from_slice(&xs[0].to_le_bytes()),
-            GenericArray::clone_from_slice(&xs[1].to_le_bytes()),
-            GenericArray::clone_from_slice(&xs[2].to_le_bytes()),
-            GenericArray::clone_from_slice(&xs[3].to_le_bytes()),
-        ];
-        self.cipher.encrypt_blocks(&mut blocks);
-        let mut out = [Label::ZERO; 4];
-        for i in 0..4 {
-            let mut b = [0u8; 16];
-            b.copy_from_slice(&blocks[i]);
-            out[i] = Label(u128::from_le_bytes(b) ^ xs[i]);
-        }
-        out
+        core::array::from_fn(|i| self.hash(labels[i], tweaks[i]))
     }
 
     /// Hash two labels in one call (the two hashes of one AND-gate
     /// evaluation).
     #[inline]
     pub fn hash2(&self, l0: Label, t0: u64, l1: Label, t1: u64) -> [Label; 2] {
-        use aes::cipher::generic_array::GenericArray;
-        let x0 = l0.double().0 ^ (t0 as u128);
-        let x1 = l1.double().0 ^ (t1 as u128);
-        let mut blocks = [
-            GenericArray::clone_from_slice(&x0.to_le_bytes()),
-            GenericArray::clone_from_slice(&x1.to_le_bytes()),
-        ];
-        self.cipher.encrypt_blocks(&mut blocks);
-        let mut b0 = [0u8; 16];
-        b0.copy_from_slice(&blocks[0]);
-        let mut b1 = [0u8; 16];
-        b1.copy_from_slice(&blocks[1]);
-        [
-            Label(u128::from_le_bytes(b0) ^ x0),
-            Label(u128::from_le_bytes(b1) ^ x1),
-        ]
+        [self.hash(l0, t0), self.hash(l1, t1)]
     }
 }
 

@@ -7,7 +7,6 @@ use super::offline::ClientReluMaterial;
 use crate::beaver;
 use crate::field::Fp;
 
-use crate::prf::Label;
 use crate::ss::Share;
 
 /// One client-side layer of the offline-prepared network.
@@ -54,33 +53,20 @@ pub fn run_client(net: &ClientNet, chan: &Channel, input: &[Fp]) -> Vec<Fp> {
                 last_x_share = x_share;
             }
             ClientLayer::Relu(mat) => {
-                let n = mat.gcs.len();
+                let n = mat.n();
                 let xc = last_x_share;
                 assert_eq!(xc.len(), n);
 
-                // Receive the server's input labels (one batch message).
+                // Receive the server's input labels (one flat arena).
                 let labels = chan.recv().into_labels();
-                let per = labels.len() / n;
 
-                // Evaluate every GC; collect output colors. Scratch
-                // buffers are reused across circuits (§Perf iteration 3).
-                let mut colors = Vec::with_capacity(n * mat.circuit.outputs.len());
-                let mut eval_labels: Vec<Label> = Vec::new();
-                let mut scratch: Vec<Label> = Vec::new();
-                for i in 0..n {
-                    eval_labels.clear();
-                    eval_labels.extend_from_slice(&mat.client_labels[i]);
-                    eval_labels.extend_from_slice(&labels[i * per..(i + 1) * per]);
-                    let out = crate::gc::eval::evaluate_with_scratch(
-                        &mat.circuit,
-                        &mat.gcs[i],
-                        &eval_labels,
-                        &mut scratch,
-                    );
-                    colors.extend(out.iter().map(|l| l.color()));
-                }
+                // Batched evaluation: walk the layer's shared circuit
+                // once per ReLU over the contiguous table buffer, with
+                // scratch reused across the layer (§Perf iteration 3).
+                let mut colors = Vec::with_capacity(n * mat.spec.n_outputs);
+                mat.gc.eval_layer_colors(&mat.client_labels, &labels, &mut colors);
 
-                if !mat.variant.uses_beaver() {
+                if !mat.spec.uses_beaver() {
                     chan.send(Message::Colors(colors));
                     // Baseline: client's output share is its mask r_out,
                     // already wired into the next layer's offline phase.

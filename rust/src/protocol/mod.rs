@@ -1,13 +1,26 @@
-//! The Delphi-style two-party PI protocol with Circa's ReLU variants.
+//! The Delphi-style two-party PI protocol with Circa's ReLU variants,
+//! built around a layer-batched data plane.
 //!
 //! A network inference alternates linear layers (additive secret sharing,
 //! [`linear`]) and ReLU layers (garbled circuits + Beaver triples,
 //! [`online`]). Everything input-independent happens in [`offline`]:
 //! client randomness, the HE-simulated `W·r − s` precomputation, circuit
-//! garbling, input-label OTs, and triple generation. The online phase —
-//! the paper's headline metric — moves only what it must: the server's
-//! input labels, the GC evaluation, output colors, and (for Circa
-//! variants) one Beaver round plus a resharing element.
+//! garbling, input-label OTs, and triple generation.
+//!
+//! Offline material is **layer-level SoA** ([`crate::gc::batch`]): each
+//! ReLU layer holds exactly one [`crate::gc::Circuit`] template, one
+//! contiguous garbled-table buffer, one contiguous label arena per role,
+//! and flat `r_v`/`r_out`/triple columns — never per-ReLU heap objects.
+//! Variant behavior (circuit builder, input layout, truncation `k`, bit
+//! encoders) is resolved once into a
+//! [`crate::circuits::spec::VariantSpec`] that every phase dispatches
+//! through; there are no per-phase `match variant` ladders.
+//!
+//! The online phase — the paper's headline metric — moves only what it
+//! must: one flat label arena for the server's inputs, one batched
+//! circuit walk on the client, the color stream back, and (for Circa
+//! variants) one Beaver round plus a resharing element. Byte counts fall
+//! out of buffer lengths.
 //!
 //! [`channel`] gives byte-accounted duplex pipes so every experiment can
 //! report communication alongside latency; [`client`]/[`server`] wrap the

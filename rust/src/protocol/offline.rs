@@ -1,31 +1,36 @@
 //! Offline (input-independent) phase for one ReLU layer.
 //!
-//! Per ReLU the server garbles a fresh circuit instance (GCs cannot be
-//! reused across inferences — paper footnote 2) and sends the tables to
-//! the client; the client's input labels are delivered by offline OT
-//! (all client GC inputs are offline-known in Delphi: `⟨x⟩_c = W·r − s`
-//! comes from the HE precomputation and `r` is client-chosen). Circa
-//! variants additionally draw one Beaver triple per ReLU.
+//! Per ReLU the server garbles a fresh instance of the layer's shared
+//! circuit template (GCs cannot be reused across inferences — paper
+//! footnote 2) and sends the tables to the client; the client's input
+//! labels are delivered by offline OT (all client GC inputs are
+//! offline-known in Delphi: `⟨x⟩_c = W·r − s` comes from the HE
+//! precomputation and `r` is client-chosen). Circa variants additionally
+//! draw one Beaver triple per ReLU.
+//!
+//! Material is layer-level SoA ([`crate::gc::batch`]): one circuit + one
+//! contiguous table buffer + one contiguous label arena per layer, so
+//! `offline_bytes` falls straight out of buffer lengths and the dealer
+//! loop allocates O(#layer), not O(#ReLU).
 
 use crate::beaver::{self, TripleShare};
-use crate::circuits::spec::{fp_bits, FaultMode, ReluVariant};
-use crate::circuits::{relu_gc, stoch_sign_gc};
+use crate::circuits::spec::{FaultMode, ReluVariant, VariantSpec};
 use crate::field::{random_fp, Fp};
-use crate::gc::circuit::Circuit;
-use crate::gc::garble::{GarbledCircuit, InputEncoding};
+use crate::gc::batch::{LayerEncodingBatch, LayerGcBatch};
 use crate::ot;
 use crate::prf::Label;
 use crate::util::Rng;
 
 /// Client-side offline material for one ReLU layer of `n` elements.
 pub struct ClientReluMaterial {
-    pub variant: ReluVariant,
-    /// Circuit structure (public).
-    pub circuit: Circuit,
-    /// Per-ReLU garbled tables + decode info (received from server).
-    pub gcs: Vec<GarbledCircuit>,
-    /// Per-ReLU labels for the client's own input block (via offline OT).
-    pub client_labels: Vec<Vec<Label>>,
+    /// Resolved variant behavior (layout, encoders, circuit builder).
+    pub spec: VariantSpec,
+    /// The layer's shared circuit + contiguous garbled tables and decode
+    /// bits (received from the server).
+    pub gc: LayerGcBatch,
+    /// Contiguous client-input label arena, stride =
+    /// `spec.n_client_inputs` (via offline OT).
+    pub client_labels: Vec<Label>,
     /// Client's share of the sign value v (it chose r_v) — sign variants.
     pub r_v: Vec<Fp>,
     /// Client's share of the layer output (r for baseline, r_y for sign
@@ -37,66 +42,51 @@ pub struct ClientReluMaterial {
     pub offline_bytes: u64,
 }
 
+impl ClientReluMaterial {
+    /// ReLUs in the layer.
+    pub fn n(&self) -> usize {
+        self.gc.len()
+    }
+
+    pub fn variant(&self) -> ReluVariant {
+        self.spec.variant
+    }
+
+    /// Instance `i`'s stride of the client-label arena.
+    pub fn client_labels_of(&self, i: usize) -> &[Label] {
+        let s = self.spec.n_client_inputs;
+        &self.client_labels[i * s..(i + 1) * s]
+    }
+}
+
 /// Server-side offline material for one ReLU layer.
 pub struct ServerReluMaterial {
-    pub variant: ReluVariant,
-    pub circuit: Circuit,
-    /// Per-ReLU full input encodings (to produce online labels for ⟨x⟩_s).
-    pub encodings: Vec<InputEncoding>,
-    /// Per-ReLU output decode bits (server decodes the colors the client
-    /// returns — the GC output is the *server's* share).
-    pub output_decode: Vec<Vec<bool>>,
+    pub spec: VariantSpec,
+    /// Contiguous full-input encoding arena (to produce online labels for
+    /// ⟨x⟩_s), one free-XOR delta per ReLU.
+    pub encodings: LayerEncodingBatch,
+    /// Contiguous output decode bits, stride = `spec.n_outputs` (the
+    /// server decodes the colors the client returns — the GC output is
+    /// the *server's* share).
+    pub output_decode: Vec<bool>,
     /// Beaver triple shares (sign variants).
     pub triples: Vec<TripleShare>,
 }
 
-/// Index of the first server input bit within the circuit input layout.
-pub fn server_input_base(variant: ReluVariant) -> usize {
-    match variant {
-        ReluVariant::BaselineRelu => relu_gc::N_CLIENT_INPUTS,
-        ReluVariant::NaiveSign => crate::circuits::sign_gc::N_CLIENT_INPUTS,
-        ReluVariant::StochasticSign { .. } => stoch_sign_gc::n_client_inputs(0),
-        ReluVariant::TruncatedSign { k, .. } => stoch_sign_gc::n_client_inputs(k),
+impl ServerReluMaterial {
+    /// ReLUs in the layer.
+    pub fn n(&self) -> usize {
+        self.encodings.len()
     }
-}
 
-/// Truncation level of a variant (0 when not truncated).
-pub fn variant_k(variant: ReluVariant) -> u32 {
-    match variant {
-        ReluVariant::TruncatedSign { k, .. } => k,
-        _ => 0,
+    pub fn variant(&self) -> ReluVariant {
+        self.spec.variant
     }
-}
 
-/// Build the circuit for a variant.
-pub fn build_circuit(variant: ReluVariant) -> Circuit {
-    match variant {
-        ReluVariant::BaselineRelu => relu_gc::build(),
-        ReluVariant::NaiveSign => crate::circuits::sign_gc::build(),
-        ReluVariant::StochasticSign { mode } => stoch_sign_gc::build(mode),
-        ReluVariant::TruncatedSign { k, mode } => stoch_sign_gc::build_truncated(k, mode),
-    }
-}
-
-/// The client's GC input bits for one ReLU, given its offline-known share
-/// `xc` and its chosen randomness.
-fn client_bits(variant: ReluVariant, xc: Fp, r_v: Fp, r_out: Fp) -> Vec<bool> {
-    match variant {
-        ReluVariant::BaselineRelu => {
-            // Fig 2(a): ⟨x⟩_c then r (the output mask).
-            let mut bits = fp_bits(xc);
-            bits.extend(fp_bits(r_out));
-            bits
-        }
-        ReluVariant::NaiveSign => {
-            // Fig 2(b): ⟨x⟩_c, −r_v, 1−r_v.
-            let mut bits = fp_bits(xc);
-            bits.extend(fp_bits(-r_v));
-            bits.extend(fp_bits(Fp::ONE - r_v));
-            bits
-        }
-        ReluVariant::StochasticSign { .. } => stoch_sign_gc::client_input_bits(xc, r_v, 0),
-        ReluVariant::TruncatedSign { k, .. } => stoch_sign_gc::client_input_bits(xc, r_v, k),
+    /// Instance `i`'s stride of the decode-bit buffer.
+    pub fn decode_of(&self, i: usize) -> &[bool] {
+        let s = self.spec.n_outputs;
+        &self.output_decode[i * s..(i + 1) * s]
     }
 }
 
@@ -111,55 +101,56 @@ pub fn offline_relu_layer(
     rng: &mut Rng,
 ) -> (ClientReluMaterial, ServerReluMaterial) {
     let n = xc.len();
-    let circuit = build_circuit(variant);
-    let mut gcs = Vec::with_capacity(n);
-    let mut encodings = Vec::with_capacity(n);
-    let mut client_labels = Vec::with_capacity(n);
-    let mut output_decode = Vec::with_capacity(n);
+    let spec = variant.spec();
+    let circuit = spec.build_circuit();
+
+    let mut gc = LayerGcBatch::new(circuit, n);
+    let mut encodings = LayerEncodingBatch::new(spec.n_inputs(), n);
+    let mut client_labels: Vec<Label> = Vec::with_capacity(n * spec.n_client_inputs);
+    let mut server_decode: Vec<bool> = Vec::with_capacity(n * spec.n_outputs);
     let mut r_v = Vec::with_capacity(n);
     let mut r_out = Vec::with_capacity(n);
-    let mut triples_c = Vec::with_capacity(n);
-    let mut triples_s = Vec::with_capacity(n);
-    let mut offline_bytes = 0u64;
+    let mut triples_c = Vec::new();
+    let mut triples_s = Vec::new();
     let mut scratch = Vec::new();
 
     for i in 0..n {
-        let (gc, enc) = crate::gc::garble::garble_with_scratch(&circuit, rng, &mut scratch);
-        offline_bytes += gc.table_bytes() as u64;
+        // One garbling of the shared template per ReLU (fresh labels).
+        gc.garble_next(&mut encodings, rng, &mut scratch);
 
         let rv = random_fp(rng);
         let rout = random_fp(rng);
-        let bits = client_bits(variant, xc[i], rv, rout);
-        let batch = ot::ot_choose(&enc, 0, &bits);
-        offline_bytes += batch.bytes_on_wire as u64;
+        let bits = spec.client_bits(xc[i], rv, rout);
+        ot::ot_choose_into(encodings.view(i), 0, &bits, &mut client_labels);
 
-        if variant.uses_beaver() {
+        if spec.uses_beaver() {
             let t = beaver::gen_triple(rng);
             triples_c.push(t.p1);
             triples_s.push(t.p2);
-            offline_bytes += 6 * 4; // dealer ships 3 field elements/party
         }
 
-        output_decode.push(gc.output_decode.clone());
-        client_labels.push(batch.labels);
-        gcs.push(gc);
-        encodings.push(enc);
+        server_decode.extend_from_slice(gc.decode_of(i));
         r_v.push(rv);
         r_out.push(rout);
     }
 
+    // The byte ledger falls out of the buffer lengths: garbled tables +
+    // OT'd client labels + dealer-shipped triples (3 field elems/party).
+    let offline_bytes = gc.table_bytes() as u64
+        + (client_labels.len() * ot::OT_BYTES_PER_BIT) as u64
+        + (triples_c.len() * 6 * 4) as u64;
+
     (
         ClientReluMaterial {
-            variant,
-            circuit: circuit.clone(),
-            gcs,
+            spec,
+            gc,
             client_labels,
             r_v,
             r_out,
             triples: triples_c,
             offline_bytes,
         },
-        ServerReluMaterial { variant, circuit, encodings, output_decode, triples: triples_s },
+        ServerReluMaterial { spec, encodings, output_decode: server_decode, triples: triples_s },
     )
 }
 
@@ -184,13 +175,28 @@ mod tests {
             circa_variant(12),
         ] {
             let (c, s) = offline_relu_layer(variant, &xc, &mut rng);
-            assert_eq!(c.gcs.len(), 8);
-            assert_eq!(s.encodings.len(), 8);
+            assert_eq!(c.n(), 8);
+            assert_eq!(s.n(), 8);
             assert_eq!(c.triples.len(), if variant.uses_beaver() { 8 } else { 0 });
             assert!(c.offline_bytes > 0);
             // Client labels cover exactly the client's input block.
-            assert_eq!(c.client_labels[0].len(), server_input_base(variant));
+            assert_eq!(c.client_labels_of(0).len(), c.spec.server_input_base());
+            assert_eq!(c.client_labels.len(), 8 * c.spec.n_client_inputs);
+            // Flat decode buffer covers every output bit of the layer.
+            assert_eq!(s.output_decode.len(), 8 * s.spec.n_outputs);
         }
+    }
+
+    #[test]
+    fn layer_material_is_one_buffer_per_kind() {
+        // The acceptance shape: one Circuit, one contiguous table buffer,
+        // one contiguous label arena — strides multiply out exactly.
+        let mut rng = Rng::new(5);
+        let xc: Vec<Fp> = (0..6).map(|_| random_fp(&mut rng)).collect();
+        let (c, s) = offline_relu_layer(circa_variant(12), &xc, &mut rng);
+        assert_eq!(c.gc.table_bytes(), 6 * c.gc.and_stride() * 32);
+        assert_eq!(s.encodings.label_bytes(), 6 * c.spec.n_inputs() * 16);
+        assert_eq!(c.gc.output_decode().len(), 6 * c.spec.n_outputs);
     }
 
     #[test]
@@ -199,7 +205,7 @@ mod tests {
         let x = Fp::from_i64(5);
         let sh = SharePair::share(x, &mut rng);
         let (c, _) = offline_relu_layer(circa_variant(12), &[sh.client, sh.client], &mut rng);
-        assert_ne!(c.gcs[0].table[0][0], c.gcs[1].table[0][0]);
+        assert_ne!(c.gc.table_of(0)[0][0], c.gc.table_of(1)[0][0]);
         assert_ne!(c.r_v[0], c.r_v[1]);
     }
 

@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! server → client : n·(m−k) input labels for ⟨x⟩_s        (16 B each)
-//! client          : evaluates n garbled circuits           (the hot loop)
+//! client          : evaluates the layer's garbled batch    (the hot loop)
 //! client → server : n·m output colors                      (1 bit each)
 //! — Circa variants additionally —
 //! both   ⇄ both   : Beaver openings (2 field elems each way per ReLU)
@@ -13,14 +13,16 @@
 //!
 //! The baseline (Fig. 2a) skips the Beaver round entirely — its GC already
 //! outputs the masked ReLU — but pays ~5× more AND gates per evaluation.
+//!
+//! Both hot loops are layer-batched: the server encodes its labels into
+//! one flat arena, and the client walks the layer's shared circuit once
+//! per ReLU over the contiguous table buffer
+//! ([`crate::gc::batch::LayerGcBatch::eval_layer_colors`]).
 
-use super::offline::{server_input_base, ClientReluMaterial, ServerReluMaterial};
+use super::offline::{ClientReluMaterial, ServerReluMaterial};
 use crate::beaver;
-use crate::circuits::spec::{bits_fp, ReluVariant};
-use crate::circuits::stoch_sign_gc;
-use crate::field::{FIELD_BITS, Fp};
-use crate::gc::build::u64_to_bits;
-
+use crate::circuits::spec::bits_fp;
+use crate::field::Fp;
 use crate::prf::Label;
 use crate::util::Timer;
 
@@ -43,21 +45,37 @@ impl OnlineReluStats {
     }
 }
 
-/// The server's per-ReLU online label encoding of its share.
-fn server_labels(
-    variant: ReluVariant,
-    enc: &crate::gc::garble::InputEncoding,
-    xs: Fp,
-) -> Vec<Label> {
-    let base = server_input_base(variant);
-    let bits = match variant {
-        ReluVariant::BaselineRelu | ReluVariant::NaiveSign => {
-            u64_to_bits(xs.raw(), FIELD_BITS)
-        }
-        ReluVariant::StochasticSign { .. } => stoch_sign_gc::server_input_bits(xs, 0),
-        ReluVariant::TruncatedSign { k, .. } => stoch_sign_gc::server_input_bits(xs, k),
-    };
-    bits.iter().enumerate().map(|(i, &b)| enc.encode(base + i, b)).collect()
+/// Encode the server's online shares into one flat label arena (stride =
+/// server inputs per ReLU). Shared by the in-process path below and the
+/// channel-driven [`super::server`].
+pub fn encode_server_labels(mat: &ServerReluMaterial, xs: &[Fp]) -> Vec<Label> {
+    let spec = mat.spec;
+    let base = spec.server_input_base();
+    let mut out = Vec::with_capacity(xs.len() * spec.n_server_inputs);
+    for (i, &x) in xs.iter().enumerate() {
+        let bits = spec.server_bits(x);
+        let view = mat.encodings.view(i);
+        out.extend(bits.iter().enumerate().map(|(j, &b)| view.encode(base + j, b)));
+    }
+    out
+}
+
+/// Decode the client's color stream into the server's output shares using
+/// the layer's flat decode buffer.
+pub fn decode_server_shares(mat: &ServerReluMaterial, colors: &[bool]) -> Vec<Fp> {
+    let m = mat.spec.n_outputs;
+    let n = mat.n();
+    assert_eq!(colors.len(), n * m, "color stream arity");
+    (0..n)
+        .map(|i| {
+            let bits: Vec<bool> = colors[i * m..(i + 1) * m]
+                .iter()
+                .zip(mat.decode_of(i))
+                .map(|(&c, &d)| c ^ d)
+                .collect();
+            bits_fp(&bits)
+        })
+        .collect()
 }
 
 /// Run the online phase of one ReLU layer, in-process but with every
@@ -75,45 +93,27 @@ pub fn online_relu_layer(
 ) -> (Vec<Fp>, Vec<Fp>, OnlineReluStats) {
     let n = xc.len();
     assert_eq!(n, xs.len());
-    assert_eq!(n, client.gcs.len(), "offline material arity");
-    let variant = client.variant;
+    assert_eq!(n, client.n(), "offline material arity");
+    let spec = client.spec;
     let timer = Timer::new();
     let mut stats = OnlineReluStats::default();
 
-    // --- Round 1: server encodes + sends its input labels. ---
-    let mut all_labels: Vec<Vec<Label>> = Vec::with_capacity(n);
-    for i in 0..n {
-        all_labels.push(server_labels(variant, &server.encodings[i], xs[i]));
-    }
-    stats.bytes_to_client += all_labels.iter().map(|l| l.len() as u64 * 16).sum::<u64>();
+    // --- Round 1: server encodes + sends its input labels (one arena). ---
+    let server_labels = encode_server_labels(server, xs);
+    stats.bytes_to_client += server_labels.len() as u64 * 16;
     stats.rounds += 1;
 
-    // --- Client: evaluate all garbled circuits, return output colors. ---
-    // Scratch buffers reused across the n circuits (§Perf iteration 3).
-    let mut colors: Vec<bool> = Vec::with_capacity(n * FIELD_BITS);
-    let mut labels: Vec<Label> = Vec::new();
-    let mut scratch: Vec<Label> = Vec::new();
-    for i in 0..n {
-        labels.clear();
-        labels.extend_from_slice(&client.client_labels[i]);
-        labels.extend_from_slice(&all_labels[i]);
-        let out =
-            crate::gc::eval::evaluate_with_scratch(&client.circuit, &client.gcs[i], &labels, &mut scratch);
-        colors.extend(out.iter().map(|l| l.color()));
-    }
+    // --- Client: batched evaluation — shared circuit template, outer
+    // stride loop over the contiguous table buffer. ---
+    let mut colors: Vec<bool> = Vec::with_capacity(n * spec.n_outputs);
+    client.gc.eval_layer_colors(&client.client_labels, &server_labels, &mut colors);
     stats.bytes_to_server += (colors.len() as u64).div_ceil(8);
     stats.rounds += 1;
 
     // --- Server: decode its output share from the colors. ---
-    let mut server_out: Vec<Fp> = Vec::with_capacity(n);
-    for i in 0..n {
-        let slice = &colors[i * FIELD_BITS..(i + 1) * FIELD_BITS];
-        let bits: Vec<bool> =
-            slice.iter().zip(&server.output_decode[i]).map(|(&c, &d)| c ^ d).collect();
-        server_out.push(bits_fp(&bits));
-    }
+    let server_out = decode_server_shares(server, &colors);
 
-    if !variant.uses_beaver() {
+    if !spec.uses_beaver() {
         // Baseline: GC output *is* the masked ReLU share.
         let client_out = client.r_out.clone();
         stats.wall_s = timer.elapsed_s();
@@ -162,7 +162,7 @@ pub fn online_relu_layer(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::circuits::spec::FaultMode;
+    use crate::circuits::spec::{FaultMode, ReluVariant};
     use crate::field::random_fp;
     use crate::protocol::offline::{circa_variant, offline_relu_layer};
     use crate::ss::{reconstruct_vec, SharePair};

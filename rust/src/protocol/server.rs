@@ -8,14 +8,11 @@ use super::channel::Channel;
 use super::client::{run_client, ClientLayer, ClientNet};
 use super::linear::{offline_linear, online_linear, LinearOp};
 use super::messages::Message;
-use super::offline::{offline_relu_layer, server_input_base, ServerReluMaterial};
-use super::online::OnlineReluStats;
+use super::offline::{offline_relu_layer, ServerReluMaterial};
+use super::online::{decode_server_shares, encode_server_labels, OnlineReluStats};
 use crate::beaver;
 use crate::circuits::spec::ReluVariant;
-use crate::circuits::stoch_sign_gc;
-use crate::field::{random_fp, Fp, FIELD_BITS};
-use crate::gc::build::u64_to_bits;
-use crate::prf::Label;
+use crate::field::{random_fp, Fp};
 use crate::ss::Share;
 use crate::util::{Rng, Timer};
 use std::sync::Arc;
@@ -120,45 +117,6 @@ fn rescale_shares(shares: Vec<Fp>, bits: u32) -> Vec<Fp> {
         .collect()
 }
 
-/// The server's per-ReLU online label encoding of its share.
-pub(crate) fn server_label_batch(
-    mat: &ServerReluMaterial,
-    xs: &[Fp],
-) -> Vec<Label> {
-    let base = server_input_base(mat.variant);
-    let k = super::offline::variant_k(mat.variant);
-    let mut out = Vec::with_capacity(xs.len() * stoch_sign_gc::n_server_inputs(k));
-    for (i, &x) in xs.iter().enumerate() {
-        let bits = match mat.variant {
-            ReluVariant::BaselineRelu | ReluVariant::NaiveSign => {
-                u64_to_bits(x.raw(), FIELD_BITS)
-            }
-            ReluVariant::StochasticSign { .. } => stoch_sign_gc::server_input_bits(x, 0),
-            ReluVariant::TruncatedSign { k, .. } => stoch_sign_gc::server_input_bits(x, k),
-        };
-        let enc = &mat.encodings[i];
-        out.extend(bits.iter().enumerate().map(|(j, &b)| enc.encode(base + j, b)));
-    }
-    out
-}
-
-/// Decode the client's returned colors into the server's output shares.
-pub(crate) fn decode_colors(mat: &ServerReluMaterial, colors: &[bool]) -> Vec<Fp> {
-    let m = FIELD_BITS;
-    let n = mat.encodings.len();
-    assert_eq!(colors.len(), n * m);
-    (0..n)
-        .map(|i| {
-            let bits: Vec<bool> = colors[i * m..(i + 1) * m]
-                .iter()
-                .zip(&mat.output_decode[i])
-                .map(|(&c, &d)| c ^ d)
-                .collect();
-            crate::circuits::spec::bits_fp(&bits)
-        })
-        .collect()
-}
-
 /// Run the server's online protocol for one inference.
 pub fn run_server(net: &ServerNet, chan: &Channel) -> InferenceStats {
     let timer = Timer::new();
@@ -172,15 +130,15 @@ pub fn run_server(net: &ServerNet, chan: &Channel) -> InferenceStats {
                 x_share = online_linear(op.as_ref(), &y_share, s);
             }
             ServerLayer::Relu { mat, rescale } => {
-                let n = mat.encodings.len();
+                let n = mat.n();
                 assert_eq!(x_share.len(), n);
-                // Send input labels for this batch of ReLUs.
-                chan.send(Message::Labels(server_label_batch(mat, &x_share)));
+                // Send input labels for this batch of ReLUs (one arena).
+                chan.send(Message::Labels(encode_server_labels(mat, &x_share)));
                 // Receive output colors; decode the sign/ReLU share.
                 let colors = chan.recv().into_colors();
-                let decoded = decode_colors(mat, &colors);
+                let decoded = decode_server_shares(mat, &colors);
 
-                if !mat.variant.uses_beaver() {
+                if !mat.spec.uses_beaver() {
                     // Baseline: decoded IS the masked ReLU output share.
                     y_share = rescale_shares(decoded, *rescale);
                     continue;

@@ -1,6 +1,7 @@
 //! Artifact directory discovery and validation.
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::path::{Path, PathBuf};
 
 /// A validated artifacts directory.

@@ -13,7 +13,9 @@
 //!   whole sweep (k/mode are runtime scalars by design).
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod model_exec;
 
 pub use artifacts::ArtifactDir;
+#[cfg(feature = "pjrt")]
 pub use model_exec::{CnnExecutable, ModelOutput, StochReluExecutable};

@@ -6,8 +6,14 @@
 //! whole Fig. 4 sweep reuses one compilation.
 
 use super::artifacts::ArtifactDir;
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Error, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::msg(e)
+    }
+}
 
 /// Fault modes on the artifact ABI (matches python kernels/ref.py).
 pub const MODE_POSZERO: i32 = 0;
@@ -165,7 +171,7 @@ impl StochReluExecutable {
 
     /// Run the kernel: returns (y, fault mask).
     pub fn run(&self, x: &[i32], t: &[i32], k: i32, mode: i32) -> Result<(Vec<i32>, Vec<i32>)> {
-        anyhow::ensure!(x.len() == self.n && t.len() == self.n, "kernel arity is {}", self.n);
+        crate::ensure!(x.len() == self.n && t.len() == self.n, "kernel arity is {}", self.n);
         let args = vec![
             lit_i32(x, &[self.n as i64])?,
             lit_i32(t, &[self.n as i64])?,

@@ -4,7 +4,8 @@
 //! datasets) and protocol messages use this explicit little-endian format.
 //! The Python side (`python/compile/aot.py`) writes the same layouts.
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 /// A cursor over a byte slice with checked little-endian reads.
 pub struct Reader<'a> {

@@ -1,0 +1,167 @@
+//! Minimal error plumbing (`anyhow` is not guaranteed in the offline
+//! vendor set): a string-backed [`Error`], a [`Result`] alias, the
+//! [`Context`] extension trait, and the [`crate::bail!`] /
+//! [`crate::ensure!`] macros. Call sites read exactly like the `anyhow`
+//! equivalents they replace.
+
+use std::fmt;
+
+/// A boxed-string error with optional context prefixes.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<std::string::FromUtf8Error> for Error {
+    fn from(e: std::string::FromUtf8Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(m: String) -> Self {
+        Error { msg: m }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(m: &str) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style adapters for results and options.
+pub trait Context<T> {
+    /// Replace/prefix the error with `msg` (lazily formatted errors keep
+    /// their text as a suffix).
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    /// Like [`Context::context`] but the message is built only on error.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`] (the `anyhow::bail!` shape).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Bail unless a condition holds (the `anyhow::ensure!` shape).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("broke at {}", 7);
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke at 7");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(v: u32) -> Result<u32> {
+            ensure!(v < 10, "v too big: {v}");
+            Ok(v)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(30).unwrap_err().to_string(), "v too big: 30");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::num::ParseIntError> =
+            "x".parse::<i32>().map(|_| ());
+        let e = r.context("parsing config").unwrap_err();
+        assert!(e.to_string().starts_with("parsing config: "));
+
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing key").unwrap_err().to_string(), "missing key");
+
+        let o2: Option<u32> = Some(4);
+        assert_eq!(o2.with_context(|| "unused").unwrap(), 4);
+    }
+
+    #[test]
+    fn question_mark_conversions() {
+        fn io_path() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/real/path")?;
+            Ok(s)
+        }
+        assert!(io_path().is_err());
+    }
+}

@@ -1,10 +1,13 @@
-//! Small shared utilities: PRNG, statistics, timers, CLI args, byte I/O.
+//! Small shared utilities: PRNG, statistics, timers, CLI args, byte I/O,
+//! error plumbing.
 //!
-//! The offline vendor set has no `rand`, `clap`, or `criterion`, so this
-//! module carries the minimal replacements the rest of the crate needs.
+//! The offline vendor set has no `rand`, `clap`, `criterion`, or
+//! (guaranteed) `anyhow`, so this module carries the minimal replacements
+//! the rest of the crate needs.
 
 pub mod args;
 pub mod bytes;
+pub mod error;
 pub mod rng;
 pub mod stats;
 pub mod timer;

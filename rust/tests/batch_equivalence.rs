@@ -1,0 +1,244 @@
+//! Equivalence proof for the layer-batch refactor: the flat-SoA batched
+//! offline+online path must be **bit-identical** to the seed's per-ReLU
+//! object path — same output shares, same offline byte ledger, same
+//! online byte counts — for every variant and truncation level, under a
+//! seeded RNG.
+//!
+//! The seed path is reconstructed here from the still-public low-level
+//! primitives (`garble_with_scratch`, `ot_choose`,
+//! `evaluate_with_scratch`, per-ReLU `Vec` material). Both paths consume
+//! the RNG in the same order (garble, r_v, r_out, triple — per ReLU), so
+//! with equal seeds they must produce equal material and therefore equal
+//! transcripts; any divergence in the batched data plane shows up as a
+//! share or byte mismatch.
+
+use circa::beaver::{self, TripleShare};
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::field::{random_fp, Fp};
+use circa::gc::eval::evaluate_with_scratch;
+use circa::gc::garble::{garble_with_scratch, GarbledCircuit, InputEncoding};
+use circa::ot;
+use circa::prf::Label;
+use circa::protocol::offline::offline_relu_layer;
+use circa::protocol::online::online_relu_layer;
+use circa::ss::SharePair;
+use circa::util::Rng;
+
+/// Per-ReLU material exactly as the seed represented it.
+struct RefClient {
+    gcs: Vec<GarbledCircuit>,
+    client_labels: Vec<Vec<Label>>,
+    r_v: Vec<Fp>,
+    r_out: Vec<Fp>,
+    triples: Vec<TripleShare>,
+    offline_bytes: u64,
+}
+
+struct RefServer {
+    encodings: Vec<InputEncoding>,
+    output_decode: Vec<Vec<bool>>,
+    triples: Vec<TripleShare>,
+}
+
+/// The seed's `offline_relu_layer`, reconstructed per-ReLU.
+fn offline_ref(variant: ReluVariant, xc: &[Fp], rng: &mut Rng) -> (RefClient, RefServer) {
+    let spec = variant.spec();
+    let circuit = spec.build_circuit();
+    let mut scratch = Vec::new();
+    let mut c = RefClient {
+        gcs: Vec::new(),
+        client_labels: Vec::new(),
+        r_v: Vec::new(),
+        r_out: Vec::new(),
+        triples: Vec::new(),
+        offline_bytes: 0,
+    };
+    let mut s =
+        RefServer { encodings: Vec::new(), output_decode: Vec::new(), triples: Vec::new() };
+
+    for &x in xc {
+        let (gc, enc) = garble_with_scratch(&circuit, rng, &mut scratch);
+        c.offline_bytes += gc.table_bytes() as u64;
+        let rv = random_fp(rng);
+        let rout = random_fp(rng);
+        let bits = spec.client_bits(x, rv, rout);
+        let batch = ot::ot_choose(&enc, 0, &bits);
+        c.offline_bytes += batch.bytes_on_wire as u64;
+        if spec.uses_beaver() {
+            let t = beaver::gen_triple(rng);
+            c.triples.push(t.p1);
+            s.triples.push(t.p2);
+            c.offline_bytes += 6 * 4;
+        }
+        s.output_decode.push(gc.output_decode.clone());
+        c.client_labels.push(batch.labels);
+        c.gcs.push(gc);
+        s.encodings.push(enc);
+        c.r_v.push(rv);
+        c.r_out.push(rout);
+    }
+    (c, s)
+}
+
+/// The seed's `online_relu_layer`, reconstructed per-ReLU. Returns
+/// (client shares, server shares, bytes_to_client, bytes_to_server).
+fn online_ref(
+    variant: ReluVariant,
+    c: &RefClient,
+    s: &RefServer,
+    xc: &[Fp],
+    xs: &[Fp],
+) -> (Vec<Fp>, Vec<Fp>, u64, u64) {
+    let spec = variant.spec();
+    let circuit = spec.build_circuit();
+    let n = xc.len();
+    let base = spec.server_input_base();
+    let mut to_client = 0u64;
+    let mut to_server = 0u64;
+
+    // Round 1: server labels, one Vec per ReLU.
+    let all_labels: Vec<Vec<Label>> = (0..n)
+        .map(|i| {
+            let bits = spec.server_bits(xs[i]);
+            bits.iter().enumerate().map(|(j, &b)| s.encodings[i].encode(base + j, b)).collect()
+        })
+        .collect();
+    to_client += all_labels.iter().map(|l: &Vec<Label>| l.len() as u64 * 16).sum::<u64>();
+
+    // Client: per-ReLU evaluation.
+    let mut colors: Vec<bool> = Vec::new();
+    let mut labels: Vec<Label> = Vec::new();
+    let mut scratch: Vec<Label> = Vec::new();
+    for i in 0..n {
+        labels.clear();
+        labels.extend_from_slice(&c.client_labels[i]);
+        labels.extend_from_slice(&all_labels[i]);
+        let out = evaluate_with_scratch(&circuit, &c.gcs[i], &labels, &mut scratch);
+        colors.extend(out.iter().map(|l| l.color()));
+    }
+    to_server += (colors.len() as u64).div_ceil(8);
+
+    // Server decode.
+    let m = spec.n_outputs;
+    let server_out: Vec<Fp> = (0..n)
+        .map(|i| {
+            let bits: Vec<bool> = colors[i * m..(i + 1) * m]
+                .iter()
+                .zip(&s.output_decode[i])
+                .map(|(&cb, &d)| cb ^ d)
+                .collect();
+            circa::circuits::spec::bits_fp(&bits)
+        })
+        .collect();
+
+    if !spec.uses_beaver() {
+        return (c.r_out.clone(), server_out, to_client, to_server);
+    }
+
+    // Beaver round + resharing.
+    let mut open_c = Vec::new();
+    let mut open_s = Vec::new();
+    for i in 0..n {
+        let oc = beaver::open(xc[i], c.r_v[i], &c.triples[i]);
+        let os = beaver::open(xs[i], server_out[i], &s.triples[i]);
+        open_c.push(oc.e);
+        open_c.push(oc.f);
+        open_s.push(os.e);
+        open_s.push(os.f);
+    }
+    to_server += open_c.len() as u64 * 4;
+    to_client += open_s.len() as u64 * 4;
+
+    let mut server_y = Vec::new();
+    let mut deltas = Vec::new();
+    for i in 0..n {
+        let e = open_c[2 * i] + open_s[2 * i];
+        let f = open_c[2 * i + 1] + open_s[2 * i + 1];
+        let y_c = beaver::mul_share(e, f, &c.triples[i], true);
+        server_y.push(beaver::mul_share(e, f, &s.triples[i], false));
+        deltas.push(y_c - c.r_out[i]);
+    }
+    to_server += deltas.len() as u64 * 4;
+    for i in 0..n {
+        server_y[i] = server_y[i] + deltas[i];
+    }
+    (c.r_out.clone(), server_y, to_client, to_server)
+}
+
+/// Mixed-magnitude signed inputs (both fault regimes represented).
+fn sample_inputs(n: usize, rng: &mut Rng) -> Vec<Fp> {
+    (0..n)
+        .map(|i| {
+            let mag = if i % 3 == 0 { rng.below(1 << 6) } else { rng.below(1 << 20) } as i64;
+            Fp::from_i64(if rng.bool() { mag } else { -mag })
+        })
+        .collect()
+}
+
+fn assert_equivalent(variant: ReluVariant, seed: u64) {
+    let n = 16;
+    let mut data_rng = Rng::new(seed);
+    let xs_vals = sample_inputs(n, &mut data_rng);
+    let shares: Vec<SharePair> =
+        xs_vals.iter().map(|&v| SharePair::share(v, &mut data_rng)).collect();
+    let xc: Vec<Fp> = shares.iter().map(|s| s.client).collect();
+    let xs: Vec<Fp> = shares.iter().map(|s| s.server).collect();
+
+    // Same protocol seed on both paths: material must be bit-identical.
+    let mut rng_ref = Rng::new(seed ^ 0xC1CA);
+    let (rc, rs) = offline_ref(variant, &xc, &mut rng_ref);
+    let (ref_yc, ref_ys, ref_to_client, ref_to_server) = online_ref(variant, &rc, &rs, &xc, &xs);
+
+    let mut rng_batch = Rng::new(seed ^ 0xC1CA);
+    let (cm, sm) = offline_relu_layer(variant, &xc, &mut rng_batch);
+    let (yc, ys, stats) = online_relu_layer(&cm, &sm, &xc, &xs);
+
+    // Bit-identical offline material (spot check: tables + client labels).
+    for i in 0..n {
+        assert_eq!(cm.gc.table_of(i), &rc.gcs[i].table[..], "{variant:?}: table {i}");
+        assert_eq!(
+            cm.client_labels_of(i),
+            &rc.client_labels[i][..],
+            "{variant:?}: client labels {i}"
+        );
+    }
+
+    // Bit-identical byte ledgers.
+    assert_eq!(cm.offline_bytes, rc.offline_bytes, "{variant:?}: offline bytes");
+    assert_eq!(stats.bytes_to_client, ref_to_client, "{variant:?}: online bytes to client");
+    assert_eq!(stats.bytes_to_server, ref_to_server, "{variant:?}: online bytes to server");
+
+    // Bit-identical output shares (not just reconstructed values).
+    assert_eq!(yc, ref_yc, "{variant:?}: client output shares");
+    assert_eq!(ys, ref_ys, "{variant:?}: server output shares");
+}
+
+#[test]
+fn batched_path_matches_seed_baseline_relu() {
+    assert_equivalent(ReluVariant::BaselineRelu, 101);
+}
+
+#[test]
+fn batched_path_matches_seed_naive_sign() {
+    assert_equivalent(ReluVariant::NaiveSign, 102);
+}
+
+#[test]
+fn batched_path_matches_seed_stochastic_sign() {
+    assert_equivalent(ReluVariant::StochasticSign { mode: FaultMode::PosZero }, 103);
+    assert_equivalent(ReluVariant::StochasticSign { mode: FaultMode::NegPass }, 104);
+}
+
+#[test]
+fn batched_path_matches_seed_truncated_sign_k_sweep() {
+    for (i, k) in [0u32, 8, 12].into_iter().enumerate() {
+        assert_equivalent(
+            ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero },
+            200 + i as u64,
+        );
+        assert_equivalent(
+            ReluVariant::TruncatedSign { k, mode: FaultMode::NegPass },
+            300 + i as u64,
+        );
+    }
+}

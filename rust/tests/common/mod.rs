@@ -1,0 +1,16 @@
+//! Shared helpers for the artifact-dependent integration test crates.
+
+use circa::runtime::ArtifactDir;
+
+/// `Some(dir)` when the AOT artifacts exist, `None` (and a skip note on
+/// stderr) otherwise — keeps `cargo test -q` green on machines that
+/// never ran `make artifacts`.
+pub fn artifacts_or_skip(test: &str) -> Option<ArtifactDir> {
+    match ArtifactDir::discover() {
+        Ok(dir) => Some(dir),
+        Err(e) => {
+            eprintln!("skipping {test}: {e}");
+            None
+        }
+    }
+}

@@ -1,6 +1,8 @@
 //! Cross-module integration: serving coordinator over the real demo CNN,
 //! failure injection, and whole-stack invariants. Requires
-//! `make artifacts`.
+//! `make artifacts`; every test self-skips (with a note on stderr) when
+//! the artifacts are absent so `cargo test -q` stays green on machines
+//! that never built them.
 
 use circa::circuits::spec::{FaultMode, ReluVariant};
 use circa::coordinator::{PiService, ServiceConfig};
@@ -9,17 +11,21 @@ use circa::protocol::server::NetworkPlan;
 use circa::runtime::ArtifactDir;
 use std::sync::Arc;
 
-fn demo_plan(variant: ReluVariant) -> Arc<NetworkPlan> {
-    let dir = ArtifactDir::discover().expect("artifacts built");
+mod common;
+use common::artifacts_or_skip;
+
+fn demo_plan(dir: &ArtifactDir, variant: ReluVariant) -> Arc<NetworkPlan> {
     let net = load_weights(&dir.path("weights.bin")).unwrap();
     Arc::new(NetworkPlan { linears: net.linears(), variant, rescale_bits: net.rescale_bits() })
 }
 
 #[test]
 fn service_serves_demo_cnn_with_circa() {
-    let dir = ArtifactDir::discover().unwrap();
+    let Some(dir) = artifacts_or_skip("service_serves_demo_cnn_with_circa") else {
+        return;
+    };
     let ds = load_dataset(&dir.path("dataset.bin")).unwrap();
-    let plan = demo_plan(ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero });
+    let plan = demo_plan(&dir, ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero });
     let svc = PiService::start(
         plan,
         ServiceConfig { workers: 2, pool_target: 6, pool_dealers: 2, ..Default::default() },
@@ -56,8 +62,10 @@ fn service_serves_demo_cnn_with_circa() {
 fn service_survives_dry_pool_bursts() {
     // Pool target 1 with a burst of requests: most leases go dry and are
     // dealt inline; every request must still complete correctly.
-    let plan = demo_plan(ReluVariant::TruncatedSign { k: 10, mode: FaultMode::PosZero });
-    let dir = ArtifactDir::discover().unwrap();
+    let Some(dir) = artifacts_or_skip("service_survives_dry_pool_bursts") else {
+        return;
+    };
+    let plan = demo_plan(&dir, ReluVariant::TruncatedSign { k: 10, mode: FaultMode::PosZero });
     let ds = load_dataset(&dir.path("dataset.bin")).unwrap();
     let svc = PiService::start(
         plan,
@@ -73,6 +81,7 @@ fn service_survives_dry_pool_bursts() {
 }
 
 #[test]
+#[cfg(feature = "pjrt")]
 fn artifact_and_protocol_accuracies_are_consistent() {
     // The PJRT path (exact mode) and the protocol path (baseline GC)
     // compute the same quantized network: spot-check one image end to
@@ -82,7 +91,9 @@ fn artifact_and_protocol_accuracies_are_consistent() {
     use circa::runtime::CnnExecutable;
     use circa::util::Rng;
 
-    let dir = ArtifactDir::discover().unwrap();
+    let Some(dir) = artifacts_or_skip("artifact_and_protocol_accuracies_are_consistent") else {
+        return;
+    };
     let ds = load_dataset(&dir.path("dataset.bin")).unwrap();
     let client = xla::PjRtClient::cpu().unwrap();
     let exe = CnnExecutable::load_cnn(&client, &dir).unwrap();
@@ -94,7 +105,7 @@ fn artifact_and_protocol_accuracies_are_consistent() {
     let z2 = vec![0i32; b * 256];
     let out = exe.run(&images, &z1, &z2, 0, MODE_EXACT).unwrap();
 
-    let plan = demo_plan(ReluVariant::BaselineRelu);
+    let plan = demo_plan(&dir, ReluVariant::BaselineRelu);
     let mut rng = Rng::new(9);
     let (cn, sn, _) = offline_network(&plan, &mut rng);
     let (logits, _) = run_inference(&cn, &sn, ds.image(0));

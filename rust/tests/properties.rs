@@ -6,7 +6,7 @@ use circa::circuits::spec::{FaultMode, ReluVariant};
 use circa::field::{random_fp, Fp, PRIME};
 use circa::gc::build::{bits_to_u64, u64_to_bits, Builder};
 use circa::gc::{evaluate, garble};
-use circa::protocol::offline::{offline_relu_layer};
+use circa::protocol::offline::offline_relu_layer;
 use circa::protocol::online::online_relu_layer;
 use circa::ss::{reconstruct_vec, SharePair};
 use circa::util::Rng;
