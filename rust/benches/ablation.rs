@@ -39,8 +39,10 @@ fn main() {
 
     // 2. Fault-mode parity.
     println!("\n=== ablation 2: PosZero vs NegPass cost parity ===");
-    let pz = relu_cost(ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero }, sample, &mut rng);
-    let np = relu_cost(ReluVariant::TruncatedSign { k: 12, mode: FaultMode::NegPass }, sample, &mut rng);
+    let pz =
+        relu_cost(ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero }, sample, &mut rng);
+    let np =
+        relu_cost(ReluVariant::TruncatedSign { k: 12, mode: FaultMode::NegPass }, sample, &mut rng);
     println!("  PosZero: {:.2} us   NegPass: {:.2} us", pz.online_s * 1e6, np.online_s * 1e6);
     let ratio = pz.online_s / np.online_s;
     assert!(

@@ -54,7 +54,10 @@ fn main() {
 
     // (b) model vs measured across k, on the real activation population.
     println!("\n=== Fig. 3(b): model vs measured fault rates (PosZero) ===");
-    println!("{:>4} {:>14} {:>14} {:>14} {:>14}", "k", "total(meas)", "total(model)", "pos(meas)", "pos(model)");
+    println!(
+        "{:>4} {:>14} {:>14} {:>14} {:>14}",
+        "k", "total(meas)", "total(model)", "pos(meas)", "pos(model)"
+    );
     let mut rng = Rng::new(42);
     let sample: Vec<Fp> = {
         let mut v = acts.clone();

@@ -39,8 +39,10 @@ fn sweep_point(
         if base + b > ds.n {
             break;
         }
-        let images: Vec<i32> =
-            ds.images[base * ds.dim..(base + b) * ds.dim].iter().map(|f| f.to_i64() as i32).collect();
+        let images: Vec<i32> = ds.images[base * ds.dim..(base + b) * ds.dim]
+            .iter()
+            .map(|f| f.to_i64() as i32)
+            .collect();
         let t1: Vec<i32> = (0..t1_n).map(|_| rng.below(PRIME) as i32).collect();
         let t2: Vec<i32> = (0..t2_n).map(|_| rng.below(PRIME) as i32).collect();
         let out = exe.run(&images, &t1, &t2, k, mode).expect("exec");

@@ -60,7 +60,11 @@ fn main() {
             total_kb
         ));
     }
-    write_csv("fig5_gc_size.csv", "variant,ands,table_kb,total_kb,ratio,paper_kb,paper_ratio", &rows);
+    write_csv(
+        "fig5_gc_size.csv",
+        "variant,ands,table_kb,total_kb,ratio,paper_kb,paper_ratio",
+        &rows,
+    );
 
     // Table-only ratios (the garbled material itself, paper's storage story):
     let base_tbl = variants[0].1.table_bytes() as f64;

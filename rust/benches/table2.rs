@@ -16,8 +16,11 @@ fn main() {
     println!("\n=== Table 2: Circa with DeepReDuce (ResNet18) models ===");
     let widths = [14, 9, 11, 11, 9, 11, 11, 8];
     print_row(
-        &["network", "#ReLUs K", "base s", "circa s", "speedup", "paper base", "paper circa", "paper x"]
-            .map(String::from),
+        &[
+            "network", "#ReLUs K", "base s", "circa s", "speedup", "paper base", "paper circa",
+            "paper x",
+        ]
+        .map(String::from),
         &widths,
     );
 

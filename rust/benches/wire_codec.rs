@@ -1,0 +1,153 @@
+//! Wire-codec throughput + size: encode/decode GB/s and bytes-per-ReLU
+//! for one layer's offline material (client + server sides), per variant
+//! and truncation level.
+//!
+//! Also cross-checks the codec against the byte ledger: the garbled-table
+//! payload on the wire must equal `LayerGcBatch::table_bytes()` exactly
+//! (the paper's storage metric), and the total wire size must track
+//! `offline_bytes` (the wire ships labels at their 16 B at-rest size
+//! while the ledger charges the 32 B OT-extension asymptote, so the
+//! ratio hovers around 1). Results land in `BENCH_wire_codec.json`.
+
+use circa::bench_harness::print_row;
+use circa::bench_harness::tables::write_bench_json;
+use circa::circuits::spec::ReluVariant;
+use circa::field::Fp;
+use circa::gc::batch::{LayerEncodingBatch, LayerGcBatch};
+use circa::protocol::offline::{circa_variant, offline_relu_layer};
+use circa::ss::SharePair;
+use circa::util::bytes::{Reader, Writer};
+use circa::util::{Rng, Timer};
+use circa::wire::codec;
+
+const REPS: usize = 3;
+
+fn bench_variant(name: &str, variant: ReluVariant, n: usize, results: &mut Vec<(String, f64)>) {
+    let mut rng = Rng::new(0xC0DEC);
+    let xc: Vec<Fp> = (0..n)
+        .map(|i| SharePair::share(Fp::from_i64(1000 + i as i64), &mut rng).client)
+        .collect();
+    let (cm, sm) = offline_relu_layer(variant, &xc, &mut rng);
+
+    // Encode (best of REPS).
+    let mut buf = Vec::new();
+    let mut enc_s = f64::MAX;
+    for _ in 0..REPS {
+        let t = Timer::new();
+        let mut w = Writer::new();
+        codec::put_client_relu(&mut w, &cm);
+        codec::put_server_relu(&mut w, &sm);
+        enc_s = enc_s.min(t.elapsed_s());
+        buf = w.buf;
+    }
+    let wire_bytes = buf.len();
+
+    // Decode (best of REPS), and verify the roundtrip is bit-identical.
+    let mut dec_s = f64::MAX;
+    for _ in 0..REPS {
+        let t = Timer::new();
+        let mut r = Reader::new(&buf);
+        let c2 = codec::get_client_relu(&mut r).expect("client decode");
+        let s2 = codec::get_server_relu(&mut r).expect("server decode");
+        dec_s = dec_s.min(t.elapsed_s());
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(c2.gc.tables(), cm.gc.tables());
+        assert_eq!(c2.client_labels, cm.client_labels);
+        assert_eq!(s2.encodings.label0(), sm.encodings.label0());
+        assert_eq!(s2.output_decode, sm.output_decode);
+    }
+
+    // The table payload is the paper's storage metric — byte-exact.
+    assert_eq!(cm.gc.tables().len() * 32, cm.gc.table_bytes());
+    let wire_per_relu = wire_bytes as f64 / n as f64;
+    let offline_per_relu = cm.offline_bytes as f64 / n as f64;
+    let ratio = wire_per_relu / offline_per_relu;
+    assert!(
+        (0.5..2.0).contains(&ratio),
+        "{name}: wire/offline ratio {ratio:.2} out of family \
+         (wire {wire_per_relu:.0}, ledger {offline_per_relu:.0})"
+    );
+
+    let enc_gbps = wire_bytes as f64 / enc_s / 1e9;
+    let dec_gbps = wire_bytes as f64 / dec_s / 1e9;
+    let widths = [14, 12, 12, 14, 14, 8];
+    print_row(
+        &[
+            name.to_string(),
+            format!("{enc_gbps:.2}"),
+            format!("{dec_gbps:.2}"),
+            format!("{wire_per_relu:.0}"),
+            format!("{offline_per_relu:.0}"),
+            format!("{ratio:.2}"),
+        ],
+        &widths,
+    );
+    for (key, v) in [
+        ("encode_gbps", enc_gbps),
+        ("decode_gbps", dec_gbps),
+        ("wire_bytes_per_relu", wire_per_relu),
+        ("offline_bytes_per_relu", offline_per_relu),
+        ("wire_to_offline_ratio", ratio),
+        ("table_bytes_per_relu", cm.gc.table_bytes() as f64 / n as f64),
+    ] {
+        results.push((format!("{name}.{key}"), v));
+    }
+}
+
+/// Dealer-side parallel garbling: the chunked stride loop at 1 vs N
+/// threads (bit-identical output by construction; see
+/// `LayerGcBatch::garble_chunked`).
+fn bench_parallel_garble(n: usize, results: &mut Vec<(String, f64)>) {
+    let spec = circa_variant(12).spec();
+    let circuit = spec.build_circuit();
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let time_with = |t: usize| {
+        let mut rng = Rng::new(0x9A8B);
+        let mut batch = LayerGcBatch::new(circuit.clone(), n);
+        let mut enc = LayerEncodingBatch::new(circuit.n_inputs as usize, n);
+        let timer = Timer::new();
+        batch.garble_chunked(&mut enc, n, &mut rng, t);
+        timer.elapsed_s()
+    };
+    let t1 = time_with(1);
+    let tn = time_with(threads);
+    println!(
+        "\nparallel layer garbling (circa_k12): {:.2} us/ReLU @1 thread, \
+         {:.2} us/ReLU @{} threads ({:.2}x)",
+        t1 * 1e6 / n as f64,
+        tn * 1e6 / n as f64,
+        threads,
+        t1 / tn
+    );
+    results.push(("garble_us_per_relu_1t".to_string(), t1 * 1e6 / n as f64));
+    results.push(("garble_us_per_relu_nt".to_string(), tn * 1e6 / n as f64));
+    results.push(("garble_parallel_speedup".to_string(), t1 / tn));
+    results.push(("garble_threads".to_string(), threads as f64));
+}
+
+fn main() {
+    let n = std::env::var("WIRE_RELUS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2048usize)
+        .max(1);
+    println!("=== wire codec throughput + size (n = {n} ReLUs/layer) ===\n");
+    let widths = [14, 12, 12, 14, 14, 8];
+    print_row(
+        &["variant", "enc GB/s", "dec GB/s", "wire B/ReLU", "ledger B/ReLU", "ratio"]
+            .map(String::from),
+        &widths,
+    );
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    bench_variant("baseline", ReluVariant::BaselineRelu, n, &mut results);
+    bench_variant("circa_k0", circa_variant(0), n, &mut results);
+    bench_variant("circa_k8", circa_variant(8), n, &mut results);
+    bench_variant("circa_k12", circa_variant(12), n, &mut results);
+    bench_parallel_garble(n, &mut results);
+    results.push(("n_relus".to_string(), n as f64));
+
+    let entries: Vec<(&str, f64)> = results.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    write_bench_json("BENCH_wire_codec.json", &entries);
+    println!("\n(wrote bench_out/BENCH_wire_codec.json)");
+}

@@ -1,0 +1,185 @@
+//! Two-process private inference: offline material produced by a
+//! standalone dealer and streamed to the serving coordinator over the
+//! wire codec — the deployment split the paper's storage numbers are
+//! about (the dealer owns the offline phase; the server only spends).
+//!
+//! Modes:
+//!
+//! ```bash
+//! # One-process demo: in-memory channel, then a real TCP socket on
+//! # localhost with a self-spawned dealer.
+//! cargo run --release --example dealer_serve
+//!
+//! # Two real processes:
+//! cargo run --release --example dealer_serve -- --listen 127.0.0.1:7700   # dealer
+//! cargo run --release --example dealer_serve -- --dealer 127.0.0.1:7700   # coordinator
+//! ```
+//!
+//! Both processes derive the same demo plan from `--plan-seed` (default
+//! 0xC1CA): the manifest handshake verifies the structure (variant, layer
+//! dims, rescale schedule); weight equality comes from the shared seed.
+
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::coordinator::{PiService, ServiceConfig};
+use circa::field::Fp;
+use circa::protocol::linear::{LinearOp, Matrix};
+use circa::protocol::server::{run_inference, NetworkPlan};
+use circa::util::args::Args;
+use circa::util::{Rng, Timer};
+use circa::wire::dealer::{deal_session, spawn_mem_dealer, spawn_tcp_dealer, RemoteDealer};
+use circa::wire::SessionManifest;
+use std::sync::Arc;
+
+/// The shared demo plan: a tiny CNN-shaped stack (6 → 5 → relu → 5 → 4 →
+/// relu → 4 → 3) with Circa's truncated stochastic sign. Both processes
+/// must build it from the same seed.
+fn demo_plan(plan_seed: u64, k: u32) -> Arc<NetworkPlan> {
+    let mut rng = Rng::new(plan_seed);
+    let linears: Vec<Arc<dyn LinearOp>> = vec![
+        Arc::new(Matrix::random(5, 6, 20, &mut rng)),
+        Arc::new(Matrix::random(4, 5, 20, &mut rng)),
+        Arc::new(Matrix::random(3, 4, 20, &mut rng)),
+    ];
+    Arc::new(NetworkPlan::unscaled(
+        linears,
+        ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero },
+    ))
+}
+
+/// Exact-ReLU plaintext oracle over the same field arithmetic.
+fn oracle(plan: &NetworkPlan, input: &[Fp]) -> Vec<Fp> {
+    let mut y = input.to_vec();
+    for (i, op) in plan.linears.iter().enumerate() {
+        y = op.apply(&y);
+        if i + 1 < plan.linears.len() {
+            y = y.iter().map(|&v| circa::field::relu_exact(v)).collect();
+        }
+    }
+    y
+}
+
+fn demo_input(i: usize) -> Vec<Fp> {
+    (0..6).map(|j| Fp::from_i64(1000 + (37 * i + 13 * j) as i64)).collect()
+}
+
+/// Phase 1: dealer behind an in-memory duplex channel, and proof that
+/// wire-delivered material is bit-equivalent to the inline deal.
+fn mem_channel_demo(plan: &Arc<NetworkPlan>, dealer_seed: u64) {
+    println!("\n--- phase 1: in-memory channel ---");
+    let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), dealer_seed);
+    let mut dealer = RemoteDealer::connect(chan, plan.clone()).expect("mem handshake");
+    let n = 3;
+    let t = Timer::new();
+    let sessions = dealer.fetch(n).expect("fetch sessions");
+    let fetch_s = t.elapsed_s();
+    let wire_bytes = dealer.bytes_received();
+    println!(
+        "fetched {n} sessions in {:.1} ms ({} B on wire, {} B/session)",
+        fetch_s * 1e3,
+        wire_bytes,
+        wire_bytes / n as u64
+    );
+
+    // Same dealer seed replayed inline ⇒ the wire path must reproduce the
+    // inline path bit for bit, down to the inference transcript.
+    let mut inline_rng = Rng::new(dealer_seed);
+    let mut identical = 0;
+    for (i, session) in sessions.iter().enumerate() {
+        let inline = deal_session(plan, &mut inline_rng);
+        let input = demo_input(i);
+        let (wire_logits, _) = run_inference(&session.client, &session.server, &input);
+        let (inline_logits, _) = run_inference(&inline.client, &inline.server, &input);
+        assert_eq!(wire_logits, inline_logits, "wire vs inline session {i}");
+        identical += 1;
+    }
+    println!("wire-delivered material == inline deal: {identical}/{n} sessions bit-identical");
+    dealer.close();
+    let _ = dealer_thread.join();
+}
+
+/// Phase 2: the serving coordinator pointed at a dealer address — the
+/// material pool refills over a real TCP socket.
+fn tcp_serving_demo(plan: &Arc<NetworkPlan>, addr: &str, n_requests: usize) {
+    println!("\n--- phase 2: coordinator against dealer at {addr} ---");
+    let svc = PiService::start(
+        plan.clone(),
+        ServiceConfig {
+            workers: 2,
+            pool_target: 8,
+            pool_dealers: 2,
+            dealer_addr: Some(addr.to_string()),
+            ..Default::default()
+        },
+    );
+    svc.warmup(4);
+    println!("material bank warmed from remote dealer ({} sessions banked)", svc.pool.banked());
+
+    let t = Timer::new();
+    let rxs: Vec<_> = (0..n_requests).map(|i| svc.submit(demo_input(i))).collect();
+    let mut exact = 0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("response");
+        if resp.logits == oracle(plan, &demo_input(i)) {
+            exact += 1;
+        }
+    }
+    let wall = t.elapsed_s();
+    let snap = svc.metrics.snapshot();
+    let rate = n_requests as f64 / wall;
+    println!("served {n_requests} inferences in {wall:.2} s ({rate:.1} inf/s)");
+    println!("matches exact-ReLU oracle: {exact}/{n_requests} (Circa faults only |x| < 2^k)");
+    println!(
+        "remote refill: {} fetches, {} sessions, {:.2} MB offline material on wire",
+        snap.remote_refills,
+        snap.remote_sessions,
+        snap.bytes_offline_wire as f64 / 1e6
+    );
+    println!(
+        "refill fetch ms: mean {:.1}  p99 {:.1}   (pool dry leases: {})",
+        snap.remote_refill_mean_us / 1e3,
+        snap.remote_refill_p99_us as f64 / 1e3,
+        snap.pool_dry_events
+    );
+    svc.shutdown();
+}
+
+fn main() {
+    let args = Args::from_env();
+    let plan_seed = args.get_u64("plan-seed", 0xC1CA);
+    let dealer_seed = args.get_u64("dealer-seed", 0xDEA1);
+    let k = args.get_u64("k", 4) as u32;
+    let n_requests = args.get_usize("requests", 16);
+    let plan = demo_plan(plan_seed, k);
+    let manifest = SessionManifest::of_plan(&plan);
+    println!(
+        "demo plan: {} linears, variant {}, manifest fingerprint {:#018x}",
+        plan.linears.len(),
+        plan.variant.name(),
+        manifest.fingerprint
+    );
+
+    if let Some(addr) = args.get("listen") {
+        // Dealer process: serve until killed.
+        let handle = spawn_tcp_dealer(addr, plan, dealer_seed).expect("bind dealer");
+        println!("dealer listening on {} (ctrl-c to stop)", handle.addr());
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+
+    if let Some(addr) = args.get("dealer") {
+        // Coordinator process against an external dealer.
+        tcp_serving_demo(&plan, addr, n_requests);
+        return;
+    }
+
+    // Default: full single-process walkthrough — in-memory channel first,
+    // then a self-spawned dealer on a real localhost TCP socket.
+    mem_channel_demo(&plan, dealer_seed);
+    let handle = spawn_tcp_dealer("127.0.0.1:0", plan.clone(), dealer_seed).expect("bind dealer");
+    let addr = handle.addr().to_string();
+    println!("\nspawned TCP dealer on {addr}");
+    tcp_serving_demo(&plan, &addr, n_requests);
+    handle.stop();
+    println!("\ndone: private inference served end-to-end with material from another process.");
+}

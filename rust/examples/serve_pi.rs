@@ -19,6 +19,7 @@ use circa::util::args::Args;
 use circa::util::Timer;
 use std::sync::Arc;
 
+#[allow(clippy::too_many_arguments)]
 fn run_variant(
     name: &str,
     variant: ReluVariant,
@@ -27,12 +28,19 @@ fn run_variant(
     dataset: &circa::nn::weights::Dataset,
     n_requests: usize,
     workers: usize,
+    dealer_addr: Option<String>,
 ) {
     println!("\n=== serving with {name} ===");
     let plan = Arc::new(NetworkPlan { linears, variant, rescale_bits });
     let svc = PiService::start(
         plan,
-        ServiceConfig { workers, pool_target: 2 * n_requests.min(64), pool_dealers: workers, ..Default::default() },
+        ServiceConfig {
+            workers,
+            pool_target: 2 * n_requests.min(64),
+            pool_dealers: workers,
+            dealer_addr,
+            ..Default::default()
+        },
     );
     eprintln!("warming material bank ...");
     svc.warmup(n_requests.min(16));
@@ -87,6 +95,19 @@ fn run_variant(
             snap.dry_deal_p99_us as f64 / 1e3
         );
     }
+    if snap.remote_refills > 0 {
+        println!(
+            "  remote refill     : {} fetches, {} sessions, {:.2} MB on wire",
+            snap.remote_refills,
+            snap.remote_sessions,
+            snap.bytes_offline_wire as f64 / 1e6
+        );
+        println!(
+            "  refill fetch ms   : mean {:.1}  p99 {:.1}",
+            snap.remote_refill_mean_us / 1e3,
+            snap.remote_refill_p99_us as f64 / 1e3
+        );
+    }
     svc.shutdown();
 }
 
@@ -95,6 +116,9 @@ fn main() {
     let n_requests = args.get_usize("requests", 48);
     let workers = args.get_usize("workers", 4);
     let k = args.get_u64("k", 12) as u32;
+    // Optional standalone dealer (see examples/dealer_serve.rs): the
+    // material pool then refills over TCP instead of dealing inline.
+    let dealer_addr = args.get("dealer").map(|s| s.to_string());
 
     let dir = ArtifactDir::discover().expect("run `make artifacts` first");
     let net = load_weights(&dir.path("weights.bin")).expect("weights");
@@ -117,6 +141,7 @@ fn main() {
         &ds,
         n_requests,
         workers,
+        dealer_addr.clone(),
     );
     run_variant(
         "baseline ReLU GC (Delphi/Gazelle)",
@@ -126,5 +151,7 @@ fn main() {
         &ds,
         n_requests,
         workers,
+        // The dealer serves one plan; the baseline pass deals inline.
+        None,
     );
 }

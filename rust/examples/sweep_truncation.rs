@@ -58,7 +58,10 @@ fn main() {
     };
 
     let (exact_acc, _) = point(0, MODE_EXACT, &mut rng);
-    println!("net={net}  batches={n_batches}  baseline(exact) accuracy {:.2}%\n", exact_acc * 100.0);
+    println!(
+        "net={net}  batches={n_batches}  baseline(exact) accuracy {:.2}%\n",
+        exact_acc * 100.0
+    );
     println!("{:>4}  {:>9} {:>8}   {:>9} {:>8}", "k", "PZ acc%", "PZ fr", "NP acc%", "NP fr");
     for k in (8..=24).step_by(2) {
         let (pa, pf) = point(k, MODE_POSZERO, &mut rng);

@@ -21,6 +21,7 @@ pub struct Table1Row {
     pub spec: fn() -> NetworkSpec,
 }
 
+#[rustfmt::skip]
 pub fn table1() -> Vec<Table1Row> {
     vec![
         Table1Row { name: "ResNet32-C10", relus_k: 303.1, baseline_acc: 92.43, negpass_acc: 91.47, negpass_bits: 12, poszero_acc: 91.85, poszero_bits: 12, baseline_runtime_s: 6.32, circa_runtime_s: 2.47, speedup: 2.6, spec: || resnet::resnet32(32, 10) },
@@ -49,6 +50,7 @@ pub struct Table2Row {
     pub spec: fn() -> NetworkSpec,
 }
 
+#[rustfmt::skip]
 pub fn table2() -> Vec<Table2Row> {
     vec![
         Table2Row { name: "DeepReD1-C100", relus_k: 229.4, baseline_acc: 76.22, negpass_bits: 13, poszero_bits: 12, baseline_runtime_s: 3.18, circa_runtime_s: 1.84, speedup: 1.7, spec: || deepreduce::deepreduce(1, 32, 100) },
@@ -75,6 +77,7 @@ pub struct Table3Row {
     pub spec: fn() -> NetworkSpec,
 }
 
+#[rustfmt::skip]
 pub fn table3() -> Vec<Table3Row> {
     vec![
         Table3Row { name: "Res32-C100", relus_k: 303.10, relu_s: 6.32, sign_s: 5.51, stoch_sign_s: 4.50, trunc_sign_s: 2.47, trunc_bits: 13, spec: || resnet::resnet32(32, 100) },

@@ -12,6 +12,12 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub pool_dry_events: AtomicU64,
     pub bytes_online: AtomicU64,
+    /// Remote-dealer fetch round trips completed.
+    pub remote_refills: AtomicU64,
+    /// Sessions delivered by remote refills.
+    pub remote_sessions: AtomicU64,
+    /// Offline material received over the wire (frame bytes included).
+    pub bytes_offline_wire: AtomicU64,
     inner: Mutex<Inner>,
 }
 
@@ -23,6 +29,9 @@ struct Inner {
     /// Inline-deal latency of pool-dry leases — the offline-throughput
     /// shortfall as the request path actually pays it.
     dry_deal_us: Histogram,
+    /// Latency of one remote-dealer fetch round trip (request → all
+    /// sessions decoded).
+    remote_refill_us: Histogram,
 }
 
 /// A snapshot for reporting.
@@ -40,6 +49,11 @@ pub struct Snapshot {
     pub total_p99_us: u64,
     pub dry_deal_mean_us: f64,
     pub dry_deal_p99_us: u64,
+    pub remote_refills: u64,
+    pub remote_sessions: u64,
+    pub bytes_offline_wire: u64,
+    pub remote_refill_mean_us: f64,
+    pub remote_refill_p99_us: u64,
 }
 
 impl Metrics {
@@ -60,6 +74,16 @@ impl Metrics {
         self.inner.lock().unwrap().dry_deal_us.record_us(deal_us);
     }
 
+    /// Record one remote-dealer refill round trip: fetch latency, bytes
+    /// that crossed the wire, and sessions delivered (surfaced in
+    /// `serve_pi` next to the dry-deal histogram).
+    pub fn record_remote_refill(&self, fetch_us: u64, bytes: u64, sessions: u64) {
+        self.remote_refills.fetch_add(1, Ordering::Relaxed);
+        self.remote_sessions.fetch_add(sessions, Ordering::Relaxed);
+        self.bytes_offline_wire.fetch_add(bytes, Ordering::Relaxed);
+        self.inner.lock().unwrap().remote_refill_us.record_us(fetch_us);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         Snapshot {
@@ -75,6 +99,11 @@ impl Metrics {
             total_p99_us: g.total_us.percentile_us(99.0),
             dry_deal_mean_us: g.dry_deal_us.mean_us(),
             dry_deal_p99_us: g.dry_deal_us.percentile_us(99.0),
+            remote_refills: self.remote_refills.load(Ordering::Relaxed),
+            remote_sessions: self.remote_sessions.load(Ordering::Relaxed),
+            bytes_offline_wire: self.bytes_offline_wire.load(Ordering::Relaxed),
+            remote_refill_mean_us: g.remote_refill_us.mean_us(),
+            remote_refill_p99_us: g.remote_refill_us.percentile_us(99.0),
         }
     }
 }
@@ -95,6 +124,22 @@ mod tests {
         assert_eq!(s.bytes_online, 128);
         assert!(s.online_mean_us >= 1000.0);
         assert!(s.total_p99_us >= s.total_p50_us);
+    }
+
+    #[test]
+    fn remote_refill_recorded() {
+        let m = Metrics::default();
+        let s0 = m.snapshot();
+        assert_eq!(s0.remote_refills, 0);
+        assert_eq!(s0.bytes_offline_wire, 0);
+        m.record_remote_refill(2_000, 1_000_000, 4);
+        m.record_remote_refill(4_000, 500_000, 2);
+        let s = m.snapshot();
+        assert_eq!(s.remote_refills, 2);
+        assert_eq!(s.remote_sessions, 6);
+        assert_eq!(s.bytes_offline_wire, 1_500_000);
+        assert!((s.remote_refill_mean_us - 3_000.0).abs() < 1e-9);
+        assert!(s.remote_refill_p99_us >= 4_000);
     }
 
     #[test]

@@ -18,7 +18,9 @@
 //!   `target` ready-to-serve sessions; the online path leases one per
 //!   request. A dry lease deals inline and reports the measured deal
 //!   latency ([`pool::Lease`]) so the shortfall lands in the latency
-//!   histograms, not just a counter.
+//!   histograms, not just a counter. Refills come from a
+//!   [`pool::RefillSource`]: inline deal, or a standalone dealer process
+//!   reached over [`crate::wire`] (`ServiceConfig::dealer_addr`).
 //! * [`batcher`] — groups incoming requests into dispatch batches
 //!   (max-size / max-delay policy, the classic dynamic batcher).
 //! * [`router`] — a worker pool running the 2-party online protocol for
@@ -35,5 +37,5 @@ pub mod router;
 pub mod service;
 
 pub use metrics::Metrics;
-pub use pool::{Lease, MaterialPool};
+pub use pool::{Lease, MaterialPool, RefillSource};
 pub use service::{PiService, ServiceConfig};

@@ -6,14 +6,25 @@
 //! `target`; `lease()` pops a ready session or — if the bank is dry —
 //! prepares one inline (counted, because it shows up as tail latency
 //! exactly like a real deployment's offline-throughput shortfall).
+//!
+//! Refills come from a [`RefillSource`]: either the classic inline deal
+//! (garble in-process) or a [`RemoteDealer`] — a separate dealer process
+//! reached over [`crate::wire`], which is the paper's actual deployment
+//! shape (offline material produced elsewhere, shipped to the server).
+//! Remote refill latency and bytes-on-wire land in
+//! [`super::metrics::Metrics`] next to the dry-deal histogram.
 
+use super::metrics::Metrics;
 use crate::protocol::client::ClientNet;
 use crate::protocol::server::{offline_network, NetworkPlan, ServerNet};
+use crate::util::error::Result;
 use crate::util::{Rng, Timer};
+use crate::wire::dealer::RemoteDealer;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// One ready-to-serve inference session.
 pub struct Session {
@@ -41,6 +52,19 @@ struct Shared {
     produced: AtomicU64,
 }
 
+/// Where dealer threads get their sessions.
+pub enum RefillSource {
+    /// Deal sessions inline in local dealer threads (the default).
+    Inline,
+    /// Stream pre-dealt sessions from a remote dealer process. `connect`
+    /// is called (and re-called after transport errors) to establish a
+    /// [`RemoteDealer`]; `batch` caps sessions per round trip.
+    Remote {
+        connect: Arc<dyn Fn() -> Result<RemoteDealer> + Send + Sync>,
+        batch: usize,
+    },
+}
+
 /// Material bank with background dealer threads.
 pub struct MaterialPool {
     plan: Arc<NetworkPlan>,
@@ -50,8 +74,22 @@ pub struct MaterialPool {
 }
 
 impl MaterialPool {
-    /// Spawn a pool refilling toward `target` with `n_dealers` threads.
+    /// Spawn a pool refilling toward `target` with `n_dealers` inline
+    /// dealer threads (the classic in-process deal).
     pub fn start(plan: Arc<NetworkPlan>, target: usize, n_dealers: usize, seed: u64) -> Self {
+        Self::start_with_source(plan, target, n_dealers, seed, RefillSource::Inline, None)
+    }
+
+    /// Spawn a pool with an explicit [`RefillSource`]. When `metrics` is
+    /// given, remote refills record their latency and bytes-on-wire.
+    pub fn start_with_source(
+        plan: Arc<NetworkPlan>,
+        target: usize,
+        n_dealers: usize,
+        seed: u64,
+        source: RefillSource,
+        metrics: Option<Arc<Metrics>>,
+    ) -> Self {
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             ready: Condvar::new(),
@@ -64,24 +102,109 @@ impl MaterialPool {
         for d in 0..n_dealers.max(1) {
             let shared = shared.clone();
             let plan = plan.clone();
+            let metrics = metrics.clone();
             let mut rng = Rng::new(seed ^ (d as u64).wrapping_mul(0x9E3779B97F4A7C15));
-            dealers.push(std::thread::spawn(move || loop {
-                // Wait until below target (or stopping).
-                {
-                    let mut q = shared.queue.lock().unwrap();
-                    while q.len() >= target && !shared.stop.load(Ordering::Relaxed) {
-                        q = shared.refill.wait(q).unwrap();
+            let remote = match &source {
+                RefillSource::Inline => None,
+                RefillSource::Remote { connect, batch } => {
+                    Some((connect.clone(), (*batch).max(1)))
+                }
+            };
+            dealers.push(std::thread::spawn(move || {
+                let mut conn: Option<RemoteDealer> = None;
+                // Connect + fetch failures share one counter, reset only
+                // on a successful fetch — a dealer that handshakes but
+                // fails every fetch still gets surfaced.
+                let mut failures = 0u64;
+                loop {
+                    // Wait until below target (or stopping).
+                    {
+                        let mut q = shared.queue.lock().unwrap();
+                        while q.len() >= target && !shared.stop.load(Ordering::Relaxed) {
+                            q = shared.refill.wait(q).unwrap();
+                        }
+                    }
+                    if shared.stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    match &remote {
+                        None => {
+                            // Produce outside the lock (garbling is slow).
+                            let (client, server, offline_bytes) =
+                                offline_network(&plan, &mut rng);
+                            shared.produced.fetch_add(1, Ordering::Relaxed);
+                            let mut q = shared.queue.lock().unwrap();
+                            q.push_back(Session { client, server, offline_bytes });
+                            shared.ready.notify_one();
+                        }
+                        Some((connect, batch)) => {
+                            if conn.is_none() {
+                                match connect() {
+                                    Ok(d) => conn = Some(d),
+                                    Err(e) => {
+                                        // Surface the failure (throttled):
+                                        // a dead/mismatched dealer would
+                                        // otherwise hang warmup silently.
+                                        failures += 1;
+                                        if failures.is_power_of_two() {
+                                            eprintln!(
+                                                "[pool d{d}] dealer connect failed \
+                                                 ({failures}x): {e}"
+                                            );
+                                        }
+                                        std::thread::sleep(Duration::from_millis(50));
+                                        continue;
+                                    }
+                                }
+                            }
+                            // Fetch only the current deficit (racy but
+                            // bounded: worst-case overshoot is one batch
+                            // per dealer thread).
+                            let deficit =
+                                target.saturating_sub(shared.queue.lock().unwrap().len());
+                            let want = (*batch).min(deficit.max(1));
+                            let (fetched, fetch_us, wire_bytes) = {
+                                let dealer = conn.as_mut().unwrap();
+                                let before = dealer.bytes_received();
+                                let t = Timer::new();
+                                let res = dealer.fetch(want);
+                                (res, t.elapsed_us(), dealer.bytes_received() - before)
+                            };
+                            match fetched {
+                                Ok(sessions) => {
+                                    failures = 0;
+                                    if let Some(m) = &metrics {
+                                        m.record_remote_refill(
+                                            fetch_us,
+                                            wire_bytes,
+                                            sessions.len() as u64,
+                                        );
+                                    }
+                                    shared
+                                        .produced
+                                        .fetch_add(sessions.len() as u64, Ordering::Relaxed);
+                                    let mut q = shared.queue.lock().unwrap();
+                                    q.extend(sessions);
+                                    shared.ready.notify_all();
+                                }
+                                Err(e) => {
+                                    // Transport hiccup: surface it
+                                    // (throttled), drop the link, and
+                                    // reconnect on the next round.
+                                    failures += 1;
+                                    if failures.is_power_of_two() {
+                                        eprintln!(
+                                            "[pool d{d}] dealer fetch failed \
+                                             ({failures}x): {e}"
+                                        );
+                                    }
+                                    conn = None;
+                                    std::thread::sleep(Duration::from_millis(50));
+                                }
+                            }
+                        }
                     }
                 }
-                if shared.stop.load(Ordering::Relaxed) {
-                    return;
-                }
-                // Produce outside the lock (garbling is the slow part).
-                let (client, server, offline_bytes) = offline_network(&plan, &mut rng);
-                shared.produced.fetch_add(1, Ordering::Relaxed);
-                let mut q = shared.queue.lock().unwrap();
-                q.push_back(Session { client, server, offline_bytes });
-                shared.ready.notify_one();
             }));
         }
         Self { plan, shared, target, dealers }
@@ -177,6 +300,40 @@ mod tests {
         assert!(lease.was_dry);
         assert!(lease.deal_us > 0, "inline deal latency must be measured");
         assert_eq!(pool.dry_leases(), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn remote_refill_source_fills_bank() {
+        // The deployment shape: material produced by a dealer "process"
+        // (in-memory channel here), streamed in over the wire codec, and
+        // banked like any inline deal — with latency/bytes recorded.
+        let plan = tiny_plan();
+        let metrics = Arc::new(Metrics::default());
+        let plan_c = plan.clone();
+        let connect: Arc<dyn Fn() -> Result<RemoteDealer> + Send + Sync> = Arc::new(move || {
+            let (chan, _dealer_thread) = crate::wire::dealer::spawn_mem_dealer(plan_c.clone(), 77);
+            RemoteDealer::connect(chan, plan_c.clone())
+        });
+        let pool = MaterialPool::start_with_source(
+            plan,
+            3,
+            1,
+            7,
+            RefillSource::Remote { connect, batch: 2 },
+            Some(metrics.clone()),
+        );
+        pool.wait_ready(3);
+        let mut rng = Rng::new(2);
+        let lease = pool.lease(&mut rng);
+        assert!(!lease.was_dry);
+        assert!(lease.session.offline_bytes > 0);
+        assert!(pool.produced() >= 3);
+        let snap = metrics.snapshot();
+        assert!(snap.remote_refills >= 1, "refill rounds recorded");
+        assert!(snap.remote_sessions >= 3, "sessions recorded");
+        assert!(snap.bytes_offline_wire > 0, "wire bytes recorded");
+        assert!(snap.remote_refill_mean_us > 0.0, "fetch latency recorded");
         pool.shutdown();
     }
 

@@ -3,10 +3,11 @@
 
 use super::batcher::{next_batch, BatchPolicy};
 use super::metrics::Metrics;
-use super::pool::MaterialPool;
+use super::pool::{MaterialPool, RefillSource};
 use super::router::{spawn_workers, Request, Response};
 use crate::field::Fp;
 use crate::protocol::server::NetworkPlan;
+use crate::wire::dealer::RemoteDealer;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -21,6 +22,10 @@ pub struct ServiceConfig {
     pub pool_dealers: usize,
     pub batch: BatchPolicy,
     pub seed: u64,
+    /// When set, the material pool refills from a standalone dealer at
+    /// this TCP address ([`crate::wire::dealer`]) instead of dealing
+    /// inline; refill latency and bytes-on-wire land in [`Metrics`].
+    pub dealer_addr: Option<String>,
 }
 
 impl Default for ServiceConfig {
@@ -31,6 +36,7 @@ impl Default for ServiceConfig {
             pool_dealers: 2,
             batch: BatchPolicy::default(),
             seed: 0xC1CA,
+            dealer_addr: None,
         }
     }
 }
@@ -48,13 +54,26 @@ pub struct PiService {
 impl PiService {
     /// Start the service for a network plan.
     pub fn start(plan: Arc<NetworkPlan>, cfg: ServiceConfig) -> Self {
-        let pool = Arc::new(MaterialPool::start(
+        let metrics = Arc::new(Metrics::default());
+        let source = match &cfg.dealer_addr {
+            None => RefillSource::Inline,
+            Some(addr) => {
+                let addr = addr.clone();
+                let plan = plan.clone();
+                RefillSource::Remote {
+                    connect: Arc::new(move || RemoteDealer::connect_tcp(&addr, plan.clone())),
+                    batch: 4,
+                }
+            }
+        };
+        let pool = Arc::new(MaterialPool::start_with_source(
             plan,
             cfg.pool_target,
             cfg.pool_dealers,
             cfg.seed,
+            source,
+            Some(metrics.clone()),
         ));
-        let metrics = Arc::new(Metrics::default());
 
         let (ingress, ingress_rx): (Sender<Request>, Receiver<Request>) = channel();
         let (batch_tx, batch_rx) = channel();

@@ -24,7 +24,14 @@ use super::circuit::Circuit;
 use super::eval;
 use super::garble::{self, EncodingView};
 use crate::prf::{Delta, Label};
+use crate::util::error::{Error, Result};
 use crate::util::Rng;
+
+/// Instances per RNG fork in [`LayerGcBatch::garble_chunked`]. Fixed (not
+/// derived from the thread count) so the garbled output is a function of
+/// the seed alone — chunk `c` always draws from fork `c`, whether one
+/// thread processes every chunk or eight threads split them.
+pub const GARBLE_CHUNK: usize = 128;
 
 /// One layer's garbled tables: a single [`Circuit`] template and one
 /// contiguous table/decode buffer with fixed per-ReLU strides.
@@ -78,6 +85,118 @@ impl LayerGcBatch {
         );
         enc.deltas.push(delta);
         self.n += 1;
+    }
+
+    /// Garble `count` instances with the stride loop chunked across up to
+    /// `n_threads` dealer threads. Each [`GARBLE_CHUNK`]-instance chunk
+    /// garbles from its own [`Rng::fork`] into a disjoint range of the
+    /// layer buffers, so the output is bit-identical for every thread
+    /// count (including 1) under the same parent RNG state.
+    pub fn garble_chunked(
+        &mut self,
+        enc: &mut LayerEncodingBatch,
+        count: usize,
+        rng: &mut Rng,
+        n_threads: usize,
+    ) {
+        if count == 0 {
+            return;
+        }
+        assert_eq!(enc.len(), self.n, "batch/encoding arity");
+        let base = self.n;
+        let and_stride = self.and_stride;
+        let out_stride = self.out_stride;
+        let in_stride = enc.stride;
+        self.tables.resize((base + count) * and_stride, [Label::ZERO; 2]);
+        self.output_decode.resize((base + count) * out_stride, false);
+        enc.label0.resize((base + count) * in_stride, Label::ZERO);
+        enc.deltas.resize(base + count, Delta(Label::ZERO));
+
+        // Forks are drawn sequentially from the parent up front: the
+        // stream assigned to chunk `c` never depends on scheduling.
+        let n_chunks = count.div_ceil(GARBLE_CHUNK);
+        let mut forks: Vec<Rng> = (0..n_chunks).map(|c| rng.fork(c as u64)).collect();
+        let n_groups = n_threads.max(1).min(n_chunks);
+        let chunks_per_group = n_chunks.div_ceil(n_groups);
+
+        let circuit = &self.circuit;
+        let mut tables = &mut self.tables[base * and_stride..];
+        let mut decode = &mut self.output_decode[base * out_stride..];
+        let mut label0 = &mut enc.label0[base * in_stride..];
+        let mut deltas = &mut enc.deltas[base..];
+        std::thread::scope(|scope| {
+            let mut chunk0 = 0usize;
+            while chunk0 < n_chunks {
+                let g_chunks = chunks_per_group.min(n_chunks - chunk0);
+                let lo = chunk0 * GARBLE_CHUNK;
+                let hi = ((chunk0 + g_chunks) * GARBLE_CHUNK).min(count);
+                let m = hi - lo;
+                let g_forks: Vec<Rng> = forks.drain(..g_chunks).collect();
+                let (t, rest) = std::mem::take(&mut tables).split_at_mut(m * and_stride);
+                tables = rest;
+                let (dc, rest) = std::mem::take(&mut decode).split_at_mut(m * out_stride);
+                decode = rest;
+                let (l0, rest) = std::mem::take(&mut label0).split_at_mut(m * in_stride);
+                label0 = rest;
+                let (dl, rest) = std::mem::take(&mut deltas).split_at_mut(m);
+                deltas = rest;
+                scope.spawn(move || {
+                    let mut scratch: Vec<Label> = Vec::new();
+                    let mut off = 0usize;
+                    for mut frng in g_forks {
+                        let c_count = GARBLE_CHUNK.min(m - off);
+                        for i in off..off + c_count {
+                            dl[i] = garble::garble_into(
+                                circuit,
+                                &mut frng,
+                                &mut scratch,
+                                &mut t[i * and_stride..(i + 1) * and_stride],
+                                &mut l0[i * in_stride..(i + 1) * in_stride],
+                                &mut dc[i * out_stride..(i + 1) * out_stride],
+                            );
+                        }
+                        off += c_count;
+                    }
+                });
+                chunk0 += g_chunks;
+            }
+        });
+        self.n += count;
+    }
+
+    /// Rebuild a batch from its raw wire parts, validating every
+    /// structural invariant (untrusted input — returns `Err`, never
+    /// panics).
+    pub fn from_parts(
+        circuit: Circuit,
+        n: usize,
+        tables: Vec<[Label; 2]>,
+        output_decode: Vec<bool>,
+    ) -> Result<Self> {
+        circuit.validate().map_err(Error::msg)?;
+        let and_stride = circuit.n_and();
+        let out_stride = circuit.outputs.len();
+        // `n` is untrusted: checked multiplies so absurd counts fail the
+        // comparison instead of overflowing.
+        let want_tables = n.checked_mul(and_stride).unwrap_or(usize::MAX);
+        let want_decode = n.checked_mul(out_stride).unwrap_or(usize::MAX);
+        crate::ensure!(
+            tables.len() == want_tables,
+            "table buffer {} != {n} x stride {and_stride}",
+            tables.len()
+        );
+        crate::ensure!(
+            output_decode.len() == want_decode,
+            "decode buffer {} != {n} x stride {out_stride}",
+            output_decode.len()
+        );
+        Ok(Self { circuit, and_stride, out_stride, tables, output_decode, n })
+    }
+
+    /// The whole layer's garbled tables (ReLU-major, stride
+    /// [`LayerGcBatch::and_stride`]).
+    pub fn tables(&self) -> &[[Label; 2]] {
+        &self.tables
     }
 
     /// Number of garbled instances in the batch.
@@ -174,6 +293,34 @@ impl LayerEncodingBatch {
     /// An empty arena for `n` instances of `stride` inputs each.
     pub fn new(stride: usize, n: usize) -> Self {
         Self { stride, label0: Vec::with_capacity(n * stride), deltas: Vec::with_capacity(n) }
+    }
+
+    /// Rebuild an arena from its raw wire parts, validating arity and the
+    /// free-XOR color invariant (untrusted input — returns `Err`, never
+    /// panics).
+    pub fn from_parts(stride: usize, label0: Vec<Label>, deltas: Vec<Delta>) -> Result<Self> {
+        let want = deltas.len().checked_mul(stride).unwrap_or(usize::MAX);
+        crate::ensure!(
+            label0.len() == want,
+            "label arena {} != {} x stride {stride}",
+            label0.len(),
+            deltas.len()
+        );
+        // Every delta must carry the point-and-permute color bit; a
+        // cleared bit would silently break evaluation downstream.
+        crate::ensure!(deltas.iter().all(|d| d.0.color()), "delta missing color bit");
+        Ok(Self { stride, label0, deltas })
+    }
+
+    /// The whole layer's zero-labels (ReLU-major, stride
+    /// [`LayerEncodingBatch::stride`]).
+    pub fn label0(&self) -> &[Label] {
+        &self.label0
+    }
+
+    /// One free-XOR delta per instance.
+    pub fn deltas(&self) -> &[Delta] {
+        &self.deltas
     }
 
     /// Number of encoded instances.
@@ -306,6 +453,110 @@ mod tests {
         let mut colors = Vec::new();
         batch.eval_layer_colors(&[], &[], &mut colors);
         assert!(colors.is_empty());
+    }
+
+    fn garble_chunked_with(
+        circuit: &Circuit,
+        n: usize,
+        threads: usize,
+        seed: u64,
+    ) -> (LayerGcBatch, LayerEncodingBatch) {
+        let mut rng = Rng::new(seed);
+        let mut batch = LayerGcBatch::new(circuit.clone(), n);
+        let mut enc = LayerEncodingBatch::new(circuit.n_inputs as usize, n);
+        batch.garble_chunked(&mut enc, n, &mut rng, threads);
+        (batch, enc)
+    }
+
+    #[test]
+    fn chunked_garbling_is_thread_count_invariant() {
+        // The parallel-dealer contract: the same seed yields bit-identical
+        // material whether the chunk loop runs on 1, 3, or 8 threads —
+        // including a count that is not a multiple of the chunk size.
+        let circuit = adder_circuit(8);
+        let n = 2 * GARBLE_CHUNK + 37;
+        let (b1, e1) = garble_chunked_with(&circuit, n, 1, 99);
+        for threads in [2, 3, 8] {
+            let (bt, et) = garble_chunked_with(&circuit, n, threads, 99);
+            assert_eq!(bt.len(), n);
+            assert_eq!(bt.tables(), b1.tables(), "{threads} threads: tables");
+            assert_eq!(bt.output_decode(), b1.output_decode(), "{threads} threads: decode");
+            assert_eq!(et.label0(), e1.label0(), "{threads} threads: label0");
+            assert_eq!(
+                et.deltas().iter().map(|d| d.0).collect::<Vec<_>>(),
+                e1.deltas().iter().map(|d| d.0).collect::<Vec<_>>(),
+                "{threads} threads: deltas"
+            );
+        }
+    }
+
+    #[test]
+    fn chunked_garbling_evaluates_correctly() {
+        // Chunk-forked RNG streams still have to produce *valid* garbled
+        // material: evaluate every instance against the plain oracle.
+        let circuit = adder_circuit(6);
+        let n = GARBLE_CHUNK + 9;
+        let (batch, enc) = garble_chunked_with(&circuit, n, 4, 7);
+        let mut rng = Rng::new(1234);
+        let mut client_arena = Vec::new();
+        let mut server_arena = Vec::new();
+        let mut want = Vec::new();
+        for i in 0..n {
+            let a = rng.below(64);
+            let b = rng.below(64);
+            let mut bits = u64_to_bits(a, 6);
+            bits.extend(u64_to_bits(b, 6));
+            let view = enc.view(i);
+            client_arena.extend((0..6).map(|j| view.encode(j, bits[j])));
+            server_arena.extend((6..12).map(|j| view.encode(j, bits[j])));
+            let plain = circuit.eval_plain(&bits);
+            want.extend(plain.iter().zip(batch.decode_of(i)).map(|(&v, &d)| v ^ d));
+        }
+        let mut colors = Vec::new();
+        batch.eval_layer_colors(&client_arena, &server_arena, &mut colors);
+        assert_eq!(colors, want);
+    }
+
+    #[test]
+    fn from_parts_roundtrip_and_rejects_bad_arity() {
+        let circuit = adder_circuit(4);
+        let mut rng = Rng::new(21);
+        let mut scratch = Vec::new();
+        let mut batch = LayerGcBatch::new(circuit.clone(), 2);
+        let mut enc = LayerEncodingBatch::new(circuit.n_inputs as usize, 2);
+        for _ in 0..2 {
+            batch.garble_next(&mut enc, &mut rng, &mut scratch);
+        }
+
+        let rebuilt = LayerGcBatch::from_parts(
+            circuit.clone(),
+            2,
+            batch.tables().to_vec(),
+            batch.output_decode().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(rebuilt.tables(), batch.tables());
+        assert_eq!(rebuilt.len(), 2);
+
+        let wrong_n = LayerGcBatch::from_parts(
+            circuit.clone(),
+            3,
+            batch.tables().to_vec(),
+            batch.output_decode().to_vec(),
+        );
+        assert!(wrong_n.is_err());
+
+        let rebuilt_enc = LayerEncodingBatch::from_parts(
+            enc.stride(),
+            enc.label0().to_vec(),
+            enc.deltas().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(rebuilt_enc.label0(), enc.label0());
+
+        // Cleared delta color bit must be rejected.
+        let bad = vec![Delta(Label::ZERO); 2];
+        assert!(LayerEncodingBatch::from_parts(enc.stride(), enc.label0().to_vec(), bad).is_err());
     }
 
     #[test]

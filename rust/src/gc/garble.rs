@@ -130,20 +130,53 @@ pub fn garble_append(
     input_label0: &mut Vec<Label>,
     output_decode: &mut Vec<bool>,
 ) -> Delta {
+    let t_base = table.len();
+    let in_base = input_label0.len();
+    let out_base = output_decode.len();
+    table.resize(t_base + circuit.n_and(), [Label::ZERO; 2]);
+    input_label0.resize(in_base + circuit.n_inputs as usize, Label::ZERO);
+    output_decode.resize(out_base + circuit.outputs.len(), false);
+    garble_into(
+        circuit,
+        rng,
+        scratch,
+        &mut table[t_base..],
+        &mut input_label0[in_base..],
+        &mut output_decode[out_base..],
+    )
+}
+
+/// Slice-writing garbling core: fills exactly-sized caller-owned slices
+/// for one instance's table / input-`label0` / decode-bit strides. This
+/// is what lets [`crate::gc::batch::LayerGcBatch::garble_chunked`] hand
+/// *disjoint* strides of one layer buffer to parallel dealer threads.
+///
+/// Draws from `rng` in the canonical order (delta, then one label per
+/// input wire in wire order), so it is bit-identical to [`garble_append`]
+/// given the same RNG state.
+pub fn garble_into(
+    circuit: &Circuit,
+    rng: &mut Rng,
+    scratch: &mut Vec<Label>,
+    table: &mut [[Label; 2]],
+    input_label0: &mut [Label],
+    output_decode: &mut [bool],
+) -> Delta {
+    assert_eq!(table.len(), circuit.n_and(), "table stride");
+    assert_eq!(input_label0.len(), circuit.n_inputs as usize, "input stride");
+    assert_eq!(output_decode.len(), circuit.outputs.len(), "decode stride");
     let hash = GarbleHash::shared();
     let delta = Delta::random(rng);
     scratch.clear();
     scratch.reserve(circuit.wires.len());
     let label0 = scratch;
-    let in_base = input_label0.len();
-    input_label0.resize(in_base + circuit.n_inputs as usize, Label::ZERO);
     let mut and_idx: u64 = 0;
 
     for def in &circuit.wires {
         let l0 = match *def {
             WireDef::Input(k) => {
                 let l = Label::random(rng);
-                input_label0[in_base + k as usize] = l;
+                input_label0[k as usize] = l;
                 l
             }
             WireDef::Xor(a, b) => label0[a as usize] ^ label0[b as usize],
@@ -157,7 +190,6 @@ pub fn garble_append(
                 let pb = wb0.color();
                 let j = 2 * and_idx;
                 let jp = 2 * and_idx + 1;
-                and_idx += 1;
 
                 // One pipelined 4-block AES call per AND gate (§Perf it. 2).
                 let [h_wa0, h_wa1, h_wb0, h_wb1] =
@@ -178,14 +210,17 @@ pub fn garble_append(
                 if pb {
                     w_e0 = w_e0 ^ t_e ^ wa0;
                 }
-                table.push([t_g, t_e]);
+                table[and_idx as usize] = [t_g, t_e];
+                and_idx += 1;
                 w_g0 ^ w_e0
             }
         };
         label0.push(l0);
     }
 
-    output_decode.extend(circuit.outputs.iter().map(|&o| label0[o as usize].color()));
+    for (slot, &o) in output_decode.iter_mut().zip(circuit.outputs.iter()) {
+        *slot = label0[o as usize].color();
+    }
     delta
 }
 

@@ -35,6 +35,8 @@
 //!   validation against the real GC evaluator.
 //! * [`coordinator`] — the PI serving front-end: offline-material pool,
 //!   request batcher, router, metrics.
+//! * [`wire`] — binary codec + framed transport for offline material and
+//!   the standalone dealer service (dealer/server process separation).
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX
 //!   model (`artifacts/*.hlo.txt`) for accuracy experiments.
 //! * [`bench_harness`] — shared measurement/reporting used by
@@ -57,5 +59,6 @@ pub mod runtime;
 pub mod simfault;
 pub mod ss;
 pub mod util;
+pub mod wire;
 
 pub use field::{Fp, PRIME};

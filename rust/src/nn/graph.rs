@@ -9,7 +9,15 @@
 /// One layer of an architecture spec.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LayerSpec {
-    Conv { in_c: usize, in_h: usize, in_w: usize, out_c: usize, k: usize, stride: usize, pad: usize },
+    Conv {
+        in_c: usize,
+        in_h: usize,
+        in_w: usize,
+        out_c: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    },
     Dense { in_dim: usize, out_dim: usize },
     Pool2 { c: usize, h: usize, w: usize },
     /// ReLU over `n` elements.
@@ -92,7 +100,8 @@ mod tests {
 
     #[test]
     fn strided_conv_dims() {
-        let c = LayerSpec::Conv { in_c: 64, in_h: 32, in_w: 32, out_c: 128, k: 3, stride: 2, pad: 1 };
+        let c =
+            LayerSpec::Conv { in_c: 64, in_h: 32, in_w: 32, out_c: 128, k: 3, stride: 2, pad: 1 };
         assert_eq!(c.out_dim(), 128 * 16 * 16);
     }
 

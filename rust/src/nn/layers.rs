@@ -251,7 +251,10 @@ mod tests {
                             for kx in 0..c.k {
                                 let iy = (oy * c.stride + ky) as isize - c.pad as isize;
                                 let ix = (ox * c.stride + kx) as isize - c.pad as isize;
-                                if iy < 0 || ix < 0 || iy >= c.in_h as isize || ix >= c.in_w as isize
+                                if iy < 0
+                                    || ix < 0
+                                    || iy >= c.in_h as isize
+                                    || ix >= c.in_w as isize
                                 {
                                     continue;
                                 }
@@ -294,7 +297,8 @@ mod tests {
         // bias is added on both shares, so subtract one copy.
         let mut rng = Rng::new(3);
         let c = small_conv(&mut rng);
-        let xs: Vec<Fp> = (0..c.in_dim()).map(|_| Fp::from_i64(rng.below(21) as i64 - 10)).collect();
+        let xs: Vec<Fp> =
+            (0..c.in_dim()).map(|_| Fp::from_i64(rng.below(21) as i64 - 10)).collect();
         let shares: Vec<SharePair> = xs.iter().map(|&x| SharePair::share(x, &mut rng)).collect();
         let cs: Vec<Fp> = shares.iter().map(|s| s.client).collect();
         let ss_: Vec<Fp> = shares.iter().map(|s| s.server).collect();
@@ -362,7 +366,8 @@ mod tests {
     #[test]
     fn relu_and_rescale_vec() {
         let xs = vec![Fp::from_i64(-3), Fp::from_i64(5), Fp::from_i64(-1024), Fp::from_i64(1024)];
-        assert_eq!(relu_vec(&xs).iter().map(|v| v.to_i64()).collect::<Vec<_>>(), vec![0, 5, 0, 1024]);
+        let got: Vec<i64> = relu_vec(&xs).iter().map(|v| v.to_i64()).collect();
+        assert_eq!(got, vec![0, 5, 0, 1024]);
         // Arithmetic shift: −3 >> 2 = −1 (rounds toward −∞).
         assert_eq!(
             rescale_vec(&xs, 2).iter().map(|v| v.to_i64()).collect::<Vec<_>>(),

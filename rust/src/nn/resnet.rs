@@ -48,7 +48,15 @@ pub fn resnet18_masked(
     let ch = |c: usize| -> usize { ((c as f64 * scale).round() as usize).max(1) };
     let mut layers = Vec::new();
     let stem_c = ch(64);
-    layers.push(LayerSpec::Conv { in_c: 3, in_h: hw, in_w: hw, out_c: stem_c, k: 3, stride: 1, pad: 1 });
+    layers.push(LayerSpec::Conv {
+        in_c: 3,
+        in_h: hw,
+        in_w: hw,
+        out_c: stem_c,
+        k: 3,
+        stride: 1,
+        pad: 1,
+    });
     layers.push(LayerSpec::Relu { n: stem_c * hw * hw });
 
     let mut cur_hw = hw;
@@ -81,7 +89,8 @@ pub fn resnet18(hw: usize, classes: usize) -> NetworkSpec {
 /// CIFAR-style ResNet-32: 3 stages × 5 basic blocks, 16/32/64 channels.
 pub fn resnet32(hw: usize, classes: usize) -> NetworkSpec {
     let mut layers = Vec::new();
-    layers.push(LayerSpec::Conv { in_c: 3, in_h: hw, in_w: hw, out_c: 16, k: 3, stride: 1, pad: 1 });
+    layers
+        .push(LayerSpec::Conv { in_c: 3, in_h: hw, in_w: hw, out_c: 16, k: 3, stride: 1, pad: 1 });
     layers.push(LayerSpec::Relu { n: 16 * hw * hw });
     let mut cur_hw = hw;
     let mut in_c = 16;

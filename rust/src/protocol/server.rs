@@ -58,7 +58,9 @@ impl NetworkPlan {
         NetworkPlan { linears, variant, rescale_bits: Vec::new() }
     }
 
-    fn rescale_of(&self, relu_idx: usize) -> u32 {
+    /// Rescale bits of ReLU layer `relu_idx` (0 when unspecified). Also
+    /// used by `wire::codec` to validate dealer-supplied sessions.
+    pub fn rescale_of(&self, relu_idx: usize) -> u32 {
         self.rescale_bits.get(relu_idx).copied().unwrap_or(0)
     }
 }

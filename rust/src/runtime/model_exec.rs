@@ -129,7 +129,14 @@ impl CnnExecutable {
     /// Run one batch: `images` is row-major flattened (batch × dim),
     /// `t1`/`t2` uniform field randomness, `k` truncation bits, `mode`
     /// 0/1/2 (PosZero/NegPass/exact).
-    pub fn run(&self, images: &[i32], t1: &[i32], t2: &[i32], k: i32, mode: i32) -> Result<ModelOutput> {
+    pub fn run(
+        &self,
+        images: &[i32],
+        t1: &[i32],
+        t2: &[i32],
+        k: i32,
+        mode: i32,
+    ) -> Result<ModelOutput> {
         let mut args: Vec<Literal> = Vec::with_capacity(5 + self.params.len());
         args.push(lit_i32(images, &self.images_dims)?);
         args.push(lit_i32(t1, &self.t1_dims)?);

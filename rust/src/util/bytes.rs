@@ -35,6 +35,10 @@ impl<'a> Reader<'a> {
         Ok(self.take(1)?[0])
     }
 
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
     pub fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
@@ -51,16 +55,49 @@ impl<'a> Reader<'a> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    pub fn i32_vec(&mut self) -> Result<Vec<i32>> {
+    pub fn u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed element count with overflow-checked byte sizing —
+    /// the guard every untrusted vec read goes through: an absurd length
+    /// fails in `take` before any allocation happens.
+    fn vec_bytes(&mut self, elem_bytes: usize) -> Result<(usize, &'a [u8])> {
         let n = self.u64()? as usize;
-        let raw = self.take(n * 4)?;
+        let nbytes = n.checked_mul(elem_bytes).context("vec length overflows")?;
+        Ok((n, self.take(nbytes)?))
+    }
+
+    pub fn i32_vec(&mut self) -> Result<Vec<i32>> {
+        let (_, raw) = self.vec_bytes(4)?;
         Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
     pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
-        let n = self.u64()? as usize;
-        let raw = self.take(n * 4)?;
+        let (_, raw) = self.vec_bytes(4)?;
         Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Length-prefixed `u128` vector (the wire shape of label arenas and
+    /// free-XOR deltas).
+    pub fn u128_vec(&mut self) -> Result<Vec<u128>> {
+        let (_, raw) = self.vec_bytes(16)?;
+        Ok(raw.chunks_exact(16).map(|c| u128::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Length-prefixed raw bytes, borrowed straight out of the input
+    /// buffer (zero-copy; the caller decides whether to own them).
+    pub fn byte_slice(&mut self) -> Result<&'a [u8]> {
+        let n = self.u64()? as usize;
+        self.take(n)
+    }
+
+    /// Length-prefixed bit-packed bool vector (LSB-first within each
+    /// byte) — the wire shape of decode-bit buffers.
+    pub fn bool_vec(&mut self) -> Result<Vec<bool>> {
+        let n = self.u64()? as usize;
+        let raw = self.take(n.div_ceil(8))?;
+        Ok((0..n).map(|i| raw[i / 8] >> (i % 8) & 1 == 1).collect())
     }
 
     pub fn string(&mut self) -> Result<String> {
@@ -83,6 +120,10 @@ impl Writer {
 
     pub fn u8(&mut self, v: u8) {
         self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
     pub fn u32(&mut self, v: u32) {
@@ -118,6 +159,42 @@ impl Writer {
     pub fn string(&mut self, s: &str) {
         self.u64(s.len() as u64);
         self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed `u128` vector: one 16-byte memcpy per element into
+    /// the output buffer (reserved up front).
+    pub fn u128_vec(&mut self, v: &[u128]) {
+        self.u64(v.len() as u64);
+        self.buf.reserve(v.len() * 16);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn byte_slice(&mut self, v: &[u8]) {
+        self.u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed bit-packed bool vector (LSB-first within each byte).
+    pub fn bool_vec(&mut self, v: &[bool]) {
+        self.u64(v.len() as u64);
+        let mut byte = 0u8;
+        for (i, &b) in v.iter().enumerate() {
+            byte |= (b as u8) << (i % 8);
+            if i % 8 == 7 {
+                self.buf.push(byte);
+                byte = 0;
+            }
+        }
+        if v.len() % 8 != 0 {
+            self.buf.push(byte);
+        }
     }
 }
 
@@ -158,5 +235,72 @@ mod tests {
     fn short_read_errors() {
         let mut r = Reader::new(&[1, 2]);
         assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn roundtrip_u16_u128() {
+        let mut w = Writer::new();
+        w.u16(0xBEEF);
+        w.u128(u128::MAX - 3);
+        w.u128(1 << 100);
+        let mut r = Reader::new(&w.buf);
+        assert_eq!(r.u16().unwrap(), 0xBEEF);
+        assert_eq!(r.u128().unwrap(), u128::MAX - 3);
+        assert_eq!(r.u128().unwrap(), 1 << 100);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn roundtrip_u128_vec_and_byte_slice() {
+        let labels: Vec<u128> = vec![0, 1, u128::MAX, 0x1234_5678_9ABC_DEF0];
+        let mut w = Writer::new();
+        w.u128_vec(&labels);
+        w.u128_vec(&[]);
+        w.byte_slice(b"circa-wire");
+        let mut r = Reader::new(&w.buf);
+        assert_eq!(r.u128_vec().unwrap(), labels);
+        assert_eq!(r.u128_vec().unwrap(), Vec::<u128>::new());
+        assert_eq!(r.byte_slice().unwrap(), b"circa-wire");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn roundtrip_bool_vec_all_tail_lengths() {
+        // Exercise every packing remainder 0..8.
+        for n in 0..=17usize {
+            let bits: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
+            let mut w = Writer::new();
+            w.bool_vec(&bits);
+            assert_eq!(w.buf.len(), 8 + n.div_ceil(8));
+            let mut r = Reader::new(&w.buf);
+            assert_eq!(r.bool_vec().unwrap(), bits, "n={n}");
+            assert_eq!(r.remaining(), 0);
+        }
+    }
+
+    #[test]
+    fn absurd_vec_length_errors_without_allocating() {
+        // A length field claiming usize::MAX elements must fail cleanly
+        // (checked multiply + short read), never panic or OOM.
+        let mut w = Writer::new();
+        w.u64(u64::MAX);
+        w.u32(7);
+        for err in [
+            Reader::new(&w.buf).u128_vec().err(),
+            Reader::new(&w.buf).i32_vec().err(),
+            Reader::new(&w.buf).f32_vec().err(),
+            Reader::new(&w.buf).bool_vec().err(),
+            Reader::new(&w.buf).byte_slice().err(),
+        ] {
+            assert!(err.is_some());
+        }
+    }
+
+    #[test]
+    fn truncated_vec_payload_errors() {
+        let mut w = Writer::new();
+        w.u128_vec(&[1, 2, 3]);
+        let mut r = Reader::new(&w.buf[..w.buf.len() - 1]);
+        assert!(r.u128_vec().is_err());
     }
 }

@@ -1,0 +1,698 @@
+//! Versioned binary codec for offline material.
+//!
+//! Everything the dealer ships is already contiguous SoA
+//! ([`crate::gc::batch`]), so encoding is length-prefixed memcpys: the
+//! table buffer, label arenas, and decode bits of a ReLU layer go on the
+//! wire as single flat runs. Circuits are **not** shipped — the receiver
+//! rebuilds the layer's template from the [`VariantSpec`] in the session
+//! manifest and validates the declared strides against it, which both
+//! shrinks the wire format to the paper's `offline_bytes` shape and
+//! gives decode a structural cross-check for free.
+//!
+//! Decoding is hardened for untrusted input: every length is
+//! overflow-checked against the remaining buffer before allocation,
+//! every field element is range-checked against `p`, every delta must
+//! carry its color bit, and layer shapes must match the plan. All
+//! failures are [`Result`] errors — never panics.
+//!
+//! Versioning: [`MAGIC`]/[`VERSION`] are carried once per connection in
+//! the [`SessionManifest`] handshake. Any layout change to the material
+//! encodings below requires a `VERSION` bump; decoders reject manifests
+//! with a different version outright (no cross-version compatibility is
+//! attempted at this stage).
+
+use crate::beaver::TripleShare;
+use crate::circuits::spec::{FaultMode, ReluVariant, VariantSpec};
+use crate::coordinator::pool::Session;
+use crate::field::{Fp, PRIME};
+use crate::gc::batch::{LayerEncodingBatch, LayerGcBatch};
+use crate::prf::{Delta, Label};
+use crate::protocol::client::{ClientLayer, ClientNet};
+use crate::protocol::offline::{ClientReluMaterial, ServerReluMaterial};
+use crate::protocol::server::{NetworkPlan, ServerLayer, ServerNet};
+use crate::util::bytes::{Reader, Writer};
+use crate::util::error::{Context, Result};
+use crate::{bail, ensure};
+
+/// `b"CIRW"` as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"CIRW");
+
+/// Wire-format version; bump on any layout change.
+pub const VERSION: u16 = 1;
+
+// ---------------------------------------------------------------- scalars
+
+fn put_fp_vec(w: &mut Writer, v: &[Fp]) {
+    w.u64(v.len() as u64);
+    w.buf.reserve(v.len() * 4);
+    for &x in v {
+        w.u32(x.raw() as u32);
+    }
+}
+
+fn get_fp_vec(r: &mut Reader) -> Result<Vec<Fp>> {
+    let n = r.u64()? as usize;
+    let raw = r.take(n.checked_mul(4).context("fp vec length overflows")?)?;
+    raw.chunks_exact(4)
+        .map(|c| {
+            let v = u32::from_le_bytes(c.try_into().unwrap()) as u64;
+            ensure!(v < PRIME, "field element {v} out of range");
+            Ok(Fp::new(v))
+        })
+        .collect()
+}
+
+fn put_label_vec(w: &mut Writer, v: &[Label]) {
+    w.u64(v.len() as u64);
+    w.buf.reserve(v.len() * 16);
+    for &l in v {
+        w.u128(l.0);
+    }
+}
+
+fn get_label_vec(r: &mut Reader) -> Result<Vec<Label>> {
+    Ok(r.u128_vec().context("label vec")?.into_iter().map(Label).collect())
+}
+
+fn put_table_vec(w: &mut Writer, v: &[[Label; 2]]) {
+    w.u64(v.len() as u64);
+    w.buf.reserve(v.len() * 32);
+    for pair in v {
+        w.u128(pair[0].0);
+        w.u128(pair[1].0);
+    }
+}
+
+fn get_table_vec(r: &mut Reader) -> Result<Vec<[Label; 2]>> {
+    let n = r.u64()? as usize;
+    let raw = r.take(n.checked_mul(32).context("table vec length overflows")?)?;
+    Ok(raw
+        .chunks_exact(32)
+        .map(|c| {
+            [
+                Label(u128::from_le_bytes(c[..16].try_into().unwrap())),
+                Label(u128::from_le_bytes(c[16..].try_into().unwrap())),
+            ]
+        })
+        .collect())
+}
+
+// ---------------------------------------------------------------- variant
+
+const MODE_POS_ZERO: u8 = 0;
+const MODE_NEG_PASS: u8 = 1;
+
+fn mode_tag(mode: FaultMode) -> u8 {
+    match mode {
+        FaultMode::PosZero => MODE_POS_ZERO,
+        FaultMode::NegPass => MODE_NEG_PASS,
+    }
+}
+
+fn mode_from_tag(tag: u8) -> Result<FaultMode> {
+    match tag {
+        MODE_POS_ZERO => Ok(FaultMode::PosZero),
+        MODE_NEG_PASS => Ok(FaultMode::NegPass),
+        other => bail!("unknown fault mode tag {other}"),
+    }
+}
+
+/// Encode a variant as `tag u8 | mode u8 | k u32` (zeros where unused, so
+/// the encoding is canonical and fingerprint-stable).
+pub fn put_variant(w: &mut Writer, v: ReluVariant) {
+    let (tag, mode, k) = match v {
+        ReluVariant::BaselineRelu => (0u8, 0u8, 0u32),
+        ReluVariant::NaiveSign => (1, 0, 0),
+        ReluVariant::StochasticSign { mode } => (2, mode_tag(mode), 0),
+        ReluVariant::TruncatedSign { k, mode } => (3, mode_tag(mode), k),
+    };
+    w.u8(tag);
+    w.u8(mode);
+    w.u32(k);
+}
+
+pub fn get_variant(r: &mut Reader) -> Result<ReluVariant> {
+    let tag = r.u8()?;
+    let mode = r.u8()?;
+    let k = r.u32()?;
+    let v = match tag {
+        0 | 1 => {
+            ensure!(mode == 0 && k == 0, "non-canonical variant encoding");
+            if tag == 0 {
+                ReluVariant::BaselineRelu
+            } else {
+                ReluVariant::NaiveSign
+            }
+        }
+        2 => {
+            ensure!(k == 0, "non-canonical variant encoding");
+            ReluVariant::StochasticSign { mode: mode_from_tag(mode)? }
+        }
+        3 => {
+            ensure!(k < 31, "truncation k={k} exceeds the field width");
+            ReluVariant::TruncatedSign { k, mode: mode_from_tag(mode)? }
+        }
+        other => bail!("unknown variant tag {other}"),
+    };
+    Ok(v)
+}
+
+// --------------------------------------------------------- layer batches
+
+/// Encode a layer's garbled tables: `n | and_stride | out_stride |
+/// tables | decode bits`. The circuit itself stays off the wire.
+pub fn put_gc_batch(w: &mut Writer, b: &LayerGcBatch) {
+    w.u64(b.len() as u64);
+    w.u32(b.and_stride() as u32);
+    w.u32(b.out_stride() as u32);
+    put_table_vec(w, b.tables());
+    w.bool_vec(b.output_decode());
+}
+
+/// Decode a layer's garbled tables against the variant's circuit
+/// template, validating every stride.
+pub fn get_gc_batch(r: &mut Reader, spec: &VariantSpec) -> Result<LayerGcBatch> {
+    let n = r.u64()? as usize;
+    let and_stride = r.u32()? as usize;
+    let out_stride = r.u32()? as usize;
+    let circuit = spec.build_circuit();
+    ensure!(
+        and_stride == circuit.n_and(),
+        "and stride {and_stride} != circuit {} for {:?}",
+        circuit.n_and(),
+        spec.variant
+    );
+    ensure!(
+        out_stride == circuit.outputs.len(),
+        "out stride {out_stride} != circuit {} for {:?}",
+        circuit.outputs.len(),
+        spec.variant
+    );
+    let tables = get_table_vec(r)?;
+    let decode = r.bool_vec()?;
+    LayerGcBatch::from_parts(circuit, n, tables, decode)
+}
+
+/// Encode a layer's input-encoding arena: `stride | label0 | deltas`.
+pub fn put_encoding_batch(w: &mut Writer, e: &LayerEncodingBatch) {
+    w.u64(e.stride() as u64);
+    put_label_vec(w, e.label0());
+    w.u64(e.deltas().len() as u64);
+    w.buf.reserve(e.deltas().len() * 16);
+    for d in e.deltas() {
+        w.u128(d.0 .0);
+    }
+}
+
+pub fn get_encoding_batch(r: &mut Reader, spec: &VariantSpec) -> Result<LayerEncodingBatch> {
+    let stride = r.u64()? as usize;
+    ensure!(
+        stride == spec.n_inputs(),
+        "encoding stride {stride} != {} inputs for {:?}",
+        spec.n_inputs(),
+        spec.variant
+    );
+    let label0 = get_label_vec(r)?;
+    let deltas: Vec<Delta> = get_label_vec(r)?.into_iter().map(Delta).collect();
+    LayerEncodingBatch::from_parts(stride, label0, deltas)
+}
+
+// ---------------------------------------------------------------- triples
+
+/// Encode per-layer Beaver triple shares as one flat field column
+/// (`a, b, ab` per triple).
+pub fn put_triples(w: &mut Writer, triples: &[TripleShare]) {
+    let mut flat = Vec::with_capacity(triples.len() * 3);
+    for t in triples {
+        flat.push(t.a);
+        flat.push(t.b);
+        flat.push(t.ab);
+    }
+    put_fp_vec(w, &flat);
+}
+
+pub fn get_triples(r: &mut Reader) -> Result<Vec<TripleShare>> {
+    let flat = get_fp_vec(r)?;
+    ensure!(flat.len() % 3 == 0, "triple column length {} not divisible by 3", flat.len());
+    Ok(flat.chunks_exact(3).map(|c| TripleShare { a: c[0], b: c[1], ab: c[2] }).collect())
+}
+
+// ------------------------------------------------------- layer materials
+
+/// Encode one layer's client-side ReLU material.
+pub fn put_client_relu(w: &mut Writer, m: &ClientReluMaterial) {
+    put_variant(w, m.spec.variant);
+    put_gc_batch(w, &m.gc);
+    put_label_vec(w, &m.client_labels);
+    put_fp_vec(w, &m.r_v);
+    put_fp_vec(w, &m.r_out);
+    put_triples(w, &m.triples);
+    w.u64(m.offline_bytes);
+}
+
+pub fn get_client_relu(r: &mut Reader) -> Result<ClientReluMaterial> {
+    let spec = get_variant(r)?.spec();
+    let gc = get_gc_batch(r, &spec)?;
+    let n = gc.len();
+    let client_labels = get_label_vec(r)?;
+    let want_labels = n.checked_mul(spec.n_client_inputs).unwrap_or(usize::MAX);
+    ensure!(
+        client_labels.len() == want_labels,
+        "client label arena {} != {n} x {}",
+        client_labels.len(),
+        spec.n_client_inputs
+    );
+    let r_v = get_fp_vec(r)?;
+    ensure!(r_v.len() == n, "r_v column {} != {n}", r_v.len());
+    let r_out = get_fp_vec(r)?;
+    ensure!(r_out.len() == n, "r_out column {} != {n}", r_out.len());
+    let triples = get_triples(r)?;
+    let want_triples = if spec.uses_beaver() { n } else { 0 };
+    ensure!(triples.len() == want_triples, "triples {} != {want_triples}", triples.len());
+    let offline_bytes = r.u64()?;
+    Ok(ClientReluMaterial { spec, gc, client_labels, r_v, r_out, triples, offline_bytes })
+}
+
+/// Encode one layer's server-side ReLU material.
+pub fn put_server_relu(w: &mut Writer, m: &ServerReluMaterial) {
+    put_variant(w, m.spec.variant);
+    put_encoding_batch(w, &m.encodings);
+    w.bool_vec(&m.output_decode);
+    put_triples(w, &m.triples);
+}
+
+pub fn get_server_relu(r: &mut Reader) -> Result<ServerReluMaterial> {
+    let spec = get_variant(r)?.spec();
+    let encodings = get_encoding_batch(r, &spec)?;
+    let n = encodings.len();
+    let output_decode = r.bool_vec()?;
+    let want_decode = n.checked_mul(spec.n_outputs).unwrap_or(usize::MAX);
+    ensure!(
+        output_decode.len() == want_decode,
+        "decode buffer {} != {n} x {}",
+        output_decode.len(),
+        spec.n_outputs
+    );
+    let triples = get_triples(r)?;
+    let want_triples = if spec.uses_beaver() { n } else { 0 };
+    ensure!(triples.len() == want_triples, "triples {} != {want_triples}", triples.len());
+    Ok(ServerReluMaterial { spec, encodings, output_decode, triples })
+}
+
+// --------------------------------------------------------------- manifest
+
+/// Structural identity of a served plan, exchanged during the dealer
+/// handshake. Covers variant, layer dimensions, and rescale schedule;
+/// weight equality is the operator's responsibility (shared seed or
+/// artifact hash), since [`crate::protocol::linear::LinearOp`] is
+/// deliberately opaque.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SessionManifest {
+    pub variant: ReluVariant,
+    /// `(in_dim, out_dim)` of each linear layer, in order.
+    pub dims: Vec<(u32, u32)>,
+    pub rescale_bits: Vec<u32>,
+    /// FNV-1a over the encoded body — a quick equality/debug handle.
+    pub fingerprint: u64,
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl SessionManifest {
+    pub fn of_plan(plan: &NetworkPlan) -> Self {
+        let dims =
+            plan.linears.iter().map(|l| (l.in_dim() as u32, l.out_dim() as u32)).collect();
+        let mut m = SessionManifest {
+            variant: plan.variant,
+            dims,
+            rescale_bits: plan.rescale_bits.clone(),
+            fingerprint: 0,
+        };
+        let mut w = Writer::new();
+        m.put_body(&mut w);
+        m.fingerprint = fnv1a64(&w.buf);
+        m
+    }
+
+    fn put_body(&self, w: &mut Writer) {
+        put_variant(w, self.variant);
+        w.u64(self.dims.len() as u64);
+        for &(i, o) in &self.dims {
+            w.u32(i);
+            w.u32(o);
+        }
+        w.u64(self.rescale_bits.len() as u64);
+        for &b in &self.rescale_bits {
+            w.u32(b);
+        }
+    }
+
+    /// Encode with the `MAGIC | VERSION` preamble (the handshake payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u32(MAGIC);
+        w.u16(VERSION);
+        self.put_body(&mut w);
+        w.u64(self.fingerprint);
+        w.buf
+    }
+
+    /// Decode and validate a handshake payload.
+    pub fn decode(bytes: &[u8]) -> Result<SessionManifest> {
+        let mut r = Reader::new(bytes);
+        let magic = r.u32()?;
+        ensure!(magic == MAGIC, "bad magic {magic:#010x}");
+        let version = r.u16()?;
+        ensure!(version == VERSION, "unsupported wire version {version} (want {VERSION})");
+        let body_start = bytes.len() - r.remaining();
+        let variant = get_variant(&mut r)?;
+        let n_dims = r.u64()? as usize;
+        let raw = r.take(n_dims.checked_mul(8).context("dims length overflows")?)?;
+        let dims: Vec<(u32, u32)> = raw
+            .chunks_exact(8)
+            .map(|c| {
+                (
+                    u32::from_le_bytes(c[..4].try_into().unwrap()),
+                    u32::from_le_bytes(c[4..].try_into().unwrap()),
+                )
+            })
+            .collect();
+        let n_rescale = r.u64()? as usize;
+        let raw = r.take(n_rescale.checked_mul(4).context("rescale length overflows")?)?;
+        let rescale_bits: Vec<u32> =
+            raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        let body_end = bytes.len() - r.remaining();
+        let fingerprint = r.u64()?;
+        ensure!(r.remaining() == 0, "trailing bytes after manifest");
+        let want = fnv1a64(&bytes[body_start..body_end]);
+        ensure!(fingerprint == want, "manifest fingerprint mismatch");
+        Ok(SessionManifest { variant, dims, rescale_bits, fingerprint })
+    }
+}
+
+// ---------------------------------------------------------------- session
+
+const LAYER_LINEAR: u8 = 0;
+const LAYER_RELU: u8 = 1;
+
+/// Encode a fully-dealt session (both parties' nets + the offline byte
+/// ledger) as one payload.
+pub fn encode_session(s: &Session) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u64(s.client.layers.len() as u64);
+    for layer in &s.client.layers {
+        match layer {
+            ClientLayer::Linear { r, x_share } => {
+                w.u8(LAYER_LINEAR);
+                put_fp_vec(&mut w, r);
+                put_fp_vec(&mut w, x_share);
+            }
+            ClientLayer::Relu(m) => {
+                w.u8(LAYER_RELU);
+                put_client_relu(&mut w, m);
+            }
+        }
+    }
+    w.u64(s.server.layers.len() as u64);
+    for layer in &s.server.layers {
+        match layer {
+            ServerLayer::Linear { s: blind, .. } => {
+                w.u8(LAYER_LINEAR);
+                put_fp_vec(&mut w, blind);
+            }
+            ServerLayer::Relu { mat, rescale } => {
+                w.u8(LAYER_RELU);
+                put_server_relu(&mut w, mat);
+                w.u32(*rescale);
+            }
+        }
+    }
+    w.u64(s.offline_bytes);
+    w.buf
+}
+
+/// Decode a session against the local plan: linear ops are re-attached
+/// from `plan` by position, and every layer's shape is validated against
+/// the plan's dimension chain.
+pub fn decode_session(bytes: &[u8], plan: &NetworkPlan) -> Result<Session> {
+    let n_linears = plan.linears.len();
+    ensure!(n_linears > 0, "plan has no layers");
+    let want_layers = 2 * n_linears - 1;
+    let mut r = Reader::new(bytes);
+
+    // --- Client net: Linear, Relu, Linear, ..., Linear. ---
+    let n_client = r.u64()? as usize;
+    ensure!(n_client == want_layers, "client net {n_client} layers != plan {want_layers}");
+    let mut client_layers = Vec::with_capacity(want_layers);
+    for idx in 0..n_client {
+        let tag = r.u8()?;
+        let li = idx / 2;
+        if idx % 2 == 0 {
+            ensure!(tag == LAYER_LINEAR, "client layer {idx}: expected linear tag, got {tag}");
+            let mask = get_fp_vec(&mut r)?;
+            ensure!(
+                mask.len() == plan.linears[li].in_dim(),
+                "client linear {li}: mask dim {} != {}",
+                mask.len(),
+                plan.linears[li].in_dim()
+            );
+            let x_share = get_fp_vec(&mut r)?;
+            ensure!(
+                x_share.len() == plan.linears[li].out_dim(),
+                "client linear {li}: share dim {} != {}",
+                x_share.len(),
+                plan.linears[li].out_dim()
+            );
+            client_layers.push(ClientLayer::Linear { r: mask, x_share });
+        } else {
+            ensure!(tag == LAYER_RELU, "client layer {idx}: expected relu tag, got {tag}");
+            let m = get_client_relu(&mut r)?;
+            ensure!(
+                m.variant() == plan.variant,
+                "client relu {li}: variant {:?} != plan {:?}",
+                m.variant(),
+                plan.variant
+            );
+            ensure!(
+                m.n() == plan.linears[li].out_dim(),
+                "client relu {li}: {} ReLUs != {}",
+                m.n(),
+                plan.linears[li].out_dim()
+            );
+            client_layers.push(ClientLayer::Relu(Box::new(m)));
+        }
+    }
+
+    // --- Server net: same alternation, ops re-attached from the plan. ---
+    let n_server = r.u64()? as usize;
+    ensure!(n_server == want_layers, "server net {n_server} layers != plan {want_layers}");
+    let mut server_layers = Vec::with_capacity(want_layers);
+    for idx in 0..n_server {
+        let tag = r.u8()?;
+        let li = idx / 2;
+        if idx % 2 == 0 {
+            ensure!(tag == LAYER_LINEAR, "server layer {idx}: expected linear tag, got {tag}");
+            let blind = get_fp_vec(&mut r)?;
+            ensure!(
+                blind.len() == plan.linears[li].out_dim(),
+                "server linear {li}: blind dim {} != {}",
+                blind.len(),
+                plan.linears[li].out_dim()
+            );
+            server_layers.push(ServerLayer::Linear { op: plan.linears[li].clone(), s: blind });
+        } else {
+            ensure!(tag == LAYER_RELU, "server layer {idx}: expected relu tag, got {tag}");
+            let mat = get_server_relu(&mut r)?;
+            ensure!(
+                mat.variant() == plan.variant,
+                "server relu {li}: variant {:?} != plan {:?}",
+                mat.variant(),
+                plan.variant
+            );
+            ensure!(
+                mat.n() == plan.linears[li].out_dim(),
+                "server relu {li}: {} ReLUs != {}",
+                mat.n(),
+                plan.linears[li].out_dim()
+            );
+            let rescale = r.u32()?;
+            ensure!(
+                rescale == plan.rescale_of(li),
+                "server relu {li}: rescale {rescale} != plan {}",
+                plan.rescale_of(li)
+            );
+            server_layers.push(ServerLayer::Relu { mat: Box::new(mat), rescale });
+        }
+    }
+
+    let offline_bytes = r.u64()?;
+    ensure!(r.remaining() == 0, "trailing bytes after session");
+    Ok(Session {
+        client: ClientNet { layers: client_layers },
+        server: ServerNet { layers: server_layers },
+        offline_bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::offline::{circa_variant, offline_relu_layer};
+    use crate::util::Rng;
+
+    fn all_variants() -> Vec<ReluVariant> {
+        vec![
+            ReluVariant::BaselineRelu,
+            ReluVariant::NaiveSign,
+            ReluVariant::StochasticSign { mode: FaultMode::PosZero },
+            ReluVariant::StochasticSign { mode: FaultMode::NegPass },
+            circa_variant(0),
+            circa_variant(8),
+            circa_variant(12),
+            ReluVariant::TruncatedSign { k: 12, mode: FaultMode::NegPass },
+        ]
+    }
+
+    #[test]
+    fn variant_roundtrip() {
+        for v in all_variants() {
+            let mut w = Writer::new();
+            put_variant(&mut w, v);
+            assert_eq!(w.buf.len(), 6);
+            let got = get_variant(&mut Reader::new(&w.buf)).unwrap();
+            assert_eq!(got, v, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn variant_rejects_garbage() {
+        let cases: [&[u8]; 6] = [
+            &[9, 0, 0, 0, 0, 0],  // unknown tag
+            &[2, 7, 0, 0, 0, 0],  // unknown mode
+            &[0, 1, 0, 0, 0, 0],  // non-canonical mode for baseline
+            &[1, 0, 5, 0, 0, 0],  // non-canonical k for naive sign
+            &[3, 0, 40, 0, 0, 0], // k wider than the field
+            &[3, 0],              // truncated
+        ];
+        for bad in cases {
+            assert!(get_variant(&mut Reader::new(bad)).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn layer_material_roundtrip_is_bit_identical() {
+        for (i, variant) in all_variants().into_iter().enumerate() {
+            let mut rng = Rng::new(500 + i as u64);
+            let xc: Vec<Fp> =
+                (0..9).map(|_| crate::field::random_fp(&mut rng)).collect();
+            let (cm, sm) = offline_relu_layer(variant, &xc, &mut rng);
+
+            let mut w = Writer::new();
+            put_client_relu(&mut w, &cm);
+            let got = get_client_relu(&mut Reader::new(&w.buf)).unwrap();
+            assert_eq!(got.spec, cm.spec, "{variant:?}");
+            assert_eq!(got.gc.tables(), cm.gc.tables(), "{variant:?} tables");
+            assert_eq!(got.gc.output_decode(), cm.gc.output_decode(), "{variant:?} decode");
+            assert_eq!(got.client_labels, cm.client_labels, "{variant:?} labels");
+            assert_eq!(got.r_v, cm.r_v, "{variant:?} r_v");
+            assert_eq!(got.r_out, cm.r_out, "{variant:?} r_out");
+            assert_eq!(got.offline_bytes, cm.offline_bytes, "{variant:?} bytes");
+            assert_eq!(got.triples.len(), cm.triples.len());
+            for (a, b) in got.triples.iter().zip(&cm.triples) {
+                assert_eq!((a.a, a.b, a.ab), (b.a, b.b, b.ab));
+            }
+
+            let mut w = Writer::new();
+            put_server_relu(&mut w, &sm);
+            let got = get_server_relu(&mut Reader::new(&w.buf)).unwrap();
+            assert_eq!(got.encodings.label0(), sm.encodings.label0(), "{variant:?} label0");
+            assert_eq!(
+                got.encodings.deltas().iter().map(|d| d.0).collect::<Vec<_>>(),
+                sm.encodings.deltas().iter().map(|d| d.0).collect::<Vec<_>>(),
+                "{variant:?} deltas"
+            );
+            assert_eq!(got.output_decode, sm.output_decode, "{variant:?} server decode");
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_magic_version_checks() {
+        use crate::protocol::linear::{LinearOp, Matrix};
+        use std::sync::Arc;
+        let mut rng = Rng::new(3);
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(4, 6, 10, &mut rng)),
+            Arc::new(Matrix::random(2, 4, 10, &mut rng)),
+        ];
+        let plan = NetworkPlan {
+            linears,
+            variant: circa_variant(12),
+            rescale_bits: vec![3],
+        };
+        let m = SessionManifest::of_plan(&plan);
+        assert_eq!(m.dims, vec![(6, 4), (4, 2)]);
+        let bytes = m.encode();
+        assert_eq!(SessionManifest::decode(&bytes).unwrap(), m);
+
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        let err = SessionManifest::decode(&bad).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+
+        // Bad version.
+        let mut bad = bytes.clone();
+        bad[4] = 0xEE;
+        let err = SessionManifest::decode(&bad).unwrap_err();
+        assert!(err.to_string().contains("unsupported wire version"), "{err}");
+
+        // Fingerprint covers the body: flip a dim byte.
+        let mut bad = bytes.clone();
+        bad[14] ^= 0x01;
+        assert!(SessionManifest::decode(&bad).is_err());
+
+        // Truncation anywhere must error, never panic.
+        for cut in 0..bytes.len() {
+            assert!(SessionManifest::decode(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn corrupt_material_never_panics() {
+        // Byte-flip and truncation sweeps over a valid client-material
+        // encoding: decode must return (Ok | Err), never panic. Flips in
+        // label payload bytes legitimately decode Ok (labels are opaque);
+        // flips in the structural header must not bring the process down.
+        let mut rng = Rng::new(77);
+        let xc: Vec<Fp> = (0..4).map(|_| crate::field::random_fp(&mut rng)).collect();
+        let (cm, sm) = offline_relu_layer(circa_variant(8), &xc, &mut rng);
+        let mut w = Writer::new();
+        put_client_relu(&mut w, &cm);
+        let valid = w.buf;
+
+        for pos in (0..valid.len()).step_by(7) {
+            let mut mutated = valid.clone();
+            mutated[pos] ^= 0xA5;
+            let _ = get_client_relu(&mut Reader::new(&mutated));
+        }
+        for cut in (0..valid.len()).step_by(11) {
+            assert!(get_client_relu(&mut Reader::new(&valid[..cut])).is_err(), "cut={cut}");
+        }
+
+        let mut w = Writer::new();
+        put_server_relu(&mut w, &sm);
+        let valid = w.buf;
+        for pos in (0..valid.len()).step_by(7) {
+            let mut mutated = valid.clone();
+            mutated[pos] ^= 0xA5;
+            let _ = get_server_relu(&mut Reader::new(&mutated));
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! The standalone dealer: garbles full sessions on demand and streams
+//! them to a coordinator over the framed transport.
+//!
+//! Protocol (one connection):
+//!
+//! ```text
+//! coordinator → dealer : Hello   (SessionManifest of the local plan)
+//! dealer      → coord  : Hello   (its own manifest)  — or Error + close
+//! coordinator → dealer : Request (u32 session count)
+//! dealer      → coord  : Session × count (one encoded session each)
+//! ...                    (any number of Request rounds)
+//! coordinator → dealer : Bye
+//! ```
+//!
+//! The handshake compares manifests structurally (variant, layer dims,
+//! rescale schedule, fingerprint); a mismatch is rejected before any
+//! material moves. Sessions are dealt with [`offline_network`] — the
+//! exact same code path as the inline pool deal — so material fetched
+//! from a dealer with seed `s` is bit-identical to an inline deal from
+//! the same RNG stream.
+
+use super::codec::{self, SessionManifest};
+use super::frame::{Channel, Framed, MemChannel, MsgType, TcpChannel};
+use crate::coordinator::pool::Session;
+use crate::protocol::server::{offline_network, NetworkPlan};
+use crate::util::bytes::{Reader, Writer};
+use crate::util::error::{Context, Result};
+use crate::util::Rng;
+use crate::{bail, ensure};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Upper bound on sessions per Request (keeps a rogue coordinator from
+/// pinning a dealer thread forever).
+pub const MAX_SESSIONS_PER_REQUEST: u32 = 4096;
+
+/// Deal one full session (both parties' nets) from the dealer's RNG.
+pub fn deal_session(plan: &NetworkPlan, rng: &mut Rng) -> Session {
+    let (client, server, offline_bytes) = offline_network(plan, rng);
+    Session { client, server, offline_bytes }
+}
+
+/// Serve one dealer connection until `Bye` or peer close. Returns `Ok`
+/// on an orderly goodbye, `Err` on protocol violations or transport
+/// failure (callers serving many connections just log and move on).
+pub fn serve_connection(mut framed: Framed, plan: &NetworkPlan, rng: &mut Rng) -> Result<()> {
+    let local = SessionManifest::of_plan(plan);
+    let hello = framed.recv()?;
+    ensure!(hello.msg_type == MsgType::Hello, "expected Hello, got {:?}", hello.msg_type);
+    match SessionManifest::decode(&hello.payload) {
+        Ok(remote) if remote == local => framed.send(MsgType::Hello, &local.encode())?,
+        Ok(remote) => {
+            let msg = format!(
+                "plan mismatch: dealer fingerprint {:#018x}, coordinator {:#018x}",
+                local.fingerprint, remote.fingerprint
+            );
+            let _ = framed.send(MsgType::Error, msg.as_bytes());
+            bail!("{msg}");
+        }
+        Err(e) => {
+            let _ = framed.send(MsgType::Error, e.to_string().as_bytes());
+            return Err(e);
+        }
+    }
+
+    loop {
+        let frame = framed.recv()?;
+        match frame.msg_type {
+            MsgType::Request => {
+                let count = Reader::new(&frame.payload).u32()?;
+                ensure!(
+                    (1..=MAX_SESSIONS_PER_REQUEST).contains(&count),
+                    "bad session count {count}"
+                );
+                for _ in 0..count {
+                    let session = deal_session(plan, rng);
+                    framed.send(MsgType::Session, &codec::encode_session(&session))?;
+                }
+            }
+            MsgType::Bye => return Ok(()),
+            other => bail!("unexpected {other:?} frame"),
+        }
+    }
+}
+
+/// Coordinator-side handle to a connected dealer.
+pub struct RemoteDealer {
+    framed: Framed,
+    plan: Arc<NetworkPlan>,
+    /// Set after any transport/decode error: request/response pairing on
+    /// the stream may be desynced (e.g. undrained Session frames), so
+    /// the handle refuses further fetches — reconnect instead.
+    poisoned: bool,
+}
+
+impl RemoteDealer {
+    /// Handshake over an established byte channel.
+    pub fn connect(chan: Box<dyn Channel>, plan: Arc<NetworkPlan>) -> Result<RemoteDealer> {
+        let mut framed = Framed::new(chan);
+        let manifest = SessionManifest::of_plan(&plan);
+        framed.send(MsgType::Hello, &manifest.encode())?;
+        let reply = framed.recv()?;
+        match reply.msg_type {
+            MsgType::Hello => {
+                let remote = SessionManifest::decode(&reply.payload)?;
+                ensure!(
+                    remote == manifest,
+                    "dealer serves a different plan (fingerprint {:#018x} != {:#018x})",
+                    remote.fingerprint,
+                    manifest.fingerprint
+                );
+                Ok(RemoteDealer { framed, plan, poisoned: false })
+            }
+            MsgType::Error => {
+                bail!("dealer rejected handshake: {}", String::from_utf8_lossy(&reply.payload))
+            }
+            other => bail!("expected Hello, got {other:?}"),
+        }
+    }
+
+    /// Connect to a dealer over TCP.
+    pub fn connect_tcp(addr: &str, plan: Arc<NetworkPlan>) -> Result<RemoteDealer> {
+        Self::connect(Box::new(TcpChannel::connect(addr)?), plan)
+    }
+
+    /// Fetch freshly dealt sessions (blocking round trip). `count` is
+    /// clamped to `1..=MAX_SESSIONS_PER_REQUEST`; the returned vec's
+    /// length is the clamped count. Any error poisons the handle (the
+    /// stream may hold undrained frames) — drop it and reconnect.
+    pub fn fetch(&mut self, count: usize) -> Result<Vec<Session>> {
+        ensure!(!self.poisoned, "connection poisoned by an earlier error; reconnect");
+        let res = self.fetch_inner(count);
+        if res.is_err() {
+            self.poisoned = true;
+        }
+        res
+    }
+
+    fn fetch_inner(&mut self, count: usize) -> Result<Vec<Session>> {
+        let count = count.clamp(1, MAX_SESSIONS_PER_REQUEST as usize) as u32;
+        let mut w = Writer::new();
+        w.u32(count);
+        self.framed.send(MsgType::Request, &w.buf)?;
+        let mut out = Vec::with_capacity(count as usize);
+        for _ in 0..count {
+            let frame = self.framed.recv()?;
+            match frame.msg_type {
+                MsgType::Session => {
+                    out.push(codec::decode_session(&frame.payload, &self.plan)?)
+                }
+                MsgType::Error => {
+                    bail!("dealer error: {}", String::from_utf8_lossy(&frame.payload))
+                }
+                other => bail!("expected Session, got {other:?}"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Total bytes received over this connection (frames included).
+    pub fn bytes_received(&self) -> u64 {
+        self.framed.bytes_received()
+    }
+
+    /// Orderly goodbye (best effort).
+    pub fn close(mut self) {
+        let _ = self.framed.send(MsgType::Bye, &[]);
+    }
+}
+
+/// Spawn a dealer thread serving one in-memory duplex channel. Returns
+/// the coordinator-side endpoint and the dealer thread handle.
+pub fn spawn_mem_dealer(
+    plan: Arc<NetworkPlan>,
+    seed: u64,
+) -> (Box<dyn Channel>, JoinHandle<()>) {
+    let (coord_end, dealer_end) = MemChannel::pair();
+    let handle = std::thread::spawn(move || {
+        let mut rng = Rng::new(seed);
+        let _ = serve_connection(Framed::new(Box::new(dealer_end)), &plan, &mut rng);
+    });
+    (Box::new(coord_end), handle)
+}
+
+/// A running TCP dealer (accept loop + per-connection threads).
+pub struct DealerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl DealerHandle {
+    /// The bound address (useful with a `:0` ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop. Connections already being
+    /// served run to completion on their own threads.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Nudge the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:0`) and serve dealer connections until
+/// stopped. Connection `c` deals from `Rng::new(seed ^ c·φ)` — the same
+/// per-thread stream derivation the inline pool uses, so a given
+/// connection's material is reproducible from the seed.
+pub fn spawn_tcp_dealer(addr: &str, plan: Arc<NetworkPlan>, seed: u64) -> Result<DealerHandle> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let local = listener.local_addr().context("local addr")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_accept = stop.clone();
+    let accept_thread = std::thread::spawn(move || {
+        let mut conn_id = 0u64;
+        for stream in listener.incoming() {
+            if stop_accept.load(Ordering::Relaxed) {
+                return;
+            }
+            let Ok(stream) = stream else { continue };
+            conn_id += 1;
+            let plan = plan.clone();
+            let mut rng = Rng::new(seed ^ conn_id.wrapping_mul(0x9E3779B97F4A7C15));
+            std::thread::spawn(move || {
+                let framed = Framed::new(Box::new(TcpChannel::new(stream)));
+                let _ = serve_connection(framed, &plan, &mut rng);
+            });
+        }
+    });
+    Ok(DealerHandle { addr: local, stop, accept_thread: Some(accept_thread) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::ReluVariant;
+    use crate::protocol::linear::{LinearOp, Matrix};
+    use crate::protocol::server::run_inference;
+
+    fn tiny_plan(seed: u64) -> Arc<NetworkPlan> {
+        let mut rng = Rng::new(seed);
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(4, 6, 10, &mut rng)),
+            Arc::new(Matrix::random(3, 4, 10, &mut rng)),
+        ];
+        Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu))
+    }
+
+    #[test]
+    fn mem_dealer_sessions_match_inline_deal() {
+        let plan = tiny_plan(1);
+        let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), 42);
+        let mut dealer = RemoteDealer::connect(chan, plan.clone()).unwrap();
+        let sessions = dealer.fetch(2).unwrap();
+        assert_eq!(sessions.len(), 2);
+        assert!(dealer.bytes_received() > 0);
+        dealer.close();
+        dealer_thread.join().unwrap();
+
+        // Same RNG stream inline ⇒ bit-identical material ⇒ identical
+        // inference transcripts.
+        let mut rng = Rng::new(42);
+        let input: Vec<crate::field::Fp> =
+            (0..6).map(|i| crate::field::Fp::from_i64(100 + i)).collect();
+        for session in sessions {
+            let inline = deal_session(&plan, &mut rng);
+            assert_eq!(session.offline_bytes, inline.offline_bytes);
+            let (wire_logits, _) = run_inference(&session.client, &session.server, &input);
+            let (inline_logits, _) = run_inference(&inline.client, &inline.server, &input);
+            assert_eq!(wire_logits, inline_logits);
+        }
+    }
+
+    #[test]
+    fn handshake_rejects_mismatched_plan() {
+        let plan_a = tiny_plan(1);
+        let mut rng = Rng::new(9);
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(5, 6, 10, &mut rng)), // different dims
+            Arc::new(Matrix::random(3, 5, 10, &mut rng)),
+        ];
+        let plan_b = Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu));
+
+        let (chan, dealer_thread) = spawn_mem_dealer(plan_a, 7);
+        let err = RemoteDealer::connect(chan, plan_b).unwrap_err();
+        assert!(err.to_string().contains("rejected"), "{err}");
+        let _ = dealer_thread.join();
+    }
+
+    #[test]
+    fn request_count_bounds_enforced() {
+        let plan = tiny_plan(1);
+        let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), 5);
+        let mut framed = Framed::new(chan);
+        let manifest = SessionManifest::of_plan(&plan);
+        framed.send(MsgType::Hello, &manifest.encode()).unwrap();
+        assert_eq!(framed.recv().unwrap().msg_type, MsgType::Hello);
+        // Zero-count request is a protocol violation; the dealer drops us.
+        let mut w = Writer::new();
+        w.u32(0);
+        framed.send(MsgType::Request, &w.buf).unwrap();
+        assert!(framed.recv().is_err());
+        let _ = dealer_thread.join();
+    }
+}

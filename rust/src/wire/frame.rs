@@ -1,0 +1,342 @@
+//! Framed message transport for the dealer↔coordinator link.
+//!
+//! A frame is `MSG_TYPE (1 B) | LEN (4 B le) | payload (LEN B) |
+//! CRC32 (4 B le)` where the CRC (IEEE 802.3 polynomial) covers the
+//! payload only. Framing is deliberately dumb: versioning and identity
+//! live in the handshake payload ([`super::codec::SessionManifest`]),
+//! so the frame layer never changes shape.
+//!
+//! The byte transport underneath is the [`Channel`] trait with two
+//! implementations: [`MemChannel`] (in-process duplex over byte queues,
+//! for tests and single-process demos) and [`TcpChannel`] (blocking
+//! `std::net::TcpStream`, the real two-process deployment). Everything
+//! received is treated as untrusted: unknown message types, oversized
+//! LEN fields, short streams, and CRC mismatches all surface as
+//! [`crate::util::error::Result`] errors — never panics.
+
+use crate::util::error::{Context, Error, Result};
+use crate::{bail, ensure};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{channel as mpsc_channel, Receiver, Sender};
+
+/// Hard upper bound on a frame payload (1 GiB). A LEN above this is
+/// rejected before any allocation happens.
+pub const MAX_FRAME_LEN: usize = 1 << 30;
+
+/// Frame header bytes (type + LEN) preceding the payload.
+pub const FRAME_HEADER_BYTES: usize = 5;
+
+/// Trailing CRC bytes following the payload.
+pub const FRAME_CRC_BYTES: usize = 4;
+
+/// Message types of the dealer protocol (see [`super::dealer`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgType {
+    /// Handshake: payload is an encoded `SessionManifest`.
+    Hello = 1,
+    /// Coordinator → dealer: payload is a u32 session count.
+    Request = 2,
+    /// Dealer → coordinator: payload is one encoded session.
+    Session = 3,
+    /// Orderly goodbye (empty payload).
+    Bye = 4,
+    /// Fatal rejection: payload is a UTF-8 message.
+    Error = 5,
+}
+
+impl MsgType {
+    pub fn from_u8(v: u8) -> Result<MsgType> {
+        match v {
+            1 => Ok(MsgType::Hello),
+            2 => Ok(MsgType::Request),
+            3 => Ok(MsgType::Session),
+            4 => Ok(MsgType::Bye),
+            5 => Ok(MsgType::Error),
+            other => bail!("unknown message type {other}"),
+        }
+    }
+}
+
+/// One received frame.
+#[derive(Debug)]
+pub struct Frame {
+    pub msg_type: MsgType,
+    pub payload: Vec<u8>,
+}
+
+/// A blocking byte pipe between two parties. Implementations only move
+/// bytes; framing, CRC, and message semantics live above.
+pub trait Channel: Send {
+    /// Send the whole buffer (blocking).
+    fn send_bytes(&mut self, buf: &[u8]) -> Result<()>;
+    /// Fill the whole buffer (blocking); `Err` on peer close/short stream.
+    fn recv_exact(&mut self, buf: &mut [u8]) -> Result<()>;
+}
+
+const CRC_POLY: u32 = 0xEDB8_8320;
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 == 1 { CRC_POLY ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE 802.3) of a byte slice.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Framing layer over a boxed [`Channel`], with byte accounting for the
+/// coordinator's offline-traffic ledger.
+pub struct Framed {
+    chan: Box<dyn Channel>,
+    bytes_sent: u64,
+    bytes_received: u64,
+}
+
+impl Framed {
+    pub fn new(chan: Box<dyn Channel>) -> Self {
+        Self { chan, bytes_sent: 0, bytes_received: 0 }
+    }
+
+    /// Send one frame (header + payload + CRC in a single write).
+    pub fn send(&mut self, msg_type: MsgType, payload: &[u8]) -> Result<()> {
+        ensure!(payload.len() <= MAX_FRAME_LEN, "frame payload too large: {}", payload.len());
+        let mut buf = Vec::with_capacity(FRAME_HEADER_BYTES + payload.len() + FRAME_CRC_BYTES);
+        buf.push(msg_type as u8);
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(payload);
+        buf.extend_from_slice(&crc32(payload).to_le_bytes());
+        self.chan.send_bytes(&buf)?;
+        self.bytes_sent += buf.len() as u64;
+        Ok(())
+    }
+
+    /// Receive one frame, validating type, LEN bound, and CRC.
+    pub fn recv(&mut self) -> Result<Frame> {
+        let mut header = [0u8; FRAME_HEADER_BYTES];
+        self.chan.recv_exact(&mut header)?;
+        let msg_type = MsgType::from_u8(header[0])?;
+        let len = u32::from_le_bytes(header[1..5].try_into().unwrap()) as usize;
+        ensure!(len <= MAX_FRAME_LEN, "oversized frame LEN {len}");
+        // Grow the payload in bounded steps so a corrupt LEN with no data
+        // behind it fails after at most one step's allocation.
+        const RECV_STEP: usize = 1 << 22;
+        let mut payload: Vec<u8> = Vec::new();
+        while payload.len() < len {
+            let start = payload.len();
+            payload.resize(start + RECV_STEP.min(len - start), 0);
+            self.chan.recv_exact(&mut payload[start..])?;
+        }
+        let mut crc = [0u8; FRAME_CRC_BYTES];
+        self.chan.recv_exact(&mut crc)?;
+        ensure!(
+            u32::from_le_bytes(crc) == crc32(&payload),
+            "frame CRC mismatch ({:?}, {len} B payload)",
+            msg_type
+        );
+        self.bytes_received += (FRAME_HEADER_BYTES + len + FRAME_CRC_BYTES) as u64;
+        Ok(Frame { msg_type, payload })
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
+    }
+
+    pub fn bytes_received(&self) -> u64 {
+        self.bytes_received
+    }
+}
+
+/// In-memory duplex byte channel (the test/demo transport).
+pub struct MemChannel {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    pending: Vec<u8>,
+    pos: usize,
+}
+
+impl MemChannel {
+    /// A connected endpoint pair.
+    pub fn pair() -> (MemChannel, MemChannel) {
+        let (tx_ab, rx_ab) = mpsc_channel();
+        let (tx_ba, rx_ba) = mpsc_channel();
+        (
+            MemChannel { tx: tx_ab, rx: rx_ba, pending: Vec::new(), pos: 0 },
+            MemChannel { tx: tx_ba, rx: rx_ab, pending: Vec::new(), pos: 0 },
+        )
+    }
+}
+
+impl Channel for MemChannel {
+    fn send_bytes(&mut self, buf: &[u8]) -> Result<()> {
+        self.tx.send(buf.to_vec()).map_err(|_| Error::msg("in-memory peer closed"))
+    }
+
+    fn recv_exact(&mut self, out: &mut [u8]) -> Result<()> {
+        let mut filled = 0;
+        while filled < out.len() {
+            if self.pos >= self.pending.len() {
+                self.pending =
+                    self.rx.recv().map_err(|_| Error::msg("in-memory peer closed"))?;
+                self.pos = 0;
+                continue;
+            }
+            let take = (self.pending.len() - self.pos).min(out.len() - filled);
+            out[filled..filled + take]
+                .copy_from_slice(&self.pending[self.pos..self.pos + take]);
+            self.pos += take;
+            filled += take;
+        }
+        Ok(())
+    }
+}
+
+/// Blocking TCP byte channel (the two-process transport).
+pub struct TcpChannel {
+    stream: TcpStream,
+}
+
+impl TcpChannel {
+    pub fn new(stream: TcpStream) -> Self {
+        // Frames are latency-sensitive request/response pairs.
+        let _ = stream.set_nodelay(true);
+        Self { stream }
+    }
+
+    /// Connect as a client, with a read timeout so a dead peer surfaces
+    /// as a transport error (the pool's reconnect path) instead of
+    /// blocking a dealer thread — and the pool's shutdown join — forever.
+    /// Generous enough for a dealer garbling a multi-session batch on
+    /// demand; the server side deliberately stays blocking (an idle
+    /// coordinator holding a connection open is normal: its bank is
+    /// full).
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(120)));
+        Ok(Self::new(stream))
+    }
+}
+
+impl Channel for TcpChannel {
+    fn send_bytes(&mut self, buf: &[u8]) -> Result<()> {
+        self.stream.write_all(buf).context("tcp send")
+    }
+
+    fn recv_exact(&mut self, out: &mut [u8]) -> Result<()> {
+        self.stream.read_exact(out).context("tcp recv")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn framed_pair() -> (Framed, Framed) {
+        let (a, b) = MemChannel::pair();
+        (Framed::new(Box::new(a)), Framed::new(Box::new(b)))
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The classic IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_frames_and_byte_accounting() {
+        let (mut a, mut b) = framed_pair();
+        a.send(MsgType::Hello, b"manifest").unwrap();
+        a.send(MsgType::Bye, b"").unwrap();
+        let f1 = b.recv().unwrap();
+        assert_eq!(f1.msg_type, MsgType::Hello);
+        assert_eq!(f1.payload, b"manifest");
+        let f2 = b.recv().unwrap();
+        assert_eq!(f2.msg_type, MsgType::Bye);
+        assert!(f2.payload.is_empty());
+        // Two frames: (9-byte overhead + 8-byte payload) + (9 + 0).
+        assert_eq!(a.bytes_sent(), 26);
+        assert_eq!(b.bytes_received(), a.bytes_sent());
+    }
+
+    #[test]
+    fn flipped_crc_is_rejected() {
+        let (mut a, b) = MemChannel::pair();
+        // A valid frame with its payload byte flipped after the CRC was
+        // computed: [type][len=1]['x' ^ 0xFF][crc('x')].
+        let mut raw = vec![MsgType::Session as u8];
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.push(b'x' ^ 0xFF);
+        raw.extend_from_slice(&crc32(b"x").to_le_bytes());
+        a.send_bytes(&raw).unwrap();
+        let mut b = Framed::new(Box::new(b));
+        let err = b.recv().unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn bad_msg_type_is_rejected() {
+        let (mut a, b) = MemChannel::pair();
+        let mut raw = vec![0xEEu8];
+        raw.extend_from_slice(&0u32.to_le_bytes());
+        raw.extend_from_slice(&crc32(b"").to_le_bytes());
+        a.send_bytes(&raw).unwrap();
+        let err = Framed::new(Box::new(b)).recv().unwrap_err();
+        assert!(err.to_string().contains("unknown message type"), "{err}");
+    }
+
+    #[test]
+    fn oversized_len_is_rejected_before_allocation() {
+        let (mut a, b) = MemChannel::pair();
+        let mut raw = vec![MsgType::Session as u8];
+        raw.extend_from_slice(&u32::MAX.to_le_bytes());
+        a.send_bytes(&raw).unwrap();
+        let err = Framed::new(Box::new(b)).recv().unwrap_err();
+        assert!(err.to_string().contains("oversized frame LEN"), "{err}");
+    }
+
+    #[test]
+    fn truncated_stream_errors_cleanly() {
+        let (mut a, b) = MemChannel::pair();
+        // Header promises 100 payload bytes; only 3 arrive, then close.
+        let mut raw = vec![MsgType::Session as u8];
+        raw.extend_from_slice(&100u32.to_le_bytes());
+        raw.extend_from_slice(b"abc");
+        a.send_bytes(&raw).unwrap();
+        drop(a);
+        assert!(Framed::new(Box::new(b)).recv().is_err());
+    }
+
+    #[test]
+    fn works_across_threads_over_mem_channel() {
+        let (mut a, b) = framed_pair();
+        let h = std::thread::spawn(move || {
+            let mut b = b;
+            let f = b.recv().unwrap();
+            b.send(f.msg_type, &f.payload).unwrap();
+        });
+        a.send(MsgType::Request, &7u32.to_le_bytes()).unwrap();
+        let echo = a.recv().unwrap();
+        assert_eq!(echo.msg_type, MsgType::Request);
+        assert_eq!(echo.payload, 7u32.to_le_bytes());
+        h.join().unwrap();
+    }
+}

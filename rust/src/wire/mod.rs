@@ -1,0 +1,57 @@
+//! Wire subsystem: binary codec + framed transport for offline material,
+//! and the standalone dealer service.
+//!
+//! Circa's offline material (garbled sign-test tables, label arenas,
+//! Beaver triples) dominates storage and must be produced ahead of time
+//! by a dealer and shipped to the serving parties — the 4.7× storage
+//! savings of the paper only matter once material crosses a process or
+//! machine boundary. Since the layer-batch refactor all ReLU material is
+//! contiguous SoA buffers, so this module's codec is memcpy-shaped: a
+//! layer goes on the wire as a handful of length-prefixed flat runs.
+//!
+//! ## Frame layout ([`frame`])
+//!
+//! ```text
+//! MSG_TYPE (1 B) | LEN (4 B le) | payload (LEN B) | CRC32 (4 B le)
+//! ```
+//!
+//! `CRC32` is IEEE 802.3 over the payload only. `LEN` is bounded by
+//! [`frame::MAX_FRAME_LEN`]; anything larger is rejected before
+//! allocation. The byte transport is the [`frame::Channel`] trait:
+//! [`frame::MemChannel`] (in-process duplex, tests/demos) or
+//! [`frame::TcpChannel`] (blocking `std::net::TcpStream`).
+//!
+//! ## Message types ([`frame::MsgType`])
+//!
+//! | type    | dir            | payload                                |
+//! |---------|----------------|----------------------------------------|
+//! | Hello   | both           | encoded [`codec::SessionManifest`]     |
+//! | Request | coord → dealer | `u32` session count                    |
+//! | Session | dealer → coord | one encoded session                    |
+//! | Bye     | coord → dealer | empty                                  |
+//! | Error   | dealer → coord | UTF-8 rejection message                |
+//!
+//! ## Versioning rules
+//!
+//! The `MAGIC | VERSION` preamble rides in the `Hello` manifest once per
+//! connection; material payloads carry no per-message version. Any
+//! change to a payload layout in [`codec`] requires bumping
+//! [`codec::VERSION`]; decoders reject other versions outright. The
+//! frame layout itself is frozen — evolution happens behind new message
+//! types and the version field, never by reshaping the frame.
+//!
+//! ## Trust model
+//!
+//! Everything read off a channel is untrusted until decoded: lengths
+//! are overflow-checked against the remaining buffer before allocation,
+//! field elements are range-checked, deltas must carry their color bit,
+//! and layer shapes must match the local plan. Decoders return
+//! [`crate::util::error::Result`] — corrupt input never panics.
+
+pub mod codec;
+pub mod dealer;
+pub mod frame;
+
+pub use codec::{decode_session, encode_session, SessionManifest};
+pub use dealer::{spawn_mem_dealer, spawn_tcp_dealer, DealerHandle, RemoteDealer};
+pub use frame::{Channel, Framed, MemChannel, MsgType, TcpChannel};
