@@ -1,0 +1,150 @@
+//! Offline-dealing throughput trajectory: raw fixed-key AES blocks/s per
+//! backend (scalar soft vs pipelined soft vs AES-NI), `hash_many`
+//! throughput, half-gates garbling gates/s per backend, and end-to-end
+//! layer-deal ReLUs/s vs dealer thread count under the column-wise
+//! offline schedule. Results land in `BENCH_prf_throughput.json` — the
+//! first PRF perf baseline of the repo.
+//!
+//! ```bash
+//! cargo bench --bench prf_throughput
+//! # AES-NI path requires a native build: RUSTFLAGS="-C target-cpu=native"
+//! ```
+
+use circa::bench_harness::print_row;
+use circa::bench_harness::tables::write_bench_json;
+use circa::field::{random_fp, Fp};
+use circa::gc::garble::garble_into_with;
+use circa::prf::backend::{Backend, BatchCipher};
+use circa::prf::{GarbleHash, Label};
+use circa::protocol::offline::{circa_variant, offline_relu_layer_mt};
+use circa::util::{Rng, Timer};
+
+const KEY: [u8; 16] = *b"CIRCA-PIgarble01";
+
+/// Raw ECB blocks/s of one backend over a resident buffer.
+fn raw_blocks_per_s(cipher: &BatchCipher, reps: usize) -> f64 {
+    let mut rng = Rng::new(0xB10C);
+    let mut blocks: Vec<u128> = (0..(1 << 14)).map(|_| rng.next_u128()).collect();
+    let t = Timer::new();
+    for _ in 0..reps {
+        cipher.encrypt_many(&mut blocks);
+    }
+    (blocks.len() * reps) as f64 / t.elapsed_s()
+}
+
+/// `hash_many` GB/s (16 B per block) on the given hasher.
+fn hash_many_gb_per_s(hash: &GarbleHash, reps: usize) -> f64 {
+    let mut rng = Rng::new(0x4A54);
+    let mut blocks: Vec<u128> = (0..(1 << 14)).map(|_| rng.next_u128()).collect();
+    let t = Timer::new();
+    for _ in 0..reps {
+        hash.hash_many(&mut blocks);
+    }
+    (blocks.len() * reps * 16) as f64 / t.elapsed_s() / 1e9
+}
+
+/// Half-gates garbling gates/s of the Circa k=12 template through a
+/// forced backend (the real offline hot loop, gather-then-hash included).
+fn garble_gates_per_s(hash: &GarbleHash, n_instances: usize) -> f64 {
+    let spec = circa_variant(12).spec();
+    let circuit = spec.build_circuit();
+    let n_and = circuit.n_and();
+    let mut table = vec![[Label::ZERO; 2]; n_and];
+    let mut inputs = vec![Label::ZERO; circuit.n_inputs as usize];
+    let mut decode = vec![false; circuit.outputs.len()];
+    let mut scratch = Vec::new();
+    let mut rng = Rng::new(0x6A12);
+    let t = Timer::new();
+    for _ in 0..n_instances {
+        let _ = garble_into_with(
+            hash,
+            &circuit,
+            &mut rng,
+            &mut scratch,
+            &mut table,
+            &mut inputs,
+            &mut decode,
+        );
+    }
+    (n_and * n_instances) as f64 / t.elapsed_s()
+}
+
+/// End-to-end layer deal (garble + OT + triples, column schedule),
+/// ReLUs/s at a given garble-column thread count.
+fn deal_relus_per_s(threads: usize, n: usize) -> f64 {
+    let mut rng = Rng::new(0xD0E);
+    let xc: Vec<Fp> = (0..n).map(|_| random_fp(&mut rng)).collect();
+    let t = Timer::new();
+    let _ = offline_relu_layer_mt(circa_variant(12), &xc, &mut rng, threads);
+    n as f64 / t.elapsed_s()
+}
+
+fn main() {
+    println!("PRF / offline-dealing throughput (fixed-key AES backends)");
+    println!("detected backend: {}", Backend::detect().name());
+    let widths = [22, 16, 14];
+    print_row(
+        &["path".into(), "blocks/s".into(), "gates/s".into()],
+        &widths,
+    );
+
+    let mut json: Vec<(&str, f64)> = Vec::new();
+    let backends = [
+        ("soft_scalar", Backend::SoftScalar),
+        ("soft_pipelined", Backend::SoftPipelined),
+        ("aes_ni", Backend::AesNi),
+    ];
+    let mut blocks = [0.0f64; 3];
+    let mut gates = [0.0f64; 3];
+    for (i, (name, b)) in backends.iter().enumerate() {
+        let (bps, gps) = match (BatchCipher::with_backend(KEY, *b), GarbleHash::with_backend(*b))
+        {
+            (Some(cipher), Some(hash)) => {
+                // Scalar soft AES is ~an order of magnitude slower; fewer
+                // reps keep the bench snappy without hurting stability.
+                let reps = if *b == Backend::SoftScalar { 8 } else { 64 };
+                (raw_blocks_per_s(&cipher, reps), garble_gates_per_s(&hash, 2000))
+            }
+            _ => (0.0, 0.0), // backend unavailable on this CPU
+        };
+        blocks[i] = bps;
+        gates[i] = gps;
+        print_row(
+            &[(*name).into(), format!("{bps:.3e}"), format!("{gps:.3e}")],
+            &widths,
+        );
+    }
+    json.push(("aes_soft_scalar_blocks_per_s", blocks[0]));
+    json.push(("aes_soft_pipelined_blocks_per_s", blocks[1]));
+    json.push(("aes_ni_blocks_per_s", blocks[2]));
+    json.push(("aes_ni_available", if blocks[2] > 0.0 { 1.0 } else { 0.0 }));
+    json.push(("garble_gates_per_s_soft_scalar", gates[0]));
+    json.push(("garble_gates_per_s_soft_pipelined", gates[1]));
+    json.push(("garble_gates_per_s_aes_ni", gates[2]));
+    json.push(("soft_pipeline_blocks_speedup", blocks[1] / blocks[0]));
+    json.push(("soft_pipeline_garble_speedup", gates[1] / gates[0]));
+    if blocks[2] > 0.0 {
+        json.push(("aes_ni_blocks_speedup_vs_scalar", blocks[2] / blocks[0]));
+    }
+
+    let gbs = hash_many_gb_per_s(&GarbleHash::new(), 64);
+    println!("\nhash_many ({}): {:.3} GB/s", Backend::detect().name(), gbs);
+    json.push(("hash_many_gb_per_s", gbs));
+
+    println!("\nlayer deal (Circa k=12, 4096 ReLUs, column schedule):");
+    let mut t1 = 0.0;
+    for threads in [1usize, 4, 8] {
+        let rps = deal_relus_per_s(threads, 4096);
+        if threads == 1 {
+            t1 = rps;
+        }
+        println!("  {threads} threads: {rps:.0} ReLUs/s  ({:.2}x vs 1 thread)", rps / t1);
+        match threads {
+            1 => json.push(("deal_relus_per_s_t1", rps)),
+            4 => json.push(("deal_relus_per_s_t4", rps)),
+            _ => json.push(("deal_relus_per_s_t8", rps)),
+        }
+    }
+
+    write_bench_json("BENCH_prf_throughput.json", &json);
+}

@@ -64,9 +64,9 @@ fn demo_input(i: usize) -> Vec<Fp> {
 
 /// Phase 1: dealer behind an in-memory duplex channel, and proof that
 /// wire-delivered material is bit-equivalent to the inline deal.
-fn mem_channel_demo(plan: &Arc<NetworkPlan>, dealer_seed: u64) {
-    println!("\n--- phase 1: in-memory channel ---");
-    let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), dealer_seed);
+fn mem_channel_demo(plan: &Arc<NetworkPlan>, dealer_seed: u64, deal_threads: usize) {
+    println!("\n--- phase 1: in-memory channel ({deal_threads} deal threads) ---");
+    let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), dealer_seed, deal_threads);
     let mut dealer = RemoteDealer::connect(chan, plan.clone()).expect("mem handshake");
     let n = 3;
     let t = Timer::new();
@@ -80,8 +80,10 @@ fn mem_channel_demo(plan: &Arc<NetworkPlan>, dealer_seed: u64) {
         wire_bytes / n as u64
     );
 
-    // Same dealer seed replayed inline ⇒ the wire path must reproduce the
-    // inline path bit for bit, down to the inference transcript.
+    // Same dealer seed replayed inline (single-threaded) ⇒ the wire path
+    // must reproduce the inline path bit for bit, down to the inference
+    // transcript — whatever thread count the dealer used (the column-wise
+    // RNG schedule makes deals thread-count-invariant).
     let mut inline_rng = Rng::new(dealer_seed);
     let mut identical = 0;
     for (i, session) in sessions.iter().enumerate() {
@@ -149,6 +151,8 @@ fn main() {
     let dealer_seed = args.get_u64("dealer-seed", 0xDEA1);
     let k = args.get_u64("k", 4) as u32;
     let n_requests = args.get_usize("requests", 16);
+    // Threads each dealt session's garble columns fan out across.
+    let deal_threads = args.get_usize("deal-threads", 4);
     let plan = demo_plan(plan_seed, k);
     let manifest = SessionManifest::of_plan(&plan);
     println!(
@@ -160,8 +164,11 @@ fn main() {
 
     if let Some(addr) = args.get("listen") {
         // Dealer process: serve until killed.
-        let handle = spawn_tcp_dealer(addr, plan, dealer_seed).expect("bind dealer");
-        println!("dealer listening on {} (ctrl-c to stop)", handle.addr());
+        let handle = spawn_tcp_dealer(addr, plan, dealer_seed, deal_threads).expect("bind dealer");
+        println!(
+            "dealer listening on {} ({deal_threads} deal threads; ctrl-c to stop)",
+            handle.addr()
+        );
         loop {
             std::thread::sleep(std::time::Duration::from_secs(3600));
         }
@@ -175,8 +182,9 @@ fn main() {
 
     // Default: full single-process walkthrough — in-memory channel first,
     // then a self-spawned dealer on a real localhost TCP socket.
-    mem_channel_demo(&plan, dealer_seed);
-    let handle = spawn_tcp_dealer("127.0.0.1:0", plan.clone(), dealer_seed).expect("bind dealer");
+    mem_channel_demo(&plan, dealer_seed, deal_threads);
+    let handle = spawn_tcp_dealer("127.0.0.1:0", plan.clone(), dealer_seed, deal_threads)
+        .expect("bind dealer");
     let addr = handle.addr().to_string();
     println!("\nspawned TCP dealer on {addr}");
     tcp_serving_demo(&plan, &addr, n_requests);

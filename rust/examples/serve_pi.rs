@@ -28,6 +28,7 @@ fn run_variant(
     dataset: &circa::nn::weights::Dataset,
     n_requests: usize,
     workers: usize,
+    deal_threads: usize,
     dealer_addr: Option<String>,
 ) {
     println!("\n=== serving with {name} ===");
@@ -38,6 +39,7 @@ fn run_variant(
             workers,
             pool_target: 2 * n_requests.min(64),
             pool_dealers: workers,
+            deal_threads,
             dealer_addr,
             ..Default::default()
         },
@@ -88,6 +90,12 @@ fn run_variant(
         svc.pool.produced(),
         snap.pool_dry_events
     );
+    if snap.deal_relus > 0 {
+        println!(
+            "  deal throughput   : {:.0} ReLUs/s per dealer slot ({} ReLUs dealt locally)",
+            snap.deal_relus_per_s, snap.deal_relus
+        );
+    }
     if snap.pool_dry_events > 0 {
         println!(
             "  dry inline-deal ms: mean {:.1}  p99 {:.1}",
@@ -115,6 +123,9 @@ fn main() {
     let args = Args::from_env();
     let n_requests = args.get_usize("requests", 48);
     let workers = args.get_usize("workers", 4);
+    // Threads each inline deal's garble columns fan out across (material
+    // is identical for any value — see the column-wise offline schedule).
+    let deal_threads = args.get_usize("deal-threads", 1);
     let k = args.get_u64("k", 12) as u32;
     // Optional standalone dealer (see examples/dealer_serve.rs): the
     // material pool then refills over TCP instead of dealing inline.
@@ -141,6 +152,7 @@ fn main() {
         &ds,
         n_requests,
         workers,
+        deal_threads,
         dealer_addr.clone(),
     );
     run_variant(
@@ -151,6 +163,7 @@ fn main() {
         &ds,
         n_requests,
         workers,
+        deal_threads,
         // The dealer serves one plan; the baseline pass deals inline.
         None,
     );

@@ -18,6 +18,13 @@ pub struct Metrics {
     pub remote_sessions: AtomicU64,
     /// Offline material received over the wire (frame bytes included).
     pub bytes_offline_wire: AtomicU64,
+    /// ReLUs dealt by local offline deals (pool refill + dry leases).
+    pub deal_relus: AtomicU64,
+    /// Wall-clock time spent in those deals, µs, summed across pool
+    /// dealer slots (NOT core-time: a deal fanned over `deal_threads`
+    /// cores counts its wall time once, which is exactly how its speedup
+    /// shows up in the throughput ratio).
+    pub deal_wall_us: AtomicU64,
     inner: Mutex<Inner>,
 }
 
@@ -54,6 +61,12 @@ pub struct Snapshot {
     pub bytes_offline_wire: u64,
     pub remote_refill_mean_us: f64,
     pub remote_refill_p99_us: u64,
+    pub deal_relus: u64,
+    /// Offline dealing throughput, ReLUs per second of dealer-slot wall
+    /// time (0.0 before any deal is recorded). Scales with
+    /// `deal_threads`: an intra-deal fan-out shortens the wall time of
+    /// every deal, raising this number.
+    pub deal_relus_per_s: f64,
 }
 
 impl Metrics {
@@ -84,8 +97,21 @@ impl Metrics {
         self.inner.lock().unwrap().remote_refill_us.record_us(fetch_us);
     }
 
+    /// Record one local offline deal: `relus` ReLUs' worth of material
+    /// produced in `us` microseconds of wall time. Fed by the pool
+    /// refill threads and by dry leases; the snapshot's
+    /// [`Snapshot::deal_relus_per_s`] is the running aggregate.
+    pub fn record_deal(&self, relus: u64, us: u64) {
+        self.deal_relus.fetch_add(relus, Ordering::Relaxed);
+        // Clamp to 1µs so a sub-microsecond deal (tiny test plans) still
+        // registers time and the ratio stays finite.
+        self.deal_wall_us.fetch_add(us.max(1), Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
+        let deal_relus = self.deal_relus.load(Ordering::Relaxed);
+        let deal_wall_us = self.deal_wall_us.load(Ordering::Relaxed);
         Snapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -104,6 +130,12 @@ impl Metrics {
             bytes_offline_wire: self.bytes_offline_wire.load(Ordering::Relaxed),
             remote_refill_mean_us: g.remote_refill_us.mean_us(),
             remote_refill_p99_us: g.remote_refill_us.percentile_us(99.0),
+            deal_relus,
+            deal_relus_per_s: if deal_wall_us == 0 {
+                0.0
+            } else {
+                deal_relus as f64 * 1e6 / deal_wall_us as f64
+            },
         }
     }
 }
@@ -140,6 +172,17 @@ mod tests {
         assert_eq!(s.bytes_offline_wire, 1_500_000);
         assert!((s.remote_refill_mean_us - 3_000.0).abs() < 1e-9);
         assert!(s.remote_refill_p99_us >= 4_000);
+    }
+
+    #[test]
+    fn deal_throughput_recorded() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().deal_relus_per_s, 0.0, "no div-by-zero before first deal");
+        m.record_deal(500, 250_000);
+        m.record_deal(500, 250_000);
+        let s = m.snapshot();
+        assert_eq!(s.deal_relus, 1000);
+        assert!((s.deal_relus_per_s - 2000.0).abs() < 1e-9);
     }
 
     #[test]

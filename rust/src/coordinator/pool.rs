@@ -16,7 +16,7 @@
 
 use super::metrics::Metrics;
 use crate::protocol::client::ClientNet;
-use crate::protocol::server::{offline_network, NetworkPlan, ServerNet};
+use crate::protocol::server::{offline_network_mt, NetworkPlan, ServerNet};
 use crate::util::error::Result;
 use crate::util::{Rng, Timer};
 use crate::wire::dealer::RemoteDealer;
@@ -31,6 +31,14 @@ pub struct Session {
     pub client: ClientNet,
     pub server: ServerNet,
     pub offline_bytes: u64,
+}
+
+impl Session {
+    /// ReLUs of offline material in this session (the deal-throughput
+    /// denominator).
+    pub fn n_relus(&self) -> usize {
+        self.server.n_relus()
+    }
 }
 
 /// Outcome of [`MaterialPool::lease`]: the session plus where it came
@@ -70,18 +78,24 @@ pub struct MaterialPool {
     plan: Arc<NetworkPlan>,
     shared: Arc<Shared>,
     target: usize,
+    deal_threads: usize,
     dealers: Vec<JoinHandle<()>>,
 }
 
 impl MaterialPool {
     /// Spawn a pool refilling toward `target` with `n_dealers` inline
-    /// dealer threads (the classic in-process deal).
+    /// dealer threads (the classic in-process deal, one thread per
+    /// session).
     pub fn start(plan: Arc<NetworkPlan>, target: usize, n_dealers: usize, seed: u64) -> Self {
-        Self::start_with_source(plan, target, n_dealers, seed, RefillSource::Inline, None)
+        Self::start_with_source(plan, target, n_dealers, seed, RefillSource::Inline, None, 1)
     }
 
     /// Spawn a pool with an explicit [`RefillSource`]. When `metrics` is
-    /// given, remote refills record their latency and bytes-on-wire.
+    /// given, remote refills record their latency and bytes-on-wire, and
+    /// inline deals record their ReLU throughput. `deal_threads` splits
+    /// each inline (and dry-lease) deal's garble columns across threads —
+    /// the column-wise RNG schedule keeps the material bit-identical for
+    /// every value.
     pub fn start_with_source(
         plan: Arc<NetworkPlan>,
         target: usize,
@@ -89,7 +103,9 @@ impl MaterialPool {
         seed: u64,
         source: RefillSource,
         metrics: Option<Arc<Metrics>>,
+        deal_threads: usize,
     ) -> Self {
+        let deal_threads = deal_threads.max(1);
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             ready: Condvar::new(),
@@ -129,12 +145,18 @@ impl MaterialPool {
                     }
                     match &remote {
                         None => {
-                            // Produce outside the lock (garbling is slow).
+                            // Produce outside the lock (garbling is slow);
+                            // the deal itself fans out over deal_threads.
+                            let t = Timer::new();
                             let (client, server, offline_bytes) =
-                                offline_network(&plan, &mut rng);
+                                offline_network_mt(&plan, &mut rng, deal_threads);
+                            let session = Session { client, server, offline_bytes };
+                            if let Some(m) = &metrics {
+                                m.record_deal(session.n_relus() as u64, t.elapsed_us());
+                            }
                             shared.produced.fetch_add(1, Ordering::Relaxed);
                             let mut q = shared.queue.lock().unwrap();
-                            q.push_back(Session { client, server, offline_bytes });
+                            q.push_back(session);
                             shared.ready.notify_one();
                         }
                         Some((connect, batch)) => {
@@ -207,7 +229,7 @@ impl MaterialPool {
                 }
             }));
         }
-        Self { plan, shared, target, dealers }
+        Self { plan, shared, target, deal_threads, dealers }
     }
 
     /// Lease a session: pop a banked one, or deal inline when dry. The
@@ -225,7 +247,8 @@ impl MaterialPool {
         // Dry: prepare inline, and time it.
         self.shared.dry_leases.fetch_add(1, Ordering::Relaxed);
         let t = Timer::new();
-        let (client, server, offline_bytes) = offline_network(&self.plan, rng);
+        let (client, server, offline_bytes) =
+            offline_network_mt(&self.plan, rng, self.deal_threads);
         Lease {
             session: Session { client, server, offline_bytes },
             was_dry: true,
@@ -312,7 +335,8 @@ mod tests {
         let metrics = Arc::new(Metrics::default());
         let plan_c = plan.clone();
         let connect: Arc<dyn Fn() -> Result<RemoteDealer> + Send + Sync> = Arc::new(move || {
-            let (chan, _dealer_thread) = crate::wire::dealer::spawn_mem_dealer(plan_c.clone(), 77);
+            let (chan, _dealer_thread) =
+                crate::wire::dealer::spawn_mem_dealer(plan_c.clone(), 77, 1);
             RemoteDealer::connect(chan, plan_c.clone())
         });
         let pool = MaterialPool::start_with_source(
@@ -322,6 +346,7 @@ mod tests {
             7,
             RefillSource::Remote { connect, batch: 2 },
             Some(metrics.clone()),
+            1,
         );
         pool.wait_ready(3);
         let mut rng = Rng::new(2);
@@ -334,6 +359,26 @@ mod tests {
         assert!(snap.remote_sessions >= 3, "sessions recorded");
         assert!(snap.bytes_offline_wire > 0, "wire bytes recorded");
         assert!(snap.remote_refill_mean_us > 0.0, "fetch latency recorded");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn inline_deals_record_throughput() {
+        // tiny_plan has one ReLU layer of 4 → 4 ReLUs per session.
+        let metrics = Arc::new(Metrics::default());
+        let pool = MaterialPool::start_with_source(
+            tiny_plan(),
+            3,
+            2,
+            11,
+            RefillSource::Inline,
+            Some(metrics.clone()),
+            2,
+        );
+        pool.wait_ready(3);
+        let snap = metrics.snapshot();
+        assert!(snap.deal_relus >= 12, "relus recorded: {}", snap.deal_relus);
+        assert!(snap.deal_relus_per_s > 0.0, "throughput recorded");
         pool.shutdown();
     }
 

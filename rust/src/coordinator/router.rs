@@ -58,8 +58,10 @@ pub fn spawn_workers(
                     let lease = pool.lease(&mut rng);
                     if lease.was_dry {
                         // Counter + inline-deal latency histogram: a dry
-                        // bank shows up as measurable tail latency.
+                        // bank shows up as measurable tail latency. The
+                        // deal also counts toward dealing throughput.
                         metrics.record_dry_deal(lease.deal_us);
+                        metrics.record_deal(lease.session.n_relus() as u64, lease.deal_us);
                     }
                     let t = Timer::new();
                     let (logits, stats) =

@@ -20,6 +20,9 @@ pub struct ServiceConfig {
     pub workers: usize,
     pub pool_target: usize,
     pub pool_dealers: usize,
+    /// Threads each inline deal fans its garble columns across (the
+    /// column-wise offline schedule; material is thread-count-invariant).
+    pub deal_threads: usize,
     pub batch: BatchPolicy,
     pub seed: u64,
     /// When set, the material pool refills from a standalone dealer at
@@ -34,6 +37,7 @@ impl Default for ServiceConfig {
             workers: 4,
             pool_target: 16,
             pool_dealers: 2,
+            deal_threads: 1,
             batch: BatchPolicy::default(),
             seed: 0xC1CA,
             dealer_addr: None,
@@ -73,6 +77,7 @@ impl PiService {
             cfg.seed,
             source,
             Some(metrics.clone()),
+            cfg.deal_threads,
         ));
 
         let (ingress, ingress_rx): (Sender<Request>, Receiver<Request>) = channel();

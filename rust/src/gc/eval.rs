@@ -5,9 +5,59 @@
 //! label through (the garbler flipped the semantics), and AND gates apply
 //! the two half-gate ciphertexts keyed by the labels' color bits.
 
-use super::circuit::{Circuit, WireDef};
+use super::circuit::{Circuit, WireDef, WireId};
 use super::garble::GarbledCircuit;
 use crate::prf::{GarbleHash, Label};
+
+/// AND gates gathered per hash flight (2 hashes each → one full
+/// [`crate::prf::backend::MAX_BATCH`]-block cipher call per 4 gates).
+const FLIGHT_GATES: usize = 8;
+
+/// One gathered-but-not-yet-hashed AND gate of the evaluation walk; the
+/// two hash pre-images sit in the flight buffer.
+#[derive(Clone, Copy)]
+struct PendingAnd {
+    /// Output wire — its label slot holds a placeholder until flush.
+    wire: WireId,
+    wa: Label,
+    sa: bool,
+    sb: bool,
+    t_g: Label,
+    t_e: Label,
+}
+
+/// Is `wire` the still-unhashed output of an in-flight AND gate?
+#[inline]
+fn in_flight(pend: &[PendingAnd], wire: WireId) -> bool {
+    pend.iter().any(|p| p.wire == wire)
+}
+
+/// Hash the gathered flight and scatter output labels: `blocks[2g]`,
+/// `blocks[2g+1]` hold the pre-images of gate `g`'s `H(wa, j)`,
+/// `H(wb, j')`.
+fn flush_eval(
+    hash: &GarbleHash,
+    blocks: &mut [u128],
+    pend: &mut Vec<PendingAnd>,
+    labels: &mut [Label],
+) {
+    if pend.is_empty() {
+        return;
+    }
+    hash.hash_many(&mut blocks[..2 * pend.len()]);
+    for (g, p) in pend.iter().enumerate() {
+        let mut w_g = Label(blocks[2 * g]);
+        let mut w_e = Label(blocks[2 * g + 1]);
+        if p.sa {
+            w_g = w_g ^ p.t_g;
+        }
+        if p.sb {
+            w_e = w_e ^ p.t_e ^ p.wa;
+        }
+        labels[p.wire as usize] = w_g ^ w_e;
+    }
+    pend.clear();
+}
 
 /// Evaluate a garbled circuit on input labels; returns output labels.
 ///
@@ -38,6 +88,13 @@ pub fn evaluate_with_scratch(
 /// of a layer's contiguous table buffer) and the output labels are
 /// appended to a caller-owned buffer. The batch walk calls this once per
 /// ReLU with the *same* circuit template and reused scratch.
+///
+/// The gate walk is *gather-then-hash* (mirror of
+/// [`super::garble::garble_into_with`]): AND-gate hash pre-images are
+/// gathered across gates and hashed in [`FLIGHT_GATES`]-gate flights via
+/// [`GarbleHash::hash_many`], flushing early whenever a wire reads an
+/// in-flight gate's output. Output labels are identical to per-gate
+/// hashing — the hashes are independent, only their scheduling changes.
 pub fn evaluate_append(
     circuit: &Circuit,
     table: &[[Label; 2]],
@@ -50,35 +107,55 @@ pub fn evaluate_append(
     scratch.clear();
     scratch.reserve(circuit.wires.len());
     let labels = scratch;
-    let mut and_idx: u64 = 0;
+    let mut and_idx: usize = 0;
+    let mut blocks = [0u128; 2 * FLIGHT_GATES];
+    let mut pend: Vec<PendingAnd> = Vec::with_capacity(FLIGHT_GATES);
 
-    for def in &circuit.wires {
+    for (w, def) in circuit.wires.iter().enumerate() {
         let l = match *def {
             WireDef::Input(k) => input_labels[k as usize],
-            WireDef::Xor(a, b) => labels[a as usize] ^ labels[b as usize],
-            WireDef::Not(a) => labels[a as usize],
+            WireDef::Xor(a, b) => {
+                if in_flight(&pend, a) || in_flight(&pend, b) {
+                    flush_eval(hash, &mut blocks, &mut pend, labels);
+                }
+                labels[a as usize] ^ labels[b as usize]
+            }
+            WireDef::Not(a) => {
+                if in_flight(&pend, a) {
+                    flush_eval(hash, &mut blocks, &mut pend, labels);
+                }
+                labels[a as usize]
+            }
             WireDef::And(a, b) => {
+                if in_flight(&pend, a) || in_flight(&pend, b) {
+                    flush_eval(hash, &mut blocks, &mut pend, labels);
+                }
                 let wa = labels[a as usize];
                 let wb = labels[b as usize];
-                let [t_g, t_e] = table[and_idx as usize];
-                let j = 2 * and_idx;
-                let jp = 2 * and_idx + 1;
+                let [t_g, t_e] = table[and_idx];
+                let j = 2 * and_idx as u64;
+                let jp = j + 1;
+                let g = pend.len();
+                blocks[2 * g] = GarbleHash::input_block(wa, j);
+                blocks[2 * g + 1] = GarbleHash::input_block(wb, jp);
+                pend.push(PendingAnd {
+                    wire: w as WireId,
+                    wa,
+                    sa: wa.color(),
+                    sb: wb.color(),
+                    t_g,
+                    t_e,
+                });
                 and_idx += 1;
-                let sa = wa.color();
-                let sb = wb.color();
-                // One pipelined 2-block AES call per AND gate (§Perf it. 2).
-                let [mut w_g, mut w_e] = hash.hash2(wa, j, wb, jp);
-                if sa {
-                    w_g = w_g ^ t_g;
-                }
-                if sb {
-                    w_e = w_e ^ t_e ^ wa;
-                }
-                w_g ^ w_e
+                Label::ZERO // placeholder, patched when the flight flushes
             }
         };
         labels.push(l);
+        if pend.len() == FLIGHT_GATES {
+            flush_eval(hash, &mut blocks, &mut pend, labels);
+        }
     }
+    flush_eval(hash, &mut blocks, &mut pend, labels);
     out.extend(circuit.outputs.iter().map(|&o| labels[o as usize]));
 }
 

@@ -5,9 +5,77 @@
 //! are free. This is the engine behind every ReLU variant in
 //! [`crate::circuits`], and the `32·#AND` size model behind Fig. 5.
 
-use super::circuit::{Circuit, WireDef};
+use super::circuit::{Circuit, WireDef, WireId};
 use crate::prf::{Delta, GarbleHash, Label};
 use crate::util::Rng;
+
+/// AND gates gathered per hash flight: 8 gates × 4 hashes fills four
+/// [`crate::prf::backend::MAX_BATCH`]-block cipher calls back to back, so
+/// the batched backend (AES-NI or the pipelined soft path) always sees
+/// full pipelines on circuits with gate-level parallelism, and degrades
+/// to per-gate hashing (never worse than the old loop) on serial chains.
+const FLIGHT_GATES: usize = 8;
+
+/// One gathered-but-not-yet-hashed AND gate of the garbling walk. Its
+/// four hash pre-images sit in the flight buffer; everything else needed
+/// to finish the half-gates arithmetic after hashing is recorded here.
+#[derive(Clone, Copy)]
+struct PendingAnd {
+    /// Output wire — its `label0` slot holds a placeholder until flush.
+    wire: WireId,
+    /// Index into the instance's table stride.
+    and_idx: usize,
+    wa0: Label,
+    pa: bool,
+    pb: bool,
+}
+
+/// Is `wire` the still-unhashed output of an in-flight AND gate?
+#[inline]
+fn in_flight(pend: &[PendingAnd], wire: WireId) -> bool {
+    pend.iter().any(|p| p.wire == wire)
+}
+
+/// Hash the gathered flight and scatter ciphertexts + output labels:
+/// `blocks[4g..4g+4]` hold the pre-images of gate `g`'s four hashes
+/// `H(wa0,j), H(wa1,j), H(wb0,j'), H(wb1,j')`.
+fn flush_garble(
+    hash: &GarbleHash,
+    delta: Delta,
+    blocks: &mut [u128],
+    pend: &mut Vec<PendingAnd>,
+    label0: &mut [Label],
+    table: &mut [[Label; 2]],
+) {
+    if pend.is_empty() {
+        return;
+    }
+    hash.hash_many(&mut blocks[..4 * pend.len()]);
+    for (g, p) in pend.iter().enumerate() {
+        let h_wa0 = Label(blocks[4 * g]);
+        let h_wa1 = Label(blocks[4 * g + 1]);
+        let h_wb0 = Label(blocks[4 * g + 2]);
+        let h_wb1 = Label(blocks[4 * g + 3]);
+        // Garbler half-gate.
+        let mut t_g = h_wa0 ^ h_wa1;
+        if p.pb {
+            t_g = t_g ^ delta.0;
+        }
+        let mut w_g0 = h_wa0;
+        if p.pa {
+            w_g0 = w_g0 ^ t_g;
+        }
+        // Evaluator half-gate.
+        let t_e = h_wb0 ^ h_wb1 ^ p.wa0;
+        let mut w_e0 = h_wb0;
+        if p.pb {
+            w_e0 = w_e0 ^ t_e ^ p.wa0;
+        }
+        table[p.and_idx] = [t_g, t_e];
+        label0[p.wire as usize] = w_g0 ^ w_e0;
+    }
+    pend.clear();
+}
 
 /// The garbler's secret encoding of the circuit inputs.
 #[derive(Clone, Debug)]
@@ -162,61 +230,92 @@ pub fn garble_into(
     input_label0: &mut [Label],
     output_decode: &mut [bool],
 ) -> Delta {
+    let hash = GarbleHash::shared();
+    garble_into_with(hash, circuit, rng, scratch, table, input_label0, output_decode)
+}
+
+/// [`garble_into`] with an explicit hasher — the hook that lets benches
+/// and cross-backend tests garble through a forced PRF backend. All
+/// backends hash identically, so the material is the same either way.
+///
+/// The gate walk is *gather-then-hash*: AND-gate hash pre-images are
+/// collected across gates into a flight buffer and hashed in
+/// [`FLIGHT_GATES`]-gate batches through [`GarbleHash::hash_many`]; a
+/// flight is flushed early the moment a wire reads an in-flight gate's
+/// output, so dependency chains stay correct and the result is
+/// bit-identical to hashing gate by gate (hash order doesn't feed back
+/// into the material — only RNG draw order does, and that is untouched).
+pub fn garble_into_with(
+    hash: &GarbleHash,
+    circuit: &Circuit,
+    rng: &mut Rng,
+    scratch: &mut Vec<Label>,
+    table: &mut [[Label; 2]],
+    input_label0: &mut [Label],
+    output_decode: &mut [bool],
+) -> Delta {
     assert_eq!(table.len(), circuit.n_and(), "table stride");
     assert_eq!(input_label0.len(), circuit.n_inputs as usize, "input stride");
     assert_eq!(output_decode.len(), circuit.outputs.len(), "decode stride");
-    let hash = GarbleHash::shared();
     let delta = Delta::random(rng);
     scratch.clear();
     scratch.reserve(circuit.wires.len());
     let label0 = scratch;
-    let mut and_idx: u64 = 0;
+    let mut and_idx: usize = 0;
+    let mut blocks = [0u128; 4 * FLIGHT_GATES];
+    let mut pend: Vec<PendingAnd> = Vec::with_capacity(FLIGHT_GATES);
 
-    for def in &circuit.wires {
+    for (w, def) in circuit.wires.iter().enumerate() {
         let l0 = match *def {
             WireDef::Input(k) => {
+                // Inputs never depend on gates, so they never force a
+                // flush — RNG draw order is independent of flight state.
                 let l = Label::random(rng);
                 input_label0[k as usize] = l;
                 l
             }
-            WireDef::Xor(a, b) => label0[a as usize] ^ label0[b as usize],
-            WireDef::Not(a) => label0[a as usize] ^ delta.0,
+            WireDef::Xor(a, b) => {
+                if in_flight(&pend, a) || in_flight(&pend, b) {
+                    flush_garble(hash, delta, &mut blocks, &mut pend, label0, table);
+                }
+                label0[a as usize] ^ label0[b as usize]
+            }
+            WireDef::Not(a) => {
+                if in_flight(&pend, a) {
+                    flush_garble(hash, delta, &mut blocks, &mut pend, label0, table);
+                }
+                label0[a as usize] ^ delta.0
+            }
             WireDef::And(a, b) => {
+                if in_flight(&pend, a) || in_flight(&pend, b) {
+                    flush_garble(hash, delta, &mut blocks, &mut pend, label0, table);
+                }
                 let wa0 = label0[a as usize];
                 let wb0 = label0[b as usize];
-                let wa1 = wa0 ^ delta.0;
-                let wb1 = wb0 ^ delta.0;
-                let pa = wa0.color();
-                let pb = wb0.color();
-                let j = 2 * and_idx;
-                let jp = 2 * and_idx + 1;
-
-                // One pipelined 4-block AES call per AND gate (§Perf it. 2).
-                let [h_wa0, h_wa1, h_wb0, h_wb1] =
-                    hash.hash4([wa0, wa1, wb0, wb1], [j, j, jp, jp]);
-
-                // Garbler half-gate.
-                let mut t_g = h_wa0 ^ h_wa1;
-                if pb {
-                    t_g = t_g ^ delta.0;
-                }
-                let mut w_g0 = h_wa0;
-                if pa {
-                    w_g0 = w_g0 ^ t_g;
-                }
-                // Evaluator half-gate.
-                let t_e = h_wb0 ^ h_wb1 ^ wa0;
-                let mut w_e0 = h_wb0;
-                if pb {
-                    w_e0 = w_e0 ^ t_e ^ wa0;
-                }
-                table[and_idx as usize] = [t_g, t_e];
+                let j = 2 * and_idx as u64;
+                let jp = j + 1;
+                let g = pend.len();
+                blocks[4 * g] = GarbleHash::input_block(wa0, j);
+                blocks[4 * g + 1] = GarbleHash::input_block(wa0 ^ delta.0, j);
+                blocks[4 * g + 2] = GarbleHash::input_block(wb0, jp);
+                blocks[4 * g + 3] = GarbleHash::input_block(wb0 ^ delta.0, jp);
+                pend.push(PendingAnd {
+                    wire: w as WireId,
+                    and_idx,
+                    wa0,
+                    pa: wa0.color(),
+                    pb: wb0.color(),
+                });
                 and_idx += 1;
-                w_g0 ^ w_e0
+                Label::ZERO // placeholder, patched when the flight flushes
             }
         };
         label0.push(l0);
+        if pend.len() == FLIGHT_GATES {
+            flush_garble(hash, delta, &mut blocks, &mut pend, label0, table);
+        }
     }
+    flush_garble(hash, delta, &mut blocks, &mut pend, label0, table);
 
     for (slot, &o) in output_decode.iter_mut().zip(circuit.outputs.iter()) {
         *slot = label0[o as usize].color();
@@ -321,6 +420,89 @@ mod tests {
                 let got = roundtrip(&c, &inputs, &mut rng);
                 assert_eq!(got, want, "trial {trial}");
             }
+        }
+    }
+
+    /// Per-gate garbling reference (the pre-flight hot loop, kept here as
+    /// the oracle): hash4 per AND gate, no gathering.
+    fn garble_per_gate(circuit: &Circuit, rng: &mut Rng) -> (GarbledCircuit, InputEncoding) {
+        let hash = GarbleHash::shared();
+        let delta = Delta::random(rng);
+        let mut label0: Vec<Label> = Vec::with_capacity(circuit.wires.len());
+        let mut table = vec![[Label::ZERO; 2]; circuit.n_and()];
+        let mut input_label0 = vec![Label::ZERO; circuit.n_inputs as usize];
+        let mut and_idx: u64 = 0;
+        for def in &circuit.wires {
+            let l0 = match *def {
+                WireDef::Input(k) => {
+                    let l = Label::random(rng);
+                    input_label0[k as usize] = l;
+                    l
+                }
+                WireDef::Xor(a, b) => label0[a as usize] ^ label0[b as usize],
+                WireDef::Not(a) => label0[a as usize] ^ delta.0,
+                WireDef::And(a, b) => {
+                    let wa0 = label0[a as usize];
+                    let wb0 = label0[b as usize];
+                    let j = 2 * and_idx;
+                    let jp = j + 1;
+                    let [h_wa0, h_wa1, h_wb0, h_wb1] =
+                        hash.hash4([wa0, wa0 ^ delta.0, wb0, wb0 ^ delta.0], [j, j, jp, jp]);
+                    let mut t_g = h_wa0 ^ h_wa1;
+                    if wb0.color() {
+                        t_g = t_g ^ delta.0;
+                    }
+                    let mut w_g0 = h_wa0;
+                    if wa0.color() {
+                        w_g0 = w_g0 ^ t_g;
+                    }
+                    let t_e = h_wb0 ^ h_wb1 ^ wa0;
+                    let mut w_e0 = h_wb0;
+                    if wb0.color() {
+                        w_e0 = w_e0 ^ t_e ^ wa0;
+                    }
+                    table[and_idx as usize] = [t_g, t_e];
+                    and_idx += 1;
+                    w_g0 ^ w_e0
+                }
+            };
+            label0.push(l0);
+        }
+        let output_decode = circuit.outputs.iter().map(|&o| label0[o as usize].color()).collect();
+        (GarbledCircuit { table, output_decode }, InputEncoding { label0: input_label0, delta })
+    }
+
+    #[test]
+    fn flight_batching_matches_per_gate_reference() {
+        // The gather-then-hash walk must be bit-identical to hashing one
+        // gate at a time, including on random DAGs whose dependency
+        // chains force early flushes at every flight size.
+        let mut rng = Rng::new(0xF11);
+        for trial in 0..20 {
+            let n_in = 2 + rng.below_usize(6);
+            let mut bld = Builder::new();
+            let mut pool: Vec<_> = (0..n_in).map(|_| bld.input()).collect();
+            for _ in 0..60 {
+                let a = pool[rng.below_usize(pool.len())];
+                let b = pool[rng.below_usize(pool.len())];
+                let v = match rng.below(3) {
+                    0 => bld.xor(a, b),
+                    1 => bld.and(a, b),
+                    _ => bld.not(a),
+                };
+                pool.push(v);
+            }
+            for _ in 0..4 {
+                bld.output(pool[rng.below_usize(pool.len())]);
+            }
+            let c = bld.build();
+            let seed = 0xBEEF + trial;
+            let (gc_flight, enc_flight) = garble(&c, &mut Rng::new(seed));
+            let (gc_ref, enc_ref) = garble_per_gate(&c, &mut Rng::new(seed));
+            assert_eq!(gc_flight.table, gc_ref.table, "trial {trial}: tables");
+            assert_eq!(gc_flight.output_decode, gc_ref.output_decode, "trial {trial}: decode");
+            assert_eq!(enc_flight.label0, enc_ref.label0, "trial {trial}: label0");
+            assert_eq!(enc_flight.delta.0, enc_ref.delta.0, "trial {trial}: delta");
         }
     }
 

@@ -1,0 +1,237 @@
+//! Runtime-dispatched batched AES backends for the garbling PRF.
+//!
+//! The fixed-key garbling construction (Bellare et al.) was designed so
+//! the hash is nothing but raw AES throughput — which makes the block
+//! cipher backend the single hottest dial in the offline phase. This
+//! module puts every way of turning the crank behind one safe API:
+//!
+//! * [`Backend::AesNi`] — hardware AES via `std::arch::x86_64`
+//!   intrinsics, 8 blocks in flight so the `aesenc` pipeline stays full.
+//!   Selected at runtime when `cpuid` reports the `aes` feature; the
+//!   unsafe kernels are reachable only through that check.
+//! * [`Backend::SoftPipelined`] — the portable fallback: the T-table
+//!   column form of [`Aes128`](super::softaes::Aes128), round-interleaved
+//!   [`PIPELINE`](super::softaes::PIPELINE) blocks at a time.
+//! * [`Backend::SoftScalar`] — the byte-wise FIPS reference path. Never
+//!   auto-selected; kept addressable so benches can measure the scalar
+//!   baseline and tests can cross-check the fast paths against it.
+//!
+//! All three are bit-identical (AES-128 is AES-128); the cross-backend
+//! equivalence tests below and the KAT vectors in
+//! [`super::softaes`] make silent drift impossible. Dispatch happens once
+//! per [`BatchCipher`], not per call.
+
+use super::softaes::Aes128;
+
+/// Blocks per hash flight: the gather-then-hash gate loops and
+/// [`super::GarbleHash::hash_many`] feed the backend at most this many
+/// blocks at once (matches the soft path's pipeline width and keeps the
+/// AES-NI kernel's register working set bounded).
+pub const MAX_BATCH: usize = 8;
+
+/// A block-encryption strategy for the batched PRF.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Hardware AES (x86_64 AES-NI), detected at runtime.
+    AesNi,
+    /// Round-interleaved T-table software AES (portable default).
+    SoftPipelined,
+    /// Byte-wise reference software AES (benchmarks/tests only).
+    SoftScalar,
+}
+
+impl Backend {
+    /// The fastest backend this CPU can run (what [`BatchCipher::new`]
+    /// dispatches to).
+    pub fn detect() -> Backend {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_64_feature_detected!("aes") {
+                return Backend::AesNi;
+            }
+        }
+        Backend::SoftPipelined
+    }
+
+    /// Can the current CPU run this backend?
+    pub fn available(self) -> bool {
+        match self {
+            Backend::SoftPipelined | Backend::SoftScalar => true,
+            Backend::AesNi => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_64_feature_detected!("aes")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::AesNi => "aes-ni",
+            Backend::SoftPipelined => "soft-pipelined",
+            Backend::SoftScalar => "soft-scalar",
+        }
+    }
+}
+
+/// Batched AES-128 encryptor: one key schedule, one dispatch decision,
+/// and a safe `encrypt_many` whatever the CPU. Every backend produces
+/// output bit-identical to [`Aes128::encrypt_u128`].
+#[derive(Clone)]
+pub struct BatchCipher {
+    soft: Aes128,
+    backend: Backend,
+}
+
+impl BatchCipher {
+    /// Key-schedule with the best backend the CPU supports.
+    pub fn new(key: [u8; 16]) -> Self {
+        Self::with_backend(key, Backend::detect()).expect("detected backend is available")
+    }
+
+    /// Force a specific backend; `None` when the CPU can't run it (lets
+    /// cross-backend tests auto-skip instead of crashing on SIGILL).
+    pub fn with_backend(key: [u8; 16], backend: Backend) -> Option<Self> {
+        backend.available().then(|| Self { soft: Aes128::new(key), backend })
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Encrypt `blocks` in place (independent blocks, ECB-shaped — the
+    /// fixed-key hash never chains).
+    #[inline]
+    pub fn encrypt_many(&self, blocks: &mut [u128]) {
+        match self.backend {
+            Backend::SoftPipelined => self.soft.encrypt_blocks(blocks),
+            Backend::SoftScalar => {
+                for b in blocks {
+                    *b = self.soft.encrypt_u128(*b);
+                }
+            }
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `with_backend` admits AesNi only when cpuid reports
+            // the `aes` feature, so the target_feature kernel is runnable.
+            Backend::AesNi => unsafe { encrypt_many_ni(self.soft.round_keys(), blocks) },
+            #[cfg(not(target_arch = "x86_64"))]
+            Backend::AesNi => unreachable!("AesNi gated by Backend::available"),
+        }
+    }
+}
+
+/// AES-NI kernel: up to [`MAX_BATCH`] blocks in flight per chunk. The
+/// `aesenc` instruction fuses ShiftRows/SubBytes/MixColumns/AddRoundKey
+/// over the same byte layout the soft path uses (the u128 is the
+/// little-endian state byte string), so outputs are bit-identical.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "aes")]
+unsafe fn encrypt_many_ni(rk: &[u8; 176], blocks: &mut [u128]) {
+    use std::arch::x86_64::*;
+    let mut keys = [_mm_setzero_si128(); 11];
+    for (i, k) in keys.iter_mut().enumerate() {
+        *k = _mm_loadu_si128(rk.as_ptr().add(16 * i) as *const __m128i);
+    }
+    for chunk in blocks.chunks_mut(MAX_BATCH) {
+        let n = chunk.len();
+        let mut st = [_mm_setzero_si128(); MAX_BATCH];
+        for (i, s) in st.iter_mut().take(n).enumerate() {
+            let x = _mm_loadu_si128(chunk.as_ptr().add(i) as *const __m128i);
+            *s = _mm_xor_si128(x, keys[0]);
+        }
+        for key in &keys[1..10] {
+            for s in st.iter_mut().take(n) {
+                *s = _mm_aesenc_si128(*s, *key);
+            }
+        }
+        for (i, s) in st.iter().take(n).enumerate() {
+            let out = _mm_aesenclast_si128(*s, keys[10]);
+            _mm_storeu_si128(chunk.as_mut_ptr().add(i) as *mut __m128i, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    const KEY: [u8; 16] = *b"CIRCA-PIgarble01";
+
+    fn random_blocks(n: usize, seed: u64) -> Vec<u128> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.next_u128()).collect()
+    }
+
+    #[test]
+    fn soft_backends_match_scalar_reference() {
+        let scalar = Aes128::new(KEY);
+        let pipelined = BatchCipher::with_backend(KEY, Backend::SoftPipelined).unwrap();
+        for n in [1, 7, 8, 9, 64] {
+            let blocks = random_blocks(n, 1000 + n as u64);
+            let mut got = blocks.clone();
+            pipelined.encrypt_many(&mut got);
+            for (g, &b) in got.iter().zip(&blocks) {
+                assert_eq!(*g, scalar.encrypt_u128(b), "n {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn aesni_matches_soft_backends() {
+        // Cross-backend drift gate. Auto-skips on CPUs without AES-NI
+        // (the portable CI leg) and runs on the native leg.
+        let Some(ni) = BatchCipher::with_backend(KEY, Backend::AesNi) else {
+            eprintln!("aesni_matches_soft_backends: no AES-NI, skipping");
+            return;
+        };
+        let soft = BatchCipher::with_backend(KEY, Backend::SoftPipelined).unwrap();
+        let scalar = Aes128::new(KEY);
+        for n in [1, 2, 8, 11, 16, 100] {
+            let blocks = random_blocks(n, 2000 + n as u64);
+            let mut ni_out = blocks.clone();
+            let mut soft_out = blocks.clone();
+            ni.encrypt_many(&mut ni_out);
+            soft.encrypt_many(&mut soft_out);
+            assert_eq!(ni_out, soft_out, "n {n}");
+            for (g, &b) in ni_out.iter().zip(&blocks) {
+                assert_eq!(*g, scalar.encrypt_u128(b), "n {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn detect_reports_an_available_backend() {
+        let b = Backend::detect();
+        assert!(b.available());
+        assert_ne!(b, Backend::SoftScalar, "scalar must never be auto-picked");
+    }
+
+    #[test]
+    fn unavailable_backend_is_refused_not_crashed() {
+        // On x86_64 with AES-NI every backend is constructible; the
+        // contract under test is that with_backend never hands out a
+        // cipher whose kernel would fault.
+        for b in [Backend::AesNi, Backend::SoftPipelined, Backend::SoftScalar] {
+            match BatchCipher::with_backend(KEY, b) {
+                Some(c) => {
+                    let mut blocks = random_blocks(3, 7);
+                    c.encrypt_many(&mut blocks); // must not crash
+                    assert_eq!(c.backend(), b);
+                }
+                None => assert!(!b.available()),
+            }
+        }
+    }
+
+    #[test]
+    fn backend_names_distinct() {
+        assert_ne!(Backend::AesNi.name(), Backend::SoftPipelined.name());
+        assert_ne!(Backend::SoftPipelined.name(), Backend::SoftScalar.name());
+    }
+}

@@ -4,13 +4,43 @@
 //! color bit. The garbling hash is the standard fixed-key-AES
 //! construction `H(L, t) = AES_k(2L ⊕ t) ⊕ (2L ⊕ t)` (Bellare et al.,
 //! "Efficient Garbling from a Fixed-Key Blockcipher"), which is what
-//! half-gates assumes for its security proof. The block cipher is the
-//! crate's own [`softaes`] (the `aes` crate is not guaranteed in the
-//! offline vendor set).
+//! half-gates assumes for its security proof. The key `k` is a public
+//! constant — all the secrecy lives in the random labels — so one key
+//! schedule serves the whole process and the cipher can be swapped for
+//! whatever runs fastest without touching the security argument.
+//!
+//! # Dual-backend design
+//!
+//! The AES itself lives behind two layers:
+//!
+//! * [`softaes`] — the crate's own AES-128 (the `aes` crate is not
+//!   guaranteed in the offline vendor set): a byte-wise FIPS reference
+//!   path plus a round-interleaved T-table fast path.
+//! * [`backend`] — the batched dispatch layer: [`backend::BatchCipher`]
+//!   picks AES-NI (`cpuid`-detected, `std::arch` kernels behind a safe
+//!   API) or the pipelined soft path once at construction, and encrypts
+//!   whole flights of blocks per call.
+//!
+//! Dispatch rules: [`backend::Backend::detect`] returns AES-NI whenever
+//! the CPU reports the `aes` feature, else the pipelined soft path; the
+//! scalar reference path is never auto-selected. Every backend computes
+//! the same function — AES-128 — so garbled material is **bit-identical**
+//! across backends and machines; the KAT vectors in [`softaes`] and the
+//! cross-backend tests in [`backend`] pin that down, which is what lets a
+//! dealer with hardware AES serve an evaluator without it.
+//!
+//! Hot paths hash whole flights: [`GarbleHash::hash_many`] consumes
+//! caller-gathered pre-images (`2L ⊕ t` blocks, see
+//! [`GarbleHash::input_block`]) so the gate loops in [`crate::gc`] can
+//! gather-hash-scatter across gates instead of hashing one gate at a
+//! time; [`GarbleHash::hash4`]/[`GarbleHash::hash2`] ride the same
+//! batched cipher.
 
+pub mod backend;
 pub mod softaes;
 
 use crate::util::Rng;
+use backend::BatchCipher;
 use softaes::Aes128;
 
 /// A 128-bit wire label.
@@ -44,15 +74,15 @@ impl Label {
     }
 
     /// Doubling in GF(2^128) (the `2L` in the fixed-key hash); standard
-    /// carry-less shift with the GCM reduction polynomial.
+    /// carry-less shift with the GCM reduction polynomial. Branchless:
+    /// the reduction constant is selected by a mask computed from the
+    /// carried-out bit (constant-time hygiene, and one less branch in the
+    /// hottest inline of the garbling loop).
     #[inline]
     pub fn double(self) -> Label {
-        let carry = self.0 >> 127;
-        let mut v = self.0 << 1;
-        if carry == 1 {
-            v ^= 0x87; // x^128 = x^7 + x^2 + x + 1
-        }
-        Label(v)
+        let carry = self.0 >> 127; // 0 or 1
+        // x^128 = x^7 + x^2 + x + 1; 0u128 - 1 = all-ones mask.
+        Label((self.0 << 1) ^ (0x87 & 0u128.wrapping_sub(carry)))
     }
 
     pub fn to_bytes(self) -> [u8; 16] {
@@ -84,11 +114,21 @@ impl Delta {
 
 /// Fixed-key AES hasher used by the garbler and evaluator.
 ///
-/// One instance is created per garbling session; the key is public (the
-/// security comes from the random labels, per the fixed-key model).
+/// The key is public (the security comes from the random labels, per the
+/// fixed-key model). Holds two forms of the same cipher: a scalar
+/// reference path for single hashes (also the oracle the batched paths
+/// are tested against) and a [`BatchCipher`] that the flight-hashing
+/// paths dispatch through.
 pub struct GarbleHash {
-    cipher: Aes128,
+    /// Scalar reference cipher (single-block [`GarbleHash::hash`]).
+    scalar: Aes128,
+    /// Batched cipher behind the runtime-dispatched backend.
+    batch: BatchCipher,
 }
+
+/// The fixed public garbling key ("CIRCA-PIgarble01"). Any constant works
+/// in the fixed-key model; changing it invalidates all garbled material.
+const GARBLE_KEY: [u8; 16] = *b"CIRCA-PIgarble01";
 
 impl GarbleHash {
     /// Process-wide shared instance — the key is a public constant, so
@@ -99,35 +139,73 @@ impl GarbleHash {
         SHARED.get_or_init(GarbleHash::new)
     }
 
-    /// Standard instantiation with a fixed public key.
+    /// Standard instantiation with the fixed public key and the fastest
+    /// backend the CPU supports.
     pub fn new() -> Self {
-        // Any fixed constant works in the fixed-key model.
-        let key = [
-            0x43, 0x49, 0x52, 0x43, 0x41, 0x2d, 0x50, 0x49, // "CIRCA-PI"
-            0x67, 0x61, 0x72, 0x62, 0x6c, 0x65, 0x30, 0x31, // "garble01"
-        ];
-        Self { cipher: Aes128::new(key) }
+        Self { scalar: Aes128::new(GARBLE_KEY), batch: BatchCipher::new(GARBLE_KEY) }
     }
 
-    /// `H(L, tweak) = AES(2L ⊕ tweak) ⊕ (2L ⊕ tweak)`.
+    /// Instantiation with a forced backend (benchmarks and cross-backend
+    /// tests); `None` when the CPU can't run it.
+    pub fn with_backend(b: backend::Backend) -> Option<Self> {
+        Some(Self {
+            scalar: Aes128::new(GARBLE_KEY),
+            batch: BatchCipher::with_backend(GARBLE_KEY, b)?,
+        })
+    }
+
+    /// The backend the batched paths dispatch to.
+    pub fn backend(&self) -> backend::Backend {
+        self.batch.backend()
+    }
+
+    /// The hash pre-image `2L ⊕ tweak` — what callers gather into flight
+    /// buffers for [`GarbleHash::hash_many`].
+    #[inline]
+    pub fn input_block(label: Label, tweak: u64) -> u128 {
+        label.double().0 ^ (tweak as u128)
+    }
+
+    /// `H(L, tweak) = AES(2L ⊕ tweak) ⊕ (2L ⊕ tweak)`, through the scalar
+    /// reference path.
     #[inline]
     pub fn hash(&self, label: Label, tweak: u64) -> Label {
-        let x = label.double().0 ^ (tweak as u128);
-        Label(self.cipher.encrypt_u128(x) ^ x)
+        let x = Self::input_block(label, tweak);
+        Label(self.scalar.encrypt_u128(x) ^ x)
     }
 
-    /// Hash four labels with explicit tweaks in one call (hot path of
-    /// garbling: the four hashes of one half-gates AND gate).
+    /// Batched Davies–Meyer over caller-gathered pre-images, in place:
+    /// `xs[i] ← AES(xs[i]) ⊕ xs[i]`. Feed it `input_block(L, t)` values;
+    /// each [`backend::MAX_BATCH`]-block flight goes through the batched
+    /// cipher in one call. This is the engine under the gather-then-hash
+    /// gate loops in [`crate::gc::garble`] and [`crate::gc::eval`].
+    pub fn hash_many(&self, xs: &mut [u128]) {
+        let mut save = [0u128; backend::MAX_BATCH];
+        for chunk in xs.chunks_mut(backend::MAX_BATCH) {
+            save[..chunk.len()].copy_from_slice(chunk);
+            self.batch.encrypt_many(chunk);
+            for (y, x) in chunk.iter_mut().zip(&save) {
+                *y ^= *x;
+            }
+        }
+    }
+
+    /// Hash four labels with explicit tweaks in one call (the four hashes
+    /// of one half-gates AND gate), through the batched backend.
     #[inline]
     pub fn hash4(&self, labels: [Label; 4], tweaks: [u64; 4]) -> [Label; 4] {
-        core::array::from_fn(|i| self.hash(labels[i], tweaks[i]))
+        let mut xs: [u128; 4] = core::array::from_fn(|i| Self::input_block(labels[i], tweaks[i]));
+        self.hash_many(&mut xs);
+        core::array::from_fn(|i| Label(xs[i]))
     }
 
     /// Hash two labels in one call (the two hashes of one AND-gate
-    /// evaluation).
+    /// evaluation), through the batched backend.
     #[inline]
     pub fn hash2(&self, l0: Label, t0: u64, l1: Label, t1: u64) -> [Label; 2] {
-        [self.hash(l0, t0), self.hash(l1, t1)]
+        let mut xs = [Self::input_block(l0, t0), Self::input_block(l1, t1)];
+        self.hash_many(&mut xs);
+        [Label(xs[0]), Label(xs[1])]
     }
 }
 
@@ -192,6 +270,47 @@ mod tests {
         let batch = h.hash4(ls, [100, 101, 102, 103]);
         for i in 0..4 {
             assert_eq!(batch[i], h.hash(ls[i], 100 + i as u64));
+        }
+    }
+
+    #[test]
+    fn hash_many_matches_hash() {
+        // The batched flight path (whatever backend was detected) against
+        // the scalar reference path, across ragged flight boundaries.
+        let h = GarbleHash::new();
+        let mut rng = Rng::new(8);
+        let labels: Vec<Label> = (0..37).map(|_| Label::random(&mut rng)).collect();
+        let mut xs: Vec<u128> = labels
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| GarbleHash::input_block(l, i as u64))
+            .collect();
+        h.hash_many(&mut xs);
+        for (i, (&x, &l)) in xs.iter().zip(&labels).enumerate() {
+            assert_eq!(Label(x), h.hash(l, i as u64), "block {i}");
+        }
+    }
+
+    #[test]
+    fn forced_backends_hash_identically() {
+        use super::backend::Backend;
+        let reference = GarbleHash::with_backend(Backend::SoftScalar).unwrap();
+        let mut rng = Rng::new(9);
+        let labels: Vec<Label> = (0..20).map(|_| Label::random(&mut rng)).collect();
+        for b in [Backend::SoftPipelined, Backend::AesNi] {
+            let Some(h) = GarbleHash::with_backend(b) else {
+                eprintln!("forced_backends_hash_identically: {} unavailable, skipping", b.name());
+                continue;
+            };
+            let mut xs: Vec<u128> = labels
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| GarbleHash::input_block(l, i as u64))
+                .collect();
+            h.hash_many(&mut xs);
+            for (i, (&x, &l)) in xs.iter().zip(&labels).enumerate() {
+                assert_eq!(Label(x), reference.hash(l, i as u64), "{} block {i}", b.name());
+            }
         }
     }
 

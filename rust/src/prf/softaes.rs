@@ -3,9 +3,22 @@
 //! The `aes` crate is not guaranteed in the offline vendor set, so the
 //! garbling PRF carries its own block cipher. Only encryption is needed
 //! (the fixed-key hash never decrypts), the key is public, and inputs are
-//! uniformly random wire labels — so a straightforward table-free S-box
-//! implementation is both sufficient and side-channel-irrelevant here.
-//! Verified against the FIPS-197 C.1 and SP 800-38A ECB vectors below.
+//! uniformly random wire labels — so table lookups keyed by the state are
+//! side-channel-irrelevant here (nothing secret flows through them).
+//!
+//! Two code paths share one key schedule and are bit-identical:
+//!
+//! * [`Aes128::encrypt_block`] — the byte-wise FIPS reference form. Slow,
+//!   obviously correct, and the oracle everything else is tested against.
+//! * [`Aes128::encrypt_blocks`] — the throughput form used by the batched
+//!   garbling backends ([`super::backend`]): the state is held as four
+//!   little-endian `u32` columns, a round is 16 T-table lookups, and up to
+//!   [`PIPELINE`] blocks are round-interleaved so the table loads of
+//!   independent blocks overlap (software pipelining, the same trick the
+//!   fixed-key garbling construction was designed to exploit on AES-NI).
+//!
+//! Verified against the FIPS-197 appendix B / C.1 and SP 800-38A ECB
+//! vectors below, on both paths.
 
 /// The AES S-box.
 const SBOX: [u8; 256] = [
@@ -34,15 +47,40 @@ const RCON: [u8; 10] = [0x01, 0x02, 0x04, 0x08, 0x10, 0x20, 0x40, 0x80, 0x1b, 0x
 
 /// Multiply by x in GF(2^8) mod x^8 + x^4 + x^3 + x + 1.
 #[inline(always)]
-fn xtime(b: u8) -> u8 {
+const fn xtime(b: u8) -> u8 {
     (b << 1) ^ (0x1b & (((b >> 7) & 1).wrapping_neg()))
 }
+
+/// Blocks round-interleaved per flight in [`Aes128::encrypt_blocks`].
+pub const PIPELINE: usize = 8;
+
+/// Combined SubBytes+MixColumns table for the column form: `T0[x]` packs
+/// the column `(2s, s, s, 3s)` with `s = SBOX[x]` as a little-endian u32
+/// (byte `r` = state row `r`). The other three tables are byte rotations:
+/// `T_r = T0.rotate_left(8·r)`.
+const fn build_t0() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let s = SBOX[i];
+        let s2 = xtime(s);
+        let s3 = s2 ^ s;
+        t[i] = (s2 as u32) | ((s as u32) << 8) | ((s as u32) << 16) | ((s3 as u32) << 24);
+        i += 1;
+    }
+    t
+}
+
+static T0: [u32; 256] = build_t0();
 
 /// AES-128 encryptor with a precomputed key schedule.
 #[derive(Clone)]
 pub struct Aes128 {
     /// 11 round keys, flat, in FIPS byte order.
     rk: [u8; 176],
+    /// The same round keys as little-endian u32 columns (`rk32[4r + c]` =
+    /// column `c` of round `r`), for the column-form fast path.
+    rk32: [u32; 44],
 }
 
 impl Aes128 {
@@ -70,7 +108,18 @@ impl Aes128 {
                 rk[4 * i + j] = rk[4 * (i - 4) + j] ^ t[j];
             }
         }
-        Self { rk }
+        let mut rk32 = [0u32; 44];
+        for (i, c) in rk32.iter_mut().enumerate() {
+            *c = u32::from_le_bytes([rk[4 * i], rk[4 * i + 1], rk[4 * i + 2], rk[4 * i + 3]]);
+        }
+        Self { rk, rk32 }
+    }
+
+    /// The expanded key schedule (the key is a public constant in the
+    /// fixed-key garbling model); the AES-NI backend loads its round keys
+    /// from here so both backends share one schedule.
+    pub(crate) fn round_keys(&self) -> &[u8; 176] {
+        &self.rk
     }
 
     /// Encrypt one block in place. State layout: `s[r + 4c]` (the FIPS
@@ -115,6 +164,67 @@ impl Aes128 {
         self.encrypt_block(&mut b);
         u128::from_le_bytes(b)
     }
+
+    /// Encrypt a slice of blocks in place through the column/T-table fast
+    /// path, round-interleaving up to [`PIPELINE`] blocks per flight.
+    /// Bit-identical to calling [`Aes128::encrypt_u128`] per block.
+    pub fn encrypt_blocks(&self, blocks: &mut [u128]) {
+        for chunk in blocks.chunks_mut(PIPELINE) {
+            self.encrypt_flight(chunk);
+        }
+    }
+
+    /// One flight of at most [`PIPELINE`] blocks, rounds outermost so the
+    /// per-block table loads of a round can overlap.
+    fn encrypt_flight(&self, blocks: &mut [u128]) {
+        debug_assert!(blocks.len() <= PIPELINE);
+        let n = blocks.len();
+        // State: four little-endian u32 columns per block. The u128 is the
+        // little-endian byte string of the FIPS state (bytes fill
+        // columns), so column `c` is simply bits `32c..32c+32`.
+        let mut st = [[0u32; 4]; PIPELINE];
+        for (s, &b) in st.iter_mut().zip(blocks.iter()) {
+            *s = [b as u32, (b >> 32) as u32, (b >> 64) as u32, (b >> 96) as u32];
+        }
+        for s in st.iter_mut().take(n) {
+            for (c, k) in s.iter_mut().zip(&self.rk32[..4]) {
+                *c ^= *k;
+            }
+        }
+        for round in 1..10 {
+            let rk = &self.rk32[4 * round..4 * round + 4];
+            for s in st.iter_mut().take(n) {
+                // New column j mixes the shifted rows: row r comes from
+                // old column (j+r)%4; T_r = rotl8^r(T0) (see build_t0).
+                let old = *s;
+                for (j, c) in s.iter_mut().enumerate() {
+                    *c = T0[(old[j] & 0xff) as usize]
+                        ^ T0[((old[(j + 1) & 3] >> 8) & 0xff) as usize].rotate_left(8)
+                        ^ T0[((old[(j + 2) & 3] >> 16) & 0xff) as usize].rotate_left(16)
+                        ^ T0[(old[(j + 3) & 3] >> 24) as usize].rotate_left(24)
+                        ^ rk[j];
+                }
+            }
+        }
+        // Final round: SubBytes + ShiftRows + AddRoundKey, no MixColumns.
+        let rk = &self.rk32[40..44];
+        for s in st.iter_mut().take(n) {
+            let old = *s;
+            for (j, c) in s.iter_mut().enumerate() {
+                *c = (SBOX[(old[j] & 0xff) as usize] as u32)
+                    | ((SBOX[((old[(j + 1) & 3] >> 8) & 0xff) as usize] as u32) << 8)
+                    | ((SBOX[((old[(j + 2) & 3] >> 16) & 0xff) as usize] as u32) << 16)
+                    | ((SBOX[(old[(j + 3) & 3] >> 24) as usize] as u32) << 24);
+                *c ^= rk[j];
+            }
+        }
+        for (b, s) in blocks.iter_mut().zip(&st) {
+            *b = (s[0] as u128)
+                | ((s[1] as u128) << 32)
+                | ((s[2] as u128) << 64)
+                | ((s[3] as u128) << 96);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -138,18 +248,91 @@ mod tests {
     }
 
     #[test]
-    fn sp800_38a_ecb_vector() {
+    fn fips197_appendix_b_vector() {
+        // The worked example of the spec body (appendix B).
         let key = [
             0x2b, 0x7e, 0x15, 0x16, 0x28, 0xae, 0xd2, 0xa6, 0xab, 0xf7, 0x15, 0x88, 0x09, 0xcf,
             0x4f, 0x3c,
         ];
         let aes = Aes128::new(key);
         let mut block = [
-            0x6b, 0xc1, 0xbe, 0xe2, 0x2e, 0x40, 0x9f, 0x96, 0xe9, 0x3d, 0x7e, 0x11, 0x73, 0x93,
-            0x17, 0x2a,
+            0x32, 0x43, 0xf6, 0xa8, 0x88, 0x5a, 0x30, 0x8d, 0x31, 0x31, 0x98, 0xa2, 0xe0, 0x37,
+            0x07, 0x34,
         ];
         aes.encrypt_block(&mut block);
-        assert_eq!(hex(&block), "3ad77bb40d7a3660a89ecaf32466ef97");
+        assert_eq!(hex(&block), "3925841d02dc09fbdc118597196a0b32");
+    }
+
+    /// The four NIST SP 800-38A F.1.1 ECB-AES128 plaintext blocks.
+    const SP800_38A_PLAIN: [[u8; 16]; 4] = [
+        [
+            0x6b, 0xc1, 0xbe, 0xe2, 0x2e, 0x40, 0x9f, 0x96, 0xe9, 0x3d, 0x7e, 0x11, 0x73, 0x93,
+            0x17, 0x2a,
+        ],
+        [
+            0xae, 0x2d, 0x8a, 0x57, 0x1e, 0x03, 0xac, 0x9c, 0x9e, 0xb7, 0x6f, 0xac, 0x45, 0xaf,
+            0x8e, 0x51,
+        ],
+        [
+            0x30, 0xc8, 0x1c, 0x46, 0xa3, 0x5c, 0xe4, 0x11, 0xe5, 0xfb, 0xc1, 0x19, 0x1a, 0x0a,
+            0x52, 0xef,
+        ],
+        [
+            0xf6, 0x9f, 0x24, 0x45, 0xdf, 0x4f, 0x9b, 0x17, 0xad, 0x2b, 0x41, 0x7b, 0xe6, 0x6c,
+            0x37, 0x10,
+        ],
+    ];
+
+    const SP800_38A_CIPHER: [&str; 4] = [
+        "3ad77bb40d7a3660a89ecaf32466ef97",
+        "f5d3d58503b9699de785895a96fdbaaf",
+        "43b1cd7f598ece23881b00e3ed030688",
+        "7b0c785e27e8ad3f8223207104725dd4",
+    ];
+
+    fn sp800_38a_key() -> [u8; 16] {
+        [
+            0x2b, 0x7e, 0x15, 0x16, 0x28, 0xae, 0xd2, 0xa6, 0xab, 0xf7, 0x15, 0x88, 0x09, 0xcf,
+            0x4f, 0x3c,
+        ]
+    }
+
+    #[test]
+    fn sp800_38a_ecb_vectors() {
+        let aes = Aes128::new(sp800_38a_key());
+        for (plain, want) in SP800_38A_PLAIN.iter().zip(SP800_38A_CIPHER) {
+            let mut block = *plain;
+            aes.encrypt_block(&mut block);
+            assert_eq!(hex(&block), want);
+        }
+    }
+
+    #[test]
+    fn pipelined_path_matches_kat_vectors() {
+        // The whole SP 800-38A set through one round-interleaved flight.
+        let aes = Aes128::new(sp800_38a_key());
+        let mut blocks: Vec<u128> =
+            SP800_38A_PLAIN.iter().map(|p| u128::from_le_bytes(*p)).collect();
+        aes.encrypt_blocks(&mut blocks);
+        for (got, want) in blocks.iter().zip(SP800_38A_CIPHER) {
+            assert_eq!(hex(&got.to_le_bytes()), want);
+        }
+    }
+
+    #[test]
+    fn pipelined_path_matches_scalar_on_random_blocks() {
+        // Every flight size 1..=PIPELINE plus a ragged multi-flight slice
+        // must agree with the byte-wise reference path bit for bit.
+        let aes = Aes128::new(*b"CIRCA-PIgarble01");
+        let mut rng = crate::util::Rng::new(0xAE5);
+        for len in (1..=PIPELINE).chain([PIPELINE + 3, 3 * PIPELINE + 7]) {
+            let blocks: Vec<u128> = (0..len).map(|_| rng.next_u128()).collect();
+            let mut fast = blocks.clone();
+            aes.encrypt_blocks(&mut fast);
+            for (f, &b) in fast.iter().zip(&blocks) {
+                assert_eq!(*f, aes.encrypt_u128(b), "len {len}");
+            }
+        }
     }
 
     #[test]

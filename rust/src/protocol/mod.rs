@@ -35,5 +35,7 @@ pub mod online;
 pub mod server;
 
 pub use channel::Channel;
-pub use offline::{offline_relu_layer, ClientReluMaterial, ServerReluMaterial};
+pub use offline::{
+    offline_relu_layer, offline_relu_layer_mt, ClientReluMaterial, ServerReluMaterial,
+};
 pub use online::{online_relu_layer, OnlineReluStats};

@@ -12,6 +12,21 @@
 //! contiguous table buffer + one contiguous label arena per layer, so
 //! `offline_bytes` falls straight out of buffer lengths and the dealer
 //! loop allocates O(#layer), not O(#ReLU).
+//!
+//! # Column-wise RNG schedule
+//!
+//! Randomness is drawn **column by column**, not ReLU by ReLU: the
+//! layer's parent RNG is forked once per material column — garbled labels
+//! ([`COL_GARBLE`]), the client's sign shares ([`COL_RV`]), output masks
+//! ([`COL_ROUT`]), OT ([`COL_OT`], reserved), Beaver triples
+//! ([`COL_TRIPLE`]) — in that fixed order, and each column's draws come
+//! only from its own fork. That makes whole-layer dealing parallel *and*
+//! reproducible: the garble column rides
+//! [`LayerGcBatch::garble_chunked`]'s per-chunk forks across dealer
+//! threads, the cheap scalar columns fill sequentially, and the material
+//! is a function of the seed alone — bit-identical for every thread
+//! count (the contract `garble_chunked` established, now extended to the
+//! whole layer deal via [`offline_relu_layer_mt`]).
 
 use crate::beaver::{self, TripleShare};
 use crate::circuits::spec::{FaultMode, ReluVariant, VariantSpec};
@@ -90,7 +105,22 @@ impl ServerReluMaterial {
     }
 }
 
-/// Run the offline phase for one ReLU layer.
+/// Fork tag of the garbled-label column (feeds
+/// [`LayerGcBatch::garble_chunked`]'s per-chunk sub-forks).
+pub const COL_GARBLE: u64 = 1;
+/// Fork tag of the client sign-share column (`r_v`).
+pub const COL_RV: u64 = 2;
+/// Fork tag of the output-mask column (`r_out`).
+pub const COL_ROUT: u64 = 3;
+/// Fork tag of the OT column. The simulated offline OT draws no
+/// randomness today, but the stream is reserved so a real OT (e.g. IKNP
+/// sender randomness) can consume it later without shifting the other
+/// columns' draws.
+pub const COL_OT: u64 = 4;
+/// Fork tag of the Beaver-triple column.
+pub const COL_TRIPLE: u64 = 5;
+
+/// Run the offline phase for one ReLU layer on one thread.
 ///
 /// `xc`: the client's (offline-known) shares of the layer's ReLU inputs.
 /// Returns both parties' material; the byte ledger for offline traffic is
@@ -100,39 +130,62 @@ pub fn offline_relu_layer(
     xc: &[Fp],
     rng: &mut Rng,
 ) -> (ClientReluMaterial, ServerReluMaterial) {
+    offline_relu_layer_mt(variant, xc, rng, 1)
+}
+
+/// [`offline_relu_layer`] with the garble column split across up to
+/// `n_threads` dealer threads. Output is **bit-identical for every
+/// thread count** (the column-wise RNG schedule above): a dealer box can
+/// use all its cores and still ship the exact material a single-threaded
+/// inline deal from the same seed would produce.
+pub fn offline_relu_layer_mt(
+    variant: ReluVariant,
+    xc: &[Fp],
+    rng: &mut Rng,
+    n_threads: usize,
+) -> (ClientReluMaterial, ServerReluMaterial) {
     let n = xc.len();
     let spec = variant.spec();
     let circuit = spec.build_circuit();
 
+    // Column forks, drawn from the parent in this fixed order — the
+    // schedule contract that `tests/batch_equivalence.rs` re-derives.
+    let mut rng_garble = rng.fork(COL_GARBLE);
+    let mut rng_rv = rng.fork(COL_RV);
+    let mut rng_rout = rng.fork(COL_ROUT);
+    let _rng_ot = rng.fork(COL_OT);
+    let mut rng_triple = rng.fork(COL_TRIPLE);
+
+    // Garble column: the layer's one heavy column, chunk-parallel.
     let mut gc = LayerGcBatch::new(circuit, n);
     let mut encodings = LayerEncodingBatch::new(spec.n_inputs(), n);
+    gc.garble_chunked(&mut encodings, n, &mut rng_garble, n_threads);
+
+    // Scalar columns: one contiguous draw run per column.
+    let r_v: Vec<Fp> = (0..n).map(|_| random_fp(&mut rng_rv)).collect();
+    let r_out: Vec<Fp> = (0..n).map(|_| random_fp(&mut rng_rout)).collect();
+
+    // OT column: label selection is deterministic given the encodings
+    // (the simulated OT draws nothing — see COL_OT).
     let mut client_labels: Vec<Label> = Vec::with_capacity(n * spec.n_client_inputs);
-    let mut server_decode: Vec<bool> = Vec::with_capacity(n * spec.n_outputs);
-    let mut r_v = Vec::with_capacity(n);
-    let mut r_out = Vec::with_capacity(n);
-    let mut triples_c = Vec::new();
-    let mut triples_s = Vec::new();
-    let mut scratch = Vec::new();
-
     for i in 0..n {
-        // One garbling of the shared template per ReLU (fresh labels).
-        gc.garble_next(&mut encodings, rng, &mut scratch);
-
-        let rv = random_fp(rng);
-        let rout = random_fp(rng);
-        let bits = spec.client_bits(xc[i], rv, rout);
+        let bits = spec.client_bits(xc[i], r_v[i], r_out[i]);
         ot::ot_choose_into(encodings.view(i), 0, &bits, &mut client_labels);
-
-        if spec.uses_beaver() {
-            let t = beaver::gen_triple(rng);
-            triples_c.push(t.p1);
-            triples_s.push(t.p2);
-        }
-
-        server_decode.extend_from_slice(gc.decode_of(i));
-        r_v.push(rv);
-        r_out.push(rout);
     }
+
+    // Triple column.
+    let (triples_c, triples_s): (Vec<TripleShare>, Vec<TripleShare>) = if spec.uses_beaver() {
+        (0..n)
+            .map(|_| {
+                let t = beaver::gen_triple(&mut rng_triple);
+                (t.p1, t.p2)
+            })
+            .unzip()
+    } else {
+        (Vec::new(), Vec::new())
+    };
+
+    let server_decode = gc.output_decode().to_vec();
 
     // The byte ledger falls out of the buffer lengths: garbled tables +
     // OT'd client labels + dealer-shipped triples (3 field elems/party).
@@ -197,6 +250,21 @@ mod tests {
         assert_eq!(c.gc.table_bytes(), 6 * c.gc.and_stride() * 32);
         assert_eq!(s.encodings.label_bytes(), 6 * c.spec.n_inputs() * 16);
         assert_eq!(c.gc.output_decode().len(), 6 * c.spec.n_outputs);
+    }
+
+    #[test]
+    fn column_schedule_thread_invariant_smoke() {
+        // Full sweep lives in tests/offline_schedule.rs; this pins the
+        // contract next to the code.
+        let mut rng = Rng::new(77);
+        let xc: Vec<Fp> = (0..10).map(|_| random_fp(&mut rng)).collect();
+        let (c1, s1) = offline_relu_layer_mt(circa_variant(8), &xc, &mut Rng::new(5), 1);
+        let (c4, s4) = offline_relu_layer_mt(circa_variant(8), &xc, &mut Rng::new(5), 4);
+        assert_eq!(c1.gc.tables(), c4.gc.tables());
+        assert_eq!(c1.client_labels, c4.client_labels);
+        assert_eq!(c1.r_v, c4.r_v);
+        assert_eq!(c1.r_out, c4.r_out);
+        assert_eq!(s1.encodings.label0(), s4.encodings.label0());
     }
 
     #[test]

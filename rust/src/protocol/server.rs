@@ -8,7 +8,7 @@ use super::channel::Channel;
 use super::client::{run_client, ClientLayer, ClientNet};
 use super::linear::{offline_linear, online_linear, LinearOp};
 use super::messages::Message;
-use super::offline::{offline_relu_layer, ServerReluMaterial};
+use super::offline::ServerReluMaterial;
 use super::online::{decode_server_shares, encode_server_labels, OnlineReluStats};
 use crate::beaver;
 use crate::circuits::spec::ReluVariant;
@@ -26,6 +26,20 @@ pub enum ServerLayer {
 /// The server's offline-prepared network.
 pub struct ServerNet {
     pub layers: Vec<ServerLayer>,
+}
+
+impl ServerNet {
+    /// Total ReLUs across the network — the denominator of the dealer's
+    /// throughput metric (ReLUs are *the* offline cost axis).
+    pub fn n_relus(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                ServerLayer::Relu { mat, .. } => mat.n(),
+                ServerLayer::Linear { .. } => 0,
+            })
+            .sum()
+    }
 }
 
 /// Statistics of one online inference, measured server-side.
@@ -69,6 +83,19 @@ impl NetworkPlan {
 /// HE-simulated linear precomputes, garbled circuits, OTs, and triples
 /// for every layer. Returns both parties' materials plus offline bytes.
 pub fn offline_network(plan: &NetworkPlan, rng: &mut Rng) -> (ClientNet, ServerNet, u64) {
+    offline_network_mt(plan, rng, 1)
+}
+
+/// [`offline_network`] with each ReLU layer's garble column split across
+/// up to `deal_threads` threads
+/// ([`super::offline::offline_relu_layer_mt`]'s column-wise schedule).
+/// Output is bit-identical for every thread count, so dealers can scale
+/// across cores without changing what they ship.
+pub fn offline_network_mt(
+    plan: &NetworkPlan,
+    rng: &mut Rng,
+    deal_threads: usize,
+) -> (ClientNet, ServerNet, u64) {
     let mut client_layers = Vec::new();
     let mut server_layers = Vec::new();
     let mut offline_bytes = 0u64;
@@ -88,7 +115,8 @@ pub fn offline_network(plan: &NetworkPlan, rng: &mut Rng) -> (ClientNet, ServerN
         if !is_last {
             // ReLU layer: the client's x-share is offline-known, so all
             // offline ReLU material can be prepared now.
-            let (cm, sm) = offline_relu_layer(plan.variant, &x_share, rng);
+            let (cm, sm) =
+                super::offline::offline_relu_layer_mt(plan.variant, &x_share, rng, deal_threads);
             offline_bytes += cm.offline_bytes;
             // The client's output share of this ReLU (r_out) becomes the
             // mask of the next linear layer's input — after the client's

@@ -14,15 +14,17 @@
 //!
 //! The handshake compares manifests structurally (variant, layer dims,
 //! rescale schedule, fingerprint); a mismatch is rejected before any
-//! material moves. Sessions are dealt with [`offline_network`] — the
-//! exact same code path as the inline pool deal — so material fetched
-//! from a dealer with seed `s` is bit-identical to an inline deal from
-//! the same RNG stream.
+//! material moves. Sessions are dealt with
+//! [`crate::protocol::server::offline_network_mt`] — the exact same code
+//! path as the inline pool deal — and the column-wise RNG schedule makes
+//! the material a function of the seed alone, so a dealer fanning one
+//! session across many threads still ships bits identical to an inline
+//! single-threaded deal from the same RNG stream.
 
 use super::codec::{self, SessionManifest};
 use super::frame::{Channel, Framed, MemChannel, MsgType, TcpChannel};
 use crate::coordinator::pool::Session;
-use crate::protocol::server::{offline_network, NetworkPlan};
+use crate::protocol::server::NetworkPlan;
 use crate::util::bytes::{Reader, Writer};
 use crate::util::error::{Context, Result};
 use crate::util::Rng;
@@ -36,16 +38,33 @@ use std::thread::JoinHandle;
 /// pinning a dealer thread forever).
 pub const MAX_SESSIONS_PER_REQUEST: u32 = 4096;
 
-/// Deal one full session (both parties' nets) from the dealer's RNG.
+/// Deal one full session (both parties' nets) from the dealer's RNG on
+/// one thread.
 pub fn deal_session(plan: &NetworkPlan, rng: &mut Rng) -> Session {
-    let (client, server, offline_bytes) = offline_network(plan, rng);
+    deal_session_mt(plan, rng, 1)
+}
+
+/// [`deal_session`] with the per-layer garble columns split across up to
+/// `deal_threads` threads (the column-wise schedule in
+/// [`crate::protocol::offline`]). Bit-identical output for every thread
+/// count, so a multi-core dealer ships exactly what an inline
+/// single-threaded deal from the same seed would.
+pub fn deal_session_mt(plan: &NetworkPlan, rng: &mut Rng, deal_threads: usize) -> Session {
+    let (client, server, offline_bytes) =
+        crate::protocol::server::offline_network_mt(plan, rng, deal_threads);
     Session { client, server, offline_bytes }
 }
 
-/// Serve one dealer connection until `Bye` or peer close. Returns `Ok`
-/// on an orderly goodbye, `Err` on protocol violations or transport
-/// failure (callers serving many connections just log and move on).
-pub fn serve_connection(mut framed: Framed, plan: &NetworkPlan, rng: &mut Rng) -> Result<()> {
+/// Serve one dealer connection until `Bye` or peer close, dealing each
+/// session across up to `deal_threads` threads. Returns `Ok` on an
+/// orderly goodbye, `Err` on protocol violations or transport failure
+/// (callers serving many connections just log and move on).
+pub fn serve_connection(
+    mut framed: Framed,
+    plan: &NetworkPlan,
+    rng: &mut Rng,
+    deal_threads: usize,
+) -> Result<()> {
     let local = SessionManifest::of_plan(plan);
     let hello = framed.recv()?;
     ensure!(hello.msg_type == MsgType::Hello, "expected Hello, got {:?}", hello.msg_type);
@@ -75,7 +94,7 @@ pub fn serve_connection(mut framed: Framed, plan: &NetworkPlan, rng: &mut Rng) -
                     "bad session count {count}"
                 );
                 for _ in 0..count {
-                    let session = deal_session(plan, rng);
+                    let session = deal_session_mt(plan, rng, deal_threads);
                     framed.send(MsgType::Session, &codec::encode_session(&session))?;
                 }
             }
@@ -170,16 +189,18 @@ impl RemoteDealer {
     }
 }
 
-/// Spawn a dealer thread serving one in-memory duplex channel. Returns
-/// the coordinator-side endpoint and the dealer thread handle.
+/// Spawn a dealer thread serving one in-memory duplex channel, dealing
+/// each session across up to `deal_threads` threads. Returns the
+/// coordinator-side endpoint and the dealer thread handle.
 pub fn spawn_mem_dealer(
     plan: Arc<NetworkPlan>,
     seed: u64,
+    deal_threads: usize,
 ) -> (Box<dyn Channel>, JoinHandle<()>) {
     let (coord_end, dealer_end) = MemChannel::pair();
     let handle = std::thread::spawn(move || {
         let mut rng = Rng::new(seed);
-        let _ = serve_connection(Framed::new(Box::new(dealer_end)), &plan, &mut rng);
+        let _ = serve_connection(Framed::new(Box::new(dealer_end)), &plan, &mut rng, deal_threads);
     });
     (Box::new(coord_end), handle)
 }
@@ -212,8 +233,14 @@ impl DealerHandle {
 /// Bind `addr` (e.g. `127.0.0.1:0`) and serve dealer connections until
 /// stopped. Connection `c` deals from `Rng::new(seed ^ c·φ)` — the same
 /// per-thread stream derivation the inline pool uses, so a given
-/// connection's material is reproducible from the seed.
-pub fn spawn_tcp_dealer(addr: &str, plan: Arc<NetworkPlan>, seed: u64) -> Result<DealerHandle> {
+/// connection's material is reproducible from the seed (and, under the
+/// column schedule, independent of `deal_threads`).
+pub fn spawn_tcp_dealer(
+    addr: &str,
+    plan: Arc<NetworkPlan>,
+    seed: u64,
+    deal_threads: usize,
+) -> Result<DealerHandle> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
     let local = listener.local_addr().context("local addr")?;
     let stop = Arc::new(AtomicBool::new(false));
@@ -230,7 +257,7 @@ pub fn spawn_tcp_dealer(addr: &str, plan: Arc<NetworkPlan>, seed: u64) -> Result
             let mut rng = Rng::new(seed ^ conn_id.wrapping_mul(0x9E3779B97F4A7C15));
             std::thread::spawn(move || {
                 let framed = Framed::new(Box::new(TcpChannel::new(stream)));
-                let _ = serve_connection(framed, &plan, &mut rng);
+                let _ = serve_connection(framed, &plan, &mut rng, deal_threads);
             });
         }
     });
@@ -256,7 +283,9 @@ mod tests {
     #[test]
     fn mem_dealer_sessions_match_inline_deal() {
         let plan = tiny_plan(1);
-        let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), 42);
+        // Multi-threaded dealer vs single-threaded inline deal: the
+        // column schedule makes them bit-identical.
+        let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), 42, 4);
         let mut dealer = RemoteDealer::connect(chan, plan.clone()).unwrap();
         let sessions = dealer.fetch(2).unwrap();
         assert_eq!(sessions.len(), 2);
@@ -288,7 +317,7 @@ mod tests {
         ];
         let plan_b = Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu));
 
-        let (chan, dealer_thread) = spawn_mem_dealer(plan_a, 7);
+        let (chan, dealer_thread) = spawn_mem_dealer(plan_a, 7, 1);
         let err = RemoteDealer::connect(chan, plan_b).unwrap_err();
         assert!(err.to_string().contains("rejected"), "{err}");
         let _ = dealer_thread.join();
@@ -297,7 +326,7 @@ mod tests {
     #[test]
     fn request_count_bounds_enforced() {
         let plan = tiny_plan(1);
-        let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), 5);
+        let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), 5, 1);
         let mut framed = Framed::new(chan);
         let manifest = SessionManifest::of_plan(&plan);
         framed.send(MsgType::Hello, &manifest.encode()).unwrap();

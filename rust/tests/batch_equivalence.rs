@@ -1,25 +1,32 @@
-//! Equivalence proof for the layer-batch refactor: the flat-SoA batched
-//! offline+online path must be **bit-identical** to the seed's per-ReLU
-//! object path — same output shares, same offline byte ledger, same
+//! Equivalence proof for the layer-batched offline+online data plane:
+//! `offline_relu_layer`/`online_relu_layer` must be **bit-identical** to
+//! a per-ReLU reference built from the low-level primitives
+//! (`garble_with_scratch`, `ot_choose`, `evaluate_with_scratch`, per-ReLU
+//! `Vec` material) — same output shares, same offline byte ledger, same
 //! online byte counts — for every variant and truncation level, under a
 //! seeded RNG.
 //!
-//! The seed path is reconstructed here from the still-public low-level
-//! primitives (`garble_with_scratch`, `ot_choose`,
-//! `evaluate_with_scratch`, per-ReLU `Vec` material). Both paths consume
-//! the RNG in the same order (garble, r_v, r_out, triple — per ReLU), so
-//! with equal seeds they must produce equal material and therefore equal
+//! **Re-anchor (one-time, column schedule):** the offline phase moved
+//! from a per-ReLU RNG interleave (garble, r_v, r_out, triple — per ReLU)
+//! to the column-wise schedule documented in `protocol::offline` (one
+//! fork per material column, `COL_GARBLE`..`COL_TRIPLE`, with the garble
+//! column sub-forked per `GARBLE_CHUNK` instances). The reference below
+//! re-derives that schedule independently, so with equal seeds both
+//! paths must still produce equal material and therefore equal
 //! transcripts; any divergence in the batched data plane shows up as a
 //! share or byte mismatch.
 
 use circa::beaver::{self, TripleShare};
 use circa::circuits::spec::{FaultMode, ReluVariant};
 use circa::field::{random_fp, Fp};
+use circa::gc::batch::GARBLE_CHUNK;
 use circa::gc::eval::evaluate_with_scratch;
 use circa::gc::garble::{garble_with_scratch, GarbledCircuit, InputEncoding};
 use circa::ot;
 use circa::prf::Label;
-use circa::protocol::offline::offline_relu_layer;
+use circa::protocol::offline::{
+    offline_relu_layer, COL_GARBLE, COL_OT, COL_ROUT, COL_RV, COL_TRIPLE,
+};
 use circa::protocol::online::online_relu_layer;
 use circa::ss::SharePair;
 use circa::util::Rng;
@@ -40,7 +47,11 @@ struct RefServer {
     triples: Vec<TripleShare>,
 }
 
-/// The seed's `offline_relu_layer`, reconstructed per-ReLU.
+/// `offline_relu_layer`'s column-wise RNG schedule, re-derived
+/// independently over per-ReLU objects: fork the parent once per
+/// material column in the documented order, garble chunk `c` of
+/// `GARBLE_CHUNK` instances from `garble_fork.fork(c)`, then fill the
+/// scalar columns from their own forks.
 fn offline_ref(variant: ReluVariant, xc: &[Fp], rng: &mut Rng) -> (RefClient, RefServer) {
     let spec = variant.spec();
     let circuit = spec.build_circuit();
@@ -56,26 +67,50 @@ fn offline_ref(variant: ReluVariant, xc: &[Fp], rng: &mut Rng) -> (RefClient, Re
     let mut s =
         RefServer { encodings: Vec::new(), output_decode: Vec::new(), triples: Vec::new() };
 
-    for &x in xc {
-        let (gc, enc) = garble_with_scratch(&circuit, rng, &mut scratch);
-        c.offline_bytes += gc.table_bytes() as u64;
-        let rv = random_fp(rng);
-        let rout = random_fp(rng);
-        let bits = spec.client_bits(x, rv, rout);
-        let batch = ot::ot_choose(&enc, 0, &bits);
+    let mut rng_garble = rng.fork(COL_GARBLE);
+    let mut rng_rv = rng.fork(COL_RV);
+    let mut rng_rout = rng.fork(COL_ROUT);
+    let _rng_ot = rng.fork(COL_OT);
+    let mut rng_triple = rng.fork(COL_TRIPLE);
+
+    // Garble column: per-chunk sub-forks, chunk c = instances
+    // [c·GARBLE_CHUNK, (c+1)·GARBLE_CHUNK).
+    for (chunk_idx, chunk) in xc.chunks(GARBLE_CHUNK).enumerate() {
+        let mut chunk_rng = rng_garble.fork(chunk_idx as u64);
+        for _ in chunk {
+            let (gc, enc) = garble_with_scratch(&circuit, &mut chunk_rng, &mut scratch);
+            c.offline_bytes += gc.table_bytes() as u64;
+            s.output_decode.push(gc.output_decode.clone());
+            c.gcs.push(gc);
+            s.encodings.push(enc);
+        }
+    }
+
+    // Scalar columns.
+    for _ in xc {
+        c.r_v.push(random_fp(&mut rng_rv));
+    }
+    for _ in xc {
+        c.r_out.push(random_fp(&mut rng_rout));
+    }
+
+    // OT column (no randomness drawn — the fork above reserves the
+    // stream).
+    for (i, &x) in xc.iter().enumerate() {
+        let bits = spec.client_bits(x, c.r_v[i], c.r_out[i]);
+        let batch = ot::ot_choose(&s.encodings[i], 0, &bits);
         c.offline_bytes += batch.bytes_on_wire as u64;
-        if spec.uses_beaver() {
-            let t = beaver::gen_triple(rng);
+        c.client_labels.push(batch.labels);
+    }
+
+    // Triple column.
+    if spec.uses_beaver() {
+        for _ in xc {
+            let t = beaver::gen_triple(&mut rng_triple);
             c.triples.push(t.p1);
             s.triples.push(t.p2);
             c.offline_bytes += 6 * 4;
         }
-        s.output_decode.push(gc.output_decode.clone());
-        c.client_labels.push(batch.labels);
-        c.gcs.push(gc);
-        s.encodings.push(enc);
-        c.r_v.push(rv);
-        c.r_out.push(rout);
     }
     (c, s)
 }
@@ -211,6 +246,29 @@ fn assert_equivalent(variant: ReluVariant, seed: u64) {
     // Bit-identical output shares (not just reconstructed values).
     assert_eq!(yc, ref_yc, "{variant:?}: client output shares");
     assert_eq!(ys, ref_ys, "{variant:?}: server output shares");
+}
+
+#[test]
+fn offline_column_schedule_matches_across_chunk_boundary() {
+    // n > GARBLE_CHUNK: the reference's per-chunk sub-forks must line up
+    // with garble_chunked's chunk streams, including the ragged tail.
+    let variant = ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero };
+    let n = GARBLE_CHUNK + 5;
+    let mut data_rng = Rng::new(42);
+    let xc: Vec<Fp> = (0..n).map(|_| random_fp(&mut data_rng)).collect();
+
+    let (rc, rs) = offline_ref(variant, &xc, &mut Rng::new(0xABCD));
+    let (cm, sm) = offline_relu_layer(variant, &xc, &mut Rng::new(0xABCD));
+
+    for i in [0, GARBLE_CHUNK - 1, GARBLE_CHUNK, n - 1] {
+        assert_eq!(cm.gc.table_of(i), &rc.gcs[i].table[..], "table {i}");
+        assert_eq!(cm.client_labels_of(i), &rc.client_labels[i][..], "labels {i}");
+        assert_eq!(sm.encodings.view(i).label0, &rs.encodings[i].label0[..], "label0 {i}");
+    }
+    assert_eq!(cm.offline_bytes, rc.offline_bytes);
+    assert_eq!(cm.r_v, rc.r_v);
+    assert_eq!(cm.r_out, rc.r_out);
+    assert_eq!(cm.triples.len(), rc.triples.len());
 }
 
 #[test]

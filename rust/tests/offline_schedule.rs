@@ -1,0 +1,169 @@
+//! Contract tests for the column-wise offline RNG schedule: whole-layer
+//! dealing must be **thread-count-invariant** (same seed ⇒ bit-identical
+//! material on 1, 2, or 8 threads, for every variant and truncation
+//! level), and material shipped by a multi-threaded dealer over the wire
+//! must be bit-identical to an inline single-threaded deal from the same
+//! RNG stream. Together these are what let a dealer use every core it
+//! has without changing a single bit of what it ships.
+
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::field::{random_fp, Fp};
+use circa::gc::batch::GARBLE_CHUNK;
+use circa::protocol::client::ClientLayer;
+use circa::protocol::linear::{LinearOp, Matrix};
+use circa::protocol::offline::{offline_relu_layer_mt, ClientReluMaterial, ServerReluMaterial};
+use circa::protocol::server::{offline_network_mt, NetworkPlan};
+use circa::util::Rng;
+use circa::wire::dealer::{deal_session_mt, spawn_mem_dealer, RemoteDealer};
+use std::sync::Arc;
+
+fn all_variants() -> Vec<ReluVariant> {
+    vec![
+        ReluVariant::BaselineRelu,
+        ReluVariant::NaiveSign,
+        ReluVariant::StochasticSign { mode: FaultMode::PosZero },
+        ReluVariant::StochasticSign { mode: FaultMode::NegPass },
+        ReluVariant::TruncatedSign { k: 0, mode: FaultMode::PosZero },
+        ReluVariant::TruncatedSign { k: 8, mode: FaultMode::PosZero },
+        ReluVariant::TruncatedSign { k: 12, mode: FaultMode::NegPass },
+    ]
+}
+
+fn assert_layers_identical(
+    tag: &str,
+    (ca, sa): &(ClientReluMaterial, ServerReluMaterial),
+    (cb, sb): &(ClientReluMaterial, ServerReluMaterial),
+) {
+    assert_eq!(ca.gc.tables(), cb.gc.tables(), "{tag}: tables");
+    assert_eq!(ca.gc.output_decode(), cb.gc.output_decode(), "{tag}: decode");
+    assert_eq!(ca.client_labels, cb.client_labels, "{tag}: client labels");
+    assert_eq!(ca.r_v, cb.r_v, "{tag}: r_v");
+    assert_eq!(ca.r_out, cb.r_out, "{tag}: r_out");
+    assert_eq!(ca.offline_bytes, cb.offline_bytes, "{tag}: offline bytes");
+    assert_eq!(sa.encodings.label0(), sb.encodings.label0(), "{tag}: label0 arena");
+    assert_eq!(
+        sa.encodings.deltas().iter().map(|d| d.0).collect::<Vec<_>>(),
+        sb.encodings.deltas().iter().map(|d| d.0).collect::<Vec<_>>(),
+        "{tag}: deltas"
+    );
+    assert_eq!(sa.output_decode, sb.output_decode, "{tag}: server decode");
+    assert_eq!(ca.triples.len(), cb.triples.len(), "{tag}: triple count");
+    for (i, (ta, tb)) in ca.triples.iter().zip(&cb.triples).enumerate() {
+        assert_eq!((ta.a, ta.b, ta.ab), (tb.a, tb.b, tb.ab), "{tag}: client triple {i}");
+    }
+    for (i, (ta, tb)) in sa.triples.iter().zip(&sb.triples).enumerate() {
+        assert_eq!((ta.a, ta.b, ta.ab), (tb.a, tb.b, tb.ab), "{tag}: server triple {i}");
+    }
+}
+
+#[test]
+fn layer_deal_is_thread_count_invariant_all_variants() {
+    // Multi-chunk layer (n > 2·GARBLE_CHUNK, ragged tail) so the chunk →
+    // thread-group split actually differs between the thread counts.
+    let n = 2 * GARBLE_CHUNK + 37;
+    let mut data_rng = Rng::new(0x5EED);
+    let xc: Vec<Fp> = (0..n).map(|_| random_fp(&mut data_rng)).collect();
+    for (vi, variant) in all_variants().into_iter().enumerate() {
+        let seed = 900 + vi as u64;
+        let base = offline_relu_layer_mt(variant, &xc, &mut Rng::new(seed), 1);
+        for threads in [2, 8] {
+            let got = offline_relu_layer_mt(variant, &xc, &mut Rng::new(seed), threads);
+            assert_layers_identical(&format!("{variant:?} @ {threads} threads"), &base, &got);
+        }
+    }
+}
+
+#[test]
+fn layer_deal_consumes_parent_rng_identically_for_any_thread_count() {
+    // The parent RNG must advance by exactly the five column forks
+    // whatever the thread count — otherwise material dealt *after* a
+    // layer would depend on how the layer was threaded.
+    let mut data_rng = Rng::new(3);
+    let xc: Vec<Fp> = (0..20).map(|_| random_fp(&mut data_rng)).collect();
+    let mut states = Vec::new();
+    for threads in [1, 2, 8] {
+        let mut rng = Rng::new(1234);
+        let _ = offline_relu_layer_mt(
+            ReluVariant::TruncatedSign { k: 8, mode: FaultMode::PosZero },
+            &xc,
+            &mut rng,
+            threads,
+        );
+        states.push(rng.next_u64());
+    }
+    assert!(states.windows(2).all(|w| w[0] == w[1]), "parent RNG state diverged: {states:?}");
+}
+
+fn tiny_plan(seed: u64, variant: ReluVariant) -> Arc<NetworkPlan> {
+    let mut rng = Rng::new(seed);
+    let linears: Vec<Arc<dyn LinearOp>> = vec![
+        Arc::new(Matrix::random(5, 6, 20, &mut rng)),
+        Arc::new(Matrix::random(4, 5, 20, &mut rng)),
+        Arc::new(Matrix::random(3, 4, 20, &mut rng)),
+    ];
+    Arc::new(NetworkPlan::unscaled(linears, variant))
+}
+
+/// Pull the ReLU materials out of a client net, in layer order.
+fn relu_layers(layers: &[ClientLayer]) -> Vec<&ClientReluMaterial> {
+    layers
+        .iter()
+        .filter_map(|l| match l {
+            ClientLayer::Relu(m) => Some(m.as_ref()),
+            ClientLayer::Linear { .. } => None,
+        })
+        .collect()
+}
+
+#[test]
+fn network_deal_is_thread_count_invariant() {
+    let plan = tiny_plan(7, ReluVariant::TruncatedSign { k: 8, mode: FaultMode::PosZero });
+    let (c1, s1, b1) = offline_network_mt(&plan, &mut Rng::new(55), 1);
+    for threads in [2, 8] {
+        let (ct, st, bt) = offline_network_mt(&plan, &mut Rng::new(55), threads);
+        assert_eq!(b1, bt, "{threads} threads: offline bytes");
+        assert_eq!(s1.n_relus(), st.n_relus());
+        for (i, (a, b)) in relu_layers(&c1.layers).iter().zip(relu_layers(&ct.layers)).enumerate()
+        {
+            assert_eq!(a.gc.tables(), b.gc.tables(), "{threads} threads: layer {i} tables");
+            assert_eq!(a.client_labels, b.client_labels, "{threads} threads: layer {i} labels");
+            assert_eq!(a.r_out, b.r_out, "{threads} threads: layer {i} r_out");
+        }
+    }
+}
+
+#[test]
+fn dealer_wire_material_matches_inline_deal_bit_for_bit() {
+    // A dealer fanning each session across 8 threads, shipped over the
+    // wire codec, against a single-threaded inline deal from the same
+    // seed: the ReLU material itself (not just the inference transcript)
+    // must be identical.
+    let plan = tiny_plan(9, ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero });
+    let dealer_seed = 0xDEA1;
+    let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), dealer_seed, 8);
+    let mut dealer = RemoteDealer::connect(chan, plan.clone()).expect("handshake");
+    let sessions = dealer.fetch(2).expect("fetch");
+    dealer.close();
+    dealer_thread.join().unwrap();
+
+    let mut inline_rng = Rng::new(dealer_seed);
+    for (si, session) in sessions.iter().enumerate() {
+        let inline = deal_session_mt(&plan, &mut inline_rng, 1);
+        assert_eq!(session.offline_bytes, inline.offline_bytes, "session {si}: bytes");
+        assert_eq!(session.n_relus(), inline.n_relus(), "session {si}: relus");
+        let wire = relu_layers(&session.client.layers);
+        let local = relu_layers(&inline.client.layers);
+        assert_eq!(wire.len(), local.len());
+        for (i, (w, l)) in wire.iter().zip(&local).enumerate() {
+            assert_eq!(w.gc.tables(), l.gc.tables(), "session {si} layer {i}: tables");
+            assert_eq!(
+                w.gc.output_decode(),
+                l.gc.output_decode(),
+                "session {si} layer {i}: decode"
+            );
+            assert_eq!(w.client_labels, l.client_labels, "session {si} layer {i}: labels");
+            assert_eq!(w.r_v, l.r_v, "session {si} layer {i}: r_v");
+            assert_eq!(w.r_out, l.r_out, "session {si} layer {i}: r_out");
+        }
+    }
+}

@@ -123,7 +123,9 @@ fn mem_channel_dealer_matches_inline_deal_end_to_end() {
     // (same dealer RNG stream on both sides).
     let plan = tiny_plan(ReluVariant::TruncatedSign { k: 8, mode: FaultMode::PosZero }, 7);
     let dealer_seed = 0xD00D;
-    let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), dealer_seed);
+    // Dealer fans each session over 4 threads; the column schedule keeps
+    // its output identical to the 1-thread inline deal below.
+    let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), dealer_seed, 4);
     let mut dealer = RemoteDealer::connect(chan, plan.clone()).unwrap();
     let sessions = dealer.fetch(3).unwrap();
     assert!(dealer.bytes_received() > 0);
@@ -147,7 +149,7 @@ fn tcp_dealer_refills_pool_and_serves() {
     // RefillSource::Remote; leased sessions serve correct inferences and
     // the refill metrics fill in.
     let plan = tiny_plan(ReluVariant::BaselineRelu, 11);
-    let handle = spawn_tcp_dealer("127.0.0.1:0", plan.clone(), 0xFEED).expect("bind dealer");
+    let handle = spawn_tcp_dealer("127.0.0.1:0", plan.clone(), 0xFEED, 2).expect("bind dealer");
     let addr = handle.addr().to_string();
 
     let metrics = Arc::new(Metrics::default());
@@ -161,6 +163,7 @@ fn tcp_dealer_refills_pool_and_serves() {
         3,
         RefillSource::Remote { connect, batch: 2 },
         Some(metrics.clone()),
+        1,
     );
     pool.wait_ready(4);
 
@@ -194,7 +197,7 @@ fn tcp_dealer_refills_pool_and_serves() {
 fn tcp_handshake_rejects_wrong_plan() {
     let plan = tiny_plan(ReluVariant::BaselineRelu, 11);
     let other = tiny_plan(ReluVariant::NaiveSign, 11);
-    let handle = spawn_tcp_dealer("127.0.0.1:0", plan, 1).expect("bind dealer");
+    let handle = spawn_tcp_dealer("127.0.0.1:0", plan, 1, 1).expect("bind dealer");
     let addr = handle.addr().to_string();
     let err = RemoteDealer::connect_tcp(&addr, other).unwrap_err();
     assert!(err.to_string().contains("rejected"), "{err}");
