@@ -2,6 +2,9 @@
 //! standalone dealer and streamed to the serving coordinator over the
 //! wire codec — the deployment split the paper's storage numbers are
 //! about (the dealer owns the offline phase; the server only spends).
+//! The coordinator's material pool refills **layer by layer** (seq-
+//! addressed `RequestLayers` rounds into per-layer banks), so the
+//! largest frame on the wire is one layer batch, never a whole session.
 //!
 //! Modes:
 //!
@@ -131,8 +134,10 @@ fn tcp_serving_demo(plan: &Arc<NetworkPlan>, addr: &str, n_requests: usize) {
     println!("served {n_requests} inferences in {wall:.2} s ({rate:.1} inf/s)");
     println!("matches exact-ReLU oracle: {exact}/{n_requests} (Circa faults only |x| < 2^k)");
     println!(
-        "remote refill: {} fetches, {} sessions, {:.2} MB offline material on wire",
+        "remote refill: {} fetches, {} layer units ({} sessions' worth), \
+         {:.2} MB offline material on wire",
         snap.remote_refills,
+        snap.layer_entries,
         snap.remote_sessions,
         snap.bytes_offline_wire as f64 / 1e6
     );
@@ -142,6 +147,13 @@ fn tcp_serving_demo(plan: &Arc<NetworkPlan>, addr: &str, n_requests: usize) {
         snap.remote_refill_p99_us as f64 / 1e3,
         snap.pool_dry_events
     );
+    if !snap.bank_depths.is_empty() {
+        println!(
+            "bank depths after serving: spine {} | relu layers {:?}",
+            snap.bank_depths[0],
+            &snap.bank_depths[1..]
+        );
+    }
     svc.shutdown();
 }
 

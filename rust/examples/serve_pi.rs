@@ -105,8 +105,10 @@ fn run_variant(
     }
     if snap.remote_refills > 0 {
         println!(
-            "  remote refill     : {} fetches, {} sessions, {:.2} MB on wire",
+            "  remote refill     : {} fetches, {} layer units, {} sessions' worth, \
+             {:.2} MB on wire",
             snap.remote_refills,
+            snap.layer_entries,
             snap.remote_sessions,
             snap.bytes_offline_wire as f64 / 1e6
         );
@@ -114,6 +116,13 @@ fn run_variant(
             "  refill fetch ms   : mean {:.1}  p99 {:.1}",
             snap.remote_refill_mean_us / 1e3,
             snap.remote_refill_p99_us as f64 / 1e3
+        );
+    }
+    if !snap.bank_depths.is_empty() {
+        println!(
+            "  bank depths       : spine {} | relu layers {:?}",
+            snap.bank_depths[0],
+            &snap.bank_depths[1..]
         );
     }
     svc.shutdown();

@@ -12,12 +12,20 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub pool_dry_events: AtomicU64,
     pub bytes_online: AtomicU64,
-    /// Remote-dealer fetch round trips completed.
+    /// Remote-dealer fetch round trips completed (layer-granular rounds
+    /// included).
     pub remote_refills: AtomicU64,
-    /// Sessions delivered by remote refills.
+    /// Sessions' worth of material delivered by remote refills (one per
+    /// linear spine — every assembled session consumes exactly one).
     pub remote_sessions: AtomicU64,
+    /// Per-layer units (ReLU layer batches + spines) delivered by
+    /// remote layer-granular refills.
+    pub layer_entries: AtomicU64,
     /// Offline material received over the wire (frame bytes included).
     pub bytes_offline_wire: AtomicU64,
+    /// Latest per-bank staged depth gauge (index 0 = linear spines,
+    /// `1 + li` = ReLU layer `li`), published by the material pool.
+    bank_depths: Mutex<Vec<u64>>,
     /// ReLUs dealt by local offline deals (pool refill + dry leases).
     pub deal_relus: AtomicU64,
     /// Wall-clock time spent in those deals, µs, summed across pool
@@ -58,9 +66,13 @@ pub struct Snapshot {
     pub dry_deal_p99_us: u64,
     pub remote_refills: u64,
     pub remote_sessions: u64,
+    pub layer_entries: u64,
     pub bytes_offline_wire: u64,
     pub remote_refill_mean_us: f64,
     pub remote_refill_p99_us: u64,
+    /// Latest per-bank staged depth (0 = linear spines, then one entry
+    /// per ReLU layer). Empty until the pool publishes it.
+    pub bank_depths: Vec<u64>,
     pub deal_relus: u64,
     /// Offline dealing throughput, ReLUs per second of dealer-slot wall
     /// time (0.0 before any deal is recorded). Scales with
@@ -87,14 +99,33 @@ impl Metrics {
         self.inner.lock().unwrap().dry_deal_us.record_us(deal_us);
     }
 
-    /// Record one remote-dealer refill round trip: fetch latency, bytes
-    /// that crossed the wire, and sessions delivered (surfaced in
-    /// `serve_pi` next to the dry-deal histogram).
+    /// Record one whole-session remote refill round trip: fetch latency,
+    /// bytes that crossed the wire, and sessions delivered. Legacy
+    /// counterpart of [`Self::record_layer_refill`] for callers driving
+    /// `RemoteDealer::fetch` (the whole-`Session` round) directly — the
+    /// pool's layer-granular refill path no longer uses it.
     pub fn record_remote_refill(&self, fetch_us: u64, bytes: u64, sessions: u64) {
         self.remote_refills.fetch_add(1, Ordering::Relaxed);
         self.remote_sessions.fetch_add(sessions, Ordering::Relaxed);
         self.bytes_offline_wire.fetch_add(bytes, Ordering::Relaxed);
         self.inner.lock().unwrap().remote_refill_us.record_us(fetch_us);
+    }
+
+    /// Record one layer-granular refill round trip: `entries` per-layer
+    /// units fetched, of which `spines` were linear spines (the
+    /// sessions'-worth counter — one spine per assembled session).
+    pub fn record_layer_refill(&self, fetch_us: u64, bytes: u64, entries: u64, spines: u64) {
+        self.remote_refills.fetch_add(1, Ordering::Relaxed);
+        self.layer_entries.fetch_add(entries, Ordering::Relaxed);
+        self.remote_sessions.fetch_add(spines, Ordering::Relaxed);
+        self.bytes_offline_wire.fetch_add(bytes, Ordering::Relaxed);
+        self.inner.lock().unwrap().remote_refill_us.record_us(fetch_us);
+    }
+
+    /// Publish the pool's per-bank staged depths (gauge semantics: the
+    /// latest value wins).
+    pub fn set_bank_depths(&self, depths: Vec<u64>) {
+        *self.bank_depths.lock().unwrap() = depths;
     }
 
     /// Record one local offline deal: `relus` ReLUs' worth of material
@@ -127,7 +158,9 @@ impl Metrics {
             dry_deal_p99_us: g.dry_deal_us.percentile_us(99.0),
             remote_refills: self.remote_refills.load(Ordering::Relaxed),
             remote_sessions: self.remote_sessions.load(Ordering::Relaxed),
+            layer_entries: self.layer_entries.load(Ordering::Relaxed),
             bytes_offline_wire: self.bytes_offline_wire.load(Ordering::Relaxed),
+            bank_depths: self.bank_depths.lock().unwrap().clone(),
             remote_refill_mean_us: g.remote_refill_us.mean_us(),
             remote_refill_p99_us: g.remote_refill_us.percentile_us(99.0),
             deal_relus,
@@ -172,6 +205,22 @@ mod tests {
         assert_eq!(s.bytes_offline_wire, 1_500_000);
         assert!((s.remote_refill_mean_us - 3_000.0).abs() < 1e-9);
         assert!(s.remote_refill_p99_us >= 4_000);
+    }
+
+    #[test]
+    fn layer_refill_and_bank_depths_recorded() {
+        let m = Metrics::default();
+        assert!(m.snapshot().bank_depths.is_empty());
+        m.record_layer_refill(1_000, 500_000, 3, 1);
+        m.record_layer_refill(3_000, 250_000, 2, 0);
+        m.set_bank_depths(vec![4, 2, 7]);
+        let s = m.snapshot();
+        assert_eq!(s.remote_refills, 2);
+        assert_eq!(s.layer_entries, 5);
+        assert_eq!(s.remote_sessions, 1);
+        assert_eq!(s.bytes_offline_wire, 750_000);
+        assert!((s.remote_refill_mean_us - 2_000.0).abs() < 1e-9);
+        assert_eq!(s.bank_depths, vec![4, 2, 7]);
     }
 
     #[test]

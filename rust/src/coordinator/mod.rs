@@ -14,13 +14,16 @@
 //! The coordinator mirrors the vLLM-router shape adapted to that
 //! constraint:
 //!
-//! * [`pool`] — the offline-material bank: background dealer threads keep
-//!   `target` ready-to-serve sessions; the online path leases one per
-//!   request. A dry lease deals inline and reports the measured deal
-//!   latency ([`pool::Lease`]) so the shortfall lands in the latency
-//!   histograms, not just a counter. Refills come from a
-//!   [`pool::RefillSource`]: inline deal, or a standalone dealer process
-//!   reached over [`crate::wire`] (`ServiceConfig::dealer_addr`).
+//! * [`pool`] — the offline-material bank, sharded by layer: one bank of
+//!   linear-precompute spines plus one bank per ReLU layer, each keyed
+//!   by session sequence number; dealers refill the emptiest bank first
+//!   and a lease assembles a session from the banks' seq-aligned fronts
+//!   (bit-identical to a whole-session deal from the same session RNG).
+//!   A dry lease deals inline and reports the measured deal latency
+//!   ([`pool::Lease`]) so the shortfall lands in the latency histograms,
+//!   not just a counter. Refills come from a [`pool::RefillSource`]:
+//!   inline deal, or a standalone dealer process streaming layer batches
+//!   over [`crate::wire`] (`ServiceConfig::dealer_addr`).
 //! * [`batcher`] — groups incoming requests into dispatch batches
 //!   (max-size / max-delay policy, the classic dynamic batcher).
 //! * [`router`] — a worker pool running the 2-party online protocol for

@@ -1,26 +1,48 @@
-//! The offline-material bank.
+//! The offline-material bank, sharded by layer.
 //!
-//! Each entry is a fully-prepared 2-party session (client + server nets:
-//! masks, HE-precomputes, garbled circuits, OT'd labels, triples) for one
-//! inference of a fixed network plan. Dealer threads refill toward
-//! `target`; `lease()` pops a ready session or — if the bank is dry —
-//! prepares one inline (counted, because it shows up as tail latency
-//! exactly like a real deployment's offline-throughput shortfall).
+//! Real PI networks concentrate their ReLUs in a few wide layers
+//! (CryptoNAS/DeepReShape-style budgets), so whole-session dealing
+//! wastes dealer throughput on cold layers while the hot layers gate
+//! session assembly. The bank therefore holds *per-layer* material: one
+//! bank of linear-precompute spines ([`LinearSpine`] — masks, HE
+//! precomputes, blinds; cheap) plus one bank per ReLU layer (garbled
+//! tables, label arenas, triples; the expensive part), each keyed by a
+//! session **sequence number**. Dealers refill the emptiest bank first,
+//! and [`MaterialPool::lease`] assembles a [`Session`] from the front
+//! entry of every bank.
 //!
-//! Refills come from a [`RefillSource`]: either the classic inline deal
-//! (garble in-process) or a [`RemoteDealer`] — a separate dealer process
-//! reached over [`crate::wire`], which is the paper's actual deployment
-//! shape (offline material produced elsewhere, shipped to the server).
-//! Remote refill latency and bytes-on-wire land in
-//! [`super::metrics::Metrics`] next to the dry-deal histogram.
+//! Seq-addressing is what makes the shards composable: entry `(bank,
+//! seq)` is a pure function of `(base seed, seq, layer)` under the
+//! per-layer forked session schedule
+//! ([`crate::protocol::server::session_rng`]), so independently dealt
+//! entries with equal seqs assemble into exactly the session a whole
+//! inline deal from that session RNG would produce — bit-identical,
+//! whichever dealer thread or connection produced each piece. Leases pop
+//! every bank's front at once, so the fronts stay seq-aligned
+//! structurally.
+//!
+//! Refills come from a [`RefillSource`]: the inline deal (garble
+//! in-process) or a remote dealer process reached over [`crate::wire`]'s
+//! layer-granular streaming round — the paper's deployment shape, with
+//! the largest frame bounded by the largest single layer batch. Claim
+//! accounting is exact: a bank's staged + in-flight entries never exceed
+//! `target`, so racing dealer threads cannot overshoot the bank (the
+//! old whole-session pool could bank up to `target + n_dealers − 1`).
+//! Failed claims are abandoned back into a retry list, and
+//! [`MaterialPool::wait_ready`] is stop-aware, so a dealer that never
+//! connects cannot hang warmup or shutdown forever.
 
 use super::metrics::Metrics;
 use crate::protocol::client::ClientNet;
-use crate::protocol::server::{offline_network_mt, NetworkPlan, ServerNet};
+use crate::protocol::offline::{ClientReluMaterial, ServerReluMaterial};
+use crate::protocol::server::{
+    assemble_session, deal_relu_layer_mt, deal_spine, offline_network_mt, session_rng,
+    LinearSpine, NetworkPlan, ServerNet,
+};
 use crate::util::error::Result;
 use crate::util::{Rng, Timer};
 use crate::wire::dealer::RemoteDealer;
-use std::collections::VecDeque;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -51,26 +73,206 @@ pub struct Lease {
     pub deal_us: u64,
 }
 
+type ReluEntry = (ClientReluMaterial, ServerReluMaterial);
+
+/// Count keys `head, head+1, …` present in `m` (the bank's ready run).
+fn contiguous_from<V>(m: &BTreeMap<u64, V>, head: u64) -> usize {
+    let mut n = 0u64;
+    for (&k, _) in m.range(head..) {
+        if k != head + n {
+            break;
+        }
+        n += 1;
+    }
+    n as usize
+}
+
+/// The sharded bank. Bank index 0 holds linear spines; bank `1 + li`
+/// holds ReLU layer `li`. Entries are staged in `BTreeMap`s keyed by
+/// seq because completions can land out of order (racing dealers,
+/// retried claims); contiguity from `head` is what counts as ready.
+struct Bank {
+    /// Seq of the next session [`MaterialPool::lease`] will assemble.
+    head: u64,
+    spines: BTreeMap<u64, LinearSpine>,
+    relus: Vec<BTreeMap<u64, ReluEntry>>,
+    /// Next fresh seq each bank hands out to a dealer claim.
+    next_claim: Vec<u64>,
+    /// Claims handed out but not yet completed or abandoned.
+    in_flight: Vec<usize>,
+    /// Abandoned claims, re-dealt before fresh seqs are claimed.
+    retries: Vec<Vec<u64>>,
+}
+
+impl Bank {
+    fn new(n_relu: usize) -> Self {
+        Bank {
+            head: 0,
+            spines: BTreeMap::new(),
+            relus: (0..n_relu).map(|_| BTreeMap::new()).collect(),
+            next_claim: vec![0; 1 + n_relu],
+            in_flight: vec![0; 1 + n_relu],
+            retries: (0..n_relu + 1).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    fn n_banks(&self) -> usize {
+        1 + self.relus.len()
+    }
+
+    fn staged(&self, b: usize) -> usize {
+        if b == 0 {
+            self.spines.len()
+        } else {
+            self.relus[b - 1].len()
+        }
+    }
+
+    /// Entries committed against `target`: staged plus in-flight claims
+    /// (abandoned retries are uncommitted — they need re-dealing).
+    fn supply(&self, b: usize) -> usize {
+        self.staged(b) + self.in_flight[b]
+    }
+
+    /// Claim up to `max` seqs from the bank with the largest deficit
+    /// (the emptiest bank), retries first. `None` when every bank is at
+    /// target — claim accounting is what makes overshoot impossible.
+    fn claim_emptiest(&mut self, target: usize, max: usize) -> Option<(usize, Vec<u64>)> {
+        let (mut best, mut best_deficit) = (0usize, 0usize);
+        for b in 0..self.n_banks() {
+            let deficit = target.saturating_sub(self.supply(b));
+            if deficit > best_deficit {
+                best = b;
+                best_deficit = deficit;
+            }
+        }
+        if best_deficit == 0 {
+            return None;
+        }
+        let n = best_deficit.min(max.max(1));
+        let seqs = (0..n)
+            .map(|_| {
+                self.in_flight[best] += 1;
+                self.retries[best].pop().unwrap_or_else(|| {
+                    let s = self.next_claim[best];
+                    self.next_claim[best] += 1;
+                    s
+                })
+            })
+            .collect();
+        Some((best, seqs))
+    }
+
+    fn abandon(&mut self, b: usize, seqs: &[u64]) {
+        self.in_flight[b] -= seqs.len();
+        self.retries[b].extend_from_slice(seqs);
+    }
+
+    fn complete_spine(&mut self, seq: u64, spine: LinearSpine) {
+        self.in_flight[0] -= 1;
+        self.spines.insert(seq, spine);
+    }
+
+    fn complete_relu(&mut self, li: usize, seq: u64, entry: ReluEntry) {
+        self.in_flight[1 + li] -= 1;
+        self.relus[li].insert(seq, entry);
+    }
+
+    /// Sessions assemblable right now: the shortest contiguous run from
+    /// `head` across all banks.
+    fn ready_run(&self) -> usize {
+        let mut run = contiguous_from(&self.spines, self.head);
+        for m in &self.relus {
+            run = run.min(contiguous_from(m, self.head));
+        }
+        run
+    }
+
+    /// Pop the front entry of every bank (requires `ready_run() >= 1`).
+    /// Popping all banks at once is what keeps the fronts seq-aligned.
+    fn pop_head(&mut self) -> (LinearSpine, Vec<ReluEntry>) {
+        let head = self.head;
+        let spine = self.spines.remove(&head).expect("ready head spine");
+        let relus: Vec<ReluEntry> = self
+            .relus
+            .iter_mut()
+            .map(|m| m.remove(&head).expect("ready head layer"))
+            .collect();
+        self.head += 1;
+        (spine, relus)
+    }
+
+    fn depths(&self) -> Vec<usize> {
+        (0..self.n_banks()).map(|b| self.staged(b)).collect()
+    }
+}
+
 struct Shared {
-    queue: Mutex<VecDeque<Session>>,
+    bank: Mutex<Bank>,
     ready: Condvar,
     refill: Condvar,
     stop: AtomicBool,
     dry_leases: AtomicU64,
+    /// High-water mark of `head + ready_run()` — sessions ever made
+    /// assemblable from the banks.
     produced: AtomicU64,
 }
 
-/// Where dealer threads get their sessions.
+/// Update the produced high-water mark and the metrics depth gauge after
+/// completions land (caller holds the bank lock).
+fn publish_progress(shared: &Shared, bank: &Bank, metrics: &Option<Arc<Metrics>>) {
+    let high_water = bank.head + bank.ready_run() as u64;
+    shared.produced.fetch_max(high_water, Ordering::Relaxed);
+    if let Some(m) = metrics {
+        m.set_bank_depths(bank.depths().iter().map(|&d| d as u64).collect());
+    }
+}
+
+/// Cross-check that every ReLU layer's `r_out` chain binds to the
+/// spine's mask chain (`truncate(r_out[li]) == spine.slots[li+1].r`).
+/// Seq-aligned pops make mixed-seq assembly structurally impossible
+/// *within* one pool, but a remote dealer restarted with a different
+/// base seed mid-stream would fill later claims from a different RNG
+/// universe — this O(#ReLU) check catches that before a silently-wrong
+/// session is served.
+fn spine_binds_layers(plan: &NetworkPlan, spine: &LinearSpine, relus: &[ReluEntry]) -> bool {
+    for (li, (cm, _)) in relus.iter().enumerate() {
+        let rescale = plan.rescale_of(li);
+        let want = &spine.slots[li + 1].r;
+        if cm.r_out.len() != want.len() {
+            return false;
+        }
+        let bound = cm
+            .r_out
+            .iter()
+            .zip(want.iter())
+            .all(|(&y, &m)| crate::nn::layers::truncate_share_local(y, rescale, true) == m);
+        if !bound {
+            return false;
+        }
+    }
+    true
+}
+
+/// Where dealer threads get their material.
 pub enum RefillSource {
-    /// Deal sessions inline in local dealer threads (the default).
+    /// Deal layer entries inline in local dealer threads (the default).
     Inline,
-    /// Stream pre-dealt sessions from a remote dealer process. `connect`
-    /// is called (and re-called after transport errors) to establish a
-    /// [`RemoteDealer`]; `batch` caps sessions per round trip.
+    /// Stream per-layer material from a remote dealer process over the
+    /// layer-granular wire round. `connect` is called (and re-called
+    /// after transport errors) to establish a [`RemoteDealer`]; `batch`
+    /// caps entries per round trip. All connections must reach dealers
+    /// sharing one base seed — seq-addressing makes their answers
+    /// mutually consistent.
     Remote {
         connect: Arc<dyn Fn() -> Result<RemoteDealer> + Send + Sync>,
         batch: usize,
     },
+}
+
+enum Fetched {
+    Spines(Vec<(u64, LinearSpine)>),
+    Layers(Vec<(u64, ClientReluMaterial, ServerReluMaterial)>),
 }
 
 /// Material bank with background dealer threads.
@@ -79,23 +281,23 @@ pub struct MaterialPool {
     shared: Arc<Shared>,
     target: usize,
     deal_threads: usize,
+    metrics: Option<Arc<Metrics>>,
     dealers: Vec<JoinHandle<()>>,
 }
 
 impl MaterialPool {
-    /// Spawn a pool refilling toward `target` with `n_dealers` inline
-    /// dealer threads (the classic in-process deal, one thread per
-    /// session).
+    /// Spawn a pool refilling every bank toward `target` with
+    /// `n_dealers` inline dealer threads.
     pub fn start(plan: Arc<NetworkPlan>, target: usize, n_dealers: usize, seed: u64) -> Self {
         Self::start_with_source(plan, target, n_dealers, seed, RefillSource::Inline, None, 1)
     }
 
     /// Spawn a pool with an explicit [`RefillSource`]. When `metrics` is
-    /// given, remote refills record their latency and bytes-on-wire, and
-    /// inline deals record their ReLU throughput. `deal_threads` splits
-    /// each inline (and dry-lease) deal's garble columns across threads —
-    /// the column-wise RNG schedule keeps the material bit-identical for
-    /// every value.
+    /// given, remote refills record their latency and bytes-on-wire,
+    /// inline deals record their ReLU throughput, and the per-bank depth
+    /// gauge is published. `deal_threads` splits each inline (and
+    /// dry-lease) deal's garble columns across threads — the column-wise
+    /// RNG schedule keeps the material bit-identical for every value.
     pub fn start_with_source(
         plan: Arc<NetworkPlan>,
         target: usize,
@@ -107,7 +309,7 @@ impl MaterialPool {
     ) -> Self {
         let deal_threads = deal_threads.max(1);
         let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
+            bank: Mutex::new(Bank::new(plan.n_relu_layers())),
             ready: Condvar::new(),
             refill: Condvar::new(),
             stop: AtomicBool::new(false),
@@ -119,7 +321,6 @@ impl MaterialPool {
             let shared = shared.clone();
             let plan = plan.clone();
             let metrics = metrics.clone();
-            let mut rng = Rng::new(seed ^ (d as u64).wrapping_mul(0x9E3779B97F4A7C15));
             let remote = match &source {
                 RefillSource::Inline => None,
                 RefillSource::Remote { connect, batch } => {
@@ -132,41 +333,60 @@ impl MaterialPool {
                 // on a successful fetch — a dealer that handshakes but
                 // fails every fetch still gets surfaced.
                 let mut failures = 0u64;
+                let claim_max = remote.as_ref().map_or(1, |(_, batch)| *batch);
                 loop {
-                    // Wait until below target (or stopping).
-                    {
-                        let mut q = shared.queue.lock().unwrap();
-                        while q.len() >= target && !shared.stop.load(Ordering::Relaxed) {
-                            q = shared.refill.wait(q).unwrap();
+                    // Claim work from the emptiest bank (waiting while
+                    // all banks are at target).
+                    let (bank_idx, seqs) = {
+                        let mut bank = shared.bank.lock().unwrap();
+                        loop {
+                            if shared.stop.load(Ordering::Relaxed) {
+                                return;
+                            }
+                            match bank.claim_emptiest(target, claim_max) {
+                                Some(claim) => break claim,
+                                None => bank = shared.refill.wait(bank).unwrap(),
+                            }
                         }
-                    }
-                    if shared.stop.load(Ordering::Relaxed) {
-                        return;
-                    }
+                    };
                     match &remote {
                         None => {
-                            // Produce outside the lock (garbling is slow);
-                            // the deal itself fans out over deal_threads.
-                            let t = Timer::new();
-                            let (client, server, offline_bytes) =
-                                offline_network_mt(&plan, &mut rng, deal_threads);
-                            let session = Session { client, server, offline_bytes };
-                            if let Some(m) = &metrics {
-                                m.record_deal(session.n_relus() as u64, t.elapsed_us());
+                            // Inline: deal the claimed entry outside the
+                            // lock (garbling is slow); the deal itself
+                            // fans out over deal_threads.
+                            let seq = seqs[0];
+                            if bank_idx == 0 {
+                                let spine = deal_spine(&plan, &mut session_rng(seed, seq));
+                                let mut bank = shared.bank.lock().unwrap();
+                                bank.complete_spine(seq, spine);
+                                publish_progress(&shared, &bank, &metrics);
+                            } else {
+                                let li = bank_idx - 1;
+                                let t = Timer::new();
+                                let (cm, sm) = deal_relu_layer_mt(
+                                    &plan,
+                                    &mut session_rng(seed, seq),
+                                    li,
+                                    deal_threads,
+                                );
+                                if let Some(m) = &metrics {
+                                    m.record_deal(cm.n() as u64, t.elapsed_us());
+                                }
+                                let mut bank = shared.bank.lock().unwrap();
+                                bank.complete_relu(li, seq, (cm, sm));
+                                publish_progress(&shared, &bank, &metrics);
                             }
-                            shared.produced.fetch_add(1, Ordering::Relaxed);
-                            let mut q = shared.queue.lock().unwrap();
-                            q.push_back(session);
-                            shared.ready.notify_one();
+                            shared.ready.notify_all();
                         }
-                        Some((connect, batch)) => {
+                        Some((connect, _)) => {
                             if conn.is_none() {
                                 match connect() {
-                                    Ok(d) => conn = Some(d),
+                                    Ok(dealer) => conn = Some(dealer),
                                     Err(e) => {
                                         // Surface the failure (throttled):
                                         // a dead/mismatched dealer would
-                                        // otherwise hang warmup silently.
+                                        // otherwise starve the banks
+                                        // silently.
                                         failures += 1;
                                         if failures.is_power_of_two() {
                                             eprintln!(
@@ -174,52 +394,73 @@ impl MaterialPool {
                                                  ({failures}x): {e}"
                                             );
                                         }
+                                        let mut bank = shared.bank.lock().unwrap();
+                                        bank.abandon(bank_idx, &seqs);
+                                        drop(bank);
                                         std::thread::sleep(Duration::from_millis(50));
                                         continue;
                                     }
                                 }
                             }
-                            // Fetch only the current deficit (racy but
-                            // bounded: worst-case overshoot is one batch
-                            // per dealer thread).
-                            let deficit =
-                                target.saturating_sub(shared.queue.lock().unwrap().len());
-                            let want = (*batch).min(deficit.max(1));
-                            let (fetched, fetch_us, wire_bytes) = {
-                                let dealer = conn.as_mut().unwrap();
-                                let before = dealer.bytes_received();
-                                let t = Timer::new();
-                                let res = dealer.fetch(want);
-                                (res, t.elapsed_us(), dealer.bytes_received() - before)
+                            let dealer = conn.as_mut().unwrap();
+                            let before = dealer.bytes_received();
+                            let t = Timer::new();
+                            let fetched: Result<Fetched> = if bank_idx == 0 {
+                                dealer.fetch_spines(&seqs).map(Fetched::Spines)
+                            } else {
+                                dealer.fetch_layers(bank_idx - 1, &seqs).map(Fetched::Layers)
                             };
+                            let fetch_us = t.elapsed_us();
+                            let wire_bytes = dealer.bytes_received() - before;
                             match fetched {
-                                Ok(sessions) => {
+                                Ok(units) => {
                                     failures = 0;
+                                    let n_units = seqs.len() as u64;
+                                    let n_spines = if bank_idx == 0 { n_units } else { 0 };
                                     if let Some(m) = &metrics {
-                                        m.record_remote_refill(
-                                            fetch_us,
+                                        m.record_layer_refill(
+                                            fetch_us.max(1),
                                             wire_bytes,
-                                            sessions.len() as u64,
+                                            n_units,
+                                            n_spines,
                                         );
                                     }
-                                    shared
-                                        .produced
-                                        .fetch_add(sessions.len() as u64, Ordering::Relaxed);
-                                    let mut q = shared.queue.lock().unwrap();
-                                    q.extend(sessions);
+                                    let mut bank = shared.bank.lock().unwrap();
+                                    match units {
+                                        Fetched::Spines(v) => {
+                                            for (seq, spine) in v {
+                                                bank.complete_spine(seq, spine);
+                                            }
+                                        }
+                                        Fetched::Layers(v) => {
+                                            for (seq, cm, sm) in v {
+                                                bank.complete_relu(
+                                                    bank_idx - 1,
+                                                    seq,
+                                                    (cm, sm),
+                                                );
+                                            }
+                                        }
+                                    }
+                                    publish_progress(&shared, &bank, &metrics);
+                                    drop(bank);
                                     shared.ready.notify_all();
                                 }
                                 Err(e) => {
                                     // Transport hiccup: surface it
-                                    // (throttled), drop the link, and
-                                    // reconnect on the next round.
+                                    // (throttled), put the claims back,
+                                    // drop the link, reconnect next
+                                    // round.
                                     failures += 1;
                                     if failures.is_power_of_two() {
                                         eprintln!(
-                                            "[pool d{d}] dealer fetch failed \
+                                            "[pool d{d}] layer fetch failed \
                                              ({failures}x): {e}"
                                         );
                                     }
+                                    let mut bank = shared.bank.lock().unwrap();
+                                    bank.abandon(bank_idx, &seqs);
+                                    drop(bank);
                                     conn = None;
                                     std::thread::sleep(Duration::from_millis(50));
                                 }
@@ -229,20 +470,46 @@ impl MaterialPool {
                 }
             }));
         }
-        Self { plan, shared, target, deal_threads, dealers }
+        Self { plan, shared, target, deal_threads, metrics, dealers }
     }
 
-    /// Lease a session: pop a banked one, or deal inline when dry. The
-    /// dry path measures the inline deal so callers can record it into
-    /// the serving [`super::Metrics`] — pool-dry tail latency is exactly
-    /// what a deployment's offline-throughput shortfall looks like.
+    /// Lease a session: assemble one from the banks' front entries, or
+    /// deal inline when no full session is ready. The dry path measures
+    /// the inline deal so callers can record it into the serving
+    /// [`super::Metrics`] — pool-dry tail latency is exactly what a
+    /// deployment's offline-throughput shortfall looks like.
     pub fn lease(&self, rng: &mut Rng) -> Lease {
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            if let Some(s) = q.pop_front() {
-                self.shared.refill.notify_all();
-                return Lease { session: s, was_dry: false, deal_us: 0 };
+        let popped = {
+            let mut bank = self.shared.bank.lock().unwrap();
+            if bank.ready_run() >= 1 {
+                let entry = bank.pop_head();
+                // Keep the depth gauge honest while leases drain the
+                // banks (the produced high-water update inside is a
+                // monotone no-op on pops).
+                publish_progress(&self.shared, &bank, &self.metrics);
+                Some(entry)
+            } else {
+                None
             }
+        };
+        if let Some((spine, relus)) = popped {
+            self.shared.refill.notify_all();
+            if spine_binds_layers(&self.plan, &spine, &relus) {
+                let (client, server, offline_bytes) =
+                    assemble_session(&self.plan, spine, relus);
+                return Lease {
+                    session: Session { client, server, offline_bytes },
+                    was_dry: false,
+                    deal_us: 0,
+                };
+            }
+            // Mixed-universe material (e.g. a remote dealer restarted
+            // with a different base seed mid-stream): refuse to serve
+            // it, surface loudly, and fall through to a dry deal.
+            eprintln!(
+                "[pool] discarding banked session: layer material does not bind to its \
+                 spine (dealer base seed changed mid-stream?)"
+            );
         }
         // Dry: prepare inline, and time it.
         self.shared.dry_leases.fetch_add(1, Ordering::Relaxed);
@@ -256,30 +523,51 @@ impl MaterialPool {
         }
     }
 
-    /// Block until at least `n` sessions are banked (warmup).
+    /// Block until at least `n` full sessions are assemblable (warmup).
+    /// Stop-aware: returns early once [`Self::stop`]/[`Self::shutdown`]
+    /// is called, so a dealer that never connects cannot hang warmup
+    /// forever.
     pub fn wait_ready(&self, n: usize) {
-        let mut q = self.shared.queue.lock().unwrap();
-        while q.len() < n.min(self.target) {
-            q = self.shared.ready.wait(q).unwrap();
+        let want = n.min(self.target);
+        let mut bank = self.shared.bank.lock().unwrap();
+        while bank.ready_run() < want && !self.shared.stop.load(Ordering::Relaxed) {
+            bank = self.shared.ready.wait(bank).unwrap();
         }
     }
 
+    /// Full sessions assemblable right now.
     pub fn banked(&self) -> usize {
-        self.shared.queue.lock().unwrap().len()
+        self.shared.bank.lock().unwrap().ready_run()
+    }
+
+    /// Staged entries per bank (index 0 = linear spines, `1 + li` =
+    /// ReLU layer `li`).
+    pub fn bank_depths(&self) -> Vec<usize> {
+        self.shared.bank.lock().unwrap().depths()
     }
 
     pub fn dry_leases(&self) -> u64 {
         self.shared.dry_leases.load(Ordering::Relaxed)
     }
 
+    /// Sessions ever made assemblable from the banks (high-water mark).
     pub fn produced(&self) -> u64 {
         self.shared.produced.load(Ordering::Relaxed)
     }
 
-    /// Stop dealers and drain.
-    pub fn shutdown(mut self) {
+    /// Signal dealers and waiters to stop, without joining. The lock is
+    /// held across the notify so a waiter between its predicate check
+    /// and its wait cannot miss the wake-up.
+    pub fn stop(&self) {
+        let _bank = self.shared.bank.lock().unwrap();
         self.shared.stop.store(true, Ordering::Relaxed);
         self.shared.refill.notify_all();
+        self.shared.ready.notify_all();
+    }
+
+    /// Stop dealers and drain.
+    pub fn shutdown(mut self) {
+        self.stop();
         for d in self.dealers.drain(..) {
             let _ = d.join();
         }
@@ -327,10 +615,99 @@ mod tests {
     }
 
     #[test]
+    fn assembled_sessions_match_whole_session_deal() {
+        // The sharding acceptance property, inline edition: a session
+        // assembled from per-layer bank entries is bit-identical to a
+        // whole-session deal from the same session RNG — identical
+        // inference transcripts, not merely correct ones.
+        use crate::protocol::server::run_inference;
+        let plan = tiny_plan();
+        let seed = 0x5EED;
+        let pool = MaterialPool::start(plan.clone(), 3, 2, seed);
+        pool.wait_ready(3);
+        let mut rng = Rng::new(9);
+        let input: Vec<crate::field::Fp> =
+            (0..6).map(|i| crate::field::Fp::from_i64(900 + i)).collect();
+        for seq in 0..3u64 {
+            let lease = pool.lease(&mut rng);
+            assert!(!lease.was_dry);
+            let (client, server, offline_bytes) =
+                offline_network_mt(&plan, &mut session_rng(seed, seq), 1);
+            assert_eq!(lease.session.offline_bytes, offline_bytes, "seq {seq}");
+            let (bank_logits, _) =
+                run_inference(&lease.session.client, &lease.session.server, &input);
+            let (inline_logits, _) = run_inference(&client, &server, &input);
+            assert_eq!(bank_logits, inline_logits, "seq {seq}");
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn spine_binding_check_catches_mixed_seed_material() {
+        // Same-seed pieces bind; pieces from a dealer restarted with a
+        // different base seed must be detected before assembly.
+        let plan = tiny_plan();
+        let spine_a = deal_spine(&plan, &mut session_rng(1, 0));
+        let layers_a: Vec<ReluEntry> = (0..plan.n_relu_layers())
+            .map(|li| deal_relu_layer_mt(&plan, &mut session_rng(1, 0), li, 1))
+            .collect();
+        assert!(spine_binds_layers(&plan, &spine_a, &layers_a));
+        let layers_b: Vec<ReluEntry> = (0..plan.n_relu_layers())
+            .map(|li| deal_relu_layer_mt(&plan, &mut session_rng(2, 0), li, 1))
+            .collect();
+        assert!(!spine_binds_layers(&plan, &spine_a, &layers_b));
+    }
+
+    #[test]
+    fn banks_never_overshoot_target() {
+        // Claim accounting bounds every bank at exactly `target` even
+        // with many racing dealers (the old pool could overshoot to
+        // target + n_dealers − 1).
+        let pool = MaterialPool::start(tiny_plan(), 3, 4, 11);
+        let mut rng = Rng::new(4);
+        for _ in 0..3 {
+            pool.wait_ready(3);
+            assert_eq!(pool.banked(), 3);
+            for (b, depth) in pool.bank_depths().into_iter().enumerate() {
+                assert!(depth <= 3, "bank {b} overshot: {depth}");
+            }
+            let _ = pool.lease(&mut rng);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn wait_ready_returns_on_stop_with_dead_dealer() {
+        // A remote source that never connects must not hang warmup: once
+        // stop() is called, wait_ready returns instead of waiting on the
+        // ready condvar forever.
+        let connect: Arc<dyn Fn() -> Result<RemoteDealer> + Send + Sync> =
+            Arc::new(|| Err(crate::util::error::Error::msg("dealer unreachable")));
+        let pool = MaterialPool::start_with_source(
+            tiny_plan(),
+            2,
+            1,
+            5,
+            RefillSource::Remote { connect, batch: 2 },
+            None,
+            1,
+        );
+        std::thread::scope(|scope| {
+            let waiter = scope.spawn(|| pool.wait_ready(1));
+            std::thread::sleep(Duration::from_millis(100));
+            pool.stop();
+            waiter.join().expect("wait_ready returned after stop");
+        });
+        assert_eq!(pool.banked(), 0);
+        pool.shutdown();
+    }
+
+    #[test]
     fn remote_refill_source_fills_bank() {
         // The deployment shape: material produced by a dealer "process"
-        // (in-memory channel here), streamed in over the wire codec, and
-        // banked like any inline deal — with latency/bytes recorded.
+        // (in-memory channel here), streamed in layer-granularly over
+        // the wire codec, and banked per layer — with latency/bytes and
+        // bank depths recorded.
         let plan = tiny_plan();
         let metrics = Arc::new(Metrics::default());
         let plan_c = plan.clone();
@@ -356,9 +733,11 @@ mod tests {
         assert!(pool.produced() >= 3);
         let snap = metrics.snapshot();
         assert!(snap.remote_refills >= 1, "refill rounds recorded");
-        assert!(snap.remote_sessions >= 3, "sessions recorded");
+        assert!(snap.remote_sessions >= 3, "sessions' worth (spines) recorded");
+        assert!(snap.layer_entries >= 6, "per-layer units recorded");
         assert!(snap.bytes_offline_wire > 0, "wire bytes recorded");
         assert!(snap.remote_refill_mean_us > 0.0, "fetch latency recorded");
+        assert_eq!(snap.bank_depths.len(), 2, "spine bank + one relu bank");
         pool.shutdown();
     }
 

@@ -27,8 +27,11 @@ pub struct ServiceConfig {
     pub seed: u64,
     /// When set, the material pool refills from a standalone dealer at
     /// this TCP address ([`crate::wire::dealer`]) instead of dealing
-    /// inline; refill latency and bytes-on-wire land in [`Metrics`].
+    /// inline, streaming material layer by layer; refill latency,
+    /// bytes-on-wire, and per-bank depths land in [`Metrics`].
     pub dealer_addr: Option<String>,
+    /// Per-layer entries fetched per remote refill round trip.
+    pub refill_batch: usize,
 }
 
 impl Default for ServiceConfig {
@@ -41,6 +44,7 @@ impl Default for ServiceConfig {
             batch: BatchPolicy::default(),
             seed: 0xC1CA,
             dealer_addr: None,
+            refill_batch: 4,
         }
     }
 }
@@ -66,7 +70,7 @@ impl PiService {
                 let plan = plan.clone();
                 RefillSource::Remote {
                     connect: Arc::new(move || RemoteDealer::connect_tcp(&addr, plan.clone())),
-                    batch: 4,
+                    batch: cfg.refill_batch,
                 }
             }
         };

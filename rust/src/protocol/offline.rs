@@ -207,6 +207,25 @@ pub fn offline_relu_layer_mt(
     )
 }
 
+/// Peek only the `r_out` column of a layer deal — the one cross-layer
+/// data dependency (the client's ReLU output mask becomes the next
+/// linear layer's input mask).
+///
+/// Forks the parent exactly as [`offline_relu_layer_mt`]'s column
+/// schedule would ([`COL_GARBLE`], [`COL_RV`], then [`COL_ROUT`] — the
+/// later columns never feed back into the parent, so stopping there is
+/// safe) and draws the `r_out` column alone. This is what lets a dealer
+/// produce the mask chain *through* a layer without garbling it:
+/// standalone per-layer dealing walks the chain with peeks and spends
+/// garbling effort only on the requested layer, yet stays bit-identical
+/// to the same layer inside a whole-session deal.
+pub fn peek_r_out(n: usize, rng: &mut Rng) -> Vec<Fp> {
+    let _ = rng.fork(COL_GARBLE);
+    let _ = rng.fork(COL_RV);
+    let mut rng_rout = rng.fork(COL_ROUT);
+    (0..n).map(|_| random_fp(&mut rng_rout)).collect()
+}
+
 /// Convenience used by tests/benches: PosZero truncated variant.
 pub fn circa_variant(k: u32) -> ReluVariant {
     ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero }
@@ -265,6 +284,25 @@ mod tests {
         assert_eq!(c1.r_v, c4.r_v);
         assert_eq!(c1.r_out, c4.r_out);
         assert_eq!(s1.encodings.label0(), s4.encodings.label0());
+    }
+
+    #[test]
+    fn peek_r_out_matches_full_deal() {
+        // The chain peek must reproduce the real deal's r_out column
+        // exactly (same parent state, same forks) for every variant —
+        // it is the contract standalone layer dealing stands on.
+        let mut data_rng = Rng::new(41);
+        let xc: Vec<Fp> = (0..7).map(|_| random_fp(&mut data_rng)).collect();
+        for variant in [
+            ReluVariant::BaselineRelu,
+            ReluVariant::NaiveSign,
+            ReluVariant::StochasticSign { mode: FaultMode::NegPass },
+            circa_variant(8),
+        ] {
+            let (c, _) = offline_relu_layer(variant, &xc, &mut Rng::new(0xBEE5));
+            let peeked = peek_r_out(xc.len(), &mut Rng::new(0xBEE5));
+            assert_eq!(peeked, c.r_out, "{variant:?}");
+        }
     }
 
     #[test]

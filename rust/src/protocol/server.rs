@@ -8,7 +8,7 @@ use super::channel::Channel;
 use super::client::{run_client, ClientLayer, ClientNet};
 use super::linear::{offline_linear, online_linear, LinearOp};
 use super::messages::Message;
-use super::offline::ServerReluMaterial;
+use super::offline::{ClientReluMaterial, ServerReluMaterial};
 use super::online::{decode_server_shares, encode_server_labels, OnlineReluStats};
 use crate::beaver;
 use crate::circuits::spec::ReluVariant;
@@ -77,6 +77,216 @@ impl NetworkPlan {
     pub fn rescale_of(&self, relu_idx: usize) -> u32 {
         self.rescale_bits.get(relu_idx).copied().unwrap_or(0)
     }
+
+    /// Number of ReLU layers (one between each consecutive linear pair).
+    pub fn n_relu_layers(&self) -> usize {
+        self.linears.len().saturating_sub(1)
+    }
+}
+
+// ------------------------------------------------- per-layer schedule
+//
+// The session-level RNG schedule is *per-layer forked*: the session RNG
+// is forked once per layer slot, in fixed order (linear 0, relu 0,
+// linear 1, relu 1, …), and each layer's draws come only from its own
+// fork. Inside a ReLU fork the column schedule of
+// [`super::offline::offline_relu_layer_mt`] applies unchanged. The only
+// cross-layer data dependency — a ReLU's `r_out` column becoming the
+// next linear layer's input mask — is recoverable without garbling via
+// [`super::offline::peek_r_out`], so any single ReLU layer of a session
+// is a pure function of (session RNG, layer index): a dealer can deal
+// one layer standalone, spending matvecs (not garbling) on the chain
+// prefix, and ship bits identical to the same layer inside a
+// whole-session deal. This is what layer-granular streaming
+// ([`crate::wire::dealer`]) and the layer-sharded bank
+// ([`crate::coordinator::pool`]) are built on.
+
+/// Derive the session RNG of sequence number `seq` under `base_seed`.
+///
+/// Seq-addressed dealing: session `seq`'s material is a pure function of
+/// `(base_seed, seq)`, so independent dealer threads/connections sharing
+/// a base seed produce mutually consistent per-layer material, and a
+/// coordinator can ask for any layer of any future session by number.
+pub fn session_rng(base_seed: u64, seq: u64) -> Rng {
+    Rng::new(base_seed).fork(seq)
+}
+
+/// One linear layer's offline precompute: the client's input mask and
+/// output share, and the server's blind.
+pub struct LinearSlot {
+    /// Client mask `r` of this layer's input.
+    pub r: Vec<Fp>,
+    /// Client's (offline-known) share of the layer output `W·r − s`.
+    pub x_share: Vec<Fp>,
+    /// Server's additive blind `s`.
+    pub s: Vec<Fp>,
+}
+
+/// The cheap scalar spine of a session: every linear layer's
+/// [`LinearSlot`] plus the modeled HE byte ledger. Dealt in one unit
+/// (masks chain across layers, so the slots are not independent of each
+/// other — only of the heavy garbled material).
+pub struct LinearSpine {
+    pub slots: Vec<LinearSlot>,
+    pub he_bytes: u64,
+}
+
+fn linear_fork_tag(li: usize) -> u64 {
+    2 * li as u64
+}
+
+fn relu_fork_tag(li: usize) -> u64 {
+    2 * li as u64 + 1
+}
+
+/// What a session walk needs to produce.
+#[derive(Clone, Copy)]
+enum WalkMode {
+    /// Every linear slot and every ReLU layer (the whole-session deal).
+    Full,
+    /// Every linear slot; ReLU layers only peeked (the spine deal).
+    SpineOnly,
+    /// One ReLU layer: non-target linear slots are skipped entirely
+    /// (their forks still advance the schedule, but no matvec runs —
+    /// the mask chain needs only the `r_out` peeks), only the target's
+    /// `x_share` is computed, and the walk stops after the target. This
+    /// keeps standalone layer dealing at one matvec per request instead
+    /// of one per chain-prefix layer.
+    Layer(usize),
+}
+
+/// Walk the session schedule under `mode`. The fork order — linear 0,
+/// relu 0, linear 1, … — is the session-level RNG contract; every mode
+/// forks identically, so the pieces each mode produces are bit-identical
+/// across modes.
+fn walk_session(
+    plan: &NetworkPlan,
+    rng: &mut Rng,
+    deal_threads: usize,
+    mode: WalkMode,
+) -> (LinearSpine, Vec<Option<(ClientReluMaterial, ServerReluMaterial)>>) {
+    let n_lin = plan.linears.len();
+    assert!(n_lin > 0, "plan has no layers");
+    let mut slots = Vec::with_capacity(n_lin);
+    let mut relus = Vec::with_capacity(n_lin.saturating_sub(1));
+    let mut he_bytes = 0u64;
+    // The client's mask for the *input* of the next linear layer.
+    let mut r: Vec<Fp> = Vec::new();
+
+    for (li, op) in plan.linears.iter().enumerate() {
+        let mut lin_rng = rng.fork(linear_fork_tag(li));
+        let need_linear = match mode {
+            WalkMode::Full | WalkMode::SpineOnly => true,
+            WalkMode::Layer(t) => li == t,
+        };
+        if need_linear {
+            if li == 0 {
+                r = (0..op.in_dim()).map(|_| random_fp(&mut lin_rng)).collect();
+            }
+            assert_eq!(op.in_dim(), r.len(), "layer {li} dimension chain");
+            let off = offline_linear(op.as_ref(), &r, &mut lin_rng);
+            he_bytes += off.he_bytes;
+            slots.push(LinearSlot {
+                r: std::mem::take(&mut r),
+                x_share: off.client_x_share,
+                s: off.s,
+            });
+        }
+
+        if li + 1 == n_lin {
+            break;
+        }
+        // ReLU layer: the client's x-share is offline-known, so all
+        // offline ReLU material can be prepared now.
+        let mut relu_rng = rng.fork(relu_fork_tag(li));
+        let deal_this = match mode {
+            WalkMode::Full => true,
+            WalkMode::SpineOnly => false,
+            WalkMode::Layer(t) => li == t,
+        };
+        let r_out = if deal_this {
+            let x_share = &slots.last().expect("target slot computed").x_share;
+            let (cm, sm) = super::offline::offline_relu_layer_mt(
+                plan.variant,
+                x_share,
+                &mut relu_rng,
+                deal_threads,
+            );
+            let r_out = cm.r_out.clone();
+            relus.push(Some((cm, sm)));
+            r_out
+        } else {
+            relus.push(None);
+            super::offline::peek_r_out(op.out_dim(), &mut relu_rng)
+        };
+        // The client's output share of this ReLU (r_out) becomes the
+        // mask of the next linear layer's input — after the client's
+        // half of the fixed-point rescale (SecureML local share
+        // truncation; the server truncates its own half online).
+        let rescale = plan.rescale_of(li);
+        r = r_out
+            .iter()
+            .map(|&y| crate::nn::layers::truncate_share_local(y, rescale, true))
+            .collect();
+        if matches!(mode, WalkMode::Layer(t) if t == li) {
+            break;
+        }
+    }
+    (LinearSpine { slots, he_bytes }, relus)
+}
+
+/// Deal only the linear spine of a session (masks, HE precomputes,
+/// blinds) — no garbling, just matvecs and the cheap `r_out` peeks that
+/// carry the mask chain across ReLU layers.
+pub fn deal_spine(plan: &NetworkPlan, rng: &mut Rng) -> LinearSpine {
+    walk_session(plan, rng, 1, WalkMode::SpineOnly).0
+}
+
+/// Deal only ReLU layer `li` of a session, bit-identical to the same
+/// layer inside a whole-session deal from the same session RNG. The
+/// chain prefix costs only the earlier layers' `r_out` peeks plus one
+/// matvec for the target layer's `x_share`; garbling effort is spent on
+/// layer `li` alone.
+pub fn deal_relu_layer_mt(
+    plan: &NetworkPlan,
+    rng: &mut Rng,
+    li: usize,
+    deal_threads: usize,
+) -> (ClientReluMaterial, ServerReluMaterial) {
+    assert!(li + 1 < plan.linears.len(), "relu layer {li} out of range");
+    let (_, mut relus) = walk_session(plan, rng, deal_threads, WalkMode::Layer(li));
+    relus.pop().flatten().expect("requested layer dealt")
+}
+
+/// Assemble a full session from a spine and one dealt ReLU layer per
+/// gap. All parts must come from the *same* session RNG (the pool keys
+/// them by sequence number): a ReLU layer's OT'd client labels bake in
+/// the spine's `x_share` chain, so mixing sequences would silently
+/// desynchronize the material.
+pub fn assemble_session(
+    plan: &NetworkPlan,
+    spine: LinearSpine,
+    relus: Vec<(ClientReluMaterial, ServerReluMaterial)>,
+) -> (ClientNet, ServerNet, u64) {
+    let n_lin = plan.linears.len();
+    assert_eq!(spine.slots.len(), n_lin, "spine covers every linear layer");
+    assert_eq!(relus.len(), n_lin - 1, "one ReLU layer per linear gap");
+    let mut client_layers = Vec::with_capacity(2 * n_lin - 1);
+    let mut server_layers = Vec::with_capacity(2 * n_lin - 1);
+    let mut offline_bytes = spine.he_bytes;
+    let mut relus = relus.into_iter();
+    for (li, slot) in spine.slots.into_iter().enumerate() {
+        client_layers.push(ClientLayer::Linear { r: slot.r, x_share: slot.x_share });
+        server_layers.push(ServerLayer::Linear { op: plan.linears[li].clone(), s: slot.s });
+        if li + 1 < n_lin {
+            let (cm, sm) = relus.next().expect("relu layer per gap");
+            offline_bytes += cm.offline_bytes;
+            client_layers.push(ClientLayer::Relu(Box::new(cm)));
+            server_layers
+                .push(ServerLayer::Relu { mat: Box::new(sm), rescale: plan.rescale_of(li) });
+        }
+    }
+    (ClientNet { layers: client_layers }, ServerNet { layers: server_layers }, offline_bytes)
 }
 
 /// Run the full offline phase for a network: generates client masks,
@@ -90,50 +300,18 @@ pub fn offline_network(plan: &NetworkPlan, rng: &mut Rng) -> (ClientNet, ServerN
 /// up to `deal_threads` threads
 /// ([`super::offline::offline_relu_layer_mt`]'s column-wise schedule).
 /// Output is bit-identical for every thread count, so dealers can scale
-/// across cores without changing what they ship.
+/// across cores without changing what they ship — and, per the
+/// per-layer forked schedule above, identical to a session assembled
+/// from [`deal_spine`] plus one [`deal_relu_layer_mt`] per ReLU layer
+/// from the same session RNG.
 pub fn offline_network_mt(
     plan: &NetworkPlan,
     rng: &mut Rng,
     deal_threads: usize,
 ) -> (ClientNet, ServerNet, u64) {
-    let mut client_layers = Vec::new();
-    let mut server_layers = Vec::new();
-    let mut offline_bytes = 0u64;
-
-    // The client's mask for the *input* of the next linear layer.
-    let mut r: Vec<Fp> = (0..plan.linears[0].in_dim()).map(|_| random_fp(rng)).collect();
-
-    for (li, op) in plan.linears.iter().enumerate() {
-        assert_eq!(op.in_dim(), r.len(), "layer {li} dimension chain");
-        let off = offline_linear(op.as_ref(), &r, rng);
-        offline_bytes += off.he_bytes;
-        let x_share = off.client_x_share.clone();
-        client_layers.push(ClientLayer::Linear { r: r.clone(), x_share: x_share.clone() });
-        server_layers.push(ServerLayer::Linear { op: op.clone(), s: off.s });
-
-        let is_last = li + 1 == plan.linears.len();
-        if !is_last {
-            // ReLU layer: the client's x-share is offline-known, so all
-            // offline ReLU material can be prepared now.
-            let (cm, sm) =
-                super::offline::offline_relu_layer_mt(plan.variant, &x_share, rng, deal_threads);
-            offline_bytes += cm.offline_bytes;
-            // The client's output share of this ReLU (r_out) becomes the
-            // mask of the next linear layer's input — after the client's
-            // half of the fixed-point rescale (SecureML local share
-            // truncation; the server truncates its own half online).
-            let rescale = plan.rescale_of(li);
-            r = cm
-                .r_out
-                .iter()
-                .map(|&y| crate::nn::layers::truncate_share_local(y, rescale, true))
-                .collect();
-            client_layers.push(ClientLayer::Relu(Box::new(cm)));
-            server_layers.push(ServerLayer::Relu { mat: Box::new(sm), rescale });
-        }
-    }
-
-    (ClientNet { layers: client_layers }, ServerNet { layers: server_layers }, offline_bytes)
+    let (spine, relus) = walk_session(plan, rng, deal_threads, WalkMode::Full);
+    let relus = relus.into_iter().map(|o| o.expect("all layers dealt")).collect();
+    assemble_session(plan, spine, relus)
 }
 
 /// Server's half of the fixed-point rescale (no-op when `bits == 0`).

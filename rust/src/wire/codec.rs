@@ -29,7 +29,7 @@ use crate::gc::batch::{LayerEncodingBatch, LayerGcBatch};
 use crate::prf::{Delta, Label};
 use crate::protocol::client::{ClientLayer, ClientNet};
 use crate::protocol::offline::{ClientReluMaterial, ServerReluMaterial};
-use crate::protocol::server::{NetworkPlan, ServerLayer, ServerNet};
+use crate::protocol::server::{LinearSlot, LinearSpine, NetworkPlan, ServerLayer, ServerNet};
 use crate::util::bytes::{Reader, Writer};
 use crate::util::error::{Context, Result};
 use crate::{bail, ensure};
@@ -37,8 +37,10 @@ use crate::{bail, ensure};
 /// `b"CIRW"` as a little-endian u32.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"CIRW");
 
-/// Wire-format version; bump on any layout change.
-pub const VERSION: u16 = 1;
+/// Wire-format version; bump on any layout change. v2: layer-granular
+/// streaming (the `LayerBatch`/`Spine` payloads below) and the frame
+/// CRC extended to cover the frame header.
+pub const VERSION: u16 = 2;
 
 // ---------------------------------------------------------------- scalars
 
@@ -297,6 +299,109 @@ pub fn get_server_relu(r: &mut Reader) -> Result<ServerReluMaterial> {
     let want_triples = if spec.uses_beaver() { n } else { 0 };
     ensure!(triples.len() == want_triples, "triples {} != {want_triples}", triples.len());
     Ok(ServerReluMaterial { spec, encodings, output_decode, triples })
+}
+
+// ------------------------------------------------- layer-granular units
+
+/// Encode one ReLU layer of one session — both parties' halves, keyed by
+/// layer index and session sequence number. This is the payload of a
+/// `LayerBatch` frame: the unit layer-granular streaming ships, sized by
+/// the *layer*, never the session.
+pub fn put_layer_batch(
+    w: &mut Writer,
+    layer_idx: u32,
+    seq: u64,
+    cm: &ClientReluMaterial,
+    sm: &ServerReluMaterial,
+) {
+    w.u32(layer_idx);
+    w.u64(seq);
+    put_client_relu(w, cm);
+    put_server_relu(w, sm);
+}
+
+/// Decode a `LayerBatch` payload against the local plan: the layer index
+/// must name a ReLU layer, and both halves must match the plan's variant
+/// and that layer's width.
+pub fn get_layer_batch(
+    r: &mut Reader,
+    plan: &NetworkPlan,
+) -> Result<(u32, u64, ClientReluMaterial, ServerReluMaterial)> {
+    let layer_idx = r.u32()?;
+    let li = layer_idx as usize;
+    ensure!(
+        li < plan.n_relu_layers(),
+        "layer index {li} out of range ({} relu layers)",
+        plan.n_relu_layers()
+    );
+    let seq = r.u64()?;
+    let want_n = plan.linears[li].out_dim();
+    let cm = get_client_relu(r)?;
+    ensure!(
+        cm.variant() == plan.variant,
+        "layer {li}: client variant {:?} != plan {:?}",
+        cm.variant(),
+        plan.variant
+    );
+    ensure!(cm.n() == want_n, "layer {li}: {} client ReLUs != {want_n}", cm.n());
+    let sm = get_server_relu(r)?;
+    ensure!(
+        sm.variant() == plan.variant,
+        "layer {li}: server variant {:?} != plan {:?}",
+        sm.variant(),
+        plan.variant
+    );
+    ensure!(sm.n() == want_n, "layer {li}: {} server ReLUs != {want_n}", sm.n());
+    Ok((layer_idx, seq, cm, sm))
+}
+
+/// Encode a session's linear-precompute spine (the payload of a `Spine`
+/// frame): per linear layer the client mask, client x-share, and server
+/// blind, plus the modeled HE byte ledger.
+pub fn put_spine(w: &mut Writer, seq: u64, spine: &LinearSpine) {
+    w.u64(seq);
+    w.u64(spine.slots.len() as u64);
+    for slot in &spine.slots {
+        put_fp_vec(w, &slot.r);
+        put_fp_vec(w, &slot.x_share);
+        put_fp_vec(w, &slot.s);
+    }
+    w.u64(spine.he_bytes);
+}
+
+/// Decode a `Spine` payload, validating every slot's dimensions against
+/// the plan's layer chain.
+pub fn get_spine(r: &mut Reader, plan: &NetworkPlan) -> Result<(u64, LinearSpine)> {
+    let seq = r.u64()?;
+    let n = r.u64()? as usize;
+    ensure!(n == plan.linears.len(), "spine {n} slots != plan {}", plan.linears.len());
+    let mut slots = Vec::with_capacity(n);
+    for (li, op) in plan.linears.iter().enumerate() {
+        let mask = get_fp_vec(r)?;
+        ensure!(
+            mask.len() == op.in_dim(),
+            "spine slot {li}: mask dim {} != {}",
+            mask.len(),
+            op.in_dim()
+        );
+        let x_share = get_fp_vec(r)?;
+        ensure!(
+            x_share.len() == op.out_dim(),
+            "spine slot {li}: share dim {} != {}",
+            x_share.len(),
+            op.out_dim()
+        );
+        let s = get_fp_vec(r)?;
+        ensure!(
+            s.len() == op.out_dim(),
+            "spine slot {li}: blind dim {} != {}",
+            s.len(),
+            op.out_dim()
+        );
+        slots.push(LinearSlot { r: mask, x_share, s });
+    }
+    let he_bytes = r.u64()?;
+    Ok((seq, LinearSpine { slots, he_bytes }))
 }
 
 // --------------------------------------------------------------- manifest
@@ -619,6 +724,60 @@ mod tests {
                 "{variant:?} deltas"
             );
             assert_eq!(got.output_decode, sm.output_decode, "{variant:?} server decode");
+        }
+    }
+
+    #[test]
+    fn layer_batch_and_spine_roundtrip() {
+        use crate::protocol::linear::{LinearOp, Matrix};
+        use crate::protocol::server::{deal_relu_layer_mt, deal_spine, session_rng};
+        use std::sync::Arc;
+        let mut rng = Rng::new(8);
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(5, 6, 10, &mut rng)),
+            Arc::new(Matrix::random(4, 5, 10, &mut rng)),
+            Arc::new(Matrix::random(3, 4, 10, &mut rng)),
+        ];
+        let plan =
+            NetworkPlan { linears, variant: circa_variant(8), rescale_bits: vec![2, 1] };
+
+        let (cm, sm) = deal_relu_layer_mt(&plan, &mut session_rng(0xFACE, 3), 1, 1);
+        let mut w = Writer::new();
+        put_layer_batch(&mut w, 1, 3, &cm, &sm);
+        let mut r = Reader::new(&w.buf);
+        let (li, seq, c2, s2) = get_layer_batch(&mut r, &plan).unwrap();
+        assert_eq!(r.remaining(), 0);
+        assert_eq!((li, seq), (1, 3));
+        assert_eq!(c2.gc.tables(), cm.gc.tables());
+        assert_eq!(c2.client_labels, cm.client_labels);
+        assert_eq!(c2.r_v, cm.r_v);
+        assert_eq!(c2.r_out, cm.r_out);
+        assert_eq!(s2.encodings.label0(), sm.encodings.label0());
+        assert_eq!(s2.output_decode, sm.output_decode);
+
+        // Out-of-range layer index is rejected.
+        let mut w2 = Writer::new();
+        put_layer_batch(&mut w2, 7, 3, &cm, &sm);
+        assert!(get_layer_batch(&mut Reader::new(&w2.buf), &plan).is_err());
+
+        let spine = deal_spine(&plan, &mut session_rng(0xFACE, 3));
+        let mut w = Writer::new();
+        put_spine(&mut w, 3, &spine);
+        let mut r = Reader::new(&w.buf);
+        let (seq, sp2) = get_spine(&mut r, &plan).unwrap();
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(seq, 3);
+        assert_eq!(sp2.he_bytes, spine.he_bytes);
+        assert_eq!(sp2.slots.len(), spine.slots.len());
+        for (a, b) in sp2.slots.iter().zip(&spine.slots) {
+            assert_eq!(a.r, b.r);
+            assert_eq!(a.x_share, b.x_share);
+            assert_eq!(a.s, b.s);
+        }
+
+        // Truncation errors cleanly, never panics.
+        for cut in (0..w.buf.len()).step_by(13) {
+            assert!(get_spine(&mut Reader::new(&w.buf[..cut]), &plan).is_err(), "cut={cut}");
         }
     }
 

@@ -1,42 +1,77 @@
-//! The standalone dealer: garbles full sessions on demand and streams
-//! them to a coordinator over the framed transport.
+//! The standalone dealer: garbles offline material on demand and streams
+//! it to a coordinator over the framed transport — whole sessions
+//! (legacy round) or single layers (streaming round).
 //!
 //! Protocol (one connection):
 //!
 //! ```text
-//! coordinator → dealer : Hello   (SessionManifest of the local plan)
-//! dealer      → coord  : Hello   (its own manifest)  — or Error + close
-//! coordinator → dealer : Request (u32 session count)
+//! coordinator → dealer : Hello          (SessionManifest of the local plan)
+//! dealer      → coord  : Hello          (its own manifest)  — or Error + close
+//!
+//! ── legacy whole-session round ──────────────────────────────────────
+//! coordinator → dealer : Request        (u32 session count)
 //! dealer      → coord  : Session × count (one encoded session each)
-//! ...                    (any number of Request rounds)
+//!
+//! ── layer-granular round ────────────────────────────────────────────
+//! coordinator → dealer : RequestLayers  (kind u8 | layer u32 | count u32
+//!                                        | seq u64 × count)
+//! dealer      → coord  : LayerBatch × count   (kind = REQ_RELU_LAYER)
+//!              — or —  : Spine × count        (kind = REQ_SPINE)
+//!
+//! ...                    (rounds of either kind, freely mixed)
 //! coordinator → dealer : Bye
 //! ```
 //!
 //! The handshake compares manifests structurally (variant, layer dims,
 //! rescale schedule, fingerprint); a mismatch is rejected before any
-//! material moves. Sessions are dealt with
-//! [`crate::protocol::server::offline_network_mt`] — the exact same code
-//! path as the inline pool deal — and the column-wise RNG schedule makes
-//! the material a function of the seed alone, so a dealer fanning one
-//! session across many threads still ships bits identical to an inline
-//! single-threaded deal from the same RNG stream.
+//! material moves.
+//!
+//! The legacy round deals with
+//! [`crate::protocol::server::offline_network_mt`] from the connection's
+//! sequential RNG stream. The layer round is **seq-addressed**: each
+//! requested unit is dealt from
+//! [`session_rng`]`(base_seed, seq)` — a pure function of the dealer's
+//! base seed and the session sequence number — via
+//! [`crate::protocol::server::deal_relu_layer_mt`] /
+//! [`crate::protocol::server::deal_spine`]. The per-layer forked session
+//! schedule makes a standalone layer bit-identical to the same layer
+//! inside a whole-session deal from the same session RNG, so a
+//! coordinator can assemble sessions from independently fetched layers
+//! (across any number of connections to dealers sharing the base seed)
+//! and the largest frame on the wire is bounded by the largest single
+//! layer batch or the spine (which carries no GC material), never the
+//! session.
 
 use super::codec::{self, SessionManifest};
 use super::frame::{Channel, Framed, MemChannel, MsgType, TcpChannel};
 use crate::coordinator::pool::Session;
-use crate::protocol::server::NetworkPlan;
+use crate::protocol::offline::{ClientReluMaterial, ServerReluMaterial};
+use crate::protocol::server::{
+    deal_relu_layer_mt, deal_spine, session_rng, LinearSpine, NetworkPlan,
+};
 use crate::util::bytes::{Reader, Writer};
 use crate::util::error::{Context, Result};
 use crate::util::Rng;
 use crate::{bail, ensure};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// Upper bound on sessions per Request (keeps a rogue coordinator from
 /// pinning a dealer thread forever).
 pub const MAX_SESSIONS_PER_REQUEST: u32 = 4096;
+
+/// Upper bound on units per RequestLayers round.
+pub const MAX_UNITS_PER_REQUEST: u32 = 4096;
+
+/// RequestLayers kind: deal ReLU layer `layer` of each listed seq.
+pub const REQ_RELU_LAYER: u8 = 0;
+
+/// RequestLayers kind: deal the linear-precompute spine of each listed
+/// seq (`layer` must be 0).
+pub const REQ_SPINE: u8 = 1;
 
 /// Deal one full session (both parties' nets) from the dealer's RNG on
 /// one thread.
@@ -56,13 +91,17 @@ pub fn deal_session_mt(plan: &NetworkPlan, rng: &mut Rng, deal_threads: usize) -
 }
 
 /// Serve one dealer connection until `Bye` or peer close, dealing each
-/// session across up to `deal_threads` threads. Returns `Ok` on an
-/// orderly goodbye, `Err` on protocol violations or transport failure
-/// (callers serving many connections just log and move on).
+/// unit across up to `deal_threads` threads. Legacy `Request` rounds
+/// draw from `rng` (the connection's sequential stream); `RequestLayers`
+/// rounds are seq-addressed from `base_seed` so every connection to
+/// dealers sharing that seed serves mutually consistent layers. Returns
+/// `Ok` on an orderly goodbye, `Err` on protocol violations or transport
+/// failure (callers serving many connections just log and move on).
 pub fn serve_connection(
     mut framed: Framed,
     plan: &NetworkPlan,
     rng: &mut Rng,
+    base_seed: u64,
     deal_threads: usize,
 ) -> Result<()> {
     let local = SessionManifest::of_plan(plan);
@@ -96,6 +135,51 @@ pub fn serve_connection(
                 for _ in 0..count {
                     let session = deal_session_mt(plan, rng, deal_threads);
                     framed.send(MsgType::Session, &codec::encode_session(&session))?;
+                }
+            }
+            MsgType::RequestLayers => {
+                let mut r = Reader::new(&frame.payload);
+                let kind = r.u8()?;
+                let layer = r.u32()? as usize;
+                let count = r.u32()?;
+                ensure!(
+                    (1..=MAX_UNITS_PER_REQUEST).contains(&count),
+                    "bad unit count {count}"
+                );
+                let mut seqs = Vec::with_capacity(count as usize);
+                for _ in 0..count {
+                    seqs.push(r.u64()?);
+                }
+                ensure!(r.remaining() == 0, "trailing bytes in RequestLayers");
+                match kind {
+                    REQ_RELU_LAYER => {
+                        ensure!(
+                            layer < plan.n_relu_layers(),
+                            "layer {layer} out of range ({} relu layers)",
+                            plan.n_relu_layers()
+                        );
+                        for seq in seqs {
+                            let (cm, sm) = deal_relu_layer_mt(
+                                plan,
+                                &mut session_rng(base_seed, seq),
+                                layer,
+                                deal_threads,
+                            );
+                            let mut w = Writer::new();
+                            codec::put_layer_batch(&mut w, layer as u32, seq, &cm, &sm);
+                            framed.send(MsgType::LayerBatch, &w.buf)?;
+                        }
+                    }
+                    REQ_SPINE => {
+                        ensure!(layer == 0, "spine request names layer {layer}");
+                        for seq in seqs {
+                            let spine = deal_spine(plan, &mut session_rng(base_seed, seq));
+                            let mut w = Writer::new();
+                            codec::put_spine(&mut w, seq, &spine);
+                            framed.send(MsgType::Spine, &w.buf)?;
+                        }
+                    }
+                    other => bail!("unknown RequestLayers kind {other}"),
                 }
             }
             MsgType::Bye => return Ok(()),
@@ -178,9 +262,104 @@ impl RemoteDealer {
         Ok(out)
     }
 
+    /// Fetch ReLU layer `layer` of each session in `seqs` (blocking
+    /// round trip). Returned in request order as `(seq, client half,
+    /// server half)`. Any error poisons the handle — reconnect.
+    pub fn fetch_layers(
+        &mut self,
+        layer: usize,
+        seqs: &[u64],
+    ) -> Result<Vec<(u64, ClientReluMaterial, ServerReluMaterial)>> {
+        ensure!(!self.poisoned, "connection poisoned by an earlier error; reconnect");
+        let res = self.fetch_layers_inner(layer, seqs);
+        if res.is_err() {
+            self.poisoned = true;
+        }
+        res
+    }
+
+    fn fetch_layers_inner(
+        &mut self,
+        layer: usize,
+        seqs: &[u64],
+    ) -> Result<Vec<(u64, ClientReluMaterial, ServerReluMaterial)>> {
+        self.send_layer_request(REQ_RELU_LAYER, layer as u32, seqs)?;
+        let mut out = Vec::with_capacity(seqs.len());
+        for &want_seq in seqs {
+            let frame = self.recv_unit(MsgType::LayerBatch)?;
+            let mut r = Reader::new(&frame.payload);
+            let (li, seq, cm, sm) = codec::get_layer_batch(&mut r, &self.plan)?;
+            ensure!(r.remaining() == 0, "trailing bytes after layer batch");
+            ensure!(
+                li as usize == layer && seq == want_seq,
+                "dealer answered layer {li} seq {seq}, wanted layer {layer} seq {want_seq}"
+            );
+            out.push((seq, cm, sm));
+        }
+        Ok(out)
+    }
+
+    /// Fetch the linear-precompute spine of each session in `seqs`.
+    /// Returned in request order. Any error poisons the handle.
+    pub fn fetch_spines(&mut self, seqs: &[u64]) -> Result<Vec<(u64, LinearSpine)>> {
+        ensure!(!self.poisoned, "connection poisoned by an earlier error; reconnect");
+        let res = self.fetch_spines_inner(seqs);
+        if res.is_err() {
+            self.poisoned = true;
+        }
+        res
+    }
+
+    fn fetch_spines_inner(&mut self, seqs: &[u64]) -> Result<Vec<(u64, LinearSpine)>> {
+        self.send_layer_request(REQ_SPINE, 0, seqs)?;
+        let mut out = Vec::with_capacity(seqs.len());
+        for &want_seq in seqs {
+            let frame = self.recv_unit(MsgType::Spine)?;
+            let mut r = Reader::new(&frame.payload);
+            let (seq, spine) = codec::get_spine(&mut r, &self.plan)?;
+            ensure!(r.remaining() == 0, "trailing bytes after spine");
+            ensure!(seq == want_seq, "dealer answered seq {seq}, wanted {want_seq}");
+            out.push((seq, spine));
+        }
+        Ok(out)
+    }
+
+    fn send_layer_request(&mut self, kind: u8, layer: u32, seqs: &[u64]) -> Result<()> {
+        ensure!(
+            !seqs.is_empty() && seqs.len() <= MAX_UNITS_PER_REQUEST as usize,
+            "bad unit count {}",
+            seqs.len()
+        );
+        let mut w = Writer::new();
+        w.u8(kind);
+        w.u32(layer);
+        w.u32(seqs.len() as u32);
+        for &seq in seqs {
+            w.u64(seq);
+        }
+        self.framed.send(MsgType::RequestLayers, &w.buf)
+    }
+
+    fn recv_unit(&mut self, want: MsgType) -> Result<super::frame::Frame> {
+        let frame = self.framed.recv()?;
+        let got = frame.msg_type;
+        if got == want {
+            return Ok(frame);
+        }
+        if got == MsgType::Error {
+            bail!("dealer error: {}", String::from_utf8_lossy(&frame.payload));
+        }
+        bail!("expected {want:?}, got {got:?}")
+    }
+
     /// Total bytes received over this connection (frames included).
     pub fn bytes_received(&self) -> u64 {
         self.framed.bytes_received()
+    }
+
+    /// Largest single frame received (the layer-streaming size bound).
+    pub fn max_frame_received(&self) -> u64 {
+        self.framed.max_frame_received()
     }
 
     /// Orderly goodbye (best effort).
@@ -200,7 +379,13 @@ pub fn spawn_mem_dealer(
     let (coord_end, dealer_end) = MemChannel::pair();
     let handle = std::thread::spawn(move || {
         let mut rng = Rng::new(seed);
-        let _ = serve_connection(Framed::new(Box::new(dealer_end)), &plan, &mut rng, deal_threads);
+        let _ = serve_connection(
+            Framed::new(Box::new(dealer_end)),
+            &plan,
+            &mut rng,
+            seed,
+            deal_threads,
+        );
     });
     (Box::new(coord_end), handle)
 }
@@ -220,10 +405,25 @@ impl DealerHandle {
 
     /// Stop accepting and join the accept loop. Connections already being
     /// served run to completion on their own threads.
+    ///
+    /// The accept loop polls a non-blocking listener with a short sleep,
+    /// so this returns promptly even if the wake-up nudge below cannot
+    /// connect. The nudge targets loopback explicitly: a `0.0.0.0` (or
+    /// `::`) bind is not a connectable destination address on every
+    /// platform, and the old `connect(self.addr)` nudge could fail
+    /// there, which — against a blocking `accept()` — left `stop()`
+    /// joined forever.
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        // Nudge the blocking accept with a throwaway connection.
-        let _ = TcpStream::connect(self.addr);
+        let nudge = if self.addr.ip().is_unspecified() {
+            match self.addr {
+                SocketAddr::V4(_) => SocketAddr::from((Ipv4Addr::LOCALHOST, self.addr.port())),
+                SocketAddr::V6(_) => SocketAddr::from((Ipv6Addr::LOCALHOST, self.addr.port())),
+            }
+        } else {
+            self.addr
+        };
+        let _ = TcpStream::connect_timeout(&nudge, Duration::from_millis(200));
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
@@ -231,10 +431,10 @@ impl DealerHandle {
 }
 
 /// Bind `addr` (e.g. `127.0.0.1:0`) and serve dealer connections until
-/// stopped. Connection `c` deals from `Rng::new(seed ^ c·φ)` — the same
-/// per-thread stream derivation the inline pool uses, so a given
-/// connection's material is reproducible from the seed (and, under the
-/// column schedule, independent of `deal_threads`).
+/// stopped. For the legacy whole-session round, connection `c` deals
+/// from `Rng::new(seed ^ c·φ)` — a reproducible per-connection stream.
+/// Layer-granular rounds are seq-addressed from `seed` itself, so every
+/// connection serves mutually consistent per-layer material.
 pub fn spawn_tcp_dealer(
     addr: &str,
     plan: Arc<NetworkPlan>,
@@ -243,22 +443,35 @@ pub fn spawn_tcp_dealer(
 ) -> Result<DealerHandle> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
     let local = listener.local_addr().context("local addr")?;
+    // Non-blocking accept, polled with a short sleep: the loop observes
+    // the stop flag within one poll interval even when no nudge
+    // connection can reach the listener (see [`DealerHandle::stop`]).
+    listener.set_nonblocking(true).context("listener nonblocking")?;
     let stop = Arc::new(AtomicBool::new(false));
     let stop_accept = stop.clone();
     let accept_thread = std::thread::spawn(move || {
         let mut conn_id = 0u64;
-        for stream in listener.incoming() {
+        loop {
             if stop_accept.load(Ordering::Relaxed) {
                 return;
             }
-            let Ok(stream) = stream else { continue };
-            conn_id += 1;
-            let plan = plan.clone();
-            let mut rng = Rng::new(seed ^ conn_id.wrapping_mul(0x9E3779B97F4A7C15));
-            std::thread::spawn(move || {
-                let framed = Framed::new(Box::new(TcpChannel::new(stream)));
-                let _ = serve_connection(framed, &plan, &mut rng, deal_threads);
-            });
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    // The connection itself is served blocking.
+                    let _ = stream.set_nonblocking(false);
+                    conn_id += 1;
+                    let plan = plan.clone();
+                    let mut rng = Rng::new(seed ^ conn_id.wrapping_mul(0x9E3779B97F4A7C15));
+                    std::thread::spawn(move || {
+                        let framed = Framed::new(Box::new(TcpChannel::new(stream)));
+                        let _ = serve_connection(framed, &plan, &mut rng, seed, deal_threads);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(25)),
+            }
         }
     });
     Ok(DealerHandle { addr: local, stop, accept_thread: Some(accept_thread) })
@@ -305,6 +518,58 @@ mod tests {
             let (inline_logits, _) = run_inference(&inline.client, &inline.server, &input);
             assert_eq!(wire_logits, inline_logits);
         }
+    }
+
+    #[test]
+    fn layer_round_matches_standalone_deal_and_mixes_with_legacy() {
+        let plan = tiny_plan(1);
+        let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), 0xABC, 2);
+        let mut dealer = RemoteDealer::connect(chan, plan.clone()).unwrap();
+        let spines = dealer.fetch_spines(&[0, 1]).unwrap();
+        let layers = dealer.fetch_layers(0, &[1, 0]).unwrap();
+        // The legacy whole-session round still works on the same
+        // connection, interleaved with layer rounds.
+        let sessions = dealer.fetch(1).unwrap();
+        assert_eq!(sessions.len(), 1);
+        dealer.close();
+        let _ = dealer_thread.join();
+
+        // Everything fetched is seq-addressed: re-derivable locally from
+        // (base seed, seq) alone.
+        for (seq, spine) in &spines {
+            let local = deal_spine(&plan, &mut session_rng(0xABC, *seq));
+            assert_eq!(spine.he_bytes, local.he_bytes, "seq {seq}");
+            for (a, b) in spine.slots.iter().zip(&local.slots) {
+                assert_eq!(a.r, b.r, "seq {seq}");
+                assert_eq!(a.x_share, b.x_share, "seq {seq}");
+                assert_eq!(a.s, b.s, "seq {seq}");
+            }
+        }
+        for (seq, cm, sm) in &layers {
+            let (lc, ls) = deal_relu_layer_mt(&plan, &mut session_rng(0xABC, *seq), 0, 1);
+            assert_eq!(cm.gc.tables(), lc.gc.tables(), "seq {seq}");
+            assert_eq!(cm.client_labels, lc.client_labels, "seq {seq}");
+            assert_eq!(cm.r_out, lc.r_out, "seq {seq}");
+            assert_eq!(sm.encodings.label0(), ls.encodings.label0(), "seq {seq}");
+        }
+    }
+
+    #[test]
+    fn tcp_dealer_on_unspecified_bind_stops_promptly() {
+        // The regression this pins: a 0.0.0.0 bind whose stop() nudge
+        // cannot connect must still stop within the accept-poll interval
+        // instead of joining a blocked accept() forever.
+        let plan = tiny_plan(1);
+        let handle = spawn_tcp_dealer("0.0.0.0:0", plan.clone(), 2, 1).expect("bind");
+        // Prove it serves via loopback first.
+        let addr = format!("127.0.0.1:{}", handle.addr().port());
+        let mut dealer = RemoteDealer::connect_tcp(&addr, plan).unwrap();
+        let sessions = dealer.fetch(1).unwrap();
+        assert_eq!(sessions.len(), 1);
+        dealer.close();
+        let t = std::time::Instant::now();
+        handle.stop();
+        assert!(t.elapsed() < Duration::from_secs(5), "stop() hung");
     }
 
     #[test]

@@ -2,9 +2,18 @@
 //!
 //! A frame is `MSG_TYPE (1 B) | LEN (4 B le) | payload (LEN B) |
 //! CRC32 (4 B le)` where the CRC (IEEE 802.3 polynomial) covers the
-//! payload only. Framing is deliberately dumb: versioning and identity
-//! live in the handshake payload ([`super::codec::SessionManifest`]),
-//! so the frame layer never changes shape.
+//! **header and payload** (`MSG_TYPE | LEN | payload`), so a corrupted
+//! type byte cannot silently misroute an otherwise-valid payload and a
+//! corrupted LEN cannot misframe the stream undetected. Framing is
+//! otherwise deliberately dumb: versioning and identity live in the
+//! handshake payload ([`super::codec::SessionManifest`]).
+//!
+//! **One-time format change (layer-streaming revision):** the CRC
+//! originally covered the payload only; it now also covers the 5 header
+//! bytes. The frame layer has no version field of its own, so old and
+//! new endpoints reject each other's frames as CRC mismatches — the
+//! codec `VERSION` was bumped in the same revision, making the break
+//! explicit at the handshake for any peer that gets that far.
 //!
 //! The byte transport underneath is the [`Channel`] trait with two
 //! implementations: [`MemChannel`] (in-process duplex over byte queues,
@@ -43,6 +52,14 @@ pub enum MsgType {
     Bye = 4,
     /// Fatal rejection: payload is a UTF-8 message.
     Error = 5,
+    /// Coordinator → dealer: layer-granular work order (kind, layer
+    /// index, explicit session sequence numbers).
+    RequestLayers = 6,
+    /// Dealer → coordinator: one ReLU layer of one session, both
+    /// parties' halves.
+    LayerBatch = 7,
+    /// Dealer → coordinator: the linear-precompute spine of one session.
+    Spine = 8,
 }
 
 impl MsgType {
@@ -53,6 +70,9 @@ impl MsgType {
             3 => Ok(MsgType::Session),
             4 => Ok(MsgType::Bye),
             5 => Ok(MsgType::Error),
+            6 => Ok(MsgType::RequestLayers),
+            7 => Ok(MsgType::LayerBatch),
+            8 => Ok(MsgType::Spine),
             other => bail!("unknown message type {other}"),
         }
     }
@@ -94,13 +114,20 @@ const fn crc_table() -> [u32; 256] {
 
 static CRC_TABLE: [u32; 256] = crc_table();
 
+const CRC_INIT: u32 = 0xFFFF_FFFF;
+
+/// Feed `data` through the CRC register (no init/finalize) — lets the
+/// receive path checksum header and payload without concatenating them.
+fn crc32_feed(mut state: u32, data: &[u8]) -> u32 {
+    for &b in data {
+        state = CRC_TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
 /// CRC-32 (IEEE 802.3) of a byte slice.
 pub fn crc32(data: &[u8]) -> u32 {
-    let mut c = 0xFFFF_FFFFu32;
-    for &b in data {
-        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
-    }
-    c ^ 0xFFFF_FFFF
+    crc32_feed(CRC_INIT, data) ^ CRC_INIT
 }
 
 /// Framing layer over a boxed [`Channel`], with byte accounting for the
@@ -109,11 +136,12 @@ pub struct Framed {
     chan: Box<dyn Channel>,
     bytes_sent: u64,
     bytes_received: u64,
+    max_frame_received: u64,
 }
 
 impl Framed {
     pub fn new(chan: Box<dyn Channel>) -> Self {
-        Self { chan, bytes_sent: 0, bytes_received: 0 }
+        Self { chan, bytes_sent: 0, bytes_received: 0, max_frame_received: 0 }
     }
 
     /// Send one frame (header + payload + CRC in a single write).
@@ -123,13 +151,16 @@ impl Framed {
         buf.push(msg_type as u8);
         buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
         buf.extend_from_slice(payload);
-        buf.extend_from_slice(&crc32(payload).to_le_bytes());
+        // CRC covers header + payload (everything written so far).
+        let crc = crc32(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
         self.chan.send_bytes(&buf)?;
         self.bytes_sent += buf.len() as u64;
         Ok(())
     }
 
-    /// Receive one frame, validating type, LEN bound, and CRC.
+    /// Receive one frame, validating type, LEN bound, and the
+    /// header-covering CRC.
     pub fn recv(&mut self) -> Result<Frame> {
         let mut header = [0u8; FRAME_HEADER_BYTES];
         self.chan.recv_exact(&mut header)?;
@@ -147,12 +178,15 @@ impl Framed {
         }
         let mut crc = [0u8; FRAME_CRC_BYTES];
         self.chan.recv_exact(&mut crc)?;
+        let want = crc32_feed(crc32_feed(CRC_INIT, &header), &payload) ^ CRC_INIT;
         ensure!(
-            u32::from_le_bytes(crc) == crc32(&payload),
+            u32::from_le_bytes(crc) == want,
             "frame CRC mismatch ({:?}, {len} B payload)",
             msg_type
         );
-        self.bytes_received += (FRAME_HEADER_BYTES + len + FRAME_CRC_BYTES) as u64;
+        let frame_bytes = (FRAME_HEADER_BYTES + len + FRAME_CRC_BYTES) as u64;
+        self.bytes_received += frame_bytes;
+        self.max_frame_received = self.max_frame_received.max(frame_bytes);
         Ok(Frame { msg_type, payload })
     }
 
@@ -162,6 +196,14 @@ impl Framed {
 
     pub fn bytes_received(&self) -> u64 {
         self.bytes_received
+    }
+
+    /// Largest single frame received so far (header + payload + CRC) —
+    /// the number the layer-streaming acceptance bound is about: for a
+    /// multi-layer plan it must track the largest *layer*, not the
+    /// session.
+    pub fn max_frame_received(&self) -> u64 {
+        self.max_frame_received
     }
 }
 
@@ -275,20 +317,56 @@ mod tests {
         // Two frames: (9-byte overhead + 8-byte payload) + (9 + 0).
         assert_eq!(a.bytes_sent(), 26);
         assert_eq!(b.bytes_received(), a.bytes_sent());
+        assert_eq!(b.max_frame_received(), 17);
+    }
+
+    /// A valid one-byte-payload frame with the header-covering CRC.
+    fn valid_raw_frame() -> Vec<u8> {
+        let mut raw = vec![MsgType::Session as u8];
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.push(b'x');
+        let crc = crc32(&raw);
+        raw.extend_from_slice(&crc.to_le_bytes());
+        raw
     }
 
     #[test]
     fn flipped_crc_is_rejected() {
         let (mut a, b) = MemChannel::pair();
         // A valid frame with its payload byte flipped after the CRC was
-        // computed: [type][len=1]['x' ^ 0xFF][crc('x')].
-        let mut raw = vec![MsgType::Session as u8];
-        raw.extend_from_slice(&1u32.to_le_bytes());
-        raw.push(b'x' ^ 0xFF);
-        raw.extend_from_slice(&crc32(b"x").to_le_bytes());
+        // computed over header + payload.
+        let mut raw = valid_raw_frame();
+        raw[FRAME_HEADER_BYTES] ^= 0xFF;
         a.send_bytes(&raw).unwrap();
         let mut b = Framed::new(Box::new(b));
         let err = b.recv().unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn header_type_flip_is_rejected() {
+        // The CRC covers the header: flipping the type byte between two
+        // *valid* message types (Session → Error) must surface as a CRC
+        // mismatch, not silently misroute the payload.
+        let (mut a, b) = MemChannel::pair();
+        let mut raw = valid_raw_frame();
+        raw[0] = MsgType::Error as u8;
+        a.send_bytes(&raw).unwrap();
+        let err = Framed::new(Box::new(b)).recv().unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn header_len_flip_is_rejected() {
+        // A LEN flip that still frames within the delivered bytes (1 →
+        // 0: the payload byte is misread as the CRC's first byte) must
+        // fail the header-covering CRC instead of yielding a bogus
+        // empty-payload frame.
+        let (mut a, b) = MemChannel::pair();
+        let mut raw = valid_raw_frame();
+        raw[1] = 0;
+        a.send_bytes(&raw).unwrap();
+        let err = Framed::new(Box::new(b)).recv().unwrap_err();
         assert!(err.to_string().contains("CRC"), "{err}");
     }
 

@@ -15,7 +15,10 @@
 //! MSG_TYPE (1 B) | LEN (4 B le) | payload (LEN B) | CRC32 (4 B le)
 //! ```
 //!
-//! `CRC32` is IEEE 802.3 over the payload only. `LEN` is bounded by
+//! `CRC32` is IEEE 802.3 over the **header and payload** (`MSG_TYPE |
+//! LEN | payload`), so a flipped type byte cannot misroute a valid
+//! payload between two known message types (a one-time format change —
+//! see the [`frame`] module doc). `LEN` is bounded by
 //! [`frame::MAX_FRAME_LEN`]; anything larger is rejected before
 //! allocation. The byte transport is the [`frame::Channel`] trait:
 //! [`frame::MemChannel`] (in-process duplex, tests/demos) or
@@ -23,22 +26,33 @@
 //!
 //! ## Message types ([`frame::MsgType`])
 //!
-//! | type    | dir            | payload                                |
-//! |---------|----------------|----------------------------------------|
-//! | Hello   | both           | encoded [`codec::SessionManifest`]     |
-//! | Request | coord → dealer | `u32` session count                    |
-//! | Session | dealer → coord | one encoded session                    |
-//! | Bye     | coord → dealer | empty                                  |
-//! | Error   | dealer → coord | UTF-8 rejection message                |
+//! | type          | dir            | payload                             |
+//! |---------------|----------------|-------------------------------------|
+//! | Hello         | both           | encoded [`codec::SessionManifest`]  |
+//! | Request       | coord → dealer | `u32` session count                 |
+//! | Session       | dealer → coord | one encoded session                 |
+//! | RequestLayers | coord → dealer | kind, layer index, explicit seqs    |
+//! | LayerBatch    | dealer → coord | one ReLU layer of one session       |
+//! | Spine         | dealer → coord | one session's linear precomputes    |
+//! | Bye           | coord → dealer | empty                               |
+//! | Error         | dealer → coord | UTF-8 rejection message             |
+//!
+//! `Request`/`Session` is the legacy whole-session round;
+//! `RequestLayers`/`LayerBatch`/`Spine` is the layer-granular streaming
+//! round ([`dealer`]), which keeps the largest frame bounded by the
+//! largest single layer batch or the linear spine (masks and blinds
+//! only — no GC material, so orders of magnitude below the session) —
+//! giant models never need GiB-scale frames.
 //!
 //! ## Versioning rules
 //!
 //! The `MAGIC | VERSION` preamble rides in the `Hello` manifest once per
 //! connection; material payloads carry no per-message version. Any
 //! change to a payload layout in [`codec`] requires bumping
-//! [`codec::VERSION`]; decoders reject other versions outright. The
-//! frame layout itself is frozen — evolution happens behind new message
-//! types and the version field, never by reshaping the frame.
+//! [`codec::VERSION`]; decoders reject other versions outright.
+//! Evolution happens behind new message types and the version field;
+//! the one reshaping of the frame itself (CRC coverage) is documented
+//! in [`frame`] and rode a `VERSION` bump.
 //!
 //! ## Trust model
 //!

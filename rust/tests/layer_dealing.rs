@@ -1,0 +1,168 @@
+//! Contract tests for the per-layer forked session schedule: any single
+//! ReLU layer (or the linear spine) dealt standalone must be
+//! **bit-identical** to the same piece inside a whole-session deal from
+//! the same session RNG — for every variant and truncation level — and a
+//! session assembled from standalone pieces must reproduce the whole
+//! deal's inference transcript exactly. This is the property the
+//! layer-sharded material pool and the dealer's `RequestLayers`
+//! streaming round stand on.
+
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::field::Fp;
+use circa::protocol::client::{ClientLayer, ClientNet};
+use circa::protocol::linear::{LinearOp, Matrix};
+use circa::protocol::offline::{ClientReluMaterial, ServerReluMaterial};
+use circa::protocol::server::{
+    assemble_session, deal_relu_layer_mt, deal_spine, offline_network_mt, run_inference,
+    session_rng, NetworkPlan, ServerLayer, ServerNet,
+};
+use circa::util::Rng;
+use std::sync::Arc;
+
+fn all_variants() -> Vec<ReluVariant> {
+    let mut v = vec![
+        ReluVariant::BaselineRelu,
+        ReluVariant::NaiveSign,
+        ReluVariant::StochasticSign { mode: FaultMode::PosZero },
+        ReluVariant::StochasticSign { mode: FaultMode::NegPass },
+    ];
+    for k in [0u32, 8, 12] {
+        v.push(ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero });
+        v.push(ReluVariant::TruncatedSign { k, mode: FaultMode::NegPass });
+    }
+    v
+}
+
+/// 6 → 5 → relu → 5 → 4 → relu → 4 → 3, optionally with a rescale
+/// schedule (the chain peek must honor the client-side truncation).
+fn plan(variant: ReluVariant, seed: u64, rescaled: bool) -> NetworkPlan {
+    let mut rng = Rng::new(seed);
+    let linears: Vec<Arc<dyn LinearOp>> = vec![
+        Arc::new(Matrix::random(5, 6, 20, &mut rng)),
+        Arc::new(Matrix::random(4, 5, 20, &mut rng)),
+        Arc::new(Matrix::random(3, 4, 20, &mut rng)),
+    ];
+    let rescale_bits = if rescaled { vec![1, 2] } else { Vec::new() };
+    NetworkPlan { linears, variant, rescale_bits }
+}
+
+fn client_relus(net: &ClientNet) -> Vec<&ClientReluMaterial> {
+    net.layers
+        .iter()
+        .filter_map(|l| match l {
+            ClientLayer::Relu(m) => Some(m.as_ref()),
+            ClientLayer::Linear { .. } => None,
+        })
+        .collect()
+}
+
+fn server_relus(net: &ServerNet) -> Vec<&ServerReluMaterial> {
+    net.layers
+        .iter()
+        .filter_map(|l| match l {
+            ServerLayer::Relu { mat, .. } => Some(mat.as_ref()),
+            ServerLayer::Linear { .. } => None,
+        })
+        .collect()
+}
+
+fn assert_layer_identical(
+    tag: &str,
+    (cm, sm): &(ClientReluMaterial, ServerReluMaterial),
+    full_c: &ClientReluMaterial,
+    full_s: &ServerReluMaterial,
+) {
+    assert_eq!(cm.gc.tables(), full_c.gc.tables(), "{tag}: tables");
+    assert_eq!(cm.gc.output_decode(), full_c.gc.output_decode(), "{tag}: decode");
+    assert_eq!(cm.client_labels, full_c.client_labels, "{tag}: client labels");
+    assert_eq!(cm.r_v, full_c.r_v, "{tag}: r_v");
+    assert_eq!(cm.r_out, full_c.r_out, "{tag}: r_out");
+    assert_eq!(cm.offline_bytes, full_c.offline_bytes, "{tag}: offline bytes");
+    assert_eq!(sm.encodings.label0(), full_s.encodings.label0(), "{tag}: label0 arena");
+    assert_eq!(
+        sm.encodings.deltas().iter().map(|d| d.0).collect::<Vec<_>>(),
+        full_s.encodings.deltas().iter().map(|d| d.0).collect::<Vec<_>>(),
+        "{tag}: deltas"
+    );
+    assert_eq!(sm.output_decode, full_s.output_decode, "{tag}: server decode");
+    assert_eq!(cm.triples.len(), full_c.triples.len(), "{tag}: triple count");
+    for (i, (a, b)) in cm.triples.iter().zip(&full_c.triples).enumerate() {
+        assert_eq!((a.a, a.b, a.ab), (b.a, b.b, b.ab), "{tag}: client triple {i}");
+    }
+    for (i, (a, b)) in sm.triples.iter().zip(&full_s.triples).enumerate() {
+        assert_eq!((a.a, a.b, a.ab), (b.a, b.b, b.ab), "{tag}: server triple {i}");
+    }
+}
+
+#[test]
+fn standalone_layer_matches_in_session_deal_all_variants() {
+    for (vi, variant) in all_variants().into_iter().enumerate() {
+        let p = plan(variant, 60 + vi as u64, vi % 2 == 0);
+        let base_seed = 0xA11 + vi as u64;
+        let seq = 5u64;
+        let (cn, sn, _) = offline_network_mt(&p, &mut session_rng(base_seed, seq), 1);
+        let full_c = client_relus(&cn);
+        let full_s = server_relus(&sn);
+        for li in 0..p.n_relu_layers() {
+            // Standalone deal fanned over 4 threads vs the 1-thread
+            // whole-session deal above: the per-layer forks plus the
+            // column schedule make them bit-identical.
+            let piece = deal_relu_layer_mt(&p, &mut session_rng(base_seed, seq), li, 4);
+            assert_layer_identical(
+                &format!("{variant:?} layer {li}"),
+                &piece,
+                full_c[li],
+                full_s[li],
+            );
+        }
+    }
+}
+
+#[test]
+fn standalone_spine_matches_in_session_deal() {
+    let p = plan(ReluVariant::TruncatedSign { k: 8, mode: FaultMode::PosZero }, 91, true);
+    let base_seed = 0xB22;
+    let seq = 2u64;
+    let (cn, sn, total_bytes) = offline_network_mt(&p, &mut session_rng(base_seed, seq), 1);
+    let spine = deal_spine(&p, &mut session_rng(base_seed, seq));
+    assert_eq!(spine.slots.len(), p.linears.len());
+
+    // Every linear slot must match the whole deal's linear layers.
+    let mut slot = 0usize;
+    for (cl, sl) in cn.layers.iter().zip(&sn.layers) {
+        if let (ClientLayer::Linear { r, x_share }, ServerLayer::Linear { s, .. }) = (cl, sl) {
+            assert_eq!(&spine.slots[slot].r, r, "slot {slot}: mask");
+            assert_eq!(&spine.slots[slot].x_share, x_share, "slot {slot}: x share");
+            assert_eq!(&spine.slots[slot].s, s, "slot {slot}: blind");
+            slot += 1;
+        }
+    }
+    assert_eq!(slot, p.linears.len());
+
+    // The byte ledger decomposes exactly: spine HE bytes + per-layer
+    // ReLU bytes = whole-session offline bytes.
+    let layer_bytes: u64 = client_relus(&cn).iter().map(|c| c.offline_bytes).sum();
+    assert_eq!(spine.he_bytes + layer_bytes, total_bytes);
+}
+
+#[test]
+fn assembled_from_standalone_pieces_matches_whole_deal_transcript() {
+    let p = plan(ReluVariant::TruncatedSign { k: 12, mode: FaultMode::NegPass }, 17, true);
+    let base_seed = 0xC33;
+    let seq = 9u64;
+    let (cn, sn, total_bytes) = offline_network_mt(&p, &mut session_rng(base_seed, seq), 2);
+
+    let spine = deal_spine(&p, &mut session_rng(base_seed, seq));
+    let relus: Vec<_> = (0..p.n_relu_layers())
+        .map(|li| deal_relu_layer_mt(&p, &mut session_rng(base_seed, seq), li, 3))
+        .collect();
+    let (cn2, sn2, bytes2) = assemble_session(&p, spine, relus);
+    assert_eq!(bytes2, total_bytes);
+
+    let input: Vec<Fp> = (0..6).map(|j| Fp::from_i64(1700 + 11 * j)).collect();
+    let (logits_a, stats_a) = run_inference(&cn, &sn, &input);
+    let (logits_b, stats_b) = run_inference(&cn2, &sn2, &input);
+    assert_eq!(logits_a, logits_b, "transcript logits");
+    assert_eq!(stats_a.bytes_to_client, stats_b.bytes_to_client);
+    assert_eq!(stats_a.bytes_to_server, stats_b.bytes_to_server);
+}

@@ -8,13 +8,17 @@
 use circa::circuits::spec::{FaultMode, ReluVariant};
 use circa::coordinator::{MaterialPool, Metrics, RefillSource};
 use circa::field::{random_fp, Fp};
+use circa::protocol::client::ClientLayer;
 use circa::protocol::linear::{LinearOp, Matrix};
 use circa::protocol::offline::offline_relu_layer;
-use circa::protocol::server::{offline_network, run_inference, NetworkPlan};
+use circa::protocol::server::{
+    offline_network, offline_network_mt, run_inference, session_rng, NetworkPlan, ServerLayer,
+};
 use circa::util::bytes::{Reader, Writer};
 use circa::util::Rng;
 use circa::wire::codec;
 use circa::wire::dealer::{deal_session, spawn_mem_dealer, spawn_tcp_dealer, RemoteDealer};
+use circa::wire::frame::{FRAME_CRC_BYTES, FRAME_HEADER_BYTES};
 use std::sync::Arc;
 
 fn all_variants() -> Vec<ReluVariant> {
@@ -191,6 +195,136 @@ fn tcp_dealer_refills_pool_and_serves() {
     assert!(snap.bytes_offline_wire > 0);
     pool.shutdown();
     handle.stop();
+}
+
+#[test]
+fn tcp_streaming_layer_refill_matches_inline_whole_session_deals() {
+    // The sharding acceptance property over a real socket: a session
+    // assembled from per-layer banks, streamed over TCP by the
+    // RequestLayers round, produces inference transcripts bit-identical
+    // to an inline whole-session deal from the same session RNG.
+    let plan = tiny_plan(ReluVariant::TruncatedSign { k: 8, mode: FaultMode::PosZero }, 21);
+    let dealer_seed = 0xFADE;
+    let handle = spawn_tcp_dealer("127.0.0.1:0", plan.clone(), dealer_seed, 2).expect("bind");
+    let addr = handle.addr().to_string();
+
+    let metrics = Arc::new(Metrics::default());
+    let plan_c = plan.clone();
+    let connect: Arc<dyn Fn() -> circa::util::error::Result<RemoteDealer> + Send + Sync> =
+        Arc::new(move || RemoteDealer::connect_tcp(&addr, plan_c.clone()));
+    let pool = MaterialPool::start_with_source(
+        plan.clone(),
+        3,
+        2,
+        9,
+        RefillSource::Remote { connect, batch: 2 },
+        Some(metrics.clone()),
+        1,
+    );
+    pool.wait_ready(3);
+
+    let input: Vec<Fp> = (0..6).map(|j| Fp::from_i64(1400 + 5 * j)).collect();
+    let mut rng = Rng::new(6);
+    for seq in 0..3u64 {
+        let lease = pool.lease(&mut rng);
+        assert!(!lease.was_dry, "bank must be fed by the streaming dealer");
+        let (client, server, offline_bytes) =
+            offline_network_mt(&plan, &mut session_rng(dealer_seed, seq), 1);
+        assert_eq!(lease.session.offline_bytes, offline_bytes, "seq {seq}: bytes");
+        let (wire_logits, wire_stats) =
+            run_inference(&lease.session.client, &lease.session.server, &input);
+        let (inline_logits, inline_stats) = run_inference(&client, &server, &input);
+        assert_eq!(wire_logits, inline_logits, "seq {seq}: transcript logits");
+        assert_eq!(wire_stats.bytes_to_client, inline_stats.bytes_to_client, "seq {seq}");
+        assert_eq!(wire_stats.bytes_to_server, inline_stats.bytes_to_server, "seq {seq}");
+    }
+
+    // tiny_plan has 2 ReLU layers: each session's worth is 1 spine + 2
+    // layer batches.
+    let snap = metrics.snapshot();
+    assert!(snap.remote_refills >= 1);
+    assert!(snap.remote_sessions >= 3, "spines: {}", snap.remote_sessions);
+    assert!(snap.layer_entries >= 9, "units: {}", snap.layer_entries);
+    assert!(snap.bytes_offline_wire > 0);
+    assert_eq!(snap.bank_depths.len(), 3, "spine bank + 2 relu banks");
+    pool.shutdown();
+    handle.stop();
+}
+
+#[test]
+fn streamed_frames_bounded_by_largest_layer_not_session() {
+    // The wire-size acceptance bound: for a multi-layer plan, the
+    // largest frame of the layer-granular round is one layer batch —
+    // strictly smaller than the whole-session frame the legacy round
+    // would ship.
+    let plan = tiny_plan(ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero }, 23);
+    let dealer_seed = 0xB0B;
+    let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), dealer_seed, 1);
+    let mut dealer = RemoteDealer::connect(chan, plan.clone()).unwrap();
+    let spines = dealer.fetch_spines(&[0]).unwrap();
+    assert_eq!(spines.len(), 1);
+    for li in 0..plan.n_relu_layers() {
+        let layers = dealer.fetch_layers(li, &[0]).unwrap();
+        assert_eq!(layers.len(), 1);
+    }
+    let max_frame = dealer.max_frame_received();
+    dealer.close();
+    let _ = dealer_thread.join();
+
+    // Re-derive the same session inline to size the comparison frames.
+    let (client, server, offline_bytes) =
+        offline_network_mt(&plan, &mut session_rng(dealer_seed, 0), 1);
+    let session = circa::coordinator::pool::Session { client, server, offline_bytes };
+    let session_frame =
+        (codec::encode_session(&session).len() + FRAME_HEADER_BYTES + FRAME_CRC_BYTES) as u64;
+
+    // Largest single unit frame for this session: a layer batch or the
+    // spine (the spine carries no GC material, so it only matters for
+    // degenerate wide-linear/narrow-ReLU shapes — not this plan, where
+    // the assertion below confirms a layer batch dominates).
+    let mut largest_layer_frame = 0u64;
+    let relu_c: Vec<_> = session
+        .client
+        .layers
+        .iter()
+        .filter_map(|l| match l {
+            ClientLayer::Relu(m) => Some(m.as_ref()),
+            ClientLayer::Linear { .. } => None,
+        })
+        .collect();
+    let relu_s: Vec<_> = session
+        .server
+        .layers
+        .iter()
+        .filter_map(|l| match l {
+            ServerLayer::Relu { mat, .. } => Some(mat.as_ref()),
+            ServerLayer::Linear { .. } => None,
+        })
+        .collect();
+    for (li, (cm, sm)) in relu_c.iter().zip(&relu_s).enumerate() {
+        let mut w = Writer::new();
+        codec::put_layer_batch(&mut w, li as u32, 0, cm, sm);
+        let frame = (w.buf.len() + FRAME_HEADER_BYTES + FRAME_CRC_BYTES) as u64;
+        largest_layer_frame = largest_layer_frame.max(frame);
+    }
+    {
+        let spine = circa::protocol::server::deal_spine(&plan, &mut session_rng(dealer_seed, 0));
+        let mut w = Writer::new();
+        codec::put_spine(&mut w, 0, &spine);
+        let frame = (w.buf.len() + FRAME_HEADER_BYTES + FRAME_CRC_BYTES) as u64;
+        largest_layer_frame = largest_layer_frame.max(frame);
+    }
+
+    assert!(
+        max_frame <= largest_layer_frame,
+        "largest streamed frame {max_frame} exceeds the largest layer batch \
+         {largest_layer_frame}"
+    );
+    assert!(
+        max_frame < session_frame,
+        "largest streamed frame {max_frame} not smaller than the whole-session frame \
+         {session_frame}"
+    );
 }
 
 #[test]
