@@ -1,16 +1,18 @@
-//! Two-process private inference: offline material produced by a
-//! standalone dealer and streamed to the serving coordinator over the
-//! wire codec — the deployment split the paper's storage numbers are
-//! about (the dealer owns the offline phase; the server only spends).
-//! The coordinator's material pool refills **layer by layer** (seq-
-//! addressed `RequestLayers` rounds into per-layer banks), so the
-//! largest frame on the wire is one layer batch, never a whole session.
+//! Two-process **multi-model** private inference: offline material for
+//! two architectures produced by one standalone dealer and streamed to
+//! the serving coordinator over the wire codec — the deployment split
+//! the paper's storage numbers are about (the dealer owns the offline
+//! phase; the server only spends). The coordinator's material pool
+//! refills **layer by layer, per model** (fingerprint-addressed
+//! `RequestLayers` rounds into per-model, per-layer banks), so one
+//! connection feeds every registered model and the largest frame on the
+//! wire is one layer batch, never a whole session.
 //!
 //! Modes:
 //!
 //! ```bash
 //! # One-process demo: in-memory channel, then a real TCP socket on
-//! # localhost with a self-spawned dealer.
+//! # localhost with a self-spawned dealer serving both demo models.
 //! cargo run --release --example dealer_serve
 //!
 //! # Two real processes:
@@ -18,24 +20,27 @@
 //! cargo run --release --example dealer_serve -- --dealer 127.0.0.1:7700   # coordinator
 //! ```
 //!
-//! Both processes derive the same demo plan from `--plan-seed` (default
-//! 0xC1CA): the manifest handshake verifies the structure (variant, layer
-//! dims, rescale schedule); weight equality comes from the shared seed.
+//! Both processes derive the same demo registry from `--plan-seed`
+//! (default 0xC1CA): the manifest-set handshake verifies every model's
+//! structure *and* weight digest; per-model dealing base seeds are
+//! derived with [`model_base_seed`] from `--dealer-seed`, so the two
+//! models' seq spaces never collide.
 
 use circa::circuits::spec::{FaultMode, ReluVariant};
-use circa::coordinator::{PiService, ServiceConfig};
+use circa::coordinator::{model_base_seed, ModelConfig, ModelRegistry, PiService, ServiceConfig};
 use circa::field::Fp;
 use circa::protocol::linear::{LinearOp, Matrix};
 use circa::protocol::server::{run_inference, NetworkPlan};
 use circa::util::args::Args;
 use circa::util::{Rng, Timer};
-use circa::wire::dealer::{deal_session, spawn_mem_dealer, spawn_tcp_dealer, RemoteDealer};
+use circa::wire::dealer::{
+    deal_session, spawn_mem_dealer_multi, spawn_tcp_dealer_multi, RemoteDealer,
+};
 use circa::wire::SessionManifest;
 use std::sync::Arc;
 
-/// The shared demo plan: a tiny CNN-shaped stack (6 → 5 → relu → 5 → 4 →
-/// relu → 4 → 3) with Circa's truncated stochastic sign. Both processes
-/// must build it from the same seed.
+/// Demo model 1: a tiny CNN-shaped stack (6 → 5 → relu → 5 → 4 → relu →
+/// 4 → 3) with Circa's truncated stochastic sign.
 fn demo_plan(plan_seed: u64, k: u32) -> Arc<NetworkPlan> {
     let mut rng = Rng::new(plan_seed);
     let linears: Vec<Arc<dyn LinearOp>> = vec![
@@ -47,6 +52,34 @@ fn demo_plan(plan_seed: u64, k: u32) -> Arc<NetworkPlan> {
         linears,
         ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero },
     ))
+}
+
+/// Demo model 2: a shallower stack (6 → 4 → relu → 4 → 3) with k=0
+/// (exact stochastic sign) — a second architecture the same dealer and
+/// coordinator serve concurrently.
+fn demo_plan_2(plan_seed: u64) -> Arc<NetworkPlan> {
+    let mut rng = Rng::new(plan_seed ^ 0x5EC0);
+    let linears: Vec<Arc<dyn LinearOp>> = vec![
+        Arc::new(Matrix::random(4, 6, 20, &mut rng)),
+        Arc::new(Matrix::random(3, 4, 20, &mut rng)),
+    ];
+    Arc::new(NetworkPlan::unscaled(
+        linears,
+        ReluVariant::TruncatedSign { k: 0, mode: FaultMode::PosZero },
+    ))
+}
+
+/// Both processes build this registry identically from the shared
+/// seeds: fingerprints come from the plans, per-model dealing base
+/// seeds from `model_base_seed(dealer_seed, fingerprint)`.
+fn demo_registry(plan_seed: u64, dealer_seed: u64, k: u32) -> Arc<ModelRegistry> {
+    let mut reg = ModelRegistry::new();
+    for plan in [demo_plan(plan_seed, k), demo_plan_2(plan_seed)] {
+        let manifest = SessionManifest::of_plan(&plan);
+        let seed = model_base_seed(dealer_seed, manifest.fingerprint);
+        reg.register_with(plan, manifest, seed, 1.0).expect("register demo plan");
+    }
+    Arc::new(reg)
 }
 
 /// Exact-ReLU plaintext oracle over the same field arithmetic.
@@ -66,18 +99,21 @@ fn demo_input(i: usize) -> Vec<Fp> {
 }
 
 /// Phase 1: dealer behind an in-memory duplex channel, and proof that
-/// wire-delivered material is bit-equivalent to the inline deal.
-fn mem_channel_demo(plan: &Arc<NetworkPlan>, dealer_seed: u64, deal_threads: usize) {
+/// wire-delivered material is bit-equivalent to the inline deal —
+/// fetched per model over one connection.
+fn mem_channel_demo(registry: &Arc<ModelRegistry>, dealer_seed: u64, deal_threads: usize) {
     println!("\n--- phase 1: in-memory channel ({deal_threads} deal threads) ---");
-    let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), dealer_seed, deal_threads);
-    let mut dealer = RemoteDealer::connect(chan, plan.clone()).expect("mem handshake");
+    let (chan, dealer_thread) = spawn_mem_dealer_multi(registry.clone(), dealer_seed, deal_threads);
+    let mut dealer = RemoteDealer::connect(chan, registry.clone()).expect("mem handshake");
+    let fp1 = registry.fingerprints()[0];
+    let plan1 = registry.get(fp1).unwrap().plan.clone();
     let n = 3;
     let t = Timer::new();
-    let sessions = dealer.fetch(n).expect("fetch sessions");
+    let sessions = dealer.fetch(fp1, n).expect("fetch sessions");
     let fetch_s = t.elapsed_s();
     let wire_bytes = dealer.bytes_received();
     println!(
-        "fetched {n} sessions in {:.1} ms ({} B on wire, {} B/session)",
+        "fetched {n} sessions of model {fp1:#018x} in {:.1} ms ({} B on wire, {} B/session)",
         fetch_s * 1e3,
         wire_bytes,
         wire_bytes / n as u64
@@ -90,7 +126,7 @@ fn mem_channel_demo(plan: &Arc<NetworkPlan>, dealer_seed: u64, deal_threads: usi
     let mut inline_rng = Rng::new(dealer_seed);
     let mut identical = 0;
     for (i, session) in sessions.iter().enumerate() {
-        let inline = deal_session(plan, &mut inline_rng);
+        let inline = deal_session(&plan1, &mut inline_rng);
         let input = demo_input(i);
         let (wire_logits, _) = run_inference(&session.client, &session.server, &input);
         let (inline_logits, _) = run_inference(&inline.client, &inline.server, &input);
@@ -102,58 +138,81 @@ fn mem_channel_demo(plan: &Arc<NetworkPlan>, dealer_seed: u64, deal_threads: usi
     let _ = dealer_thread.join();
 }
 
-/// Phase 2: the serving coordinator pointed at a dealer address — the
-/// material pool refills over a real TCP socket.
-fn tcp_serving_demo(plan: &Arc<NetworkPlan>, addr: &str, n_requests: usize) {
-    println!("\n--- phase 2: coordinator against dealer at {addr} ---");
-    let svc = PiService::start(
-        plan.clone(),
-        ServiceConfig {
-            workers: 2,
-            pool_target: 8,
-            pool_dealers: 2,
-            dealer_addr: Some(addr.to_string()),
-            ..Default::default()
-        },
-    );
+/// Phase 2: the serving coordinator pointed at a dealer address — both
+/// models' material pools refill over one real TCP socket.
+fn tcp_serving_demo(registry: &Arc<ModelRegistry>, addr: &str, n_requests: usize) {
+    println!("\n--- phase 2: multi-model coordinator against dealer at {addr} ---");
+    let models: Vec<(Arc<NetworkPlan>, ModelConfig)> = registry
+        .entries()
+        .iter()
+        .map(|e| {
+            (e.plan.clone(), ModelConfig { base_seed: Some(e.base_seed), demand: e.demand })
+        })
+        .collect();
+    let svc = PiService::start_multi(models, ServiceConfig {
+        workers: 2,
+        pool_target: 8,
+        pool_dealers: 2,
+        dealer_addr: Some(addr.to_string()),
+        ..Default::default()
+    })
+    .expect("start multi-model service");
     svc.warmup(4);
-    println!("material bank warmed from remote dealer ({} sessions banked)", svc.pool.banked());
+    let fps = svc.models();
+    println!(
+        "material banks warmed from remote dealer ({} models, {} sessions banked each min)",
+        fps.len(),
+        svc.pool.banked()
+    );
 
     let t = Timer::new();
-    let rxs: Vec<_> = (0..n_requests).map(|i| svc.submit(demo_input(i))).collect();
-    let mut exact = 0;
-    for (i, rx) in rxs.into_iter().enumerate() {
+    // Mixed traffic: alternate requests across the two models.
+    let rxs: Vec<(usize, usize, _)> = (0..n_requests)
+        .map(|i| {
+            let m = i % fps.len();
+            (m, i, svc.submit_to(fps[m], demo_input(i)).expect("known model"))
+        })
+        .collect();
+    let mut exact = vec![0usize; fps.len()];
+    let mut served = vec![0usize; fps.len()];
+    for (m, i, rx) in rxs {
         let resp = rx.recv().expect("response");
+        assert_eq!(resp.model, fps[m], "response routed back with its model");
+        served[m] += 1;
+        let plan = &svc.pool.registry().get(fps[m]).unwrap().plan;
         if resp.logits == oracle(plan, &demo_input(i)) {
-            exact += 1;
+            exact[m] += 1;
         }
     }
     let wall = t.elapsed_s();
     let snap = svc.metrics.snapshot();
     let rate = n_requests as f64 / wall;
-    println!("served {n_requests} inferences in {wall:.2} s ({rate:.1} inf/s)");
-    println!("matches exact-ReLU oracle: {exact}/{n_requests} (Circa faults only |x| < 2^k)");
+    println!("served {n_requests} inferences in {wall:.2} s ({rate:.1} inf/s, mixed traffic)");
+    for (m, fp) in fps.iter().enumerate() {
+        let row = snap.models.iter().find(|r| r.fingerprint == *fp);
+        println!(
+            "  model {fp:#018x}: {}/{} match exact-ReLU oracle (Circa faults only |x| < 2^k)",
+            exact[m], served[m]
+        );
+        if let Some(row) = row {
+            println!(
+                "    {} completed, {} layer units fetched, {:.2} MB on wire, bank depths {:?}",
+                row.completed,
+                row.layer_entries,
+                row.bytes_offline_wire as f64 / 1e6,
+                row.bank_depths
+            );
+        }
+    }
     println!(
-        "remote refill: {} fetches, {} layer units ({} sessions' worth), \
-         {:.2} MB offline material on wire",
+        "fleet remote refill: {} fetches, fetch ms mean {:.1} p99 {:.1} (dry leases {}, \
+         mis-tagged drops {})",
         snap.remote_refills,
-        snap.layer_entries,
-        snap.remote_sessions,
-        snap.bytes_offline_wire as f64 / 1e6
-    );
-    println!(
-        "refill fetch ms: mean {:.1}  p99 {:.1}   (pool dry leases: {})",
         snap.remote_refill_mean_us / 1e3,
         snap.remote_refill_p99_us as f64 / 1e3,
-        snap.pool_dry_events
+        snap.pool_dry_events,
+        snap.fp_mismatch_drops
     );
-    if !snap.bank_depths.is_empty() {
-        println!(
-            "bank depths after serving: spine {} | relu layers {:?}",
-            snap.bank_depths[0],
-            &snap.bank_depths[1..]
-        );
-    }
     svc.shutdown();
 }
 
@@ -163,20 +222,24 @@ fn main() {
     let dealer_seed = args.get_u64("dealer-seed", 0xDEA1);
     let k = args.get_u64("k", 4) as u32;
     let n_requests = args.get_usize("requests", 16);
-    // Threads each dealt session's garble columns fan out across.
+    // Threads each dealt session's garble/triple columns fan out across.
     let deal_threads = args.get_usize("deal-threads", 4);
-    let plan = demo_plan(plan_seed, k);
-    let manifest = SessionManifest::of_plan(&plan);
-    println!(
-        "demo plan: {} linears, variant {}, manifest fingerprint {:#018x}",
-        plan.linears.len(),
-        plan.variant.name(),
-        manifest.fingerprint
-    );
+    let registry = demo_registry(plan_seed, dealer_seed, k);
+    println!("demo registry ({} models):", registry.len());
+    for e in registry.entries() {
+        println!(
+            "  {:#018x}: {} linears, variant {}, base seed {:#018x}",
+            e.fingerprint(),
+            e.plan.linears.len(),
+            e.plan.variant.name(),
+            e.base_seed
+        );
+    }
 
     if let Some(addr) = args.get("listen") {
         // Dealer process: serve until killed.
-        let handle = spawn_tcp_dealer(addr, plan, dealer_seed, deal_threads).expect("bind dealer");
+        let handle = spawn_tcp_dealer_multi(addr, registry, dealer_seed, deal_threads)
+            .expect("bind dealer");
         println!(
             "dealer listening on {} ({deal_threads} deal threads; ctrl-c to stop)",
             handle.addr()
@@ -188,18 +251,20 @@ fn main() {
 
     if let Some(addr) = args.get("dealer") {
         // Coordinator process against an external dealer.
-        tcp_serving_demo(&plan, addr, n_requests);
+        tcp_serving_demo(&registry, addr, n_requests);
         return;
     }
 
     // Default: full single-process walkthrough — in-memory channel first,
     // then a self-spawned dealer on a real localhost TCP socket.
-    mem_channel_demo(&plan, dealer_seed, deal_threads);
-    let handle = spawn_tcp_dealer("127.0.0.1:0", plan.clone(), dealer_seed, deal_threads)
+    mem_channel_demo(&registry, dealer_seed, deal_threads);
+    let handle = spawn_tcp_dealer_multi("127.0.0.1:0", registry.clone(), dealer_seed, deal_threads)
         .expect("bind dealer");
     let addr = handle.addr().to_string();
     println!("\nspawned TCP dealer on {addr}");
-    tcp_serving_demo(&plan, &addr, n_requests);
+    tcp_serving_demo(&registry, &addr, n_requests);
     handle.stop();
-    println!("\ndone: private inference served end-to-end with material from another process.");
+    println!(
+        "\ndone: two models privately served end-to-end with material from another process."
+    );
 }

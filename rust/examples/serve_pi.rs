@@ -1,16 +1,22 @@
 //! End-to-end serving driver (EXPERIMENTS.md §E2E): load the *trained*
-//! demo CNN from `artifacts/`, stand up the PI serving coordinator
-//! (offline-material bank + batcher + worker pool), push the real test
-//! set through the full 2-party protocol, and report accuracy,
-//! latency percentiles, throughput, and communication — for baseline
-//! ReLU GCs vs Circa's truncated stochastic ReLUs.
+//! demo CNN from `artifacts/`, stand up **one multi-model PI serving
+//! coordinator** registering two models over the same weights — Circa's
+//! truncated stochastic ReLU and the baseline ReLU GC — push the real
+//! test set through the full 2-party protocol against both, and report
+//! a per-model table: accuracy, latency percentiles, throughput,
+//! communication, bank depths, and dealing counters.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_pi -- --requests 64 --k 12
 //! ```
+//!
+//! With `--dealer HOST:PORT` the material pool refills both models from
+//! a standalone dealer over one TCP connection; that dealer must have
+//! both plans registered (weight digests included) or the handshake is
+//! rejected.
 
 use circa::circuits::spec::{FaultMode, ReluVariant};
-use circa::coordinator::{PiService, ServiceConfig};
+use circa::coordinator::{ModelConfig, ModelSnapshot, PiService, ServiceConfig};
 
 use circa::nn::weights::{load_dataset, load_weights};
 use circa::protocol::server::NetworkPlan;
@@ -19,125 +25,77 @@ use circa::util::args::Args;
 use circa::util::Timer;
 use std::sync::Arc;
 
-#[allow(clippy::too_many_arguments)]
-fn run_variant(
-    name: &str,
-    variant: ReluVariant,
-    rescale_bits: Vec<u32>,
-    linears: Vec<Arc<dyn circa::protocol::linear::LinearOp>>,
-    dataset: &circa::nn::weights::Dataset,
-    n_requests: usize,
-    workers: usize,
-    deal_threads: usize,
-    dealer_addr: Option<String>,
-) {
-    println!("\n=== serving with {name} ===");
-    let plan = Arc::new(NetworkPlan { linears, variant, rescale_bits });
-    let svc = PiService::start(
-        plan,
-        ServiceConfig {
-            workers,
-            pool_target: 2 * n_requests.min(64),
-            pool_dealers: workers,
-            deal_threads,
-            dealer_addr,
-            ..Default::default()
-        },
-    );
-    eprintln!("warming material bank ...");
-    svc.warmup(n_requests.min(16));
+/// Per-model client-side tallies (the service's metrics keep the
+/// protocol-level view; accuracy needs the labels).
+struct ModelReport {
+    name: String,
+    fingerprint: u64,
+    requests: usize,
+    correct: usize,
+    latencies_ms: Vec<f64>,
+    bytes: u64,
+}
 
-    let t = Timer::new();
-    let rxs: Vec<_> = (0..n_requests)
-        .map(|i| {
-            let idx = i % dataset.n;
-            svc.submit(dataset.image(idx).to_vec())
-        })
-        .collect();
-    let mut correct = 0;
-    let mut latencies = Vec::new();
-    let mut bytes = 0u64;
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().expect("response");
-        let pred = resp
-            .logits
-            .iter()
-            .enumerate()
-            .max_by_key(|(_, v)| v.to_i64())
-            .map(|(c, _)| c as u32)
-            .unwrap();
-        if pred == dataset.labels[i % dataset.n] {
-            correct += 1;
+fn print_model_table(reports: &[ModelReport], rows: &[ModelSnapshot]) {
+    println!("\n=== per-model serving report ===");
+    for rep in reports {
+        let row = rows.iter().find(|r| r.fingerprint == rep.fingerprint);
+        println!("\n  model: {} (fingerprint {:#018x})", rep.name, rep.fingerprint);
+        println!("    requests          : {}", rep.requests);
+        println!(
+            "    accuracy (private): {:.2}%",
+            100.0 * rep.correct as f64 / rep.requests.max(1) as f64
+        );
+        println!(
+            "    latency ms        : p50 {:.1}  p99 {:.1}  mean {:.1}",
+            circa::util::stats::percentile(&rep.latencies_ms, 50.0),
+            circa::util::stats::percentile(&rep.latencies_ms, 99.0),
+            circa::util::stats::mean(&rep.latencies_ms)
+        );
+        println!("    online bytes/req  : {}", rep.bytes / rep.requests.max(1) as u64);
+        let Some(row) = row else { continue };
+        println!(
+            "    served / dry      : {} completed, {} dry leases",
+            row.completed, row.pool_dry_events
+        );
+        if row.deal_relus > 0 {
+            println!(
+                "    deal throughput   : {:.0} ReLUs/s per dealer slot ({} ReLUs dealt)",
+                row.deal_relus_per_s, row.deal_relus
+            );
         }
-        latencies.push((resp.queue_us + resp.online_us) as f64 / 1e3);
-        bytes += resp.bytes;
+        if row.remote_refills > 0 {
+            println!(
+                "    remote refill     : {} fetches, {} layer units, {} sessions' worth, \
+                 {:.2} MB on wire",
+                row.remote_refills,
+                row.layer_entries,
+                row.remote_sessions,
+                row.bytes_offline_wire as f64 / 1e6
+            );
+        }
+        if !row.bank_depths.is_empty() {
+            println!(
+                "    bank depths       : spine {} | relu layers {:?}",
+                row.bank_depths[0],
+                &row.bank_depths[1..]
+            );
+        }
     }
-    let wall = t.elapsed_s();
-    let snap = svc.metrics.snapshot();
-
-    println!("  requests          : {n_requests}");
-    println!("  accuracy (private): {:.2}%", 100.0 * correct as f64 / n_requests as f64);
-    println!("  throughput        : {:.1} inf/s", n_requests as f64 / wall);
-    println!(
-        "  latency ms        : p50 {:.1}  p99 {:.1}  mean {:.1}",
-        circa::util::stats::percentile(&latencies, 50.0),
-        circa::util::stats::percentile(&latencies, 99.0),
-        circa::util::stats::mean(&latencies)
-    );
-    println!("  online bytes/req  : {}", bytes / n_requests as u64);
-    println!(
-        "  bank: produced {} sessions, dry leases {}",
-        svc.pool.produced(),
-        snap.pool_dry_events
-    );
-    if snap.deal_relus > 0 {
-        println!(
-            "  deal throughput   : {:.0} ReLUs/s per dealer slot ({} ReLUs dealt locally)",
-            snap.deal_relus_per_s, snap.deal_relus
-        );
-    }
-    if snap.pool_dry_events > 0 {
-        println!(
-            "  dry inline-deal ms: mean {:.1}  p99 {:.1}",
-            snap.dry_deal_mean_us / 1e3,
-            snap.dry_deal_p99_us as f64 / 1e3
-        );
-    }
-    if snap.remote_refills > 0 {
-        println!(
-            "  remote refill     : {} fetches, {} layer units, {} sessions' worth, \
-             {:.2} MB on wire",
-            snap.remote_refills,
-            snap.layer_entries,
-            snap.remote_sessions,
-            snap.bytes_offline_wire as f64 / 1e6
-        );
-        println!(
-            "  refill fetch ms   : mean {:.1}  p99 {:.1}",
-            snap.remote_refill_mean_us / 1e3,
-            snap.remote_refill_p99_us as f64 / 1e3
-        );
-    }
-    if !snap.bank_depths.is_empty() {
-        println!(
-            "  bank depths       : spine {} | relu layers {:?}",
-            snap.bank_depths[0],
-            &snap.bank_depths[1..]
-        );
-    }
-    svc.shutdown();
 }
 
 fn main() {
     let args = Args::from_env();
     let n_requests = args.get_usize("requests", 48);
     let workers = args.get_usize("workers", 4);
-    // Threads each inline deal's garble columns fan out across (material
-    // is identical for any value — see the column-wise offline schedule).
+    // Threads each inline deal's garble/triple columns fan out across
+    // (material is identical for any value — see the column-wise offline
+    // schedule).
     let deal_threads = args.get_usize("deal-threads", 1);
     let k = args.get_u64("k", 12) as u32;
     // Optional standalone dealer (see examples/dealer_serve.rs): the
-    // material pool then refills over TCP instead of dealing inline.
+    // material pool then refills over TCP instead of dealing inline —
+    // the dealer must serve *both* registered models.
     let dealer_addr = args.get("dealer").map(|s| s.to_string());
 
     let dir = ArtifactDir::discover().expect("run `make artifacts` first");
@@ -153,27 +111,104 @@ fn main() {
     let q_acc = dir.manifest_f64("cnn_quantized_acc").unwrap_or(0.0);
     println!("plaintext quantized accuracy (exact ReLU): {:.2}%", q_acc * 100.0);
 
-    run_variant(
-        &format!("Circa ~sign_k (k={k}, PosZero)"),
-        ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero },
-        net.rescale_bits(),
-        net.linears(),
-        &ds,
-        n_requests,
-        workers,
-        deal_threads,
-        dealer_addr.clone(),
+    // Two models over the same trained weights: Circa's truncated
+    // stochastic sign and the baseline ReLU GC. One coordinator, one
+    // material pool (per-model shards), one worker fabric.
+    let circa_plan = Arc::new(NetworkPlan {
+        linears: net.linears(),
+        variant: ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero },
+        rescale_bits: net.rescale_bits(),
+    });
+    let base_plan = Arc::new(NetworkPlan {
+        linears: net.linears(),
+        variant: ReluVariant::BaselineRelu,
+        rescale_bits: net.rescale_bits(),
+    });
+    let svc = PiService::start_multi(
+        vec![
+            (circa_plan, ModelConfig::default()),
+            (base_plan, ModelConfig::default()),
+        ],
+        ServiceConfig {
+            workers,
+            pool_target: 2 * n_requests.min(64),
+            pool_dealers: workers,
+            deal_threads,
+            dealer_addr,
+            ..Default::default()
+        },
+    )
+    .expect("start multi-model service");
+    let models = svc.models();
+    let names =
+        [format!("Circa ~sign_k (k={k}, PosZero)"), "baseline ReLU GC (Delphi/Gazelle)".into()];
+    eprintln!("warming material banks (both models) ...");
+    svc.warmup(n_requests.min(16));
+
+    let t = Timer::new();
+    // Interleave submissions across the two models — one fleet, mixed
+    // traffic — and tally per model.
+    let rxs: Vec<(usize, usize, _)> = (0..2 * n_requests)
+        .map(|i| {
+            let m = i % 2;
+            let idx = (i / 2) % ds.n;
+            (m, idx, svc.submit_to(models[m], ds.image(idx).to_vec()).expect("known model"))
+        })
+        .collect();
+    let mut reports: Vec<ModelReport> = models
+        .iter()
+        .zip(names)
+        .map(|(&fingerprint, name)| ModelReport {
+            name,
+            fingerprint,
+            requests: 0,
+            correct: 0,
+            latencies_ms: Vec::new(),
+            bytes: 0,
+        })
+        .collect();
+    for (m, idx, rx) in rxs {
+        let resp = rx.recv().expect("response");
+        let pred = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| v.to_i64())
+            .map(|(c, _)| c as u32)
+            .unwrap();
+        let rep = &mut reports[m];
+        rep.requests += 1;
+        if pred == ds.labels[idx] {
+            rep.correct += 1;
+        }
+        rep.latencies_ms.push((resp.queue_us + resp.online_us) as f64 / 1e3);
+        rep.bytes += resp.bytes;
+    }
+    let wall = t.elapsed_s();
+    let snap = svc.metrics.snapshot();
+
+    println!(
+        "\nserved {} inferences across {} models in {:.2} s ({:.1} inf/s aggregate)",
+        2 * n_requests,
+        models.len(),
+        wall,
+        2.0 * n_requests as f64 / wall
     );
-    run_variant(
-        "baseline ReLU GC (Delphi/Gazelle)",
-        ReluVariant::BaselineRelu,
-        net.rescale_bits(),
-        net.linears(),
-        &ds,
-        n_requests,
-        workers,
-        deal_threads,
-        // The dealer serves one plan; the baseline pass deals inline.
-        None,
+    println!(
+        "fleet: produced {} sessions, dry leases {}, mis-tagged units dropped {}",
+        svc.pool.produced(),
+        snap.pool_dry_events,
+        snap.fp_mismatch_drops
     );
+    if snap.remote_refills > 0 {
+        println!(
+            "fleet remote refill: {} fetches, {:.2} MB on wire, fetch ms mean {:.1} p99 {:.1}",
+            snap.remote_refills,
+            snap.bytes_offline_wire as f64 / 1e6,
+            snap.remote_refill_mean_us / 1e3,
+            snap.remote_refill_p99_us as f64 / 1e3
+        );
+    }
+    print_model_table(&reports, &snap.models);
+    svc.shutdown();
 }

@@ -1,11 +1,17 @@
-//! Dynamic request batcher: max-size / max-delay grouping.
+//! Dynamic request batcher: max-size / max-delay grouping, split by
+//! model.
 //!
 //! PI requests are independent (each consumes its own material), so the
 //! batcher's job is *dispatch shaping*: group arrivals so the router can
 //! hand a worker a contiguous chunk, amortizing queue overhead and
 //! letting the metrics attribute queueing vs protocol time — the same
-//! role the batch scheduler plays in a clear-text serving stack.
+//! role the batch scheduler plays in a clear-text serving stack. In a
+//! multi-model coordinator a dispatch batch is additionally
+//! **model-homogeneous** ([`ModelBatch`]): every request in it leases
+//! from the same pool shard, so a worker touches one shard per batch and
+//! the metrics row it feeds is unambiguous.
 
+use super::router::Request;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
@@ -20,6 +26,28 @@ impl Default for BatchPolicy {
     fn default() -> Self {
         Self { max_size: 8, max_delay: Duration::from_millis(2) }
     }
+}
+
+/// One model-homogeneous dispatch batch: the router leases every
+/// request in it from the shard `model` names.
+pub struct ModelBatch {
+    pub model: u64,
+    pub requests: Vec<Request>,
+}
+
+/// Pull one arrival window from `rx` under the policy and split it into
+/// model-homogeneous batches, preserving arrival order within each
+/// model. Returns `None` when the channel is closed and drained.
+pub fn next_model_batches(rx: &Receiver<Request>, policy: BatchPolicy) -> Option<Vec<ModelBatch>> {
+    let window = next_batch(rx, policy)?;
+    let mut out: Vec<ModelBatch> = Vec::new();
+    for req in window {
+        match out.iter_mut().find(|b| b.model == req.model) {
+            Some(b) => b.requests.push(req),
+            None => out.push(ModelBatch { model: req.model, requests: vec![req] }),
+        }
+    }
+    Some(out)
 }
 
 /// Pull one batch from `rx` under the policy. Returns `None` when the
@@ -77,6 +105,29 @@ mod tests {
         let (tx, rx) = channel::<u32>();
         drop(tx);
         assert!(next_batch(&rx, BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn splits_window_by_model_preserving_order() {
+        let (reply, _keep) = channel();
+        let (tx, rx) = channel();
+        for (id, model) in [(0u64, 7u64), (1, 9), (2, 7), (3, 7), (4, 9)] {
+            tx.send(Request {
+                id,
+                model,
+                input: Vec::new(),
+                enqueued: Instant::now(),
+                reply: reply.clone(),
+            })
+            .unwrap();
+        }
+        let policy = BatchPolicy { max_size: 5, max_delay: Duration::from_millis(50) };
+        let batches = next_model_batches(&rx, policy).unwrap();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].model, 7);
+        assert_eq!(batches[0].requests.iter().map(|r| r.id).collect::<Vec<_>>(), [0, 2, 3]);
+        assert_eq!(batches[1].model, 9);
+        assert_eq!(batches[1].requests.iter().map(|r| r.id).collect::<Vec<_>>(), [1, 4]);
     }
 
     #[test]

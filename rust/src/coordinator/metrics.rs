@@ -1,11 +1,17 @@
-//! Service metrics: counters + latency histograms.
+//! Service metrics: counters + latency histograms, with **per-model
+//! labels** — every recorder takes the model fingerprint of the work it
+//! measures, so a multi-model coordinator reports one row per served
+//! plan (bank depths, refill counters, latency histograms) alongside
+//! the fleet-wide aggregates.
 
 use crate::util::stats::Histogram;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-/// Shared metrics sink (cheap atomics on the hot path; histograms behind
-/// a short-critical-section mutex).
+/// Shared metrics sink (cheap atomics on the fleet-wide hot path;
+/// histograms and the per-model table behind short-critical-section
+/// mutexes).
 #[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
@@ -23,9 +29,9 @@ pub struct Metrics {
     pub layer_entries: AtomicU64,
     /// Offline material received over the wire (frame bytes included).
     pub bytes_offline_wire: AtomicU64,
-    /// Latest per-bank staged depth gauge (index 0 = linear spines,
-    /// `1 + li` = ReLU layer `li`), published by the material pool.
-    bank_depths: Mutex<Vec<u64>>,
+    /// Remote units dropped at staging because their fingerprint tag
+    /// named another model (the pool's cross-model staging guard).
+    pub fp_mismatch_drops: AtomicU64,
     /// ReLUs dealt by local offline deals (pool refill + dry leases).
     pub deal_relus: AtomicU64,
     /// Wall-clock time spent in those deals, µs, summed across pool
@@ -34,6 +40,8 @@ pub struct Metrics {
     /// shows up in the throughput ratio).
     pub deal_wall_us: AtomicU64,
     inner: Mutex<Inner>,
+    /// Per-model rows, keyed by manifest fingerprint.
+    per_model: Mutex<BTreeMap<u64, ModelStats>>,
 }
 
 #[derive(Default)]
@@ -45,8 +53,48 @@ struct Inner {
     /// shortfall as the request path actually pays it.
     dry_deal_us: Histogram,
     /// Latency of one remote-dealer fetch round trip (request → all
-    /// sessions decoded).
+    /// units decoded).
     remote_refill_us: Histogram,
+}
+
+/// One model's accumulating row.
+#[derive(Default)]
+struct ModelStats {
+    completed: u64,
+    bytes_online: u64,
+    pool_dry_events: u64,
+    deal_relus: u64,
+    deal_wall_us: u64,
+    remote_refills: u64,
+    remote_sessions: u64,
+    layer_entries: u64,
+    bytes_offline_wire: u64,
+    online_us: Histogram,
+    total_us: Histogram,
+    /// Latest per-bank staged depth gauge (index 0 = linear spines,
+    /// `1 + li` = ReLU layer `li`), published by the model's pool shard.
+    bank_depths: Vec<u64>,
+}
+
+/// A per-model reporting row.
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    pub fingerprint: u64,
+    pub completed: u64,
+    pub bytes_online: u64,
+    pub pool_dry_events: u64,
+    pub online_p50_us: u64,
+    pub online_p99_us: u64,
+    pub online_mean_us: f64,
+    pub total_p50_us: u64,
+    pub total_p99_us: u64,
+    pub deal_relus: u64,
+    pub deal_relus_per_s: f64,
+    pub remote_refills: u64,
+    pub remote_sessions: u64,
+    pub layer_entries: u64,
+    pub bytes_offline_wire: u64,
+    pub bank_depths: Vec<u64>,
 }
 
 /// A snapshot for reporting.
@@ -68,10 +116,15 @@ pub struct Snapshot {
     pub remote_sessions: u64,
     pub layer_entries: u64,
     pub bytes_offline_wire: u64,
+    pub fp_mismatch_drops: u64,
     pub remote_refill_mean_us: f64,
     pub remote_refill_p99_us: u64,
-    /// Latest per-bank staged depth (0 = linear spines, then one entry
-    /// per ReLU layer). Empty until the pool publishes it.
+    /// Latest per-bank staged depth of **one** model (0 = linear
+    /// spines, then one entry per ReLU layer): with a single registered
+    /// model, that model's gauge (the single-model convenience); with
+    /// several, the first published row in fingerprint order — an
+    /// arbitrary model, so multi-model readers use [`Snapshot::models`].
+    /// Empty until a pool publishes it.
     pub bank_depths: Vec<u64>,
     pub deal_relus: u64,
     /// Offline dealing throughput, ReLUs per second of dealer-slot wall
@@ -79,70 +132,145 @@ pub struct Snapshot {
     /// `deal_threads`: an intra-deal fan-out shortens the wall time of
     /// every deal, raising this number.
     pub deal_relus_per_s: f64,
+    /// One row per model that has recorded anything, ordered by
+    /// fingerprint.
+    pub models: Vec<ModelSnapshot>,
+}
+
+fn rate_per_s(count: u64, wall_us: u64) -> f64 {
+    if wall_us == 0 {
+        0.0
+    } else {
+        count as f64 * 1e6 / wall_us as f64
+    }
 }
 
 impl Metrics {
-    pub fn record(&self, queue_us: u64, online_us: u64, bytes: u64) {
+    fn with_model<F: FnOnce(&mut ModelStats)>(&self, model: u64, f: F) {
+        let mut map = self.per_model.lock().unwrap();
+        f(map.entry(model).or_default());
+    }
+
+    /// Record one completed inference of `model`.
+    pub fn record(&self, model: u64, queue_us: u64, online_us: u64, bytes: u64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.bytes_online.fetch_add(bytes, Ordering::Relaxed);
-        let mut g = self.inner.lock().unwrap();
-        g.queue_us.record_us(queue_us);
-        g.online_us.record_us(online_us);
-        g.total_us.record_us(queue_us + online_us);
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.queue_us.record_us(queue_us);
+            g.online_us.record_us(online_us);
+            g.total_us.record_us(queue_us + online_us);
+        }
+        self.with_model(model, |m| {
+            m.completed += 1;
+            m.bytes_online += bytes;
+            m.online_us.record_us(online_us);
+            m.total_us.record_us(queue_us + online_us);
+        });
     }
 
-    /// Record a pool-dry lease: bumps the counter and feeds the measured
-    /// inline-deal latency into its histogram, so pool-dry tail latency
-    /// is visible (e.g. in `serve_pi`), not just its frequency.
-    pub fn record_dry_deal(&self, deal_us: u64) {
+    /// Record a pool-dry lease of `model`: bumps the counters and feeds
+    /// the measured inline-deal latency into its histogram, so pool-dry
+    /// tail latency is visible (e.g. in `serve_pi`), not just its
+    /// frequency.
+    pub fn record_dry_deal(&self, model: u64, deal_us: u64) {
         self.pool_dry_events.fetch_add(1, Ordering::Relaxed);
         self.inner.lock().unwrap().dry_deal_us.record_us(deal_us);
+        self.with_model(model, |m| m.pool_dry_events += 1);
     }
 
-    /// Record one whole-session remote refill round trip: fetch latency,
-    /// bytes that crossed the wire, and sessions delivered. Legacy
-    /// counterpart of [`Self::record_layer_refill`] for callers driving
-    /// `RemoteDealer::fetch` (the whole-`Session` round) directly — the
-    /// pool's layer-granular refill path no longer uses it.
-    pub fn record_remote_refill(&self, fetch_us: u64, bytes: u64, sessions: u64) {
+    /// Record one whole-session remote refill round trip for `model`:
+    /// fetch latency, bytes that crossed the wire, and sessions
+    /// delivered. Legacy counterpart of [`Self::record_layer_refill`]
+    /// for callers driving `RemoteDealer::fetch` (the whole-`Session`
+    /// round) directly — the pool's layer-granular refill path no longer
+    /// uses it.
+    pub fn record_remote_refill(&self, model: u64, fetch_us: u64, bytes: u64, sessions: u64) {
         self.remote_refills.fetch_add(1, Ordering::Relaxed);
         self.remote_sessions.fetch_add(sessions, Ordering::Relaxed);
         self.bytes_offline_wire.fetch_add(bytes, Ordering::Relaxed);
         self.inner.lock().unwrap().remote_refill_us.record_us(fetch_us);
+        self.with_model(model, |m| {
+            m.remote_refills += 1;
+            m.remote_sessions += sessions;
+            m.bytes_offline_wire += bytes;
+        });
     }
 
-    /// Record one layer-granular refill round trip: `entries` per-layer
-    /// units fetched, of which `spines` were linear spines (the
-    /// sessions'-worth counter — one spine per assembled session).
-    pub fn record_layer_refill(&self, fetch_us: u64, bytes: u64, entries: u64, spines: u64) {
+    /// Record one layer-granular refill round trip for `model`:
+    /// `entries` per-layer units fetched, of which `spines` were linear
+    /// spines (the sessions'-worth counter — one spine per assembled
+    /// session).
+    pub fn record_layer_refill(
+        &self,
+        model: u64,
+        fetch_us: u64,
+        bytes: u64,
+        entries: u64,
+        spines: u64,
+    ) {
         self.remote_refills.fetch_add(1, Ordering::Relaxed);
         self.layer_entries.fetch_add(entries, Ordering::Relaxed);
         self.remote_sessions.fetch_add(spines, Ordering::Relaxed);
         self.bytes_offline_wire.fetch_add(bytes, Ordering::Relaxed);
         self.inner.lock().unwrap().remote_refill_us.record_us(fetch_us);
+        self.with_model(model, |m| {
+            m.remote_refills += 1;
+            m.layer_entries += entries;
+            m.remote_sessions += spines;
+            m.bytes_offline_wire += bytes;
+        });
     }
 
-    /// Publish the pool's per-bank staged depths (gauge semantics: the
-    /// latest value wins).
-    pub fn set_bank_depths(&self, depths: Vec<u64>) {
-        *self.bank_depths.lock().unwrap() = depths;
+    /// Publish one model shard's per-bank staged depths (gauge
+    /// semantics: the latest value wins).
+    pub fn set_bank_depths(&self, model: u64, depths: Vec<u64>) {
+        self.with_model(model, |m| m.bank_depths = depths);
     }
 
-    /// Record one local offline deal: `relus` ReLUs' worth of material
-    /// produced in `us` microseconds of wall time. Fed by the pool
-    /// refill threads and by dry leases; the snapshot's
+    /// Record one local offline deal for `model`: `relus` ReLUs' worth
+    /// of material produced in `us` microseconds of wall time. Fed by
+    /// the pool refill threads and by dry leases; the snapshot's
     /// [`Snapshot::deal_relus_per_s`] is the running aggregate.
-    pub fn record_deal(&self, relus: u64, us: u64) {
+    pub fn record_deal(&self, model: u64, relus: u64, us: u64) {
         self.deal_relus.fetch_add(relus, Ordering::Relaxed);
         // Clamp to 1µs so a sub-microsecond deal (tiny test plans) still
         // registers time and the ratio stays finite.
         self.deal_wall_us.fetch_add(us.max(1), Ordering::Relaxed);
+        self.with_model(model, |m| {
+            m.deal_relus += relus;
+            m.deal_wall_us += us.max(1);
+        });
     }
 
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let deal_relus = self.deal_relus.load(Ordering::Relaxed);
         let deal_wall_us = self.deal_wall_us.load(Ordering::Relaxed);
+        let models: Vec<ModelSnapshot> = self
+            .per_model
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&fingerprint, m)| ModelSnapshot {
+                fingerprint,
+                completed: m.completed,
+                bytes_online: m.bytes_online,
+                pool_dry_events: m.pool_dry_events,
+                online_p50_us: m.online_us.percentile_us(50.0),
+                online_p99_us: m.online_us.percentile_us(99.0),
+                online_mean_us: m.online_us.mean_us(),
+                total_p50_us: m.total_us.percentile_us(50.0),
+                total_p99_us: m.total_us.percentile_us(99.0),
+                deal_relus: m.deal_relus,
+                deal_relus_per_s: rate_per_s(m.deal_relus, m.deal_wall_us),
+                remote_refills: m.remote_refills,
+                remote_sessions: m.remote_sessions,
+                layer_entries: m.layer_entries,
+                bytes_offline_wire: m.bytes_offline_wire,
+                bank_depths: m.bank_depths.clone(),
+            })
+            .collect();
         Snapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -160,15 +288,17 @@ impl Metrics {
             remote_sessions: self.remote_sessions.load(Ordering::Relaxed),
             layer_entries: self.layer_entries.load(Ordering::Relaxed),
             bytes_offline_wire: self.bytes_offline_wire.load(Ordering::Relaxed),
-            bank_depths: self.bank_depths.lock().unwrap().clone(),
+            fp_mismatch_drops: self.fp_mismatch_drops.load(Ordering::Relaxed),
+            bank_depths: models
+                .iter()
+                .map(|m| m.bank_depths.clone())
+                .find(|d| !d.is_empty())
+                .unwrap_or_default(),
             remote_refill_mean_us: g.remote_refill_us.mean_us(),
             remote_refill_p99_us: g.remote_refill_us.percentile_us(99.0),
             deal_relus,
-            deal_relus_per_s: if deal_wall_us == 0 {
-                0.0
-            } else {
-                deal_relus as f64 * 1e6 / deal_wall_us as f64
-            },
+            deal_relus_per_s: rate_per_s(deal_relus, deal_wall_us),
+            models,
         }
     }
 }
@@ -177,18 +307,41 @@ impl Metrics {
 mod tests {
     use super::*;
 
+    const M: u64 = 0xA0DE1;
+
     #[test]
     fn record_and_snapshot() {
         let m = Metrics::default();
         m.requests.fetch_add(3, Ordering::Relaxed);
-        m.record(100, 1000, 64);
-        m.record(200, 2000, 64);
+        m.record(M, 100, 1000, 64);
+        m.record(M, 200, 2000, 64);
         let s = m.snapshot();
         assert_eq!(s.requests, 3);
         assert_eq!(s.completed, 2);
         assert_eq!(s.bytes_online, 128);
         assert!(s.online_mean_us >= 1000.0);
         assert!(s.total_p99_us >= s.total_p50_us);
+        assert_eq!(s.models.len(), 1);
+        assert_eq!(s.models[0].fingerprint, M);
+        assert_eq!(s.models[0].completed, 2);
+        assert!(s.models[0].online_mean_us >= 1000.0);
+    }
+
+    #[test]
+    fn per_model_rows_are_separated() {
+        let m = Metrics::default();
+        m.record(1, 10, 100, 8);
+        m.record(2, 10, 100, 8);
+        m.record(2, 10, 100, 8);
+        m.record_dry_deal(2, 5_000);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.models.len(), 2);
+        assert_eq!(s.models[0].fingerprint, 1);
+        assert_eq!(s.models[0].completed, 1);
+        assert_eq!(s.models[1].completed, 2);
+        assert_eq!(s.models[0].pool_dry_events, 0);
+        assert_eq!(s.models[1].pool_dry_events, 1);
     }
 
     #[test]
@@ -197,23 +350,24 @@ mod tests {
         let s0 = m.snapshot();
         assert_eq!(s0.remote_refills, 0);
         assert_eq!(s0.bytes_offline_wire, 0);
-        m.record_remote_refill(2_000, 1_000_000, 4);
-        m.record_remote_refill(4_000, 500_000, 2);
+        m.record_remote_refill(M, 2_000, 1_000_000, 4);
+        m.record_remote_refill(M, 4_000, 500_000, 2);
         let s = m.snapshot();
         assert_eq!(s.remote_refills, 2);
         assert_eq!(s.remote_sessions, 6);
         assert_eq!(s.bytes_offline_wire, 1_500_000);
         assert!((s.remote_refill_mean_us - 3_000.0).abs() < 1e-9);
         assert!(s.remote_refill_p99_us >= 4_000);
+        assert_eq!(s.models[0].remote_sessions, 6);
     }
 
     #[test]
     fn layer_refill_and_bank_depths_recorded() {
         let m = Metrics::default();
         assert!(m.snapshot().bank_depths.is_empty());
-        m.record_layer_refill(1_000, 500_000, 3, 1);
-        m.record_layer_refill(3_000, 250_000, 2, 0);
-        m.set_bank_depths(vec![4, 2, 7]);
+        m.record_layer_refill(M, 1_000, 500_000, 3, 1);
+        m.record_layer_refill(M, 3_000, 250_000, 2, 0);
+        m.set_bank_depths(M, vec![4, 2, 7]);
         let s = m.snapshot();
         assert_eq!(s.remote_refills, 2);
         assert_eq!(s.layer_entries, 5);
@@ -221,25 +375,28 @@ mod tests {
         assert_eq!(s.bytes_offline_wire, 750_000);
         assert!((s.remote_refill_mean_us - 2_000.0).abs() < 1e-9);
         assert_eq!(s.bank_depths, vec![4, 2, 7]);
+        assert_eq!(s.models[0].bank_depths, vec![4, 2, 7]);
+        assert_eq!(s.models[0].layer_entries, 5);
     }
 
     #[test]
     fn deal_throughput_recorded() {
         let m = Metrics::default();
         assert_eq!(m.snapshot().deal_relus_per_s, 0.0, "no div-by-zero before first deal");
-        m.record_deal(500, 250_000);
-        m.record_deal(500, 250_000);
+        m.record_deal(M, 500, 250_000);
+        m.record_deal(M, 500, 250_000);
         let s = m.snapshot();
         assert_eq!(s.deal_relus, 1000);
         assert!((s.deal_relus_per_s - 2000.0).abs() < 1e-9);
+        assert!((s.models[0].deal_relus_per_s - 2000.0).abs() < 1e-9);
     }
 
     #[test]
     fn dry_deal_latency_recorded() {
         let m = Metrics::default();
         assert_eq!(m.snapshot().dry_deal_mean_us, 0.0);
-        m.record_dry_deal(5_000);
-        m.record_dry_deal(15_000);
+        m.record_dry_deal(M, 5_000);
+        m.record_dry_deal(M, 15_000);
         let s = m.snapshot();
         assert_eq!(s.pool_dry_events, 2);
         assert!((s.dry_deal_mean_us - 10_000.0).abs() < 1e-9);

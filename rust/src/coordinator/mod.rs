@@ -1,44 +1,66 @@
-//! The PI serving coordinator — Circa as a deployable service.
+//! The PI serving coordinator — Circa as a deployable **multi-model**
+//! service.
 //!
 //! Private inference has an unusual serving profile: every inference
 //! consumes single-use offline material (garbled circuits, OTs, Beaver
 //! triples — paper footnote 2), so a production server must *bank*
-//! material ahead of demand and spend it on the online path. Since the
-//! layer-batch refactor, that material is flat SoA per layer
-//! ([`crate::gc::batch`]): a banked session is a handful of contiguous
-//! buffers per ReLU layer (one circuit template, one table buffer, one
-//! label arena), which keeps dealer throughput allocation-light and makes
-//! a session's byte footprint an exact sum of buffer lengths — the shape
-//! wire serialization and cross-process session shipping need.
+//! material ahead of demand and spend it on the online path. And a
+//! production fleet never serves one architecture: Circa's per-ReLU
+//! savings compose with network-level ReLU reduction (CryptoNAS
+//! ReLU-budget networks, DeepReDuce-style culled ResNets), so one
+//! coordinator banks and serves material for several `NetworkPlan`s at
+//! once. Model identity is a manifest **fingerprint**
+//! ([`crate::wire::SessionManifest`] — variant, layer dims, rescale
+//! schedule, and a behavioral weight digest), threaded through every
+//! layer of the stack: the registry, the pool shards, the wire frames,
+//! the request path, and the metrics labels.
 //!
-//! The coordinator mirrors the vLLM-router shape adapted to that
-//! constraint:
+//! The coordinator mirrors the vLLM-router shape adapted to those
+//! constraints:
 //!
-//! * [`pool`] — the offline-material bank, sharded by layer: one bank of
-//!   linear-precompute spines plus one bank per ReLU layer, each keyed
-//!   by session sequence number; dealers refill the emptiest bank first
-//!   and a lease assembles a session from the banks' seq-aligned fronts
-//!   (bit-identical to a whole-session deal from the same session RNG).
-//!   A dry lease deals inline and reports the measured deal latency
-//!   ([`pool::Lease`]) so the shortfall lands in the latency histograms,
-//!   not just a counter. Refills come from a [`pool::RefillSource`]:
-//!   inline deal, or a standalone dealer process streaming layer batches
-//!   over [`crate::wire`] (`ServiceConfig::dealer_addr`).
+//! * [`registry`] — the [`ModelRegistry`]: fingerprint →
+//!   plan + per-model dealing base seed (disjoint seq namespaces) +
+//!   demand weight. Shared by the pool, the service front-end, and the
+//!   remote-dealer connector.
+//! * [`pool`] — the offline-material bank, sharded by **model and
+//!   layer**: per registered model, one bank of linear-precompute
+//!   spines plus one bank per ReLU layer, each keyed by session
+//!   sequence number in that model's namespace; dealers refill the
+//!   emptiest `(model, layer)` bank first (deficits weighted by demand
+//!   rate) and a lease assembles a session from one shard's seq-aligned
+//!   fronts (bit-identical to a whole-session deal from the same
+//!   session RNG). Remote units are fingerprint-checked at staging —
+//!   material for model B can never land in model A's shard. A dry
+//!   lease deals inline and reports the measured deal latency
+//!   ([`pool::Lease`]). Refills come from a [`pool::RefillSource`]:
+//!   inline deal, or a standalone dealer process streaming
+//!   model-addressed layer batches over [`crate::wire`]
+//!   (`ServiceConfig::dealer_addr`) — one connection serves every
+//!   registered model.
 //! * [`batcher`] — groups incoming requests into dispatch batches
-//!   (max-size / max-delay policy, the classic dynamic batcher).
+//!   (max-size / max-delay policy), split model-homogeneous
+//!   ([`batcher::ModelBatch`]) so each batch leases from one shard.
 //! * [`router`] — a worker pool running the 2-party online protocol for
-//!   each leased session.
+//!   each leased session; `Request`/`Response` carry the model
+//!   fingerprint.
 //! * [`metrics`] — latency histograms (online / queue / total /
-//!   dry-deal), throughput counters, pool-dry counters.
-//! * [`service`] — the assembled `PiService` front-end used by
+//!   dry-deal), throughput counters, pool-dry counters, and a
+//!   **per-model row** (bank depths, refill counters, latency
+//!   histograms) for every served plan.
+//! * [`service`] — the assembled `PiService` front-end:
+//!   [`PiService::start_multi`] serves a list of plans;
+//!   [`PiService::start`] is the single-plan thin wrapper (dealt bytes
+//!   identical to the pre-registry path for the same seed). Used by
 //!   `examples/serve_pi.rs` and the `circa serve` CLI.
 
 pub mod batcher;
 pub mod metrics;
 pub mod pool;
+pub mod registry;
 pub mod router;
 pub mod service;
 
-pub use metrics::Metrics;
+pub use metrics::{Metrics, ModelSnapshot};
 pub use pool::{Lease, MaterialPool, RefillSource};
-pub use service::{PiService, ServiceConfig};
+pub use registry::{model_base_seed, ModelEntry, ModelRegistry};
+pub use service::{ModelConfig, PiService, ServiceConfig};

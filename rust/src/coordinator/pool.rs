@@ -1,38 +1,52 @@
-//! The offline-material bank, sharded by layer.
+//! The offline-material bank, sharded by **model and layer**.
 //!
-//! Real PI networks concentrate their ReLUs in a few wide layers
-//! (CryptoNAS/DeepReShape-style budgets), so whole-session dealing
-//! wastes dealer throughput on cold layers while the hot layers gate
-//! session assembly. The bank therefore holds *per-layer* material: one
-//! bank of linear-precompute spines ([`LinearSpine`] — masks, HE
-//! precomputes, blinds; cheap) plus one bank per ReLU layer (garbled
-//! tables, label arenas, triples; the expensive part), each keyed by a
-//! session **sequence number**. Dealers refill the emptiest bank first,
-//! and [`MaterialPool::lease`] assembles a [`Session`] from the front
-//! entry of every bank.
+//! Real PI fleets serve several architectures at once (Circa's per-ReLU
+//! savings compose with CryptoNAS/DeepReDuce-style network-level ReLU
+//! reduction), and each network concentrates its ReLUs in a few wide
+//! layers. The bank therefore holds one **shard per registered model**
+//! (keyed by the plan's manifest fingerprint via [`ModelRegistry`]),
+//! and inside each shard *per-layer* banks: one bank of linear-precompute
+//! spines ([`LinearSpine`] — masks, HE precomputes, blinds; cheap) plus
+//! one bank per ReLU layer (garbled tables, label arenas, triples; the
+//! expensive part), each keyed by a session **sequence number** in that
+//! model's own seq namespace (its registry base seed). Dealers refill
+//! the emptiest `(model, layer)` bank first — deficits weighted by each
+//! model's demand rate (the registry entry's
+//! [`demand`](crate::coordinator::registry::ModelEntry::demand) weight)
+//! so a model taking 3× the traffic gets its banks refilled 3× as
+//! eagerly — and [`MaterialPool::lease_model`] assembles a
+//! [`Session`] from the front entry of every bank of that model's shard.
 //!
-//! Seq-addressing is what makes the shards composable: entry `(bank,
-//! seq)` is a pure function of `(base seed, seq, layer)` under the
-//! per-layer forked session schedule
+//! Seq-addressing is what makes the shards composable: entry `(model,
+//! bank, seq)` is a pure function of `(model base seed, seq, layer)`
+//! under the per-layer forked session schedule
 //! ([`crate::protocol::server::session_rng`]), so independently dealt
 //! entries with equal seqs assemble into exactly the session a whole
 //! inline deal from that session RNG would produce — bit-identical,
 //! whichever dealer thread or connection produced each piece. Leases pop
-//! every bank's front at once, so the fronts stay seq-aligned
-//! structurally.
+//! every bank's front at once, so a shard's fronts stay seq-aligned
+//! structurally, and per-model base seeds keep two shards' seq spaces
+//! from ever colliding.
 //!
 //! Refills come from a [`RefillSource`]: the inline deal (garble
-//! in-process) or a remote dealer process reached over [`crate::wire`]'s
-//! layer-granular streaming round — the paper's deployment shape, with
-//! the largest frame bounded by the largest single layer batch. Claim
-//! accounting is exact: a bank's staged + in-flight entries never exceed
-//! `target`, so racing dealer threads cannot overshoot the bank (the
-//! old whole-session pool could bank up to `target + n_dealers − 1`).
-//! Failed claims are abandoned back into a retry list, and
+//! in-process, from the shard's own base seed) or a remote dealer
+//! process reached over [`crate::wire`]'s model-addressed layer-granular
+//! streaming round — the paper's deployment shape, with the largest
+//! frame bounded by the largest single layer batch. Claim accounting is
+//! exact **per shard**: a bank's staged + in-flight entries never exceed
+//! `target`, so racing dealer threads cannot overshoot any bank and a
+//! hot model cannot starve accounting of a cold one (cross-model
+//! overshoot is structurally impossible — claims are committed against
+//! one `(model, bank)` pair). Remote units are fingerprint-checked at
+//! staging: a `LayerBatch`/`Spine` tagged with another model's
+//! fingerprint is dropped and counted
+//! ([`MaterialPool::fingerprint_drops`]), never banked into the wrong
+//! shard. Failed claims are abandoned back into a retry list, and
 //! [`MaterialPool::wait_ready`] is stop-aware, so a dealer that never
 //! connects cannot hang warmup or shutdown forever.
 
 use super::metrics::Metrics;
+use super::registry::ModelRegistry;
 use crate::protocol::client::ClientNet;
 use crate::protocol::offline::{ClientReluMaterial, ServerReluMaterial};
 use crate::protocol::server::{
@@ -63,9 +77,9 @@ impl Session {
     }
 }
 
-/// Outcome of [`MaterialPool::lease`]: the session plus where it came
-/// from. A dry lease carries the inline-deal latency so the caller can
-/// surface it as tail latency (the serving metrics record it).
+/// Outcome of [`MaterialPool::lease_model`]: the session plus where it
+/// came from. A dry lease carries the inline-deal latency so the caller
+/// can surface it as tail latency (the serving metrics record it).
 pub struct Lease {
     pub session: Session,
     pub was_dry: bool,
@@ -87,12 +101,14 @@ fn contiguous_from<V>(m: &BTreeMap<u64, V>, head: u64) -> usize {
     n as usize
 }
 
-/// The sharded bank. Bank index 0 holds linear spines; bank `1 + li`
-/// holds ReLU layer `li`. Entries are staged in `BTreeMap`s keyed by
-/// seq because completions can land out of order (racing dealers,
-/// retried claims); contiguity from `head` is what counts as ready.
+/// One model's layer-sharded bank. Bank index 0 holds linear spines;
+/// bank `1 + li` holds ReLU layer `li`. Entries are staged in
+/// `BTreeMap`s keyed by seq because completions can land out of order
+/// (racing dealers, retried claims); contiguity from `head` is what
+/// counts as ready.
 struct Bank {
-    /// Seq of the next session [`MaterialPool::lease`] will assemble.
+    /// Seq of the next session [`MaterialPool::lease_model`] will
+    /// assemble.
     head: u64,
     spines: BTreeMap<u64, LinearSpine>,
     relus: Vec<BTreeMap<u64, ReluEntry>>,
@@ -134,33 +150,20 @@ impl Bank {
         self.staged(b) + self.in_flight[b]
     }
 
-    /// Claim up to `max` seqs from the bank with the largest deficit
-    /// (the emptiest bank), retries first. `None` when every bank is at
-    /// target — claim accounting is what makes overshoot impossible.
-    fn claim_emptiest(&mut self, target: usize, max: usize) -> Option<(usize, Vec<u64>)> {
-        let (mut best, mut best_deficit) = (0usize, 0usize);
-        for b in 0..self.n_banks() {
-            let deficit = target.saturating_sub(self.supply(b));
-            if deficit > best_deficit {
-                best = b;
-                best_deficit = deficit;
-            }
-        }
-        if best_deficit == 0 {
-            return None;
-        }
-        let n = best_deficit.min(max.max(1));
-        let seqs = (0..n)
+    /// Claim up to `max` seqs from bank `b`, retries first (caller has
+    /// already picked `b` by weighted deficit — claim accounting is what
+    /// makes overshoot impossible).
+    fn claim(&mut self, b: usize, n: usize) -> Vec<u64> {
+        (0..n)
             .map(|_| {
-                self.in_flight[best] += 1;
-                self.retries[best].pop().unwrap_or_else(|| {
-                    let s = self.next_claim[best];
-                    self.next_claim[best] += 1;
+                self.in_flight[b] += 1;
+                self.retries[b].pop().unwrap_or_else(|| {
+                    let s = self.next_claim[b];
+                    self.next_claim[b] += 1;
                     s
                 })
             })
-            .collect();
-        Some((best, seqs))
+            .collect()
     }
 
     fn abandon(&mut self, b: usize, seqs: &[u64]) {
@@ -207,31 +210,79 @@ impl Bank {
     }
 }
 
+/// One registered model's shard of the pool.
+struct Shard {
+    fingerprint: u64,
+    plan: Arc<NetworkPlan>,
+    /// This model's seq-addressed dealing namespace (inline refills and
+    /// the shape the remote dealer must reproduce from *its* registry).
+    base_seed: u64,
+    /// Refill-priority weight (scales this shard's bank deficits).
+    demand: f64,
+    bank: Bank,
+    /// High-water mark of `head + ready_run()` — sessions ever made
+    /// assemblable from this shard.
+    high_water: u64,
+}
+
 struct Shared {
-    bank: Mutex<Bank>,
+    shards: Mutex<Vec<Shard>>,
     ready: Condvar,
     refill: Condvar,
     stop: AtomicBool,
     dry_leases: AtomicU64,
-    /// High-water mark of `head + ready_run()` — sessions ever made
-    /// assemblable from the banks.
-    produced: AtomicU64,
+    /// Remote units dropped because their fingerprint tag named another
+    /// model (never banked into the wrong shard).
+    fp_drops: AtomicU64,
 }
 
-/// Update the produced high-water mark and the metrics depth gauge after
-/// completions land (caller holds the bank lock).
-fn publish_progress(shared: &Shared, bank: &Bank, metrics: &Option<Arc<Metrics>>) {
-    let high_water = bank.head + bank.ready_run() as u64;
-    shared.produced.fetch_max(high_water, Ordering::Relaxed);
+/// Pick the `(shard, bank)` pair with the largest demand-weighted
+/// deficit and claim up to `max` seqs from it. `None` when every bank of
+/// every shard is at target.
+fn claim_weighted_emptiest(
+    shards: &mut [Shard],
+    target: usize,
+    max: usize,
+) -> Option<(usize, usize, Vec<u64>)> {
+    let mut best: Option<(usize, usize, usize)> = None;
+    let mut best_w = 0.0f64;
+    for (si, sh) in shards.iter().enumerate() {
+        for b in 0..sh.bank.n_banks() {
+            let deficit = target.saturating_sub(sh.bank.supply(b));
+            if deficit == 0 {
+                continue;
+            }
+            let w = deficit as f64 * sh.demand;
+            if w > best_w {
+                best_w = w;
+                best = Some((si, b, deficit));
+            }
+        }
+    }
+    let (si, b, deficit) = best?;
+    let n = deficit.min(max.max(1));
+    let seqs = shards[si].bank.claim(b, n);
+    Some((si, b, seqs))
+}
+
+/// Update a shard's produced high-water mark and its metrics depth gauge
+/// after completions land (caller holds the shards lock).
+fn publish_progress(shards: &mut [Shard], si: usize, metrics: &Option<Arc<Metrics>>) {
+    let sh = &mut shards[si];
+    let high_water = sh.bank.head + sh.bank.ready_run() as u64;
+    sh.high_water = sh.high_water.max(high_water);
     if let Some(m) = metrics {
-        m.set_bank_depths(bank.depths().iter().map(|&d| d as u64).collect());
+        m.set_bank_depths(
+            sh.fingerprint,
+            sh.bank.depths().iter().map(|&d| d as u64).collect(),
+        );
     }
 }
 
 /// Cross-check that every ReLU layer's `r_out` chain binds to the
 /// spine's mask chain (`truncate(r_out[li]) == spine.slots[li+1].r`).
 /// Seq-aligned pops make mixed-seq assembly structurally impossible
-/// *within* one pool, but a remote dealer restarted with a different
+/// *within* one shard, but a remote dealer restarted with a different
 /// base seed mid-stream would fill later claims from a different RNG
 /// universe — this O(#ReLU) check catches that before a silently-wrong
 /// session is served.
@@ -259,11 +310,12 @@ pub enum RefillSource {
     /// Deal layer entries inline in local dealer threads (the default).
     Inline,
     /// Stream per-layer material from a remote dealer process over the
-    /// layer-granular wire round. `connect` is called (and re-called
-    /// after transport errors) to establish a [`RemoteDealer`]; `batch`
-    /// caps entries per round trip. All connections must reach dealers
-    /// sharing one base seed — seq-addressing makes their answers
-    /// mutually consistent.
+    /// model-addressed layer-granular wire round. `connect` is called
+    /// (and re-called after transport errors) to establish a
+    /// [`RemoteDealer`]; `batch` caps entries per round trip. All
+    /// connections must reach dealers sharing one registry (per-model
+    /// base seeds) — seq-addressing makes their answers mutually
+    /// consistent.
     Remote {
         connect: Arc<dyn Fn() -> Result<RemoteDealer> + Send + Sync>,
         batch: usize,
@@ -271,13 +323,14 @@ pub enum RefillSource {
 }
 
 enum Fetched {
-    Spines(Vec<(u64, LinearSpine)>),
-    Layers(Vec<(u64, ClientReluMaterial, ServerReluMaterial)>),
+    Spines(Vec<(u64, u64, LinearSpine)>),
+    Layers(Vec<(u64, u64, ClientReluMaterial, ServerReluMaterial)>),
 }
 
-/// Material bank with background dealer threads.
+/// Material bank with background dealer threads, sharded per registered
+/// model.
 pub struct MaterialPool {
-    plan: Arc<NetworkPlan>,
+    registry: Arc<ModelRegistry>,
     shared: Arc<Shared>,
     target: usize,
     deal_threads: usize,
@@ -286,18 +339,16 @@ pub struct MaterialPool {
 }
 
 impl MaterialPool {
-    /// Spawn a pool refilling every bank toward `target` with
-    /// `n_dealers` inline dealer threads.
+    /// Spawn a single-model pool refilling every bank toward `target`
+    /// with `n_dealers` inline dealer threads. The model's seq namespace
+    /// is exactly `seed` (dealt bytes identical to the pre-registry
+    /// single-model pool for the same `(seed, plan)`).
     pub fn start(plan: Arc<NetworkPlan>, target: usize, n_dealers: usize, seed: u64) -> Self {
         Self::start_with_source(plan, target, n_dealers, seed, RefillSource::Inline, None, 1)
     }
 
-    /// Spawn a pool with an explicit [`RefillSource`]. When `metrics` is
-    /// given, remote refills record their latency and bytes-on-wire,
-    /// inline deals record their ReLU throughput, and the per-bank depth
-    /// gauge is published. `deal_threads` splits each inline (and
-    /// dry-lease) deal's garble columns across threads — the column-wise
-    /// RNG schedule keeps the material bit-identical for every value.
+    /// Single-model pool with an explicit [`RefillSource`] (a registry of
+    /// one plan under base seed `seed`). See [`Self::start_multi`].
     pub fn start_with_source(
         plan: Arc<NetworkPlan>,
         target: usize,
@@ -307,19 +358,56 @@ impl MaterialPool {
         metrics: Option<Arc<Metrics>>,
         deal_threads: usize,
     ) -> Self {
+        Self::start_multi(
+            ModelRegistry::single(plan, seed),
+            target,
+            n_dealers,
+            source,
+            metrics,
+            deal_threads,
+        )
+    }
+
+    /// Spawn a pool with one shard per model in `registry`. When
+    /// `metrics` is given, remote refills record their latency and
+    /// bytes-on-wire, inline deals record their ReLU throughput, and the
+    /// per-bank depth gauges are published — all labeled per model.
+    /// `deal_threads` splits each inline (and dry-lease) deal's garble
+    /// and triple columns across threads — the column-wise RNG schedule
+    /// keeps the material bit-identical for every value.
+    pub fn start_multi(
+        registry: Arc<ModelRegistry>,
+        target: usize,
+        n_dealers: usize,
+        source: RefillSource,
+        metrics: Option<Arc<Metrics>>,
+        deal_threads: usize,
+    ) -> Self {
+        assert!(!registry.is_empty(), "pool needs at least one registered model");
         let deal_threads = deal_threads.max(1);
+        let shards: Vec<Shard> = registry
+            .entries()
+            .iter()
+            .map(|e| Shard {
+                fingerprint: e.fingerprint(),
+                plan: e.plan.clone(),
+                base_seed: e.base_seed,
+                demand: e.demand,
+                bank: Bank::new(e.plan.n_relu_layers()),
+                high_water: 0,
+            })
+            .collect();
         let shared = Arc::new(Shared {
-            bank: Mutex::new(Bank::new(plan.n_relu_layers())),
+            shards: Mutex::new(shards),
             ready: Condvar::new(),
             refill: Condvar::new(),
             stop: AtomicBool::new(false),
             dry_leases: AtomicU64::new(0),
-            produced: AtomicU64::new(0),
+            fp_drops: AtomicU64::new(0),
         });
         let mut dealers = Vec::new();
         for d in 0..n_dealers.max(1) {
             let shared = shared.clone();
-            let plan = plan.clone();
             let metrics = metrics.clone();
             let remote = match &source {
                 RefillSource::Inline => None,
@@ -333,19 +421,35 @@ impl MaterialPool {
                 // on a successful fetch — a dealer that handshakes but
                 // fails every fetch still gets surfaced.
                 let mut failures = 0u64;
+                // Rounds that delivered fingerprint-mismatched units
+                // (throttles the mistagging-dealer log like `failures`
+                // throttles transport errors — a lying dealer retries
+                // forever and must not flood stderr).
+                let mut drop_rounds = 0u64;
                 let claim_max = remote.as_ref().map_or(1, |(_, batch)| *batch);
                 loop {
-                    // Claim work from the emptiest bank (waiting while
-                    // all banks are at target).
-                    let (bank_idx, seqs) = {
-                        let mut bank = shared.bank.lock().unwrap();
+                    // Claim work from the emptiest (model, bank) pair —
+                    // deficits demand-weighted — waiting while every bank
+                    // of every shard is at target.
+                    let (si, bank_idx, seqs, fp, plan, base_seed) = {
+                        let mut shards = shared.shards.lock().unwrap();
                         loop {
                             if shared.stop.load(Ordering::Relaxed) {
                                 return;
                             }
-                            match bank.claim_emptiest(target, claim_max) {
-                                Some(claim) => break claim,
-                                None => bank = shared.refill.wait(bank).unwrap(),
+                            match claim_weighted_emptiest(&mut shards, target, claim_max) {
+                                Some((si, b, seqs)) => {
+                                    let sh = &shards[si];
+                                    break (
+                                        si,
+                                        b,
+                                        seqs,
+                                        sh.fingerprint,
+                                        sh.plan.clone(),
+                                        sh.base_seed,
+                                    );
+                                }
+                                None => shards = shared.refill.wait(shards).unwrap(),
                             }
                         }
                     };
@@ -356,25 +460,25 @@ impl MaterialPool {
                             // fans out over deal_threads.
                             let seq = seqs[0];
                             if bank_idx == 0 {
-                                let spine = deal_spine(&plan, &mut session_rng(seed, seq));
-                                let mut bank = shared.bank.lock().unwrap();
-                                bank.complete_spine(seq, spine);
-                                publish_progress(&shared, &bank, &metrics);
+                                let spine = deal_spine(&plan, &mut session_rng(base_seed, seq));
+                                let mut shards = shared.shards.lock().unwrap();
+                                shards[si].bank.complete_spine(seq, spine);
+                                publish_progress(&mut shards, si, &metrics);
                             } else {
                                 let li = bank_idx - 1;
                                 let t = Timer::new();
                                 let (cm, sm) = deal_relu_layer_mt(
                                     &plan,
-                                    &mut session_rng(seed, seq),
+                                    &mut session_rng(base_seed, seq),
                                     li,
                                     deal_threads,
                                 );
                                 if let Some(m) = &metrics {
-                                    m.record_deal(cm.n() as u64, t.elapsed_us());
+                                    m.record_deal(fp, cm.n() as u64, t.elapsed_us());
                                 }
-                                let mut bank = shared.bank.lock().unwrap();
-                                bank.complete_relu(li, seq, (cm, sm));
-                                publish_progress(&shared, &bank, &metrics);
+                                let mut shards = shared.shards.lock().unwrap();
+                                shards[si].bank.complete_relu(li, seq, (cm, sm));
+                                publish_progress(&mut shards, si, &metrics);
                             }
                             shared.ready.notify_all();
                         }
@@ -394,9 +498,9 @@ impl MaterialPool {
                                                  ({failures}x): {e}"
                                             );
                                         }
-                                        let mut bank = shared.bank.lock().unwrap();
-                                        bank.abandon(bank_idx, &seqs);
-                                        drop(bank);
+                                        let mut shards = shared.shards.lock().unwrap();
+                                        shards[si].bank.abandon(bank_idx, &seqs);
+                                        drop(shards);
                                         std::thread::sleep(Duration::from_millis(50));
                                         continue;
                                     }
@@ -406,45 +510,103 @@ impl MaterialPool {
                             let before = dealer.bytes_received();
                             let t = Timer::new();
                             let fetched: Result<Fetched> = if bank_idx == 0 {
-                                dealer.fetch_spines(&seqs).map(Fetched::Spines)
+                                dealer.fetch_spines(fp, &seqs).map(Fetched::Spines)
                             } else {
-                                dealer.fetch_layers(bank_idx - 1, &seqs).map(Fetched::Layers)
+                                dealer
+                                    .fetch_layers(fp, bank_idx - 1, &seqs)
+                                    .map(Fetched::Layers)
                             };
                             let fetch_us = t.elapsed_us();
                             let wire_bytes = dealer.bytes_received() - before;
                             match fetched {
                                 Ok(units) => {
                                     failures = 0;
-                                    let n_units = seqs.len() as u64;
-                                    let n_spines = if bank_idx == 0 { n_units } else { 0 };
-                                    if let Some(m) = &metrics {
-                                        m.record_layer_refill(
-                                            fetch_us.max(1),
-                                            wire_bytes,
-                                            n_units,
-                                            n_spines,
-                                        );
-                                    }
-                                    let mut bank = shared.bank.lock().unwrap();
+                                    // Stage fingerprint-matching units;
+                                    // drop + count + re-claim the rest —
+                                    // a unit tagged for model B can never
+                                    // land in model A's shard.
+                                    let mut dropped: Vec<u64> = Vec::new();
+                                    let mut staged = 0u64;
+                                    let mut staged_spines = 0u64;
+                                    let mut shards = shared.shards.lock().unwrap();
                                     match units {
                                         Fetched::Spines(v) => {
-                                            for (seq, spine) in v {
-                                                bank.complete_spine(seq, spine);
+                                            for (ufp, seq, spine) in v {
+                                                if ufp == fp {
+                                                    staged += 1;
+                                                    staged_spines += 1;
+                                                    shards[si]
+                                                        .bank
+                                                        .complete_spine(seq, spine);
+                                                } else {
+                                                    dropped.push(seq);
+                                                }
                                             }
                                         }
                                         Fetched::Layers(v) => {
-                                            for (seq, cm, sm) in v {
-                                                bank.complete_relu(
-                                                    bank_idx - 1,
-                                                    seq,
-                                                    (cm, sm),
-                                                );
+                                            for (ufp, seq, cm, sm) in v {
+                                                if ufp == fp {
+                                                    staged += 1;
+                                                    shards[si].bank.complete_relu(
+                                                        bank_idx - 1,
+                                                        seq,
+                                                        (cm, sm),
+                                                    );
+                                                } else {
+                                                    dropped.push(seq);
+                                                }
                                             }
                                         }
                                     }
-                                    publish_progress(&shared, &bank, &metrics);
-                                    drop(bank);
+                                    if !dropped.is_empty() {
+                                        shared
+                                            .fp_drops
+                                            .fetch_add(dropped.len() as u64, Ordering::Relaxed);
+                                        if let Some(m) = &metrics {
+                                            m.fp_mismatch_drops.fetch_add(
+                                                dropped.len() as u64,
+                                                Ordering::Relaxed,
+                                            );
+                                        }
+                                        shards[si].bank.abandon(bank_idx, &dropped);
+                                    }
+                                    // Only material that actually staged
+                                    // counts toward the model's refill
+                                    // row — a mistagging dealer must not
+                                    // make a starved model look well fed.
+                                    // Recorded under the shards lock so
+                                    // a wait_ready waiter can never see
+                                    // the staging without its counters.
+                                    if let Some(m) = &metrics {
+                                        m.record_layer_refill(
+                                            fp,
+                                            fetch_us.max(1),
+                                            wire_bytes,
+                                            staged,
+                                            staged_spines,
+                                        );
+                                    }
+                                    publish_progress(&mut shards, si, &metrics);
+                                    drop(shards);
                                     shared.ready.notify_all();
+                                    if !dropped.is_empty() {
+                                        // A mistagging dealer is a
+                                        // failure mode, not a hot path:
+                                        // surface it (throttled, outside
+                                        // the lock) and slow the re-claim
+                                        // so the abandoned seqs don't
+                                        // spin.
+                                        drop_rounds += 1;
+                                        if drop_rounds.is_power_of_two() {
+                                            eprintln!(
+                                                "[pool d{d}] dropped {} unit(s) tagged for \
+                                                 another model (wanted {fp:#018x}; \
+                                                 {drop_rounds} rounds affected)",
+                                                dropped.len()
+                                            );
+                                        }
+                                        std::thread::sleep(Duration::from_millis(50));
+                                    }
                                 }
                                 Err(e) => {
                                     // Transport hiccup: surface it
@@ -458,9 +620,9 @@ impl MaterialPool {
                                              ({failures}x): {e}"
                                         );
                                     }
-                                    let mut bank = shared.bank.lock().unwrap();
-                                    bank.abandon(bank_idx, &seqs);
-                                    drop(bank);
+                                    let mut shards = shared.shards.lock().unwrap();
+                                    shards[si].bank.abandon(bank_idx, &seqs);
+                                    drop(shards);
                                     conn = None;
                                     std::thread::sleep(Duration::from_millis(50));
                                 }
@@ -470,33 +632,54 @@ impl MaterialPool {
                 }
             }));
         }
-        Self { plan, shared, target, deal_threads, metrics, dealers }
+        Self { registry, shared, target, deal_threads, metrics, dealers }
     }
 
-    /// Lease a session: assemble one from the banks' front entries, or
-    /// deal inline when no full session is ready. The dry path measures
-    /// the inline deal so callers can record it into the serving
-    /// [`super::Metrics`] — pool-dry tail latency is exactly what a
-    /// deployment's offline-throughput shortfall looks like.
+    /// The pool's model registry (shared with the service and the remote
+    /// connect closure).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    fn shard_index(&self, model: u64) -> usize {
+        self.registry
+            .index_of(model)
+            .unwrap_or_else(|| panic!("model {model:#018x} not registered with this pool"))
+    }
+
+    /// [`Self::lease_model`] for the first registered model (the
+    /// single-model convenience).
     pub fn lease(&self, rng: &mut Rng) -> Lease {
+        self.lease_model(self.registry.entries()[0].fingerprint(), rng)
+    }
+
+    /// Lease a session of model `model`: assemble one from its shard's
+    /// front entries, or deal inline when no full session is ready. The
+    /// dry path measures the inline deal so callers can record it into
+    /// the serving [`super::Metrics`] — pool-dry tail latency is exactly
+    /// what a deployment's offline-throughput shortfall looks like.
+    /// Panics if `model` is not registered (the service validates at
+    /// submission).
+    pub fn lease_model(&self, model: u64, rng: &mut Rng) -> Lease {
+        let si = self.shard_index(model);
         let popped = {
-            let mut bank = self.shared.bank.lock().unwrap();
-            if bank.ready_run() >= 1 {
-                let entry = bank.pop_head();
+            let mut shards = self.shared.shards.lock().unwrap();
+            if shards[si].bank.ready_run() >= 1 {
+                let entry = shards[si].bank.pop_head();
                 // Keep the depth gauge honest while leases drain the
                 // banks (the produced high-water update inside is a
                 // monotone no-op on pops).
-                publish_progress(&self.shared, &bank, &self.metrics);
+                publish_progress(&mut shards, si, &self.metrics);
                 Some(entry)
             } else {
                 None
             }
         };
+        let plan = self.registry.entries()[si].plan.clone();
         if let Some((spine, relus)) = popped {
             self.shared.refill.notify_all();
-            if spine_binds_layers(&self.plan, &spine, &relus) {
-                let (client, server, offline_bytes) =
-                    assemble_session(&self.plan, spine, relus);
+            if spine_binds_layers(&plan, &spine, &relus) {
+                let (client, server, offline_bytes) = assemble_session(&plan, spine, relus);
                 return Lease {
                     session: Session { client, server, offline_bytes },
                     was_dry: false,
@@ -507,15 +690,15 @@ impl MaterialPool {
             // with a different base seed mid-stream): refuse to serve
             // it, surface loudly, and fall through to a dry deal.
             eprintln!(
-                "[pool] discarding banked session: layer material does not bind to its \
-                 spine (dealer base seed changed mid-stream?)"
+                "[pool] discarding banked session of model {model:#018x}: layer material \
+                 does not bind to its spine (dealer base seed changed mid-stream?)"
             );
         }
         // Dry: prepare inline, and time it.
         self.shared.dry_leases.fetch_add(1, Ordering::Relaxed);
         let t = Timer::new();
         let (client, server, offline_bytes) =
-            offline_network_mt(&self.plan, rng, self.deal_threads);
+            offline_network_mt(&plan, rng, self.deal_threads);
         Lease {
             session: Session { client, server, offline_bytes },
             was_dry: true,
@@ -523,43 +706,73 @@ impl MaterialPool {
         }
     }
 
-    /// Block until at least `n` full sessions are assemblable (warmup).
-    /// Stop-aware: returns early once [`Self::stop`]/[`Self::shutdown`]
-    /// is called, so a dealer that never connects cannot hang warmup
-    /// forever.
+    /// Block until at least `n` full sessions are assemblable for
+    /// **every** registered model (warmup). Stop-aware: returns early
+    /// once [`Self::stop`]/[`Self::shutdown`] is called, so a dealer
+    /// that never connects cannot hang warmup forever.
     pub fn wait_ready(&self, n: usize) {
         let want = n.min(self.target);
-        let mut bank = self.shared.bank.lock().unwrap();
-        while bank.ready_run() < want && !self.shared.stop.load(Ordering::Relaxed) {
-            bank = self.shared.ready.wait(bank).unwrap();
+        let mut shards = self.shared.shards.lock().unwrap();
+        while shards.iter().any(|s| s.bank.ready_run() < want)
+            && !self.shared.stop.load(Ordering::Relaxed)
+        {
+            shards = self.shared.ready.wait(shards).unwrap();
         }
     }
 
-    /// Full sessions assemblable right now.
+    /// Full sessions assemblable right now for every model (the minimum
+    /// across shards; single-model pools read as before).
     pub fn banked(&self) -> usize {
-        self.shared.bank.lock().unwrap().ready_run()
+        let shards = self.shared.shards.lock().unwrap();
+        shards.iter().map(|s| s.bank.ready_run()).min().unwrap_or(0)
     }
 
-    /// Staged entries per bank (index 0 = linear spines, `1 + li` =
-    /// ReLU layer `li`).
+    /// Full sessions assemblable right now for one model.
+    pub fn banked_model(&self, model: u64) -> usize {
+        let si = self.shard_index(model);
+        self.shared.shards.lock().unwrap()[si].bank.ready_run()
+    }
+
+    /// Staged entries per bank of the **first registered model** (index
+    /// 0 = linear spines, `1 + li` = ReLU layer `li`) — the single-model
+    /// convenience; see [`Self::bank_depths_model`].
     pub fn bank_depths(&self) -> Vec<usize> {
-        self.shared.bank.lock().unwrap().depths()
+        self.bank_depths_model(self.registry.entries()[0].fingerprint())
+    }
+
+    /// Staged entries per bank of one model's shard.
+    pub fn bank_depths_model(&self, model: u64) -> Vec<usize> {
+        let si = self.shard_index(model);
+        self.shared.shards.lock().unwrap()[si].bank.depths()
     }
 
     pub fn dry_leases(&self) -> u64 {
         self.shared.dry_leases.load(Ordering::Relaxed)
     }
 
-    /// Sessions ever made assemblable from the banks (high-water mark).
+    /// Remote units dropped at staging because their fingerprint tag
+    /// named another model.
+    pub fn fingerprint_drops(&self) -> u64 {
+        self.shared.fp_drops.load(Ordering::Relaxed)
+    }
+
+    /// Sessions ever made assemblable from the banks, summed across
+    /// shards (high-water mark).
     pub fn produced(&self) -> u64 {
-        self.shared.produced.load(Ordering::Relaxed)
+        self.shared.shards.lock().unwrap().iter().map(|s| s.high_water).sum()
+    }
+
+    /// Sessions ever made assemblable for one model.
+    pub fn produced_model(&self, model: u64) -> u64 {
+        let si = self.shard_index(model);
+        self.shared.shards.lock().unwrap()[si].high_water
     }
 
     /// Signal dealers and waiters to stop, without joining. The lock is
     /// held across the notify so a waiter between its predicate check
     /// and its wait cannot miss the wake-up.
     pub fn stop(&self) {
-        let _bank = self.shared.bank.lock().unwrap();
+        let _shards = self.shared.shards.lock().unwrap();
         self.shared.stop.store(true, Ordering::Relaxed);
         self.shared.refill.notify_all();
         self.shared.ready.notify_all();
@@ -577,7 +790,7 @@ impl MaterialPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::circuits::spec::ReluVariant;
+    use crate::circuits::spec::{FaultMode, ReluVariant};
     use crate::protocol::linear::{LinearOp, Matrix};
 
     fn tiny_plan() -> Arc<NetworkPlan> {
@@ -587,6 +800,19 @@ mod tests {
             Arc::new(Matrix::random(3, 4, 10, &mut rng)),
         ];
         Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu))
+    }
+
+    fn other_plan() -> Arc<NetworkPlan> {
+        let mut rng = Rng::new(2);
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(5, 6, 10, &mut rng)),
+            Arc::new(Matrix::random(4, 5, 10, &mut rng)),
+            Arc::new(Matrix::random(3, 4, 10, &mut rng)),
+        ];
+        Arc::new(NetworkPlan::unscaled(
+            linears,
+            ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero },
+        ))
     }
 
     #[test]
@@ -639,6 +865,49 @@ mod tests {
             let (inline_logits, _) = run_inference(&client, &server, &input);
             assert_eq!(bank_logits, inline_logits, "seq {seq}");
         }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn multi_model_shards_fill_and_lease_from_their_own_namespaces() {
+        // Two models in one pool, inline refill: each shard's sessions
+        // are bit-identical to inline single-model deals from *that*
+        // model's base seed, and neither shard's accounting disturbs the
+        // other's.
+        use crate::protocol::server::run_inference;
+        let (pa, pb) = (tiny_plan(), other_plan());
+        let mut reg = ModelRegistry::new();
+        let fa = reg.register(pa.clone(), 0xAA, 1.0).unwrap();
+        let fb = reg.register(pb.clone(), 0xBB, 3.0).unwrap();
+        let registry = Arc::new(reg);
+        let pool = MaterialPool::start_multi(
+            registry,
+            3,
+            2,
+            RefillSource::Inline,
+            None,
+            1,
+        );
+        pool.wait_ready(3);
+        assert!(pool.banked_model(fa) >= 3);
+        assert!(pool.banked_model(fb) >= 3);
+        let mut rng = Rng::new(4);
+        let input: Vec<crate::field::Fp> =
+            (0..6).map(|i| crate::field::Fp::from_i64(700 + i)).collect();
+        for (fp, plan, seed) in [(fa, &pa, 0xAAu64), (fb, &pb, 0xBB)] {
+            for seq in 0..2u64 {
+                let lease = pool.lease_model(fp, &mut rng);
+                assert!(!lease.was_dry, "model {fp:#x} seq {seq}");
+                let (client, server, offline_bytes) =
+                    offline_network_mt(plan, &mut session_rng(seed, seq), 1);
+                assert_eq!(lease.session.offline_bytes, offline_bytes);
+                let (bank_logits, _) =
+                    run_inference(&lease.session.client, &lease.session.server, &input);
+                let (inline_logits, _) = run_inference(&client, &server, &input);
+                assert_eq!(bank_logits, inline_logits, "model {fp:#x} seq {seq}");
+            }
+        }
+        assert_eq!(pool.fingerprint_drops(), 0);
         pool.shutdown();
     }
 
@@ -710,17 +979,17 @@ mod tests {
         // bank depths recorded.
         let plan = tiny_plan();
         let metrics = Arc::new(Metrics::default());
-        let plan_c = plan.clone();
+        let registry = ModelRegistry::single(plan.clone(), 77);
+        let reg_c = registry.clone();
         let connect: Arc<dyn Fn() -> Result<RemoteDealer> + Send + Sync> = Arc::new(move || {
             let (chan, _dealer_thread) =
-                crate::wire::dealer::spawn_mem_dealer(plan_c.clone(), 77, 1);
-            RemoteDealer::connect(chan, plan_c.clone())
+                crate::wire::dealer::spawn_mem_dealer_multi(reg_c.clone(), 77, 1);
+            RemoteDealer::connect(chan, reg_c.clone())
         });
-        let pool = MaterialPool::start_with_source(
-            plan,
+        let pool = MaterialPool::start_multi(
+            registry,
             3,
             1,
-            7,
             RefillSource::Remote { connect, batch: 2 },
             Some(metrics.clone()),
             1,
@@ -731,6 +1000,7 @@ mod tests {
         assert!(!lease.was_dry);
         assert!(lease.session.offline_bytes > 0);
         assert!(pool.produced() >= 3);
+        assert_eq!(pool.fingerprint_drops(), 0);
         let snap = metrics.snapshot();
         assert!(snap.remote_refills >= 1, "refill rounds recorded");
         assert!(snap.remote_sessions >= 3, "sessions' worth (spines) recorded");

@@ -1,0 +1,228 @@
+//! The model registry: fingerprint-keyed identity for every plan a
+//! coordinator (or dealer) serves.
+//!
+//! A production PI fleet never serves one architecture — Circa's ReLU
+//! savings compose with network-level ReLU reduction (CryptoNAS budget
+//! networks, DeepReDuce-style culled ResNets), so one coordinator banks
+//! and serves material for several [`NetworkPlan`]s at once. The
+//! registry is the single source of model identity for that: each
+//! registered plan is keyed by its [`SessionManifest::fingerprint`]
+//! (which covers variant, layer dimensions, rescale schedule, *and* the
+//! behavioral weight digest — two same-shaped models with different
+//! weights are different models), and carries
+//!
+//! * the plan itself (`Arc`-shared with the pool shard, the dealer, and
+//!   the codec's shape validation),
+//! * a **per-model dealing base seed** — the namespace under which the
+//!   model's session sequence numbers live. Seq-addressed dealing is a
+//!   pure function of `(base_seed, seq)`
+//!   ([`crate::protocol::server::session_rng`]), so giving every model
+//!   its own base seed keeps two models' seq spaces from ever colliding
+//!   even though both count sessions 0, 1, 2, …,
+//! * a **demand weight** scaling the refill scheduler's deficit for this
+//!   model's banks (a model taking 3× the traffic wants its banks
+//!   refilled 3× as eagerly).
+//!
+//! Dealer and coordinator processes each hold their own registry; the
+//! wire handshake ([`crate::wire::dealer`]) compares manifest *sets*, so
+//! base seeds never need to agree across processes — only the dealer's
+//! own seeds determine what it serves, and the coordinator's seeds only
+//! drive its inline (dry-lease) deals.
+
+use crate::protocol::server::NetworkPlan;
+use crate::util::error::Result;
+use crate::wire::codec::SessionManifest;
+use crate::{bail, ensure};
+use std::sync::Arc;
+
+/// Derive a model's dealing base seed from a root seed and the model's
+/// manifest fingerprint (splitmix64-style mix). One fixed, documented
+/// derivation so any party holding `(root_seed, plan)` lands on the same
+/// per-model namespace; [`crate::coordinator::ModelConfig::base_seed`]
+/// overrides it per model when explicit seeds are wanted (e.g. the
+/// single-model wrapper, which pins the model seed to the service seed
+/// to keep its dealt bytes identical to the pre-registry path).
+pub fn model_base_seed(root_seed: u64, fingerprint: u64) -> u64 {
+    let mut z = root_seed ^ fingerprint.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// One registered model.
+pub struct ModelEntry {
+    /// Structural + weight identity (the registry key is
+    /// `manifest.fingerprint`).
+    pub manifest: SessionManifest,
+    pub plan: Arc<NetworkPlan>,
+    /// Base seed of this model's seq-addressed dealing namespace.
+    pub base_seed: u64,
+    /// Relative demand rate (refill-priority weight, `> 0`).
+    pub demand: f64,
+}
+
+impl ModelEntry {
+    pub fn fingerprint(&self) -> u64 {
+        self.manifest.fingerprint
+    }
+}
+
+/// Fingerprint-keyed set of served models, in registration order.
+/// Registration order is load-bearing in one place: it is the pool's
+/// shard order and the "default model" of the single-model convenience
+/// APIs ([`crate::coordinator::PiService::submit`] and friends).
+#[derive(Default)]
+pub struct ModelRegistry {
+    entries: Vec<ModelEntry>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a plan under its manifest fingerprint with an explicit
+    /// dealing base seed. Returns the fingerprint (the model's key
+    /// everywhere: wire frames, pool shards, request routing, metrics
+    /// labels). Duplicate fingerprints are an error — one registry entry
+    /// per model identity.
+    pub fn register(
+        &mut self,
+        plan: Arc<NetworkPlan>,
+        base_seed: u64,
+        demand: f64,
+    ) -> Result<u64> {
+        let manifest = SessionManifest::of_plan(&plan);
+        self.register_with(plan, manifest, base_seed, demand)
+    }
+
+    /// [`Self::register`] with a manifest the caller already computed
+    /// (the weight digest probes every linear layer, so callers that
+    /// need the fingerprint *before* registering — e.g. to derive the
+    /// base seed — pass it back in instead of paying for it twice).
+    pub fn register_with(
+        &mut self,
+        plan: Arc<NetworkPlan>,
+        manifest: SessionManifest,
+        base_seed: u64,
+        demand: f64,
+    ) -> Result<u64> {
+        ensure!(!plan.linears.is_empty(), "cannot register an empty plan");
+        ensure!(demand > 0.0, "demand weight must be positive, got {demand}");
+        let fp = manifest.fingerprint;
+        if self.get(fp).is_some() {
+            bail!("fingerprint {fp:#018x} already registered");
+        }
+        self.entries.push(ModelEntry { manifest, plan, base_seed, demand });
+        Ok(fp)
+    }
+
+    /// A one-model registry (the single-model wrappers' shape): the
+    /// model's seq namespace is exactly `base_seed`, which preserves
+    /// bit-identity of every dealt byte with the pre-registry
+    /// single-model path for the same `(seed, plan)`.
+    pub fn single(plan: Arc<NetworkPlan>, base_seed: u64) -> Arc<ModelRegistry> {
+        let mut r = ModelRegistry::new();
+        r.register(plan, base_seed, 1.0).expect("single-model registration");
+        Arc::new(r)
+    }
+
+    pub fn get(&self, fingerprint: u64) -> Option<&ModelEntry> {
+        self.entries.iter().find(|e| e.fingerprint() == fingerprint)
+    }
+
+    /// Registration-order index of a fingerprint (the pool's shard
+    /// index).
+    pub fn index_of(&self, fingerprint: u64) -> Option<usize> {
+        self.entries.iter().position(|e| e.fingerprint() == fingerprint)
+    }
+
+    pub fn entries(&self) -> &[ModelEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Fingerprints in registration order.
+    pub fn fingerprints(&self) -> Vec<u64> {
+        self.entries.iter().map(|e| e.fingerprint()).collect()
+    }
+
+    /// The manifest set shipped in the wire handshake.
+    pub fn manifests(&self) -> Vec<SessionManifest> {
+        self.entries.iter().map(|e| e.manifest.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::ReluVariant;
+    use crate::protocol::linear::{LinearOp, Matrix};
+    use crate::util::Rng;
+
+    fn plan(seed: u64, variant: ReluVariant) -> Arc<NetworkPlan> {
+        let mut rng = Rng::new(seed);
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(4, 6, 10, &mut rng)),
+            Arc::new(Matrix::random(3, 4, 10, &mut rng)),
+        ];
+        Arc::new(NetworkPlan::unscaled(linears, variant))
+    }
+
+    #[test]
+    fn register_and_lookup() {
+        let mut reg = ModelRegistry::new();
+        let a = plan(1, ReluVariant::BaselineRelu);
+        let b = plan(1, ReluVariant::NaiveSign);
+        let fa = reg.register(a.clone(), 7, 1.0).unwrap();
+        let fb = reg.register(b, 9, 2.0).unwrap();
+        assert_ne!(fa, fb, "variant is part of the identity");
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.fingerprints(), vec![fa, fb]);
+        assert_eq!(reg.index_of(fb), Some(1));
+        let ea = reg.get(fa).unwrap();
+        assert_eq!(ea.base_seed, 7);
+        assert!(reg.get(fa ^ 1).is_none());
+        // Same plan again: same fingerprint, rejected.
+        assert!(reg.register(a, 8, 1.0).is_err());
+    }
+
+    #[test]
+    fn same_shape_different_weights_are_distinct_models() {
+        // The weight digest is part of the fingerprint: two structurally
+        // equal plans with different weights register side by side.
+        let mut reg = ModelRegistry::new();
+        let fa = reg.register(plan(1, ReluVariant::BaselineRelu), 1, 1.0).unwrap();
+        let fb = reg.register(plan(2, ReluVariant::BaselineRelu), 1, 1.0).unwrap();
+        assert_ne!(fa, fb);
+    }
+
+    #[test]
+    fn invalid_registrations_rejected() {
+        let mut reg = ModelRegistry::new();
+        assert!(reg.register(plan(1, ReluVariant::BaselineRelu), 1, 0.0).is_err());
+        assert!(reg
+            .register(
+                Arc::new(NetworkPlan::unscaled(Vec::new(), ReluVariant::BaselineRelu)),
+                1,
+                1.0
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn base_seed_derivation_is_stable_and_separating() {
+        let s1 = model_base_seed(0xC1CA, 0x1111);
+        let s2 = model_base_seed(0xC1CA, 0x2222);
+        assert_eq!(s1, model_base_seed(0xC1CA, 0x1111), "deterministic");
+        assert_ne!(s1, s2, "different models get different namespaces");
+        assert_ne!(s1, model_base_seed(0xC1CB, 0x1111), "root seed matters");
+    }
+}

@@ -1,5 +1,7 @@
-//! Worker pool: runs the 2-party online protocol for leased sessions.
+//! Worker pool: runs the 2-party online protocol for leased sessions,
+//! leasing each model-homogeneous batch from that model's pool shard.
 
+use super::batcher::ModelBatch;
 use super::metrics::Metrics;
 use super::pool::MaterialPool;
 use crate::field::Fp;
@@ -10,9 +12,12 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// One inference request.
+/// One inference request, addressed to a registered model.
 pub struct Request {
     pub id: u64,
+    /// Manifest fingerprint of the plan this request runs on (validated
+    /// at submission — see `PiService::submit_to`).
+    pub model: u64,
     pub input: Vec<Fp>,
     pub enqueued: Instant,
     /// Where to deliver the response.
@@ -23,6 +28,8 @@ pub struct Request {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
+    /// The model that served this request.
+    pub model: u64,
     pub logits: Vec<Fp>,
     pub queue_us: u64,
     pub online_us: u64,
@@ -30,10 +37,11 @@ pub struct Response {
     pub served_from_bank: bool,
 }
 
-/// Spawn `n_workers` threads consuming request batches from `rx`.
+/// Spawn `n_workers` threads consuming model-homogeneous request
+/// batches from `rx`.
 pub fn spawn_workers(
     n_workers: usize,
-    rx: Receiver<Vec<Request>>,
+    rx: Receiver<ModelBatch>,
     pool: Arc<MaterialPool>,
     metrics: Arc<Metrics>,
     seed: u64,
@@ -53,24 +61,26 @@ pub fn spawn_workers(
                         Err(_) => return,
                     }
                 };
-                for req in batch {
+                let model = batch.model;
+                for req in batch.requests {
                     let queue_us = req.enqueued.elapsed().as_micros() as u64;
-                    let lease = pool.lease(&mut rng);
+                    let lease = pool.lease_model(model, &mut rng);
                     if lease.was_dry {
                         // Counter + inline-deal latency histogram: a dry
                         // bank shows up as measurable tail latency. The
                         // deal also counts toward dealing throughput.
-                        metrics.record_dry_deal(lease.deal_us);
-                        metrics.record_deal(lease.session.n_relus() as u64, lease.deal_us);
+                        metrics.record_dry_deal(model, lease.deal_us);
+                        metrics.record_deal(model, lease.session.n_relus() as u64, lease.deal_us);
                     }
                     let t = Timer::new();
                     let (logits, stats) =
                         run_inference(&lease.session.client, &lease.session.server, &req.input);
                     let online_us = t.elapsed_us();
                     let bytes = stats.bytes_to_client + stats.bytes_to_server;
-                    metrics.record(queue_us, online_us, bytes);
+                    metrics.record(model, queue_us, online_us, bytes);
                     let _ = req.reply.send(Response {
                         id: req.id,
+                        model,
                         logits,
                         queue_us,
                         online_us,
@@ -85,7 +95,7 @@ pub fn spawn_workers(
 
 /// Convenience used by tests: a (sender, receiver) pair of the batch
 /// channel type the router consumes.
-pub fn batch_channel() -> (Sender<Vec<Request>>, Receiver<Vec<Request>>) {
+pub fn batch_channel() -> (Sender<ModelBatch>, Receiver<ModelBatch>) {
     channel()
 }
 
@@ -105,6 +115,7 @@ mod tests {
         ];
         let plan = Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu));
         let pool = Arc::new(MaterialPool::start(plan, 4, 1, 2));
+        let model = pool.registry().entries()[0].fingerprint();
         let metrics = Arc::new(Metrics::default());
         let (btx, brx) = batch_channel();
         let workers = spawn_workers(2, brx, pool.clone(), metrics.clone(), 3);
@@ -113,22 +124,27 @@ mod tests {
         let reqs: Vec<Request> = (0..4)
             .map(|id| Request {
                 id,
+                model,
                 input: (0..6).map(|i| Fp::from_i64(100 + i)).collect(),
                 enqueued: Instant::now(),
                 reply: rtx.clone(),
             })
             .collect();
-        btx.send(reqs).unwrap();
+        btx.send(ModelBatch { model, requests: reqs }).unwrap();
         drop(btx);
         drop(rtx);
         let responses: Vec<Response> = rrx.iter().collect();
         assert_eq!(responses.len(), 4);
         for r in &responses {
             assert_eq!(r.logits.len(), 3);
+            assert_eq!(r.model, model);
         }
         for w in workers {
             let _ = w.join();
         }
-        assert_eq!(metrics.snapshot().completed, 4);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.completed, 4);
+        assert_eq!(snap.models.len(), 1);
+        assert_eq!(snap.models[0].fingerprint, model);
     }
 }

@@ -1,34 +1,47 @@
-//! The assembled PI service: batcher thread + worker pool + material
-//! bank, fronted by a submit/await handle.
+//! The assembled PI service: batcher thread + worker pool + per-model
+//! material bank, fronted by a submit/await handle that routes each
+//! request to a registered model.
 
-use super::batcher::{next_batch, BatchPolicy};
+use super::batcher::{next_model_batches, BatchPolicy, ModelBatch};
 use super::metrics::Metrics;
 use super::pool::{MaterialPool, RefillSource};
+use super::registry::{model_base_seed, ModelRegistry};
 use super::router::{spawn_workers, Request, Response};
 use crate::field::Fp;
 use crate::protocol::server::NetworkPlan;
+use crate::util::error::Result;
 use crate::wire::dealer::RemoteDealer;
+use crate::{bail, ensure};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// Service configuration.
+/// Service configuration (fleet-wide; per-model knobs live in
+/// [`ModelConfig`]).
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     pub workers: usize,
     pub pool_target: usize,
     pub pool_dealers: usize,
-    /// Threads each inline deal fans its garble columns across (the
-    /// column-wise offline schedule; material is thread-count-invariant).
+    /// Threads each inline deal fans its garble and triple columns
+    /// across (the column-wise offline schedule; material is
+    /// thread-count-invariant).
     pub deal_threads: usize,
     pub batch: BatchPolicy,
+    /// Root seed: the single-model wrapper pins its model's dealing
+    /// namespace to exactly this value; [`PiService::start_multi`]
+    /// derives per-model namespaces from it
+    /// ([`model_base_seed`]) unless a [`ModelConfig`] overrides.
     pub seed: u64,
     /// When set, the material pool refills from a standalone dealer at
     /// this TCP address ([`crate::wire::dealer`]) instead of dealing
-    /// inline, streaming material layer by layer; refill latency,
-    /// bytes-on-wire, and per-bank depths land in [`Metrics`].
+    /// inline, streaming material layer by layer for every registered
+    /// model over one connection; refill latency, bytes-on-wire, and
+    /// per-bank depths land in [`Metrics`], labeled per model. The
+    /// dealer must serve (at least) every model registered here —
+    /// weight digests included — or the handshake is rejected.
     pub dealer_addr: Option<String>,
     /// Per-layer entries fetched per remote refill round trip.
     pub refill_batch: usize,
@@ -49,79 +62,164 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Per-model configuration for [`PiService::start_multi`].
+#[derive(Clone, Copy, Debug)]
+pub struct ModelConfig {
+    /// Dealing base seed for this model's seq namespace. `None` derives
+    /// it from the service seed and the plan fingerprint
+    /// ([`model_base_seed`]), which keeps any two models' namespaces
+    /// disjoint by construction.
+    pub base_seed: Option<u64>,
+    /// Relative demand rate (> 0): scales this model's bank deficits in
+    /// the refill scheduler, so the pool pre-deals material roughly in
+    /// proportion to expected traffic.
+    pub demand: f64,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self { base_seed: None, demand: 1.0 }
+    }
+}
+
 /// A running PI service.
 pub struct PiService {
     ingress: Sender<Request>,
     pub metrics: Arc<Metrics>,
     pub pool: Arc<MaterialPool>,
+    registry: Arc<ModelRegistry>,
     next_id: AtomicU64,
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl PiService {
-    /// Start the service for a network plan.
+    /// Start the service for a single network plan — a thin wrapper over
+    /// [`Self::start_multi`] that pins the model's dealing namespace to
+    /// `cfg.seed`, preserving bit-identity of every dealt byte with the
+    /// pre-registry single-model service for the same `(seed, plan)`.
     pub fn start(plan: Arc<NetworkPlan>, cfg: ServiceConfig) -> Self {
+        let seed = cfg.seed;
+        Self::start_multi(
+            vec![(plan, ModelConfig { base_seed: Some(seed), demand: 1.0 })],
+            cfg,
+        )
+        .expect("single-plan service")
+    }
+
+    /// Start the service for several network plans at once: one material
+    /// shard, one seq namespace, one metrics row per model, all served
+    /// by one batcher/worker/dealer fabric. Fails on an empty model
+    /// list, duplicate plans, or invalid per-model config.
+    pub fn start_multi(
+        models: Vec<(Arc<NetworkPlan>, ModelConfig)>,
+        cfg: ServiceConfig,
+    ) -> Result<Self> {
+        ensure!(!models.is_empty(), "start_multi needs at least one model");
+        let mut registry = ModelRegistry::new();
+        for (plan, mc) in models {
+            let manifest = crate::wire::codec::SessionManifest::of_plan(&plan);
+            let base_seed =
+                mc.base_seed.unwrap_or_else(|| model_base_seed(cfg.seed, manifest.fingerprint));
+            registry.register_with(plan, manifest, base_seed, mc.demand)?;
+        }
+        let registry = Arc::new(registry);
+
         let metrics = Arc::new(Metrics::default());
         let source = match &cfg.dealer_addr {
             None => RefillSource::Inline,
             Some(addr) => {
                 let addr = addr.clone();
-                let plan = plan.clone();
+                let registry = registry.clone();
                 RefillSource::Remote {
-                    connect: Arc::new(move || RemoteDealer::connect_tcp(&addr, plan.clone())),
+                    connect: Arc::new(move || {
+                        RemoteDealer::connect_tcp(&addr, registry.clone())
+                    }),
                     batch: cfg.refill_batch,
                 }
             }
         };
-        let pool = Arc::new(MaterialPool::start_with_source(
-            plan,
+        let pool = Arc::new(MaterialPool::start_multi(
+            registry.clone(),
             cfg.pool_target,
             cfg.pool_dealers,
-            cfg.seed,
             source,
             Some(metrics.clone()),
             cfg.deal_threads,
         ));
 
         let (ingress, ingress_rx): (Sender<Request>, Receiver<Request>) = channel();
-        let (batch_tx, batch_rx) = channel();
+        let (batch_tx, batch_rx): (Sender<ModelBatch>, Receiver<ModelBatch>) = channel();
         let policy = cfg.batch;
         let batcher = std::thread::spawn(move || {
-            while let Some(batch) = next_batch(&ingress_rx, policy) {
-                if batch_tx.send(batch).is_err() {
-                    return;
+            while let Some(batches) = next_model_batches(&ingress_rx, policy) {
+                for batch in batches {
+                    if batch_tx.send(batch).is_err() {
+                        return;
+                    }
                 }
             }
         });
         let workers =
             spawn_workers(cfg.workers, batch_rx, pool.clone(), metrics.clone(), cfg.seed ^ 0x77);
 
-        Self {
+        Ok(Self {
             ingress,
             metrics,
             pool,
+            registry,
             next_id: AtomicU64::new(0),
             batcher: Some(batcher),
             workers,
-        }
+        })
     }
 
-    /// Block until the bank holds at least `n` sessions (warmup).
+    /// Fingerprints of the served models, in registration order (index 0
+    /// is the default model of [`Self::submit`]/[`Self::infer`]).
+    pub fn models(&self) -> Vec<u64> {
+        self.registry.fingerprints()
+    }
+
+    /// Block until every model's bank holds at least `n` sessions
+    /// (warmup).
     pub fn warmup(&self, n: usize) {
         self.pool.wait_ready(n);
     }
 
-    /// Submit one inference; returns a receiver for the response.
-    pub fn submit(&self, input: Vec<Fp>) -> Receiver<Response> {
+    /// Submit one inference to a registered model; returns a receiver
+    /// for the response, or an error for an unknown fingerprint
+    /// (validated here so the worker path can trust every queued
+    /// request).
+    pub fn submit_to(&self, model: u64, input: Vec<Fp>) -> Result<Receiver<Response>> {
+        if self.registry.get(model).is_none() {
+            bail!("model {model:#018x} is not registered with this service");
+        }
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        let _ = self.ingress.send(Request { id, input, enqueued: Instant::now(), reply: tx });
-        rx
+        let _ = self.ingress.send(Request {
+            id,
+            model,
+            input,
+            enqueued: Instant::now(),
+            reply: tx,
+        });
+        Ok(rx)
     }
 
-    /// Submit and wait (convenience).
+    /// Submit one inference to the first registered model (single-model
+    /// convenience); returns a receiver for the response.
+    pub fn submit(&self, input: Vec<Fp>) -> Receiver<Response> {
+        let model = self.registry.entries()[0].fingerprint();
+        self.submit_to(model, input).expect("default model is registered")
+    }
+
+    /// Submit to a model and wait (convenience).
+    pub fn infer_on(&self, model: u64, input: Vec<Fp>) -> Result<Response> {
+        Ok(self.submit_to(model, input)?.recv().expect("service alive"))
+    }
+
+    /// Submit to the default model and wait (convenience).
     pub fn infer(&self, input: Vec<Fp>) -> Response {
         self.submit(input).recv().expect("service alive")
     }
@@ -158,17 +256,17 @@ mod tests {
         Arc::new(NetworkPlan::unscaled(linears, variant))
     }
 
+    fn oracle(p: &NetworkPlan, input: &[Fp]) -> Vec<Fp> {
+        let l0 = &p.linears[0];
+        let l1 = &p.linears[1];
+        let mid: Vec<Fp> =
+            l0.apply(input).iter().map(|&v| crate::field::relu_exact(v)).collect();
+        l1.apply(&mid)
+    }
+
     #[test]
     fn serve_roundtrip_with_correct_results() {
         let p = plan(ReluVariant::TruncatedSign { k: 4, mode: FaultMode::PosZero });
-        // Plaintext oracle.
-        let oracle = |input: &[Fp]| -> Vec<Fp> {
-            let l0 = &p.linears[0];
-            let l1 = &p.linears[1];
-            let mid: Vec<Fp> =
-                l0.apply(input).iter().map(|&v| crate::field::relu_exact(v)).collect();
-            l1.apply(&mid)
-        };
         let svc = PiService::start(p.clone(), ServiceConfig {
             workers: 2,
             pool_target: 8,
@@ -177,7 +275,7 @@ mod tests {
         });
         svc.warmup(4);
         let input: Vec<Fp> = (0..6).map(|i| Fp::from_i64(1000 + i)).collect();
-        let want = oracle(&input);
+        let want = oracle(&p, &input);
         for _ in 0..6 {
             let resp = svc.infer(input.clone());
             assert_eq!(resp.logits, want);
@@ -205,6 +303,56 @@ mod tests {
             assert_eq!(r.logits.len(), 3);
         }
         assert_eq!(svc.metrics.snapshot().completed, 12);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn multi_model_service_routes_per_model() {
+        // Two same-shaped models with different variants served side by
+        // side: each request's answer matches the oracle of the model it
+        // named, and the metrics split per model.
+        let exact = plan(ReluVariant::BaselineRelu);
+        let circa = plan(ReluVariant::TruncatedSign { k: 4, mode: FaultMode::PosZero });
+        let svc = PiService::start_multi(
+            vec![
+                (exact.clone(), ModelConfig::default()),
+                (circa.clone(), ModelConfig { base_seed: None, demand: 2.0 }),
+            ],
+            ServiceConfig { workers: 2, pool_target: 6, pool_dealers: 2, ..Default::default() },
+        )
+        .unwrap();
+        let models = svc.models();
+        assert_eq!(models.len(), 2);
+        svc.warmup(2);
+
+        // Both plans share weights (seed 1), so the exact-ReLU oracle is
+        // the same function; what differs per model is the protocol
+        // variant. The k=4 input magnitudes keep trunc faults away.
+        let input: Vec<Fp> = (0..6).map(|i| Fp::from_i64(1500 + i)).collect();
+        let rx_a: Vec<_> =
+            (0..3).map(|_| svc.submit_to(models[0], input.clone()).unwrap()).collect();
+        let rx_b: Vec<_> =
+            (0..3).map(|_| svc.submit_to(models[1], input.clone()).unwrap()).collect();
+        for rx in rx_a {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.model, models[0]);
+            assert_eq!(r.logits, oracle(&exact, &input));
+        }
+        for rx in rx_b {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.model, models[1]);
+            assert_eq!(r.logits, oracle(&circa, &input));
+        }
+
+        // Unknown model is rejected at submission.
+        assert!(svc.submit_to(models[0] ^ 0xDEAD, input).is_err());
+
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.completed, 6);
+        assert_eq!(snap.models.len(), 2);
+        for row in &snap.models {
+            assert_eq!(row.completed, 3, "model {:#x}", row.fingerprint);
+        }
         svc.shutdown();
     }
 }

@@ -23,15 +23,18 @@
 //! only from its own fork. That makes whole-layer dealing parallel *and*
 //! reproducible: the garble column rides
 //! [`LayerGcBatch::garble_chunked`]'s per-chunk forks across dealer
-//! threads, the cheap scalar columns fill sequentially, and the material
-//! is a function of the seed alone — bit-identical for every thread
-//! count (the contract `garble_chunked` established, now extended to the
-//! whole layer deal via [`offline_relu_layer_mt`]).
+//! threads, the Beaver-triple column is chunk-forked the same way (one
+//! sub-fork of the triple fork per [`GARBLE_CHUNK`] instances, filled
+//! across up to the same thread count), the remaining scalar columns
+//! fill sequentially, and the material is a function of the seed alone —
+//! bit-identical for every thread count (the contract `garble_chunked`
+//! established, now extended to the whole layer deal via
+//! [`offline_relu_layer_mt`]).
 
 use crate::beaver::{self, TripleShare};
 use crate::circuits::spec::{FaultMode, ReluVariant, VariantSpec};
 use crate::field::{random_fp, Fp};
-use crate::gc::batch::{LayerEncodingBatch, LayerGcBatch};
+use crate::gc::batch::{LayerEncodingBatch, LayerGcBatch, GARBLE_CHUNK};
 use crate::ot;
 use crate::prf::Label;
 use crate::util::Rng;
@@ -173,14 +176,10 @@ pub fn offline_relu_layer_mt(
         ot::ot_choose_into(encodings.view(i), 0, &bits, &mut client_labels);
     }
 
-    // Triple column.
+    // Triple column: chunk-forked like the garble column, so triple
+    // generation scales across the same dealer threads.
     let (triples_c, triples_s): (Vec<TripleShare>, Vec<TripleShare>) = if spec.uses_beaver() {
-        (0..n)
-            .map(|_| {
-                let t = beaver::gen_triple(&mut rng_triple);
-                (t.p1, t.p2)
-            })
-            .unzip()
+        triple_column_chunked(n, &mut rng_triple, n_threads)
     } else {
         (Vec::new(), Vec::new())
     };
@@ -205,6 +204,75 @@ pub fn offline_relu_layer_mt(
         },
         ServerReluMaterial { spec, encodings, output_decode: server_decode, triples: triples_s },
     )
+}
+
+/// Fill the Beaver-triple column with the same chunk-fork discipline as
+/// [`LayerGcBatch::garble_chunked`]: sub-fork the column fork once per
+/// [`GARBLE_CHUNK`] instances (forks drawn sequentially up front, so the
+/// stream of chunk `c` never depends on scheduling), then fill disjoint
+/// chunk ranges across up to `n_threads` threads. Output is
+/// **bit-identical for every thread count** — pinned by
+/// `tests/offline_schedule.rs`, with the schedule itself re-derived in
+/// `tests/batch_equivalence.rs` (a one-time re-anchor from the old
+/// sequential triple draw, exactly like the garble column's move).
+fn triple_column_chunked(
+    n: usize,
+    rng_triple: &mut Rng,
+    n_threads: usize,
+) -> (Vec<TripleShare>, Vec<TripleShare>) {
+    if n == 0 {
+        return (Vec::new(), Vec::new());
+    }
+    let n_chunks = n.div_ceil(GARBLE_CHUNK);
+    let mut forks: Vec<Rng> = (0..n_chunks).map(|c| rng_triple.fork(c as u64)).collect();
+    let n_groups = n_threads.max(1).min(n_chunks);
+    let zero = TripleShare { a: Fp::ZERO, b: Fp::ZERO, ab: Fp::ZERO };
+    let mut tc = vec![zero; n];
+    let mut ts = vec![zero; n];
+    if n_groups == 1 {
+        // Single group: fill in place, no thread spawn.
+        for (chunk_idx, mut frng) in forks.into_iter().enumerate() {
+            let lo = chunk_idx * GARBLE_CHUNK;
+            let hi = (lo + GARBLE_CHUNK).min(n);
+            for i in lo..hi {
+                let t = beaver::gen_triple(&mut frng);
+                tc[i] = t.p1;
+                ts[i] = t.p2;
+            }
+        }
+        return (tc, ts);
+    }
+    let chunks_per_group = n_chunks.div_ceil(n_groups);
+    std::thread::scope(|scope| {
+        let mut tc_rest = &mut tc[..];
+        let mut ts_rest = &mut ts[..];
+        let mut chunk0 = 0usize;
+        while chunk0 < n_chunks {
+            let g_chunks = chunks_per_group.min(n_chunks - chunk0);
+            let lo = chunk0 * GARBLE_CHUNK;
+            let hi = ((chunk0 + g_chunks) * GARBLE_CHUNK).min(n);
+            let m = hi - lo;
+            let g_forks: Vec<Rng> = forks.drain(..g_chunks).collect();
+            let (c_slice, rest) = std::mem::take(&mut tc_rest).split_at_mut(m);
+            tc_rest = rest;
+            let (s_slice, rest) = std::mem::take(&mut ts_rest).split_at_mut(m);
+            ts_rest = rest;
+            scope.spawn(move || {
+                let mut off = 0usize;
+                for mut frng in g_forks {
+                    let c_count = GARBLE_CHUNK.min(m - off);
+                    for i in off..off + c_count {
+                        let t = beaver::gen_triple(&mut frng);
+                        c_slice[i] = t.p1;
+                        s_slice[i] = t.p2;
+                    }
+                    off += c_count;
+                }
+            });
+            chunk0 += g_chunks;
+        }
+    });
+    (tc, ts)
 }
 
 /// Peek only the `r_out` column of a layer deal — the one cross-layer

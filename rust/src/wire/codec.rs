@@ -16,10 +16,13 @@
 //! failures are [`Result`] errors — never panics.
 //!
 //! Versioning: [`MAGIC`]/[`VERSION`] are carried once per connection in
-//! the [`SessionManifest`] handshake. Any layout change to the material
-//! encodings below requires a `VERSION` bump; decoders reject manifests
-//! with a different version outright (no cross-version compatibility is
-//! attempted at this stage).
+//! the handshake's **manifest set** ([`encode_manifest_set`] — one
+//! [`SessionManifest`] per model the sender serves). Any layout change
+//! to the material encodings below requires a `VERSION` bump; decoders
+//! reject manifests with a different version outright (no cross-version
+//! compatibility is attempted at this stage). `VERSION` 3 is the
+//! multi-model round: material payloads lead with the fingerprint of the
+//! model they belong to, and the manifest carries a weight digest.
 
 use crate::beaver::TripleShare;
 use crate::circuits::spec::{FaultMode, ReluVariant, VariantSpec};
@@ -39,8 +42,18 @@ pub const MAGIC: u32 = u32::from_le_bytes(*b"CIRW");
 
 /// Wire-format version; bump on any layout change. v2: layer-granular
 /// streaming (the `LayerBatch`/`Spine` payloads below) and the frame
-/// CRC extended to cover the frame header.
-pub const VERSION: u16 = 2;
+/// CRC extended to cover the frame header. v3 (one-time, multi-model
+/// round): the `Hello` payload is a **manifest set**
+/// ([`encode_manifest_set`]) instead of a single manifest, the manifest
+/// body carries a behavioral weight digest
+/// ([`SessionManifest::weight_hash`], folded into the fingerprint), and
+/// `Request`, `RequestLayers`, `LayerBatch`, and `Spine` payloads lead
+/// with the model fingerprint so one connection serves any registered
+/// plan.
+pub const VERSION: u16 = 3;
+
+/// Upper bound on manifests per handshake set (decode guard).
+pub const MAX_MANIFESTS: u32 = 1024;
 
 // ---------------------------------------------------------------- scalars
 
@@ -304,29 +317,35 @@ pub fn get_server_relu(r: &mut Reader) -> Result<ServerReluMaterial> {
 // ------------------------------------------------- layer-granular units
 
 /// Encode one ReLU layer of one session — both parties' halves, keyed by
-/// layer index and session sequence number. This is the payload of a
-/// `LayerBatch` frame: the unit layer-granular streaming ships, sized by
-/// the *layer*, never the session.
+/// the model fingerprint, layer index, and session sequence number. This
+/// is the payload of a `LayerBatch` frame: the unit layer-granular
+/// streaming ships, sized by the *layer*, never the session.
 pub fn put_layer_batch(
     w: &mut Writer,
+    fingerprint: u64,
     layer_idx: u32,
     seq: u64,
     cm: &ClientReluMaterial,
     sm: &ServerReluMaterial,
 ) {
+    w.u64(fingerprint);
     w.u32(layer_idx);
     w.u64(seq);
     put_client_relu(w, cm);
     put_server_relu(w, sm);
 }
 
-/// Decode a `LayerBatch` payload against the local plan: the layer index
-/// must name a ReLU layer, and both halves must match the plan's variant
-/// and that layer's width.
+/// Decode a `LayerBatch` payload against a plan: the layer index must
+/// name a ReLU layer of `plan`, and both halves must match the plan's
+/// variant and that layer's width. The leading model fingerprint is
+/// returned for the *caller* to check against the plan it resolved —
+/// multi-model receivers read the fingerprint first (it is the payload's
+/// first 8 bytes), pick the plan it names, then decode against it.
 pub fn get_layer_batch(
     r: &mut Reader,
     plan: &NetworkPlan,
-) -> Result<(u32, u64, ClientReluMaterial, ServerReluMaterial)> {
+) -> Result<(u64, u32, u64, ClientReluMaterial, ServerReluMaterial)> {
+    let fingerprint = r.u64()?;
     let layer_idx = r.u32()?;
     let li = layer_idx as usize;
     ensure!(
@@ -352,13 +371,14 @@ pub fn get_layer_batch(
         plan.variant
     );
     ensure!(sm.n() == want_n, "layer {li}: {} server ReLUs != {want_n}", sm.n());
-    Ok((layer_idx, seq, cm, sm))
+    Ok((fingerprint, layer_idx, seq, cm, sm))
 }
 
 /// Encode a session's linear-precompute spine (the payload of a `Spine`
-/// frame): per linear layer the client mask, client x-share, and server
-/// blind, plus the modeled HE byte ledger.
-pub fn put_spine(w: &mut Writer, seq: u64, spine: &LinearSpine) {
+/// frame): the model fingerprint, then per linear layer the client mask,
+/// client x-share, and server blind, plus the modeled HE byte ledger.
+pub fn put_spine(w: &mut Writer, fingerprint: u64, seq: u64, spine: &LinearSpine) {
+    w.u64(fingerprint);
     w.u64(seq);
     w.u64(spine.slots.len() as u64);
     for slot in &spine.slots {
@@ -370,8 +390,10 @@ pub fn put_spine(w: &mut Writer, seq: u64, spine: &LinearSpine) {
 }
 
 /// Decode a `Spine` payload, validating every slot's dimensions against
-/// the plan's layer chain.
-pub fn get_spine(r: &mut Reader, plan: &NetworkPlan) -> Result<(u64, LinearSpine)> {
+/// the plan's layer chain. As with [`get_layer_batch`], the leading
+/// fingerprint is returned for the caller to bind to the plan it chose.
+pub fn get_spine(r: &mut Reader, plan: &NetworkPlan) -> Result<(u64, u64, LinearSpine)> {
+    let fingerprint = r.u64()?;
     let seq = r.u64()?;
     let n = r.u64()? as usize;
     ensure!(n == plan.linears.len(), "spine {n} slots != plan {}", plan.linears.len());
@@ -401,23 +423,32 @@ pub fn get_spine(r: &mut Reader, plan: &NetworkPlan) -> Result<(u64, LinearSpine
         slots.push(LinearSlot { r: mask, x_share, s });
     }
     let he_bytes = r.u64()?;
-    Ok((seq, LinearSpine { slots, he_bytes }))
+    Ok((fingerprint, seq, LinearSpine { slots, he_bytes }))
 }
 
 // --------------------------------------------------------------- manifest
 
-/// Structural identity of a served plan, exchanged during the dealer
-/// handshake. Covers variant, layer dimensions, and rescale schedule;
-/// weight equality is the operator's responsibility (shared seed or
-/// artifact hash), since [`crate::protocol::linear::LinearOp`] is
-/// deliberately opaque.
+/// Identity of a served plan, exchanged during the dealer handshake.
+/// Covers variant, layer dimensions, rescale schedule, and a behavioral
+/// **weight digest**: [`crate::protocol::linear::LinearOp`] is
+/// deliberately opaque, so instead of hashing raw weights each layer is
+/// probed with a fixed pseudorandom input vector and the output is
+/// hashed — a mutated weight changes its row's probe response with
+/// overwhelming probability, so mismatched weights are a *handshake
+/// error*, never silently wrong material. The digest is folded into the
+/// fingerprint, which therefore keys complete model identity (the
+/// registry/pool/wire key): same architecture, different weights ⇒
+/// different model.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SessionManifest {
     pub variant: ReluVariant,
     /// `(in_dim, out_dim)` of each linear layer, in order.
     pub dims: Vec<(u32, u32)>,
     pub rescale_bits: Vec<u32>,
-    /// FNV-1a over the encoded body — a quick equality/debug handle.
+    /// FNV-1a over each linear layer's response to a fixed probe vector.
+    pub weight_hash: u64,
+    /// FNV-1a over the encoded body (weight digest included) — the model
+    /// key used by the registry, the pool shards, and the wire round.
     pub fingerprint: u64,
 }
 
@@ -430,6 +461,22 @@ fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Behavioral weight digest: hash every layer's response to a fixed
+/// seeded probe vector (one matvec per linear layer).
+fn weight_digest(plan: &NetworkPlan) -> u64 {
+    let mut w = Writer::new();
+    for (li, op) in plan.linears.iter().enumerate() {
+        let mut rng =
+            crate::util::Rng::new(0x5747_D161 ^ (li as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let probe: Vec<Fp> =
+            (0..op.in_dim()).map(|_| crate::field::random_fp(&mut rng)).collect();
+        for y in op.apply(&probe) {
+            w.u32(y.raw() as u32);
+        }
+    }
+    fnv1a64(&w.buf)
+}
+
 impl SessionManifest {
     pub fn of_plan(plan: &NetworkPlan) -> Self {
         let dims =
@@ -438,12 +485,23 @@ impl SessionManifest {
             variant: plan.variant,
             dims,
             rescale_bits: plan.rescale_bits.clone(),
+            weight_hash: weight_digest(plan),
             fingerprint: 0,
         };
         let mut w = Writer::new();
         m.put_body(&mut w);
         m.fingerprint = fnv1a64(&w.buf);
         m
+    }
+
+    /// `true` when two manifests describe the same architecture (variant,
+    /// dims, rescale schedule), whatever their weights — the distinction
+    /// that turns a handshake mismatch into a *weight digest* error
+    /// instead of an unknown-model error.
+    pub fn same_architecture(&self, other: &SessionManifest) -> bool {
+        self.variant == other.variant
+            && self.dims == other.dims
+            && self.rescale_bits == other.rescale_bits
     }
 
     fn put_body(&self, w: &mut Writer) {
@@ -457,6 +515,7 @@ impl SessionManifest {
         for &b in &self.rescale_bits {
             w.u32(b);
         }
+        w.u64(self.weight_hash);
     }
 
     /// Encode with the `MAGIC | VERSION` preamble (the handshake payload).
@@ -493,13 +552,57 @@ impl SessionManifest {
         let raw = r.take(n_rescale.checked_mul(4).context("rescale length overflows")?)?;
         let rescale_bits: Vec<u32> =
             raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        let weight_hash = r.u64()?;
         let body_end = bytes.len() - r.remaining();
         let fingerprint = r.u64()?;
         ensure!(r.remaining() == 0, "trailing bytes after manifest");
         let want = fnv1a64(&bytes[body_start..body_end]);
         ensure!(fingerprint == want, "manifest fingerprint mismatch");
-        Ok(SessionManifest { variant, dims, rescale_bits, fingerprint })
+        Ok(SessionManifest { variant, dims, rescale_bits, weight_hash, fingerprint })
     }
+}
+
+/// Encode a handshake manifest set: `MAGIC | VERSION | count | (len |
+/// manifest) × count`. Each entry is a full [`SessionManifest::encode`]
+/// payload, so every per-manifest validation (magic, version,
+/// fingerprint-covers-body) applies to every set member on decode.
+pub fn encode_manifest_set(set: &[SessionManifest]) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(MAGIC);
+    w.u16(VERSION);
+    w.u32(set.len() as u32);
+    for m in set {
+        let bytes = m.encode();
+        w.u32(bytes.len() as u32);
+        w.buf.extend_from_slice(&bytes);
+    }
+    w.buf
+}
+
+/// Decode and validate a handshake manifest set (at least one manifest,
+/// no duplicate fingerprints, nothing trailing).
+pub fn decode_manifest_set(bytes: &[u8]) -> Result<Vec<SessionManifest>> {
+    let mut r = Reader::new(bytes);
+    let magic = r.u32()?;
+    ensure!(magic == MAGIC, "bad magic {magic:#010x}");
+    let version = r.u16()?;
+    ensure!(version == VERSION, "unsupported wire version {version} (want {VERSION})");
+    let count = r.u32()?;
+    ensure!((1..=MAX_MANIFESTS).contains(&count), "bad manifest count {count}");
+    let mut set = Vec::with_capacity(count as usize);
+    for _ in 0..count {
+        let len = r.u32()? as usize;
+        let entry = r.take(len)?;
+        let m = SessionManifest::decode(entry)?;
+        ensure!(
+            set.iter().all(|prev: &SessionManifest| prev.fingerprint != m.fingerprint),
+            "duplicate fingerprint {:#018x} in manifest set",
+            m.fingerprint
+        );
+        set.push(m);
+    }
+    ensure!(r.remaining() == 0, "trailing bytes after manifest set");
+    Ok(set)
 }
 
 // ---------------------------------------------------------------- session
@@ -741,13 +844,14 @@ mod tests {
         let plan =
             NetworkPlan { linears, variant: circa_variant(8), rescale_bits: vec![2, 1] };
 
+        let fp = SessionManifest::of_plan(&plan).fingerprint;
         let (cm, sm) = deal_relu_layer_mt(&plan, &mut session_rng(0xFACE, 3), 1, 1);
         let mut w = Writer::new();
-        put_layer_batch(&mut w, 1, 3, &cm, &sm);
+        put_layer_batch(&mut w, fp, 1, 3, &cm, &sm);
         let mut r = Reader::new(&w.buf);
-        let (li, seq, c2, s2) = get_layer_batch(&mut r, &plan).unwrap();
+        let (fp2, li, seq, c2, s2) = get_layer_batch(&mut r, &plan).unwrap();
         assert_eq!(r.remaining(), 0);
-        assert_eq!((li, seq), (1, 3));
+        assert_eq!((fp2, li, seq), (fp, 1, 3));
         assert_eq!(c2.gc.tables(), cm.gc.tables());
         assert_eq!(c2.client_labels, cm.client_labels);
         assert_eq!(c2.r_v, cm.r_v);
@@ -757,16 +861,16 @@ mod tests {
 
         // Out-of-range layer index is rejected.
         let mut w2 = Writer::new();
-        put_layer_batch(&mut w2, 7, 3, &cm, &sm);
+        put_layer_batch(&mut w2, fp, 7, 3, &cm, &sm);
         assert!(get_layer_batch(&mut Reader::new(&w2.buf), &plan).is_err());
 
         let spine = deal_spine(&plan, &mut session_rng(0xFACE, 3));
         let mut w = Writer::new();
-        put_spine(&mut w, 3, &spine);
+        put_spine(&mut w, fp, 3, &spine);
         let mut r = Reader::new(&w.buf);
-        let (seq, sp2) = get_spine(&mut r, &plan).unwrap();
+        let (fp2, seq, sp2) = get_spine(&mut r, &plan).unwrap();
         assert_eq!(r.remaining(), 0);
-        assert_eq!(seq, 3);
+        assert_eq!((fp2, seq), (fp, 3));
         assert_eq!(sp2.he_bytes, spine.he_bytes);
         assert_eq!(sp2.slots.len(), spine.slots.len());
         for (a, b) in sp2.slots.iter().zip(&spine.slots) {
@@ -797,6 +901,7 @@ mod tests {
         };
         let m = SessionManifest::of_plan(&plan);
         assert_eq!(m.dims, vec![(6, 4), (4, 2)]);
+        assert_ne!(m.weight_hash, 0);
         let bytes = m.encode();
         assert_eq!(SessionManifest::decode(&bytes).unwrap(), m);
 
@@ -821,6 +926,56 @@ mod tests {
         for cut in 0..bytes.len() {
             assert!(SessionManifest::decode(&bytes[..cut]).is_err(), "cut={cut}");
         }
+    }
+
+    #[test]
+    fn weight_digest_separates_same_shaped_plans() {
+        use crate::protocol::linear::{LinearOp, Matrix};
+        use std::sync::Arc;
+        let mk = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let linears: Vec<Arc<dyn LinearOp>> = vec![
+                Arc::new(Matrix::random(4, 6, 10, &mut rng)),
+                Arc::new(Matrix::random(2, 4, 10, &mut rng)),
+            ];
+            NetworkPlan { linears, variant: circa_variant(8), rescale_bits: vec![1] }
+        };
+        let a = SessionManifest::of_plan(&mk(1));
+        let a2 = SessionManifest::of_plan(&mk(1));
+        let b = SessionManifest::of_plan(&mk(2));
+        assert_eq!(a, a2, "digest is deterministic");
+        assert!(a.same_architecture(&b), "same dims/variant/rescale");
+        assert_ne!(a.weight_hash, b.weight_hash, "different weights, different digest");
+        assert_ne!(a.fingerprint, b.fingerprint, "digest is folded into the fingerprint");
+    }
+
+    #[test]
+    fn manifest_set_roundtrip_and_guards() {
+        use crate::protocol::linear::{LinearOp, Matrix};
+        use std::sync::Arc;
+        let mk = |seed: u64, variant| {
+            let mut rng = Rng::new(seed);
+            let linears: Vec<Arc<dyn LinearOp>> = vec![
+                Arc::new(Matrix::random(4, 6, 10, &mut rng)),
+                Arc::new(Matrix::random(2, 4, 10, &mut rng)),
+            ];
+            SessionManifest::of_plan(&NetworkPlan::unscaled(linears, variant))
+        };
+        let a = mk(1, circa_variant(12));
+        let b = mk(1, ReluVariant::BaselineRelu);
+        let bytes = encode_manifest_set(&[a.clone(), b.clone()]);
+        let set = decode_manifest_set(&bytes).unwrap();
+        assert_eq!(set, vec![a.clone(), b]);
+
+        // Empty sets, duplicates, and truncation are rejected.
+        assert!(decode_manifest_set(&encode_manifest_set(&[])).is_err());
+        assert!(decode_manifest_set(&encode_manifest_set(&[a.clone(), a])).is_err());
+        for cut in (0..bytes.len()).step_by(9) {
+            assert!(decode_manifest_set(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(decode_manifest_set(&padded).is_err());
     }
 
     #[test]

@@ -1,50 +1,67 @@
-//! The standalone dealer: garbles offline material on demand and streams
-//! it to a coordinator over the framed transport — whole sessions
-//! (legacy round) or single layers (streaming round).
+//! The standalone dealer: garbles offline material on demand for **any
+//! registered model** and streams it to a coordinator over the framed
+//! transport — whole sessions (legacy round) or single layers
+//! (streaming round), every unit addressed by model fingerprint.
 //!
 //! Protocol (one connection):
 //!
 //! ```text
-//! coordinator → dealer : Hello          (SessionManifest of the local plan)
-//! dealer      → coord  : Hello          (its own manifest)  — or Error + close
+//! coordinator → dealer : Hello          (manifest set of every local model)
+//! dealer      → coord  : Hello          (its own manifest set) — or Error + close
 //!
 //! ── legacy whole-session round ──────────────────────────────────────
-//! coordinator → dealer : Request        (u32 session count)
+//! coordinator → dealer : Request        (fingerprint u64 | u32 session count)
 //! dealer      → coord  : Session × count (one encoded session each)
 //!
 //! ── layer-granular round ────────────────────────────────────────────
-//! coordinator → dealer : RequestLayers  (kind u8 | layer u32 | count u32
+//! coordinator → dealer : RequestLayers  (fingerprint u64 | kind u8
+//!                                        | layer u32 | count u32
 //!                                        | seq u64 × count)
 //! dealer      → coord  : LayerBatch × count   (kind = REQ_RELU_LAYER)
 //!              — or —  : Spine × count        (kind = REQ_SPINE)
 //!
-//! ...                    (rounds of either kind, freely mixed)
+//! ...                    (rounds of either kind, freely mixed, for any
+//!                         registered model)
 //! coordinator → dealer : Bye
 //! ```
 //!
-//! The handshake compares manifests structurally (variant, layer dims,
-//! rescale schedule, fingerprint); a mismatch is rejected before any
-//! material moves.
+//! The handshake compares manifest **sets**: every model the coordinator
+//! names must be registered on the dealer with an *equal* manifest —
+//! variant, layer dims, rescale schedule, and the behavioral weight
+//! digest ([`SessionManifest::weight_hash`]) all match, or the
+//! connection is rejected before any material moves. A dealer restarted
+//! with mutated weights is therefore a handshake error, never silently
+//! wrong material. The dealer may serve *more* models than one
+//! coordinator asks about (its registry is a superset), which is what
+//! lets one dealer fleet feed heterogeneous coordinator pools.
+//!
+//! A `Request`/`RequestLayers` naming a fingerprint the dealer does not
+//! serve is answered with an `Error` frame and the connection stays up
+//! (the coordinator may race a registration or be misconfigured for one
+//! model only); malformed frames and protocol violations still tear the
+//! connection down.
 //!
 //! The legacy round deals with
 //! [`crate::protocol::server::offline_network_mt`] from the connection's
-//! sequential RNG stream. The layer round is **seq-addressed**: each
-//! requested unit is dealt from
-//! [`session_rng`]`(base_seed, seq)` — a pure function of the dealer's
-//! base seed and the session sequence number — via
-//! [`crate::protocol::server::deal_relu_layer_mt`] /
-//! [`crate::protocol::server::deal_spine`]. The per-layer forked session
-//! schedule makes a standalone layer bit-identical to the same layer
-//! inside a whole-session deal from the same session RNG, so a
-//! coordinator can assemble sessions from independently fetched layers
-//! (across any number of connections to dealers sharing the base seed)
-//! and the largest frame on the wire is bounded by the largest single
-//! layer batch or the spine (which carries no GC material), never the
-//! session.
+//! sequential RNG stream. The layer round is **seq-addressed per
+//! model**: each requested unit is dealt from
+//! [`session_rng`]`(entry.base_seed, seq)` — a pure function of that
+//! model's base seed (its registry entry) and the session sequence
+//! number — via [`crate::protocol::server::deal_relu_layer_mt`] /
+//! [`crate::protocol::server::deal_spine`]. Per-model base seeds keep
+//! two models' seq spaces disjoint even though both count sessions
+//! 0, 1, 2, …, and the per-layer forked session schedule makes a
+//! standalone layer bit-identical to the same layer inside a
+//! whole-session deal from the same session RNG, so a coordinator can
+//! assemble sessions from independently fetched layers (across any
+//! number of connections to dealers sharing the registry) and the
+//! largest frame on the wire is bounded by the largest single layer
+//! batch or the spine, never the session.
 
 use super::codec::{self, SessionManifest};
 use super::frame::{Channel, Framed, MemChannel, MsgType, TcpChannel};
 use crate::coordinator::pool::Session;
+use crate::coordinator::registry::ModelRegistry;
 use crate::protocol::offline::{ClientReluMaterial, ServerReluMaterial};
 use crate::protocol::server::{
     deal_relu_layer_mt, deal_spine, session_rng, LinearSpine, NetworkPlan,
@@ -90,32 +107,59 @@ pub fn deal_session_mt(plan: &NetworkPlan, rng: &mut Rng, deal_threads: usize) -
     Session { client, server, offline_bytes }
 }
 
+/// Check that `wanted` appears (as an equal manifest) in `offered`. The
+/// failure distinguishes *weight-digest* mismatches — same architecture,
+/// different weights — from entirely unknown models, so an operator
+/// pointing a coordinator at a dealer with stale weights sees exactly
+/// that in the handshake error.
+fn manifest_covered(wanted: &SessionManifest, offered: &[SessionManifest]) -> Result<()> {
+    if offered.iter().any(|m| m == wanted) {
+        return Ok(());
+    }
+    if let Some(m) = offered.iter().find(|m| m.same_architecture(wanted)) {
+        bail!(
+            "weight digest mismatch for plan {:#018x}: peer weight hash {:#018x} != \
+             local {:#018x} (same architecture, different weights)",
+            wanted.fingerprint,
+            m.weight_hash,
+            wanted.weight_hash
+        );
+    }
+    bail!(
+        "peer serves no plan with fingerprint {:#018x} ({} plans offered)",
+        wanted.fingerprint,
+        offered.len()
+    )
+}
+
 /// Serve one dealer connection until `Bye` or peer close, dealing each
-/// unit across up to `deal_threads` threads. Legacy `Request` rounds
-/// draw from `rng` (the connection's sequential stream); `RequestLayers`
-/// rounds are seq-addressed from `base_seed` so every connection to
-/// dealers sharing that seed serves mutually consistent layers. Returns
-/// `Ok` on an orderly goodbye, `Err` on protocol violations or transport
-/// failure (callers serving many connections just log and move on).
+/// unit across up to `deal_threads` threads from any model in
+/// `registry`. Legacy `Request` rounds draw from `rng` (the connection's
+/// sequential stream); `RequestLayers` rounds are seq-addressed from the
+/// named model's registry base seed, so every connection to dealers
+/// sharing a registry serves mutually consistent layers. Unknown
+/// fingerprints in a round are answered with an `Error` frame (the
+/// connection survives); returns `Ok` on an orderly goodbye, `Err` on
+/// protocol violations or transport failure (callers serving many
+/// connections just log and move on).
 pub fn serve_connection(
     mut framed: Framed,
-    plan: &NetworkPlan,
+    registry: &ModelRegistry,
     rng: &mut Rng,
-    base_seed: u64,
     deal_threads: usize,
 ) -> Result<()> {
-    let local = SessionManifest::of_plan(plan);
+    ensure!(!registry.is_empty(), "dealer registry is empty");
+    let local_set = registry.manifests();
     let hello = framed.recv()?;
     ensure!(hello.msg_type == MsgType::Hello, "expected Hello, got {:?}", hello.msg_type);
-    match SessionManifest::decode(&hello.payload) {
-        Ok(remote) if remote == local => framed.send(MsgType::Hello, &local.encode())?,
-        Ok(remote) => {
-            let msg = format!(
-                "plan mismatch: dealer fingerprint {:#018x}, coordinator {:#018x}",
-                local.fingerprint, remote.fingerprint
-            );
-            let _ = framed.send(MsgType::Error, msg.as_bytes());
-            bail!("{msg}");
+    match codec::decode_manifest_set(&hello.payload) {
+        Ok(remotes) => {
+            if let Err(e) = remotes.iter().try_for_each(|m| manifest_covered(m, &local_set)) {
+                let msg = format!("plan set mismatch: {e}");
+                let _ = framed.send(MsgType::Error, msg.as_bytes());
+                bail!("{msg}");
+            }
+            framed.send(MsgType::Hello, &codec::encode_manifest_set(&local_set))?;
         }
         Err(e) => {
             let _ = framed.send(MsgType::Error, e.to_string().as_bytes());
@@ -127,18 +171,26 @@ pub fn serve_connection(
         let frame = framed.recv()?;
         match frame.msg_type {
             MsgType::Request => {
-                let count = Reader::new(&frame.payload).u32()?;
+                let mut r = Reader::new(&frame.payload);
+                let fp = r.u64()?;
+                let count = r.u32()?;
                 ensure!(
                     (1..=MAX_SESSIONS_PER_REQUEST).contains(&count),
                     "bad session count {count}"
                 );
+                let Some(entry) = registry.get(fp) else {
+                    let msg = format!("unknown model fingerprint {fp:#018x}");
+                    framed.send(MsgType::Error, msg.as_bytes())?;
+                    continue;
+                };
                 for _ in 0..count {
-                    let session = deal_session_mt(plan, rng, deal_threads);
+                    let session = deal_session_mt(&entry.plan, rng, deal_threads);
                     framed.send(MsgType::Session, &codec::encode_session(&session))?;
                 }
             }
             MsgType::RequestLayers => {
                 let mut r = Reader::new(&frame.payload);
+                let fp = r.u64()?;
                 let kind = r.u8()?;
                 let layer = r.u32()? as usize;
                 let count = r.u32()?;
@@ -151,6 +203,12 @@ pub fn serve_connection(
                     seqs.push(r.u64()?);
                 }
                 ensure!(r.remaining() == 0, "trailing bytes in RequestLayers");
+                let Some(entry) = registry.get(fp) else {
+                    let msg = format!("unknown model fingerprint {fp:#018x}");
+                    framed.send(MsgType::Error, msg.as_bytes())?;
+                    continue;
+                };
+                let (plan, base_seed) = (&entry.plan, entry.base_seed);
                 match kind {
                     REQ_RELU_LAYER => {
                         ensure!(
@@ -166,7 +224,7 @@ pub fn serve_connection(
                                 deal_threads,
                             );
                             let mut w = Writer::new();
-                            codec::put_layer_batch(&mut w, layer as u32, seq, &cm, &sm);
+                            codec::put_layer_batch(&mut w, fp, layer as u32, seq, &cm, &sm);
                             framed.send(MsgType::LayerBatch, &w.buf)?;
                         }
                     }
@@ -175,7 +233,7 @@ pub fn serve_connection(
                         for seq in seqs {
                             let spine = deal_spine(plan, &mut session_rng(base_seed, seq));
                             let mut w = Writer::new();
-                            codec::put_spine(&mut w, seq, &spine);
+                            codec::put_spine(&mut w, fp, seq, &spine);
                             framed.send(MsgType::Spine, &w.buf)?;
                         }
                     }
@@ -188,10 +246,14 @@ pub fn serve_connection(
     }
 }
 
-/// Coordinator-side handle to a connected dealer.
+/// Coordinator-side handle to a connected dealer. Holds the local
+/// [`ModelRegistry`]; every fetch names a model fingerprint and every
+/// answered unit is decoded against the plan *its own* fingerprint tag
+/// names, so a unit for the wrong model surfaces as a tagged mismatch
+/// the pool can drop and count, not as silently mis-shaped material.
 pub struct RemoteDealer {
     framed: Framed,
-    plan: Arc<NetworkPlan>,
+    registry: Arc<ModelRegistry>,
     /// Set after any transport/decode error: request/response pairing on
     /// the stream may be desynced (e.g. undrained Session frames), so
     /// the handle refuses further fetches — reconnect instead.
@@ -199,22 +261,23 @@ pub struct RemoteDealer {
 }
 
 impl RemoteDealer {
-    /// Handshake over an established byte channel.
-    pub fn connect(chan: Box<dyn Channel>, plan: Arc<NetworkPlan>) -> Result<RemoteDealer> {
+    /// Handshake over an established byte channel: ships the registry's
+    /// manifest set; every local model must be covered by the dealer's
+    /// reply set (weight digests included).
+    pub fn connect(chan: Box<dyn Channel>, registry: Arc<ModelRegistry>) -> Result<RemoteDealer> {
+        ensure!(!registry.is_empty(), "local registry is empty");
         let mut framed = Framed::new(chan);
-        let manifest = SessionManifest::of_plan(&plan);
-        framed.send(MsgType::Hello, &manifest.encode())?;
+        let local = registry.manifests();
+        framed.send(MsgType::Hello, &codec::encode_manifest_set(&local))?;
         let reply = framed.recv()?;
         match reply.msg_type {
             MsgType::Hello => {
-                let remote = SessionManifest::decode(&reply.payload)?;
-                ensure!(
-                    remote == manifest,
-                    "dealer serves a different plan (fingerprint {:#018x} != {:#018x})",
-                    remote.fingerprint,
-                    manifest.fingerprint
-                );
-                Ok(RemoteDealer { framed, plan, poisoned: false })
+                let offered = codec::decode_manifest_set(&reply.payload)?;
+                for m in &local {
+                    manifest_covered(m, &offered)
+                        .with_context(|| "dealer manifest set does not cover local models")?;
+                }
+                Ok(RemoteDealer { framed, registry, poisoned: false })
             }
             MsgType::Error => {
                 bail!("dealer rejected handshake: {}", String::from_utf8_lossy(&reply.payload))
@@ -224,35 +287,41 @@ impl RemoteDealer {
     }
 
     /// Connect to a dealer over TCP.
-    pub fn connect_tcp(addr: &str, plan: Arc<NetworkPlan>) -> Result<RemoteDealer> {
-        Self::connect(Box::new(TcpChannel::connect(addr)?), plan)
+    pub fn connect_tcp(addr: &str, registry: Arc<ModelRegistry>) -> Result<RemoteDealer> {
+        Self::connect(Box::new(TcpChannel::connect(addr)?), registry)
     }
 
-    /// Fetch freshly dealt sessions (blocking round trip). `count` is
-    /// clamped to `1..=MAX_SESSIONS_PER_REQUEST`; the returned vec's
-    /// length is the clamped count. Any error poisons the handle (the
-    /// stream may hold undrained frames) — drop it and reconnect.
-    pub fn fetch(&mut self, count: usize) -> Result<Vec<Session>> {
+    /// Fetch freshly dealt sessions of model `model` (blocking round
+    /// trip). `count` is clamped to `1..=MAX_SESSIONS_PER_REQUEST`; the
+    /// returned vec's length is the clamped count. Any error poisons the
+    /// handle (the stream may hold undrained frames) — drop it and
+    /// reconnect.
+    pub fn fetch(&mut self, model: u64, count: usize) -> Result<Vec<Session>> {
         ensure!(!self.poisoned, "connection poisoned by an earlier error; reconnect");
-        let res = self.fetch_inner(count);
+        let res = self.fetch_inner(model, count);
         if res.is_err() {
             self.poisoned = true;
         }
         res
     }
 
-    fn fetch_inner(&mut self, count: usize) -> Result<Vec<Session>> {
+    fn fetch_inner(&mut self, model: u64, count: usize) -> Result<Vec<Session>> {
+        let plan = self
+            .registry
+            .get(model)
+            .with_context(|| format!("model {model:#018x} not in local registry"))?
+            .plan
+            .clone();
         let count = count.clamp(1, MAX_SESSIONS_PER_REQUEST as usize) as u32;
         let mut w = Writer::new();
+        w.u64(model);
         w.u32(count);
         self.framed.send(MsgType::Request, &w.buf)?;
         let mut out = Vec::with_capacity(count as usize);
         for _ in 0..count {
             let frame = self.framed.recv()?;
             match frame.msg_type {
-                MsgType::Session => {
-                    out.push(codec::decode_session(&frame.payload, &self.plan)?)
-                }
+                MsgType::Session => out.push(codec::decode_session(&frame.payload, &plan)?),
                 MsgType::Error => {
                     bail!("dealer error: {}", String::from_utf8_lossy(&frame.payload))
                 }
@@ -262,75 +331,107 @@ impl RemoteDealer {
         Ok(out)
     }
 
-    /// Fetch ReLU layer `layer` of each session in `seqs` (blocking
-    /// round trip). Returned in request order as `(seq, client half,
-    /// server half)`. Any error poisons the handle — reconnect.
+    /// Fetch ReLU layer `layer` of each session in `seqs` for model
+    /// `model` (blocking round trip). Returned in request order as
+    /// `(fingerprint, seq, client half, server half)` — the fingerprint
+    /// is the one *the dealer tagged the unit with*; the caller must
+    /// check it against the model it asked for (the pool drops and
+    /// counts mismatches instead of banking them). Any error poisons the
+    /// handle — reconnect.
     pub fn fetch_layers(
         &mut self,
+        model: u64,
         layer: usize,
         seqs: &[u64],
-    ) -> Result<Vec<(u64, ClientReluMaterial, ServerReluMaterial)>> {
+    ) -> Result<Vec<(u64, u64, ClientReluMaterial, ServerReluMaterial)>> {
         ensure!(!self.poisoned, "connection poisoned by an earlier error; reconnect");
-        let res = self.fetch_layers_inner(layer, seqs);
+        let res = self.fetch_layers_inner(model, layer, seqs);
         if res.is_err() {
             self.poisoned = true;
         }
         res
     }
 
+    /// Resolve the plan a received unit's leading fingerprint tag names
+    /// (units decode against *their own* model's shapes — the caller
+    /// then compares the tag to the model it asked for).
+    fn resolve_unit_plan(&self, payload: &[u8]) -> Result<Arc<NetworkPlan>> {
+        let fp = Reader::new(payload).u64()?;
+        Ok(self
+            .registry
+            .get(fp)
+            .with_context(|| format!("dealer answered unregistered fingerprint {fp:#018x}"))?
+            .plan
+            .clone())
+    }
+
     fn fetch_layers_inner(
         &mut self,
+        model: u64,
         layer: usize,
         seqs: &[u64],
-    ) -> Result<Vec<(u64, ClientReluMaterial, ServerReluMaterial)>> {
-        self.send_layer_request(REQ_RELU_LAYER, layer as u32, seqs)?;
+    ) -> Result<Vec<(u64, u64, ClientReluMaterial, ServerReluMaterial)>> {
+        self.send_layer_request(model, REQ_RELU_LAYER, layer as u32, seqs)?;
         let mut out = Vec::with_capacity(seqs.len());
         for &want_seq in seqs {
             let frame = self.recv_unit(MsgType::LayerBatch)?;
+            let plan = self.resolve_unit_plan(&frame.payload)?;
             let mut r = Reader::new(&frame.payload);
-            let (li, seq, cm, sm) = codec::get_layer_batch(&mut r, &self.plan)?;
+            let (fp, li, seq, cm, sm) = codec::get_layer_batch(&mut r, &plan)?;
             ensure!(r.remaining() == 0, "trailing bytes after layer batch");
             ensure!(
                 li as usize == layer && seq == want_seq,
                 "dealer answered layer {li} seq {seq}, wanted layer {layer} seq {want_seq}"
             );
-            out.push((seq, cm, sm));
+            out.push((fp, seq, cm, sm));
         }
         Ok(out)
     }
 
-    /// Fetch the linear-precompute spine of each session in `seqs`.
-    /// Returned in request order. Any error poisons the handle.
-    pub fn fetch_spines(&mut self, seqs: &[u64]) -> Result<Vec<(u64, LinearSpine)>> {
+    /// Fetch the linear-precompute spine of each session in `seqs` for
+    /// model `model`. Returned in request order as `(fingerprint, seq,
+    /// spine)` — same fingerprint-tag contract as [`Self::fetch_layers`].
+    /// Any error poisons the handle.
+    pub fn fetch_spines(
+        &mut self,
+        model: u64,
+        seqs: &[u64],
+    ) -> Result<Vec<(u64, u64, LinearSpine)>> {
         ensure!(!self.poisoned, "connection poisoned by an earlier error; reconnect");
-        let res = self.fetch_spines_inner(seqs);
+        let res = self.fetch_spines_inner(model, seqs);
         if res.is_err() {
             self.poisoned = true;
         }
         res
     }
 
-    fn fetch_spines_inner(&mut self, seqs: &[u64]) -> Result<Vec<(u64, LinearSpine)>> {
-        self.send_layer_request(REQ_SPINE, 0, seqs)?;
+    fn fetch_spines_inner(
+        &mut self,
+        model: u64,
+        seqs: &[u64],
+    ) -> Result<Vec<(u64, u64, LinearSpine)>> {
+        self.send_layer_request(model, REQ_SPINE, 0, seqs)?;
         let mut out = Vec::with_capacity(seqs.len());
         for &want_seq in seqs {
             let frame = self.recv_unit(MsgType::Spine)?;
+            let plan = self.resolve_unit_plan(&frame.payload)?;
             let mut r = Reader::new(&frame.payload);
-            let (seq, spine) = codec::get_spine(&mut r, &self.plan)?;
+            let (fp, seq, spine) = codec::get_spine(&mut r, &plan)?;
             ensure!(r.remaining() == 0, "trailing bytes after spine");
             ensure!(seq == want_seq, "dealer answered seq {seq}, wanted {want_seq}");
-            out.push((seq, spine));
+            out.push((fp, seq, spine));
         }
         Ok(out)
     }
 
-    fn send_layer_request(&mut self, kind: u8, layer: u32, seqs: &[u64]) -> Result<()> {
+    fn send_layer_request(&mut self, model: u64, kind: u8, layer: u32, seqs: &[u64]) -> Result<()> {
         ensure!(
             !seqs.is_empty() && seqs.len() <= MAX_UNITS_PER_REQUEST as usize,
             "bad unit count {}",
             seqs.len()
         );
         let mut w = Writer::new();
+        w.u64(model);
         w.u8(kind);
         w.u32(layer);
         w.u32(seqs.len() as u32);
@@ -368,26 +469,37 @@ impl RemoteDealer {
     }
 }
 
-/// Spawn a dealer thread serving one in-memory duplex channel, dealing
-/// each session across up to `deal_threads` threads. Returns the
-/// coordinator-side endpoint and the dealer thread handle.
+/// Spawn a dealer thread serving one in-memory duplex channel from a
+/// full model registry, dealing each unit across up to `deal_threads`
+/// threads. `conn_seed` seeds the connection's legacy-round RNG stream.
+/// Returns the coordinator-side endpoint and the dealer thread handle.
+pub fn spawn_mem_dealer_multi(
+    registry: Arc<ModelRegistry>,
+    conn_seed: u64,
+    deal_threads: usize,
+) -> (Box<dyn Channel>, JoinHandle<()>) {
+    let (coord_end, dealer_end) = MemChannel::pair();
+    let handle = std::thread::spawn(move || {
+        let mut rng = Rng::new(conn_seed);
+        let _ = serve_connection(
+            Framed::new(Box::new(dealer_end)),
+            &registry,
+            &mut rng,
+            deal_threads,
+        );
+    });
+    (Box::new(coord_end), handle)
+}
+
+/// Single-model [`spawn_mem_dealer_multi`]: a registry of one plan whose
+/// seq namespace is exactly `seed` (dealt bytes identical to the
+/// pre-registry dealer for the same `(seed, plan)`).
 pub fn spawn_mem_dealer(
     plan: Arc<NetworkPlan>,
     seed: u64,
     deal_threads: usize,
 ) -> (Box<dyn Channel>, JoinHandle<()>) {
-    let (coord_end, dealer_end) = MemChannel::pair();
-    let handle = std::thread::spawn(move || {
-        let mut rng = Rng::new(seed);
-        let _ = serve_connection(
-            Framed::new(Box::new(dealer_end)),
-            &plan,
-            &mut rng,
-            seed,
-            deal_threads,
-        );
-    });
-    (Box::new(coord_end), handle)
+    spawn_mem_dealer_multi(ModelRegistry::single(plan, seed), seed, deal_threads)
 }
 
 /// A running TCP dealer (accept loop + per-connection threads).
@@ -430,14 +542,15 @@ impl DealerHandle {
     }
 }
 
-/// Bind `addr` (e.g. `127.0.0.1:0`) and serve dealer connections until
-/// stopped. For the legacy whole-session round, connection `c` deals
-/// from `Rng::new(seed ^ c·φ)` — a reproducible per-connection stream.
-/// Layer-granular rounds are seq-addressed from `seed` itself, so every
+/// Bind `addr` (e.g. `127.0.0.1:0`) and serve dealer connections for
+/// every model in `registry` until stopped. For the legacy whole-session
+/// round, connection `c` deals from `Rng::new(seed ^ c·φ)` — a
+/// reproducible per-connection stream. Layer-granular rounds are
+/// seq-addressed from each model's registry base seed, so every
 /// connection serves mutually consistent per-layer material.
-pub fn spawn_tcp_dealer(
+pub fn spawn_tcp_dealer_multi(
     addr: &str,
-    plan: Arc<NetworkPlan>,
+    registry: Arc<ModelRegistry>,
     seed: u64,
     deal_threads: usize,
 ) -> Result<DealerHandle> {
@@ -460,11 +573,11 @@ pub fn spawn_tcp_dealer(
                     // The connection itself is served blocking.
                     let _ = stream.set_nonblocking(false);
                     conn_id += 1;
-                    let plan = plan.clone();
+                    let registry = registry.clone();
                     let mut rng = Rng::new(seed ^ conn_id.wrapping_mul(0x9E3779B97F4A7C15));
                     std::thread::spawn(move || {
                         let framed = Framed::new(Box::new(TcpChannel::new(stream)));
-                        let _ = serve_connection(framed, &plan, &mut rng, seed, deal_threads);
+                        let _ = serve_connection(framed, &registry, &mut rng, deal_threads);
                     });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -477,10 +590,20 @@ pub fn spawn_tcp_dealer(
     Ok(DealerHandle { addr: local, stop, accept_thread: Some(accept_thread) })
 }
 
+/// Single-model [`spawn_tcp_dealer_multi`] (seq namespace = `seed`).
+pub fn spawn_tcp_dealer(
+    addr: &str,
+    plan: Arc<NetworkPlan>,
+    seed: u64,
+    deal_threads: usize,
+) -> Result<DealerHandle> {
+    spawn_tcp_dealer_multi(addr, ModelRegistry::single(plan, seed), seed, deal_threads)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::circuits::spec::ReluVariant;
+    use crate::circuits::spec::{FaultMode, ReluVariant};
     use crate::protocol::linear::{LinearOp, Matrix};
     use crate::protocol::server::run_inference;
 
@@ -493,14 +616,20 @@ mod tests {
         Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu))
     }
 
+    fn fp_of(plan: &NetworkPlan) -> u64 {
+        SessionManifest::of_plan(plan).fingerprint
+    }
+
     #[test]
     fn mem_dealer_sessions_match_inline_deal() {
         let plan = tiny_plan(1);
+        let fp = fp_of(&plan);
         // Multi-threaded dealer vs single-threaded inline deal: the
         // column schedule makes them bit-identical.
         let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), 42, 4);
-        let mut dealer = RemoteDealer::connect(chan, plan.clone()).unwrap();
-        let sessions = dealer.fetch(2).unwrap();
+        let mut dealer =
+            RemoteDealer::connect(chan, ModelRegistry::single(plan.clone(), 42)).unwrap();
+        let sessions = dealer.fetch(fp, 2).unwrap();
         assert_eq!(sessions.len(), 2);
         assert!(dealer.bytes_received() > 0);
         dealer.close();
@@ -523,20 +652,23 @@ mod tests {
     #[test]
     fn layer_round_matches_standalone_deal_and_mixes_with_legacy() {
         let plan = tiny_plan(1);
+        let fp = fp_of(&plan);
         let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), 0xABC, 2);
-        let mut dealer = RemoteDealer::connect(chan, plan.clone()).unwrap();
-        let spines = dealer.fetch_spines(&[0, 1]).unwrap();
-        let layers = dealer.fetch_layers(0, &[1, 0]).unwrap();
+        let mut dealer =
+            RemoteDealer::connect(chan, ModelRegistry::single(plan.clone(), 0xABC)).unwrap();
+        let spines = dealer.fetch_spines(fp, &[0, 1]).unwrap();
+        let layers = dealer.fetch_layers(fp, 0, &[1, 0]).unwrap();
         // The legacy whole-session round still works on the same
         // connection, interleaved with layer rounds.
-        let sessions = dealer.fetch(1).unwrap();
+        let sessions = dealer.fetch(fp, 1).unwrap();
         assert_eq!(sessions.len(), 1);
         dealer.close();
         let _ = dealer_thread.join();
 
         // Everything fetched is seq-addressed: re-derivable locally from
-        // (base seed, seq) alone.
-        for (seq, spine) in &spines {
+        // (base seed, seq) alone — and tagged with the model fingerprint.
+        for (ufp, seq, spine) in &spines {
+            assert_eq!(*ufp, fp, "seq {seq}: fingerprint tag");
             let local = deal_spine(&plan, &mut session_rng(0xABC, *seq));
             assert_eq!(spine.he_bytes, local.he_bytes, "seq {seq}");
             for (a, b) in spine.slots.iter().zip(&local.slots) {
@@ -545,7 +677,8 @@ mod tests {
                 assert_eq!(a.s, b.s, "seq {seq}");
             }
         }
-        for (seq, cm, sm) in &layers {
+        for (ufp, seq, cm, sm) in &layers {
+            assert_eq!(*ufp, fp, "seq {seq}: fingerprint tag");
             let (lc, ls) = deal_relu_layer_mt(&plan, &mut session_rng(0xABC, *seq), 0, 1);
             assert_eq!(cm.gc.tables(), lc.gc.tables(), "seq {seq}");
             assert_eq!(cm.client_labels, lc.client_labels, "seq {seq}");
@@ -555,16 +688,73 @@ mod tests {
     }
 
     #[test]
+    fn one_connection_serves_every_registered_model() {
+        // Two models (different depths, different variants) over one
+        // dealer link: each model's units come back addressed with its
+        // own fingerprint and dealt from its own base-seed namespace.
+        let plan_a = tiny_plan(1);
+        let mut rng = Rng::new(5);
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(5, 6, 10, &mut rng)),
+            Arc::new(Matrix::random(4, 5, 10, &mut rng)),
+            Arc::new(Matrix::random(3, 4, 10, &mut rng)),
+        ];
+        let plan_b = Arc::new(NetworkPlan::unscaled(
+            linears,
+            ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero },
+        ));
+        let mut reg = ModelRegistry::new();
+        let fa = reg.register(plan_a.clone(), 0xA0, 1.0).unwrap();
+        let fb = reg.register(plan_b.clone(), 0xB0, 1.0).unwrap();
+        let registry = Arc::new(reg);
+
+        let (chan, dealer_thread) = spawn_mem_dealer_multi(registry.clone(), 3, 1);
+        let mut dealer = RemoteDealer::connect(chan, registry).unwrap();
+        let la = dealer.fetch_layers(fa, 0, &[0]).unwrap();
+        let lb = dealer.fetch_layers(fb, 1, &[0]).unwrap();
+        dealer.close();
+        let _ = dealer_thread.join();
+
+        assert_eq!(la[0].0, fa);
+        assert_eq!(lb[0].0, fb);
+        let (ca, _) = deal_relu_layer_mt(&plan_a, &mut session_rng(0xA0, 0), 0, 1);
+        let (cb, _) = deal_relu_layer_mt(&plan_b, &mut session_rng(0xB0, 0), 1, 1);
+        assert_eq!(la[0].2.gc.tables(), ca.gc.tables(), "model A from A's namespace");
+        assert_eq!(lb[0].2.gc.tables(), cb.gc.tables(), "model B from B's namespace");
+    }
+
+    #[test]
+    fn unknown_fingerprint_is_an_error_frame_not_a_dead_connection() {
+        let plan = tiny_plan(1);
+        let fp = fp_of(&plan);
+        let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), 9, 1);
+        let mut dealer =
+            RemoteDealer::connect(chan, ModelRegistry::single(plan.clone(), 9)).unwrap();
+        // A fetch for an unregistered model errors (Error frame)...
+        let err = dealer.fetch_layers_inner(fp ^ 0xFFFF, 0, &[0]).unwrap_err();
+        assert!(err.to_string().contains("unknown model fingerprint"), "{err}");
+        // ...and the connection itself survived: the next round works.
+        // (fetch_layers_inner bypasses the poison latch deliberately —
+        // the pool's public path reconnects instead.)
+        let layers = dealer.fetch_layers_inner(fp, 0, &[0]).unwrap();
+        assert_eq!(layers.len(), 1);
+        dealer.close();
+        let _ = dealer_thread.join();
+    }
+
+    #[test]
     fn tcp_dealer_on_unspecified_bind_stops_promptly() {
         // The regression this pins: a 0.0.0.0 bind whose stop() nudge
         // cannot connect must still stop within the accept-poll interval
         // instead of joining a blocked accept() forever.
         let plan = tiny_plan(1);
+        let fp = fp_of(&plan);
         let handle = spawn_tcp_dealer("0.0.0.0:0", plan.clone(), 2, 1).expect("bind");
         // Prove it serves via loopback first.
         let addr = format!("127.0.0.1:{}", handle.addr().port());
-        let mut dealer = RemoteDealer::connect_tcp(&addr, plan).unwrap();
-        let sessions = dealer.fetch(1).unwrap();
+        let mut dealer =
+            RemoteDealer::connect_tcp(&addr, ModelRegistry::single(plan, 2)).unwrap();
+        let sessions = dealer.fetch(fp, 1).unwrap();
         assert_eq!(sessions.len(), 1);
         dealer.close();
         let t = std::time::Instant::now();
@@ -583,21 +773,41 @@ mod tests {
         let plan_b = Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu));
 
         let (chan, dealer_thread) = spawn_mem_dealer(plan_a, 7, 1);
-        let err = RemoteDealer::connect(chan, plan_b).unwrap_err();
+        let err =
+            RemoteDealer::connect(chan, ModelRegistry::single(plan_b, 7)).unwrap_err();
         assert!(err.to_string().contains("rejected"), "{err}");
+        let _ = dealer_thread.join();
+    }
+
+    #[test]
+    fn handshake_rejects_mutated_weights_with_a_weight_digest_error() {
+        // Same architecture, different weights: the behavioral weight
+        // digest must turn this into a *handshake* error naming the
+        // digest — never silently wrong material.
+        let plan_a = tiny_plan(1);
+        let plan_mutated = tiny_plan(2); // same dims/variant, other weights
+        assert!(SessionManifest::of_plan(&plan_a)
+            .same_architecture(&SessionManifest::of_plan(&plan_mutated)));
+
+        let (chan, dealer_thread) = spawn_mem_dealer(plan_a, 7, 1);
+        let err =
+            RemoteDealer::connect(chan, ModelRegistry::single(plan_mutated, 7)).unwrap_err();
+        assert!(err.to_string().contains("weight digest mismatch"), "{err}");
         let _ = dealer_thread.join();
     }
 
     #[test]
     fn request_count_bounds_enforced() {
         let plan = tiny_plan(1);
+        let fp = fp_of(&plan);
         let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), 5, 1);
         let mut framed = Framed::new(chan);
         let manifest = SessionManifest::of_plan(&plan);
-        framed.send(MsgType::Hello, &manifest.encode()).unwrap();
+        framed.send(MsgType::Hello, &codec::encode_manifest_set(&[manifest])).unwrap();
         assert_eq!(framed.recv().unwrap().msg_type, MsgType::Hello);
         // Zero-count request is a protocol violation; the dealer drops us.
         let mut w = Writer::new();
+        w.u64(fp);
         w.u32(0);
         framed.send(MsgType::Request, &w.buf).unwrap();
         assert!(framed.recv().is_err());

@@ -42,23 +42,29 @@ pub const FRAME_CRC_BYTES: usize = 4;
 /// Message types of the dealer protocol (see [`super::dealer`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MsgType {
-    /// Handshake: payload is an encoded `SessionManifest`.
+    /// Handshake: payload is an encoded manifest *set* (one
+    /// `SessionManifest` per model the sender serves).
     Hello = 1,
-    /// Coordinator → dealer: payload is a u32 session count.
+    /// Coordinator → dealer: payload is a model fingerprint (u64) and a
+    /// u32 session count.
     Request = 2,
     /// Dealer → coordinator: payload is one encoded session.
     Session = 3,
     /// Orderly goodbye (empty payload).
     Bye = 4,
-    /// Fatal rejection: payload is a UTF-8 message.
+    /// Rejection: payload is a UTF-8 message. Fatal in the handshake;
+    /// inside a round it reports an unknown model fingerprint and the
+    /// connection survives.
     Error = 5,
-    /// Coordinator → dealer: layer-granular work order (kind, layer
-    /// index, explicit session sequence numbers).
+    /// Coordinator → dealer: layer-granular work order (model
+    /// fingerprint, kind, layer index, explicit session sequence
+    /// numbers).
     RequestLayers = 6,
-    /// Dealer → coordinator: one ReLU layer of one session, both
-    /// parties' halves.
+    /// Dealer → coordinator: one ReLU layer of one session of one
+    /// model, both parties' halves.
     LayerBatch = 7,
-    /// Dealer → coordinator: the linear-precompute spine of one session.
+    /// Dealer → coordinator: the linear-precompute spine of one session
+    /// of one model.
     Spine = 8,
 }
 

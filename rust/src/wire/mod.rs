@@ -26,33 +26,40 @@
 //!
 //! ## Message types ([`frame::MsgType`])
 //!
-//! | type          | dir            | payload                             |
-//! |---------------|----------------|-------------------------------------|
-//! | Hello         | both           | encoded [`codec::SessionManifest`]  |
-//! | Request       | coord → dealer | `u32` session count                 |
-//! | Session       | dealer → coord | one encoded session                 |
-//! | RequestLayers | coord → dealer | kind, layer index, explicit seqs    |
-//! | LayerBatch    | dealer → coord | one ReLU layer of one session       |
-//! | Spine         | dealer → coord | one session's linear precomputes    |
-//! | Bye           | coord → dealer | empty                               |
-//! | Error         | dealer → coord | UTF-8 rejection message             |
+//! | type          | dir            | payload                                |
+//! |---------------|----------------|----------------------------------------|
+//! | Hello         | both           | manifest set (one per served model)    |
+//! | Request       | coord → dealer | model fingerprint, `u32` count         |
+//! | Session       | dealer → coord | one encoded session                    |
+//! | RequestLayers | coord → dealer | fingerprint, kind, layer, seqs         |
+//! | LayerBatch    | dealer → coord | fingerprint + one session's ReLU layer |
+//! | Spine         | dealer → coord | fingerprint + one session's precompute |
+//! | Bye           | coord → dealer | empty                                  |
+//! | Error         | dealer → coord | UTF-8 rejection message                |
 //!
 //! `Request`/`Session` is the legacy whole-session round;
 //! `RequestLayers`/`LayerBatch`/`Spine` is the layer-granular streaming
 //! round ([`dealer`]), which keeps the largest frame bounded by the
 //! largest single layer batch or the linear spine (masks and blinds
 //! only — no GC material, so orders of magnitude below the session) —
-//! giant models never need GiB-scale frames.
+//! giant models never need GiB-scale frames. Every round is
+//! **model-addressed**: the requested fingerprint picks the plan, the
+//! answered unit carries the fingerprint it was dealt for, and an
+//! unknown fingerprint is answered with an `Error` frame (the
+//! connection survives; handshake errors are fatal).
 //!
 //! ## Versioning rules
 //!
-//! The `MAGIC | VERSION` preamble rides in the `Hello` manifest once per
-//! connection; material payloads carry no per-message version. Any
-//! change to a payload layout in [`codec`] requires bumping
+//! The `MAGIC | VERSION` preamble rides in the `Hello` manifest set
+//! once per connection; material payloads carry no per-message version.
+//! Any change to a payload layout in [`codec`] requires bumping
 //! [`codec::VERSION`]; decoders reject other versions outright.
 //! Evolution happens behind new message types and the version field;
 //! the one reshaping of the frame itself (CRC coverage) is documented
-//! in [`frame`] and rode a `VERSION` bump.
+//! in [`frame`] and rode a `VERSION` bump, and `VERSION` 3 is the
+//! one-time multi-model reshape (manifest-set `Hello`, weight digest in
+//! the manifest body, fingerprint-led `Request`/`RequestLayers`/
+//! `LayerBatch`/`Spine` payloads).
 //!
 //! ## Trust model
 //!
@@ -66,6 +73,11 @@ pub mod codec;
 pub mod dealer;
 pub mod frame;
 
-pub use codec::{decode_session, encode_session, SessionManifest};
-pub use dealer::{spawn_mem_dealer, spawn_tcp_dealer, DealerHandle, RemoteDealer};
+pub use codec::{
+    decode_manifest_set, decode_session, encode_manifest_set, encode_session, SessionManifest,
+};
+pub use dealer::{
+    spawn_mem_dealer, spawn_mem_dealer_multi, spawn_tcp_dealer, spawn_tcp_dealer_multi,
+    DealerHandle, RemoteDealer,
+};
 pub use frame::{Channel, Framed, MemChannel, MsgType, TcpChannel};

@@ -10,11 +10,16 @@
 //! from a per-ReLU RNG interleave (garble, r_v, r_out, triple — per ReLU)
 //! to the column-wise schedule documented in `protocol::offline` (one
 //! fork per material column, `COL_GARBLE`..`COL_TRIPLE`, with the garble
-//! column sub-forked per `GARBLE_CHUNK` instances). The reference below
-//! re-derives that schedule independently, so with equal seeds both
-//! paths must still produce equal material and therefore equal
-//! transcripts; any divergence in the batched data plane shows up as a
-//! share or byte mismatch.
+//! column sub-forked per `GARBLE_CHUNK` instances). **Second one-time
+//! re-anchor (triple-column parallelism):** the Beaver-triple column
+//! moved from a sequential draw off its column fork to the same
+//! chunk-fork discipline as the garble column (one sub-fork of the
+//! triple fork per `GARBLE_CHUNK` instances), so triple generation can
+//! ride the same dealer threads. The reference below re-derives both
+//! schedules independently, so with equal seeds both paths must still
+//! produce equal material and therefore equal transcripts; any
+//! divergence in the batched data plane shows up as a share or byte
+//! mismatch.
 
 use circa::beaver::{self, TripleShare};
 use circa::circuits::spec::{FaultMode, ReluVariant};
@@ -103,13 +108,17 @@ fn offline_ref(variant: ReluVariant, xc: &[Fp], rng: &mut Rng) -> (RefClient, Re
         c.client_labels.push(batch.labels);
     }
 
-    // Triple column.
+    // Triple column: chunk-forked exactly like the garble column —
+    // chunk c of GARBLE_CHUNK instances draws from rng_triple.fork(c).
     if spec.uses_beaver() {
-        for _ in xc {
-            let t = beaver::gen_triple(&mut rng_triple);
-            c.triples.push(t.p1);
-            s.triples.push(t.p2);
-            c.offline_bytes += 6 * 4;
+        for (chunk_idx, chunk) in xc.chunks(GARBLE_CHUNK).enumerate() {
+            let mut chunk_rng = rng_triple.fork(chunk_idx as u64);
+            for _ in chunk {
+                let t = beaver::gen_triple(&mut chunk_rng);
+                c.triples.push(t.p1);
+                s.triples.push(t.p2);
+                c.offline_bytes += 6 * 4;
+            }
         }
     }
     (c, s)
@@ -268,7 +277,15 @@ fn offline_column_schedule_matches_across_chunk_boundary() {
     assert_eq!(cm.offline_bytes, rc.offline_bytes);
     assert_eq!(cm.r_v, rc.r_v);
     assert_eq!(cm.r_out, rc.r_out);
+    // The triple column's chunk sub-forks must line up across the
+    // boundary too, value for value (both parties' shares).
     assert_eq!(cm.triples.len(), rc.triples.len());
+    for i in [0, GARBLE_CHUNK - 1, GARBLE_CHUNK, n - 1] {
+        let (a, b) = (&cm.triples[i], &rc.triples[i]);
+        assert_eq!((a.a, a.b, a.ab), (b.a, b.b, b.ab), "client triple {i}");
+        let (a, b) = (&sm.triples[i], &rs.triples[i]);
+        assert_eq!((a.a, a.b, a.ab), (b.a, b.b, b.ab), "server triple {i}");
+    }
 }
 
 #[test]

@@ -1,0 +1,278 @@
+//! Acceptance tests for the multi-model coordinator: two plans of
+//! different depths (variants k ∈ {0, 12}) served concurrently over one
+//! TCP dealer link — every assembled session bit-matches an inline
+//! single-model deal of the same `(base_seed, plan, seq)` — and the
+//! cross-model staging guard: a `LayerBatch` tagged for model B can
+//! never be staged into model A's bank (fingerprint mismatch → dropped
+//! + counted), proven against a deliberately lying dealer.
+
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::coordinator::{MaterialPool, Metrics, ModelRegistry, RefillSource};
+use circa::field::Fp;
+use circa::protocol::linear::{LinearOp, Matrix};
+use circa::protocol::server::{
+    deal_relu_layer_mt, deal_spine, offline_network_mt, run_inference, session_rng, NetworkPlan,
+};
+use circa::util::bytes::{Reader, Writer};
+use circa::util::Rng;
+use circa::wire::codec;
+use circa::wire::dealer::{spawn_tcp_dealer_multi, RemoteDealer, REQ_RELU_LAYER, REQ_SPINE};
+use circa::wire::frame::{Channel, Framed, MemChannel, MsgType};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Model A: 3 linear layers (2 ReLU layers), Circa k=12.
+fn plan_a() -> Arc<NetworkPlan> {
+    let mut rng = Rng::new(31);
+    let linears: Vec<Arc<dyn LinearOp>> = vec![
+        Arc::new(Matrix::random(5, 6, 20, &mut rng)),
+        Arc::new(Matrix::random(4, 5, 20, &mut rng)),
+        Arc::new(Matrix::random(3, 4, 20, &mut rng)),
+    ];
+    Arc::new(NetworkPlan::unscaled(
+        linears,
+        ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero },
+    ))
+}
+
+/// Model B: 2 linear layers (1 ReLU layer), Circa k=0 (exact sign).
+fn plan_b() -> Arc<NetworkPlan> {
+    let mut rng = Rng::new(32);
+    let linears: Vec<Arc<dyn LinearOp>> = vec![
+        Arc::new(Matrix::random(4, 6, 20, &mut rng)),
+        Arc::new(Matrix::random(3, 4, 20, &mut rng)),
+    ];
+    Arc::new(NetworkPlan::unscaled(
+        linears,
+        ReluVariant::TruncatedSign { k: 0, mode: FaultMode::PosZero },
+    ))
+}
+
+const SEED_A: u64 = 0xA11CE;
+const SEED_B: u64 = 0xB0BB1;
+
+fn two_model_registry() -> (Arc<ModelRegistry>, u64, u64) {
+    let mut reg = ModelRegistry::new();
+    let fa = reg.register(plan_a(), SEED_A, 1.0).unwrap();
+    let fb = reg.register(plan_b(), SEED_B, 2.0).unwrap();
+    (Arc::new(reg), fa, fb)
+}
+
+#[test]
+fn two_models_over_one_tcp_dealer_bit_match_inline_single_model_deals() {
+    // The tentpole acceptance property: with two registered plans
+    // streaming over one TCP dealer, every assembled session of each
+    // model is bit-identical (offline bytes + full inference transcript)
+    // to an inline single-model deal from that model's own
+    // (base_seed, seq) — seq spaces never collide because the base
+    // seeds differ per model.
+    let (registry, fa, fb) = two_model_registry();
+    let handle =
+        spawn_tcp_dealer_multi("127.0.0.1:0", registry.clone(), 0xC0DE, 2).expect("bind dealer");
+    let addr = handle.addr().to_string();
+
+    let metrics = Arc::new(Metrics::default());
+    let reg_c = registry.clone();
+    let connect: Arc<dyn Fn() -> circa::util::error::Result<RemoteDealer> + Send + Sync> =
+        Arc::new(move || RemoteDealer::connect_tcp(&addr, reg_c.clone()));
+    let pool = MaterialPool::start_multi(
+        registry.clone(),
+        3,
+        2,
+        RefillSource::Remote { connect, batch: 2 },
+        Some(metrics.clone()),
+        1,
+    );
+    pool.wait_ready(3);
+
+    let input: Vec<Fp> = (0..6).map(|j| Fp::from_i64(1400 + 5 * j)).collect();
+    let mut rng = Rng::new(6);
+    for (fp, plan, seed) in [(fa, plan_a(), SEED_A), (fb, plan_b(), SEED_B)] {
+        for seq in 0..3u64 {
+            let lease = pool.lease_model(fp, &mut rng);
+            assert!(!lease.was_dry, "model {fp:#x} seq {seq}: bank must be fed over TCP");
+            let (client, server, offline_bytes) =
+                offline_network_mt(&plan, &mut session_rng(seed, seq), 1);
+            assert_eq!(lease.session.offline_bytes, offline_bytes, "model {fp:#x} seq {seq}");
+            let (wire_logits, wire_stats) =
+                run_inference(&lease.session.client, &lease.session.server, &input);
+            let (inline_logits, inline_stats) = run_inference(&client, &server, &input);
+            assert_eq!(wire_logits, inline_logits, "model {fp:#x} seq {seq}: transcript");
+            assert_eq!(wire_stats.bytes_to_client, inline_stats.bytes_to_client);
+            assert_eq!(wire_stats.bytes_to_server, inline_stats.bytes_to_server);
+        }
+    }
+
+    // No cross-model contamination, and both models report their own
+    // metrics rows (A has 2 relu banks + spine, B has 1 + spine).
+    assert_eq!(pool.fingerprint_drops(), 0);
+    let snap = metrics.snapshot();
+    assert_eq!(snap.fp_mismatch_drops, 0);
+    let row = |fp: u64| snap.models.iter().find(|m| m.fingerprint == fp).expect("model row");
+    assert_eq!(row(fa).bank_depths.len(), 3, "model A: spine + 2 relu banks");
+    assert_eq!(row(fb).bank_depths.len(), 2, "model B: spine + 1 relu bank");
+    assert!(row(fa).layer_entries >= 1);
+    assert!(row(fb).layer_entries >= 1);
+    assert!(snap.bytes_offline_wire > 0);
+
+    pool.shutdown();
+    handle.stop();
+}
+
+/// A dealer that handshakes honestly and serves spines honestly, but
+/// answers **every** ReLU-layer request with model B's material, tagged
+/// with model B's fingerprint — valid, decodable material, just for the
+/// wrong model whenever model A asked. Exercises the pool's staging
+/// guard end to end.
+fn spawn_lying_dealer(registry: Arc<ModelRegistry>, fb: u64) -> Box<dyn Channel> {
+    let (coord_end, dealer_end) = MemChannel::pair();
+    std::thread::spawn(move || {
+        let mut framed = Framed::new(Box::new(dealer_end));
+        let Ok(hello) = framed.recv() else { return };
+        if hello.msg_type != MsgType::Hello {
+            return;
+        }
+        if framed
+            .send(MsgType::Hello, &codec::encode_manifest_set(&registry.manifests()))
+            .is_err()
+        {
+            return;
+        }
+        let entry_b = registry.get(fb).expect("model B registered");
+        loop {
+            let Ok(frame) = framed.recv() else { return };
+            match frame.msg_type {
+                MsgType::RequestLayers => {
+                    let mut r = Reader::new(&frame.payload);
+                    let fp = r.u64().unwrap();
+                    let kind = r.u8().unwrap();
+                    let layer = r.u32().unwrap() as usize;
+                    let count = r.u32().unwrap();
+                    let seqs: Vec<u64> = (0..count).map(|_| r.u64().unwrap()).collect();
+                    for seq in seqs {
+                        if kind == REQ_SPINE {
+                            // Honest spine for whichever model asked.
+                            let entry = registry.get(fp).expect("requested model");
+                            let spine =
+                                deal_spine(&entry.plan, &mut session_rng(entry.base_seed, seq));
+                            let mut w = Writer::new();
+                            codec::put_spine(&mut w, fp, seq, &spine);
+                            if framed.send(MsgType::Spine, &w.buf).is_err() {
+                                return;
+                            }
+                        } else {
+                            assert_eq!(kind, REQ_RELU_LAYER);
+                            // The lie: model B's layer, tagged for B,
+                            // whatever model was asked for.
+                            let (cm, sm) = deal_relu_layer_mt(
+                                &entry_b.plan,
+                                &mut session_rng(entry_b.base_seed, seq),
+                                layer.min(entry_b.plan.n_relu_layers() - 1),
+                                1,
+                            );
+                            let mut w = Writer::new();
+                            codec::put_layer_batch(
+                                &mut w,
+                                fb,
+                                layer.min(entry_b.plan.n_relu_layers() - 1) as u32,
+                                seq,
+                                &cm,
+                                &sm,
+                            );
+                            if framed.send(MsgType::LayerBatch, &w.buf).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                }
+                MsgType::Bye => return,
+                _ => return,
+            }
+        }
+    });
+    Box::new(coord_end)
+}
+
+#[test]
+fn cross_model_layer_batch_is_dropped_and_counted_never_staged() {
+    // Two same-depth plans so a lying dealer can echo the requested
+    // (layer, seq) with *valid* model-B material. Model A's ReLU bank
+    // must stay empty — every B-tagged unit is dropped and counted —
+    // while model B (served honestly by the same lying dealer) still
+    // assembles sessions that bit-match inline deals.
+    let pa = {
+        let mut rng = Rng::new(41);
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(5, 6, 20, &mut rng)),
+            Arc::new(Matrix::random(3, 5, 20, &mut rng)),
+        ];
+        Arc::new(NetworkPlan::unscaled(
+            linears,
+            ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero },
+        ))
+    };
+    let pb = plan_b();
+    let mut reg = ModelRegistry::new();
+    let fa = reg.register(pa, SEED_A, 1.0).unwrap();
+    // B's higher demand weight makes the scheduler fill B's banks before
+    // hammering A's permanently-failing relu bank — the weighting is
+    // exactly what keeps a poisoned (model, layer) pair from starving a
+    // healthy model on the same connection.
+    let fb = reg.register(pb.clone(), SEED_B, 3.0).unwrap();
+    let registry = Arc::new(reg);
+
+    let metrics = Arc::new(Metrics::default());
+    let reg_c = registry.clone();
+    let connect: Arc<dyn Fn() -> circa::util::error::Result<RemoteDealer> + Send + Sync> =
+        Arc::new(move || {
+            let chan = spawn_lying_dealer(reg_c.clone(), fb);
+            RemoteDealer::connect(chan, reg_c.clone())
+        });
+    let pool = MaterialPool::start_multi(
+        registry,
+        2,
+        1,
+        RefillSource::Remote { connect, batch: 2 },
+        Some(metrics.clone()),
+        1,
+    );
+
+    // Wait (bounded) until the guard has fired and model B is ready.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while (pool.fingerprint_drops() < 2 || pool.banked_model(fb) < 1)
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(
+        pool.fingerprint_drops() >= 2,
+        "B-tagged units for model A must be dropped and counted (got {})",
+        pool.fingerprint_drops()
+    );
+    assert!(
+        metrics.snapshot().fp_mismatch_drops >= 2,
+        "drops surface in metrics too"
+    );
+
+    // Model A's ReLU bank never staged a foreign unit (its spine bank
+    // may fill — spines are served honestly).
+    let depths_a = pool.bank_depths_model(fa);
+    assert_eq!(depths_a[1], 0, "model A relu bank must stay empty: {depths_a:?}");
+    assert_eq!(pool.banked_model(fa), 0, "no model-A session can assemble");
+
+    // Model B is fully served by the same connection and still
+    // bit-matches the inline deal of its own namespace.
+    assert!(pool.banked_model(fb) >= 1, "model B must be unaffected");
+    let mut rng = Rng::new(3);
+    let lease = pool.lease_model(fb, &mut rng);
+    assert!(!lease.was_dry);
+    let (client, server, offline_bytes) =
+        offline_network_mt(&pb, &mut session_rng(SEED_B, 0), 1);
+    assert_eq!(lease.session.offline_bytes, offline_bytes);
+    let input: Vec<Fp> = (0..6).map(|j| Fp::from_i64(1100 + 3 * j)).collect();
+    let (bank_logits, _) = run_inference(&lease.session.client, &lease.session.server, &input);
+    let (inline_logits, _) = run_inference(&client, &server, &input);
+    assert_eq!(bank_logits, inline_logits);
+
+    pool.shutdown();
+}

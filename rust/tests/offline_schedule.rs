@@ -94,6 +94,55 @@ fn layer_deal_consumes_parent_rng_identically_for_any_thread_count() {
     assert!(states.windows(2).all(|w| w[0] == w[1]), "parent RNG state diverged: {states:?}");
 }
 
+#[test]
+fn triple_column_is_chunk_forked_and_thread_invariant() {
+    // The triple column rides the same chunk-fork discipline as the
+    // garble column: one sub-fork of the COL_TRIPLE fork per
+    // GARBLE_CHUNK instances, whatever the thread count. Pin both the
+    // invariance and the exact schedule (re-derived independently) over
+    // a multi-chunk layer with a ragged tail.
+    use circa::beaver;
+    use circa::protocol::offline::{COL_GARBLE, COL_OT, COL_ROUT, COL_RV, COL_TRIPLE};
+    let n = 2 * GARBLE_CHUNK + 37;
+    let mut data_rng = Rng::new(0x7719);
+    let xc: Vec<Fp> = (0..n).map(|_| random_fp(&mut data_rng)).collect();
+    let variant = ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero };
+    let seed = 0x7712u64;
+
+    let (c1, s1) = offline_relu_layer_mt(variant, &xc, &mut Rng::new(seed), 1);
+    for threads in [2, 8] {
+        let (ct, st) = offline_relu_layer_mt(variant, &xc, &mut Rng::new(seed), threads);
+        for i in 0..n {
+            let (a, b) = (&c1.triples[i], &ct.triples[i]);
+            assert_eq!((a.a, a.b, a.ab), (b.a, b.b, b.ab), "{threads}t: client triple {i}");
+            let (a, b) = (&s1.triples[i], &st.triples[i]);
+            assert_eq!((a.a, a.b, a.ab), (b.a, b.b, b.ab), "{threads}t: server triple {i}");
+        }
+    }
+
+    // Re-derive the schedule: column forks in documented order, then
+    // chunk sub-forks of the triple fork.
+    let mut rng = Rng::new(seed);
+    let _ = rng.fork(COL_GARBLE);
+    let _ = rng.fork(COL_RV);
+    let _ = rng.fork(COL_ROUT);
+    let _ = rng.fork(COL_OT);
+    let mut rng_triple = rng.fork(COL_TRIPLE);
+    let mut i = 0usize;
+    for chunk_idx in 0..n.div_ceil(GARBLE_CHUNK) {
+        let mut chunk_rng = rng_triple.fork(chunk_idx as u64);
+        let hi = ((chunk_idx + 1) * GARBLE_CHUNK).min(n);
+        while i < hi {
+            let t = beaver::gen_triple(&mut chunk_rng);
+            let got = &c1.triples[i];
+            assert_eq!((got.a, got.b, got.ab), (t.p1.a, t.p1.b, t.p1.ab), "triple {i}");
+            let got = &s1.triples[i];
+            assert_eq!((got.a, got.b, got.ab), (t.p2.a, t.p2.b, t.p2.ab), "triple {i}");
+            i += 1;
+        }
+    }
+}
+
 fn tiny_plan(seed: u64, variant: ReluVariant) -> Arc<NetworkPlan> {
     let mut rng = Rng::new(seed);
     let linears: Vec<Arc<dyn LinearOp>> = vec![
@@ -140,9 +189,11 @@ fn dealer_wire_material_matches_inline_deal_bit_for_bit() {
     // must be identical.
     let plan = tiny_plan(9, ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero });
     let dealer_seed = 0xDEA1;
+    let registry = circa::coordinator::ModelRegistry::single(plan.clone(), dealer_seed);
+    let fp = registry.fingerprints()[0];
     let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), dealer_seed, 8);
-    let mut dealer = RemoteDealer::connect(chan, plan.clone()).expect("handshake");
-    let sessions = dealer.fetch(2).expect("fetch");
+    let mut dealer = RemoteDealer::connect(chan, registry).expect("handshake");
+    let sessions = dealer.fetch(fp, 2).expect("fetch");
     dealer.close();
     dealer_thread.join().unwrap();
 

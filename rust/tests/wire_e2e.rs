@@ -127,11 +127,13 @@ fn mem_channel_dealer_matches_inline_deal_end_to_end() {
     // (same dealer RNG stream on both sides).
     let plan = tiny_plan(ReluVariant::TruncatedSign { k: 8, mode: FaultMode::PosZero }, 7);
     let dealer_seed = 0xD00D;
+    let registry = circa::coordinator::ModelRegistry::single(plan.clone(), dealer_seed);
+    let fp = registry.fingerprints()[0];
     // Dealer fans each session over 4 threads; the column schedule keeps
     // its output identical to the 1-thread inline deal below.
     let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), dealer_seed, 4);
-    let mut dealer = RemoteDealer::connect(chan, plan.clone()).unwrap();
-    let sessions = dealer.fetch(3).unwrap();
+    let mut dealer = RemoteDealer::connect(chan, registry).unwrap();
+    let sessions = dealer.fetch(fp, 3).unwrap();
     assert!(dealer.bytes_received() > 0);
     dealer.close();
     dealer_thread.join().unwrap();
@@ -157,9 +159,10 @@ fn tcp_dealer_refills_pool_and_serves() {
     let addr = handle.addr().to_string();
 
     let metrics = Arc::new(Metrics::default());
-    let plan_c = plan.clone();
+    let registry = circa::coordinator::ModelRegistry::single(plan.clone(), 0);
+    let reg_c = registry.clone();
     let connect: Arc<dyn Fn() -> circa::util::error::Result<RemoteDealer> + Send + Sync> =
-        Arc::new(move || RemoteDealer::connect_tcp(&addr, plan_c.clone()));
+        Arc::new(move || RemoteDealer::connect_tcp(&addr, reg_c.clone()));
     let pool = MaterialPool::start_with_source(
         plan.clone(),
         4,
@@ -209,9 +212,10 @@ fn tcp_streaming_layer_refill_matches_inline_whole_session_deals() {
     let addr = handle.addr().to_string();
 
     let metrics = Arc::new(Metrics::default());
-    let plan_c = plan.clone();
+    let registry = circa::coordinator::ModelRegistry::single(plan.clone(), 0);
+    let reg_c = registry.clone();
     let connect: Arc<dyn Fn() -> circa::util::error::Result<RemoteDealer> + Send + Sync> =
-        Arc::new(move || RemoteDealer::connect_tcp(&addr, plan_c.clone()));
+        Arc::new(move || RemoteDealer::connect_tcp(&addr, reg_c.clone()));
     let pool = MaterialPool::start_with_source(
         plan.clone(),
         3,
@@ -259,12 +263,14 @@ fn streamed_frames_bounded_by_largest_layer_not_session() {
     // would ship.
     let plan = tiny_plan(ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero }, 23);
     let dealer_seed = 0xB0B;
+    let registry = circa::coordinator::ModelRegistry::single(plan.clone(), dealer_seed);
+    let fp = registry.fingerprints()[0];
     let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), dealer_seed, 1);
-    let mut dealer = RemoteDealer::connect(chan, plan.clone()).unwrap();
-    let spines = dealer.fetch_spines(&[0]).unwrap();
+    let mut dealer = RemoteDealer::connect(chan, registry).unwrap();
+    let spines = dealer.fetch_spines(fp, &[0]).unwrap();
     assert_eq!(spines.len(), 1);
     for li in 0..plan.n_relu_layers() {
-        let layers = dealer.fetch_layers(li, &[0]).unwrap();
+        let layers = dealer.fetch_layers(fp, li, &[0]).unwrap();
         assert_eq!(layers.len(), 1);
     }
     let max_frame = dealer.max_frame_received();
@@ -303,14 +309,14 @@ fn streamed_frames_bounded_by_largest_layer_not_session() {
         .collect();
     for (li, (cm, sm)) in relu_c.iter().zip(&relu_s).enumerate() {
         let mut w = Writer::new();
-        codec::put_layer_batch(&mut w, li as u32, 0, cm, sm);
+        codec::put_layer_batch(&mut w, fp, li as u32, 0, cm, sm);
         let frame = (w.buf.len() + FRAME_HEADER_BYTES + FRAME_CRC_BYTES) as u64;
         largest_layer_frame = largest_layer_frame.max(frame);
     }
     {
         let spine = circa::protocol::server::deal_spine(&plan, &mut session_rng(dealer_seed, 0));
         let mut w = Writer::new();
-        codec::put_spine(&mut w, 0, &spine);
+        codec::put_spine(&mut w, fp, 0, &spine);
         let frame = (w.buf.len() + FRAME_HEADER_BYTES + FRAME_CRC_BYTES) as u64;
         largest_layer_frame = largest_layer_frame.max(frame);
     }
@@ -333,7 +339,11 @@ fn tcp_handshake_rejects_wrong_plan() {
     let other = tiny_plan(ReluVariant::NaiveSign, 11);
     let handle = spawn_tcp_dealer("127.0.0.1:0", plan, 1, 1).expect("bind dealer");
     let addr = handle.addr().to_string();
-    let err = RemoteDealer::connect_tcp(&addr, other).unwrap_err();
+    let err = RemoteDealer::connect_tcp(
+        &addr,
+        circa::coordinator::ModelRegistry::single(other, 1),
+    )
+    .unwrap_err();
     assert!(err.to_string().contains("rejected"), "{err}");
     handle.stop();
 }
