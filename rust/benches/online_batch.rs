@@ -1,0 +1,153 @@
+//! Cross-request batched online phase: R concurrent inferences executed
+//! as one strided walk (`run_inference_multi`) vs R independent
+//! `run_inference` calls on the same leased sessions.
+//!
+//! Reported per variant at R ∈ {1, 4, 8}: GC throughput (AND gates/s
+//! over all requests' ReLU evaluations) and request throughput
+//! (inferences/s), for both paths, plus the batched-over-per-request
+//! speedup. R = 8 gates/s above R = 1 is the acceptance line: the
+//! cross-request flights keep the fixed-key cipher saturated where a
+//! lone narrow request cannot. Results land in
+//! `BENCH_online_batch.json` so the perf trajectory is tracked across
+//! PRs.
+//!
+//! Material reuse: each timing iteration replays the same dealt
+//! sessions. That would be insecure in deployment (single-use labels)
+//! but is sound for timing — the online walk's work does not depend on
+//! how often material was used.
+
+use circa::bench_harness::print_row;
+use circa::bench_harness::tables::write_bench_json;
+use circa::circuits::spec::ReluVariant;
+use circa::field::Fp;
+use circa::protocol::client::{ClientLayer, ClientNet};
+use circa::protocol::linear::{LinearOp, Matrix};
+use circa::protocol::offline::circa_variant;
+use circa::protocol::server::{
+    offline_network_mt, run_inference, run_inference_multi, session_rng, NetworkPlan, ServerNet,
+};
+use circa::util::timer::bench_seconds_per_iter;
+use circa::util::Rng;
+use std::sync::Arc;
+
+const R_POINTS: [usize; 3] = [1, 4, 8];
+const MAX_R: usize = 8;
+
+/// w → w → relu → w → w → relu → w → 16.
+fn plan(variant: ReluVariant, width: usize) -> NetworkPlan {
+    let mut rng = Rng::new(0xBA7C);
+    let linears: Vec<Arc<dyn LinearOp>> = vec![
+        Arc::new(Matrix::random(width, width, 20, &mut rng)),
+        Arc::new(Matrix::random(width, width, 20, &mut rng)),
+        Arc::new(Matrix::random(16, width, 20, &mut rng)),
+    ];
+    NetworkPlan::unscaled(linears, variant)
+}
+
+/// AND gates one inference evaluates across its ReLU layers.
+fn gates_per_inference(cn: &ClientNet) -> u64 {
+    cn.layers
+        .iter()
+        .map(|l| match l {
+            ClientLayer::Relu(m) => (m.gc.len() * m.gc.and_stride()) as u64,
+            ClientLayer::Linear { .. } => 0,
+        })
+        .sum()
+}
+
+fn bench_variant(
+    name: &str,
+    variant: ReluVariant,
+    width: usize,
+    min_time_s: f64,
+    results: &mut Vec<(String, f64)>,
+) {
+    let p = plan(variant, width);
+    // One seq-addressed session per request slot, reused across R points
+    // and timing iterations.
+    let sessions: Vec<(ClientNet, ServerNet)> = (0..MAX_R)
+        .map(|seq| {
+            let (cn, sn, _) = offline_network_mt(&p, &mut session_rng(0xD0E, seq as u64), 1);
+            (cn, sn)
+        })
+        .collect();
+    let inputs: Vec<Vec<Fp>> = (0..MAX_R)
+        .map(|r| (0..width).map(|j| Fp::from_i64(500 + 31 * r as i64 + j as i64)).collect())
+        .collect();
+    let gates = gates_per_inference(&sessions[0].0);
+
+    for r_count in R_POINTS {
+        let refs: Vec<(&ClientNet, &ServerNet)> =
+            sessions[..r_count].iter().map(|(cn, sn)| (cn, sn)).collect();
+        let in_refs: Vec<&[Fp]> = inputs[..r_count].iter().map(|v| v.as_slice()).collect();
+
+        let per_req_s = bench_seconds_per_iter(min_time_s, 2, || {
+            for ((cn, sn), input) in refs.iter().zip(&in_refs) {
+                let (logits, _) = run_inference(cn, sn, input);
+                std::hint::black_box(logits);
+            }
+        });
+        let multi_s = bench_seconds_per_iter(min_time_s, 2, || {
+            let (logits, _) = run_inference_multi(&refs, &in_refs, 1);
+            std::hint::black_box(logits);
+        });
+
+        let batch_gates = (gates * r_count as u64) as f64;
+        let per_req_gps = batch_gates / per_req_s;
+        let multi_gps = batch_gates / multi_s;
+        let per_req_rps = r_count as f64 / per_req_s;
+        let multi_rps = r_count as f64 / multi_s;
+        let speedup = per_req_s / multi_s;
+
+        let widths = [12, 4, 14, 14, 12, 12, 8];
+        print_row(
+            &[
+                name.to_string(),
+                format!("{r_count}"),
+                format!("{:.2}", per_req_gps / 1e6),
+                format!("{:.2}", multi_gps / 1e6),
+                format!("{per_req_rps:.1}"),
+                format!("{multi_rps:.1}"),
+                format!("{speedup:.2}x"),
+            ],
+            &widths,
+        );
+        for (key, v) in [
+            ("per_request_gates_per_s", per_req_gps),
+            ("multi_gates_per_s", multi_gps),
+            ("per_request_requests_per_s", per_req_rps),
+            ("multi_requests_per_s", multi_rps),
+            ("speedup", speedup),
+        ] {
+            results.push((format!("{name}.R{r_count}.{key}"), v));
+        }
+    }
+}
+
+fn main() {
+    let width = std::env::var("ONLINE_BATCH_WIDTH")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64usize)
+        .max(4);
+    let min_time_s = std::env::var("ONLINE_BATCH_MIN_TIME_S")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.5f64);
+    println!("=== cross-request batched online phase (layer width = {width}) ===\n");
+    let widths = [12, 4, 14, 14, 12, 12, 8];
+    print_row(
+        &["variant", "R", "Mgates/s (1x)", "Mgates/s (R)", "req/s (1x)", "req/s (R)", "x"]
+            .map(String::from),
+        &widths,
+    );
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    bench_variant("baseline", ReluVariant::BaselineRelu, width, min_time_s, &mut results);
+    bench_variant("circa_k12", circa_variant(12), width, min_time_s, &mut results);
+    results.push(("layer_width".to_string(), width as f64));
+
+    let entries: Vec<(&str, f64)> = results.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    write_bench_json("BENCH_online_batch.json", &entries);
+    println!("\n(wrote bench_out/BENCH_online_batch.json)");
+}

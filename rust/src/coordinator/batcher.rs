@@ -28,6 +28,16 @@ impl Default for BatchPolicy {
     }
 }
 
+impl BatchPolicy {
+    /// Reject unusable policies up front: `max_size == 0` would make
+    /// [`next_batch`] spin the delay window and return empty batches
+    /// forever instead of failing loudly at service start.
+    pub fn validate(&self) -> crate::util::error::Result<()> {
+        crate::ensure!(self.max_size >= 1, "batch max_size must be >= 1 (got 0)");
+        Ok(())
+    }
+}
+
 /// One model-homogeneous dispatch batch: the router leases every
 /// request in it from the shard `model` names.
 pub struct ModelBatch {
@@ -58,14 +68,15 @@ pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Option<Vec<T>> {
     let mut batch = vec![first];
     let deadline = Instant::now() + policy.max_delay;
     while batch.len() < policy.max_size {
-        let now = Instant::now();
-        if now >= deadline {
+        // One clock read per iteration: the remaining window doubles as
+        // the deadline check (zero ⇒ the window has closed).
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
             break;
         }
-        match rx.recv_timeout(deadline - now) {
+        match rx.recv_timeout(remaining) {
             Ok(item) => batch.push(item),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Timeout | RecvTimeoutError::Disconnected) => break,
         }
     }
     Some(batch)
@@ -128,6 +139,14 @@ mod tests {
         assert_eq!(batches[0].requests.iter().map(|r| r.id).collect::<Vec<_>>(), [0, 2, 3]);
         assert_eq!(batches[1].model, 9);
         assert_eq!(batches[1].requests.iter().map(|r| r.id).collect::<Vec<_>>(), [1, 4]);
+    }
+
+    #[test]
+    fn policy_validation_rejects_zero_max_size() {
+        let bad = BatchPolicy { max_size: 0, max_delay: Duration::from_millis(1) };
+        assert!(bad.validate().is_err());
+        assert!(BatchPolicy::default().validate().is_ok());
+        assert!(BatchPolicy { max_size: 1, max_delay: Duration::ZERO }.validate().is_ok());
     }
 
     #[test]

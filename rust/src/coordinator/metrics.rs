@@ -55,6 +55,13 @@ struct Inner {
     /// Latency of one remote-dealer fetch round trip (request → all
     /// units decoded).
     remote_refill_us: Histogram,
+    /// Dispatch batch sizes (requests per batched walk; 1 = the
+    /// per-request fallback path).
+    batch_size: Histogram,
+    /// Amortized per-request online time inside a batch (batch wall /
+    /// batch size) — read against `online_us` (the full batch wall each
+    /// request experiences) to see what batching buys per request.
+    batch_req_us: Histogram,
 }
 
 /// One model's accumulating row.
@@ -71,6 +78,8 @@ struct ModelStats {
     bytes_offline_wire: u64,
     online_us: Histogram,
     total_us: Histogram,
+    batch_size: Histogram,
+    batch_req_us: Histogram,
     /// Latest per-bank staged depth gauge (index 0 = linear spines,
     /// `1 + li` = ReLU layer `li`), published by the model's pool shard.
     bank_depths: Vec<u64>,
@@ -94,6 +103,8 @@ pub struct ModelSnapshot {
     pub remote_sessions: u64,
     pub layer_entries: u64,
     pub bytes_offline_wire: u64,
+    pub batch_size_mean: f64,
+    pub batch_req_p99_us: u64,
     pub bank_depths: Vec<u64>,
 }
 
@@ -119,6 +130,16 @@ pub struct Snapshot {
     pub fp_mismatch_drops: u64,
     pub remote_refill_mean_us: f64,
     pub remote_refill_p99_us: u64,
+    /// Mean/max requests per dispatched batch (1.0 ⇒ batching never
+    /// kicked in — all windows closed with a single arrival).
+    pub batch_size_mean: f64,
+    pub batch_size_max: u64,
+    /// Amortized per-request online latency inside a batch (batch wall
+    /// ÷ batch size); compare with `online_p50_us`/`online_p99_us`
+    /// (full-batch wall per request) to attribute batching wins.
+    pub batch_req_p50_us: u64,
+    pub batch_req_p99_us: u64,
+    pub batch_req_mean_us: f64,
     /// Latest per-bank staged depth of **one** model (0 = linear
     /// spines, then one entry per ReLU layer): with a single registered
     /// model, that model's gauge (the single-model convenience); with
@@ -222,6 +243,21 @@ impl Metrics {
         });
     }
 
+    /// Record one dispatched batch of `model`: `size` requests executed
+    /// as one batched walk (1 for the per-request fallback). Called once
+    /// per batch, not per request.
+    pub fn record_batch_size(&self, model: u64, size: u64) {
+        self.inner.lock().unwrap().batch_size.record_us(size);
+        self.with_model(model, |m| m.batch_size.record_us(size));
+    }
+
+    /// Record one request's amortized share of its batch's online wall
+    /// time (batch wall ÷ batch size). Called once per request.
+    pub fn record_batch_req(&self, model: u64, us: u64) {
+        self.inner.lock().unwrap().batch_req_us.record_us(us);
+        self.with_model(model, |m| m.batch_req_us.record_us(us));
+    }
+
     /// Publish one model shard's per-bank staged depths (gauge
     /// semantics: the latest value wins).
     pub fn set_bank_depths(&self, model: u64, depths: Vec<u64>) {
@@ -268,6 +304,8 @@ impl Metrics {
                 remote_sessions: m.remote_sessions,
                 layer_entries: m.layer_entries,
                 bytes_offline_wire: m.bytes_offline_wire,
+                batch_size_mean: m.batch_size.mean_us(),
+                batch_req_p99_us: m.batch_req_us.percentile_us(99.0),
                 bank_depths: m.bank_depths.clone(),
             })
             .collect();
@@ -296,6 +334,11 @@ impl Metrics {
                 .unwrap_or_default(),
             remote_refill_mean_us: g.remote_refill_us.mean_us(),
             remote_refill_p99_us: g.remote_refill_us.percentile_us(99.0),
+            batch_size_mean: g.batch_size.mean_us(),
+            batch_size_max: g.batch_size.max_us(),
+            batch_req_p50_us: g.batch_req_us.percentile_us(50.0),
+            batch_req_p99_us: g.batch_req_us.percentile_us(99.0),
+            batch_req_mean_us: g.batch_req_us.mean_us(),
             deal_relus,
             deal_relus_per_s: rate_per_s(deal_relus, deal_wall_us),
             models,
@@ -389,6 +432,30 @@ mod tests {
         assert_eq!(s.deal_relus, 1000);
         assert!((s.deal_relus_per_s - 2000.0).abs() < 1e-9);
         assert!((s.models[0].deal_relus_per_s - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_histograms_recorded() {
+        let m = Metrics::default();
+        let s0 = m.snapshot();
+        assert_eq!(s0.batch_size_mean, 0.0);
+        assert_eq!(s0.batch_req_mean_us, 0.0);
+        m.record_batch_size(M, 8);
+        m.record_batch_size(M, 4);
+        for _ in 0..8 {
+            m.record_batch_req(M, 1_000);
+        }
+        for _ in 0..4 {
+            m.record_batch_req(M, 3_000);
+        }
+        let s = m.snapshot();
+        assert!((s.batch_size_mean - 6.0).abs() < 1e-9);
+        assert!(s.batch_size_max >= 8);
+        let want_mean = (8.0 * 1_000.0 + 4.0 * 3_000.0) / 12.0;
+        assert!((s.batch_req_mean_us - want_mean).abs() < 1e-9);
+        assert!(s.batch_req_p99_us >= 3_000);
+        assert!((s.models[0].batch_size_mean - 6.0).abs() < 1e-9);
+        assert!(s.models[0].batch_req_p99_us >= 3_000);
     }
 
     #[test]

@@ -38,15 +38,23 @@
 //!   (`ServiceConfig::dealer_addr`) — one connection serves every
 //!   registered model.
 //! * [`batcher`] — groups incoming requests into dispatch batches
-//!   (max-size / max-delay policy), split model-homogeneous
-//!   ([`batcher::ModelBatch`]) so each batch leases from one shard.
-//! * [`router`] — a worker pool running the 2-party online protocol for
-//!   each leased session; `Request`/`Response` carry the model
+//!   (max-size / max-delay policy, validated at service start), split
+//!   model-homogeneous ([`batcher::ModelBatch`]) so each batch leases
+//!   from one shard — and, since the batched online phase, so each
+//!   batch shares one circuit template.
+//! * [`router`] — a worker pool executing each `ModelBatch` as **one
+//!   batched walk**: R sessions leased from the model's shard, then a
+//!   single [`crate::protocol::server::run_inference_multi`] whose GC
+//!   evaluation strides across requests and whose Beaver rounds fuse
+//!   into flat `R·n` passes, bit-identical per request to R independent
+//!   `run_inference` calls (single-request batches fall back to the
+//!   per-request path). `Request`/`Response` carry the model
 //!   fingerprint.
 //! * [`metrics`] — latency histograms (online / queue / total /
-//!   dry-deal), throughput counters, pool-dry counters, and a
-//!   **per-model row** (bank depths, refill counters, latency
-//!   histograms) for every served plan.
+//!   dry-deal), throughput counters, pool-dry counters, batch-shape
+//!   histograms (requests per dispatched batch, amortized per-request
+//!   share of the batch wall), and a **per-model row** (bank depths,
+//!   refill counters, latency histograms) for every served plan.
 //! * [`service`] — the assembled `PiService` front-end:
 //!   [`PiService::start_multi`] serves a list of plans;
 //!   [`PiService::start`] is the single-plan thin wrapper (dealt bytes

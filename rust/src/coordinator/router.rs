@@ -5,7 +5,7 @@ use super::batcher::ModelBatch;
 use super::metrics::Metrics;
 use super::pool::MaterialPool;
 use crate::field::Fp;
-use crate::protocol::server::run_inference;
+use crate::protocol::server::{run_inference, run_inference_multi};
 use crate::util::{Rng, Timer};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -62,29 +62,92 @@ pub fn spawn_workers(
                     }
                 };
                 let model = batch.model;
-                for req in batch.requests {
-                    let queue_us = req.enqueued.elapsed().as_micros() as u64;
-                    let lease = pool.lease_model(model, &mut rng);
-                    if lease.was_dry {
-                        // Counter + inline-deal latency histogram: a dry
-                        // bank shows up as measurable tail latency. The
-                        // deal also counts toward dealing throughput.
-                        metrics.record_dry_deal(model, lease.deal_us);
-                        metrics.record_deal(model, lease.session.n_relus() as u64, lease.deal_us);
+                let bsize = batch.requests.len();
+                if bsize == 0 {
+                    continue;
+                }
+                metrics.record_batch_size(model, bsize as u64);
+                if bsize == 1 {
+                    // Per-request path: one leased session, the plain
+                    // two-thread protocol driver.
+                    for req in batch.requests {
+                        let queue_us = req.enqueued.elapsed().as_micros() as u64;
+                        let lease = pool.lease_model(model, &mut rng);
+                        if lease.was_dry {
+                            // Counter + inline-deal latency histogram: a
+                            // dry bank shows up as measurable tail
+                            // latency. The deal also counts toward
+                            // dealing throughput.
+                            metrics.record_dry_deal(model, lease.deal_us);
+                            metrics
+                                .record_deal(model, lease.session.n_relus() as u64, lease.deal_us);
+                        }
+                        let t = Timer::new();
+                        let (logits, stats) = run_inference(
+                            &lease.session.client,
+                            &lease.session.server,
+                            &req.input,
+                        );
+                        let online_us = t.elapsed_us();
+                        let bytes = stats.bytes_to_client + stats.bytes_to_server;
+                        metrics.record(model, queue_us, online_us, bytes);
+                        metrics.record_batch_req(model, online_us);
+                        let _ = req.reply.send(Response {
+                            id: req.id,
+                            model,
+                            logits,
+                            queue_us,
+                            online_us,
+                            bytes,
+                            served_from_bank: !lease.was_dry,
+                        });
                     }
-                    let t = Timer::new();
-                    let (logits, stats) =
-                        run_inference(&lease.session.client, &lease.session.server, &req.input);
-                    let online_us = t.elapsed_us();
-                    let bytes = stats.bytes_to_client + stats.bytes_to_server;
-                    metrics.record(model, queue_us, online_us, bytes);
+                    continue;
+                }
+                // Batched walk: lease one session per request from the
+                // model's shard, then execute the whole ModelBatch as a
+                // single cross-request strided inference.
+                let queue_us: Vec<u64> = batch
+                    .requests
+                    .iter()
+                    .map(|r| r.enqueued.elapsed().as_micros() as u64)
+                    .collect();
+                let leases: Vec<_> = (0..bsize)
+                    .map(|_| {
+                        let lease = pool.lease_model(model, &mut rng);
+                        if lease.was_dry {
+                            metrics.record_dry_deal(model, lease.deal_us);
+                            metrics
+                                .record_deal(model, lease.session.n_relus() as u64, lease.deal_us);
+                        }
+                        lease
+                    })
+                    .collect();
+                let sessions: Vec<_> =
+                    leases.iter().map(|l| (&l.session.client, &l.session.server)).collect();
+                let inputs: Vec<&[Fp]> =
+                    batch.requests.iter().map(|r| r.input.as_slice()).collect();
+                let t = Timer::new();
+                let (all_logits, stats) = run_inference_multi(&sessions, &inputs, 1);
+                // Every request experienced the full batch wall; the
+                // amortized share and the exact per-request byte
+                // footprint (identical across a homogeneous batch) feed
+                // the batch-attribution histograms.
+                let online_us = t.elapsed_us();
+                let bytes = stats.bytes_to_client + stats.bytes_to_server;
+                let per_req_bytes = bytes / bsize as u64;
+                let amortized_us = online_us / bsize as u64;
+                let replies = batch.requests.into_iter().zip(all_logits).zip(queue_us).zip(&leases);
+                for (((req, logits), qus), lease) in replies {
+                    metrics.record(model, qus, online_us, per_req_bytes);
+                    metrics.record_batch_req(model, amortized_us);
                     let _ = req.reply.send(Response {
                         id: req.id,
                         model,
                         logits,
-                        queue_us,
+                        queue_us: qus,
                         online_us,
-                        bytes,
+                        bytes: per_req_bytes,
                         served_from_bank: !lease.was_dry,
                     });
                 }
@@ -146,5 +209,63 @@ mod tests {
         assert_eq!(snap.completed, 4);
         assert_eq!(snap.models.len(), 1);
         assert_eq!(snap.models[0].fingerprint, model);
+    }
+
+    #[test]
+    fn batched_walk_serves_whole_batch_with_correct_logits() {
+        let mut rng = Rng::new(5);
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(4, 6, 10, &mut rng)),
+            Arc::new(Matrix::random(3, 4, 10, &mut rng)),
+        ];
+        let plan = Arc::new(NetworkPlan::unscaled(linears.clone(), ReluVariant::BaselineRelu));
+        let pool = Arc::new(MaterialPool::start(plan, 8, 1, 6));
+        let model = pool.registry().entries()[0].fingerprint();
+        let metrics = Arc::new(Metrics::default());
+        let (btx, brx) = batch_channel();
+        // One worker + one 8-request batch ⇒ exactly one batched walk.
+        let workers = spawn_workers(1, brx, pool, metrics.clone(), 7);
+
+        let (rtx, rrx) = channel();
+        let inputs: Vec<Vec<Fp>> = (0..8u64)
+            .map(|r| (0..6).map(|i| Fp::from_i64(50 + 13 * r as i64 + i)).collect())
+            .collect();
+        let reqs: Vec<Request> = inputs
+            .iter()
+            .enumerate()
+            .map(|(id, input)| Request {
+                id: id as u64,
+                model,
+                input: input.clone(),
+                enqueued: Instant::now(),
+                reply: rtx.clone(),
+            })
+            .collect();
+        btx.send(ModelBatch { model, requests: reqs }).unwrap();
+        drop(btx);
+        drop(rtx);
+        let mut responses: Vec<Response> = rrx.iter().collect();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 8);
+        for r in &responses {
+            // BaselineRelu is exact: every request's logits must match
+            // the plaintext forward pass on its own input.
+            let mut y = inputs[r.id as usize].clone();
+            y = linears[0].apply(&y);
+            y = y.iter().map(|&v| crate::field::relu_exact(v)).collect();
+            y = linears[1].apply(&y);
+            assert_eq!(r.logits, y, "request {}", r.id);
+            assert!(r.bytes > 0);
+        }
+        // All requests in one batch share the batch wall time.
+        assert!(responses.iter().all(|r| r.online_us == responses[0].online_us));
+        for w in workers {
+            let _ = w.join();
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.completed, 8);
+        assert!((snap.batch_size_mean - 8.0).abs() < 1e-9, "one 8-wide batch");
+        assert!(snap.batch_size_max >= 8);
+        assert!(snap.batch_req_p99_us <= snap.online_p99_us);
     }
 }

@@ -116,6 +116,7 @@ impl PiService {
         cfg: ServiceConfig,
     ) -> Result<Self> {
         ensure!(!models.is_empty(), "start_multi needs at least one model");
+        cfg.batch.validate()?;
         let mut registry = ModelRegistry::new();
         for (plan, mc) in models {
             let manifest = crate::wire::codec::SessionManifest::of_plan(&plan);
@@ -304,6 +305,17 @@ mod tests {
         }
         assert_eq!(svc.metrics.snapshot().completed, 12);
         svc.shutdown();
+    }
+
+    #[test]
+    fn start_multi_rejects_zero_batch_size() {
+        let cfg = ServiceConfig {
+            batch: BatchPolicy { max_size: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let models = vec![(plan(ReluVariant::BaselineRelu), ModelConfig::default())];
+        let res = PiService::start_multi(models, cfg);
+        assert!(res.is_err(), "max_size 0 must be rejected at startup");
     }
 
     #[test]

@@ -276,6 +276,106 @@ impl LayerGcBatch {
     }
 }
 
+/// One request's evaluator-side material for a cross-request layer walk:
+/// its garbled batch plus its two flat label arenas (client block first,
+/// server block second — the protocol layout of
+/// [`LayerGcBatch::eval_layer_colors`]).
+#[derive(Clone, Copy)]
+pub struct LayerEvalSource<'a> {
+    pub gc: &'a LayerGcBatch,
+    pub client_labels: &'a [Label],
+    pub server_labels: &'a [Label],
+}
+
+/// Evaluate one ReLU layer across `R` concurrent requests' material in a
+/// single strided walk. `colors[r]` is overwritten with request `r`'s
+/// color stream, bit-identical to what
+/// [`LayerGcBatch::eval_layer_colors`] would produce for that request
+/// alone.
+///
+/// Every request must hold the same circuit template (same model, same
+/// layer — the coordinator's model-homogeneous batches guarantee it;
+/// strides and arity are asserted, deep template equality is
+/// debug-asserted). The flattened `(instance, request)` axis is walked
+/// instance-major in groups of [`eval::GROUP_WIDTH`], so
+/// [`GarbleHash::hash_many`](crate::prf::GarbleHash::hash_many) flights
+/// fill with the same gate position *across requests* — the online
+/// mirror of [`LayerGcBatch::garble_chunked`]'s offline fan-out.
+/// `scratch` is the wire-label buffer, reused across groups and layers.
+pub fn eval_layer_colors_multi(
+    reqs: &[LayerEvalSource<'_>],
+    colors: &mut [Vec<bool>],
+    scratch: &mut Vec<Label>,
+) {
+    let r_count = reqs.len();
+    assert!(r_count > 0, "empty request group");
+    assert_eq!(colors.len(), r_count, "one color stream per request");
+    let tmpl = reqs[0].gc;
+    let n = tmpl.n;
+    let m = tmpl.out_stride;
+    for (req, out) in reqs.iter().zip(colors.iter_mut()) {
+        assert_eq!(req.gc.n, n, "request arity");
+        assert_eq!(req.gc.and_stride, tmpl.and_stride, "shared template");
+        assert_eq!(req.gc.out_stride, m, "shared template");
+        assert_eq!(req.gc.circuit.n_inputs, tmpl.circuit.n_inputs, "shared template");
+        assert_eq!(req.gc.circuit.wires.len(), tmpl.circuit.wires.len(), "shared template");
+        debug_assert!(req.gc.circuit.wires == tmpl.circuit.wires, "shared template");
+        if n == 0 {
+            assert!(
+                req.client_labels.is_empty() && req.server_labels.is_empty(),
+                "labels w/o batch"
+            );
+        } else {
+            assert_eq!(req.client_labels.len() % n, 0, "client label arena stride");
+            assert_eq!(req.server_labels.len() % n, 0, "server label arena stride");
+            assert_eq!(
+                req.client_labels.len(),
+                reqs[0].client_labels.len(),
+                "one input split per template"
+            );
+            assert_eq!(
+                (req.client_labels.len() + req.server_labels.len()) / n,
+                tmpl.circuit.n_inputs as usize,
+                "input arity"
+            );
+        }
+        out.clear();
+        out.resize(n * m, false);
+    }
+    if n == 0 {
+        return;
+    }
+    let c_stride = reqs[0].client_labels.len() / n;
+    let s_stride = reqs[0].server_labels.len() / n;
+
+    // Flattened (instance, request) axis, instance-major: consecutive
+    // flight slots hold the same gate of *different* requests.
+    let total = n * r_count;
+    let mut insts: Vec<eval::GroupInstance<'_>> = Vec::with_capacity(eval::GROUP_WIDTH);
+    let mut group_colors: Vec<bool> = Vec::with_capacity(eval::GROUP_WIDTH * m);
+    let mut f0 = 0usize;
+    while f0 < total {
+        let g = eval::GROUP_WIDTH.min(total - f0);
+        insts.clear();
+        for f in f0..f0 + g {
+            let (i, r) = (f / r_count, f % r_count);
+            let req = &reqs[r];
+            insts.push(eval::GroupInstance {
+                table: req.gc.table_of(i),
+                client: &req.client_labels[i * c_stride..(i + 1) * c_stride],
+                server: &req.server_labels[i * s_stride..(i + 1) * s_stride],
+            });
+        }
+        group_colors.clear();
+        eval::evaluate_group_colors(&tmpl.circuit, &insts, scratch, &mut group_colors);
+        for (j, f) in (f0..f0 + g).enumerate() {
+            let (i, r) = (f / r_count, f % r_count);
+            colors[r][i * m..(i + 1) * m].copy_from_slice(&group_colors[j * m..(j + 1) * m]);
+        }
+        f0 += g;
+    }
+}
+
 /// One layer's input encodings: a contiguous `label0` arena with stride =
 /// circuit inputs, plus one free-XOR delta per ReLU (labels must stay
 /// single-use across inferences — paper footnote 2 — so deltas are per
@@ -453,6 +553,80 @@ mod tests {
         let mut colors = Vec::new();
         batch.eval_layer_colors(&[], &[], &mut colors);
         assert!(colors.is_empty());
+    }
+
+    /// Garble `n` instances of `circuit` and encode fresh pseudo-random
+    /// inputs split 8/8 into client/server arenas.
+    fn dealt_request(
+        circuit: &Circuit,
+        n: usize,
+        seed: u64,
+    ) -> (LayerGcBatch, Vec<Label>, Vec<Label>) {
+        let mut rng = Rng::new(seed);
+        let mut scratch = Vec::new();
+        let mut batch = LayerGcBatch::new(circuit.clone(), n);
+        let mut enc = LayerEncodingBatch::new(circuit.n_inputs as usize, n);
+        for _ in 0..n {
+            batch.garble_next(&mut enc, &mut rng, &mut scratch);
+        }
+        let mut client_arena = Vec::new();
+        let mut server_arena = Vec::new();
+        for i in 0..n {
+            let a = rng.below(256);
+            let b = rng.below(256);
+            let mut bits = u64_to_bits(a, 8);
+            bits.extend(u64_to_bits(b, 8));
+            let view = enc.view(i);
+            client_arena.extend((0..8).map(|j| view.encode(j, bits[j])));
+            server_arena.extend((8..16).map(|j| view.encode(j, bits[j])));
+        }
+        (batch, client_arena, server_arena)
+    }
+
+    #[test]
+    fn multi_request_eval_matches_per_request_eval() {
+        // The cross-request walk must reproduce each request's color
+        // stream bit for bit, for R both below and above GROUP_WIDTH and
+        // for n·R not a multiple of the group width.
+        let circuit = adder_circuit(8);
+        for r_count in [1usize, 2, 3, 8] {
+            let n = 5; // n·R ∈ {5, 10, 15, 40}: ragged and full groups
+            let dealt: Vec<_> = (0..r_count)
+                .map(|r| dealt_request(&circuit, n, 1000 + r as u64))
+                .collect();
+            let mut want: Vec<Vec<bool>> = Vec::new();
+            for (batch, ca, sa) in &dealt {
+                let mut colors = Vec::new();
+                batch.eval_layer_colors(ca, sa, &mut colors);
+                want.push(colors);
+            }
+            let sources: Vec<LayerEvalSource<'_>> = dealt
+                .iter()
+                .map(|(batch, ca, sa)| LayerEvalSource {
+                    gc: batch,
+                    client_labels: ca,
+                    server_labels: sa,
+                })
+                .collect();
+            let mut got = vec![Vec::new(); r_count];
+            let mut scratch = Vec::new();
+            eval_layer_colors_multi(&sources, &mut got, &mut scratch);
+            assert_eq!(got, want, "R = {r_count}");
+        }
+    }
+
+    #[test]
+    fn multi_request_eval_empty_layer_is_a_no_op() {
+        let circuit = adder_circuit(4);
+        let batches: Vec<LayerGcBatch> =
+            (0..2).map(|_| LayerGcBatch::new(circuit.clone(), 0)).collect();
+        let sources: Vec<LayerEvalSource<'_>> = batches
+            .iter()
+            .map(|b| LayerEvalSource { gc: b, client_labels: &[], server_labels: &[] })
+            .collect();
+        let mut colors = vec![Vec::new(); 2];
+        eval_layer_colors_multi(&sources, &mut colors, &mut Vec::new());
+        assert!(colors.iter().all(|c| c.is_empty()));
     }
 
     fn garble_chunked_with(

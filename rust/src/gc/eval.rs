@@ -13,6 +13,21 @@ use crate::prf::{GarbleHash, Label};
 /// [`crate::prf::backend::MAX_BATCH`]-block cipher call per 4 gates).
 const FLIGHT_GATES: usize = 8;
 
+/// Instances walked together by [`evaluate_group_colors`]: with 2 hash
+/// pre-images per AND gate, a full group turns every gate position into
+/// two full [`crate::prf::backend::MAX_BATCH`]-block cipher calls.
+pub const GROUP_WIDTH: usize = 8;
+
+/// One instance of a shared circuit template inside a group walk: its
+/// stride of a garbled-table buffer plus its two input-label blocks
+/// (client block first, then server block — the protocol layout).
+#[derive(Clone, Copy)]
+pub struct GroupInstance<'a> {
+    pub table: &'a [[Label; 2]],
+    pub client: &'a [Label],
+    pub server: &'a [Label],
+}
+
 /// One gathered-but-not-yet-hashed AND gate of the evaluation walk; the
 /// two hash pre-images sit in the flight buffer.
 #[derive(Clone, Copy)]
@@ -159,6 +174,104 @@ pub fn evaluate_append(
     out.extend(circuit.outputs.iter().map(|&o| labels[o as usize]));
 }
 
+/// Evaluate up to [`GROUP_WIDTH`] independent instances of the same
+/// circuit template in one wire-major walk, appending each instance's
+/// output colors (instance-major, [`Circuit::outputs`] order within an
+/// instance) to `colors`.
+///
+/// Where [`evaluate_append`] walks one instance and fills hash flights
+/// across *gates* — flushing early whenever a wire reads an in-flight
+/// gate's output — the group walk fills flights across *instances*: at
+/// each AND gate position the instances' `2·G` pre-images are
+/// independent by construction, so every flight is full and no
+/// dependency tracking exists at all. The hashes are the same per-block
+/// transforms with the same tweaks, so the output colors are
+/// bit-identical to evaluating each instance alone.
+///
+/// The wire scratch is laid out wire-major (`scratch[w·G + j]` holds
+/// instance `j`'s label of wire `w`) so the per-gate gather/scatter is
+/// one contiguous row.
+pub fn evaluate_group_colors(
+    circuit: &Circuit,
+    insts: &[GroupInstance<'_>],
+    scratch: &mut Vec<Label>,
+    colors: &mut Vec<bool>,
+) {
+    let g = insts.len();
+    assert!(g > 0 && g <= GROUP_WIDTH, "group width {g}");
+    let n_and = circuit.n_and();
+    for inst in insts {
+        assert_eq!(inst.table.len(), n_and, "table stride");
+        assert_eq!(
+            inst.client.len() + inst.server.len(),
+            circuit.n_inputs as usize,
+            "input label arity"
+        );
+    }
+    let hash = GarbleHash::shared();
+    scratch.clear();
+    scratch.resize(circuit.wires.len() * g, Label::ZERO);
+    let labels = &mut scratch[..];
+    let mut blocks = [0u128; 2 * GROUP_WIDTH];
+    let mut and_idx = 0usize;
+    for (w, def) in circuit.wires.iter().enumerate() {
+        let row = w * g;
+        match *def {
+            WireDef::Input(k) => {
+                let k = k as usize;
+                for (j, inst) in insts.iter().enumerate() {
+                    labels[row + j] = if k < inst.client.len() {
+                        inst.client[k]
+                    } else {
+                        inst.server[k - inst.client.len()]
+                    };
+                }
+            }
+            WireDef::Xor(a, b) => {
+                let (a, b) = (a as usize * g, b as usize * g);
+                for j in 0..g {
+                    labels[row + j] = labels[a + j] ^ labels[b + j];
+                }
+            }
+            WireDef::Not(a) => {
+                let a = a as usize * g;
+                for j in 0..g {
+                    labels[row + j] = labels[a + j];
+                }
+            }
+            WireDef::And(a, b) => {
+                let (a, b) = (a as usize * g, b as usize * g);
+                let j_g = 2 * and_idx as u64;
+                let j_e = j_g + 1;
+                for j in 0..g {
+                    blocks[2 * j] = GarbleHash::input_block(labels[a + j], j_g);
+                    blocks[2 * j + 1] = GarbleHash::input_block(labels[b + j], j_e);
+                }
+                hash.hash_many(&mut blocks[..2 * g]);
+                for (j, inst) in insts.iter().enumerate() {
+                    let wa = labels[a + j];
+                    let wb = labels[b + j];
+                    let [t_g, t_e] = inst.table[and_idx];
+                    let mut w_g = Label(blocks[2 * j]);
+                    let mut w_e = Label(blocks[2 * j + 1]);
+                    if wa.color() {
+                        w_g = w_g ^ t_g;
+                    }
+                    if wb.color() {
+                        w_e = w_e ^ t_e ^ wa;
+                    }
+                    labels[row + j] = w_g ^ w_e;
+                }
+                and_idx += 1;
+            }
+        }
+    }
+    colors.reserve(g * circuit.outputs.len());
+    for j in 0..g {
+        colors.extend(circuit.outputs.iter().map(|&o| labels[o as usize * g + j].color()));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,6 +308,50 @@ mod tests {
         let mut rng = Rng::new(2);
         let (gc, enc) = garble(&c, &mut rng);
         evaluate(&c, &gc, &[enc.encode(0, false)]); // only one label
+    }
+
+    #[test]
+    fn group_eval_matches_per_instance_eval() {
+        // The cross-request walk must be bit-identical to evaluating
+        // each instance alone, for every group width (ragged tails
+        // included) and for arbitrary client/server input splits.
+        let mut bld = Builder::new();
+        let a = bld.input_bus(6);
+        let b = bld.input_bus(6);
+        let (s, carry) = bld.add(&a, &b);
+        let m = bld.and(s[0], carry);
+        bld.output_bus(&s);
+        bld.output(m);
+        let c = bld.build();
+        let mut rng = Rng::new(77);
+        for g in [1usize, 2, 3, 7, 8] {
+            let mut tables = Vec::new();
+            let mut inputs = Vec::new();
+            let mut want = Vec::new();
+            let mut scratch = Vec::new();
+            for i in 0..g {
+                let (gc, enc) = garble(&c, &mut rng);
+                let bits: Vec<bool> =
+                    (0..c.n_inputs as usize).map(|j| (i + j) % 3 == 0).collect();
+                let labels = enc.encode_all(&bits);
+                let mut out = Vec::new();
+                evaluate_append(&c, &gc.table, &labels, &mut scratch, &mut out);
+                want.extend(out.iter().map(|l| l.color()));
+                tables.push(gc.table);
+                inputs.push(labels);
+            }
+            // Split each instance's labels at 5: "client" block + rest.
+            let insts: Vec<GroupInstance<'_>> = (0..g)
+                .map(|i| GroupInstance {
+                    table: &tables[i],
+                    client: &inputs[i][..5],
+                    server: &inputs[i][5..],
+                })
+                .collect();
+            let mut colors = Vec::new();
+            evaluate_group_colors(&c, &insts, &mut scratch, &mut colors);
+            assert_eq!(colors, want, "group width {g}");
+        }
     }
 
     #[test]

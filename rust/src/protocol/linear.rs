@@ -25,6 +25,14 @@ pub trait LinearOp: Send + Sync {
     fn apply_no_bias(&self, input: &[Fp]) -> Vec<Fp> {
         self.apply(input)
     }
+
+    /// Apply to R request vectors in one pass (with bias, like
+    /// [`LinearOp::apply`]). The default loops `apply`; dense ops
+    /// override to load each weight row once and stream it across all
+    /// requests. Must be bit-identical to per-vector `apply`.
+    fn apply_multi(&self, inputs: &[&[Fp]]) -> Vec<Vec<Fp>> {
+        inputs.iter().map(|x| self.apply(x)).collect()
+    }
 }
 
 /// Dense matrix `W` (row-major `out × in`) — the reference LinearOp.
@@ -62,6 +70,29 @@ impl LinearOp for Matrix {
                 acc = acc + *w * *x;
             }
             out.push(acc);
+        }
+        out
+    }
+
+    /// Row-outer, request-inner: each weight row is loaded once and
+    /// dotted against every request's vector while it is hot. The
+    /// per-(row, request) fold order is exactly [`LinearOp::apply`]'s,
+    /// so results are bit-identical to R independent applications.
+    fn apply_multi(&self, inputs: &[&[Fp]]) -> Vec<Vec<Fp>> {
+        for x in inputs {
+            assert_eq!(x.len(), self.cols);
+        }
+        let mut out: Vec<Vec<Fp>> =
+            inputs.iter().map(|_| Vec::with_capacity(self.rows)).collect();
+        for r in 0..self.rows {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            for (x, o) in inputs.iter().zip(out.iter_mut()) {
+                let mut acc = Fp::ZERO;
+                for (w, v) in row.iter().zip(*x) {
+                    acc = acc + *w * *v;
+                }
+                o.push(acc);
+            }
         }
         out
     }
@@ -103,6 +134,48 @@ pub fn online_linear(op: &dyn LinearOp, y_server_share: &[Fp], s: &[Fp]) -> Vec<
         *o = *o + b;
     }
     out
+}
+
+/// One contiguous chunk of the batched online linear phase: apply the
+/// layer across the chunk's request vectors in one cache-friendly pass,
+/// then fold in each request's blind.
+fn forward_chunk(op: &dyn LinearOp, ys: &[&[Fp]], ss: &[&[Fp]]) -> Vec<Vec<Fp>> {
+    let mut outs = op.apply_multi(ys);
+    for (out, s) in outs.iter_mut().zip(ss) {
+        assert_eq!(out.len(), s.len());
+        for (o, &b) in out.iter_mut().zip(*s) {
+            *o = *o + b;
+        }
+    }
+    outs
+}
+
+/// Batched [`online_linear`]: apply one layer's weights across R
+/// requests' server shares (each with its own blind `s`) in one pass,
+/// optionally chunk-parallel across `n_threads` workers like the offline
+/// garble column. Output order follows input order and every element is
+/// bit-identical to the per-request path regardless of thread count.
+pub fn forward_multi(
+    op: &dyn LinearOp,
+    y_shares: &[&[Fp]],
+    s: &[&[Fp]],
+    n_threads: usize,
+) -> Vec<Vec<Fp>> {
+    let r_count = y_shares.len();
+    assert_eq!(s.len(), r_count, "one blind vector per request");
+    let n_chunks = n_threads.max(1).min(r_count.max(1));
+    if n_chunks <= 1 {
+        return forward_chunk(op, y_shares, s);
+    }
+    let per = r_count.div_ceil(n_chunks);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = y_shares
+            .chunks(per)
+            .zip(s.chunks(per))
+            .map(|(ys, ss)| scope.spawn(move || forward_chunk(op, ys, ss)))
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("linear worker")).collect()
+    })
 }
 
 #[cfg(test)]
@@ -164,5 +237,40 @@ mod tests {
         let mut rng = Rng::new(4);
         let w = Matrix::random(2, 3, 10, &mut rng);
         w.apply(&[Fp::ZERO; 5]);
+    }
+
+    #[test]
+    fn apply_multi_matches_per_vector_apply() {
+        let mut rng = Rng::new(5);
+        let w = Matrix::random(7, 9, 50, &mut rng);
+        for r_count in [1usize, 2, 8] {
+            let xs: Vec<Vec<Fp>> = (0..r_count)
+                .map(|_| (0..9).map(|_| random_fp(&mut rng)).collect())
+                .collect();
+            let refs: Vec<&[Fp]> = xs.iter().map(|x| x.as_slice()).collect();
+            let got = w.apply_multi(&refs);
+            for (x, g) in xs.iter().zip(&got) {
+                assert_eq!(g, &w.apply(x), "R={r_count}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_multi_matches_online_linear_any_thread_count() {
+        let mut rng = Rng::new(6);
+        let w = Matrix::random(6, 11, 30, &mut rng);
+        let r_count = 5;
+        let ys: Vec<Vec<Fp>> =
+            (0..r_count).map(|_| (0..11).map(|_| random_fp(&mut rng)).collect()).collect();
+        let ss: Vec<Vec<Fp>> =
+            (0..r_count).map(|_| (0..6).map(|_| random_fp(&mut rng)).collect()).collect();
+        let y_refs: Vec<&[Fp]> = ys.iter().map(|v| v.as_slice()).collect();
+        let s_refs: Vec<&[Fp]> = ss.iter().map(|v| v.as_slice()).collect();
+        let want: Vec<Vec<Fp>> =
+            ys.iter().zip(&ss).map(|(y, s)| online_linear(&w, y, s)).collect();
+        for threads in [1usize, 2, 3, 16] {
+            let got = forward_multi(&w, &y_refs, &s_refs, threads);
+            assert_eq!(got, want, "threads={threads}");
+        }
     }
 }

@@ -20,7 +20,13 @@
 //! must: one flat label arena for the server's inputs, one batched
 //! circuit walk on the client, the color stream back, and (for Circa
 //! variants) one Beaver round plus a resharing element. Byte counts fall
-//! out of buffer lengths.
+//! out of buffer lengths. The phase is additionally **batch-native
+//! across requests**: [`online::online_relu_layer_multi`] fuses R
+//! concurrent requests' label arenas, GC walks (hash flights strided
+//! across requests), and Beaver rounds into single flat passes, and
+//! [`server::run_inference_multi`] drives whole model-homogeneous
+//! request batches through it with one [`linear::forward_multi`] pass
+//! per linear layer — bit-identical per request to independent runs.
 //!
 //! [`channel`] gives byte-accounted duplex pipes so every experiment can
 //! report communication alongside latency; [`client`]/[`server`] wrap the
@@ -38,4 +44,4 @@ pub use channel::Channel;
 pub use offline::{
     offline_relu_layer, offline_relu_layer_mt, ClientReluMaterial, ServerReluMaterial,
 };
-pub use online::{online_relu_layer, OnlineReluStats};
+pub use online::{online_relu_layer, online_relu_layer_multi, OnlineReluStats, OnlineScratch};

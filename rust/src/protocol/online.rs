@@ -1,32 +1,51 @@
-//! Online phase for one ReLU layer — the paper's headline cost.
+//! Online phase for ReLU layers — the paper's headline cost — batched
+//! across concurrent requests.
 //!
-//! Message flow per layer (n ReLUs, batched into single messages):
+//! Message flow per layer (n ReLUs per request, R requests per batch,
+//! every round one message window):
 //!
 //! ```text
-//! server → client : n·(m−k) input labels for ⟨x⟩_s        (16 B each)
-//! client          : evaluates the layer's garbled batch    (the hot loop)
-//! client → server : n·m output colors                      (1 bit each)
+//! server → client : R·n·(m−k) input labels for ⟨x⟩_s     (16 B each)
+//! client          : ONE cross-request strided GC walk    (the hot loop)
+//! client → server : R color streams, n·m bits each
 //! — Circa variants additionally —
-//! both   ⇄ both   : Beaver openings (2 field elems each way per ReLU)
-//! client → server : resharing delta (1 field elem per ReLU)
+//! both   ⇄ both   : Beaver openings, one flat R·n pass each way
+//! client → server : resharing deltas (1 field elem per ReLU)
 //! ```
 //!
-//! The baseline (Fig. 2a) skips the Beaver round entirely — its GC already
-//! outputs the masked ReLU — but pays ~5× more AND gates per evaluation.
+//! The baseline (Fig. 2a) skips the Beaver round entirely — its GC
+//! already outputs the masked ReLU — but pays ~5× more AND gates per
+//! evaluation.
 //!
-//! Both hot loops are layer-batched: the server encodes its labels into
-//! one flat arena, and the client walks the layer's shared circuit once
-//! per ReLU over the contiguous table buffer
-//! ([`crate::gc::batch::LayerGcBatch::eval_layer_colors`]).
+//! [`online_relu_layer_multi`] is the batch-native core: all R requests'
+//! server labels are encoded into one arena, the GC evaluation is a
+//! single strided walk over the shared circuit template
+//! ([`crate::gc::batch::eval_layer_colors_multi`]) whose hash flights
+//! fill with the same gate position *across requests*, and the Beaver
+//! open / multiply / reshare loops are flat passes over `R·n` elements.
+//! Output shares are bit-identical to R independent single-request runs
+//! — the protocol is deterministic given material and inputs, only the
+//! scheduling changes — and the aggregated [`OnlineReluStats`] byte
+//! ledger is exactly the sum of the per-request ledgers.
+//! [`online_relu_layer`] is the R = 1 convenience wrapper.
+//!
+//! The hot loops are allocation-free per ReLU: one [`OnlineScratch`]
+//! (label arena, color streams, wire scratch, opening buffers) serves a
+//! whole inference batch, reused across layers the way
+//! [`crate::gc::eval::evaluate_with_scratch`] reuses its wire buffer,
+//! and color decoding folds bits straight into a field element with no
+//! per-ReLU bit buffer.
 
 use super::offline::{ClientReluMaterial, ServerReluMaterial};
 use crate::beaver;
-use crate::circuits::spec::bits_fp;
 use crate::field::Fp;
+use crate::gc::batch::{eval_layer_colors_multi, LayerEvalSource};
 use crate::prf::Label;
 use crate::util::Timer;
 
-/// Measurements from one online ReLU layer execution.
+/// Measurements from one online ReLU layer execution (aggregated over
+/// the whole request batch when R > 1: bytes sum across requests, rounds
+/// count each fused message window once).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct OnlineReluStats {
     /// Wall time of the whole online exchange (both parties' compute).
@@ -45,37 +64,76 @@ impl OnlineReluStats {
     }
 }
 
+/// Reusable buffers for the online hot loops. One instance serves a
+/// whole inference — or a whole batch of inferences — with every layer
+/// reusing the same allocations.
+#[derive(Default)]
+pub struct OnlineScratch {
+    /// Fused server-label arena (all requests' labels, request-major).
+    labels: Vec<Label>,
+    /// Per-request color streams of the current layer.
+    colors: Vec<Vec<bool>>,
+    /// Wire-label scratch of the strided GC walk.
+    eval: Vec<Label>,
+    /// Fused Beaver opening buffers (`2·R·n` elements each).
+    open_c: Vec<Fp>,
+    open_s: Vec<Fp>,
+}
+
 /// Encode the server's online shares into one flat label arena (stride =
 /// server inputs per ReLU). Shared by the in-process path below and the
 /// channel-driven [`super::server`].
 pub fn encode_server_labels(mat: &ServerReluMaterial, xs: &[Fp]) -> Vec<Label> {
+    let mut out = Vec::new();
+    encode_server_labels_into(mat, xs, &mut out);
+    out
+}
+
+/// [`encode_server_labels`] appending into a caller-owned arena — the
+/// batched path packs all R requests' labels into one buffer.
+pub fn encode_server_labels_into(mat: &ServerReluMaterial, xs: &[Fp], out: &mut Vec<Label>) {
     let spec = mat.spec;
     let base = spec.server_input_base();
-    let mut out = Vec::with_capacity(xs.len() * spec.n_server_inputs);
+    out.reserve(xs.len() * spec.n_server_inputs);
     for (i, &x) in xs.iter().enumerate() {
         let bits = spec.server_bits(x);
         let view = mat.encodings.view(i);
         out.extend(bits.iter().enumerate().map(|(j, &b)| view.encode(base + j, b)));
     }
-    out
+}
+
+/// Fold one ReLU's color stride against its decode bits straight into a
+/// field element — the little-endian bit fold of
+/// [`crate::circuits::spec::bits_fp`] without the intermediate bit
+/// buffer the decode loop used to collect per ReLU.
+#[inline]
+fn decode_share(colors: &[bool], decode: &[bool]) -> Fp {
+    debug_assert_eq!(colors.len(), decode.len());
+    let mut v = 0u64;
+    for (j, (&c, &d)) in colors.iter().zip(decode).enumerate() {
+        v |= ((c ^ d) as u64) << j;
+    }
+    Fp::reduce(v)
 }
 
 /// Decode the client's color stream into the server's output shares using
 /// the layer's flat decode buffer.
 pub fn decode_server_shares(mat: &ServerReluMaterial, colors: &[bool]) -> Vec<Fp> {
+    let mut out = Vec::new();
+    decode_server_shares_into(mat, colors, &mut out);
+    out
+}
+
+/// [`decode_server_shares`] appending into a caller-owned buffer,
+/// allocation-free in the per-ReLU loop.
+pub fn decode_server_shares_into(mat: &ServerReluMaterial, colors: &[bool], out: &mut Vec<Fp>) {
     let m = mat.spec.n_outputs;
     let n = mat.n();
     assert_eq!(colors.len(), n * m, "color stream arity");
-    (0..n)
-        .map(|i| {
-            let bits: Vec<bool> = colors[i * m..(i + 1) * m]
-                .iter()
-                .zip(mat.decode_of(i))
-                .map(|(&c, &d)| c ^ d)
-                .collect();
-            bits_fp(&bits)
-        })
-        .collect()
+    out.reserve(n);
+    for i in 0..n {
+        out.push(decode_share(&colors[i * m..(i + 1) * m], mat.decode_of(i)));
+    }
 }
 
 /// Run the online phase of one ReLU layer, in-process but with every
@@ -91,72 +149,140 @@ pub fn online_relu_layer(
     xc: &[Fp],
     xs: &[Fp],
 ) -> (Vec<Fp>, Vec<Fp>, OnlineReluStats) {
-    let n = xc.len();
-    assert_eq!(n, xs.len());
-    assert_eq!(n, client.n(), "offline material arity");
-    let spec = client.spec;
+    let mut scratch = OnlineScratch::default();
+    let (mut yc, mut ys, stats) =
+        online_relu_layer_multi(&[client], &[server], &[xc], &[xs], &mut scratch);
+    (yc.pop().expect("R = 1"), ys.pop().expect("R = 1"), stats)
+}
+
+/// Run the online phase of one ReLU layer for `R` concurrent requests as
+/// one fused walk (see the module doc). Each request brings its own
+/// offline material and its own shares; all requests must run the same
+/// circuit template (same variant and layer width — the coordinator's
+/// model-homogeneous batches guarantee it).
+///
+/// Returns per-request `(client shares, server shares)` plus stats
+/// aggregated over the batch. Shares are bit-identical to R independent
+/// [`online_relu_layer`] calls; `bytes_*` are the exact sums of the
+/// per-request ledgers; `rounds` counts the fused message windows (the
+/// same count a single request pays — that fusion is the point).
+pub fn online_relu_layer_multi(
+    clients: &[&ClientReluMaterial],
+    servers: &[&ServerReluMaterial],
+    xc: &[&[Fp]],
+    xs: &[&[Fp]],
+    scratch: &mut OnlineScratch,
+) -> (Vec<Vec<Fp>>, Vec<Vec<Fp>>, OnlineReluStats) {
+    let r_count = clients.len();
+    assert!(r_count > 0, "empty request batch");
+    assert!(
+        servers.len() == r_count && xc.len() == r_count && xs.len() == r_count,
+        "batch arity"
+    );
+    let n = clients[0].n();
+    let spec = clients[0].spec;
+    for r in 0..r_count {
+        assert_eq!(clients[r].n(), n, "offline material arity");
+        assert_eq!(servers[r].n(), n, "offline material arity");
+        assert_eq!(xc[r].len(), n, "client share arity");
+        assert_eq!(xs[r].len(), n, "server share arity");
+        assert_eq!(clients[r].spec, spec, "one circuit template per batch");
+        assert_eq!(servers[r].spec, spec, "one circuit template per batch");
+    }
     let timer = Timer::new();
     let mut stats = OnlineReluStats::default();
+    let OnlineScratch { labels, colors, eval, open_c, open_s } = scratch;
 
-    // --- Round 1: server encodes + sends its input labels (one arena). ---
-    let server_labels = encode_server_labels(server, xs);
-    stats.bytes_to_client += server_labels.len() as u64 * 16;
+    // --- Round 1: every request's server labels into one arena. ---
+    labels.clear();
+    for (sm, x) in servers.iter().zip(xs) {
+        encode_server_labels_into(sm, x, labels);
+    }
+    stats.bytes_to_client += labels.len() as u64 * 16;
     stats.rounds += 1;
 
-    // --- Client: batched evaluation — shared circuit template, outer
-    // stride loop over the contiguous table buffer. ---
-    let mut colors: Vec<bool> = Vec::with_capacity(n * spec.n_outputs);
-    client.gc.eval_layer_colors(&client.client_labels, &server_labels, &mut colors);
-    stats.bytes_to_server += (colors.len() as u64).div_ceil(8);
+    // --- Client: one cross-request strided walk over the shared
+    // template; hash flights fill with gates across requests. ---
+    let s_len = n * spec.n_server_inputs;
+    if colors.len() < r_count {
+        colors.resize_with(r_count, Vec::new);
+    }
+    let sources: Vec<LayerEvalSource<'_>> = clients
+        .iter()
+        .enumerate()
+        .map(|(r, cm)| LayerEvalSource {
+            gc: &cm.gc,
+            client_labels: &cm.client_labels,
+            server_labels: &labels[r * s_len..(r + 1) * s_len],
+        })
+        .collect();
+    eval_layer_colors_multi(&sources, &mut colors[..r_count], eval);
+    for c in colors[..r_count].iter() {
+        stats.bytes_to_server += (c.len() as u64).div_ceil(8);
+    }
     stats.rounds += 1;
 
-    // --- Server: decode its output share from the colors. ---
-    let server_out = decode_server_shares(server, &colors);
+    // --- Server: decode its output shares from each color stream. ---
+    let mut server_out: Vec<Vec<Fp>> = Vec::with_capacity(r_count);
+    for (sm, c) in servers.iter().zip(colors[..r_count].iter()) {
+        let mut v = Vec::new();
+        decode_server_shares_into(sm, c, &mut v);
+        server_out.push(v);
+    }
 
     if !spec.uses_beaver() {
         // Baseline: GC output *is* the masked ReLU share.
-        let client_out = client.r_out.clone();
+        let client_out: Vec<Vec<Fp>> = clients.iter().map(|cm| cm.r_out.clone()).collect();
         stats.wall_s = timer.elapsed_s();
         return (client_out, server_out, stats);
     }
 
-    // --- Circa variants: y = x · v via one batched Beaver round. ---
-    // Client share of v is r_v; server share came out of the GC.
-    let mut open_c = Vec::with_capacity(2 * n);
-    let mut open_s = Vec::with_capacity(2 * n);
-    for i in 0..n {
-        let oc = beaver::open(xc[i], client.r_v[i], &client.triples[i]);
-        let os = beaver::open(xs[i], server_out[i], &server.triples[i]);
-        open_c.push(oc.e);
-        open_c.push(oc.f);
-        open_s.push(os.e);
-        open_s.push(os.f);
+    // --- Circa variants: y = x·v, all R·n multiplies in one fused
+    // Beaver round — flat open pass, one exchange, flat mul/reshare
+    // pass. Client share of v is r_v; server share came out of the GC.
+    open_c.clear();
+    open_s.clear();
+    open_c.reserve(2 * r_count * n);
+    open_s.reserve(2 * r_count * n);
+    for r in 0..r_count {
+        let (cm, sm) = (clients[r], servers[r]);
+        let so = &server_out[r];
+        for i in 0..n {
+            let oc = beaver::open(xc[r][i], cm.r_v[i], &cm.triples[i]);
+            let os = beaver::open(xs[r][i], so[i], &sm.triples[i]);
+            open_c.push(oc.e);
+            open_c.push(oc.f);
+            open_s.push(os.e);
+            open_s.push(os.f);
+        }
     }
-    // Exchange openings (one round, both directions).
+    // Exchange all openings (one round, both directions).
     stats.bytes_to_server += open_c.len() as u64 * 4;
     stats.bytes_to_client += open_s.len() as u64 * 4;
     stats.rounds += 1;
 
-    let mut client_y = Vec::with_capacity(n);
-    let mut server_y = Vec::with_capacity(n);
-    for i in 0..n {
-        let e = open_c[2 * i] + open_s[2 * i];
-        let f = open_c[2 * i + 1] + open_s[2 * i + 1];
-        client_y.push(beaver::mul_share(e, f, &client.triples[i], true));
-        server_y.push(beaver::mul_share(e, f, &server.triples[i], false));
+    // Flat multiply + resharing: the client's delta (y_c − r_out) folds
+    // into the server share in the same pass, leaving the client holding
+    // its pre-chosen r_out.
+    let mut client_out: Vec<Vec<Fp>> = Vec::with_capacity(r_count);
+    for r in 0..r_count {
+        let (cm, sm) = (clients[r], servers[r]);
+        let base = 2 * r * n;
+        let server_y = &mut server_out[r];
+        for i in 0..n {
+            let e = open_c[base + 2 * i] + open_s[base + 2 * i];
+            let f = open_c[base + 2 * i + 1] + open_s[base + 2 * i + 1];
+            let y_c = beaver::mul_share(e, f, &cm.triples[i], true);
+            let y_s = beaver::mul_share(e, f, &sm.triples[i], false);
+            server_y[i] = y_s + (y_c - cm.r_out[i]);
+        }
+        stats.bytes_to_server += n as u64 * 4;
+        client_out.push(cm.r_out.clone());
     }
-
-    // --- Resharing: client share becomes its pre-chosen r_out. ---
-    let deltas: Vec<Fp> =
-        (0..n).map(|i| client_y[i] - client.r_out[i]).collect();
-    stats.bytes_to_server += deltas.len() as u64 * 4;
     stats.rounds += 1;
-    for i in 0..n {
-        server_y[i] = server_y[i] + deltas[i];
-    }
 
     stats.wall_s = timer.elapsed_s();
-    (client.r_out.clone(), server_y, stats)
+    (client_out, server_out, stats)
 }
 
 #[cfg(test)]
@@ -272,5 +398,75 @@ mod tests {
         let (yc, ys, _) = online_relu_layer(&cm, &sm, &[sh.client], &[sh.server]);
         assert_eq!(yc[0], cm.r_out[0]);
         assert_eq!((yc[0] + ys[0]).to_i64(), 424_242);
+    }
+
+    #[test]
+    fn multi_request_layer_matches_per_request_runs() {
+        // The fused batch walk must produce bit-identical shares and an
+        // exact byte-ledger sum vs independent per-request runs, for
+        // every variant class and R above and below the group width.
+        let variants = [
+            ReluVariant::BaselineRelu,
+            ReluVariant::NaiveSign,
+            circa_variant(8),
+            ReluVariant::TruncatedSign { k: 12, mode: FaultMode::NegPass },
+        ];
+        for (vi, variant) in variants.into_iter().enumerate() {
+            for r_count in [1usize, 2, 8] {
+                let mut rng = Rng::new(0xBA7C + (vi * 10 + r_count) as u64);
+                let n = 5;
+                let mut mats = Vec::new();
+                let mut shares: Vec<(Vec<Fp>, Vec<Fp>)> = Vec::new();
+                for _ in 0..r_count {
+                    let xc: Vec<Fp> = (0..n).map(|_| random_fp(&mut rng)).collect();
+                    let xs: Vec<Fp> = (0..n).map(|_| random_fp(&mut rng)).collect();
+                    mats.push(offline_relu_layer(variant, &xc, &mut rng));
+                    shares.push((xc, xs));
+                }
+                let mut want = Vec::new();
+                let mut sum_to_client = 0u64;
+                let mut sum_to_server = 0u64;
+                let mut single_rounds = 0u32;
+                for ((cm, sm), (xc, xs)) in mats.iter().zip(&shares) {
+                    let (yc, ys, st) = online_relu_layer(cm, sm, xc, xs);
+                    sum_to_client += st.bytes_to_client;
+                    sum_to_server += st.bytes_to_server;
+                    single_rounds = st.rounds;
+                    want.push((yc, ys));
+                }
+                let cms: Vec<_> = mats.iter().map(|(cm, _)| cm).collect();
+                let sms: Vec<_> = mats.iter().map(|(_, sm)| sm).collect();
+                let xcs: Vec<&[Fp]> = shares.iter().map(|(xc, _)| xc.as_slice()).collect();
+                let xss: Vec<&[Fp]> = shares.iter().map(|(_, xs)| xs.as_slice()).collect();
+                let mut scratch = OnlineScratch::default();
+                let (yc, ys, st) = online_relu_layer_multi(&cms, &sms, &xcs, &xss, &mut scratch);
+                for r in 0..r_count {
+                    assert_eq!(yc[r], want[r].0, "{variant:?} R={r_count} client shares {r}");
+                    assert_eq!(ys[r], want[r].1, "{variant:?} R={r_count} server shares {r}");
+                }
+                assert_eq!(st.bytes_to_client, sum_to_client, "{variant:?} R={r_count}");
+                assert_eq!(st.bytes_to_server, sum_to_server, "{variant:?} R={r_count}");
+                assert_eq!(st.rounds, single_rounds, "{variant:?} R={r_count}: fused rounds");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_layers_is_clean() {
+        // One OnlineScratch across two different layers (different n):
+        // no state may leak between calls.
+        let mut rng = Rng::new(9);
+        let variant = circa_variant(12);
+        let mut scratch = OnlineScratch::default();
+        for n in [7usize, 3] {
+            let xc: Vec<Fp> = (0..n).map(|_| random_fp(&mut rng)).collect();
+            let xs: Vec<Fp> = (0..n).map(|_| random_fp(&mut rng)).collect();
+            let (cm, sm) = offline_relu_layer(variant, &xc, &mut rng);
+            let (want_c, want_s, _) = online_relu_layer(&cm, &sm, &xc, &xs);
+            let (mut got_c, mut got_s, _) =
+                online_relu_layer_multi(&[&cm], &[&sm], &[&xc], &[&xs], &mut scratch);
+            assert_eq!(got_c.pop().unwrap(), want_c, "n={n}");
+            assert_eq!(got_s.pop().unwrap(), want_s, "n={n}");
+        }
     }
 }

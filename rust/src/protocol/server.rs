@@ -6,10 +6,13 @@
 
 use super::channel::Channel;
 use super::client::{run_client, ClientLayer, ClientNet};
-use super::linear::{offline_linear, online_linear, LinearOp};
+use super::linear::{forward_multi, offline_linear, online_linear, LinearOp};
 use super::messages::Message;
 use super::offline::{ClientReluMaterial, ServerReluMaterial};
-use super::online::{decode_server_shares, encode_server_labels, OnlineReluStats};
+use super::online::{
+    decode_server_shares, encode_server_labels, online_relu_layer_multi, OnlineReluStats,
+    OnlineScratch,
+};
 use crate::beaver;
 use crate::circuits::spec::ReluVariant;
 use crate::field::{random_fp, Fp};
@@ -403,6 +406,112 @@ pub fn run_inference(
     })
 }
 
+/// Run R private inferences — one leased session each, same model — as a
+/// single batched walk: every linear layer is one [`forward_multi`] pass
+/// across all R share vectors (optionally chunk-parallel over
+/// `lin_threads`), every ReLU layer one fused
+/// [`online_relu_layer_multi`] call whose GC evaluation strides across
+/// requests. In-process lockstep (no channels/threads per request), with
+/// every message byte-accounted exactly as the per-request
+/// [`run_inference`] channel ledger — the aggregated `bytes_*` equal the
+/// sums of R independent runs, and each request's logits are
+/// bit-identical to its own `run_inference` (`relu_stats`/
+/// `offline_bytes` stay `Default`, as in [`run_server`]).
+///
+/// Sessions must be homogeneous — same plan shape, variant, and rescale
+/// schedule — which the coordinator's model-keyed batches guarantee.
+pub fn run_inference_multi(
+    sessions: &[(&ClientNet, &ServerNet)],
+    inputs: &[&[Fp]],
+    lin_threads: usize,
+) -> (Vec<Vec<Fp>>, InferenceStats) {
+    let r_count = sessions.len();
+    assert!(r_count > 0, "empty inference batch");
+    assert_eq!(inputs.len(), r_count, "one input per session");
+    let timer = Timer::new();
+    let mut stats = InferenceStats::default();
+    let n_layers = sessions[0].1.layers.len();
+    for (cn, sn) in sessions {
+        assert_eq!(cn.layers.len(), n_layers, "homogeneous batch");
+        assert_eq!(sn.layers.len(), n_layers, "homogeneous batch");
+    }
+
+    // Round 0: each client blinds its input with its own session's mask.
+    let mut server_y: Vec<Vec<Fp>> = sessions
+        .iter()
+        .zip(inputs)
+        .map(|((cn, _), input)| {
+            let r1 = cn.input_mask();
+            assert_eq!(input.len(), r1.len(), "input dimension");
+            input.iter().zip(r1).map(|(&y, &r)| y - r).collect()
+        })
+        .collect();
+    for input in inputs {
+        stats.bytes_to_server += input.len() as u64 * 4;
+    }
+
+    let mut scratch = OnlineScratch::default();
+    let mut client_x: Vec<&[Fp]> = vec![&[]; r_count];
+    let mut server_x: Vec<Vec<Fp>> = Vec::new();
+
+    for li in 0..n_layers {
+        match &sessions[0].1.layers[li] {
+            ServerLayer::Linear { op, .. } => {
+                let mut ss: Vec<&[Fp]> = Vec::with_capacity(r_count);
+                for (r, (cn, sn)) in sessions.iter().enumerate() {
+                    match &sn.layers[li] {
+                        ServerLayer::Linear { op: o, s } => {
+                            assert_eq!(o.in_dim(), op.in_dim(), "layer {li} shape");
+                            assert_eq!(o.out_dim(), op.out_dim(), "layer {li} shape");
+                            ss.push(s);
+                        }
+                        _ => panic!("layer {li}: shape mismatch across batch"),
+                    }
+                    match &cn.layers[li] {
+                        ClientLayer::Linear { x_share, .. } => client_x[r] = x_share,
+                        _ => panic!("layer {li}: client/server mismatch"),
+                    }
+                }
+                let ys: Vec<&[Fp]> = server_y.iter().map(|v| v.as_slice()).collect();
+                server_x = forward_multi(op.as_ref(), &ys, &ss, lin_threads);
+            }
+            ServerLayer::Relu { rescale, .. } => {
+                let mut cms: Vec<&ClientReluMaterial> = Vec::with_capacity(r_count);
+                let mut sms: Vec<&ServerReluMaterial> = Vec::with_capacity(r_count);
+                for (cn, sn) in sessions {
+                    match &cn.layers[li] {
+                        ClientLayer::Relu(m) => cms.push(m.as_ref()),
+                        _ => panic!("layer {li}: client/server mismatch"),
+                    }
+                    match &sn.layers[li] {
+                        ServerLayer::Relu { mat, rescale: r2 } => {
+                            assert_eq!(r2, rescale, "layer {li}: rescale schedule");
+                            sms.push(mat.as_ref());
+                        }
+                        _ => panic!("layer {li}: shape mismatch across batch"),
+                    }
+                }
+                let xss: Vec<&[Fp]> = server_x.iter().map(|v| v.as_slice()).collect();
+                let (_, ys_out, rstats) =
+                    online_relu_layer_multi(&cms, &sms, &client_x, &xss, &mut scratch);
+                stats.bytes_to_client += rstats.bytes_to_client;
+                stats.bytes_to_server += rstats.bytes_to_server;
+                server_y = ys_out.into_iter().map(|v| rescale_shares(v, *rescale)).collect();
+            }
+        }
+    }
+
+    // Final round: each server ships its share of the last linear
+    // output; each client reconstructs its logits.
+    let mut logits = Vec::with_capacity(r_count);
+    for (cx, sx) in client_x.iter().zip(&server_x) {
+        stats.bytes_to_client += sx.len() as u64 * 4;
+        logits.push(cx.iter().zip(sx).map(|(&c, &s)| c + s).collect());
+    }
+    stats.online_s = timer.elapsed_s();
+    (logits, stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -468,6 +577,33 @@ mod tests {
         let (l1, _) = run_inference(&cn1, &sn1, &input);
         let (l2, _) = run_inference(&cn2, &sn2, &input);
         assert_eq!(l1, l2, "same input, fresh material, same result");
+    }
+
+    #[test]
+    fn batched_inference_matches_per_request_runs() {
+        let mut rng = Rng::new(22);
+        let variant = ReluVariant::TruncatedSign { k: 4, mode: FaultMode::PosZero };
+        let plan = tiny_plan(variant, &mut rng);
+        let r_count = 3;
+        let sessions: Vec<_> = (0..r_count).map(|_| offline_network(&plan, &mut rng)).collect();
+        let inputs: Vec<Vec<Fp>> = (0..r_count)
+            .map(|r| (0..6).map(|j| Fp::from_i64(1000 + 37 * r as i64 + j)).collect())
+            .collect();
+        let mut want = Vec::new();
+        let (mut sum_c, mut sum_s) = (0u64, 0u64);
+        for ((cn, sn, _), input) in sessions.iter().zip(&inputs) {
+            let (logits, st) = run_inference(cn, sn, input);
+            sum_c += st.bytes_to_client;
+            sum_s += st.bytes_to_server;
+            want.push(logits);
+        }
+        let refs: Vec<(&ClientNet, &ServerNet)> =
+            sessions.iter().map(|(cn, sn, _)| (cn, sn)).collect();
+        let in_refs: Vec<&[Fp]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let (got, st) = run_inference_multi(&refs, &in_refs, 1);
+        assert_eq!(got, want, "logits per request");
+        assert_eq!(st.bytes_to_client, sum_c);
+        assert_eq!(st.bytes_to_server, sum_s);
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! Contract tests for the cross-request batched online phase: executing
+//! R concurrent inferences as one batched walk
+//! (`run_inference_multi`) must be **bit-identical**, request by
+//! request, to R independent `run_inference` calls on the same leased
+//! sessions — for every variant and truncation level — and the
+//! aggregated wire-byte ledger must be the exact sum of the per-request
+//! ledgers. This is the property the router's batched dispatch path
+//! stands on.
+
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::field::Fp;
+use circa::protocol::client::ClientNet;
+use circa::protocol::linear::{LinearOp, Matrix};
+use circa::protocol::online::{online_relu_layer, online_relu_layer_multi, OnlineScratch};
+use circa::protocol::offline::offline_relu_layer;
+use circa::protocol::server::{
+    offline_network_mt, run_inference, run_inference_multi, session_rng, NetworkPlan, ServerNet,
+};
+use circa::util::Rng;
+use std::sync::Arc;
+
+fn variants() -> Vec<ReluVariant> {
+    let mut v = vec![
+        ReluVariant::BaselineRelu,
+        ReluVariant::NaiveSign,
+        ReluVariant::StochasticSign { mode: FaultMode::PosZero },
+    ];
+    for k in [0u32, 8, 12] {
+        v.push(ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero });
+        v.push(ReluVariant::TruncatedSign { k, mode: FaultMode::NegPass });
+    }
+    v
+}
+
+/// 6 → 5 → relu → 5 → 4 → relu → 4 → 3, optionally rescaled.
+fn plan(variant: ReluVariant, seed: u64, rescaled: bool) -> NetworkPlan {
+    let mut rng = Rng::new(seed);
+    let linears: Vec<Arc<dyn LinearOp>> = vec![
+        Arc::new(Matrix::random(5, 6, 20, &mut rng)),
+        Arc::new(Matrix::random(4, 5, 20, &mut rng)),
+        Arc::new(Matrix::random(3, 4, 20, &mut rng)),
+    ];
+    let rescale_bits = if rescaled { vec![1, 2] } else { Vec::new() };
+    NetworkPlan { linears, variant, rescale_bits }
+}
+
+/// Deal R sessions the way the pool leases them: one session per
+/// request, seq-addressed under a shared base seed.
+fn lease_sessions(p: &NetworkPlan, base_seed: u64, r_count: usize) -> Vec<(ClientNet, ServerNet)> {
+    (0..r_count)
+        .map(|seq| {
+            let (cn, sn, _) = offline_network_mt(p, &mut session_rng(base_seed, seq as u64), 1);
+            (cn, sn)
+        })
+        .collect()
+}
+
+/// Each request gets its own distinct input.
+fn inputs_for(r_count: usize) -> Vec<Vec<Fp>> {
+    (0..r_count)
+        .map(|r| (0..6).map(|j| Fp::from_i64(900 + 101 * r as i64 + 7 * j)).collect())
+        .collect()
+}
+
+#[test]
+fn batched_inference_bit_identical_to_per_request_all_variants() {
+    for (vi, variant) in variants().into_iter().enumerate() {
+        for r_count in [1usize, 2, 8] {
+            let p = plan(variant, 40 + vi as u64, false);
+            let sessions = lease_sessions(&p, 0xF00D + vi as u64, r_count);
+            let inputs = inputs_for(r_count);
+
+            // Oracle: R independent per-request runs, one per session.
+            let mut want = Vec::new();
+            let (mut sum_c, mut sum_s) = (0u64, 0u64);
+            for ((cn, sn), input) in sessions.iter().zip(&inputs) {
+                let (logits, st) = run_inference(cn, sn, input);
+                sum_c += st.bytes_to_client;
+                sum_s += st.bytes_to_server;
+                want.push(logits);
+            }
+
+            let refs: Vec<(&ClientNet, &ServerNet)> =
+                sessions.iter().map(|(cn, sn)| (cn, sn)).collect();
+            let in_refs: Vec<&[Fp]> = inputs.iter().map(|v| v.as_slice()).collect();
+            let (got, st) = run_inference_multi(&refs, &in_refs, 1);
+            for r in 0..r_count {
+                assert_eq!(got[r], want[r], "{variant:?} R={r_count}: request {r} logits");
+            }
+            assert_eq!(st.bytes_to_client, sum_c, "{variant:?} R={r_count}: bytes to client");
+            assert_eq!(st.bytes_to_server, sum_s, "{variant:?} R={r_count}: bytes to server");
+        }
+    }
+}
+
+#[test]
+fn batched_inference_matches_on_rescaled_plan_and_any_thread_count() {
+    let variant = ReluVariant::TruncatedSign { k: 8, mode: FaultMode::PosZero };
+    let p = plan(variant, 77, true);
+    let r_count = 4;
+    let sessions = lease_sessions(&p, 0xCAFE, r_count);
+    let inputs = inputs_for(r_count);
+    let want: Vec<Vec<Fp>> = sessions
+        .iter()
+        .zip(&inputs)
+        .map(|((cn, sn), input)| run_inference(cn, sn, input).0)
+        .collect();
+    let refs: Vec<(&ClientNet, &ServerNet)> = sessions.iter().map(|(cn, sn)| (cn, sn)).collect();
+    let in_refs: Vec<&[Fp]> = inputs.iter().map(|v| v.as_slice()).collect();
+    // The chunk-parallel linear spine must not change a single bit.
+    for lin_threads in [1usize, 2, 8] {
+        let (got, _) = run_inference_multi(&refs, &in_refs, lin_threads);
+        assert_eq!(got, want, "lin_threads={lin_threads}");
+    }
+}
+
+#[test]
+fn batched_relu_layer_stats_sum_exactly_per_variant() {
+    // Layer-level: fused rounds keep the single-request round count
+    // while the byte ledger sums exactly — for k ∈ {0, 8, 12} Circa
+    // variants (4 rounds) and the baseline (2 rounds).
+    let cases = [
+        (ReluVariant::BaselineRelu, 2u32),
+        (ReluVariant::TruncatedSign { k: 0, mode: FaultMode::PosZero }, 4),
+        (ReluVariant::TruncatedSign { k: 8, mode: FaultMode::PosZero }, 4),
+        (ReluVariant::TruncatedSign { k: 12, mode: FaultMode::NegPass }, 4),
+    ];
+    for (ci, (variant, want_rounds)) in cases.into_iter().enumerate() {
+        for r_count in [2usize, 8] {
+            let mut rng = Rng::new(0x5EED + ci as u64);
+            let n = 6;
+            let mut mats = Vec::new();
+            let mut shares: Vec<(Vec<Fp>, Vec<Fp>)> = Vec::new();
+            for _ in 0..r_count {
+                let xc: Vec<Fp> = (0..n).map(|_| circa::field::random_fp(&mut rng)).collect();
+                let xs: Vec<Fp> = (0..n).map(|_| circa::field::random_fp(&mut rng)).collect();
+                mats.push(offline_relu_layer(variant, &xc, &mut rng));
+                shares.push((xc, xs));
+            }
+            let mut per_req = Vec::new();
+            for ((cm, sm), (xc, xs)) in mats.iter().zip(&shares) {
+                per_req.push(online_relu_layer(cm, sm, xc, xs));
+            }
+            let cms: Vec<_> = mats.iter().map(|(cm, _)| cm).collect();
+            let sms: Vec<_> = mats.iter().map(|(_, sm)| sm).collect();
+            let xcs: Vec<&[Fp]> = shares.iter().map(|(xc, _)| xc.as_slice()).collect();
+            let xss: Vec<&[Fp]> = shares.iter().map(|(_, xs)| xs.as_slice()).collect();
+            let mut scratch = OnlineScratch::default();
+            let (yc, ys, st) = online_relu_layer_multi(&cms, &sms, &xcs, &xss, &mut scratch);
+            assert_eq!(st.rounds, want_rounds, "{variant:?}: fused round count");
+            let sum_c: u64 = per_req.iter().map(|(_, _, s)| s.bytes_to_client).sum();
+            let sum_s: u64 = per_req.iter().map(|(_, _, s)| s.bytes_to_server).sum();
+            assert_eq!(st.bytes_to_client, sum_c, "{variant:?} R={r_count}");
+            assert_eq!(st.bytes_to_server, sum_s, "{variant:?} R={r_count}");
+            for (r, (wc, ws, _)) in per_req.iter().enumerate() {
+                assert_eq!(&yc[r], wc, "{variant:?} R={r_count}: client shares {r}");
+                assert_eq!(&ys[r], ws, "{variant:?} R={r_count}: server shares {r}");
+            }
+        }
+    }
+}
