@@ -1,0 +1,146 @@
+//! Serving-tier bench: connection setup rate, request latency through
+//! the reactor, and shed rate vs offered load when a model's material
+//! bank runs dry. Emits `bench_out/BENCH_net_serving.json`.
+//!
+//! ```bash
+//! cargo bench --bench net_serving
+//! ```
+//!
+//! Everything runs on loopback over small in-process plans — the bench
+//! measures the serving tier (reactor multiplexing, framing, admission
+//! control), not the protocol's cryptography (fig3/table benches cover
+//! that).
+
+use circa::bench_harness::tables::write_bench_json;
+use circa::circuits::spec::ReluVariant;
+use circa::coordinator::{PiService, ServiceConfig};
+use circa::field::Fp;
+use circa::net::{AdmitConfig, Outcome, PiClient, Reactor, ReactorConfig};
+use circa::protocol::linear::{LinearOp, Matrix};
+use circa::protocol::server::NetworkPlan;
+use circa::util::{Rng, Timer};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn service(pool_target: usize, max_queue: usize) -> Arc<PiService> {
+    let mut rng = Rng::new(0xBE9C);
+    let linears: Vec<Arc<dyn LinearOp>> = vec![
+        Arc::new(Matrix::random(8, 10, 10, &mut rng)),
+        Arc::new(Matrix::random(4, 8, 10, &mut rng)),
+    ];
+    let plan = Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu));
+    Arc::new(PiService::start(plan, ServiceConfig {
+        workers: 4,
+        pool_target,
+        pool_dealers: 2,
+        max_queue,
+        ..Default::default()
+    }))
+}
+
+fn main() {
+    let mut entries: Vec<(String, f64)> = Vec::new();
+
+    // --- 1. Connection setup rate (connect + hello + bye) -----------
+    {
+        let svc = service(8, 1024);
+        svc.warmup(4);
+        let reactor =
+            Reactor::spawn("127.0.0.1:0", svc.clone(), ReactorConfig::default()).unwrap();
+        let addr = reactor.local_addr().to_string();
+        let n = 200;
+        let t = Timer::new();
+        for _ in 0..n {
+            let client = PiClient::connect(&addr).expect("connect");
+            let _ = client.bye();
+        }
+        let per_s = n as f64 / t.elapsed_s();
+        println!("connection setup: {per_s:.0} conns/s ({n} sequential handshakes)");
+        entries.push(("conns_per_s".to_string(), per_s));
+        reactor.shutdown();
+        if let Ok(svc) = Arc::try_unwrap(svc) {
+            svc.shutdown();
+        }
+    }
+
+    // --- 2. Request latency through the reactor ---------------------
+    {
+        let svc = service(64, 1024);
+        svc.warmup(32);
+        let reactor =
+            Reactor::spawn("127.0.0.1:0", svc.clone(), ReactorConfig::default()).unwrap();
+        let mut client = PiClient::connect(&reactor.local_addr().to_string()).unwrap();
+        let ad = client.models()[0];
+        let input: Vec<Fp> = (0..ad.in_dim as i64).map(|i| Fp::from_i64(500 + i)).collect();
+        let n = 200;
+        let mut lat_ms = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = Timer::new();
+            match client.infer(ad.fingerprint, &input).expect("infer") {
+                Outcome::Logits(_) => lat_ms.push(t.elapsed_s() * 1e3),
+                Outcome::Busy(b) => panic!("warm bank shed: {}", b.reason),
+            }
+        }
+        let p50 = circa::util::stats::percentile(&lat_ms, 50.0);
+        let p99 = circa::util::stats::percentile(&lat_ms, 99.0);
+        println!("request latency over loopback: p50 {p50:.3} ms  p99 {p99:.3} ms ({n} reqs)");
+        entries.push(("latency_p50_ms".to_string(), p50));
+        entries.push(("latency_p99_ms".to_string(), p99));
+        let _ = client.bye();
+        reactor.shutdown();
+        if let Ok(svc) = Arc::try_unwrap(svc) {
+            svc.shutdown();
+        }
+    }
+
+    // --- 3. Shed rate vs offered load (dry bank) --------------------
+    {
+        let svc = service(4, 64);
+        svc.warmup(2);
+        // Freeze refill and drain the bank: every subsequent request
+        // should shed, and shedding must be cheap (no dealing inline).
+        svc.pool.stop();
+        let model = svc.models()[0];
+        let mut rng = Rng::new(1);
+        while svc.pool.banked_model(model) > 0 {
+            let _ = svc.pool.lease_model(model, &mut rng);
+        }
+        let cfg = ReactorConfig {
+            admit: AdmitConfig {
+                sample_interval: Duration::from_secs(0),
+                ..AdmitConfig::default()
+            },
+            ..ReactorConfig::default()
+        };
+        let reactor = Reactor::spawn("127.0.0.1:0", svc.clone(), cfg).unwrap();
+        let mut client = PiClient::connect(&reactor.local_addr().to_string()).unwrap();
+        let ad = client.models()[0];
+        let input: Vec<Fp> = (0..ad.in_dim as i64).map(|i| Fp::from_i64(500 + i)).collect();
+        let n = 500;
+        let t = Timer::new();
+        let mut shed = 0u64;
+        for _ in 0..n {
+            if let Outcome::Busy(_) = client.infer(ad.fingerprint, &input).expect("answered") {
+                shed += 1;
+            }
+        }
+        let wall = t.elapsed_s();
+        let rate = shed as f64 / n as f64;
+        println!(
+            "dry-bank overload: {n} offered in {wall:.2} s, shed rate {:.1}% \
+             ({:.0} busy/s answered without blocking)",
+            100.0 * rate,
+            shed as f64 / wall
+        );
+        entries.push(("shed_rate_dry_bank".to_string(), rate));
+        entries.push(("busy_answers_per_s".to_string(), shed as f64 / wall));
+        let _ = client.bye();
+        reactor.shutdown();
+        if let Ok(svc) = Arc::try_unwrap(svc) {
+            svc.shutdown();
+        }
+    }
+
+    let refs: Vec<(&str, f64)> = entries.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    write_bench_json("BENCH_net_serving.json", &refs);
+}

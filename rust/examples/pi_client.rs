@@ -1,0 +1,166 @@
+//! Load generator for the network serving tier (`serve_pi --listen`).
+//!
+//! Opens `--conns` concurrent connections, learns the served model set
+//! from the hello advertisement (input dims included — no out-of-band
+//! plan knowledge), and drives `--requests` pipelined inferences per
+//! connection round-robin across the advertised models. Reports
+//! throughput, latency percentiles, and the shed (`Busy`) rate.
+//!
+//! ```bash
+//! cargo run --release --example serve_pi -- --synthetic --listen 127.0.0.1:7117 &
+//! cargo run --release --example pi_client -- --addr 127.0.0.1:7117 --conns 8 --requests 64
+//! ```
+//!
+//! Flags: `--depth` bounds in-flight requests per connection;
+//! `--connect-retries` retries `Busy`-at-capacity connects (the
+//! reactor's connection cap is an explicit signal, not an error).
+
+use circa::field::Fp;
+use circa::net::{Outcome, PiClient};
+use circa::util::args::Args;
+use circa::util::{Rng, Timer};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+#[derive(Default)]
+struct Tally {
+    ok: u64,
+    shed: u64,
+    latencies_ms: Vec<f64>,
+    bytes: u64,
+    from_bank: u64,
+}
+
+fn drive(addr: &str, conn_id: u64, requests: usize, depth: usize, retries: usize) -> Tally {
+    let mut client = None;
+    for attempt in 0..=retries {
+        match PiClient::connect(addr) {
+            Ok(c) => {
+                client = Some(c);
+                break;
+            }
+            Err(e) if attempt < retries && e.to_string().contains("busy") => {
+                std::thread::sleep(Duration::from_millis(50 << attempt));
+            }
+            Err(e) => {
+                eprintln!("conn {conn_id}: connect failed: {e}");
+                return Tally::default();
+            }
+        }
+    }
+    let Some(mut client) = client else { return Tally::default() };
+    let ads: Vec<_> = client.models().to_vec();
+    assert!(!ads.is_empty(), "server advertised no models");
+
+    let mut rng = Rng::new(0xC11E27 ^ conn_id);
+    let mut tally = Tally::default();
+    let mut in_flight: HashMap<u64, Instant> = HashMap::new();
+    let mut sent = 0usize;
+    let mut done = 0usize;
+    while done < requests {
+        // Keep the pipeline full, then block for one response.
+        while sent < requests && in_flight.len() < depth {
+            let ad = ads[sent % ads.len()];
+            let input: Vec<Fp> = (0..ad.in_dim)
+                .map(|_| Fp::from_i64(rng.below(4000) as i64 - 2000))
+                .collect();
+            match client.send_infer(ad.fingerprint, &input) {
+                Ok(req_id) => {
+                    in_flight.insert(req_id, Instant::now());
+                    sent += 1;
+                }
+                Err(e) => {
+                    eprintln!("conn {conn_id}: send failed: {e}");
+                    return tally;
+                }
+            }
+        }
+        let outcome = match client.recv_outcome() {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("conn {conn_id}: recv failed: {e}");
+                return tally;
+            }
+        };
+        done += 1;
+        match outcome {
+            Outcome::Logits(l) => {
+                if let Some(t0) = in_flight.remove(&l.req_id) {
+                    tally.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                }
+                tally.ok += 1;
+                tally.bytes += l.stats.bytes;
+                tally.from_bank += l.stats.served_from_bank as u64;
+            }
+            Outcome::Busy(b) => {
+                in_flight.remove(&b.req_id);
+                tally.shed += 1;
+            }
+        }
+    }
+    let _ = client.bye();
+    tally
+}
+
+fn main() {
+    let args = Args::from_env();
+    let addr = args.get_or("addr", "127.0.0.1:7117").to_string();
+    let conns = args.get_usize("conns", 8);
+    let requests = args.get_usize("requests", 32);
+    let depth = args.get_usize("depth", 4).max(1);
+    let retries = args.get_usize("connect-retries", 3);
+
+    println!(
+        "driving {addr}: {conns} connections × {requests} requests (pipeline depth {depth})"
+    );
+    let t = Timer::new();
+    let handles: Vec<_> = (0..conns)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || drive(&addr, c as u64, requests, depth, retries))
+        })
+        .collect();
+    let mut total = Tally::default();
+    for h in handles {
+        let t = h.join().expect("client thread");
+        total.ok += t.ok;
+        total.shed += t.shed;
+        total.bytes += t.bytes;
+        total.from_bank += t.from_bank;
+        total.latencies_ms.extend(t.latencies_ms);
+    }
+    let wall = t.elapsed_s();
+
+    let answered = total.ok + total.shed;
+    println!(
+        "\n{} answered in {:.2} s ({:.1} resp/s): {} served, {} shed busy ({:.1}%)",
+        answered,
+        wall,
+        answered as f64 / wall.max(1e-9),
+        total.ok,
+        total.shed,
+        100.0 * total.shed as f64 / answered.max(1) as f64
+    );
+    if !total.latencies_ms.is_empty() {
+        println!(
+            "latency ms: p50 {:.2}  p99 {:.2}  mean {:.2}",
+            circa::util::stats::percentile(&total.latencies_ms, 50.0),
+            circa::util::stats::percentile(&total.latencies_ms, 99.0),
+            circa::util::stats::mean(&total.latencies_ms)
+        );
+    }
+    if total.ok > 0 {
+        println!(
+            "online bytes/req: {}; served from bank: {}/{}",
+            total.bytes / total.ok,
+            total.from_bank,
+            total.ok
+        );
+    }
+    // A fully-shed run still exits 0: Busy is the protocol working as
+    // designed. Transport-level failures already printed per connection.
+    if answered == 0 {
+        eprintln!("no responses at all — is the server up?");
+        std::process::exit(1);
+    }
+}

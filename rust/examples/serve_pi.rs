@@ -1,29 +1,38 @@
-//! End-to-end serving driver (EXPERIMENTS.md §E2E): load the *trained*
-//! demo CNN from `artifacts/`, stand up **one multi-model PI serving
-//! coordinator** registering two models over the same weights — Circa's
-//! truncated stochastic ReLU and the baseline ReLU GC — push the real
-//! test set through the full 2-party protocol against both, and report
-//! a per-model table: accuracy, latency percentiles, throughput,
-//! communication, bank depths, and dealing counters.
+//! End-to-end serving driver (EXPERIMENTS.md §E2E): stand up **one
+//! multi-model PI serving coordinator** registering two models — Circa's
+//! truncated stochastic ReLU and the baseline ReLU GC — and either
+//! drive it in-process or expose it on a socket.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_pi -- --requests 64 --k 12
+//! # In-process drive over the trained demo CNN (requires `make artifacts`):
+//! cargo run --release --example serve_pi -- --requests 64 --k 12
+//!
+//! # Network serving tier (net::Reactor) over synthetic models — no
+//! # artifacts needed; drive it with examples/pi_client.rs:
+//! cargo run --release --example serve_pi -- --synthetic --listen 127.0.0.1:7117 --serve-secs 20
 //! ```
 //!
-//! With `--dealer HOST:PORT` the material pool refills both models from
-//! a standalone dealer over one TCP connection; that dealer must have
-//! both plans registered (weight digests included) or the handshake is
-//! rejected.
+//! Flags: `--synthetic` swaps the artifact CNN for small random plans
+//! built in-process (same two variants); `--listen ADDR` starts the
+//! nonblocking reactor with bank-depth admission control instead of the
+//! in-process driver (`--serve-secs N` bounds the run, 0 = until
+//! killed; `--max-conns`, `--low-watermark`, `--high-watermark` tune
+//! the edge). With `--dealer HOST:PORT` the material pool refills both
+//! models from a standalone dealer over one TCP connection.
 
 use circa::circuits::spec::{FaultMode, ReluVariant};
 use circa::coordinator::{ModelConfig, ModelSnapshot, PiService, ServiceConfig};
-
+use circa::field::Fp;
+use circa::net::{AdmitConfig, Reactor, ReactorConfig};
 use circa::nn::weights::{load_dataset, load_weights};
+use circa::protocol::linear::{LinearOp, Matrix};
 use circa::protocol::server::NetworkPlan;
 use circa::runtime::ArtifactDir;
 use circa::util::args::Args;
-use circa::util::Timer;
+use circa::util::{Rng, Timer};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Per-model client-side tallies (the service's metrics keep the
 /// protocol-level view; accuracy needs the labels).
@@ -31,7 +40,8 @@ struct ModelReport {
     name: String,
     fingerprint: u64,
     requests: usize,
-    correct: usize,
+    /// `None` when labels don't exist (synthetic inputs).
+    correct: Option<usize>,
     latencies_ms: Vec<f64>,
     bytes: u64,
 }
@@ -42,21 +52,26 @@ fn print_model_table(reports: &[ModelReport], rows: &[ModelSnapshot]) {
         let row = rows.iter().find(|r| r.fingerprint == rep.fingerprint);
         println!("\n  model: {} (fingerprint {:#018x})", rep.name, rep.fingerprint);
         println!("    requests          : {}", rep.requests);
-        println!(
-            "    accuracy (private): {:.2}%",
-            100.0 * rep.correct as f64 / rep.requests.max(1) as f64
-        );
-        println!(
-            "    latency ms        : p50 {:.1}  p99 {:.1}  mean {:.1}",
-            circa::util::stats::percentile(&rep.latencies_ms, 50.0),
-            circa::util::stats::percentile(&rep.latencies_ms, 99.0),
-            circa::util::stats::mean(&rep.latencies_ms)
-        );
-        println!("    online bytes/req  : {}", rep.bytes / rep.requests.max(1) as u64);
+        match rep.correct {
+            Some(correct) => println!(
+                "    accuracy (private): {:.2}%",
+                100.0 * correct as f64 / rep.requests.max(1) as f64
+            ),
+            None => println!("    accuracy (private): n/a (synthetic inputs)"),
+        }
+        if !rep.latencies_ms.is_empty() {
+            println!(
+                "    latency ms        : p50 {:.1}  p99 {:.1}  mean {:.1}",
+                circa::util::stats::percentile(&rep.latencies_ms, 50.0),
+                circa::util::stats::percentile(&rep.latencies_ms, 99.0),
+                circa::util::stats::mean(&rep.latencies_ms)
+            );
+            println!("    online bytes/req  : {}", rep.bytes / rep.requests.max(1) as u64);
+        }
         let Some(row) = row else { continue };
         println!(
-            "    served / dry      : {} completed, {} dry leases",
-            row.completed, row.pool_dry_events
+            "    served / dry      : {} completed, {} dry leases, {} shed busy",
+            row.completed, row.pool_dry_events, row.sheds
         );
         if row.deal_relus > 0 {
             println!(
@@ -84,6 +99,107 @@ fn print_model_table(reports: &[ModelReport], rows: &[ModelSnapshot]) {
     }
 }
 
+/// Two small random plans over shared weights (Circa truncated sign +
+/// baseline ReLU GC) for artifact-free runs.
+fn synthetic_models(k: u32) -> (Vec<(Arc<NetworkPlan>, ModelConfig)>, usize) {
+    let mut rng = Rng::new(0x5EED);
+    let linears: Vec<Arc<dyn LinearOp>> = vec![
+        Arc::new(Matrix::random(12, 16, 10, &mut rng)),
+        Arc::new(Matrix::random(10, 12, 10, &mut rng)),
+    ];
+    let in_dim = linears[0].in_dim();
+    let circa_plan = Arc::new(NetworkPlan::unscaled(
+        linears.clone(),
+        ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero },
+    ));
+    let base_plan = Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu));
+    (
+        vec![(circa_plan, ModelConfig::default()), (base_plan, ModelConfig::default())],
+        in_dim,
+    )
+}
+
+/// Serve on a socket: reactor + admission control, periodic status
+/// lines, final per-model table with connection/shed/queue-depth rows.
+fn run_listen(svc: Arc<PiService>, addr: &str, names: &[String], args: &Args) {
+    let admit = AdmitConfig {
+        low_watermark: args.get_usize("low-watermark", 1),
+        high_watermark: args.get_usize("high-watermark", 2),
+        ..AdmitConfig::default()
+    };
+    let cfg = ReactorConfig {
+        max_connections: args.get_usize("max-conns", 1024),
+        admit,
+        ..ReactorConfig::default()
+    };
+    let reactor = Reactor::spawn(addr, svc.clone(), cfg).expect("bind serving address");
+    println!("serving on {} (reactor up, admission control armed)", reactor.local_addr());
+    let serve_secs = args.get_u64("serve-secs", 0);
+
+    let t = Timer::new();
+    let mut tick = 0u64;
+    loop {
+        std::thread::sleep(Duration::from_secs(1));
+        tick += 1;
+        if tick % 5 == 0 {
+            let s = &reactor.stats;
+            println!(
+                "[{:>4}s] conns open {} (accepted {}, over-cap {}), frames rx/tx {}/{}, \
+                 shed {}, queue depth {}",
+                t.elapsed_s() as u64,
+                s.open.load(Ordering::Relaxed),
+                s.accepted.load(Ordering::Relaxed),
+                s.rejected_over_cap.load(Ordering::Relaxed),
+                s.frames_rx.load(Ordering::Relaxed),
+                s.frames_tx.load(Ordering::Relaxed),
+                s.sheds.load(Ordering::Relaxed),
+                svc.metrics.ingress_depth.load(Ordering::Relaxed)
+            );
+        }
+        if serve_secs > 0 && t.elapsed_s() >= serve_secs as f64 {
+            break;
+        }
+    }
+
+    let s = &reactor.stats;
+    println!(
+        "\nreactor: {} accepted, {} over-cap rejects, {} closed ({} idle), {} proto errors, \
+         {} shed busy",
+        s.accepted.load(Ordering::Relaxed),
+        s.rejected_over_cap.load(Ordering::Relaxed),
+        s.closed.load(Ordering::Relaxed),
+        s.idle_closed.load(Ordering::Relaxed),
+        s.proto_errors.load(Ordering::Relaxed),
+        s.sheds.load(Ordering::Relaxed),
+    );
+    let snap = svc.metrics.snapshot();
+    println!(
+        "fleet: {} completed, queue depth {}, {} shed, {} dry leases",
+        snap.completed, snap.ingress_queue_depth, snap.sheds, snap.pool_dry_events
+    );
+    let reports: Vec<ModelReport> = svc
+        .models()
+        .iter()
+        .zip(names)
+        .map(|(&fingerprint, name)| {
+            let row = snap.models.iter().find(|r| r.fingerprint == fingerprint);
+            ModelReport {
+                name: name.clone(),
+                fingerprint,
+                requests: row.map(|r| r.completed as usize).unwrap_or(0),
+                correct: None,
+                latencies_ms: Vec::new(),
+                bytes: 0,
+            }
+        })
+        .collect();
+    print_model_table(&reports, &snap.models);
+    reactor.shutdown();
+    if let Ok(svc) = Arc::try_unwrap(svc) {
+        svc.shutdown();
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     let n_requests = args.get_usize("requests", 48);
@@ -93,66 +209,95 @@ fn main() {
     // schedule).
     let deal_threads = args.get_usize("deal-threads", 1);
     let k = args.get_u64("k", 12) as u32;
+    let synthetic = args.flag("synthetic");
     // Optional standalone dealer (see examples/dealer_serve.rs): the
     // material pool then refills over TCP instead of dealing inline —
     // the dealer must serve *both* registered models.
     let dealer_addr = args.get("dealer").map(|s| s.to_string());
 
-    let dir = ArtifactDir::discover().expect("run `make artifacts` first");
-    let net = load_weights(&dir.path("weights.bin")).expect("weights");
-    let ds = load_dataset(&dir.path("dataset.bin")).expect("dataset");
-    println!(
-        "loaded {}: {} linear layers, {} ReLUs/inference, {} test images",
-        net.name,
-        net.layers.len(),
-        net.total_relus(),
-        ds.n
-    );
-    let q_acc = dir.manifest_f64("cnn_quantized_acc").unwrap_or(0.0);
-    println!("plaintext quantized accuracy (exact ReLU): {:.2}%", q_acc * 100.0);
+    // Model set + input source: the trained demo CNN from artifacts/, or
+    // small in-process random plans (--synthetic, no artifacts needed).
+    let (models_cfg, dataset) = if synthetic {
+        let (models, in_dim) = synthetic_models(k);
+        println!(
+            "synthetic mode: 2 random plans ({} → … → 10), no artifacts",
+            in_dim
+        );
+        (models, None)
+    } else {
+        let dir = ArtifactDir::discover().expect("run `make artifacts` (or pass --synthetic)");
+        let net = load_weights(&dir.path("weights.bin")).expect("weights");
+        let ds = load_dataset(&dir.path("dataset.bin")).expect("dataset");
+        println!(
+            "loaded {}: {} linear layers, {} ReLUs/inference, {} test images",
+            net.name,
+            net.layers.len(),
+            net.total_relus(),
+            ds.n
+        );
+        let q_acc = dir.manifest_f64("cnn_quantized_acc").unwrap_or(0.0);
+        println!("plaintext quantized accuracy (exact ReLU): {:.2}%", q_acc * 100.0);
+        // Two models over the same trained weights: Circa's truncated
+        // stochastic sign and the baseline ReLU GC. One coordinator, one
+        // material pool (per-model shards), one worker fabric.
+        let circa_plan = Arc::new(NetworkPlan {
+            linears: net.linears(),
+            variant: ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero },
+            rescale_bits: net.rescale_bits(),
+        });
+        let base_plan = Arc::new(NetworkPlan {
+            linears: net.linears(),
+            variant: ReluVariant::BaselineRelu,
+            rescale_bits: net.rescale_bits(),
+        });
+        (
+            vec![
+                (circa_plan, ModelConfig::default()),
+                (base_plan, ModelConfig::default()),
+            ],
+            Some(ds),
+        )
+    };
+    let in_dim = models_cfg[0].0.linears[0].in_dim();
 
-    // Two models over the same trained weights: Circa's truncated
-    // stochastic sign and the baseline ReLU GC. One coordinator, one
-    // material pool (per-model shards), one worker fabric.
-    let circa_plan = Arc::new(NetworkPlan {
-        linears: net.linears(),
-        variant: ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero },
-        rescale_bits: net.rescale_bits(),
-    });
-    let base_plan = Arc::new(NetworkPlan {
-        linears: net.linears(),
-        variant: ReluVariant::BaselineRelu,
-        rescale_bits: net.rescale_bits(),
-    });
-    let svc = PiService::start_multi(
-        vec![
-            (circa_plan, ModelConfig::default()),
-            (base_plan, ModelConfig::default()),
-        ],
-        ServiceConfig {
+    let svc = Arc::new(
+        PiService::start_multi(models_cfg, ServiceConfig {
             workers,
             pool_target: 2 * n_requests.min(64),
             pool_dealers: workers,
             deal_threads,
             dealer_addr,
             ..Default::default()
-        },
-    )
-    .expect("start multi-model service");
+        })
+        .expect("start multi-model service"),
+    );
     let models = svc.models();
     let names =
-        [format!("Circa ~sign_k (k={k}, PosZero)"), "baseline ReLU GC (Delphi/Gazelle)".into()];
+        vec![format!("Circa ~sign_k (k={k}, PosZero)"), "baseline ReLU GC (Delphi/Gazelle)".into()];
     eprintln!("warming material banks (both models) ...");
     svc.warmup(n_requests.min(16));
 
+    if let Some(addr) = args.get("listen") {
+        run_listen(svc, addr, &names, &args);
+        return;
+    }
+
+    // In-process drive: interleave submissions across the two models —
+    // one fleet, mixed traffic — and tally per model.
+    let mut rng = Rng::new(7);
+    let input_for = |i: usize, rng: &mut Rng| -> Vec<Fp> {
+        match &dataset {
+            Some(ds) => ds.image(i % ds.n).to_vec(),
+            None => (0..in_dim).map(|_| Fp::from_i64(rng.below(4000) as i64 - 2000)).collect(),
+        }
+    };
     let t = Timer::new();
-    // Interleave submissions across the two models — one fleet, mixed
-    // traffic — and tally per model.
     let rxs: Vec<(usize, usize, _)> = (0..2 * n_requests)
         .map(|i| {
             let m = i % 2;
-            let idx = (i / 2) % ds.n;
-            (m, idx, svc.submit_to(models[m], ds.image(idx).to_vec()).expect("known model"))
+            let idx = i / 2;
+            let input = input_for(idx, &mut rng);
+            (m, idx, svc.submit_to(models[m], input).expect("known model"))
         })
         .collect();
     let mut reports: Vec<ModelReport> = models
@@ -162,7 +307,7 @@ fn main() {
             name,
             fingerprint,
             requests: 0,
-            correct: 0,
+            correct: dataset.as_ref().map(|_| 0),
             latencies_ms: Vec::new(),
             bytes: 0,
         })
@@ -178,8 +323,10 @@ fn main() {
             .unwrap();
         let rep = &mut reports[m];
         rep.requests += 1;
-        if pred == ds.labels[idx] {
-            rep.correct += 1;
+        if let (Some(ds), Some(correct)) = (&dataset, &mut rep.correct) {
+            if pred == ds.labels[idx % ds.n] {
+                *correct += 1;
+            }
         }
         rep.latencies_ms.push((resp.queue_us + resp.online_us) as f64 / 1e3);
         rep.bytes += resp.bytes;
@@ -195,10 +342,13 @@ fn main() {
         2.0 * n_requests as f64 / wall
     );
     println!(
-        "fleet: produced {} sessions, dry leases {}, mis-tagged units dropped {}",
+        "fleet: produced {} sessions, dry leases {}, mis-tagged units dropped {}, \
+         queue depth {}, shed {}",
         svc.pool.produced(),
         snap.pool_dry_events,
-        snap.fp_mismatch_drops
+        snap.fp_mismatch_drops,
+        snap.ingress_queue_depth,
+        snap.sheds
     );
     if snap.remote_refills > 0 {
         println!(
@@ -210,5 +360,7 @@ fn main() {
         );
     }
     print_model_table(&reports, &snap.models);
-    svc.shutdown();
+    if let Ok(svc) = Arc::try_unwrap(svc) {
+        svc.shutdown();
+    }
 }

@@ -18,6 +18,13 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub pool_dry_events: AtomicU64,
     pub bytes_online: AtomicU64,
+    /// Requests currently queued in the bounded ingress channel (gauge:
+    /// incremented on admit, decremented as the batcher drains) — the
+    /// queue-depth signal the admission controller samples.
+    pub ingress_depth: AtomicU64,
+    /// Requests shed with an explicit `Busy` by admission control
+    /// (bank-dry or queue-over-limit), fleet-wide.
+    pub sheds: AtomicU64,
     /// Remote-dealer fetch round trips completed (layer-granular rounds
     /// included).
     pub remote_refills: AtomicU64,
@@ -70,6 +77,7 @@ struct ModelStats {
     completed: u64,
     bytes_online: u64,
     pool_dry_events: u64,
+    sheds: u64,
     deal_relus: u64,
     deal_wall_us: u64,
     remote_refills: u64,
@@ -92,6 +100,8 @@ pub struct ModelSnapshot {
     pub completed: u64,
     pub bytes_online: u64,
     pub pool_dry_events: u64,
+    /// Requests for this model shed with `Busy` by admission control.
+    pub sheds: u64,
     pub online_p50_us: u64,
     pub online_p99_us: u64,
     pub online_mean_us: f64,
@@ -115,6 +125,10 @@ pub struct Snapshot {
     pub completed: u64,
     pub pool_dry_events: u64,
     pub bytes_online: u64,
+    /// Requests sitting in the bounded ingress queue at snapshot time.
+    pub ingress_queue_depth: u64,
+    /// Requests shed with `Busy` by admission control, fleet-wide.
+    pub sheds: u64,
     pub online_p50_us: u64,
     pub online_p99_us: u64,
     pub online_mean_us: f64,
@@ -188,6 +202,13 @@ impl Metrics {
             m.online_us.record_us(online_us);
             m.total_us.record_us(queue_us + online_us);
         });
+    }
+
+    /// Record one admission-control shed of a request for `model` (the
+    /// request was answered `Busy`, never queued).
+    pub fn record_shed(&self, model: u64) {
+        self.sheds.fetch_add(1, Ordering::Relaxed);
+        self.with_model(model, |m| m.sheds += 1);
     }
 
     /// Record a pool-dry lease of `model`: bumps the counters and feeds
@@ -293,6 +314,7 @@ impl Metrics {
                 completed: m.completed,
                 bytes_online: m.bytes_online,
                 pool_dry_events: m.pool_dry_events,
+                sheds: m.sheds,
                 online_p50_us: m.online_us.percentile_us(50.0),
                 online_p99_us: m.online_us.percentile_us(99.0),
                 online_mean_us: m.online_us.mean_us(),
@@ -314,6 +336,8 @@ impl Metrics {
             completed: self.completed.load(Ordering::Relaxed),
             pool_dry_events: self.pool_dry_events.load(Ordering::Relaxed),
             bytes_online: self.bytes_online.load(Ordering::Relaxed),
+            ingress_queue_depth: self.ingress_depth.load(Ordering::Relaxed),
+            sheds: self.sheds.load(Ordering::Relaxed),
             online_p50_us: g.online_us.percentile_us(50.0),
             online_p99_us: g.online_us.percentile_us(99.0),
             online_mean_us: g.online_us.mean_us(),
@@ -456,6 +480,22 @@ mod tests {
         assert!(s.batch_req_p99_us >= 3_000);
         assert!((s.models[0].batch_size_mean - 6.0).abs() < 1e-9);
         assert!(s.models[0].batch_req_p99_us >= 3_000);
+    }
+
+    #[test]
+    fn sheds_and_queue_gauge_recorded() {
+        let m = Metrics::default();
+        m.ingress_depth.fetch_add(3, Ordering::Relaxed);
+        m.record_shed(M);
+        m.record_shed(M);
+        m.record_shed(7);
+        let s = m.snapshot();
+        assert_eq!(s.ingress_queue_depth, 3);
+        assert_eq!(s.sheds, 3);
+        let row = s.models.iter().find(|r| r.fingerprint == M).unwrap();
+        assert_eq!(row.sheds, 2);
+        let other = s.models.iter().find(|r| r.fingerprint == 7).unwrap();
+        assert_eq!(other.sheds, 1);
     }
 
     #[test]

@@ -53,13 +53,23 @@
 //! * [`metrics`] — latency histograms (online / queue / total /
 //!   dry-deal), throughput counters, pool-dry counters, batch-shape
 //!   histograms (requests per dispatched batch, amortized per-request
-//!   share of the batch wall), and a **per-model row** (bank depths,
-//!   refill counters, latency histograms) for every served plan.
+//!   share of the batch wall), the live ingress-queue depth gauge and
+//!   shed counters consumed by admission control, and a **per-model
+//!   row** (bank depths, refill counters, latency histograms, sheds)
+//!   for every served plan.
 //! * [`service`] — the assembled `PiService` front-end:
 //!   [`PiService::start_multi`] serves a list of plans;
 //!   [`PiService::start`] is the single-plan thin wrapper (dealt bytes
-//!   identical to the pre-registry path for the same seed). Used by
-//!   `examples/serve_pi.rs` and the `circa serve` CLI.
+//!   identical to the pre-registry path for the same seed). Intake is
+//!   bounded and non-panicking: `submit_to` admits with `try_send`
+//!   against `ServiceConfig::max_queue` (overload is an explicit
+//!   [`service::SubmitError::QueueFull`], a stopped service an explicit
+//!   [`service::SubmitError::Stopped`]) and returns a
+//!   [`service::ResponseHandle`] with blocking *and* nonblocking
+//!   completion — the latter is what the [`crate::net::reactor`] polls
+//!   to multiplex thousands of in-flight inferences from one thread.
+//!   Used by `examples/serve_pi.rs` (in-process or `--listen` network
+//!   mode) and the `circa serve` CLI.
 
 pub mod batcher;
 pub mod metrics;
@@ -71,4 +81,4 @@ pub mod service;
 pub use metrics::{Metrics, ModelSnapshot};
 pub use pool::{Lease, MaterialPool, RefillSource};
 pub use registry::{model_base_seed, ModelEntry, ModelRegistry};
-pub use service::{ModelConfig, PiService, ServiceConfig};
+pub use service::{ModelConfig, PiService, ResponseHandle, ServiceConfig, SubmitError};

@@ -1,20 +1,33 @@
 //! The assembled PI service: batcher thread + worker pool + per-model
 //! material bank, fronted by a submit/await handle that routes each
 //! request to a registered model.
+//!
+//! Submission is **bounded and non-panicking**: the ingress queue is a
+//! `sync_channel(max_queue)` admitted with `try_send`, so a caller sees
+//! [`SubmitError::QueueFull`] instead of unbounded memory growth, and a
+//! stopped service surfaces as [`SubmitError::Stopped`] /
+//! a recv error on the [`ResponseHandle`] — never an `expect` panic.
+//! Completion is a [`ResponseHandle`] with both blocking (`recv`) and
+//! nonblocking (`try_recv`) paths; the latter is what lets the
+//! [`crate::net::reactor`] poll thousands of in-flight inferences from
+//! one thread.
 
 use super::batcher::{next_model_batches, BatchPolicy, ModelBatch};
 use super::metrics::Metrics;
 use super::pool::{MaterialPool, RefillSource};
 use super::registry::{model_base_seed, ModelRegistry};
 use super::router::{spawn_workers, Request, Response};
+use crate::ensure;
 use crate::field::Fp;
 use crate::protocol::server::NetworkPlan;
-use crate::util::error::Result;
+use crate::util::error::{Error, Result};
 use crate::wire::dealer::RemoteDealer;
-use crate::{bail, ensure};
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
+};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -45,6 +58,12 @@ pub struct ServiceConfig {
     pub dealer_addr: Option<String>,
     /// Per-layer entries fetched per remote refill round trip.
     pub refill_batch: usize,
+    /// Bound on the ingress queue: [`PiService::submit_to`] admits with
+    /// `try_send` against a channel of this capacity and reports
+    /// [`SubmitError::QueueFull`] above it — in-process callers get the
+    /// same backpressure contract the network admission controller gives
+    /// remote clients.
+    pub max_queue: usize,
 }
 
 impl Default for ServiceConfig {
@@ -58,6 +77,70 @@ impl Default for ServiceConfig {
             seed: 0xC1CA,
             dealer_addr: None,
             refill_batch: 4,
+            max_queue: 1024,
+        }
+    }
+}
+
+/// Why a submission was not queued. `QueueFull` and `Stopped` are
+/// backpressure/lifecycle conditions a serving front end turns into
+/// explicit `Busy`/`Error` frames; `UnknownModel` is a caller bug.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The fingerprint is not registered with this service.
+    UnknownModel(u64),
+    /// The bounded ingress queue is at capacity — retry later.
+    QueueFull { capacity: usize },
+    /// The service has been halted or shut down.
+    Stopped,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::UnknownModel(fp) => {
+                write!(f, "model {fp:#018x} is not registered with this service")
+            }
+            SubmitError::QueueFull { capacity } => {
+                write!(f, "ingress queue full ({capacity} requests)")
+            }
+            SubmitError::Stopped => write!(f, "service is stopped"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+impl From<SubmitError> for Error {
+    fn from(e: SubmitError) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Completion handle for one submitted inference. Blocking callers use
+/// [`Self::recv`]; the reactor polls [`Self::try_recv`] so an in-flight
+/// inference never pins a thread. A dead service (halted, or its worker
+/// fabric gone) surfaces as an `Err`, not a panic.
+pub struct ResponseHandle {
+    rx: Receiver<Response>,
+}
+
+impl ResponseHandle {
+    /// Block until the response arrives. `Err` if the service stopped
+    /// before responding.
+    pub fn recv(&self) -> Result<Response> {
+        self.rx.recv().map_err(|_| Error::msg("service stopped before responding"))
+    }
+
+    /// Nonblocking poll: `Ok(Some)` on arrival, `Ok(None)` while in
+    /// flight, `Err` if the service stopped before responding.
+    pub fn try_recv(&self) -> Result<Option<Response>> {
+        match self.rx.try_recv() {
+            Ok(r) => Ok(Some(r)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => {
+                Err(Error::msg("service stopped before responding"))
+            }
         }
     }
 }
@@ -84,7 +167,10 @@ impl Default for ModelConfig {
 
 /// A running PI service.
 pub struct PiService {
-    ingress: Sender<Request>,
+    /// Bounded intake; `None` once halted (submissions then report
+    /// [`SubmitError::Stopped`]).
+    ingress: Mutex<Option<SyncSender<Request>>>,
+    max_queue: usize,
     pub metrics: Arc<Metrics>,
     pub pool: Arc<MaterialPool>,
     registry: Arc<ModelRegistry>,
@@ -117,6 +203,7 @@ impl PiService {
     ) -> Result<Self> {
         ensure!(!models.is_empty(), "start_multi needs at least one model");
         cfg.batch.validate()?;
+        ensure!(cfg.max_queue >= 1, "max_queue must be >= 1 (got 0)");
         let mut registry = ModelRegistry::new();
         for (plan, mc) in models {
             let manifest = crate::wire::codec::SessionManifest::of_plan(&plan);
@@ -149,11 +236,20 @@ impl PiService {
             cfg.deal_threads,
         ));
 
-        let (ingress, ingress_rx): (Sender<Request>, Receiver<Request>) = channel();
+        // Bounded intake: submit_to admits with try_send, so the queue
+        // can never hold more than max_queue requests and overload is an
+        // explicit QueueFull at the submitter, not unbounded memory.
+        let (ingress, ingress_rx): (SyncSender<Request>, Receiver<Request>) =
+            sync_channel(cfg.max_queue);
         let (batch_tx, batch_rx): (Sender<ModelBatch>, Receiver<ModelBatch>) = channel();
         let policy = cfg.batch;
+        let batcher_metrics = metrics.clone();
         let batcher = std::thread::spawn(move || {
             while let Some(batches) = next_model_batches(&ingress_rx, policy) {
+                // Keep the ingress-depth gauge honest: these requests
+                // left the bounded queue for dispatch.
+                let pulled: u64 = batches.iter().map(|b| b.requests.len() as u64).sum();
+                batcher_metrics.ingress_depth.fetch_sub(pulled, Ordering::Relaxed);
                 for batch in batches {
                     if batch_tx.send(batch).is_err() {
                         return;
@@ -165,7 +261,8 @@ impl PiService {
             spawn_workers(cfg.workers, batch_rx, pool.clone(), metrics.clone(), cfg.seed ^ 0x77);
 
         Ok(Self {
-            ingress,
+            ingress: Mutex::new(Some(ingress)),
+            max_queue: cfg.max_queue,
             metrics,
             pool,
             registry,
@@ -187,47 +284,70 @@ impl PiService {
         self.pool.wait_ready(n);
     }
 
-    /// Submit one inference to a registered model; returns a receiver
-    /// for the response, or an error for an unknown fingerprint
+    /// Submit one inference to a registered model; returns a completion
+    /// handle, or a [`SubmitError`] when the fingerprint is unknown
     /// (validated here so the worker path can trust every queued
-    /// request).
-    pub fn submit_to(&self, model: u64, input: Vec<Fp>) -> Result<Receiver<Response>> {
+    /// request), the bounded queue is full, or the service is stopped.
+    /// Never blocks and never panics.
+    pub fn submit_to(
+        &self,
+        model: u64,
+        input: Vec<Fp>,
+    ) -> std::result::Result<ResponseHandle, SubmitError> {
         if self.registry.get(model).is_none() {
-            bail!("model {model:#018x} is not registered with this service");
+            return Err(SubmitError::UnknownModel(model));
         }
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        let _ = self.ingress.send(Request {
-            id,
-            model,
-            input,
-            enqueued: Instant::now(),
-            reply: tx,
-        });
-        Ok(rx)
+        let req = Request { id, model, input, enqueued: Instant::now(), reply: tx };
+        let guard = self.ingress.lock().unwrap();
+        let Some(sender) = guard.as_ref() else {
+            return Err(SubmitError::Stopped);
+        };
+        match sender.try_send(req) {
+            Ok(()) => {
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                self.metrics.ingress_depth.fetch_add(1, Ordering::Relaxed);
+                Ok(ResponseHandle { rx })
+            }
+            Err(TrySendError::Full(_)) => {
+                Err(SubmitError::QueueFull { capacity: self.max_queue })
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Stopped),
+        }
     }
 
     /// Submit one inference to the first registered model (single-model
-    /// convenience); returns a receiver for the response.
-    pub fn submit(&self, input: Vec<Fp>) -> Receiver<Response> {
+    /// convenience); returns a completion handle.
+    pub fn submit(&self, input: Vec<Fp>) -> std::result::Result<ResponseHandle, SubmitError> {
         let model = self.registry.entries()[0].fingerprint();
-        self.submit_to(model, input).expect("default model is registered")
+        self.submit_to(model, input)
     }
 
-    /// Submit to a model and wait (convenience).
+    /// Submit to a model and wait (convenience). `Err` on submission
+    /// rejection or if the service stops before responding.
     pub fn infer_on(&self, model: u64, input: Vec<Fp>) -> Result<Response> {
-        Ok(self.submit_to(model, input)?.recv().expect("service alive"))
+        self.submit_to(model, input)?.recv()
     }
 
     /// Submit to the default model and wait (convenience).
-    pub fn infer(&self, input: Vec<Fp>) -> Response {
-        self.submit(input).recv().expect("service alive")
+    pub fn infer(&self, input: Vec<Fp>) -> Result<Response> {
+        self.submit(input)?.recv()
+    }
+
+    /// Stop intake without consuming the handle: subsequent submissions
+    /// report [`SubmitError::Stopped`], queued work drains, the pool's
+    /// dealer threads stop. Shared holders (e.g. a reactor's `Arc`) can
+    /// call this; the owner still runs [`Self::shutdown`] to join.
+    /// Idempotent.
+    pub fn halt(&self) {
+        self.ingress.lock().unwrap().take();
+        self.pool.stop();
     }
 
     /// Graceful shutdown: stop intake, drain workers, stop dealers.
     pub fn shutdown(mut self) {
-        drop(self.ingress);
+        self.halt();
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
         }
@@ -278,7 +398,7 @@ mod tests {
         let input: Vec<Fp> = (0..6).map(|i| Fp::from_i64(1000 + i)).collect();
         let want = oracle(&p, &input);
         for _ in 0..6 {
-            let resp = svc.infer(input.clone());
+            let resp = svc.infer(input.clone()).unwrap();
             assert_eq!(resp.logits, want);
             assert!(resp.online_us > 0);
         }
@@ -297,14 +417,85 @@ mod tests {
             ..Default::default()
         });
         let rxs: Vec<_> = (0..12)
-            .map(|i| svc.submit((0..6).map(|j| Fp::from_i64((i * 10 + j) as i64)).collect()))
+            .map(|i| {
+                svc.submit((0..6).map(|j| Fp::from_i64((i * 10 + j) as i64)).collect())
+                    .unwrap()
+            })
             .collect();
         for rx in rxs {
             let r = rx.recv().unwrap();
             assert_eq!(r.logits.len(), 3);
         }
-        assert_eq!(svc.metrics.snapshot().completed, 12);
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.completed, 12);
+        assert_eq!(snap.ingress_queue_depth, 0, "gauge drains with the queue");
         svc.shutdown();
+    }
+
+    #[test]
+    fn halted_service_errors_cleanly_not_panics() {
+        let svc = PiService::start(plan(ReluVariant::BaselineRelu), ServiceConfig {
+            workers: 1,
+            pool_target: 2,
+            pool_dealers: 1,
+            ..Default::default()
+        });
+        let input: Vec<Fp> = (0..6).map(|i| Fp::from_i64(100 + i)).collect();
+        // Alive: a submission round-trips.
+        assert!(svc.infer(input.clone()).is_ok());
+        // Kill the service out from under its callers.
+        svc.halt();
+        svc.halt(); // idempotent
+        assert_eq!(svc.submit(input.clone()).unwrap_err(), SubmitError::Stopped);
+        assert_eq!(
+            svc.submit_to(svc.models()[0], input.clone()).unwrap_err(),
+            SubmitError::Stopped
+        );
+        let err = svc.infer(input).unwrap_err();
+        assert!(err.to_string().contains("stopped"), "{err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn bounded_ingress_sheds_with_queue_full() {
+        // Capacity-1 ingress: a tight submission burst must hit the
+        // bounded queue faster than the batcher drains it and surface
+        // QueueFull (the try_send admission contract) instead of growing
+        // without bound.
+        let svc = PiService::start(plan(ReluVariant::BaselineRelu), ServiceConfig {
+            workers: 1,
+            pool_target: 2,
+            pool_dealers: 1,
+            max_queue: 1,
+            ..Default::default()
+        });
+        let input: Vec<Fp> = (0..6).map(|i| Fp::from_i64(100 + i)).collect();
+        let mut handles = Vec::new();
+        let mut saw_full = false;
+        for _ in 0..200_000 {
+            match svc.submit(input.clone()) {
+                Ok(h) => handles.push(h),
+                Err(SubmitError::QueueFull { capacity }) => {
+                    assert_eq!(capacity, 1);
+                    saw_full = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert!(saw_full, "200k burst submissions never saw the capacity-1 queue full");
+        // Everything that was admitted completes normally.
+        for h in handles {
+            assert_eq!(h.recv().unwrap().logits.len(), 3);
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn zero_max_queue_rejected_at_start() {
+        let cfg = ServiceConfig { max_queue: 0, ..Default::default() };
+        let models = vec![(plan(ReluVariant::BaselineRelu), ModelConfig::default())];
+        assert!(PiService::start_multi(models, cfg).is_err());
     }
 
     #[test]

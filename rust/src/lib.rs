@@ -37,6 +37,9 @@
 //!   request batcher, router, metrics.
 //! * [`wire`] — binary codec + framed transport for offline material and
 //!   the standalone dealer service (dealer/server process separation).
+//! * [`net`] — the client-facing serving tier: a std-only nonblocking
+//!   readiness reactor, the versioned client protocol, and bank-depth
+//!   admission control (queue when healthy, shed `Busy` when dry).
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX
 //!   model (`artifacts/*.hlo.txt`) for accuracy experiments.
 //! * [`bench_harness`] — shared measurement/reporting used by
@@ -51,6 +54,7 @@ pub mod circuits;
 pub mod coordinator;
 pub mod field;
 pub mod gc;
+pub mod net;
 pub mod nn;
 pub mod ot;
 pub mod prf;

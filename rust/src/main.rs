@@ -90,7 +90,7 @@ fn serve(args: &Args) -> Result<()> {
     let rxs: Vec<_> = (0..n)
         .map(|_| {
             let idx = rng.below_usize(ds.n);
-            (idx, svc.submit(ds.image(idx).to_vec()))
+            (idx, svc.submit(ds.image(idx).to_vec()).expect("submit"))
         })
         .collect();
     let mut correct = 0;

@@ -1,0 +1,105 @@
+//! Shared nonblocking-accept idiom: a polled listener plus the
+//! stop-nudge that makes `stop()` prompt even on unspecified binds.
+//!
+//! Both TCP accept loops in the crate — the dealer's thread-per-
+//! connection loop ([`crate::wire::dealer::spawn_tcp_dealer_multi`])
+//! and the serving reactor ([`super::reactor`]) — need the same three
+//! things: a listener that never blocks the owning thread, a
+//! `WouldBlock`-is-not-an-error accept, and a way for `stop()` to wake
+//! a loop that might otherwise sleep through its poll interval. This
+//! module is that idiom, written once.
+
+use crate::util::error::{Context, Result};
+use std::net::{Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+/// A nonblocking `TcpListener` with poll-style accept semantics.
+pub struct PollingListener {
+    listener: TcpListener,
+    local: SocketAddr,
+}
+
+impl PollingListener {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and switch the listener to
+    /// nonblocking mode.
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr().context("local addr")?;
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        Ok(Self { listener, local })
+    }
+
+    /// The bound address (useful with a `:0` ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Accept one pending connection, or `Ok(None)` when none is queued
+    /// (`WouldBlock`). The accepted stream inherits nothing: callers
+    /// decide blocking vs nonblocking per connection.
+    pub fn accept(&self) -> Result<Option<(TcpStream, SocketAddr)>> {
+        match self.listener.accept() {
+            Ok(pair) => Ok(Some(pair)),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e).context("accept"),
+        }
+    }
+}
+
+/// Poke a listener's accept queue so a poll loop parked in its sleep
+/// re-checks its stop flag promptly. The nudge targets loopback
+/// explicitly when the bind address is unspecified: `0.0.0.0` (or `::`)
+/// is not a connectable destination on every platform, and a failed
+/// nudge against a *blocking* accept historically left `stop()` joined
+/// forever. Best-effort: the connect result is discarded because the
+/// polled loops observe the stop flag within one interval regardless.
+pub fn stop_nudge(addr: SocketAddr) {
+    let nudge = if addr.ip().is_unspecified() {
+        match addr {
+            SocketAddr::V4(_) => SocketAddr::from((Ipv4Addr::LOCALHOST, addr.port())),
+            SocketAddr::V6(_) => SocketAddr::from((Ipv6Addr::LOCALHOST, addr.port())),
+        }
+    } else {
+        addr
+    };
+    let _ = TcpStream::connect_timeout(&nudge, Duration::from_millis(200));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accept_is_nonblocking_and_delivers_connections() {
+        let l = PollingListener::bind("127.0.0.1:0").unwrap();
+        // Nothing queued: Ok(None), immediately.
+        assert!(l.accept().unwrap().is_none());
+        let addr = l.local_addr();
+        let _client = TcpStream::connect(addr).unwrap();
+        // The connection lands within a bounded number of polls.
+        let mut got = None;
+        for _ in 0..200 {
+            if let Some(pair) = l.accept().unwrap() {
+                got = Some(pair);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(got.is_some(), "queued connection never surfaced");
+    }
+
+    #[test]
+    fn stop_nudge_reaches_unspecified_bind() {
+        let l = PollingListener::bind("0.0.0.0:0").unwrap();
+        stop_nudge(l.local_addr());
+        let mut got = false;
+        for _ in 0..200 {
+            if l.accept().unwrap().is_some() {
+                got = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(got, "nudge connection never reached the unspecified bind");
+    }
+}

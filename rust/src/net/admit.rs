@@ -1,0 +1,270 @@
+//! Bank-depth admission control: turn the pool's material gauges into
+//! an explicit queue-or-shed decision.
+//!
+//! Circa's serving economics invert the usual picture: the online phase
+//! is cheap, so the scarce resource is **pre-dealt offline material**
+//! (one session per inference). When a model's banks run dry, serving
+//! it anyway means a dry inline deal on the worker — tail latency
+//! quietly explodes. The admission controller samples each model's
+//! assemblable-session depth ([`MaterialPool::banked_model`]) and the
+//! ingress queue gauge ([`Metrics::ingress_depth`]) and decides, per
+//! request, *before* queueing:
+//!
+//! * **Admit** while the model's bank is above the low watermark and
+//!   the ingress queue is under its limit — the request queues with
+//!   bounded depth.
+//! * **Shed** with an explicit [`Decision::Shed`] (the reactor answers
+//!   a `Busy` frame carrying a retry-after hint) when the model's bank
+//!   has drained to the low watermark or the queue is over limit.
+//!   Hysteresis: once shedding, a model readmits only when its bank
+//!   recovers to the high watermark, so the controller doesn't flap on
+//!   the lease/refill race at the boundary.
+//!
+//! Bank depths are sampled at most once per `sample_interval` per model
+//! (the depth read takes the pool's shard lock; the reactor asks on
+//! every request), and the whole decision path is nonblocking — the
+//! reactor thread never waits on dealing.
+//!
+//! `low_watermark` semantics: shed while `depth < low_watermark`, so
+//! `0` disables bank-depth shedding entirely (depth is never negative)
+//! and the default `1` sheds exactly when the bank is empty.
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::MaterialPool;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Watermarks and limits for [`AdmissionController`].
+#[derive(Clone, Copy, Debug)]
+pub struct AdmitConfig {
+    /// Shed a model's requests while its assemblable-session depth is
+    /// **below** this (0 disables bank-depth shedding; the default 1
+    /// sheds exactly the dry bank).
+    pub low_watermark: usize,
+    /// Once shedding, readmit only at or above this depth (≥
+    /// `low_watermark`; the gap is the hysteresis band).
+    pub high_watermark: usize,
+    /// Shed any request while the ingress queue gauge is at or over
+    /// this. Keep it at or under the service's `max_queue` so shedding
+    /// engages before `try_send` starts failing.
+    pub max_queue: usize,
+    /// Retry hint carried on `Busy` frames, milliseconds.
+    pub retry_after_ms: u32,
+    /// Bank-depth sampling throttle (per model).
+    pub sample_interval: Duration,
+}
+
+impl Default for AdmitConfig {
+    fn default() -> Self {
+        Self {
+            low_watermark: 1,
+            high_watermark: 2,
+            max_queue: 1024,
+            retry_after_ms: 50,
+            sample_interval: Duration::from_millis(2),
+        }
+    }
+}
+
+/// The verdict for one request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Queue it (bounded by the service's `max_queue`).
+    Admit,
+    /// Refuse it with an explicit `Busy` carrying this hint.
+    Shed { retry_after_ms: u32, reason: &'static str },
+}
+
+#[derive(Default)]
+struct ModelAdmit {
+    last_sample: Option<Instant>,
+    depth: usize,
+    /// Hysteresis latch: true between "fell below low" and "recovered
+    /// to high".
+    shedding: bool,
+}
+
+/// Per-model admission state + counters. One instance per reactor;
+/// internally locked so stats readers on other threads stay safe.
+pub struct AdmissionController {
+    cfg: AdmitConfig,
+    state: Mutex<BTreeMap<u64, ModelAdmit>>,
+    admits: AtomicU64,
+    sheds: AtomicU64,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmitConfig) -> Self {
+        let cfg = AdmitConfig { high_watermark: cfg.high_watermark.max(cfg.low_watermark), ..cfg };
+        Self {
+            cfg,
+            state: Mutex::new(BTreeMap::new()),
+            admits: AtomicU64::new(0),
+            sheds: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &AdmitConfig {
+        &self.cfg
+    }
+
+    /// Requests admitted so far.
+    pub fn admits(&self) -> u64 {
+        self.admits.load(Ordering::Relaxed)
+    }
+
+    /// Requests shed so far (queue-limit and bank-dry combined).
+    pub fn sheds(&self) -> u64 {
+        self.sheds.load(Ordering::Relaxed)
+    }
+
+    /// Decide one request for `model`, sampling the pool's bank depth
+    /// (throttled) and the metrics queue gauge. Nonblocking apart from
+    /// two short uncontended locks.
+    pub fn decide(&self, model: u64, pool: &MaterialPool, metrics: &Metrics) -> Decision {
+        if metrics.ingress_depth.load(Ordering::Relaxed) >= self.cfg.max_queue as u64 {
+            self.sheds.fetch_add(1, Ordering::Relaxed);
+            return Decision::Shed {
+                retry_after_ms: self.cfg.retry_after_ms,
+                reason: "ingress queue over limit",
+            };
+        }
+        if self.cfg.low_watermark > 0 {
+            let mut state = self.state.lock().unwrap();
+            let m = state.entry(model).or_default();
+            let stale = match m.last_sample {
+                None => true,
+                Some(t) => t.elapsed() >= self.cfg.sample_interval,
+            };
+            if stale {
+                m.depth = pool.banked_model(model);
+                m.last_sample = Some(Instant::now());
+            }
+            if m.shedding {
+                if m.depth >= self.cfg.high_watermark {
+                    m.shedding = false;
+                }
+            } else if m.depth < self.cfg.low_watermark {
+                m.shedding = true;
+            }
+            if m.shedding {
+                self.sheds.fetch_add(1, Ordering::Relaxed);
+                return Decision::Shed {
+                    retry_after_ms: self.cfg.retry_after_ms,
+                    reason: "model material bank dry",
+                };
+            }
+        }
+        self.admits.fetch_add(1, Ordering::Relaxed);
+        Decision::Admit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::ReluVariant;
+    use crate::protocol::linear::{LinearOp, Matrix};
+    use crate::protocol::server::NetworkPlan;
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn pool_with_bank(target: usize) -> (Arc<MaterialPool>, u64) {
+        let mut rng = Rng::new(3);
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(4, 6, 10, &mut rng)),
+            Arc::new(Matrix::random(3, 4, 10, &mut rng)),
+        ];
+        let plan = Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu));
+        let pool = Arc::new(MaterialPool::start(plan, target, 1, 7));
+        let fp = pool.registry().entries()[0].fingerprint();
+        (pool, fp)
+    }
+
+    fn zero_interval() -> AdmitConfig {
+        // Sample every decision: the tests drain the bank and expect the
+        // controller to see it immediately.
+        AdmitConfig { sample_interval: Duration::from_secs(0), ..Default::default() }
+    }
+
+    #[test]
+    fn admits_with_banked_material_then_sheds_dry() {
+        let (pool, fp) = pool_with_bank(4);
+        pool.wait_ready(4);
+        // Freeze refill so the drain below is permanent.
+        pool.stop();
+        let ctl = AdmissionController::new(zero_interval());
+        let metrics = Metrics::default();
+        assert_eq!(ctl.decide(fp, &pool, &metrics), Decision::Admit);
+
+        let mut rng = Rng::new(11);
+        while pool.banked_model(fp) > 0 {
+            let lease = pool.lease_model(fp, &mut rng);
+            assert!(!lease.was_dry);
+        }
+        match ctl.decide(fp, &pool, &metrics) {
+            Decision::Shed { reason, retry_after_ms } => {
+                assert!(reason.contains("dry"), "{reason}");
+                assert!(retry_after_ms > 0);
+            }
+            d => panic!("dry bank admitted: {d:?}"),
+        }
+        assert_eq!(ctl.admits(), 1);
+        assert_eq!(ctl.sheds(), 1);
+    }
+
+    #[test]
+    fn hysteresis_blocks_flapping_at_the_boundary() {
+        let (pool, fp) = pool_with_bank(1);
+        pool.wait_ready(1);
+        pool.stop();
+        let ctl = AdmissionController::new(AdmitConfig {
+            low_watermark: 1,
+            high_watermark: 3,
+            ..zero_interval()
+        });
+        let metrics = Metrics::default();
+        assert_eq!(ctl.decide(fp, &pool, &metrics), Decision::Admit);
+        let mut rng = Rng::new(13);
+        let _ = pool.lease_model(fp, &mut rng); // depth 1 → 0
+        assert!(matches!(ctl.decide(fp, &pool, &metrics), Decision::Shed { .. }));
+        // Depth 0 < high_watermark 3: still shedding even though a
+        // depth-1 recovery would have been above the low watermark.
+        assert!(matches!(ctl.decide(fp, &pool, &metrics), Decision::Shed { .. }));
+    }
+
+    #[test]
+    fn queue_over_limit_sheds_regardless_of_banks() {
+        let (pool, fp) = pool_with_bank(4);
+        pool.wait_ready(4);
+        let ctl =
+            AdmissionController::new(AdmitConfig { max_queue: 2, ..zero_interval() });
+        let metrics = Metrics::default();
+        metrics.ingress_depth.store(2, Ordering::Relaxed);
+        match ctl.decide(fp, &pool, &metrics) {
+            Decision::Shed { reason, .. } => assert!(reason.contains("queue"), "{reason}"),
+            d => panic!("over-limit queue admitted: {d:?}"),
+        }
+        metrics.ingress_depth.store(0, Ordering::Relaxed);
+        assert_eq!(ctl.decide(fp, &pool, &metrics), Decision::Admit);
+        pool.stop();
+    }
+
+    #[test]
+    fn zero_low_watermark_disables_bank_shedding() {
+        let (pool, fp) = pool_with_bank(1);
+        pool.wait_ready(1);
+        pool.stop();
+        let mut rng = Rng::new(17);
+        let _ = pool.lease_model(fp, &mut rng);
+        assert_eq!(pool.banked_model(fp), 0);
+        let ctl = AdmissionController::new(AdmitConfig {
+            low_watermark: 0,
+            ..zero_interval()
+        });
+        let metrics = Metrics::default();
+        assert_eq!(ctl.decide(fp, &pool, &metrics), Decision::Admit, "dry but not shedding");
+    }
+}

@@ -1,0 +1,170 @@
+//! Blocking client for the serving tier — the counterpart of
+//! [`super::reactor`] used by the `pi_client` load generator and the
+//! two-process tests.
+//!
+//! The client reuses the blocking transport the dealer link already
+//! trusts ([`crate::wire::frame::TcpChannel`] under a
+//! [`crate::wire::frame::Framed`]): the nonblocking machinery lives
+//! server-side, where one thread multiplexes every connection; a client
+//! has exactly one connection and blocking reads are the simple,
+//! correct tool.
+//!
+//! Requests pipeline: [`PiClient::send_infer`] fires without waiting and
+//! [`PiClient::recv_outcome`] collects results in server-completion
+//! order, matching them back by the echoed `req_id`. A shed request
+//! surfaces as [`Outcome::Busy`] — an expected signal under overload,
+//! not an `Err` — while protocol-level failures (unknown model, stopped
+//! service, corrupt frames) are real errors.
+
+use super::proto::{self, Busy, Logits, ModelAd};
+use crate::bail;
+use crate::field::Fp;
+use crate::util::error::{Context, Result};
+use crate::wire::frame::{Framed, MsgType, TcpChannel};
+
+/// The server's answer to one inference request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Served: logits plus serving stats.
+    Logits(Logits),
+    /// Shed by admission control: retry after the hint.
+    Busy(Busy),
+}
+
+/// One connected, handshaken client session.
+pub struct PiClient {
+    link: Framed,
+    models: Vec<ModelAd>,
+    next_id: u64,
+}
+
+impl PiClient {
+    /// Connect, complete the version handshake, and learn the served
+    /// model set.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let chan = TcpChannel::connect(addr).with_context(|| format!("pi client {addr}"))?;
+        let mut link = Framed::new(Box::new(chan));
+        link.send(MsgType::ClientHello, &proto::encode_client_hello())?;
+        let frame = link.recv()?;
+        match frame.msg_type {
+            MsgType::ClientHello => {
+                let hello = proto::decode_server_hello(&frame.payload)?;
+                Ok(Self { link, models: hello.models, next_id: 0 })
+            }
+            MsgType::Busy => {
+                let busy = proto::decode_busy(&frame.payload)?;
+                bail!("server busy at connect: {} (retry {} ms)", busy.reason, busy.retry_after_ms)
+            }
+            MsgType::Error => {
+                let err = proto::decode_error(&frame.payload)?;
+                bail!("server rejected handshake: {}", err.message)
+            }
+            other => bail!("unexpected {other:?} frame in handshake"),
+        }
+    }
+
+    /// Models the server advertised in its hello.
+    pub fn models(&self) -> &[ModelAd] {
+        &self.models
+    }
+
+    /// Fire one request without waiting (pipelining); returns the
+    /// client-chosen `req_id` echoed on the eventual response.
+    pub fn send_infer(&mut self, model: u64, input: &[Fp]) -> Result<u64> {
+        let req_id = self.next_id;
+        self.next_id += 1;
+        let payload =
+            proto::encode_infer(&proto::Infer { req_id, model, input: input.to_vec() });
+        self.link.send(MsgType::Infer, &payload)?;
+        Ok(req_id)
+    }
+
+    /// Block for the next response frame (server-completion order, not
+    /// send order — match by [`Logits::req_id`]/[`Busy::req_id`]).
+    pub fn recv_outcome(&mut self) -> Result<Outcome> {
+        let frame = self.link.recv()?;
+        match frame.msg_type {
+            MsgType::Logits => Ok(Outcome::Logits(proto::decode_logits(&frame.payload)?)),
+            MsgType::Busy => Ok(Outcome::Busy(proto::decode_busy(&frame.payload)?)),
+            MsgType::Error => {
+                let err = proto::decode_error(&frame.payload)?;
+                bail!("server error (req {}): {}", err.req_id, err.message)
+            }
+            other => bail!("unexpected {other:?} frame awaiting a response"),
+        }
+    }
+
+    /// Send one request and wait for its answer (depth-1 convenience).
+    pub fn infer(&mut self, model: u64, input: &[Fp]) -> Result<Outcome> {
+        self.send_infer(model, input)?;
+        self.recv_outcome()
+    }
+
+    /// Orderly goodbye. Best-effort: the server also tolerates a plain
+    /// disconnect.
+    pub fn bye(mut self) -> Result<()> {
+        self.link.send(MsgType::Bye, &[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::ReluVariant;
+    use crate::coordinator::service::{PiService, ServiceConfig};
+    use crate::net::reactor::{Reactor, ReactorConfig};
+    use crate::protocol::linear::{LinearOp, Matrix};
+    use crate::protocol::server::NetworkPlan;
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn pipelined_requests_roundtrip_by_req_id() {
+        let mut rng = Rng::new(2);
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(5, 6, 10, &mut rng)),
+            Arc::new(Matrix::random(3, 5, 10, &mut rng)),
+        ];
+        let plan = Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu));
+        let svc = Arc::new(PiService::start(plan, ServiceConfig {
+            workers: 2,
+            pool_target: 8,
+            pool_dealers: 1,
+            ..Default::default()
+        }));
+        svc.warmup(4);
+        let reactor =
+            Reactor::spawn("127.0.0.1:0", svc.clone(), ReactorConfig::default()).unwrap();
+
+        let mut client = PiClient::connect(&reactor.local_addr().to_string()).unwrap();
+        let ad = client.models()[0];
+        let inputs: Vec<Vec<Fp>> = (0..4u64)
+            .map(|r| (0..ad.in_dim as i64).map(|i| Fp::from_i64(100 * r as i64 + i)).collect())
+            .collect();
+        let want: Vec<Vec<Fp>> =
+            inputs.iter().map(|inp| svc.infer(inp.clone()).unwrap().logits).collect();
+
+        // Fire all four before reading anything, then match replies by id.
+        let ids: Vec<u64> =
+            inputs.iter().map(|inp| client.send_infer(ad.fingerprint, inp).unwrap()).collect();
+        let mut got = vec![None; inputs.len()];
+        for _ in 0..inputs.len() {
+            match client.recv_outcome().unwrap() {
+                Outcome::Logits(l) => {
+                    let slot = ids.iter().position(|&id| id == l.req_id).unwrap();
+                    got[slot] = Some(l.logits);
+                }
+                Outcome::Busy(b) => panic!("warm bank shed a request: {}", b.reason),
+            }
+        }
+        for (slot, logits) in got.into_iter().enumerate() {
+            assert_eq!(logits.unwrap(), want[slot], "request {slot}");
+        }
+        client.bye().unwrap();
+        reactor.shutdown();
+        match Arc::try_unwrap(svc) {
+            Ok(svc) => svc.shutdown(),
+            Err(_) => panic!("reactor kept a service reference after shutdown"),
+        }
+    }
+}

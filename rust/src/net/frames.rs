@@ -1,0 +1,186 @@
+//! Incremental frame decoding for nonblocking reads.
+//!
+//! The blocking [`crate::wire::frame::Framed`] pulls exactly one frame
+//! per `recv()` because it can park the thread on `recv_exact`. A
+//! reactor cannot: a nonblocking read delivers whatever bytes the
+//! kernel has — half a header, three frames and a tail, anything — so
+//! each connection owns a [`FrameBuf`] that accumulates bytes and pops
+//! complete frames as they materialize. The wire format is byte-for-
+//! byte the dealer-link framing (`MSG_TYPE | LEN (4 B le) | payload |
+//! CRC32 (4 B le)`, CRC over header + payload), so a blocking
+//! [`Framed`] peer interoperates with a reactor endpoint unchanged.
+//!
+//! Everything buffered is untrusted client input: unknown message
+//! types, LEN fields over the connection's cap, and CRC mismatches all
+//! surface as `Err` — after which the stream offset is unreliable and
+//! the caller must drop the connection (there is no resync marker in
+//! the format).
+
+use crate::util::error::Result;
+use crate::wire::frame::{crc32, Frame, MsgType, FRAME_CRC_BYTES, FRAME_HEADER_BYTES};
+use crate::{bail, ensure};
+
+/// Per-connection accumulation buffer turning a nonblocking byte stream
+/// into whole frames.
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (compacted away once frames are popped).
+    pos: usize,
+    /// Per-connection payload cap — client-facing listeners set this far
+    /// below [`crate::wire::frame::MAX_FRAME_LEN`] so one connection
+    /// cannot balloon reactor memory.
+    max_len: usize,
+}
+
+impl FrameBuf {
+    /// A fresh buffer enforcing `max_len` as the payload-size cap.
+    pub fn new(max_len: usize) -> Self {
+        Self { buf: Vec::new(), pos: 0, max_len }
+    }
+
+    /// Append freshly read bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed as frames.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Pop one complete frame if the buffer holds it: `Ok(None)` means
+    /// "need more bytes", `Err` means the stream is corrupt and the
+    /// connection must be dropped.
+    pub fn try_frame(&mut self) -> Result<Option<Frame>> {
+        if self.buffered() < FRAME_HEADER_BYTES {
+            self.compact();
+            return Ok(None);
+        }
+        let start = self.pos;
+        let msg_type = MsgType::from_u8(self.buf[start])?;
+        let len =
+            u32::from_le_bytes(self.buf[start + 1..start + 5].try_into().unwrap()) as usize;
+        if len > self.max_len {
+            bail!("oversized frame LEN {len} (connection cap {})", self.max_len);
+        }
+        let total = FRAME_HEADER_BYTES + len + FRAME_CRC_BYTES;
+        if self.buffered() < total {
+            self.compact();
+            return Ok(None);
+        }
+        let crc_off = start + FRAME_HEADER_BYTES + len;
+        // CRC covers header + payload, exactly like the blocking path.
+        let want = crc32(&self.buf[start..crc_off]);
+        let got = u32::from_le_bytes(self.buf[crc_off..crc_off + 4].try_into().unwrap());
+        ensure!(got == want, "frame CRC mismatch ({msg_type:?}, {len} B payload)");
+        let payload = self.buf[start + FRAME_HEADER_BYTES..crc_off].to_vec();
+        self.pos += total;
+        self.compact();
+        Ok(Some(Frame { msg_type, payload }))
+    }
+
+    /// Drop the consumed prefix once it is either the whole buffer or
+    /// big enough that the memmove beats carrying dead bytes around.
+    fn compact(&mut self) {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos >= 4096 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::frame::encode_frame;
+
+    #[test]
+    fn single_frame_in_dribbled_bytes() {
+        let raw = encode_frame(MsgType::Infer, b"hello-payload").unwrap();
+        let mut fb = FrameBuf::new(1 << 16);
+        for chunk in raw.chunks(3) {
+            fb.extend(chunk);
+        }
+        // Until the final chunk arrived, intermediate polls were None.
+        let f = fb.try_frame().unwrap().expect("complete frame");
+        assert_eq!(f.msg_type, MsgType::Infer);
+        assert_eq!(f.payload, b"hello-payload");
+        assert!(fb.try_frame().unwrap().is_none());
+        assert_eq!(fb.buffered(), 0);
+    }
+
+    #[test]
+    fn partial_header_and_partial_payload_return_none() {
+        let raw = encode_frame(MsgType::Logits, &[7u8; 64]).unwrap();
+        let mut fb = FrameBuf::new(1 << 16);
+        fb.extend(&raw[..3]);
+        assert!(fb.try_frame().unwrap().is_none());
+        fb.extend(&raw[3..raw.len() - 1]);
+        assert!(fb.try_frame().unwrap().is_none());
+        fb.extend(&raw[raw.len() - 1..]);
+        assert!(fb.try_frame().unwrap().is_some());
+    }
+
+    #[test]
+    fn multiple_frames_in_one_read() {
+        let mut bytes = encode_frame(MsgType::ClientHello, b"a").unwrap();
+        bytes.extend(encode_frame(MsgType::Infer, b"bb").unwrap());
+        bytes.extend(encode_frame(MsgType::Bye, b"").unwrap());
+        let mut fb = FrameBuf::new(1 << 16);
+        fb.extend(&bytes);
+        assert_eq!(fb.try_frame().unwrap().unwrap().msg_type, MsgType::ClientHello);
+        assert_eq!(fb.try_frame().unwrap().unwrap().msg_type, MsgType::Infer);
+        assert_eq!(fb.try_frame().unwrap().unwrap().msg_type, MsgType::Bye);
+        assert!(fb.try_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn crc_flip_is_rejected() {
+        let mut raw = encode_frame(MsgType::Infer, b"payload").unwrap();
+        let n = raw.len();
+        raw[n - 1] ^= 0xFF;
+        let mut fb = FrameBuf::new(1 << 16);
+        fb.extend(&raw);
+        let err = fb.try_frame().unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn payload_flip_is_rejected() {
+        let mut raw = encode_frame(MsgType::Infer, b"payload").unwrap();
+        raw[FRAME_HEADER_BYTES] ^= 0x01;
+        let mut fb = FrameBuf::new(1 << 16);
+        fb.extend(&raw);
+        assert!(fb.try_frame().is_err());
+    }
+
+    #[test]
+    fn unknown_type_and_oversized_len_are_rejected() {
+        let mut fb = FrameBuf::new(1 << 16);
+        fb.extend(&[0xEE, 0, 0, 0, 0]);
+        assert!(fb.try_frame().unwrap_err().to_string().contains("unknown message type"));
+
+        let mut fb = FrameBuf::new(64);
+        let mut raw = vec![MsgType::Infer as u8];
+        raw.extend_from_slice(&1000u32.to_le_bytes());
+        fb.extend(&raw);
+        assert!(fb.try_frame().unwrap_err().to_string().contains("oversized"));
+    }
+
+    #[test]
+    fn compaction_keeps_buffer_bounded() {
+        let raw = encode_frame(MsgType::Infer, &[3u8; 1024]).unwrap();
+        let mut fb = FrameBuf::new(1 << 16);
+        for _ in 0..64 {
+            fb.extend(&raw);
+            assert!(fb.try_frame().unwrap().is_some());
+            // Fully drained after every frame ⇒ the compaction path
+            // resets instead of growing the dead prefix forever.
+            assert_eq!(fb.buffered(), 0);
+            assert!(fb.buf.is_empty());
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! The client-facing serving tier: nonblocking reactor, framed client
+//! protocol, and bank-depth admission control — std-only, zero
+//! dependencies.
+//!
+//! [`crate::coordinator`] turns Circa's offline/online split into an
+//! in-process service; this module puts that service on a socket. The
+//! design follows the serving profile of private inference: the online
+//! phase is cheap and the scarce resource is pre-dealt offline material,
+//! so the network edge must (a) multiplex many mostly-idle client
+//! connections without a thread apiece, and (b) refuse work *early and
+//! explicitly* when a model's material bank runs dry, instead of letting
+//! dry inline deals destroy tail latency.
+//!
+//! * [`accept`] — the shared nonblocking listener
+//!   ([`accept::PollingListener`]) and the loopback
+//!   [`accept::stop_nudge`] that wakes an accept poll for shutdown.
+//!   Used by both the reactor and the dealer's accept loop
+//!   ([`crate::wire::dealer`]).
+//! * [`frames`] — [`frames::FrameBuf`], the incremental re-assembler of
+//!   the dealer-link frame format (`MSG_TYPE | LEN | payload | CRC32`,
+//!   [`crate::wire::frame`]) across arbitrary TCP segmentation.
+//! * [`proto`] — the versioned client protocol payloads: hello
+//!   handshake with model advertisements, pipelined
+//!   `Infer`/`Logits`, and explicit `Busy`/`Error`. All decodes treat
+//!   input as untrusted (`Err`, never panic).
+//! * [`admit`] — [`admit::AdmissionController`]: samples per-model bank
+//!   depths and the ingress-queue gauge against low/high watermarks and
+//!   answers queue-or-shed per request, with hysteresis so the decision
+//!   doesn't flap at the refill boundary.
+//! * [`reactor`] — [`reactor::Reactor`]: one thread owning the
+//!   listener, every connection state machine (partial-frame reads,
+//!   backpressure-bounded buffered writes, idle timeouts, connection
+//!   cap), the admission gate, and the nonblocking completion poll over
+//!   [`crate::coordinator::service::ResponseHandle`]s.
+//! * [`client`] — [`client::PiClient`], the blocking client used by the
+//!   `pi_client` load generator and the two-process tests.
+
+pub mod accept;
+pub mod admit;
+pub mod client;
+pub mod frames;
+pub mod proto;
+pub mod reactor;
+
+pub use accept::PollingListener;
+pub use admit::{AdmissionController, AdmitConfig, Decision};
+pub use client::{Outcome, PiClient};
+pub use frames::FrameBuf;
+pub use reactor::{NetStats, Reactor, ReactorConfig};

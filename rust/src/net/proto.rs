@@ -1,0 +1,374 @@
+//! The versioned client protocol of the serving tier.
+//!
+//! Frames ride the dealer-link framing ([`crate::wire::frame`], message
+//! types `ClientHello`/`Infer`/`Logits`/`Busy` plus the shared
+//! `Error`/`Bye`); this module defines the payloads. A session:
+//!
+//! ```text
+//! client → server : ClientHello   (magic | version)
+//! server → client : ClientHello   (magic | version | model ads)
+//!
+//! client → server : Infer         (req_id | model fp | input)
+//! server → client : Logits        (req_id | model | logits | stats)
+//!            — or : Busy          (req_id | retry-after hint | reason)
+//!            — or : Error         (req_id | message)
+//! ...               (requests pipeline freely; responses may reorder,
+//!                    which is what the client-chosen req_id is for)
+//! client → server : Bye
+//! ```
+//!
+//! The handshake advertises every registered model as a [`ModelAd`]
+//! (fingerprint + I/O dims), so a load generator can build inputs
+//! without out-of-band plan knowledge. `Busy` is the admission
+//! controller's explicit backpressure ([`super::admit`]): the request
+//! was not queued, the connection survives, and the client should retry
+//! after the hint. An `Error` with [`CONN_FATAL`] as its req_id is
+//! connection-level (handshake rejection, corrupt framing) and the
+//! server closes after sending it.
+//!
+//! All decodes treat the payload as untrusted input: wrong magic,
+//! version skew, out-of-range field elements, oversized vectors, and
+//! trailing bytes are `Err`, never panics — same contract as
+//! [`crate::wire::codec`].
+
+use crate::ensure;
+use crate::field::{Fp, PRIME};
+use crate::util::bytes::{Reader, Writer};
+use crate::util::error::{Context, Result};
+
+/// Protocol magic (`b"CIRP"`, little-endian) — distinct from the dealer
+/// codec's `b"CIRW"` so a client dialed at a dealer port (or vice versa)
+/// fails loudly at the handshake.
+pub const PROTO_MAGIC: u32 = u32::from_le_bytes(*b"CIRP");
+
+/// Client protocol version. Bump on any payload layout change.
+pub const PROTO_VERSION: u16 = 1;
+
+/// Upper bound on input/logit vector length — far above any served
+/// plan, far below an allocation attack.
+pub const MAX_VEC_ELEMS: usize = 1 << 20;
+
+/// Upper bound on advertised models in the server hello.
+pub const MAX_MODEL_ADS: usize = 4096;
+
+/// `req_id` sentinel on an [`ProtoError`] that concerns the connection
+/// rather than one request; the server closes after sending it.
+pub const CONN_FATAL: u64 = u64::MAX;
+
+/// One advertised model in the server hello: enough for a client to
+/// address it and to size inputs without out-of-band plan knowledge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelAd {
+    pub fingerprint: u64,
+    pub in_dim: u32,
+    pub out_dim: u32,
+}
+
+/// Server side of the handshake: the registered model set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServerHello {
+    pub models: Vec<ModelAd>,
+}
+
+/// One inference request. `req_id` is client-chosen and echoed verbatim
+/// on the response, so requests can pipeline on one connection.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Infer {
+    pub req_id: u64,
+    pub model: u64,
+    pub input: Vec<Fp>,
+}
+
+/// Serving stats carried on every [`Logits`] frame (mirrors
+/// [`crate::coordinator::router::Response`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InferStats {
+    pub queue_us: u64,
+    pub online_us: u64,
+    pub bytes: u64,
+    pub served_from_bank: bool,
+}
+
+/// One inference result.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Logits {
+    pub req_id: u64,
+    pub model: u64,
+    pub logits: Vec<Fp>,
+    pub stats: InferStats,
+}
+
+/// Explicit admission-control shed: retry after the hint.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Busy {
+    pub req_id: u64,
+    pub retry_after_ms: u32,
+    pub reason: String,
+}
+
+/// Per-request or connection-fatal error (see [`CONN_FATAL`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProtoError {
+    pub req_id: u64,
+    pub message: String,
+}
+
+fn put_fp_vec(w: &mut Writer, v: &[Fp]) {
+    w.u64(v.len() as u64);
+    w.buf.reserve(v.len() * 4);
+    for &x in v {
+        w.u32(x.raw() as u32);
+    }
+}
+
+fn get_fp_vec(r: &mut Reader) -> Result<Vec<Fp>> {
+    let n = r.u64()? as usize;
+    ensure!(n <= MAX_VEC_ELEMS, "field vector of {n} elements exceeds cap {MAX_VEC_ELEMS}");
+    let raw = r.take(n.checked_mul(4).context("fp vec length overflows")?)?;
+    raw.chunks_exact(4)
+        .map(|c| {
+            let v = u32::from_le_bytes(c.try_into().unwrap()) as u64;
+            ensure!(v < PRIME, "field element {v} out of range");
+            Ok(Fp::new(v))
+        })
+        .collect()
+}
+
+fn check_version(r: &mut Reader, what: &str) -> Result<()> {
+    let magic = r.u32()?;
+    ensure!(magic == PROTO_MAGIC, "{what}: bad protocol magic {magic:#010x}");
+    let version = r.u16()?;
+    ensure!(
+        version == PROTO_VERSION,
+        "{what}: protocol version {version} (this side speaks {PROTO_VERSION})"
+    );
+    Ok(())
+}
+
+fn check_drained(r: &Reader, what: &str) -> Result<()> {
+    ensure!(r.remaining() == 0, "{what}: {} trailing bytes", r.remaining());
+    Ok(())
+}
+
+/// Client → server hello payload (a version probe).
+pub fn encode_client_hello() -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(PROTO_MAGIC);
+    w.u16(PROTO_VERSION);
+    w.buf
+}
+
+/// Validate a client hello (magic + version only).
+pub fn decode_client_hello(payload: &[u8]) -> Result<()> {
+    let mut r = Reader::new(payload);
+    check_version(&mut r, "client hello")?;
+    check_drained(&r, "client hello")
+}
+
+/// Server → client hello payload: version + model advertisements.
+pub fn encode_server_hello(hello: &ServerHello) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(PROTO_MAGIC);
+    w.u16(PROTO_VERSION);
+    w.u32(hello.models.len() as u32);
+    for ad in &hello.models {
+        w.u64(ad.fingerprint);
+        w.u32(ad.in_dim);
+        w.u32(ad.out_dim);
+    }
+    w.buf
+}
+
+pub fn decode_server_hello(payload: &[u8]) -> Result<ServerHello> {
+    let mut r = Reader::new(payload);
+    check_version(&mut r, "server hello")?;
+    let n = r.u32()? as usize;
+    ensure!(n <= MAX_MODEL_ADS, "server hello advertises {n} models (cap {MAX_MODEL_ADS})");
+    let mut models = Vec::with_capacity(n);
+    for _ in 0..n {
+        models.push(ModelAd { fingerprint: r.u64()?, in_dim: r.u32()?, out_dim: r.u32()? });
+    }
+    check_drained(&r, "server hello")?;
+    Ok(ServerHello { models })
+}
+
+pub fn encode_infer(msg: &Infer) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u64(msg.req_id);
+    w.u64(msg.model);
+    put_fp_vec(&mut w, &msg.input);
+    w.buf
+}
+
+pub fn decode_infer(payload: &[u8]) -> Result<Infer> {
+    let mut r = Reader::new(payload);
+    let req_id = r.u64()?;
+    let model = r.u64()?;
+    let input = get_fp_vec(&mut r)?;
+    check_drained(&r, "infer")?;
+    Ok(Infer { req_id, model, input })
+}
+
+pub fn encode_logits(msg: &Logits) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u64(msg.req_id);
+    w.u64(msg.model);
+    put_fp_vec(&mut w, &msg.logits);
+    w.u64(msg.stats.queue_us);
+    w.u64(msg.stats.online_us);
+    w.u64(msg.stats.bytes);
+    w.u8(msg.stats.served_from_bank as u8);
+    w.buf
+}
+
+pub fn decode_logits(payload: &[u8]) -> Result<Logits> {
+    let mut r = Reader::new(payload);
+    let req_id = r.u64()?;
+    let model = r.u64()?;
+    let logits = get_fp_vec(&mut r)?;
+    let queue_us = r.u64()?;
+    let online_us = r.u64()?;
+    let bytes = r.u64()?;
+    let from_bank = r.u8()?;
+    ensure!(from_bank <= 1, "served_from_bank flag {from_bank} is not a bool");
+    check_drained(&r, "logits")?;
+    Ok(Logits {
+        req_id,
+        model,
+        logits,
+        stats: InferStats {
+            queue_us,
+            online_us,
+            bytes,
+            served_from_bank: from_bank == 1,
+        },
+    })
+}
+
+pub fn encode_busy(msg: &Busy) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u64(msg.req_id);
+    w.u32(msg.retry_after_ms);
+    w.string(&msg.reason);
+    w.buf
+}
+
+pub fn decode_busy(payload: &[u8]) -> Result<Busy> {
+    let mut r = Reader::new(payload);
+    let req_id = r.u64()?;
+    let retry_after_ms = r.u32()?;
+    let reason = r.string()?;
+    check_drained(&r, "busy")?;
+    Ok(Busy { req_id, retry_after_ms, reason })
+}
+
+pub fn encode_error(msg: &ProtoError) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u64(msg.req_id);
+    w.string(&msg.message);
+    w.buf
+}
+
+pub fn decode_error(payload: &[u8]) -> Result<ProtoError> {
+    let mut r = Reader::new(payload);
+    let req_id = r.u64()?;
+    let message = r.string()?;
+    check_drained(&r, "error")?;
+    Ok(ProtoError { req_id, message })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_roundtrip_and_version_gate() {
+        decode_client_hello(&encode_client_hello()).unwrap();
+
+        let hello = ServerHello {
+            models: vec![
+                ModelAd { fingerprint: 0xABCD, in_dim: 784, out_dim: 10 },
+                ModelAd { fingerprint: 0x1234, in_dim: 6, out_dim: 3 },
+            ],
+        };
+        assert_eq!(decode_server_hello(&encode_server_hello(&hello)).unwrap(), hello);
+
+        // Wrong magic / version skew / trailing bytes all reject.
+        let mut bad = encode_client_hello();
+        bad[0] ^= 0xFF;
+        assert!(decode_client_hello(&bad).unwrap_err().to_string().contains("magic"));
+        let mut skew = encode_client_hello();
+        skew[4] = PROTO_VERSION as u8 + 1;
+        assert!(decode_client_hello(&skew).unwrap_err().to_string().contains("version"));
+        let mut trailing = encode_server_hello(&hello);
+        trailing.push(0);
+        assert!(decode_server_hello(&trailing).is_err());
+    }
+
+    #[test]
+    fn infer_roundtrip_and_range_check() {
+        let msg = Infer {
+            req_id: 42,
+            model: 0xFEED,
+            input: (0..17).map(Fp::from_i64).collect(),
+        };
+        assert_eq!(decode_infer(&encode_infer(&msg)).unwrap(), msg);
+
+        // An out-of-range raw element must be rejected, not wrapped.
+        let mut w = Writer::new();
+        w.u64(1);
+        w.u64(2);
+        w.u64(1); // one element
+        w.u32(u32::MAX); // >= PRIME
+        assert!(decode_infer(&w.buf).unwrap_err().to_string().contains("out of range"));
+    }
+
+    #[test]
+    fn infer_vector_cap_is_enforced() {
+        let mut w = Writer::new();
+        w.u64(1);
+        w.u64(2);
+        w.u64((MAX_VEC_ELEMS + 1) as u64);
+        assert!(decode_infer(&w.buf).unwrap_err().to_string().contains("cap"));
+    }
+
+    #[test]
+    fn logits_busy_error_roundtrip() {
+        let msg = Logits {
+            req_id: 7,
+            model: 9,
+            logits: vec![Fp::from_i64(-5), Fp::from_i64(123456)],
+            stats: InferStats {
+                queue_us: 10,
+                online_us: 2000,
+                bytes: 4096,
+                served_from_bank: true,
+            },
+        };
+        assert_eq!(decode_logits(&encode_logits(&msg)).unwrap(), msg);
+
+        let busy = Busy { req_id: 8, retry_after_ms: 50, reason: "banks dry".into() };
+        assert_eq!(decode_busy(&encode_busy(&busy)).unwrap(), busy);
+
+        let err = ProtoError { req_id: CONN_FATAL, message: "handshake first".into() };
+        assert_eq!(decode_error(&encode_error(&err)).unwrap(), err);
+    }
+
+    #[test]
+    fn truncated_payloads_err_not_panic() {
+        let full = encode_logits(&Logits {
+            req_id: 1,
+            model: 2,
+            logits: vec![Fp::from_i64(3)],
+            stats: InferStats {
+                queue_us: 0,
+                online_us: 1,
+                bytes: 2,
+                served_from_bank: false,
+            },
+        });
+        for cut in 0..full.len() {
+            assert!(decode_logits(&full[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+}

@@ -1,0 +1,707 @@
+//! The serving tier's readiness loop: one thread, many connections,
+//! zero blocking.
+//!
+//! The reactor owns a nonblocking [`PollingListener`] plus a per-
+//! connection state machine and multiplexes every client over a single
+//! thread:
+//!
+//! * **Accept** — new connections are admitted up to
+//!   [`ReactorConfig::max_connections`]; past the cap the reactor sends
+//!   a best-effort `Busy` frame and closes immediately (an explicit
+//!   signal beats a silent SYN backlog).
+//! * **Read** — bytes drain into a per-connection [`FrameBuf`], which
+//!   re-assembles the dealer-link frame format across arbitrary TCP
+//!   segmentation. A corrupt frame (bad CRC, unknown type, oversized
+//!   LEN) kills only that connection; the reactor and its other clients
+//!   are unaffected.
+//! * **State machine** — a connection must complete the
+//!   `ClientHello`/server-hello version handshake before its first
+//!   `Infer`; afterwards requests pipeline freely and responses may
+//!   reorder (the client's `req_id` is echoed on every reply).
+//! * **Admission** — each `Infer` consults the
+//!   [`AdmissionController`] *before* queueing: a dry model bank or an
+//!   over-limit ingress queue is an immediate `Busy` frame, and the
+//!   bounded-queue `try_send` backstop ([`SubmitError::QueueFull`])
+//!   maps to `Busy` as well. The reactor thread never blocks on
+//!   dealing or queue space.
+//! * **Completion** — admitted requests park as
+//!   [`ResponseHandle`]s; the loop polls `try_recv` and turns each
+//!   arrival into a `Logits` frame on the owning connection.
+//! * **Write** — responses queue into a per-connection write buffer
+//!   flushed as the socket accepts bytes; a client that stops reading
+//!   past [`ReactorConfig::max_write_buf`] is disconnected rather than
+//!   ballooning server memory.
+//! * **Idle** — connections with no traffic and no in-flight requests
+//!   for [`ReactorConfig::idle_timeout`] are reaped.
+//!
+//! Shutdown mirrors the dealer listener: a stop flag plus a loopback
+//! [`stop_nudge`] so the accept poll wakes immediately.
+
+use super::accept::{stop_nudge, PollingListener};
+use super::admit::{AdmissionController, AdmitConfig, Decision};
+use super::frames::FrameBuf;
+use super::proto::{
+    self, Busy, InferStats, Logits, ModelAd, ProtoError, ServerHello, CONN_FATAL,
+};
+use crate::coordinator::service::{PiService, ResponseHandle, SubmitError};
+use crate::protocol::linear::LinearOp;
+use crate::util::error::Result;
+use crate::wire::frame::{encode_frame, MsgType};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Reactor tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ReactorConfig {
+    /// Hard cap on concurrently open client connections; over-cap
+    /// accepts get a `Busy` frame and an immediate close.
+    pub max_connections: usize,
+    /// Per-connection bound on a single frame's payload LEN (tighter
+    /// than the wire-format maximum: client frames are requests, not
+    /// layer batches).
+    pub max_frame_len: usize,
+    /// Per-connection bound on buffered unsent response bytes; a client
+    /// that stops reading past this is disconnected.
+    pub max_write_buf: usize,
+    /// Reap connections idle (no traffic, nothing in flight) this long.
+    pub idle_timeout: Duration,
+    /// Sleep when a full pass over accept/read/poll/write moved no
+    /// bytes.
+    pub poll_interval: Duration,
+    /// Admission-control watermarks ([`super::admit`]).
+    pub admit: AdmitConfig,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        Self {
+            max_connections: 1024,
+            max_frame_len: 1 << 24,
+            max_write_buf: 1 << 23,
+            idle_timeout: Duration::from_secs(30),
+            poll_interval: Duration::from_micros(500),
+            admit: AdmitConfig::default(),
+        }
+    }
+}
+
+/// Reactor counters, updated live from the loop thread.
+#[derive(Default)]
+pub struct NetStats {
+    /// Connections accepted into the loop.
+    pub accepted: AtomicU64,
+    /// Connections refused at the `max_connections` cap.
+    pub rejected_over_cap: AtomicU64,
+    /// Currently open connections (gauge).
+    pub open: AtomicU64,
+    /// Valid frames received / frames queued for send.
+    pub frames_rx: AtomicU64,
+    pub frames_tx: AtomicU64,
+    /// Requests answered `Busy` (admission shed + queue-full backstop).
+    pub sheds: AtomicU64,
+    /// Corrupt frames or protocol violations (each also closes its
+    /// connection).
+    pub proto_errors: AtomicU64,
+    /// Connections closed for any reason.
+    pub closed: AtomicU64,
+    /// Subset of `closed` reaped by the idle timeout.
+    pub idle_closed: AtomicU64,
+}
+
+/// Handle to a running reactor thread.
+pub struct Reactor {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+    pub stats: Arc<NetStats>,
+}
+
+impl Reactor {
+    /// Bind `addr` and start the loop thread serving `svc`. Bind errors
+    /// surface here; everything after is reported per connection.
+    pub fn spawn(addr: &str, svc: Arc<PiService>, cfg: ReactorConfig) -> Result<Self> {
+        let listener = PollingListener::bind(addr)?;
+        let local = listener.local_addr();
+        let stats = Arc::new(NetStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        // The handshake reply is identical for every client: build it
+        // once from the registered model set.
+        let ads: Vec<ModelAd> = svc
+            .pool
+            .registry()
+            .entries()
+            .iter()
+            .map(|e| ModelAd {
+                fingerprint: e.fingerprint(),
+                in_dim: e.plan.linears[0].in_dim() as u32,
+                out_dim: e.plan.linears.last().expect("non-empty plan").out_dim() as u32,
+            })
+            .collect();
+        let hello_reply = proto::encode_server_hello(&ServerHello { models: ads });
+        let thread = {
+            let stats = stats.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                run_loop(listener, svc, cfg, hello_reply, stats, stop);
+            })
+        };
+        Ok(Self { addr: local, stop, thread: Some(thread), stats })
+    }
+
+    /// The bound address (with the OS-assigned port when spawned on
+    /// port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the loop and join the thread. Open connections are dropped
+    /// (clients observe EOF); the service itself is left running.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        stop_nudge(self.addr);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+enum Phase {
+    AwaitHello,
+    Ready,
+}
+
+struct Pending {
+    req_id: u64,
+    model: u64,
+    handle: ResponseHandle,
+}
+
+struct Conn {
+    stream: TcpStream,
+    inbuf: FrameBuf,
+    /// Unsent response bytes; `wpos` is the flush cursor.
+    out: Vec<u8>,
+    wpos: usize,
+    phase: Phase,
+    pending: Vec<Pending>,
+    last_activity: Instant,
+    /// Flush what's buffered, then close (Bye, fatal protocol error).
+    closing: bool,
+    /// Remove this connection at the end of the pass.
+    dead: bool,
+}
+
+/// Append one encoded frame to a connection's write buffer.
+fn queue_frame(out: &mut Vec<u8>, stats: &NetStats, msg_type: MsgType, payload: &[u8]) {
+    match encode_frame(msg_type, payload) {
+        Ok(buf) => {
+            out.extend_from_slice(&buf);
+            stats.frames_tx.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(_) => { /* oversized response payload: drop the frame */ }
+    }
+}
+
+fn queue_error(out: &mut Vec<u8>, stats: &NetStats, req_id: u64, message: String) {
+    let payload = proto::encode_error(&ProtoError { req_id, message });
+    queue_frame(out, stats, MsgType::Error, &payload);
+}
+
+fn queue_busy(out: &mut Vec<u8>, stats: &NetStats, req_id: u64, retry_after_ms: u32, reason: &str) {
+    let payload =
+        proto::encode_busy(&Busy { req_id, retry_after_ms, reason: reason.to_string() });
+    queue_frame(out, stats, MsgType::Busy, &payload);
+    stats.sheds.fetch_add(1, Ordering::Relaxed);
+}
+
+fn run_loop(
+    listener: PollingListener,
+    svc: Arc<PiService>,
+    cfg: ReactorConfig,
+    hello_reply: Vec<u8>,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+) {
+    let admit = AdmissionController::new(cfg.admit);
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut scratch = vec![0u8; 16 * 1024];
+
+    while !stop.load(Ordering::Relaxed) {
+        let mut moved = false;
+
+        // -- Accept --------------------------------------------------
+        loop {
+            match listener.accept() {
+                Ok(Some((stream, _peer))) => {
+                    moved = true;
+                    if conns.len() >= cfg.max_connections {
+                        stats.rejected_over_cap.fetch_add(1, Ordering::Relaxed);
+                        reject_over_cap(stream, &stats, cfg.admit.retry_after_ms);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    stats.accepted.fetch_add(1, Ordering::Relaxed);
+                    conns.push(Conn {
+                        stream,
+                        inbuf: FrameBuf::new(cfg.max_frame_len),
+                        out: Vec::new(),
+                        wpos: 0,
+                        phase: Phase::AwaitHello,
+                        pending: Vec::new(),
+                        last_activity: Instant::now(),
+                        closing: false,
+                        dead: false,
+                    });
+                }
+                Ok(None) | Err(_) => break,
+            }
+        }
+
+        // -- Per-connection read / decode / dispatch ------------------
+        for conn in conns.iter_mut() {
+            if conn.dead {
+                continue;
+            }
+            if read_into(conn, &mut scratch, &stats) {
+                moved = true;
+            }
+            if drain_frames(conn, &svc, &admit, &cfg, &hello_reply, &stats) {
+                moved = true;
+            }
+            if poll_pending(conn, &stats) {
+                moved = true;
+            }
+            if flush(conn, &cfg, &stats) {
+                moved = true;
+            }
+            if !conn.dead
+                && !conn.closing
+                && conn.pending.is_empty()
+                && conn.last_activity.elapsed() >= cfg.idle_timeout
+            {
+                conn.dead = true;
+                stats.idle_closed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+
+        // -- Reap ----------------------------------------------------
+        let before = conns.len();
+        conns.retain(|c| !c.dead);
+        let reaped = (before - conns.len()) as u64;
+        if reaped > 0 {
+            stats.closed.fetch_add(reaped, Ordering::Relaxed);
+            moved = true;
+        }
+        stats.open.store(conns.len() as u64, Ordering::Relaxed);
+
+        if !moved {
+            std::thread::sleep(cfg.poll_interval);
+        }
+    }
+    stats.closed.fetch_add(conns.len() as u64, Ordering::Relaxed);
+    stats.open.store(0, Ordering::Relaxed);
+}
+
+/// Best-effort `Busy` to a connection refused at the cap; never blocks
+/// the loop (the socket is switched to nonblocking first, and a full
+/// kernel buffer just drops the courtesy frame).
+fn reject_over_cap(stream: TcpStream, stats: &NetStats, retry_after_ms: u32) {
+    if stream.set_nonblocking(true).is_err() {
+        return;
+    }
+    let mut stream = stream;
+    let payload = proto::encode_busy(&Busy {
+        req_id: CONN_FATAL,
+        retry_after_ms,
+        reason: "server at connection capacity".to_string(),
+    });
+    if let Ok(buf) = encode_frame(MsgType::Busy, &payload) {
+        let _ = stream.write(&buf);
+        stats.frames_tx.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Drain readable bytes into the connection's frame buffer. Returns
+/// true if any bytes arrived; EOF and hard errors mark the connection
+/// dead.
+fn read_into(conn: &mut Conn, scratch: &mut [u8], _stats: &NetStats) -> bool {
+    let mut any = false;
+    loop {
+        match conn.stream.read(scratch) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => {
+                conn.inbuf.extend(&scratch[..n]);
+                conn.last_activity = Instant::now();
+                any = true;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+    any
+}
+
+/// Pop and handle every complete frame buffered on the connection.
+fn drain_frames(
+    conn: &mut Conn,
+    svc: &Arc<PiService>,
+    admit: &AdmissionController,
+    cfg: &ReactorConfig,
+    hello_reply: &[u8],
+    stats: &NetStats,
+) -> bool {
+    let mut any = false;
+    while !conn.dead && !conn.closing {
+        let frame = match conn.inbuf.try_frame() {
+            Ok(Some(f)) => f,
+            Ok(None) => break,
+            Err(e) => {
+                // Unrecoverable: framing is lost (CRC/type/LEN). Tell
+                // the client why, flush, close. Only this connection
+                // dies.
+                stats.proto_errors.fetch_add(1, Ordering::Relaxed);
+                queue_error(&mut conn.out, stats, CONN_FATAL, e.to_string());
+                conn.closing = true;
+                break;
+            }
+        };
+        any = true;
+        stats.frames_rx.fetch_add(1, Ordering::Relaxed);
+        handle_frame(conn, frame.msg_type, &frame.payload, svc, admit, cfg, hello_reply, stats);
+    }
+    any
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_frame(
+    conn: &mut Conn,
+    msg_type: MsgType,
+    payload: &[u8],
+    svc: &Arc<PiService>,
+    admit: &AdmissionController,
+    cfg: &ReactorConfig,
+    hello_reply: &[u8],
+    stats: &NetStats,
+) {
+    match msg_type {
+        MsgType::ClientHello => match proto::decode_client_hello(payload) {
+            Ok(()) => {
+                queue_frame(&mut conn.out, stats, MsgType::ClientHello, hello_reply);
+                conn.phase = Phase::Ready;
+            }
+            Err(e) => {
+                stats.proto_errors.fetch_add(1, Ordering::Relaxed);
+                queue_error(&mut conn.out, stats, CONN_FATAL, e.to_string());
+                conn.closing = true;
+            }
+        },
+        MsgType::Bye => conn.closing = true,
+        MsgType::Infer => {
+            if matches!(conn.phase, Phase::AwaitHello) {
+                stats.proto_errors.fetch_add(1, Ordering::Relaxed);
+                queue_error(
+                    &mut conn.out,
+                    stats,
+                    CONN_FATAL,
+                    "handshake required before Infer".to_string(),
+                );
+                conn.closing = true;
+                return;
+            }
+            let infer = match proto::decode_infer(payload) {
+                Ok(m) => m,
+                Err(e) => {
+                    stats.proto_errors.fetch_add(1, Ordering::Relaxed);
+                    queue_error(&mut conn.out, stats, CONN_FATAL, e.to_string());
+                    conn.closing = true;
+                    return;
+                }
+            };
+            // Unknown fingerprints answer per-request (a client bug, not
+            // a transport fault) and must not reach the admission
+            // controller's per-model state.
+            if svc.pool.registry().get(infer.model).is_none() {
+                queue_error(
+                    &mut conn.out,
+                    stats,
+                    infer.req_id,
+                    SubmitError::UnknownModel(infer.model).to_string(),
+                );
+                return;
+            }
+            if let Decision::Shed { retry_after_ms, reason } =
+                admit.decide(infer.model, &svc.pool, &svc.metrics)
+            {
+                svc.metrics.record_shed(infer.model);
+                queue_busy(&mut conn.out, stats, infer.req_id, retry_after_ms, reason);
+                return;
+            }
+            match svc.submit_to(infer.model, infer.input) {
+                Ok(handle) => {
+                    conn.pending.push(Pending { req_id: infer.req_id, model: infer.model, handle });
+                }
+                Err(SubmitError::QueueFull { .. }) => {
+                    // The bounded channel beat the gauge to the punch:
+                    // same client-visible contract as an admission shed.
+                    svc.metrics.record_shed(infer.model);
+                    queue_busy(
+                        &mut conn.out,
+                        stats,
+                        infer.req_id,
+                        cfg.admit.retry_after_ms,
+                        "ingress queue full",
+                    );
+                }
+                Err(e @ SubmitError::Stopped) => {
+                    queue_error(&mut conn.out, stats, CONN_FATAL, e.to_string());
+                    conn.closing = true;
+                }
+                Err(e @ SubmitError::UnknownModel(_)) => {
+                    queue_error(&mut conn.out, stats, infer.req_id, e.to_string());
+                }
+            }
+        }
+        other => {
+            stats.proto_errors.fetch_add(1, Ordering::Relaxed);
+            queue_error(
+                &mut conn.out,
+                stats,
+                CONN_FATAL,
+                format!("unexpected {other:?} frame on a client connection"),
+            );
+            conn.closing = true;
+        }
+    }
+}
+
+/// Poll every in-flight inference on the connection; completed ones
+/// become `Logits` frames (or an `Error` if the service died mid-
+/// flight).
+fn poll_pending(conn: &mut Conn, stats: &NetStats) -> bool {
+    if conn.pending.is_empty() {
+        return false;
+    }
+    let mut any = false;
+    let pending = std::mem::take(&mut conn.pending);
+    for p in pending {
+        match p.handle.try_recv() {
+            Ok(None) => conn.pending.push(p),
+            Ok(Some(resp)) => {
+                any = true;
+                conn.last_activity = Instant::now();
+                let payload = proto::encode_logits(&Logits {
+                    req_id: p.req_id,
+                    model: p.model,
+                    logits: resp.logits,
+                    stats: InferStats {
+                        queue_us: resp.queue_us,
+                        online_us: resp.online_us,
+                        bytes: resp.bytes,
+                        served_from_bank: resp.served_from_bank,
+                    },
+                });
+                queue_frame(&mut conn.out, stats, MsgType::Logits, &payload);
+            }
+            Err(e) => {
+                any = true;
+                queue_error(&mut conn.out, stats, p.req_id, e.to_string());
+            }
+        }
+    }
+    any
+}
+
+/// Write as much buffered output as the socket accepts. Enforces the
+/// backpressure cap and finishes a deferred close once drained.
+fn flush(conn: &mut Conn, cfg: &ReactorConfig, stats: &NetStats) -> bool {
+    let mut any = false;
+    while conn.wpos < conn.out.len() {
+        match conn.stream.write(&conn.out[conn.wpos..]) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => {
+                conn.wpos += n;
+                conn.last_activity = Instant::now();
+                any = true;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+    if conn.wpos >= conn.out.len() {
+        conn.out.clear();
+        conn.wpos = 0;
+        if conn.closing {
+            conn.dead = true;
+        }
+    } else if conn.out.len() - conn.wpos > cfg.max_write_buf {
+        // The client stopped reading; cut it loose instead of buffering
+        // without bound.
+        stats.proto_errors.fetch_add(1, Ordering::Relaxed);
+        conn.dead = true;
+    }
+    any
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::ReluVariant;
+    use crate::coordinator::service::ServiceConfig;
+    use crate::field::Fp;
+    use crate::protocol::linear::Matrix;
+    use crate::protocol::server::NetworkPlan;
+    use crate::util::Rng;
+    use crate::wire::frame::{Framed, TcpChannel};
+
+    fn tiny_service() -> Arc<PiService> {
+        let mut rng = Rng::new(1);
+        let linears: Vec<Arc<dyn LinearOp>> = vec![
+            Arc::new(Matrix::random(5, 6, 10, &mut rng)),
+            Arc::new(Matrix::random(3, 5, 10, &mut rng)),
+        ];
+        let plan = Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu));
+        Arc::new(PiService::start(plan, ServiceConfig {
+            workers: 2,
+            pool_target: 4,
+            pool_dealers: 1,
+            ..Default::default()
+        }))
+    }
+
+    fn connect(addr: SocketAddr) -> Framed {
+        Framed::new(Box::new(TcpChannel::connect(&addr.to_string()).unwrap()))
+    }
+
+    #[test]
+    fn hello_infer_logits_roundtrip() {
+        let svc = tiny_service();
+        svc.warmup(2);
+        let reactor = Reactor::spawn("127.0.0.1:0", svc.clone(), ReactorConfig::default())
+            .unwrap();
+        let mut link = connect(reactor.local_addr());
+
+        link.send(MsgType::ClientHello, &proto::encode_client_hello()).unwrap();
+        let frame = link.recv().unwrap();
+        assert_eq!(frame.msg_type, MsgType::ClientHello);
+        let hello = proto::decode_server_hello(&frame.payload).unwrap();
+        assert_eq!(hello.models.len(), 1);
+        let ad = hello.models[0];
+        assert_eq!((ad.in_dim, ad.out_dim), (6, 3));
+
+        let input: Vec<Fp> = (0..6).map(|i| Fp::from_i64(200 + i)).collect();
+        let want = svc.infer(input.clone()).unwrap().logits;
+        link.send(
+            MsgType::Infer,
+            &proto::encode_infer(&proto::Infer {
+                req_id: 77,
+                model: ad.fingerprint,
+                input,
+            }),
+        )
+        .unwrap();
+        let frame = link.recv().unwrap();
+        assert_eq!(frame.msg_type, MsgType::Logits);
+        let logits = proto::decode_logits(&frame.payload).unwrap();
+        assert_eq!(logits.req_id, 77);
+        assert_eq!(logits.logits, want, "network path bit-identical to in-process");
+        assert!(logits.stats.online_us > 0);
+
+        link.send(MsgType::Bye, &[]).unwrap();
+        reactor.shutdown();
+        match Arc::try_unwrap(svc) {
+            Ok(svc) => svc.shutdown(),
+            Err(_) => panic!("reactor kept a service reference after shutdown"),
+        }
+    }
+
+    #[test]
+    fn infer_before_hello_is_rejected() {
+        let svc = tiny_service();
+        let model = svc.models()[0];
+        let reactor = Reactor::spawn("127.0.0.1:0", svc.clone(), ReactorConfig::default())
+            .unwrap();
+        let mut link = connect(reactor.local_addr());
+        link.send(
+            MsgType::Infer,
+            &proto::encode_infer(&proto::Infer { req_id: 1, model, input: Vec::new() }),
+        )
+        .unwrap();
+        let frame = link.recv().unwrap();
+        assert_eq!(frame.msg_type, MsgType::Error);
+        let err = proto::decode_error(&frame.payload).unwrap();
+        assert_eq!(err.req_id, CONN_FATAL);
+        assert!(err.message.contains("handshake"), "{}", err.message);
+        // The server closes after a connection-fatal error.
+        assert!(link.recv().is_err());
+        assert_eq!(reactor.stats.proto_errors.load(Ordering::Relaxed), 1);
+        reactor.shutdown();
+        match Arc::try_unwrap(svc) {
+            Ok(svc) => svc.shutdown(),
+            Err(_) => panic!("reactor kept a service reference after shutdown"),
+        }
+    }
+
+    #[test]
+    fn unknown_model_errors_per_request_and_connection_survives() {
+        let svc = tiny_service();
+        svc.warmup(2);
+        let model = svc.models()[0];
+        let reactor = Reactor::spawn("127.0.0.1:0", svc.clone(), ReactorConfig::default())
+            .unwrap();
+        let mut link = connect(reactor.local_addr());
+        link.send(MsgType::ClientHello, &proto::encode_client_hello()).unwrap();
+        let _ = link.recv().unwrap();
+
+        link.send(
+            MsgType::Infer,
+            &proto::encode_infer(&proto::Infer {
+                req_id: 5,
+                model: model ^ 0xDEAD,
+                input: Vec::new(),
+            }),
+        )
+        .unwrap();
+        let frame = link.recv().unwrap();
+        assert_eq!(frame.msg_type, MsgType::Error);
+        let err = proto::decode_error(&frame.payload).unwrap();
+        assert_eq!(err.req_id, 5, "per-request error, not connection-fatal");
+
+        // Same connection still serves real requests.
+        let input: Vec<Fp> = (0..6).map(|i| Fp::from_i64(300 + i)).collect();
+        link.send(
+            MsgType::Infer,
+            &proto::encode_infer(&proto::Infer { req_id: 6, model, input }),
+        )
+        .unwrap();
+        let frame = link.recv().unwrap();
+        assert_eq!(frame.msg_type, MsgType::Logits);
+        assert_eq!(proto::decode_logits(&frame.payload).unwrap().req_id, 6);
+
+        reactor.shutdown();
+        match Arc::try_unwrap(svc) {
+            Ok(svc) => svc.shutdown(),
+            Err(_) => panic!("reactor kept a service reference after shutdown"),
+        }
+    }
+}

@@ -70,7 +70,8 @@ use crate::util::bytes::{Reader, Writer};
 use crate::util::error::{Context, Result};
 use crate::util::Rng;
 use crate::{bail, ensure};
-use std::net::{Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use crate::net::accept::{stop_nudge, PollingListener};
+use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -519,23 +520,12 @@ impl DealerHandle {
     /// served run to completion on their own threads.
     ///
     /// The accept loop polls a non-blocking listener with a short sleep,
-    /// so this returns promptly even if the wake-up nudge below cannot
-    /// connect. The nudge targets loopback explicitly: a `0.0.0.0` (or
-    /// `::`) bind is not a connectable destination address on every
-    /// platform, and the old `connect(self.addr)` nudge could fail
-    /// there, which — against a blocking `accept()` — left `stop()`
-    /// joined forever.
+    /// so this returns promptly even if the shared wake-up nudge
+    /// ([`crate::net::accept::stop_nudge`]) cannot connect — the nudge
+    /// only shortens the wait below one poll interval.
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        let nudge = if self.addr.ip().is_unspecified() {
-            match self.addr {
-                SocketAddr::V4(_) => SocketAddr::from((Ipv4Addr::LOCALHOST, self.addr.port())),
-                SocketAddr::V6(_) => SocketAddr::from((Ipv6Addr::LOCALHOST, self.addr.port())),
-            }
-        } else {
-            self.addr
-        };
-        let _ = TcpStream::connect_timeout(&nudge, Duration::from_millis(200));
+        stop_nudge(self.addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
@@ -554,12 +544,11 @@ pub fn spawn_tcp_dealer_multi(
     seed: u64,
     deal_threads: usize,
 ) -> Result<DealerHandle> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-    let local = listener.local_addr().context("local addr")?;
     // Non-blocking accept, polled with a short sleep: the loop observes
     // the stop flag within one poll interval even when no nudge
     // connection can reach the listener (see [`DealerHandle::stop`]).
-    listener.set_nonblocking(true).context("listener nonblocking")?;
+    let listener = PollingListener::bind(addr)?;
+    let local = listener.local_addr();
     let stop = Arc::new(AtomicBool::new(false));
     let stop_accept = stop.clone();
     let accept_thread = std::thread::spawn(move || {
@@ -569,7 +558,7 @@ pub fn spawn_tcp_dealer_multi(
                 return;
             }
             match listener.accept() {
-                Ok((stream, _)) => {
+                Ok(Some((stream, _))) => {
                     // The connection itself is served blocking.
                     let _ = stream.set_nonblocking(false);
                     conn_id += 1;
@@ -580,10 +569,7 @@ pub fn spawn_tcp_dealer_multi(
                         let _ = serve_connection(framed, &registry, &mut rng, deal_threads);
                     });
                 }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(25));
-                }
-                Err(_) => std::thread::sleep(Duration::from_millis(25)),
+                Ok(None) | Err(_) => std::thread::sleep(Duration::from_millis(25)),
             }
         }
     });

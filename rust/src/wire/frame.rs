@@ -66,6 +66,20 @@ pub enum MsgType {
     /// Dealer → coordinator: the linear-precompute spine of one session
     /// of one model.
     Spine = 8,
+    /// Client ↔ serving tier ([`crate::net`]): protocol handshake.
+    /// Client → server it is a version probe; server → client the reply
+    /// advertises the registered model set (see `net::proto`).
+    ClientHello = 9,
+    /// Client → serving tier: one inference request (request id, model
+    /// fingerprint, input vector).
+    Infer = 10,
+    /// Serving tier → client: one inference result (logits + serving
+    /// stats).
+    Logits = 11,
+    /// Serving tier → client: admission control shed the request —
+    /// payload carries a retry-after hint and a reason. The connection
+    /// survives.
+    Busy = 12,
 }
 
 impl MsgType {
@@ -79,6 +93,10 @@ impl MsgType {
             6 => Ok(MsgType::RequestLayers),
             7 => Ok(MsgType::LayerBatch),
             8 => Ok(MsgType::Spine),
+            9 => Ok(MsgType::ClientHello),
+            10 => Ok(MsgType::Infer),
+            11 => Ok(MsgType::Logits),
+            12 => Ok(MsgType::Busy),
             other => bail!("unknown message type {other}"),
         }
     }
@@ -136,6 +154,21 @@ pub fn crc32(data: &[u8]) -> u32 {
     crc32_feed(CRC_INIT, data) ^ CRC_INIT
 }
 
+/// Encode one frame (header + payload + trailing CRC) into a byte
+/// vector — the building block shared by the blocking [`Framed::send`]
+/// path and the nonblocking reactor write buffers ([`crate::net`]).
+pub fn encode_frame(msg_type: MsgType, payload: &[u8]) -> Result<Vec<u8>> {
+    ensure!(payload.len() <= MAX_FRAME_LEN, "frame payload too large: {}", payload.len());
+    let mut buf = Vec::with_capacity(FRAME_HEADER_BYTES + payload.len() + FRAME_CRC_BYTES);
+    buf.push(msg_type as u8);
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    // CRC covers header + payload (everything written so far).
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    Ok(buf)
+}
+
 /// Framing layer over a boxed [`Channel`], with byte accounting for the
 /// coordinator's offline-traffic ledger.
 pub struct Framed {
@@ -152,14 +185,7 @@ impl Framed {
 
     /// Send one frame (header + payload + CRC in a single write).
     pub fn send(&mut self, msg_type: MsgType, payload: &[u8]) -> Result<()> {
-        ensure!(payload.len() <= MAX_FRAME_LEN, "frame payload too large: {}", payload.len());
-        let mut buf = Vec::with_capacity(FRAME_HEADER_BYTES + payload.len() + FRAME_CRC_BYTES);
-        buf.push(msg_type as u8);
-        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-        buf.extend_from_slice(payload);
-        // CRC covers header + payload (everything written so far).
-        let crc = crc32(&buf);
-        buf.extend_from_slice(&crc.to_le_bytes());
+        let buf = encode_frame(msg_type, payload)?;
         self.chan.send_bytes(&buf)?;
         self.bytes_sent += buf.len() as u64;
         Ok(())

@@ -36,6 +36,10 @@
 //! | Spine         | dealer → coord | fingerprint + one session's precompute |
 //! | Bye           | coord → dealer | empty                                  |
 //! | Error         | dealer → coord | UTF-8 rejection message                |
+//! | ClientHello   | both           | client protocol handshake ([`crate::net::proto`]) |
+//! | Infer         | client → coord | req id, fingerprint, input vector      |
+//! | Logits        | coord → client | req id, logits, serving stats          |
+//! | Busy          | coord → client | req id, retry-after hint, reason       |
 //!
 //! `Request`/`Session` is the legacy whole-session round;
 //! `RequestLayers`/`LayerBatch`/`Spine` is the layer-granular streaming
@@ -47,6 +51,12 @@
 //! answered unit carries the fingerprint it was dealt for, and an
 //! unknown fingerprint is answered with an `Error` frame (the
 //! connection survives; handshake errors are fatal).
+//!
+//! `ClientHello`/`Infer`/`Logits`/`Busy` belong to the client-facing
+//! serving tier: same frame layout, different port and payload schema.
+//! Their payloads (and the `Bye`/`Error` reuse on that link) live in
+//! [`crate::net::proto`]; the nonblocking server side re-assembles
+//! frames incrementally with [`crate::net::frames::FrameBuf`].
 //!
 //! ## Versioning rules
 //!

@@ -34,7 +34,8 @@ fn service_serves_demo_cnn_with_circa() {
 
     let n = 8;
     let mut correct = 0;
-    let rxs: Vec<_> = (0..n).map(|i| (i, svc.submit(ds.image(i).to_vec()))).collect();
+    let rxs: Vec<_> =
+        (0..n).map(|i| (i, svc.submit(ds.image(i).to_vec()).expect("submit"))).collect();
     for (i, rx) in rxs {
         let resp = rx.recv().unwrap();
         let pred = resp
@@ -71,7 +72,8 @@ fn service_survives_dry_pool_bursts() {
         plan,
         ServiceConfig { workers: 3, pool_target: 1, pool_dealers: 1, ..Default::default() },
     );
-    let rxs: Vec<_> = (0..6).map(|i| svc.submit(ds.image(i).to_vec())).collect();
+    let rxs: Vec<_> =
+        (0..6).map(|i| svc.submit(ds.image(i).to_vec()).expect("submit")).collect();
     for rx in rxs {
         let resp = rx.recv().unwrap();
         assert_eq!(resp.logits.len(), 10);

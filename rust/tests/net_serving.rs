@@ -1,0 +1,308 @@
+//! Integration tests for the network serving tier ([`circa::net`]):
+//! one reactor thread multiplexing hundreds of loopback connections,
+//! bank-depth admission control shedding exactly the dry model, and
+//! corrupt-frame resilience. No artifacts required — every test builds
+//! small random plans in-process.
+
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::coordinator::{ModelConfig, PiService, ServiceConfig};
+use circa::field::{relu_exact, Fp};
+use circa::net::{AdmitConfig, Outcome, PiClient, Reactor, ReactorConfig};
+use circa::protocol::linear::{LinearOp, Matrix};
+use circa::protocol::server::NetworkPlan;
+use circa::util::Rng;
+use circa::wire::frame::{crc32, encode_frame, MsgType};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn shared_linears(seed: u64) -> Vec<Arc<dyn LinearOp>> {
+    let mut rng = Rng::new(seed);
+    vec![
+        Arc::new(Matrix::random(5, 6, 10, &mut rng)) as Arc<dyn LinearOp>,
+        Arc::new(Matrix::random(3, 5, 10, &mut rng)) as Arc<dyn LinearOp>,
+    ]
+}
+
+fn oracle(linears: &[Arc<dyn LinearOp>], input: &[Fp]) -> Vec<Fp> {
+    let mid: Vec<Fp> = linears[0].apply(input).iter().map(|&v| relu_exact(v)).collect();
+    linears[1].apply(&mid)
+}
+
+#[test]
+fn many_concurrent_connections_bit_identical_to_in_process() {
+    // ≥256 concurrent loopback connections through ONE reactor thread,
+    // every response bit-identical to the in-process infer of the same
+    // input. BaselineRelu is deterministic, so equality is exact.
+    const CONNS: usize = 256;
+    const DISTINCT: usize = 8;
+
+    let linears = shared_linears(21);
+    let plan = Arc::new(NetworkPlan::unscaled(linears.clone(), ReluVariant::BaselineRelu));
+    let svc = Arc::new(PiService::start(plan, ServiceConfig {
+        workers: 4,
+        pool_target: 16,
+        pool_dealers: 2,
+        max_queue: 2 * CONNS,
+        ..Default::default()
+    }));
+    svc.warmup(8);
+    // Admission disabled (low_watermark 0) and queue limit above the
+    // burst: all 256 must be served, none shed.
+    let cfg = ReactorConfig {
+        admit: AdmitConfig {
+            low_watermark: 0,
+            max_queue: 2 * CONNS,
+            ..AdmitConfig::default()
+        },
+        ..ReactorConfig::default()
+    };
+    let reactor = Reactor::spawn("127.0.0.1:0", svc.clone(), cfg).unwrap();
+    let addr = reactor.local_addr().to_string();
+
+    let inputs: Vec<Vec<Fp>> = (0..DISTINCT as i64)
+        .map(|s| (0..6).map(|i| Fp::from_i64(100 * s + 7 * i)).collect())
+        .collect();
+    let want: Vec<Vec<Fp>> =
+        inputs.iter().map(|inp| svc.infer(inp.clone()).unwrap().logits).collect();
+    // In-process private inference already matches the plaintext oracle
+    // (BaselineRelu is exact); the network path must match both.
+    for (inp, w) in inputs.iter().zip(&want) {
+        assert_eq!(*w, oracle(&linears, inp));
+    }
+
+    let handles: Vec<_> = (0..CONNS)
+        .map(|c| {
+            let addr = addr.clone();
+            let input = inputs[c % DISTINCT].clone();
+            let want = want[c % DISTINCT].clone();
+            std::thread::spawn(move || {
+                let mut client = PiClient::connect(&addr).expect("connect");
+                let fp = client.models()[0].fingerprint;
+                match client.infer(fp, &input).expect("infer") {
+                    Outcome::Logits(l) => {
+                        assert_eq!(l.logits, want, "conn {c}: network != in-process");
+                        assert_eq!(l.req_id, 0);
+                    }
+                    Outcome::Busy(b) => {
+                        panic!("conn {c} shed with admission disabled: {}", b.reason)
+                    }
+                }
+                let _ = client.bye();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    assert!(
+        reactor.stats.accepted.load(Ordering::Relaxed) >= CONNS as u64,
+        "reactor accepted fewer than {CONNS} connections"
+    );
+    assert_eq!(reactor.stats.sheds.load(Ordering::Relaxed), 0);
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.completed, (CONNS + DISTINCT) as u64);
+    assert_eq!(snap.ingress_queue_depth, 0, "queue gauge drains to zero");
+
+    reactor.shutdown();
+    Arc::try_unwrap(svc).ok().expect("sole service owner").shutdown();
+}
+
+#[test]
+fn dry_bank_sheds_busy_while_healthy_model_serves() {
+    // Two co-hosted models; model B's material bank is drained with
+    // refill frozen. B's requests must shed with an explicit Busy (and
+    // increment the shed counters); model A serves unaffected on the
+    // same connection.
+    let linears = shared_linears(23);
+    let plan_a = Arc::new(NetworkPlan::unscaled(linears.clone(), ReluVariant::BaselineRelu));
+    let plan_b = Arc::new(NetworkPlan::unscaled(
+        linears,
+        ReluVariant::TruncatedSign { k: 4, mode: FaultMode::PosZero },
+    ));
+    let svc = Arc::new(
+        PiService::start_multi(
+            vec![(plan_a, ModelConfig::default()), (plan_b, ModelConfig::default())],
+            ServiceConfig { workers: 2, pool_target: 4, pool_dealers: 1, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    svc.warmup(2);
+    let models = svc.models();
+    let (model_a, model_b) = (models[0], models[1]);
+
+    // Freeze refill, then drain B's bank completely.
+    svc.pool.stop();
+    let mut rng = Rng::new(31);
+    while svc.pool.banked_model(model_b) > 0 {
+        let _ = svc.pool.lease_model(model_b, &mut rng);
+    }
+    assert!(svc.pool.banked_model(model_a) > 0, "A must stay healthy for the contrast");
+
+    let cfg = ReactorConfig {
+        admit: AdmitConfig {
+            low_watermark: 1,
+            high_watermark: 2,
+            sample_interval: Duration::from_secs(0),
+            ..AdmitConfig::default()
+        },
+        ..ReactorConfig::default()
+    };
+    let reactor = Reactor::spawn("127.0.0.1:0", svc.clone(), cfg).unwrap();
+    let mut client = PiClient::connect(&reactor.local_addr().to_string()).unwrap();
+    let input: Vec<Fp> = (0..6).map(|i| Fp::from_i64(1500 + i)).collect();
+
+    match client.infer(model_b, &input).unwrap() {
+        Outcome::Busy(b) => {
+            assert!(b.reason.contains("dry"), "{}", b.reason);
+            assert!(b.retry_after_ms > 0);
+        }
+        Outcome::Logits(_) => panic!("dry model B was served instead of shed"),
+    }
+    match client.infer(model_a, &input).unwrap() {
+        Outcome::Logits(l) => assert_eq!(l.model, model_a),
+        Outcome::Busy(b) => panic!("healthy model A shed: {}", b.reason),
+    }
+
+    assert!(reactor.stats.sheds.load(Ordering::Relaxed) >= 1);
+    let snap = svc.metrics.snapshot();
+    assert!(snap.sheds >= 1, "fleet shed counter increments");
+    let row_b = snap.models.iter().find(|r| r.fingerprint == model_b).unwrap();
+    let row_a = snap.models.iter().find(|r| r.fingerprint == model_a).unwrap();
+    assert!(row_b.sheds >= 1, "shed lands on the dry model's row");
+    assert_eq!(row_a.sheds, 0, "healthy model unaffected");
+
+    let _ = client.bye();
+    reactor.shutdown();
+    Arc::try_unwrap(svc).ok().expect("sole service owner").shutdown();
+}
+
+/// Raw loopback socket for hand-crafted (malformed) byte streams.
+fn raw_conn(addr: &str) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s
+}
+
+#[test]
+fn malformed_frames_kill_one_connection_not_the_reactor() {
+    let linears = shared_linears(29);
+    let plan = Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu));
+    let svc = Arc::new(PiService::start(plan, ServiceConfig {
+        workers: 2,
+        pool_target: 4,
+        pool_dealers: 1,
+        ..Default::default()
+    }));
+    svc.warmup(2);
+    let reactor =
+        Reactor::spawn("127.0.0.1:0", svc.clone(), ReactorConfig::default()).unwrap();
+    let addr = reactor.local_addr().to_string();
+
+    // (a) Unknown message type: first byte is no MsgType.
+    {
+        let mut s = raw_conn(&addr);
+        s.write_all(&[0xEE, 1, 0, 0, 0, 42, 0, 0, 0, 0]).unwrap();
+        // Server reports a connection-fatal error frame, then closes.
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+    }
+
+    // (b) Truncated frame: a valid header promising more payload than
+    // ever arrives, then an abrupt close. Nothing to assert on the wire
+    // — the reactor must simply survive the dangling partial frame.
+    {
+        let mut s = raw_conn(&addr);
+        let frame = encode_frame(MsgType::ClientHello, b"cirp-truncated").unwrap();
+        s.write_all(&frame[..frame.len() - 6]).unwrap();
+    }
+
+    // (c) CRC flip: correct structure, one corrupted payload byte.
+    {
+        let mut s = raw_conn(&addr);
+        let mut frame =
+            encode_frame(MsgType::ClientHello, &circa::net::proto::encode_client_hello())
+                .unwrap();
+        let mid = frame.len() - 6;
+        frame[mid] ^= 0x40;
+        s.write_all(&frame).unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf); // error frame then EOF
+    }
+
+    // (d) Oversized LEN header.
+    {
+        let mut s = raw_conn(&addr);
+        let mut header = vec![MsgType::ClientHello as u8];
+        header.extend_from_slice(&u32::MAX.to_le_bytes());
+        let crc = crc32(&header);
+        header.extend_from_slice(&crc.to_le_bytes());
+        s.write_all(&header).unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+    }
+
+    // After all four abuse cases the reactor still serves a well-formed
+    // client on a fresh connection.
+    let mut client = PiClient::connect(&addr).expect("reactor survived corrupt frames");
+    let fp = client.models()[0].fingerprint;
+    let input: Vec<Fp> = (0..6).map(|i| Fp::from_i64(400 + i)).collect();
+    match client.infer(fp, &input).unwrap() {
+        Outcome::Logits(l) => assert_eq!(l.logits.len(), 3),
+        Outcome::Busy(b) => panic!("unexpected shed: {}", b.reason),
+    }
+    assert!(
+        reactor.stats.proto_errors.load(Ordering::Relaxed) >= 3,
+        "unknown-type, CRC-flip, and oversized-LEN all count as protocol errors"
+    );
+
+    let _ = client.bye();
+    reactor.shutdown();
+    Arc::try_unwrap(svc).ok().expect("sole service owner").shutdown();
+}
+
+#[test]
+fn connection_cap_rejects_with_busy_then_recovers() {
+    let linears = shared_linears(37);
+    let plan = Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu));
+    let svc = Arc::new(PiService::start(plan, ServiceConfig {
+        workers: 1,
+        pool_target: 2,
+        pool_dealers: 1,
+        ..Default::default()
+    }));
+    let cfg = ReactorConfig { max_connections: 4, ..ReactorConfig::default() };
+    let reactor = Reactor::spawn("127.0.0.1:0", svc.clone(), cfg).unwrap();
+    let addr = reactor.local_addr().to_string();
+
+    // Fill the cap with held connections.
+    let mut held: Vec<PiClient> =
+        (0..4).map(|_| PiClient::connect(&addr).expect("under cap")).collect();
+
+    // The fifth is refused with an explicit Busy at the handshake.
+    let over = PiClient::connect(&addr);
+    let err = over.err().expect("over-cap connect must fail").to_string();
+    assert!(err.contains("busy") || err.contains("capacity"), "{err}");
+    assert!(reactor.stats.rejected_over_cap.load(Ordering::Relaxed) >= 1);
+
+    // Release one slot; the reactor reaps the EOF and admits again.
+    drop(held.pop());
+    let mut admitted = None;
+    for _ in 0..100 {
+        match PiClient::connect(&addr) {
+            Ok(c) => {
+                admitted = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    assert!(admitted.is_some(), "freed capacity never readmitted a client");
+    drop(held);
+
+    reactor.shutdown();
+    Arc::try_unwrap(svc).ok().expect("sole service owner").shutdown();
+}
