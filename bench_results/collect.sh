@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Run the bench suite and copy its JSON artifacts into bench_results/
+# for tracking. Usage:
+#   ./bench_results/collect.sh              # all benches
+#   ./bench_results/collect.sh dealer_fleet # one bench
+set -euo pipefail
+
+repo="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$repo/rust"
+
+if [ $# -ge 1 ]; then
+    benches=("$@")
+else
+    # Every registered bench without a required feature gate.
+    benches=(fig3 fig5 table1 table2 table3 ablation layer_batch
+             online_batch wire_codec prf_throughput net_serving
+             dealer_fleet)
+fi
+
+for b in "${benches[@]}"; do
+    echo "=== bench: $b ==="
+    cargo bench --bench "$b"
+done
+
+mkdir -p "$repo/bench_results"
+cp -v bench_out/BENCH_*.json "$repo/bench_results/"
+echo "done: artifacts in bench_results/ — commit them with your change."

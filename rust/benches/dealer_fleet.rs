@@ -1,0 +1,159 @@
+//! Fleet-refill bench: bank-fill throughput vs dealer-fleet size, and
+//! dealer-kill recovery time. Emits `bench_out/BENCH_dealer_fleet.json`.
+//!
+//! ```bash
+//! cargo bench --bench dealer_fleet
+//! ```
+//!
+//! Everything runs on loopback: N real TCP dealer processes-in-threads
+//! feed one [`MaterialPool`] through the fleet scheduler (partitioned
+//! claims, work stealing, failure handoff). The interesting numbers are
+//! the fill-rate scaling from 1 → 2 → 4 dealers — seq-addressed dealing
+//! purity means the partitioning is free of coordination rounds, so
+//! scaling is bounded by the dealers' own garbling throughput — and how
+//! long the fleet takes to refill after one dealer is killed mid-run.
+
+use circa::bench_harness::tables::write_bench_json;
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::coordinator::{
+    DealerEndpoint, MaterialPool, ModelRegistry, PoolTuning, RefillSource,
+};
+use circa::protocol::linear::{LinearOp, Matrix};
+use circa::protocol::server::NetworkPlan;
+use circa::util::{Rng, Timer};
+use circa::wire::dealer::{spawn_tcp_dealer_multi_psk, DealerHandle};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A plan meaty enough that garbling dominates the wire round trips.
+fn bench_plan() -> Arc<NetworkPlan> {
+    let mut rng = Rng::new(0xF1EE7);
+    let linears: Vec<Arc<dyn LinearOp>> = vec![
+        Arc::new(Matrix::random(24, 32, 10, &mut rng)),
+        Arc::new(Matrix::random(16, 24, 10, &mut rng)),
+        Arc::new(Matrix::random(10, 16, 10, &mut rng)),
+    ];
+    Arc::new(NetworkPlan::unscaled(
+        linears,
+        ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero },
+    ))
+}
+
+fn registry() -> Arc<ModelRegistry> {
+    ModelRegistry::single(bench_plan(), 0xDEA1)
+}
+
+fn spawn_fleet(registry: &Arc<ModelRegistry>, n: usize) -> (Vec<DealerHandle>, Vec<String>) {
+    let handles: Vec<DealerHandle> = (0..n)
+        .map(|i| {
+            spawn_tcp_dealer_multi_psk(
+                "127.0.0.1:0",
+                registry.clone(),
+                0xBE9C + i as u64,
+                2,
+                None,
+            )
+            .expect("bind dealer")
+        })
+        .collect();
+    let addrs = handles.iter().map(|h| h.addr().to_string()).collect();
+    (handles, addrs)
+}
+
+fn endpoints(registry: &Arc<ModelRegistry>, addrs: &[String]) -> Vec<DealerEndpoint> {
+    addrs.iter().map(|a| DealerEndpoint::tcp(a, registry.clone(), None)).collect()
+}
+
+/// Fill an empty pool to `target` sessions over `n_dealers` TCP links;
+/// returns sessions/s.
+fn fill_rate(n_dealers: usize, target: usize) -> f64 {
+    let registry = registry();
+    let (handles, addrs) = spawn_fleet(&registry, n_dealers);
+    let t = Timer::new();
+    let pool = MaterialPool::start_multi(
+        registry.clone(),
+        target,
+        n_dealers,
+        RefillSource::remote(endpoints(&registry, &addrs), 4),
+        None,
+        1,
+    );
+    pool.wait_ready(target);
+    let rate = target as f64 / t.elapsed_s();
+    pool.shutdown();
+    for h in handles {
+        h.stop();
+    }
+    rate
+}
+
+fn main() {
+    let mut entries: Vec<(String, f64)> = Vec::new();
+    let target = 32;
+
+    // --- 1. Fill throughput vs fleet size ---------------------------
+    let mut base = 0.0;
+    for n in [1usize, 2, 4] {
+        let rate = fill_rate(n, target);
+        println!("fleet of {n}: filled {target} sessions at {rate:.1} sessions/s");
+        entries.push((format!("refill_rate_{n}_dealers_sessions_per_s"), rate));
+        if n == 1 {
+            base = rate;
+        } else {
+            let speedup = rate / base;
+            println!("  speedup over 1 dealer: {speedup:.2}x");
+            entries.push((format!("speedup_{n}x_dealers"), speedup));
+        }
+    }
+
+    // --- 2. Dealer-kill recovery ------------------------------------
+    // Fill with two dealers, kill one, drain the banks, and time how
+    // long the survivor takes to refill to target — EOF handoff plus
+    // work stealing against the severed link's claims.
+    {
+        let registry = registry();
+        let (mut handles, addrs) = spawn_fleet(&registry, 2);
+        let tuning = PoolTuning {
+            steal_after: Duration::from_millis(200),
+            demand_half_life: Duration::from_secs(10),
+        };
+        let pool = MaterialPool::start_multi_tuned(
+            registry.clone(),
+            target,
+            2,
+            RefillSource::remote(endpoints(&registry, &addrs), 4),
+            None,
+            1,
+            tuning,
+        );
+        pool.wait_ready(target);
+        handles.remove(1).kill();
+        // Drain everything banked so the survivor has a full target of
+        // deficit to cover while the dead link's claims hand off.
+        let model = registry.entries()[0].fingerprint();
+        let mut rng = Rng::new(7);
+        for _ in 0..target {
+            let _ = pool.lease_model(model, &mut rng);
+        }
+        let t = Timer::new();
+        pool.wait_ready(target);
+        let recovery_ms = t.elapsed_s() * 1e3;
+        println!(
+            "dealer-kill recovery: survivor refilled {target} sessions in {recovery_ms:.0} ms \
+             ({} seqs re-issued, {} late units dropped, {} steals)",
+            pool.reissued_seqs(),
+            pool.late_drop_units(),
+            pool.steals()
+        );
+        entries.push(("kill_recovery_ms".to_string(), recovery_ms));
+        entries.push(("kill_reissued_seqs".to_string(), pool.reissued_seqs() as f64));
+        entries.push(("kill_steals".to_string(), pool.steals() as f64));
+        pool.shutdown();
+        for h in handles {
+            h.stop();
+        }
+    }
+
+    let refs: Vec<(&str, f64)> = entries.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    write_bench_json("BENCH_dealer_fleet.json", &refs);
+}

@@ -11,14 +11,23 @@
 //! Modes:
 //!
 //! ```bash
-//! # One-process demo: in-memory channel, then a real TCP socket on
-//! # localhost with a self-spawned dealer serving both demo models.
+//! # One-process demo: in-memory channel, then a two-dealer fleet on
+//! # real localhost TCP sockets serving both demo models.
 //! cargo run --release --example dealer_serve
 //!
-//! # Two real processes:
-//! cargo run --release --example dealer_serve -- --listen 127.0.0.1:7700   # dealer
-//! cargo run --release --example dealer_serve -- --dealer 127.0.0.1:7700   # coordinator
+//! # Real processes (a fleet: N dealers + one coordinator):
+//! cargo run --release --example dealer_serve -- --listen 127.0.0.1:7700   # dealer 1
+//! cargo run --release --example dealer_serve -- --listen 127.0.0.1:7701   # dealer 2
+//! cargo run --release --example dealer_serve -- \
+//!     --dealer 127.0.0.1:7700,127.0.0.1:7701                              # coordinator
 //! ```
+//!
+//! Add `--psk <32 hex chars>` to both sides for AES-128-CMAC
+//! authenticated dealer links (key disagreement fails the handshake).
+//! The coordinator partitions refill claims across all live dealers,
+//! steals stale claims onto idle links, and hands a dead dealer's
+//! claims off to the survivors — kill one dealer mid-run and the run
+//! completes from the rest.
 //!
 //! Both processes derive the same demo registry from `--plan-seed`
 //! (default 0xC1CA): the manifest-set handshake verifies every model's
@@ -34,9 +43,9 @@ use circa::protocol::server::{run_inference, NetworkPlan};
 use circa::util::args::Args;
 use circa::util::{Rng, Timer};
 use circa::wire::dealer::{
-    deal_session, spawn_mem_dealer_multi, spawn_tcp_dealer_multi, RemoteDealer,
+    deal_session, spawn_mem_dealer_multi, spawn_tcp_dealer_multi_psk, RemoteDealer,
 };
-use circa::wire::SessionManifest;
+use circa::wire::{parse_psk_hex, SessionManifest};
 use std::sync::Arc;
 
 /// Demo model 1: a tiny CNN-shaped stack (6 → 5 → relu → 5 → 4 → relu →
@@ -138,10 +147,16 @@ fn mem_channel_demo(registry: &Arc<ModelRegistry>, dealer_seed: u64, deal_thread
     let _ = dealer_thread.join();
 }
 
-/// Phase 2: the serving coordinator pointed at a dealer address — both
-/// models' material pools refill over one real TCP socket.
-fn tcp_serving_demo(registry: &Arc<ModelRegistry>, addr: &str, n_requests: usize) {
-    println!("\n--- phase 2: multi-model coordinator against dealer at {addr} ---");
+/// Phase 2: the serving coordinator pointed at a dealer fleet — both
+/// models' material pools refill over the live TCP links, claims
+/// partitioned and work-stolen across them.
+fn tcp_serving_demo(
+    registry: &Arc<ModelRegistry>,
+    addrs: &[String],
+    psk: Option<[u8; 16]>,
+    n_requests: usize,
+) {
+    println!("\n--- phase 2: multi-model coordinator against dealer fleet {addrs:?} ---");
     let models: Vec<(Arc<NetworkPlan>, ModelConfig)> = registry
         .entries()
         .iter()
@@ -153,7 +168,8 @@ fn tcp_serving_demo(registry: &Arc<ModelRegistry>, addr: &str, n_requests: usize
         workers: 2,
         pool_target: 8,
         pool_dealers: 2,
-        dealer_addr: Some(addr.to_string()),
+        dealer_addrs: addrs.to_vec(),
+        dealer_psk: psk,
         ..Default::default()
     })
     .expect("start multi-model service");
@@ -224,6 +240,7 @@ fn main() {
     let n_requests = args.get_usize("requests", 16);
     // Threads each dealt session's garble/triple columns fan out across.
     let deal_threads = args.get_usize("deal-threads", 4);
+    let psk = args.get("psk").map(|s| parse_psk_hex(s).expect("--psk must be 32 hex chars"));
     let registry = demo_registry(plan_seed, dealer_seed, k);
     println!("demo registry ({} models):", registry.len());
     for e in registry.entries() {
@@ -238,33 +255,50 @@ fn main() {
 
     if let Some(addr) = args.get("listen") {
         // Dealer process: serve until killed.
-        let handle = spawn_tcp_dealer_multi(addr, registry, dealer_seed, deal_threads)
+        let handle = spawn_tcp_dealer_multi_psk(addr, registry, dealer_seed, deal_threads, psk)
             .expect("bind dealer");
         println!(
-            "dealer listening on {} ({deal_threads} deal threads; ctrl-c to stop)",
-            handle.addr()
+            "dealer listening on {} ({deal_threads} deal threads, psk {}; ctrl-c to stop)",
+            handle.addr(),
+            if psk.is_some() { "on" } else { "off" }
         );
         loop {
             std::thread::sleep(std::time::Duration::from_secs(3600));
         }
     }
 
-    if let Some(addr) = args.get("dealer") {
-        // Coordinator process against an external dealer.
-        tcp_serving_demo(&registry, addr, n_requests);
+    if let Some(list) = args.get("dealer") {
+        // Coordinator process against an external dealer fleet
+        // (comma-separated addresses).
+        let addrs: Vec<String> =
+            list.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+        assert!(!addrs.is_empty(), "--dealer needs at least one address");
+        tcp_serving_demo(&registry, &addrs, psk, n_requests);
         return;
     }
 
     // Default: full single-process walkthrough — in-memory channel first,
-    // then a self-spawned dealer on a real localhost TCP socket.
+    // then a self-spawned two-dealer fleet on real localhost TCP sockets.
     mem_channel_demo(&registry, dealer_seed, deal_threads);
-    let handle = spawn_tcp_dealer_multi("127.0.0.1:0", registry.clone(), dealer_seed, deal_threads)
-        .expect("bind dealer");
-    let addr = handle.addr().to_string();
-    println!("\nspawned TCP dealer on {addr}");
-    tcp_serving_demo(&registry, &addr, n_requests);
-    handle.stop();
+    let handles: Vec<_> = (0..2)
+        .map(|_| {
+            spawn_tcp_dealer_multi_psk(
+                "127.0.0.1:0",
+                registry.clone(),
+                dealer_seed,
+                deal_threads,
+                psk,
+            )
+            .expect("bind dealer")
+        })
+        .collect();
+    let addrs: Vec<String> = handles.iter().map(|h| h.addr().to_string()).collect();
+    println!("\nspawned TCP dealer fleet on {addrs:?}");
+    tcp_serving_demo(&registry, &addrs, psk, n_requests);
+    for handle in handles {
+        handle.stop();
+    }
     println!(
-        "\ndone: two models privately served end-to-end with material from another process."
+        "\ndone: two models privately served end-to-end with material from a dealer fleet."
     );
 }

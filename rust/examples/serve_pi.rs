@@ -17,8 +17,11 @@
 //! nonblocking reactor with bank-depth admission control instead of the
 //! in-process driver (`--serve-secs N` bounds the run, 0 = until
 //! killed; `--max-conns`, `--low-watermark`, `--high-watermark` tune
-//! the edge). With `--dealer HOST:PORT` the material pool refills both
-//! models from a standalone dealer over one TCP connection.
+//! the edge). With `--dealer HOST:PORT[,HOST:PORT...]` the material
+//! pool refills both models from a standalone dealer fleet — claims
+//! partitioned and work-stolen across the live links; `--psk <32 hex
+//! chars>` authenticates every link (AES-128-CMAC, shared with the
+//! dealers).
 
 use circa::circuits::spec::{FaultMode, ReluVariant};
 use circa::coordinator::{ModelConfig, ModelSnapshot, PiService, ServiceConfig};
@@ -210,10 +213,18 @@ fn main() {
     let deal_threads = args.get_usize("deal-threads", 1);
     let k = args.get_u64("k", 12) as u32;
     let synthetic = args.flag("synthetic");
-    // Optional standalone dealer (see examples/dealer_serve.rs): the
-    // material pool then refills over TCP instead of dealing inline —
-    // the dealer must serve *both* registered models.
-    let dealer_addr = args.get("dealer").map(|s| s.to_string());
+    // Optional standalone dealer fleet (see examples/dealer_serve.rs):
+    // the material pool then refills over TCP instead of dealing inline
+    // — every dealer must serve *both* registered models.
+    let dealer_addrs: Vec<String> = args
+        .get("dealer")
+        .map(|list| {
+            list.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect()
+        })
+        .unwrap_or_default();
+    let dealer_psk = args
+        .get("psk")
+        .map(|s| circa::wire::parse_psk_hex(s).expect("--psk must be 32 hex chars"));
 
     // Model set + input source: the trained demo CNN from artifacts/, or
     // small in-process random plans (--synthetic, no artifacts needed).
@@ -266,7 +277,8 @@ fn main() {
             pool_target: 2 * n_requests.min(64),
             pool_dealers: workers,
             deal_threads,
-            dealer_addr,
+            dealer_addrs,
+            dealer_psk,
             ..Default::default()
         })
         .expect("start multi-model service"),

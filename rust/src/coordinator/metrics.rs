@@ -2,7 +2,11 @@
 //! labels** — every recorder takes the model fingerprint of the work it
 //! measures, so a multi-model coordinator reports one row per served
 //! plan (bank depths, refill counters, latency histograms) alongside
-//! the fleet-wide aggregates.
+//! the fleet-wide aggregates — and, since the fleet-scheduler revision,
+//! **per-dealer-link rows** (fetch throughput/latency, failures,
+//! reconnects, steals both directions, late drops) registered by the
+//! pool at start, plus per-model EWMA demand gauges showing what the
+//! adaptive refill weights currently chase.
 
 use crate::util::stats::Histogram;
 use std::collections::BTreeMap;
@@ -49,6 +53,9 @@ pub struct Metrics {
     inner: Mutex<Inner>,
     /// Per-model rows, keyed by manifest fingerprint.
     per_model: Mutex<BTreeMap<u64, ModelStats>>,
+    /// Per-dealer-link rows, indexed by the pool's link index
+    /// (registered once by [`Self::register_links`]).
+    links: Mutex<Vec<LinkStats>>,
 }
 
 #[derive(Default)]
@@ -91,6 +98,54 @@ struct ModelStats {
     /// Latest per-bank staged depth gauge (index 0 = linear spines,
     /// `1 + li` = ReLU layer `li`), published by the model's pool shard.
     bank_depths: Vec<u64>,
+    /// Latest EWMA lease-rate score (gauge, published with the claim
+    /// weights by the pool's fleet scheduler).
+    demand_ewma: f64,
+    /// Latest effective refill weight derived from the EWMA (gauge; the
+    /// configured static demand until traffic warms the EWMA up).
+    demand_weight: f64,
+}
+
+/// One dealer link's accumulating row.
+#[derive(Default)]
+struct LinkStats {
+    label: String,
+    /// Completed fetch round trips.
+    fetches: u64,
+    /// Per-layer units (layer batches + spines) staged from this link.
+    units: u64,
+    /// Wire bytes received on this link (frame overhead included).
+    bytes: u64,
+    /// Fetch/connect errors (each one abandons the link's claim and
+    /// triggers reconnect-with-backoff).
+    failures: u64,
+    /// Successful reconnects after a failure.
+    reconnects: u64,
+    /// Claims this link stole from a slower link.
+    steals: u64,
+    /// Claims stolen *from* this link by an idle one.
+    stolen_from: u64,
+    /// Units this link produced after its claim had been stolen
+    /// (discarded at staging — duplicated work, never duplicated banks).
+    late_drop_units: u64,
+    fetch_us: Histogram,
+}
+
+/// A per-dealer-link reporting row.
+#[derive(Clone, Debug)]
+pub struct LinkSnapshot {
+    pub label: String,
+    pub fetches: u64,
+    pub units: u64,
+    pub bytes: u64,
+    pub failures: u64,
+    pub reconnects: u64,
+    pub steals: u64,
+    pub stolen_from: u64,
+    pub late_drop_units: u64,
+    pub fetch_p50_us: u64,
+    pub fetch_p99_us: u64,
+    pub fetch_mean_us: f64,
 }
 
 /// A per-model reporting row.
@@ -116,6 +171,11 @@ pub struct ModelSnapshot {
     pub batch_size_mean: f64,
     pub batch_req_p99_us: u64,
     pub bank_depths: Vec<u64>,
+    /// Latest EWMA lease-rate score (0.0 until traffic arrives).
+    pub demand_ewma: f64,
+    /// Latest effective refill weight (static demand until the EWMA has
+    /// signal).
+    pub demand_weight: f64,
 }
 
 /// A snapshot for reporting.
@@ -170,6 +230,9 @@ pub struct Snapshot {
     /// One row per model that has recorded anything, ordered by
     /// fingerprint.
     pub models: Vec<ModelSnapshot>,
+    /// One row per registered dealer link, in pool link order (empty for
+    /// inline-refill pools).
+    pub links: Vec<LinkSnapshot>,
 }
 
 fn rate_per_s(count: u64, wall_us: u64) -> f64 {
@@ -285,6 +348,66 @@ impl Metrics {
         self.with_model(model, |m| m.bank_depths = depths);
     }
 
+    /// Publish one model's EWMA lease-rate score and the effective
+    /// refill weight derived from it (gauge semantics).
+    pub fn set_demand(&self, model: u64, ewma: f64, weight: f64) {
+        self.with_model(model, |m| {
+            m.demand_ewma = ewma;
+            m.demand_weight = weight;
+        });
+    }
+
+    /// Register the dealer-link rows (called once by the pool's fleet
+    /// scheduler at start; replaces any previous registration).
+    pub fn register_links(&self, labels: &[String]) {
+        let mut rows = self.links.lock().unwrap();
+        *rows = labels
+            .iter()
+            .map(|l| LinkStats { label: l.clone(), ..LinkStats::default() })
+            .collect();
+    }
+
+    fn with_link<F: FnOnce(&mut LinkStats)>(&self, link: usize, f: F) {
+        let mut rows = self.links.lock().unwrap();
+        if let Some(row) = rows.get_mut(link) {
+            f(row);
+        }
+    }
+
+    /// Record one completed fetch on link `link`: round-trip latency,
+    /// wire bytes, and units staged.
+    pub fn record_link_fetch(&self, link: usize, fetch_us: u64, bytes: u64, units: u64) {
+        self.with_link(link, |l| {
+            l.fetches += 1;
+            l.bytes += bytes;
+            l.units += units;
+            l.fetch_us.record_us(fetch_us);
+        });
+    }
+
+    /// Record a connect/fetch failure on link `link`.
+    pub fn record_link_failure(&self, link: usize) {
+        self.with_link(link, |l| l.failures += 1);
+    }
+
+    /// Record a successful (re)connect after a failure on link `link`.
+    pub fn record_link_reconnect(&self, link: usize) {
+        self.with_link(link, |l| l.reconnects += 1);
+    }
+
+    /// Record a steal: idle link `thief` took over a claim outstanding
+    /// on `victim`.
+    pub fn record_link_steal(&self, thief: usize, victim: usize) {
+        self.with_link(thief, |l| l.steals += 1);
+        self.with_link(victim, |l| l.stolen_from += 1);
+    }
+
+    /// Record `units` late units from link `link`, produced after its
+    /// claim was stolen and therefore discarded at staging.
+    pub fn record_link_late_drop(&self, link: usize, units: u64) {
+        self.with_link(link, |l| l.late_drop_units += units);
+    }
+
     /// Record one local offline deal for `model`: `relus` ReLUs' worth
     /// of material produced in `us` microseconds of wall time. Fed by
     /// the pool refill threads and by dry leases; the snapshot's
@@ -329,6 +452,28 @@ impl Metrics {
                 batch_size_mean: m.batch_size.mean_us(),
                 batch_req_p99_us: m.batch_req_us.percentile_us(99.0),
                 bank_depths: m.bank_depths.clone(),
+                demand_ewma: m.demand_ewma,
+                demand_weight: m.demand_weight,
+            })
+            .collect();
+        let links: Vec<LinkSnapshot> = self
+            .links
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|l| LinkSnapshot {
+                label: l.label.clone(),
+                fetches: l.fetches,
+                units: l.units,
+                bytes: l.bytes,
+                failures: l.failures,
+                reconnects: l.reconnects,
+                steals: l.steals,
+                stolen_from: l.stolen_from,
+                late_drop_units: l.late_drop_units,
+                fetch_p50_us: l.fetch_us.percentile_us(50.0),
+                fetch_p99_us: l.fetch_us.percentile_us(99.0),
+                fetch_mean_us: l.fetch_us.mean_us(),
             })
             .collect();
         Snapshot {
@@ -366,6 +511,7 @@ impl Metrics {
             deal_relus,
             deal_relus_per_s: rate_per_s(deal_relus, deal_wall_us),
             models,
+            links,
         }
     }
 }
@@ -496,6 +642,39 @@ mod tests {
         assert_eq!(row.sheds, 2);
         let other = s.models.iter().find(|r| r.fingerprint == 7).unwrap();
         assert_eq!(other.sheds, 1);
+    }
+
+    #[test]
+    fn link_rows_and_demand_gauges_recorded() {
+        let m = Metrics::default();
+        assert!(m.snapshot().links.is_empty(), "no rows before registration");
+        m.register_links(&["dealer-a".to_string(), "dealer-b".to_string()]);
+        m.record_link_fetch(0, 2_000, 4_096, 8);
+        m.record_link_fetch(0, 4_000, 4_096, 8);
+        m.record_link_failure(1);
+        m.record_link_reconnect(1);
+        m.record_link_steal(0, 1);
+        m.record_link_late_drop(1, 8);
+        // Out-of-range link indices are ignored, not panics.
+        m.record_link_fetch(9, 1, 1, 1);
+        m.set_demand(M, 12.5, 0.8);
+        let s = m.snapshot();
+        assert_eq!(s.links.len(), 2);
+        let a = &s.links[0];
+        assert_eq!(a.label, "dealer-a");
+        assert_eq!(a.fetches, 2);
+        assert_eq!(a.units, 16);
+        assert_eq!(a.bytes, 8_192);
+        assert_eq!(a.steals, 1);
+        assert!((a.fetch_mean_us - 3_000.0).abs() < 1e-9);
+        let b = &s.links[1];
+        assert_eq!(b.failures, 1);
+        assert_eq!(b.reconnects, 1);
+        assert_eq!(b.stolen_from, 1);
+        assert_eq!(b.late_drop_units, 8);
+        let row = s.models.iter().find(|r| r.fingerprint == M).unwrap();
+        assert!((row.demand_ewma - 12.5).abs() < 1e-9);
+        assert!((row.demand_weight - 0.8).abs() < 1e-9);
     }
 
     #[test]

@@ -20,23 +20,30 @@
 //!
 //! * [`registry`] — the [`ModelRegistry`]: fingerprint →
 //!   plan + per-model dealing base seed (disjoint seq namespaces) +
-//!   demand weight. Shared by the pool, the service front-end, and the
-//!   remote-dealer connector.
+//!   static demand weight (the cold-start refill prior; live refill
+//!   weights come from the [`registry::LeaseRate`] EWMA). Shared by the
+//!   pool, the service front-end, and the remote-dealer connectors.
 //! * [`pool`] — the offline-material bank, sharded by **model and
 //!   layer**: per registered model, one bank of linear-precompute
 //!   spines plus one bank per ReLU layer, each keyed by session
-//!   sequence number in that model's namespace; dealers refill the
-//!   emptiest `(model, layer)` bank first (deficits weighted by demand
-//!   rate) and a lease assembles a session from one shard's seq-aligned
-//!   fronts (bit-identical to a whole-session deal from the same
-//!   session RNG). Remote units are fingerprint-checked at staging —
-//!   material for model B can never land in model A's shard. A dry
-//!   lease deals inline and reports the measured deal latency
-//!   ([`pool::Lease`]). Refills come from a [`pool::RefillSource`]:
-//!   inline deal, or a standalone dealer process streaming
-//!   model-addressed layer batches over [`crate::wire`]
-//!   (`ServiceConfig::dealer_addr`) — one connection serves every
-//!   registered model.
+//!   sequence number in that model's namespace; refill claims chase the
+//!   emptiest `(model, layer)` bank first (deficits weighted by the
+//!   lease-rate EWMA, demand priors before traffic exists) and a lease
+//!   assembles a session from one shard's seq-aligned fronts
+//!   (bit-identical to a whole-session deal from the same session
+//!   RNG). Remote units are fingerprint-checked at staging — material
+//!   for model B can never land in model A's shard. A dry lease deals
+//!   inline and reports the measured deal latency ([`pool::Lease`]).
+//!   Refills come from a [`pool::RefillSource`]: inline deal, or a
+//!   **fleet** of standalone dealer processes
+//!   ([`pool::DealerEndpoint`], `ServiceConfig::dealer_addrs`,
+//!   optionally PSK-authenticated via [`crate::wire::auth`]) streaming
+//!   model-addressed layer batches over [`crate::wire`]. Seq-addressed
+//!   dealing purity lets the pool partition claims across links,
+//!   work-steal stale claims onto idle links, and hand a failed link's
+//!   claims off for re-issue — one claim ledger, exact accounting,
+//!   bit-identical banks whichever link produced each piece
+//!   ([`pool::PoolTuning`] holds the steal/EWMA knobs).
 //! * [`batcher`] — groups incoming requests into dispatch batches
 //!   (max-size / max-delay policy, validated at service start), split
 //!   model-homogeneous ([`batcher::ModelBatch`]) so each batch leases
@@ -54,9 +61,11 @@
 //!   dry-deal), throughput counters, pool-dry counters, batch-shape
 //!   histograms (requests per dispatched batch, amortized per-request
 //!   share of the batch wall), the live ingress-queue depth gauge and
-//!   shed counters consumed by admission control, and a **per-model
-//!   row** (bank depths, refill counters, latency histograms, sheds)
-//!   for every served plan.
+//!   shed counters consumed by admission control, a **per-model row**
+//!   (bank depths, refill counters, latency histograms, sheds, EWMA
+//!   demand gauges) for every served plan, and a **per-link row**
+//!   (fetches, bytes, failures, reconnects, steals, late drops) for
+//!   every fleet link.
 //! * [`service`] — the assembled `PiService` front-end:
 //!   [`PiService::start_multi`] serves a list of plans;
 //!   [`PiService::start`] is the single-plan thin wrapper (dealt bytes
@@ -79,6 +88,6 @@ pub mod router;
 pub mod service;
 
 pub use metrics::{Metrics, ModelSnapshot};
-pub use pool::{Lease, MaterialPool, RefillSource};
-pub use registry::{model_base_seed, ModelEntry, ModelRegistry};
+pub use pool::{DealerEndpoint, Lease, MaterialPool, PoolTuning, RefillSource};
+pub use registry::{model_base_seed, LeaseRate, ModelEntry, ModelRegistry};
 pub use service::{ModelConfig, PiService, ResponseHandle, ServiceConfig, SubmitError};

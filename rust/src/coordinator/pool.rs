@@ -1,4 +1,5 @@
-//! The offline-material bank, sharded by **model and layer**.
+//! The offline-material bank, sharded by **model and layer**, refilled
+//! by a **fleet** of dealer links.
 //!
 //! Real PI fleets serve several architectures at once (Circa's per-ReLU
 //! savings compose with CryptoNAS/DeepReDuce-style network-level ReLU
@@ -9,13 +10,9 @@
 //! spines ([`LinearSpine`] — masks, HE precomputes, blinds; cheap) plus
 //! one bank per ReLU layer (garbled tables, label arenas, triples; the
 //! expensive part), each keyed by a session **sequence number** in that
-//! model's own seq namespace (its registry base seed). Dealers refill
-//! the emptiest `(model, layer)` bank first — deficits weighted by each
-//! model's demand rate (the registry entry's
-//! [`demand`](crate::coordinator::registry::ModelEntry::demand) weight)
-//! so a model taking 3× the traffic gets its banks refilled 3× as
-//! eagerly — and [`MaterialPool::lease_model`] assembles a
-//! [`Session`] from the front entry of every bank of that model's shard.
+//! model's own seq namespace (its registry base seed).
+//! [`MaterialPool::lease_model`] assembles a [`Session`] from the front
+//! entry of every bank of that model's shard.
 //!
 //! Seq-addressing is what makes the shards composable: entry `(model,
 //! bank, seq)` is a pure function of `(model base seed, seq, layer)`
@@ -23,30 +20,63 @@
 //! ([`crate::protocol::server::session_rng`]), so independently dealt
 //! entries with equal seqs assemble into exactly the session a whole
 //! inline deal from that session RNG would produce — bit-identical,
-//! whichever dealer thread or connection produced each piece. Leases pop
-//! every bank's front at once, so a shard's fronts stay seq-aligned
-//! structurally, and per-model base seeds keep two shards' seq spaces
-//! from ever colliding.
+//! whichever dealer thread, connection, or **process** produced each
+//! piece. Leases pop every bank's front at once, so a shard's fronts
+//! stay seq-aligned structurally, and per-model base seeds keep two
+//! shards' seq spaces from ever colliding.
+//!
+//! ## The fleet scheduler
 //!
 //! Refills come from a [`RefillSource`]: the inline deal (garble
-//! in-process, from the shard's own base seed) or a remote dealer
-//! process reached over [`crate::wire`]'s model-addressed layer-granular
-//! streaming round — the paper's deployment shape, with the largest
-//! frame bounded by the largest single layer batch. Claim accounting is
-//! exact **per shard**: a bank's staged + in-flight entries never exceed
-//! `target`, so racing dealer threads cannot overshoot any bank and a
-//! hot model cannot starve accounting of a cold one (cross-model
-//! overshoot is structurally impossible — claims are committed against
-//! one `(model, bank)` pair). Remote units are fingerprint-checked at
-//! staging: a `LayerBatch`/`Spine` tagged with another model's
-//! fingerprint is dropped and counted
+//! in-process, from the shard's own base seed) or a **fleet** of remote
+//! dealer processes ([`DealerEndpoint`]) reached over
+//! [`crate::wire`]'s model-addressed layer-granular streaming round.
+//! Every remote link runs the same loop: connect (before claiming, so a
+//! dead dealer never strands work), claim a batch of seqs from the
+//! emptiest `(model, bank)` pair, fetch, stage. Because dealing is a
+//! pure function of `(base seed, seq)`, *any* link can produce *any*
+//! claimed unit — which is what makes the fleet self-balancing:
+//!
+//! * **Claim ledger.** Every remote claim is a ticket in a
+//!   [`ClaimRecord`] ledger naming its `(shard, bank, seqs, link)`. A
+//!   ticket resolves exactly once — completed (units staged), abandoned
+//!   (seqs back to the bank's retry list), or transferred (stolen).
+//! * **Work stealing.** An idle link (no fresh deficit anywhere) steals
+//!   the oldest other-link claim outstanding longer than
+//!   [`PoolTuning::steal_after`]: the ledger entry is re-issued under
+//!   the thief's ticket and the victim's ticket ceases to exist. The
+//!   thief fetches the *same seqs*, so the staged material is
+//!   bit-identical regardless of which link produced it. If the
+//!   victim's fetch later completes anyway, its ticket is gone and its
+//!   units are **dropped, never staged** ([`MaterialPool::late_drop_units`])
+//!   — a seq can never be double-staged and a bank can never overshoot.
+//! * **Reconnect with handoff.** A link whose fetch fails abandons its
+//!   claimed seqs back to the bank retries (re-issued to whichever link
+//!   claims next — usually a healthy one), drops its connection, and
+//!   backs off exponentially (capped); repeated failures quarantine the
+//!   link in ever-longer re-probe sleeps without ever blocking the rest
+//!   of the fleet. Fetch poisoning is therefore **link-scoped**: one
+//!   wedged dealer costs its claims a handoff, not the pool.
+//! * **Traffic-adaptive weights.** Bank deficits are weighted by an
+//!   EWMA of per-model lease rates
+//!   ([`crate::coordinator::registry::LeaseRate`], half-life
+//!   [`PoolTuning::demand_half_life`]): refill chases measured demand.
+//!   Until total traffic crosses a minimum signal, the registry's
+//!   static demand weights act as the cold-start prior; once live, each
+//!   model's weight is its share of recent leases plus a floor so cold
+//!   models keep a trickle of refill.
+//!
+//! Claim accounting is exact **per shard**: a bank's staged + in-flight
+//! entries never exceed `target`, so racing links cannot overshoot any
+//! bank and a hot model cannot starve accounting of a cold one. Remote
+//! units are fingerprint-checked at staging: a `LayerBatch`/`Spine`
+//! tagged with another model's fingerprint is dropped and counted
 //! ([`MaterialPool::fingerprint_drops`]), never banked into the wrong
-//! shard. Failed claims are abandoned back into a retry list, and
-//! [`MaterialPool::wait_ready`] is stop-aware, so a dealer that never
-//! connects cannot hang warmup or shutdown forever.
+//! shard. [`MaterialPool::wait_ready`] is stop-aware, so a fleet that
+//! never connects cannot hang warmup or shutdown forever.
 
 use super::metrics::Metrics;
-use super::registry::ModelRegistry;
+use super::registry::{LeaseRate, ModelRegistry};
 use crate::protocol::client::ClientNet;
 use crate::protocol::offline::{ClientReluMaterial, ServerReluMaterial};
 use crate::protocol::server::{
@@ -60,7 +90,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// One ready-to-serve inference session.
 pub struct Session {
@@ -104,8 +134,8 @@ fn contiguous_from<V>(m: &BTreeMap<u64, V>, head: u64) -> usize {
 /// One model's layer-sharded bank. Bank index 0 holds linear spines;
 /// bank `1 + li` holds ReLU layer `li`. Entries are staged in
 /// `BTreeMap`s keyed by seq because completions can land out of order
-/// (racing dealers, retried claims); contiguity from `head` is what
-/// counts as ready.
+/// (racing dealers, retried claims, stolen claims); contiguity from
+/// `head` is what counts as ready.
 struct Bank {
     /// Seq of the next session [`MaterialPool::lease_model`] will
     /// assemble.
@@ -114,7 +144,9 @@ struct Bank {
     relus: Vec<BTreeMap<u64, ReluEntry>>,
     /// Next fresh seq each bank hands out to a dealer claim.
     next_claim: Vec<u64>,
-    /// Claims handed out but not yet completed or abandoned.
+    /// Claims handed out but not yet completed or abandoned. Every
+    /// in-flight unit is owned by exactly one claim — an inline
+    /// claimer's loop iteration or one live remote ticket.
     in_flight: Vec<usize>,
     /// Abandoned claims, re-dealt before fresh seqs are claimed.
     retries: Vec<Vec<u64>>,
@@ -217,16 +249,51 @@ struct Shard {
     /// This model's seq-addressed dealing namespace (inline refills and
     /// the shape the remote dealer must reproduce from *its* registry).
     base_seed: u64,
-    /// Refill-priority weight (scales this shard's bank deficits).
+    /// Static refill-priority weight — the cold-start prior before any
+    /// lease traffic has been observed.
     demand: f64,
+    /// EWMA of this model's lease rate (the live demand signal).
+    lease_rate: LeaseRate,
     bank: Bank,
     /// High-water mark of `head + ready_run()` — sessions ever made
     /// assemblable from this shard.
     high_water: u64,
 }
 
+/// One outstanding remote claim (ledger entry). The ticket id is the
+/// map key; the record names what was claimed and which link holds it.
+struct ClaimRecord {
+    si: usize,
+    bank: usize,
+    seqs: Vec<u64>,
+    link: usize,
+    issued_at: Instant,
+}
+
+/// Per-link health, as seen by [`MaterialPool::link_states`].
+struct LinkState {
+    label: String,
+    connected: bool,
+}
+
+/// Everything behind the pool's one mutex: shards, the remote-claim
+/// ledger, link health, and the fleet counters.
+struct PoolState {
+    shards: Vec<Shard>,
+    claims: BTreeMap<u64, ClaimRecord>,
+    next_ticket: u64,
+    links: Vec<LinkState>,
+    steals: u64,
+    /// Seqs put back for another link to produce — by steal or by
+    /// failure handoff.
+    reissued_seqs: u64,
+    /// Units delivered by a link whose ticket had been stolen: dropped,
+    /// never staged (the thief's copy owns the accounting).
+    late_drop_units: u64,
+}
+
 struct Shared {
-    shards: Mutex<Vec<Shard>>,
+    state: Mutex<PoolState>,
     ready: Condvar,
     refill: Condvar,
     stop: AtomicBool,
@@ -236,25 +303,45 @@ struct Shared {
     fp_drops: AtomicU64,
 }
 
-/// Pick the `(shard, bank)` pair with the largest demand-weighted
-/// deficit and claim up to `max` seqs from it. `None` when every bank of
-/// every shard is at target.
+/// Below this total EWMA score the pool has no meaningful traffic
+/// signal and falls back to the registry's static demand priors.
+const MIN_TRAFFIC_SIGNAL: f64 = 1.0;
+/// Additive weight floor so a currently-cold model keeps a trickle of
+/// refill (it must have warm banks by the time traffic returns).
+const WEIGHT_FLOOR: f64 = 0.05;
+
+/// Per-shard effective refill weights at `now`: lease-rate shares once
+/// there is traffic, static demand priors before.
+fn effective_weights(shards: &[Shard], now: Instant) -> Vec<f64> {
+    let scores: Vec<f64> = shards.iter().map(|s| s.lease_rate.score(now)).collect();
+    let total: f64 = scores.iter().sum();
+    if total < MIN_TRAFFIC_SIGNAL {
+        return shards.iter().map(|s| s.demand).collect();
+    }
+    scores.iter().map(|s| s / total + WEIGHT_FLOOR).collect()
+}
+
+/// Pick the `(shard, bank)` pair with the largest weighted deficit and
+/// claim up to `max` seqs from it. `None` when every bank of every
+/// shard is at target.
 fn claim_weighted_emptiest(
     shards: &mut [Shard],
     target: usize,
     max: usize,
+    now: Instant,
 ) -> Option<(usize, usize, Vec<u64>)> {
+    let weights = effective_weights(shards, now);
     let mut best: Option<(usize, usize, usize)> = None;
     let mut best_w = 0.0f64;
-    for (si, sh) in shards.iter().enumerate() {
+    for ((si, sh), w) in shards.iter().enumerate().zip(weights.iter()) {
         for b in 0..sh.bank.n_banks() {
             let deficit = target.saturating_sub(sh.bank.supply(b));
             if deficit == 0 {
                 continue;
             }
-            let w = deficit as f64 * sh.demand;
-            if w > best_w {
-                best_w = w;
+            let dw = deficit as f64 * w;
+            if dw > best_w {
+                best_w = dw;
                 best = Some((si, b, deficit));
             }
         }
@@ -266,7 +353,7 @@ fn claim_weighted_emptiest(
 }
 
 /// Update a shard's produced high-water mark and its metrics depth gauge
-/// after completions land (caller holds the shards lock).
+/// after completions land (caller holds the state lock).
 fn publish_progress(shards: &mut [Shard], si: usize, metrics: &Option<Arc<Metrics>>) {
     let sh = &mut shards[si];
     let high_water = sh.bank.head + sh.bank.ready_run() as u64;
@@ -305,26 +392,417 @@ fn spine_binds_layers(plan: &NetworkPlan, spine: &LinearSpine, relus: &[ReluEntr
     true
 }
 
+/// One member of the refill fleet: a label (for logs and per-link
+/// metrics rows) and a connect closure that establishes a fresh
+/// [`RemoteDealer`] link. The closure is re-invoked after every
+/// transport failure, so it must be safe to call repeatedly.
+#[derive(Clone)]
+pub struct DealerEndpoint {
+    pub label: String,
+    pub connect: Arc<dyn Fn() -> Result<RemoteDealer> + Send + Sync>,
+}
+
+impl DealerEndpoint {
+    pub fn new(
+        label: impl Into<String>,
+        connect: Arc<dyn Fn() -> Result<RemoteDealer> + Send + Sync>,
+    ) -> Self {
+        Self { label: label.into(), connect }
+    }
+
+    /// A TCP endpoint at `addr`, authenticated with `psk` when set
+    /// ([`RemoteDealer::connect_tcp_psk`]). The label is the address.
+    pub fn tcp(addr: &str, registry: Arc<ModelRegistry>, psk: Option<[u8; 16]>) -> Self {
+        let addr = addr.to_string();
+        let label = addr.clone();
+        let connect: Arc<dyn Fn() -> Result<RemoteDealer> + Send + Sync> =
+            Arc::new(move || RemoteDealer::connect_tcp_psk(&addr, registry.clone(), psk));
+        Self { label, connect }
+    }
+}
+
 /// Where dealer threads get their material.
 pub enum RefillSource {
     /// Deal layer entries inline in local dealer threads (the default).
     Inline,
-    /// Stream per-layer material from a remote dealer process over the
-    /// model-addressed layer-granular wire round. `connect` is called
-    /// (and re-called after transport errors) to establish a
-    /// [`RemoteDealer`]; `batch` caps entries per round trip. All
-    /// connections must reach dealers sharing one registry (per-model
-    /// base seeds) — seq-addressing makes their answers mutually
-    /// consistent.
+    /// Stream per-layer material from a fleet of remote dealer
+    /// processes over the model-addressed layer-granular wire round.
+    /// `batch` caps entries per round trip. All endpoints must reach
+    /// dealers sharing one registry (per-model base seeds) —
+    /// seq-addressing makes their answers mutually consistent, which is
+    /// what lets the pool partition, steal, and re-issue claims across
+    /// them freely.
     Remote {
-        connect: Arc<dyn Fn() -> Result<RemoteDealer> + Send + Sync>,
+        endpoints: Vec<DealerEndpoint>,
         batch: usize,
     },
+}
+
+impl RefillSource {
+    /// A remote fleet over `endpoints`.
+    pub fn remote(endpoints: Vec<DealerEndpoint>, batch: usize) -> Self {
+        RefillSource::Remote { endpoints, batch }
+    }
+
+    /// A single-endpoint fleet from a bare connect closure (the
+    /// pre-fleet call shape; the endpoint is labeled `"dealer"`).
+    pub fn remote_single(
+        connect: Arc<dyn Fn() -> Result<RemoteDealer> + Send + Sync>,
+        batch: usize,
+    ) -> Self {
+        RefillSource::Remote { endpoints: vec![DealerEndpoint::new("dealer", connect)], batch }
+    }
+}
+
+/// Fleet-scheduler knobs. Defaults suit LAN dealers; tests shrink them.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolTuning {
+    /// Age after which an idle link may steal another link's
+    /// outstanding claim.
+    pub steal_after: Duration,
+    /// Half-life of the per-model lease-rate EWMA behind the adaptive
+    /// refill weights.
+    pub demand_half_life: Duration,
+}
+
+impl Default for PoolTuning {
+    fn default() -> Self {
+        Self {
+            steal_after: Duration::from_millis(1000),
+            demand_half_life: Duration::from_secs(10),
+        }
+    }
 }
 
 enum Fetched {
     Spines(Vec<(u64, u64, LinearSpine)>),
     Layers(Vec<(u64, u64, ClientReluMaterial, ServerReluMaterial)>),
+}
+
+/// Exponential failure backoff, stop-aware (sleeps in small slices so
+/// shutdown never waits out a quarantined link's full backoff).
+fn backoff_sleep(shared: &Shared, failures: u64) {
+    let ms = 50u64.saturating_mul(1 << failures.saturating_sub(1).min(7)).min(5_000);
+    let mut slept = 0u64;
+    while slept < ms {
+        if shared.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let step = 25u64.min(ms - slept);
+        std::thread::sleep(Duration::from_millis(step));
+        slept += step;
+    }
+}
+
+/// Claim work for remote link `link`: a fresh weighted-deficit claim if
+/// one exists, else the oldest other-link claim stale past
+/// `steal_after` (ownership transfer — the victim's ticket ceases to
+/// exist), else wait. Returns `None` on stop.
+fn acquire_work(
+    shared: &Shared,
+    link: usize,
+    target: usize,
+    batch: usize,
+    steal_after: Duration,
+    metrics: &Option<Arc<Metrics>>,
+) -> Option<(u64, usize, usize, Vec<u64>, u64)> {
+    let mut state = shared.state.lock().unwrap();
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            return None;
+        }
+        let now = Instant::now();
+        let st = &mut *state;
+        if let Some((si, bank, seqs)) = claim_weighted_emptiest(&mut st.shards, target, batch, now)
+        {
+            let fp = st.shards[si].fingerprint;
+            let ticket = st.next_ticket;
+            st.next_ticket += 1;
+            let rec = ClaimRecord { si, bank, seqs: seqs.clone(), link, issued_at: now };
+            st.claims.insert(ticket, rec);
+            return Some((ticket, si, bank, seqs, fp));
+        }
+        let victim = st
+            .claims
+            .iter()
+            .filter(|(_, r)| r.link != link && now.duration_since(r.issued_at) >= steal_after)
+            .min_by_key(|(_, r)| r.issued_at)
+            .map(|(&t, _)| t);
+        if let Some(t) = victim {
+            let rec = st.claims.remove(&t).expect("victim ticket present");
+            st.steals += 1;
+            st.reissued_seqs += rec.seqs.len() as u64;
+            if let Some(m) = metrics {
+                m.record_link_steal(link, rec.link);
+            }
+            let (si, bank) = (rec.si, rec.bank);
+            let fp = st.shards[si].fingerprint;
+            let seqs = rec.seqs.clone();
+            let ticket = st.next_ticket;
+            st.next_ticket += 1;
+            let rec = ClaimRecord { si, bank, seqs: rec.seqs, link, issued_at: now };
+            st.claims.insert(ticket, rec);
+            return Some((ticket, si, bank, seqs, fp));
+        }
+        // Nothing claimable yet: wake on refill demand, or after
+        // steal_after to re-scan for newly stale claims.
+        let (g, _) = shared.refill.wait_timeout(state, steal_after).unwrap();
+        state = g;
+    }
+}
+
+/// Static per-link parameters of [`run_link`].
+struct LinkCtx {
+    link: usize,
+    label: String,
+    target: usize,
+    batch: usize,
+    steal_after: Duration,
+}
+
+/// One remote fleet link: connect → claim → fetch → stage, forever.
+fn run_link(
+    shared: Arc<Shared>,
+    endpoint: DealerEndpoint,
+    ctx: LinkCtx,
+    metrics: Option<Arc<Metrics>>,
+) {
+    let LinkCtx { link, label, target, batch, steal_after } = ctx;
+    let mut conn: Option<RemoteDealer> = None;
+    // Connect + fetch failures share one counter, reset only on a
+    // successful fetch — a dealer that handshakes but fails every fetch
+    // still gets surfaced (and backed off from).
+    let mut failures = 0u64;
+    // Rounds that delivered fingerprint-mismatched units (throttles the
+    // mistagging-dealer log like `failures` throttles transport errors).
+    let mut drop_rounds = 0u64;
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        // Connect before claiming: a link that cannot reach its dealer
+        // must not strand claimed seqs while it retries.
+        if conn.is_none() {
+            match (endpoint.connect)() {
+                Ok(dealer) => {
+                    if failures > 0 {
+                        if let Some(m) = &metrics {
+                            m.record_link_reconnect(link);
+                        }
+                    }
+                    shared.state.lock().unwrap().links[link].connected = true;
+                    conn = Some(dealer);
+                }
+                Err(e) => {
+                    failures += 1;
+                    if let Some(m) = &metrics {
+                        m.record_link_failure(link);
+                    }
+                    shared.state.lock().unwrap().links[link].connected = false;
+                    if failures.is_power_of_two() {
+                        eprintln!("[pool {label}] dealer connect failed ({failures}x): {e}");
+                    }
+                    backoff_sleep(&shared, failures);
+                    continue;
+                }
+            }
+        }
+        let Some((ticket, si, bank_idx, seqs, fp)) =
+            acquire_work(&shared, link, target, batch, steal_after, &metrics)
+        else {
+            return;
+        };
+        let dealer = conn.as_mut().expect("link connected before claiming");
+        let before = dealer.bytes_received();
+        let t = Timer::new();
+        let fetched: Result<Fetched> = if bank_idx == 0 {
+            dealer.fetch_spines(fp, &seqs).map(Fetched::Spines)
+        } else {
+            dealer.fetch_layers(fp, bank_idx - 1, &seqs).map(Fetched::Layers)
+        };
+        let fetch_us = t.elapsed_us();
+        let wire_bytes = dealer.bytes_received() - before;
+        match fetched {
+            Ok(units) => {
+                failures = 0;
+                let n_units = match &units {
+                    Fetched::Spines(v) => v.len(),
+                    Fetched::Layers(v) => v.len(),
+                } as u64;
+                let mut state = shared.state.lock().unwrap();
+                let Some(rec) = state.claims.remove(&ticket) else {
+                    // This claim was stolen while the fetch was in
+                    // flight; the thief's ticket owns the seqs now.
+                    // Staging these units would double-bank them, so
+                    // drop the whole delivery (bit-identity means
+                    // nothing is lost — the thief stages equal bytes).
+                    state.late_drop_units += n_units;
+                    if let Some(m) = &metrics {
+                        m.record_link_late_drop(link, n_units);
+                    }
+                    continue;
+                };
+                // Stage fingerprint-matching units; drop + count +
+                // re-claim the rest — a unit tagged for model B can
+                // never land in model A's shard.
+                let st = &mut *state;
+                let mut answered: Vec<u64> = Vec::with_capacity(n_units as usize);
+                let mut dropped: Vec<u64> = Vec::new();
+                let mut staged = 0u64;
+                let mut staged_spines = 0u64;
+                match units {
+                    Fetched::Spines(v) => {
+                        for (ufp, seq, spine) in v {
+                            answered.push(seq);
+                            if ufp == fp {
+                                staged += 1;
+                                staged_spines += 1;
+                                st.shards[si].bank.complete_spine(seq, spine);
+                            } else {
+                                dropped.push(seq);
+                            }
+                        }
+                    }
+                    Fetched::Layers(v) => {
+                        for (ufp, seq, cm, sm) in v {
+                            answered.push(seq);
+                            if ufp == fp {
+                                staged += 1;
+                                st.shards[si].bank.complete_relu(bank_idx - 1, seq, (cm, sm));
+                            } else {
+                                dropped.push(seq);
+                            }
+                        }
+                    }
+                }
+                // A short answer (dealer bug) must not leak in-flight
+                // accounting: claimed-but-unanswered seqs go back to
+                // the retry list so the ledger stays exact.
+                let missing: Vec<u64> =
+                    rec.seqs.iter().copied().filter(|s| !answered.contains(s)).collect();
+                if !dropped.is_empty() {
+                    shared.fp_drops.fetch_add(dropped.len() as u64, Ordering::Relaxed);
+                    if let Some(m) = &metrics {
+                        m.fp_mismatch_drops.fetch_add(dropped.len() as u64, Ordering::Relaxed);
+                    }
+                    st.shards[si].bank.abandon(bank_idx, &dropped);
+                }
+                if !missing.is_empty() {
+                    st.shards[si].bank.abandon(bank_idx, &missing);
+                }
+                // Only material that actually staged counts toward the
+                // model's refill row — a mistagging dealer must not
+                // make a starved model look well fed. Recorded under
+                // the state lock so a wait_ready waiter can never see
+                // the staging without its counters.
+                if let Some(m) = &metrics {
+                    m.record_layer_refill(fp, fetch_us.max(1), wire_bytes, staged, staged_spines);
+                    m.record_link_fetch(link, fetch_us.max(1), wire_bytes, staged);
+                }
+                publish_progress(&mut st.shards, si, &metrics);
+                drop(state);
+                shared.ready.notify_all();
+                if !dropped.is_empty() || !missing.is_empty() {
+                    shared.refill.notify_all();
+                }
+                if !dropped.is_empty() {
+                    // A mistagging dealer is a failure mode, not a hot
+                    // path: surface it (throttled, outside the lock)
+                    // and slow the re-claim so the abandoned seqs don't
+                    // spin.
+                    drop_rounds += 1;
+                    if drop_rounds.is_power_of_two() {
+                        eprintln!(
+                            "[pool {label}] dropped {} unit(s) tagged for another model \
+                             (wanted {fp:#018x}; {drop_rounds} rounds affected)",
+                            dropped.len()
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+            Err(e) => {
+                // Transport failure: hand the claim off (abandoned seqs
+                // are re-issued to whichever link claims next), drop
+                // the connection, quarantine with backoff. The failure
+                // is link-scoped by construction — no shared state is
+                // poisoned.
+                failures += 1;
+                if let Some(m) = &metrics {
+                    m.record_link_failure(link);
+                }
+                if failures.is_power_of_two() {
+                    eprintln!("[pool {label}] layer fetch failed ({failures}x): {e}");
+                }
+                let mut state = shared.state.lock().unwrap();
+                if let Some(rec) = state.claims.remove(&ticket) {
+                    state.reissued_seqs += rec.seqs.len() as u64;
+                    let st = &mut *state;
+                    st.shards[rec.si].bank.abandon(rec.bank, &rec.seqs);
+                }
+                // (A missing ticket means the claim was stolen
+                // mid-fetch — the thief owns the seqs; nothing to hand
+                // off.)
+                state.links[link].connected = false;
+                drop(state);
+                shared.refill.notify_all();
+                conn = None;
+                backoff_sleep(&shared, failures);
+            }
+        }
+    }
+}
+
+/// One inline dealer thread: claim one seq, garble it locally, stage.
+/// Inline claims need no ledger tickets — there is no transport to
+/// fail, so a claim always completes.
+fn run_inline(
+    shared: Arc<Shared>,
+    target: usize,
+    deal_threads: usize,
+    metrics: Option<Arc<Metrics>>,
+) {
+    loop {
+        let (si, bank_idx, seq, fp, plan, base_seed) = {
+            let mut state = shared.state.lock().unwrap();
+            loop {
+                if shared.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                let now = Instant::now();
+                let st = &mut *state;
+                match claim_weighted_emptiest(&mut st.shards, target, 1, now) {
+                    Some((si, b, seqs)) => {
+                        let sh = &st.shards[si];
+                        break (si, b, seqs[0], sh.fingerprint, sh.plan.clone(), sh.base_seed);
+                    }
+                    None => state = shared.refill.wait(state).unwrap(),
+                }
+            }
+        };
+        // Deal the claimed entry outside the lock (garbling is slow);
+        // the deal itself fans out over deal_threads.
+        if bank_idx == 0 {
+            let spine = deal_spine(&plan, &mut session_rng(base_seed, seq));
+            let mut state = shared.state.lock().unwrap();
+            let st = &mut *state;
+            st.shards[si].bank.complete_spine(seq, spine);
+            publish_progress(&mut st.shards, si, &metrics);
+        } else {
+            let li = bank_idx - 1;
+            let t = Timer::new();
+            let (cm, sm) =
+                deal_relu_layer_mt(&plan, &mut session_rng(base_seed, seq), li, deal_threads);
+            if let Some(m) = &metrics {
+                m.record_deal(fp, cm.n() as u64, t.elapsed_us());
+            }
+            let mut state = shared.state.lock().unwrap();
+            let st = &mut *state;
+            st.shards[si].bank.complete_relu(li, seq, (cm, sm));
+            publish_progress(&mut st.shards, si, &metrics);
+        }
+        shared.ready.notify_all();
+    }
 }
 
 /// Material bank with background dealer threads, sharded per registered
@@ -368,13 +846,7 @@ impl MaterialPool {
         )
     }
 
-    /// Spawn a pool with one shard per model in `registry`. When
-    /// `metrics` is given, remote refills record their latency and
-    /// bytes-on-wire, inline deals record their ReLU throughput, and the
-    /// per-bank depth gauges are published — all labeled per model.
-    /// `deal_threads` splits each inline (and dry-lease) deal's garble
-    /// and triple columns across threads — the column-wise RNG schedule
-    /// keeps the material bit-identical for every value.
+    /// [`Self::start_multi_tuned`] with default [`PoolTuning`].
     pub fn start_multi(
         registry: Arc<ModelRegistry>,
         target: usize,
@@ -382,6 +854,37 @@ impl MaterialPool {
         source: RefillSource,
         metrics: Option<Arc<Metrics>>,
         deal_threads: usize,
+    ) -> Self {
+        Self::start_multi_tuned(
+            registry,
+            target,
+            n_dealers,
+            source,
+            metrics,
+            deal_threads,
+            PoolTuning::default(),
+        )
+    }
+
+    /// Spawn a pool with one shard per model in `registry`. For an
+    /// inline source, `n_dealers` local dealer threads refill the
+    /// banks; for a remote source the pool runs `max(n_dealers,
+    /// #endpoints)` fleet links (endpoints round-robined when links
+    /// outnumber them). When `metrics` is given, refills record their
+    /// latency and bytes-on-wire per model *and* per link, inline deals
+    /// record their ReLU throughput, and per-bank depth gauges plus the
+    /// EWMA demand gauges are published. `deal_threads` splits each
+    /// inline (and dry-lease) deal's garble and triple columns across
+    /// threads — the column-wise RNG schedule keeps the material
+    /// bit-identical for every value.
+    pub fn start_multi_tuned(
+        registry: Arc<ModelRegistry>,
+        target: usize,
+        n_dealers: usize,
+        source: RefillSource,
+        metrics: Option<Arc<Metrics>>,
+        deal_threads: usize,
+        tuning: PoolTuning,
     ) -> Self {
         assert!(!registry.is_empty(), "pool needs at least one registered model");
         let deal_threads = deal_threads.max(1);
@@ -393,12 +896,48 @@ impl MaterialPool {
                 plan: e.plan.clone(),
                 base_seed: e.base_seed,
                 demand: e.demand,
+                lease_rate: LeaseRate::new(tuning.demand_half_life),
                 bank: Bank::new(e.plan.n_relu_layers()),
                 high_water: 0,
             })
             .collect();
+        let (link_labels, remote) = match source {
+            RefillSource::Inline => (Vec::new(), None),
+            RefillSource::Remote { endpoints, batch } => {
+                assert!(!endpoints.is_empty(), "remote refill needs at least one endpoint");
+                let n_links = n_dealers.max(1).max(endpoints.len());
+                let labels: Vec<String> = (0..n_links)
+                    .map(|i| {
+                        let ep = &endpoints[i % endpoints.len()];
+                        if n_links > endpoints.len() {
+                            format!("{}#{i}", ep.label)
+                        } else {
+                            ep.label.clone()
+                        }
+                    })
+                    .collect();
+                (labels, Some((endpoints, batch.max(1))))
+            }
+        };
+        if let Some(m) = &metrics {
+            if !link_labels.is_empty() {
+                m.register_links(&link_labels);
+            }
+        }
+        let links: Vec<LinkState> = link_labels
+            .iter()
+            .map(|l| LinkState { label: l.clone(), connected: false })
+            .collect();
         let shared = Arc::new(Shared {
-            shards: Mutex::new(shards),
+            state: Mutex::new(PoolState {
+                shards,
+                claims: BTreeMap::new(),
+                next_ticket: 0,
+                links,
+                steals: 0,
+                reissued_seqs: 0,
+                late_drop_units: 0,
+            }),
             ready: Condvar::new(),
             refill: Condvar::new(),
             stop: AtomicBool::new(false),
@@ -406,237 +945,39 @@ impl MaterialPool {
             fp_drops: AtomicU64::new(0),
         });
         let mut dealers = Vec::new();
-        for d in 0..n_dealers.max(1) {
-            let shared = shared.clone();
-            let metrics = metrics.clone();
-            let remote = match &source {
-                RefillSource::Inline => None,
-                RefillSource::Remote { connect, batch } => {
-                    Some((connect.clone(), (*batch).max(1)))
+        match remote {
+            None => {
+                for _ in 0..n_dealers.max(1) {
+                    let shared = shared.clone();
+                    let metrics = metrics.clone();
+                    dealers.push(std::thread::spawn(move || {
+                        run_inline(shared, target, deal_threads, metrics)
+                    }));
                 }
-            };
-            dealers.push(std::thread::spawn(move || {
-                let mut conn: Option<RemoteDealer> = None;
-                // Connect + fetch failures share one counter, reset only
-                // on a successful fetch — a dealer that handshakes but
-                // fails every fetch still gets surfaced.
-                let mut failures = 0u64;
-                // Rounds that delivered fingerprint-mismatched units
-                // (throttles the mistagging-dealer log like `failures`
-                // throttles transport errors — a lying dealer retries
-                // forever and must not flood stderr).
-                let mut drop_rounds = 0u64;
-                let claim_max = remote.as_ref().map_or(1, |(_, batch)| *batch);
-                loop {
-                    // Claim work from the emptiest (model, bank) pair —
-                    // deficits demand-weighted — waiting while every bank
-                    // of every shard is at target.
-                    let (si, bank_idx, seqs, fp, plan, base_seed) = {
-                        let mut shards = shared.shards.lock().unwrap();
-                        loop {
-                            if shared.stop.load(Ordering::Relaxed) {
-                                return;
-                            }
-                            match claim_weighted_emptiest(&mut shards, target, claim_max) {
-                                Some((si, b, seqs)) => {
-                                    let sh = &shards[si];
-                                    break (
-                                        si,
-                                        b,
-                                        seqs,
-                                        sh.fingerprint,
-                                        sh.plan.clone(),
-                                        sh.base_seed,
-                                    );
-                                }
-                                None => shards = shared.refill.wait(shards).unwrap(),
-                            }
-                        }
+            }
+            Some((endpoints, batch)) => {
+                for (i, label) in link_labels.iter().enumerate() {
+                    let shared = shared.clone();
+                    let metrics = metrics.clone();
+                    let ep = endpoints[i % endpoints.len()].clone();
+                    let ctx = LinkCtx {
+                        link: i,
+                        label: label.clone(),
+                        target,
+                        batch,
+                        steal_after: tuning.steal_after,
                     };
-                    match &remote {
-                        None => {
-                            // Inline: deal the claimed entry outside the
-                            // lock (garbling is slow); the deal itself
-                            // fans out over deal_threads.
-                            let seq = seqs[0];
-                            if bank_idx == 0 {
-                                let spine = deal_spine(&plan, &mut session_rng(base_seed, seq));
-                                let mut shards = shared.shards.lock().unwrap();
-                                shards[si].bank.complete_spine(seq, spine);
-                                publish_progress(&mut shards, si, &metrics);
-                            } else {
-                                let li = bank_idx - 1;
-                                let t = Timer::new();
-                                let (cm, sm) = deal_relu_layer_mt(
-                                    &plan,
-                                    &mut session_rng(base_seed, seq),
-                                    li,
-                                    deal_threads,
-                                );
-                                if let Some(m) = &metrics {
-                                    m.record_deal(fp, cm.n() as u64, t.elapsed_us());
-                                }
-                                let mut shards = shared.shards.lock().unwrap();
-                                shards[si].bank.complete_relu(li, seq, (cm, sm));
-                                publish_progress(&mut shards, si, &metrics);
-                            }
-                            shared.ready.notify_all();
-                        }
-                        Some((connect, _)) => {
-                            if conn.is_none() {
-                                match connect() {
-                                    Ok(dealer) => conn = Some(dealer),
-                                    Err(e) => {
-                                        // Surface the failure (throttled):
-                                        // a dead/mismatched dealer would
-                                        // otherwise starve the banks
-                                        // silently.
-                                        failures += 1;
-                                        if failures.is_power_of_two() {
-                                            eprintln!(
-                                                "[pool d{d}] dealer connect failed \
-                                                 ({failures}x): {e}"
-                                            );
-                                        }
-                                        let mut shards = shared.shards.lock().unwrap();
-                                        shards[si].bank.abandon(bank_idx, &seqs);
-                                        drop(shards);
-                                        std::thread::sleep(Duration::from_millis(50));
-                                        continue;
-                                    }
-                                }
-                            }
-                            let dealer = conn.as_mut().unwrap();
-                            let before = dealer.bytes_received();
-                            let t = Timer::new();
-                            let fetched: Result<Fetched> = if bank_idx == 0 {
-                                dealer.fetch_spines(fp, &seqs).map(Fetched::Spines)
-                            } else {
-                                dealer
-                                    .fetch_layers(fp, bank_idx - 1, &seqs)
-                                    .map(Fetched::Layers)
-                            };
-                            let fetch_us = t.elapsed_us();
-                            let wire_bytes = dealer.bytes_received() - before;
-                            match fetched {
-                                Ok(units) => {
-                                    failures = 0;
-                                    // Stage fingerprint-matching units;
-                                    // drop + count + re-claim the rest —
-                                    // a unit tagged for model B can never
-                                    // land in model A's shard.
-                                    let mut dropped: Vec<u64> = Vec::new();
-                                    let mut staged = 0u64;
-                                    let mut staged_spines = 0u64;
-                                    let mut shards = shared.shards.lock().unwrap();
-                                    match units {
-                                        Fetched::Spines(v) => {
-                                            for (ufp, seq, spine) in v {
-                                                if ufp == fp {
-                                                    staged += 1;
-                                                    staged_spines += 1;
-                                                    shards[si]
-                                                        .bank
-                                                        .complete_spine(seq, spine);
-                                                } else {
-                                                    dropped.push(seq);
-                                                }
-                                            }
-                                        }
-                                        Fetched::Layers(v) => {
-                                            for (ufp, seq, cm, sm) in v {
-                                                if ufp == fp {
-                                                    staged += 1;
-                                                    shards[si].bank.complete_relu(
-                                                        bank_idx - 1,
-                                                        seq,
-                                                        (cm, sm),
-                                                    );
-                                                } else {
-                                                    dropped.push(seq);
-                                                }
-                                            }
-                                        }
-                                    }
-                                    if !dropped.is_empty() {
-                                        shared
-                                            .fp_drops
-                                            .fetch_add(dropped.len() as u64, Ordering::Relaxed);
-                                        if let Some(m) = &metrics {
-                                            m.fp_mismatch_drops.fetch_add(
-                                                dropped.len() as u64,
-                                                Ordering::Relaxed,
-                                            );
-                                        }
-                                        shards[si].bank.abandon(bank_idx, &dropped);
-                                    }
-                                    // Only material that actually staged
-                                    // counts toward the model's refill
-                                    // row — a mistagging dealer must not
-                                    // make a starved model look well fed.
-                                    // Recorded under the shards lock so
-                                    // a wait_ready waiter can never see
-                                    // the staging without its counters.
-                                    if let Some(m) = &metrics {
-                                        m.record_layer_refill(
-                                            fp,
-                                            fetch_us.max(1),
-                                            wire_bytes,
-                                            staged,
-                                            staged_spines,
-                                        );
-                                    }
-                                    publish_progress(&mut shards, si, &metrics);
-                                    drop(shards);
-                                    shared.ready.notify_all();
-                                    if !dropped.is_empty() {
-                                        // A mistagging dealer is a
-                                        // failure mode, not a hot path:
-                                        // surface it (throttled, outside
-                                        // the lock) and slow the re-claim
-                                        // so the abandoned seqs don't
-                                        // spin.
-                                        drop_rounds += 1;
-                                        if drop_rounds.is_power_of_two() {
-                                            eprintln!(
-                                                "[pool d{d}] dropped {} unit(s) tagged for \
-                                                 another model (wanted {fp:#018x}; \
-                                                 {drop_rounds} rounds affected)",
-                                                dropped.len()
-                                            );
-                                        }
-                                        std::thread::sleep(Duration::from_millis(50));
-                                    }
-                                }
-                                Err(e) => {
-                                    // Transport hiccup: surface it
-                                    // (throttled), put the claims back,
-                                    // drop the link, reconnect next
-                                    // round.
-                                    failures += 1;
-                                    if failures.is_power_of_two() {
-                                        eprintln!(
-                                            "[pool d{d}] layer fetch failed \
-                                             ({failures}x): {e}"
-                                        );
-                                    }
-                                    let mut shards = shared.shards.lock().unwrap();
-                                    shards[si].bank.abandon(bank_idx, &seqs);
-                                    drop(shards);
-                                    conn = None;
-                                    std::thread::sleep(Duration::from_millis(50));
-                                }
-                            }
-                        }
-                    }
+                    dealers.push(std::thread::spawn(move || {
+                        run_link(shared, ep, ctx, metrics)
+                    }));
                 }
-            }));
+            }
         }
         Self { registry, shared, target, deal_threads, metrics, dealers }
     }
 
     /// The pool's model registry (shared with the service and the remote
-    /// connect closure).
+    /// connect closures).
     pub fn registry(&self) -> &Arc<ModelRegistry> {
         &self.registry
     }
@@ -658,18 +999,26 @@ impl MaterialPool {
     /// dry path measures the inline deal so callers can record it into
     /// the serving [`super::Metrics`] — pool-dry tail latency is exactly
     /// what a deployment's offline-throughput shortfall looks like.
-    /// Panics if `model` is not registered (the service validates at
-    /// submission).
+    /// Every lease also bumps the model's [`LeaseRate`] EWMA — the
+    /// traffic signal behind the adaptive refill weights. Panics if
+    /// `model` is not registered (the service validates at submission).
     pub fn lease_model(&self, model: u64, rng: &mut Rng) -> Lease {
         let si = self.shard_index(model);
         let popped = {
-            let mut shards = self.shared.shards.lock().unwrap();
-            if shards[si].bank.ready_run() >= 1 {
-                let entry = shards[si].bank.pop_head();
+            let mut state = self.shared.state.lock().unwrap();
+            let now = Instant::now();
+            state.shards[si].lease_rate.bump(now);
+            if let Some(m) = &self.metrics {
+                let weights = effective_weights(&state.shards, now);
+                let score = state.shards[si].lease_rate.score(now);
+                m.set_demand(model, score, weights[si]);
+            }
+            if state.shards[si].bank.ready_run() >= 1 {
+                let entry = state.shards[si].bank.pop_head();
                 // Keep the depth gauge honest while leases drain the
                 // banks (the produced high-water update inside is a
                 // monotone no-op on pops).
-                publish_progress(&mut shards, si, &self.metrics);
+                publish_progress(&mut state.shards, si, &self.metrics);
                 Some(entry)
             } else {
                 None
@@ -708,29 +1057,29 @@ impl MaterialPool {
 
     /// Block until at least `n` full sessions are assemblable for
     /// **every** registered model (warmup). Stop-aware: returns early
-    /// once [`Self::stop`]/[`Self::shutdown`] is called, so a dealer
+    /// once [`Self::stop`]/[`Self::shutdown`] is called, so a fleet
     /// that never connects cannot hang warmup forever.
     pub fn wait_ready(&self, n: usize) {
         let want = n.min(self.target);
-        let mut shards = self.shared.shards.lock().unwrap();
-        while shards.iter().any(|s| s.bank.ready_run() < want)
+        let mut state = self.shared.state.lock().unwrap();
+        while state.shards.iter().any(|s| s.bank.ready_run() < want)
             && !self.shared.stop.load(Ordering::Relaxed)
         {
-            shards = self.shared.ready.wait(shards).unwrap();
+            state = self.shared.ready.wait(state).unwrap();
         }
     }
 
     /// Full sessions assemblable right now for every model (the minimum
     /// across shards; single-model pools read as before).
     pub fn banked(&self) -> usize {
-        let shards = self.shared.shards.lock().unwrap();
-        shards.iter().map(|s| s.bank.ready_run()).min().unwrap_or(0)
+        let state = self.shared.state.lock().unwrap();
+        state.shards.iter().map(|s| s.bank.ready_run()).min().unwrap_or(0)
     }
 
     /// Full sessions assemblable right now for one model.
     pub fn banked_model(&self, model: u64) -> usize {
         let si = self.shard_index(model);
-        self.shared.shards.lock().unwrap()[si].bank.ready_run()
+        self.shared.state.lock().unwrap().shards[si].bank.ready_run()
     }
 
     /// Staged entries per bank of the **first registered model** (index
@@ -743,7 +1092,7 @@ impl MaterialPool {
     /// Staged entries per bank of one model's shard.
     pub fn bank_depths_model(&self, model: u64) -> Vec<usize> {
         let si = self.shard_index(model);
-        self.shared.shards.lock().unwrap()[si].bank.depths()
+        self.shared.state.lock().unwrap().shards[si].bank.depths()
     }
 
     pub fn dry_leases(&self) -> u64 {
@@ -756,23 +1105,69 @@ impl MaterialPool {
         self.shared.fp_drops.load(Ordering::Relaxed)
     }
 
+    /// Claims stolen by idle links from stale links.
+    pub fn steals(&self) -> u64 {
+        self.shared.state.lock().unwrap().steals
+    }
+
+    /// Seqs handed back for another link to produce (by steal or by
+    /// failure handoff).
+    pub fn reissued_seqs(&self) -> u64 {
+        self.shared.state.lock().unwrap().reissued_seqs
+    }
+
+    /// Units delivered under a stolen (dead) ticket and dropped, never
+    /// staged.
+    pub fn late_drop_units(&self) -> u64 {
+        self.shared.state.lock().unwrap().late_drop_units
+    }
+
+    /// Outstanding remote-claim ledger entries: `(records, total seqs)`.
+    pub fn outstanding_claims(&self) -> (usize, usize) {
+        let state = self.shared.state.lock().unwrap();
+        (state.claims.len(), state.claims.values().map(|r| r.seqs.len()).sum())
+    }
+
+    /// In-flight claimed units summed across every bank of every shard.
+    pub fn in_flight_total(&self) -> usize {
+        let state = self.shared.state.lock().unwrap();
+        state.shards.iter().map(|s| s.bank.in_flight.iter().sum::<usize>()).sum()
+    }
+
+    /// Current effective refill weights, `(fingerprint, weight)` in
+    /// registration order (demand priors until traffic crosses the
+    /// minimum signal).
+    pub fn effective_weights(&self) -> Vec<(u64, f64)> {
+        let state = self.shared.state.lock().unwrap();
+        let now = Instant::now();
+        let w = effective_weights(&state.shards, now);
+        state.shards.iter().zip(w).map(|(s, w)| (s.fingerprint, w)).collect()
+    }
+
+    /// Fleet link health: `(label, connected)` per link (empty for
+    /// inline pools).
+    pub fn link_states(&self) -> Vec<(String, bool)> {
+        let state = self.shared.state.lock().unwrap();
+        state.links.iter().map(|l| (l.label.clone(), l.connected)).collect()
+    }
+
     /// Sessions ever made assemblable from the banks, summed across
     /// shards (high-water mark).
     pub fn produced(&self) -> u64 {
-        self.shared.shards.lock().unwrap().iter().map(|s| s.high_water).sum()
+        self.shared.state.lock().unwrap().shards.iter().map(|s| s.high_water).sum()
     }
 
     /// Sessions ever made assemblable for one model.
     pub fn produced_model(&self, model: u64) -> u64 {
         let si = self.shard_index(model);
-        self.shared.shards.lock().unwrap()[si].high_water
+        self.shared.state.lock().unwrap().shards[si].high_water
     }
 
     /// Signal dealers and waiters to stop, without joining. The lock is
     /// held across the notify so a waiter between its predicate check
     /// and its wait cannot miss the wake-up.
     pub fn stop(&self) {
-        let _shards = self.shared.shards.lock().unwrap();
+        let _state = self.shared.state.lock().unwrap();
         self.shared.stop.store(true, Ordering::Relaxed);
         self.shared.refill.notify_all();
         self.shared.ready.notify_all();
@@ -792,6 +1187,8 @@ mod tests {
     use super::*;
     use crate::circuits::spec::{FaultMode, ReluVariant};
     use crate::protocol::linear::{LinearOp, Matrix};
+    use crate::wire::dealer::spawn_mem_dealer_multi;
+    use crate::wire::frame::{Channel, Framed, MemChannel, MsgType};
 
     fn tiny_plan() -> Arc<NetworkPlan> {
         let mut rng = Rng::new(1);
@@ -813,6 +1210,26 @@ mod tests {
             linears,
             ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero },
         ))
+    }
+
+    /// An endpoint backed by a fresh in-memory dealer per connect (the
+    /// dealer thread is detached; it exits when its channel drops).
+    fn mem_endpoint(label: &str, registry: Arc<ModelRegistry>, conn_seed: u64) -> DealerEndpoint {
+        let reg = registry.clone();
+        DealerEndpoint::new(
+            label,
+            Arc::new(move || {
+                let (chan, _dealer_thread) = spawn_mem_dealer_multi(reg.clone(), conn_seed, 1);
+                RemoteDealer::connect(chan, reg.clone())
+            }),
+        )
+    }
+
+    /// Assert the claim ledger is fully resolved (no records, no
+    /// in-flight units) — banks at target imply exactly this.
+    fn assert_ledger_quiescent(pool: &MaterialPool) {
+        assert_eq!(pool.outstanding_claims(), (0, 0), "claim records outstanding");
+        assert_eq!(pool.in_flight_total(), 0, "in-flight units outstanding");
     }
 
     #[test]
@@ -957,7 +1374,7 @@ mod tests {
             2,
             1,
             5,
-            RefillSource::Remote { connect, batch: 2 },
+            RefillSource::remote_single(connect, 2),
             None,
             1,
         );
@@ -976,21 +1393,20 @@ mod tests {
         // The deployment shape: material produced by a dealer "process"
         // (in-memory channel here), streamed in layer-granularly over
         // the wire codec, and banked per layer — with latency/bytes and
-        // bank depths recorded.
+        // bank depths recorded, per model and per link.
         let plan = tiny_plan();
         let metrics = Arc::new(Metrics::default());
         let registry = ModelRegistry::single(plan.clone(), 77);
         let reg_c = registry.clone();
         let connect: Arc<dyn Fn() -> Result<RemoteDealer> + Send + Sync> = Arc::new(move || {
-            let (chan, _dealer_thread) =
-                crate::wire::dealer::spawn_mem_dealer_multi(reg_c.clone(), 77, 1);
+            let (chan, _dealer_thread) = spawn_mem_dealer_multi(reg_c.clone(), 77, 1);
             RemoteDealer::connect(chan, reg_c.clone())
         });
         let pool = MaterialPool::start_multi(
             registry,
             3,
             1,
-            RefillSource::Remote { connect, batch: 2 },
+            RefillSource::remote_single(connect, 2),
             Some(metrics.clone()),
             1,
         );
@@ -1008,6 +1424,9 @@ mod tests {
         assert!(snap.bytes_offline_wire > 0, "wire bytes recorded");
         assert!(snap.remote_refill_mean_us > 0.0, "fetch latency recorded");
         assert_eq!(snap.bank_depths.len(), 2, "spine bank + one relu bank");
+        assert_eq!(snap.links.len(), 1, "one fleet link row");
+        assert!(snap.links[0].fetches >= 1, "link fetches recorded");
+        assert!(snap.links[0].units >= 6, "link units recorded");
         pool.shutdown();
     }
 
@@ -1042,5 +1461,278 @@ mod tests {
         assert!(pool.banked() >= 1);
         assert!(pool.produced() >= 3);
         pool.shutdown();
+    }
+
+    #[test]
+    fn fleet_partitions_across_links_and_fills() {
+        // Three links, one seq space: the fleet partitions claims across
+        // all links, and the assembled sessions are bit-identical to
+        // inline deals from the model's base seed — the producer of each
+        // piece is unobservable.
+        use crate::protocol::server::run_inference;
+        let plan = tiny_plan();
+        let seed = 0x0F1EE7;
+        let registry = ModelRegistry::single(plan.clone(), seed);
+        let endpoints = vec![
+            mem_endpoint("mem0", registry.clone(), 10),
+            mem_endpoint("mem1", registry.clone(), 11),
+            mem_endpoint("mem2", registry.clone(), 12),
+        ];
+        let pool = MaterialPool::start_multi(
+            registry,
+            4,
+            3,
+            RefillSource::remote(endpoints, 2),
+            None,
+            1,
+        );
+        pool.wait_ready(4);
+        assert_eq!(pool.fingerprint_drops(), 0);
+        assert_ledger_quiescent(&pool);
+        let labels: Vec<String> = pool.link_states().iter().map(|(l, _)| l.clone()).collect();
+        assert_eq!(labels, vec!["mem0", "mem1", "mem2"]);
+        let mut rng = Rng::new(5);
+        let input: Vec<crate::field::Fp> =
+            (0..6).map(|i| crate::field::Fp::from_i64(300 + i)).collect();
+        for seq in 0..4u64 {
+            let lease = pool.lease(&mut rng);
+            assert!(!lease.was_dry, "seq {seq}");
+            let (client, server, offline_bytes) =
+                offline_network_mt(&plan, &mut session_rng(seed, seq), 1);
+            assert_eq!(lease.session.offline_bytes, offline_bytes, "seq {seq}");
+            let (fleet_logits, _) =
+                run_inference(&lease.session.client, &lease.session.server, &input);
+            let (inline_logits, _) = run_inference(&client, &server, &input);
+            assert_eq!(fleet_logits, inline_logits, "seq {seq}");
+        }
+        pool.shutdown();
+    }
+
+    /// A channel that delays every read — makes one link's fetches
+    /// reliably stale past `steal_after` so the steal path is exercised
+    /// deterministically.
+    struct SlowChannel {
+        inner: Box<dyn Channel>,
+        delay: Duration,
+    }
+
+    impl Channel for SlowChannel {
+        fn send_bytes(&mut self, buf: &[u8]) -> Result<()> {
+            self.inner.send_bytes(buf)
+        }
+
+        fn recv_exact(&mut self, buf: &mut [u8]) -> Result<()> {
+            std::thread::sleep(self.delay);
+            self.inner.recv_exact(buf)
+        }
+    }
+
+    #[test]
+    fn stale_claim_is_stolen_and_late_units_dropped() {
+        // One slow link, one fast link. The fast link steals the slow
+        // link's stale claims; when the slow fetch completes anyway its
+        // ticket is gone and the delivery is dropped, never staged — no
+        // double-banked seq, no overshoot, and the banks are
+        // bit-identical to what a healthy fleet would have staged.
+        let plan = tiny_plan();
+        let seed = 0x51;
+        let registry = ModelRegistry::single(plan.clone(), seed);
+        let slow = {
+            let reg = registry.clone();
+            DealerEndpoint::new(
+                "slow",
+                Arc::new(move || {
+                    let (chan, _t) = spawn_mem_dealer_multi(reg.clone(), 1, 1);
+                    let slowed = SlowChannel { inner: chan, delay: Duration::from_millis(60) };
+                    RemoteDealer::connect(Box::new(slowed), reg.clone())
+                }),
+            )
+        };
+        let fast = mem_endpoint("fast", registry.clone(), 2);
+        let pool = MaterialPool::start_multi_tuned(
+            registry,
+            6,
+            2,
+            RefillSource::remote(vec![slow, fast], 2),
+            None,
+            1,
+            PoolTuning {
+                steal_after: Duration::from_millis(40),
+                demand_half_life: Duration::from_secs(10),
+            },
+        );
+        pool.wait_ready(6);
+        // The slow link's in-flight fetch resolves (late-dropped)
+        // shortly after the steal; poll rather than assume scheduling.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while (pool.steals() < 1 || pool.late_drop_units() < 1) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(pool.steals() >= 1, "fast link stole from the slow link");
+        assert!(pool.late_drop_units() >= 1, "slow link's late delivery dropped");
+        assert_eq!(pool.fingerprint_drops(), 0);
+        for (b, depth) in pool.bank_depths().into_iter().enumerate() {
+            assert!(depth <= 6, "bank {b} overshot after steals: {depth}");
+        }
+        // Bit-identity survives stealing: whichever link produced each
+        // piece, the session equals the inline deal.
+        let mut rng = Rng::new(6);
+        let lease = pool.lease(&mut rng);
+        assert!(!lease.was_dry);
+        let (_, _, offline_bytes) = offline_network_mt(&plan, &mut session_rng(seed, 0), 1);
+        assert_eq!(lease.session.offline_bytes, offline_bytes);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn failed_link_hands_off_claims_and_pool_still_fills() {
+        // Link-scoped poisoning regression: one endpoint serves the
+        // handshake then drops every fetch. Its claims are handed off
+        // (abandoned → re-issued), the healthy link fills the banks, and
+        // the pool serves bit-identical sessions — a broken link costs a
+        // handoff, never the pool.
+        use crate::protocol::server::run_inference;
+        use crate::wire::codec;
+        let plan = tiny_plan();
+        let seed = 0xBAD;
+        let registry = ModelRegistry::single(plan.clone(), seed);
+        let bad = {
+            let reg = registry.clone();
+            DealerEndpoint::new(
+                "bad",
+                Arc::new(move || {
+                    let (coord_end, dealer_end) = MemChannel::pair();
+                    let manifests = reg.manifests();
+                    std::thread::spawn(move || {
+                        let mut framed = Framed::new(Box::new(dealer_end));
+                        if framed.recv().is_ok() {
+                            let _ = framed
+                                .send(MsgType::Hello, &codec::encode_manifest_set(&manifests));
+                        }
+                        // Dropped here: every subsequent fetch on this
+                        // link fails at the transport.
+                    });
+                    RemoteDealer::connect(Box::new(coord_end), reg.clone())
+                }),
+            )
+        };
+        let good = {
+            let reg = registry.clone();
+            DealerEndpoint::new(
+                "good",
+                Arc::new(move || {
+                    // Let the bad link claim (and fail) first so the
+                    // handoff path is exercised deterministically.
+                    std::thread::sleep(Duration::from_millis(200));
+                    let (chan, _t) = spawn_mem_dealer_multi(reg.clone(), 3, 1);
+                    RemoteDealer::connect(chan, reg.clone())
+                }),
+            )
+        };
+        let pool = MaterialPool::start_multi_tuned(
+            registry,
+            4,
+            2,
+            RefillSource::remote(vec![bad, good], 2),
+            None,
+            1,
+            PoolTuning {
+                steal_after: Duration::from_secs(5),
+                demand_half_life: Duration::from_secs(10),
+            },
+        );
+        pool.wait_ready(4);
+        assert!(pool.reissued_seqs() >= 1, "failed fetches handed their claims off");
+        assert_eq!(pool.fingerprint_drops(), 0);
+        let mut rng = Rng::new(7);
+        let input: Vec<crate::field::Fp> =
+            (0..6).map(|i| crate::field::Fp::from_i64(40 + i)).collect();
+        let lease = pool.lease(&mut rng);
+        assert!(!lease.was_dry);
+        let (client, server, _) = offline_network_mt(&plan, &mut session_rng(seed, 0), 1);
+        let (fleet_logits, _) =
+            run_inference(&lease.session.client, &lease.session.server, &input);
+        let (inline_logits, _) = run_inference(&client, &server, &input);
+        assert_eq!(fleet_logits, inline_logits);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn ewma_weights_shift_with_traffic() {
+        // Zero-target pool (no dealing noise): before traffic the
+        // effective weights are the registry's static priors; once one
+        // model takes the traffic its weight dominates; after a traffic
+        // flip the ordering reverses within a few half-lives.
+        let (pa, pb) = (tiny_plan(), other_plan());
+        let mut reg = ModelRegistry::new();
+        let fa = reg.register(pa, 0xA1, 2.0).unwrap();
+        let fb = reg.register(pb, 0xB2, 1.0).unwrap();
+        let pool = MaterialPool::start_multi_tuned(
+            Arc::new(reg),
+            0,
+            1,
+            RefillSource::Inline,
+            None,
+            1,
+            PoolTuning {
+                steal_after: Duration::from_millis(1000),
+                demand_half_life: Duration::from_millis(50),
+            },
+        );
+        let cold = pool.effective_weights();
+        assert_eq!(cold[0].0, fa);
+        assert_eq!(cold[1].0, fb);
+        assert!((cold[0].1 - 2.0).abs() < 1e-12, "cold weights are the demand priors");
+        assert!((cold[1].1 - 1.0).abs() < 1e-12);
+        let mut rng = Rng::new(8);
+        for _ in 0..20 {
+            let _ = pool.lease_model(fa, &mut rng);
+        }
+        let hot_a = pool.effective_weights();
+        assert!(
+            hot_a[0].1 > 5.0 * hot_a[1].1,
+            "A takes the traffic, A dominates: {hot_a:?}"
+        );
+        assert!(hot_a[1].1 >= WEIGHT_FLOOR, "cold model keeps the floor");
+        // Flip the traffic; A's score decays over a few half-lives
+        // while B's accumulates.
+        std::thread::sleep(Duration::from_millis(150));
+        for _ in 0..20 {
+            let _ = pool.lease_model(fb, &mut rng);
+        }
+        let hot_b = pool.effective_weights();
+        assert!(
+            hot_b[1].1 > hot_b[0].1,
+            "traffic flip re-aims the weights: {hot_b:?}"
+        );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn claim_aiming_follows_weights() {
+        // claim_weighted_emptiest honors the priors cold and the EWMA
+        // once traffic exists — pinned directly on shard state, no
+        // threads.
+        let mk = |plan: Arc<NetworkPlan>, fp: u64, demand: f64| Shard {
+            fingerprint: fp,
+            plan: plan.clone(),
+            base_seed: fp,
+            demand,
+            lease_rate: LeaseRate::new(Duration::from_secs(10)),
+            bank: Bank::new(plan.n_relu_layers()),
+            high_water: 0,
+        };
+        let now = Instant::now();
+        // Cold: static priors decide (A's 5.0 beats B's 1.0).
+        let mut shards = vec![mk(tiny_plan(), 1, 5.0), mk(other_plan(), 2, 1.0)];
+        let (si, b, seqs) = claim_weighted_emptiest(&mut shards, 2, 1, now).unwrap();
+        assert_eq!(si, 0, "cold claims aim at the higher static prior");
+        shards[si].bank.abandon(b, &seqs);
+        // Hot: B's lease traffic overrides A's prior.
+        for _ in 0..4 {
+            shards[1].lease_rate.bump(now);
+        }
+        let (si, _, _) = claim_weighted_emptiest(&mut shards, 2, 1, now).unwrap();
+        assert_eq!(si, 1, "traffic re-aims claims at the busy model");
     }
 }

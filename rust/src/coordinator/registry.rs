@@ -21,7 +21,11 @@
 //!   even though both count sessions 0, 1, 2, …,
 //! * a **demand weight** scaling the refill scheduler's deficit for this
 //!   model's banks (a model taking 3× the traffic wants its banks
-//!   refilled 3× as eagerly).
+//!   refilled 3× as eagerly). Since the fleet-scheduler revision this
+//!   static weight is only the **cold-start prior**: once a model has
+//!   observed traffic, the pool derives effective weights from an EWMA
+//!   of per-model lease rates ([`LeaseRate`]) so refill chases measured
+//!   demand, not config guesses.
 //!
 //! Dealer and coordinator processes each hold their own registry; the
 //! wire handshake ([`crate::wire::dealer`]) compares manifest *sets*, so
@@ -34,6 +38,46 @@ use crate::util::error::Result;
 use crate::wire::codec::SessionManifest;
 use crate::{bail, ensure};
 use std::sync::Arc;
+use std::time::Instant;
+
+/// Exponentially-decayed lease counter: the traffic signal behind the
+/// pool's adaptive refill weights.
+///
+/// Each [`Self::bump`] adds 1 to a score that decays continuously with
+/// half-life `half_life` — so the score approximates "leases in the
+/// last half-life or two", is cheap (one `Instant` + one `f64`), and
+/// needs no ring buffers or tick threads. A model whose traffic stops
+/// decays toward zero on its own; a traffic flip between two models
+/// re-orders their scores within about one half-life, which is the
+/// adaptation time constant the weight-shift test pins.
+#[derive(Clone, Debug)]
+pub struct LeaseRate {
+    half_life: f64,
+    score: f64,
+    at: Instant,
+}
+
+impl LeaseRate {
+    pub fn new(half_life: std::time::Duration) -> Self {
+        Self { half_life: half_life.as_secs_f64().max(1e-6), score: 0.0, at: Instant::now() }
+    }
+
+    fn decayed(&self, now: Instant) -> f64 {
+        let dt = now.duration_since(self.at).as_secs_f64();
+        self.score * 0.5f64.powf(dt / self.half_life)
+    }
+
+    /// Record one lease at `now`.
+    pub fn bump(&mut self, now: Instant) {
+        self.score = self.decayed(now) + 1.0;
+        self.at = now;
+    }
+
+    /// The decayed score as of `now` (no mutation).
+    pub fn score(&self, now: Instant) -> f64 {
+        self.decayed(now)
+    }
+}
 
 /// Derive a model's dealing base seed from a root seed and the model's
 /// manifest fingerprint (splitmix64-style mix). One fixed, documented
@@ -215,6 +259,29 @@ mod tests {
                 1.0
             )
             .is_err());
+    }
+
+    #[test]
+    fn lease_rate_accumulates_and_decays() {
+        use std::time::Duration;
+        let t0 = Instant::now();
+        let mut r = LeaseRate::new(Duration::from_secs(10));
+        assert_eq!(r.score(t0), 0.0);
+        // Bumps accumulate (decay over zero elapsed time is a no-op).
+        r.bump(t0);
+        r.bump(t0);
+        r.bump(t0);
+        let s = r.score(t0);
+        assert!((s - 3.0).abs() < 1e-9, "{s}");
+        // One half-life later the score has halved; two, quartered.
+        let s1 = r.score(t0 + Duration::from_secs(10));
+        assert!((s1 - 1.5).abs() < 1e-6, "{s1}");
+        let s2 = r.score(t0 + Duration::from_secs(20));
+        assert!((s2 - 0.75).abs() < 1e-6, "{s2}");
+        // A bump after decay starts from the decayed score.
+        r.bump(t0 + Duration::from_secs(10));
+        let s3 = r.score(t0 + Duration::from_secs(10));
+        assert!((s3 - 2.5).abs() < 1e-6, "{s3}");
     }
 
     #[test]

@@ -14,14 +14,13 @@
 
 use super::batcher::{next_model_batches, BatchPolicy, ModelBatch};
 use super::metrics::Metrics;
-use super::pool::{MaterialPool, RefillSource};
+use super::pool::{DealerEndpoint, MaterialPool, PoolTuning, RefillSource};
 use super::registry::{model_base_seed, ModelRegistry};
 use super::router::{spawn_workers, Request, Response};
 use crate::ensure;
 use crate::field::Fp;
 use crate::protocol::server::NetworkPlan;
 use crate::util::error::{Error, Result};
-use crate::wire::dealer::RemoteDealer;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{
@@ -29,7 +28,7 @@ use std::sync::mpsc::{
 };
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Service configuration (fleet-wide; per-model knobs live in
 /// [`ModelConfig`]).
@@ -48,16 +47,33 @@ pub struct ServiceConfig {
     /// derives per-model namespaces from it
     /// ([`model_base_seed`]) unless a [`ModelConfig`] overrides.
     pub seed: u64,
-    /// When set, the material pool refills from a standalone dealer at
-    /// this TCP address ([`crate::wire::dealer`]) instead of dealing
-    /// inline, streaming material layer by layer for every registered
-    /// model over one connection; refill latency, bytes-on-wire, and
-    /// per-bank depths land in [`Metrics`], labeled per model. The
-    /// dealer must serve (at least) every model registered here —
-    /// weight digests included — or the handshake is rejected.
-    pub dealer_addr: Option<String>,
+    /// When non-empty, the material pool refills from a **fleet** of
+    /// standalone dealers at these TCP addresses
+    /// ([`crate::wire::dealer`]) instead of dealing inline, streaming
+    /// material layer by layer for every registered model. Claimed
+    /// seq-ranges are partitioned across the live links, stale claims
+    /// are work-stolen by idle links, and a dead dealer's claims are
+    /// handed off — see [`super::pool`]. Refill latency, bytes-on-wire,
+    /// and per-bank depths land in [`Metrics`], labeled per model and
+    /// per link. Every dealer must serve (at least) every model
+    /// registered here — weight digests included — or its handshake is
+    /// rejected (and, since all links share one claim ledger, every
+    /// dealer must run the same registry base seeds).
+    pub dealer_addrs: Vec<String>,
+    /// Pre-shared key for AES-128-CMAC authenticated dealer framing
+    /// ([`crate::wire::auth`]); `None` runs plain CRC framing. Must
+    /// match the key the dealers were started with — disagreement fails
+    /// each link closed at its handshake.
+    pub dealer_psk: Option<[u8; 16]>,
     /// Per-layer entries fetched per remote refill round trip.
     pub refill_batch: usize,
+    /// Age (ms) after which an idle fleet link may steal another link's
+    /// outstanding claim ([`PoolTuning::steal_after`]).
+    pub steal_after_ms: u64,
+    /// Half-life (ms) of the per-model lease-rate EWMA behind the
+    /// traffic-adaptive refill weights
+    /// ([`PoolTuning::demand_half_life`]).
+    pub demand_half_life_ms: u64,
     /// Bound on the ingress queue: [`PiService::submit_to`] admits with
     /// `try_send` against a channel of this capacity and reports
     /// [`SubmitError::QueueFull`] above it — in-process callers get the
@@ -75,8 +91,11 @@ impl Default for ServiceConfig {
             deal_threads: 1,
             batch: BatchPolicy::default(),
             seed: 0xC1CA,
-            dealer_addr: None,
+            dealer_addrs: Vec::new(),
+            dealer_psk: None,
             refill_batch: 4,
+            steal_after_ms: 1000,
+            demand_half_life_ms: 10_000,
             max_queue: 1024,
         }
     }
@@ -214,26 +233,28 @@ impl PiService {
         let registry = Arc::new(registry);
 
         let metrics = Arc::new(Metrics::default());
-        let source = match &cfg.dealer_addr {
-            None => RefillSource::Inline,
-            Some(addr) => {
-                let addr = addr.clone();
-                let registry = registry.clone();
-                RefillSource::Remote {
-                    connect: Arc::new(move || {
-                        RemoteDealer::connect_tcp(&addr, registry.clone())
-                    }),
-                    batch: cfg.refill_batch,
-                }
-            }
+        let source = if cfg.dealer_addrs.is_empty() {
+            RefillSource::Inline
+        } else {
+            let endpoints: Vec<DealerEndpoint> = cfg
+                .dealer_addrs
+                .iter()
+                .map(|addr| DealerEndpoint::tcp(addr, registry.clone(), cfg.dealer_psk))
+                .collect();
+            RefillSource::remote(endpoints, cfg.refill_batch)
         };
-        let pool = Arc::new(MaterialPool::start_multi(
+        let tuning = PoolTuning {
+            steal_after: Duration::from_millis(cfg.steal_after_ms.max(1)),
+            demand_half_life: Duration::from_millis(cfg.demand_half_life_ms.max(1)),
+        };
+        let pool = Arc::new(MaterialPool::start_multi_tuned(
             registry.clone(),
             cfg.pool_target,
             cfg.pool_dealers,
             source,
             Some(metrics.clone()),
             cfg.deal_threads,
+            tuning,
         ));
 
         // Bounded intake: submit_to admits with try_send, so the queue

@@ -1,0 +1,246 @@
+//! Pre-shared-key frame authentication for dealer links: AES-128-CMAC
+//! (RFC 4493) built on the crate's own AES ([`crate::prf::softaes`]),
+//! keeping the zero-dependency build.
+//!
+//! ## Why a MAC and not just the CRC
+//!
+//! The frame CRC catches *accidental* corruption; it is trivially
+//! forgeable. Once a dealer link leaves the host (ROADMAP: N dealers
+//! feeding one coordinator across machines), an on-path attacker who can
+//! inject frames could feed the pool garbage material or tear the
+//! protocol state machine. The keyed tag makes every frame
+//! unforgeable without the PSK: it covers `MSG_TYPE | LEN | payload`
+//! (the same bytes as the CRC), so neither the routing byte, the
+//! framing length, nor the material itself can be altered or injected.
+//!
+//! ## Threat model (trusted dealer vs authenticated link)
+//!
+//! The PSK authenticates the **transport**, not the **party**: a peer
+//! holding the PSK is assumed to run the honest protocol. The dealer
+//! itself remains *trusted* for material correctness — it knows every
+//! secret it deals (the paper's trusted-dealer deployment; see
+//! [`crate::wire::dealer`] for the full note). CMAC gives integrity and
+//! origin authentication per frame; it does **not** give
+//! confidentiality (material is visible on the wire — acceptable for
+//! dealer links on a private network, where the material is secret
+//! *shares* and garbled tables, not plaintext inputs) and does not
+//! prevent replay across connections (each connection's request/response
+//! pairing makes replayed responses fail the seq/fingerprint checks at
+//! staging).
+//!
+//! Tags are verified in constant time ([`tags_equal`]); a mismatch
+//! surfaces as a transport error naming the PSK, which the handshake
+//! turns into a connection failure — mismatched or missing keys fail
+//! closed before any material is banked.
+
+use crate::prf::softaes::Aes128;
+use crate::util::error::Result;
+use crate::{bail, ensure};
+
+/// Bytes in a frame authentication tag (the full CMAC output).
+pub const TAG_BYTES: usize = 16;
+
+/// Doubling in GF(2^128) with the CMAC polynomial (x^128 + x^7 + x^2 +
+/// x + 1): left shift by one bit, conditionally folding the carry back
+/// as 0x87 in the low byte. Big-endian bit order per RFC 4493.
+fn dbl(b: &[u8; 16]) -> [u8; 16] {
+    let mut out = [0u8; 16];
+    let mut carry = 0u8;
+    for i in (0..16).rev() {
+        out[i] = (b[i] << 1) | carry;
+        carry = b[i] >> 7;
+    }
+    if carry == 1 {
+        out[15] ^= 0x87;
+    }
+    out
+}
+
+/// AES-128-CMAC (RFC 4493): a keyed MAC with one key schedule and two
+/// derived subkeys, reusable across frames.
+pub struct Cmac {
+    aes: Aes128,
+    /// Subkey folded into a final block that is complete.
+    k1: [u8; 16],
+    /// Subkey folded into a final block that needed `10*` padding.
+    k2: [u8; 16],
+}
+
+impl Cmac {
+    pub fn new(key: [u8; 16]) -> Self {
+        let aes = Aes128::new(key);
+        let mut l = [0u8; 16];
+        aes.encrypt_block(&mut l);
+        let k1 = dbl(&l);
+        let k2 = dbl(&k1);
+        Self { aes, k1, k2 }
+    }
+
+    /// Tag of the concatenation of `parts` — lets the frame layer
+    /// authenticate `header | payload` without copying them into one
+    /// buffer.
+    pub fn tag_parts(&self, parts: &[&[u8]]) -> [u8; 16] {
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        let mut state = [0u8; 16];
+        let mut block = [0u8; 16];
+        let mut fill = 0usize;
+        let mut seen = 0usize;
+        for part in parts {
+            for &byte in *part {
+                block[fill] = byte;
+                fill += 1;
+                seen += 1;
+                // Flush every complete block except the final one (the
+                // final block gets a subkey folded in below).
+                if fill == 16 && seen < total {
+                    for (s, b) in state.iter_mut().zip(&block) {
+                        *s ^= *b;
+                    }
+                    self.aes.encrypt_block(&mut state);
+                    fill = 0;
+                }
+            }
+        }
+        let mut last = [0u8; 16];
+        if total > 0 && fill == 16 {
+            for (l, (b, k)) in last.iter_mut().zip(block.iter().zip(&self.k1)) {
+                *l = *b ^ *k;
+            }
+        } else {
+            last[..fill].copy_from_slice(&block[..fill]);
+            last[fill] = 0x80;
+            for (l, k) in last.iter_mut().zip(&self.k2) {
+                *l ^= *k;
+            }
+        }
+        for (s, l) in state.iter_mut().zip(&last) {
+            *s ^= *l;
+        }
+        self.aes.encrypt_block(&mut state);
+        state
+    }
+
+    /// Tag of one contiguous message.
+    pub fn tag(&self, msg: &[u8]) -> [u8; 16] {
+        self.tag_parts(&[msg])
+    }
+}
+
+/// Constant-time tag comparison (no early exit on the first differing
+/// byte — a timing oracle on MAC verification is a classic forgery
+/// primitive).
+pub fn tags_equal(a: &[u8; 16], b: &[u8; 16]) -> bool {
+    let mut diff = 0u8;
+    for (x, y) in a.iter().zip(b) {
+        diff |= x ^ y;
+    }
+    diff == 0
+}
+
+/// Parse a 32-hex-char pre-shared key (the `--psk` CLI format).
+pub fn parse_psk_hex(s: &str) -> Result<[u8; 16]> {
+    let s = s.trim();
+    ensure!(
+        s.len() == 32,
+        "PSK must be 32 hex chars (128 bits), got {} chars",
+        s.len()
+    );
+    let mut key = [0u8; 16];
+    for (i, byte) in key.iter_mut().enumerate() {
+        let pair = &s[2 * i..2 * i + 2];
+        match u8::from_str_radix(pair, 16) {
+            Ok(v) => *byte = v,
+            Err(_) => bail!("PSK is not hex at chars {}..{} ({pair:?})", 2 * i, 2 * i + 2),
+        }
+    }
+    Ok(key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// RFC 4493 test key.
+    const KEY: [u8; 16] = [
+        0x2b, 0x7e, 0x15, 0x16, 0x28, 0xae, 0xd2, 0xa6, //
+        0xab, 0xf7, 0x15, 0x88, 0x09, 0xcf, 0x4f, 0x3c,
+    ];
+
+    const MSG64: [u8; 64] = [
+        0x6b, 0xc1, 0xbe, 0xe2, 0x2e, 0x40, 0x9f, 0x96, //
+        0xe9, 0x3d, 0x7e, 0x11, 0x73, 0x93, 0x17, 0x2a, //
+        0xae, 0x2d, 0x8a, 0x57, 0x1e, 0x03, 0xac, 0x9c, //
+        0x9e, 0xb7, 0x6f, 0xac, 0x45, 0xaf, 0x8e, 0x51, //
+        0x30, 0xc8, 0x1c, 0x46, 0xa3, 0x5c, 0xe4, 0x11, //
+        0xe5, 0xfb, 0xc1, 0x19, 0x1a, 0x0a, 0x52, 0xef, //
+        0xf6, 0x9f, 0x24, 0x45, 0xdf, 0x4f, 0x9b, 0x17, //
+        0xad, 0x2b, 0x41, 0x7b, 0xe6, 0x6c, 0x37, 0x10,
+    ];
+
+    #[test]
+    fn rfc4493_known_answers() {
+        let mac = Cmac::new(KEY);
+        // Example 1: empty message.
+        assert_eq!(
+            mac.tag(&[]),
+            [
+                0xbb, 0x1d, 0x69, 0x29, 0xe9, 0x59, 0x37, 0x28, //
+                0x7f, 0xa3, 0x7d, 0x12, 0x9b, 0x75, 0x67, 0x46
+            ]
+        );
+        // Example 2: one full block.
+        assert_eq!(
+            mac.tag(&MSG64[..16]),
+            [
+                0x07, 0x0a, 0x16, 0xb4, 0x6b, 0x4d, 0x41, 0x44, //
+                0xf7, 0x9b, 0xdd, 0x9d, 0xd0, 0x4a, 0x28, 0x7c
+            ]
+        );
+        // Example 3: 40 bytes (padded final block).
+        assert_eq!(
+            mac.tag(&MSG64[..40]),
+            [
+                0xdf, 0xa6, 0x67, 0x47, 0xde, 0x9a, 0xe6, 0x30, //
+                0x30, 0xca, 0x32, 0x61, 0x14, 0x97, 0xc8, 0x27
+            ]
+        );
+        // Example 4: four full blocks.
+        assert_eq!(
+            mac.tag(&MSG64),
+            [
+                0x51, 0xf0, 0xbe, 0xbf, 0x7e, 0x3b, 0x9d, 0x92, //
+                0xfc, 0x49, 0x74, 0x17, 0x79, 0x36, 0x3c, 0xfe
+            ]
+        );
+    }
+
+    #[test]
+    fn tag_parts_matches_contiguous_tag() {
+        let mac = Cmac::new(KEY);
+        for split in [0usize, 1, 5, 16, 17, 39, 40] {
+            let (a, b) = MSG64[..40].split_at(split);
+            assert_eq!(mac.tag_parts(&[a, b]), mac.tag(&MSG64[..40]), "split {split}");
+        }
+        assert_eq!(mac.tag_parts(&[&[], &[], &[]]), mac.tag(&[]));
+    }
+
+    #[test]
+    fn different_keys_different_tags() {
+        let a = Cmac::new(KEY);
+        let mut other = KEY;
+        other[0] ^= 1;
+        let b = Cmac::new(other);
+        assert_ne!(a.tag(b"frame"), b.tag(b"frame"));
+        assert!(tags_equal(&a.tag(b"frame"), &a.tag(b"frame")));
+        assert!(!tags_equal(&a.tag(b"frame"), &b.tag(b"frame")));
+    }
+
+    #[test]
+    fn psk_hex_parsing() {
+        let key = parse_psk_hex("2b7e151628aed2a6abf7158809cf4f3c").unwrap();
+        assert_eq!(key, KEY);
+        assert_eq!(parse_psk_hex("  2B7E151628AED2A6ABF7158809CF4F3C\n").unwrap(), KEY);
+        assert!(parse_psk_hex("abc").is_err(), "too short");
+        assert!(parse_psk_hex("zz7e151628aed2a6abf7158809cf4f3c").is_err(), "not hex");
+    }
+}

@@ -57,6 +57,39 @@
 //! number of connections to dealers sharing the registry) and the
 //! largest frame on the wire is bounded by the largest single layer
 //! batch or the spine, never the session.
+//!
+//! ## Dealer fleets
+//!
+//! That seq-addressed purity is what makes a dealer **fleet** work:
+//! since `(model, layer, seq)` fully determines the unit's bytes, any
+//! dealer sharing the registry can serve any unit, and the
+//! coordinator's pool ([`crate::coordinator::pool`]) is free to
+//! partition claimed seq-ranges across however many dealer links it
+//! holds, steal outstanding claims from a slow link, and re-issue a
+//! dead link's claims elsewhere — the staged bank is bit-identical
+//! regardless of which dealer produced which seq. A link in this module
+//! is one connection; fleet membership, per-link health (reconnect,
+//! backoff, quarantine), and claim accounting live in the pool's fleet
+//! scheduler. Each dealer process is just `spawn_tcp_dealer_multi` on
+//! its own host: dealers never talk to each other and hold no state a
+//! restart could lose.
+//!
+//! ## Trust model: trusted dealer, authenticated link
+//!
+//! The dealer is *trusted by construction* in Circa's deployment model:
+//! it generates every secret it deals (GC label pairs, Beaver triples,
+//! mask shares), so there is nothing to hide from it and no way to
+//! verify its output cryptographically — correctness is pinned instead
+//! by the manifest handshake (architecture + behavioral weight digest)
+//! and the seq/fingerprint checks at staging. What is **not** assumed
+//! trusted is the network between hosts: dealer links accept an
+//! optional pre-shared key ([`spawn_tcp_dealer_multi_psk`],
+//! [`RemoteDealer::connect_tcp_psk`]) that switches the framing to
+//! AES-128-CMAC-tagged frames ([`super::auth`]) so an on-path attacker
+//! can neither inject nor tamper with material; key disagreement fails
+//! the handshake. The PSK authenticates the transport, not the party —
+//! removing the trusted-dealer assumption itself (OT-based label
+//! transfer) is a separate, per-model threat-model axis (see ROADMAP).
 
 use super::codec::{self, SessionManifest};
 use super::frame::{Channel, Framed, MemChannel, MsgType, TcpChannel};
@@ -73,7 +106,7 @@ use crate::{bail, ensure};
 use crate::net::accept::{stop_nudge, PollingListener};
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -266,8 +299,23 @@ impl RemoteDealer {
     /// manifest set; every local model must be covered by the dealer's
     /// reply set (weight digests included).
     pub fn connect(chan: Box<dyn Channel>, registry: Arc<ModelRegistry>) -> Result<RemoteDealer> {
+        Self::connect_framed(Framed::new(chan), registry)
+    }
+
+    /// [`Self::connect`] over an authenticated framing layer: every
+    /// frame both ways carries an AES-128-CMAC tag keyed by `psk`. A
+    /// dealer without the same key fails the handshake (MAC mismatch or
+    /// desynced stream — see [`super::frame`]).
+    pub fn connect_psk(
+        chan: Box<dyn Channel>,
+        registry: Arc<ModelRegistry>,
+        psk: [u8; 16],
+    ) -> Result<RemoteDealer> {
+        Self::connect_framed(Framed::with_psk(chan, psk), registry)
+    }
+
+    fn connect_framed(mut framed: Framed, registry: Arc<ModelRegistry>) -> Result<RemoteDealer> {
         ensure!(!registry.is_empty(), "local registry is empty");
-        let mut framed = Framed::new(chan);
         let local = registry.manifests();
         framed.send(MsgType::Hello, &codec::encode_manifest_set(&local))?;
         let reply = framed.recv()?;
@@ -290,6 +338,21 @@ impl RemoteDealer {
     /// Connect to a dealer over TCP.
     pub fn connect_tcp(addr: &str, registry: Arc<ModelRegistry>) -> Result<RemoteDealer> {
         Self::connect(Box::new(TcpChannel::connect(addr)?), registry)
+    }
+
+    /// Connect to a dealer over TCP, with PSK-authenticated framing when
+    /// `psk` is set (the fleet-config form: one option covers both
+    /// deployments).
+    pub fn connect_tcp_psk(
+        addr: &str,
+        registry: Arc<ModelRegistry>,
+        psk: Option<[u8; 16]>,
+    ) -> Result<RemoteDealer> {
+        let chan: Box<dyn Channel> = Box::new(TcpChannel::connect(addr)?);
+        match psk {
+            Some(key) => Self::connect_psk(chan, registry, key),
+            None => Self::connect(chan, registry),
+        }
     }
 
     /// Fetch freshly dealt sessions of model `model` (blocking round
@@ -508,6 +571,10 @@ pub struct DealerHandle {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    /// Cloned handles to every accepted connection's socket, so
+    /// [`Self::kill`] can sever in-flight connections (a `stop()` lets
+    /// them run to completion).
+    conns: Arc<Mutex<Vec<std::net::TcpStream>>>,
 }
 
 impl DealerHandle {
@@ -530,6 +597,23 @@ impl DealerHandle {
             let _ = t.join();
         }
     }
+
+    /// Simulate process death: stop accepting **and** sever every
+    /// accepted connection mid-stream (both directions shut down, so a
+    /// peer blocked in a read sees EOF immediately instead of waiting
+    /// out its read timeout). This is what the fleet failover tests and
+    /// benches use to measure dealer-kill recovery without spawning OS
+    /// processes.
+    pub fn kill(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        stop_nudge(self.addr);
+        for conn in self.conns.lock().unwrap().iter() {
+            let _ = conn.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
 }
 
 /// Bind `addr` (e.g. `127.0.0.1:0`) and serve dealer connections for
@@ -544,6 +628,19 @@ pub fn spawn_tcp_dealer_multi(
     seed: u64,
     deal_threads: usize,
 ) -> Result<DealerHandle> {
+    spawn_tcp_dealer_multi_psk(addr, registry, seed, deal_threads, None)
+}
+
+/// [`spawn_tcp_dealer_multi`] with optional PSK-authenticated framing:
+/// when `psk` is set, every connection is served over CMAC-tagged
+/// frames and a coordinator without the same key fails the handshake.
+pub fn spawn_tcp_dealer_multi_psk(
+    addr: &str,
+    registry: Arc<ModelRegistry>,
+    seed: u64,
+    deal_threads: usize,
+    psk: Option<[u8; 16]>,
+) -> Result<DealerHandle> {
     // Non-blocking accept, polled with a short sleep: the loop observes
     // the stop flag within one poll interval even when no nudge
     // connection can reach the listener (see [`DealerHandle::stop`]).
@@ -551,6 +648,8 @@ pub fn spawn_tcp_dealer_multi(
     let local = listener.local_addr();
     let stop = Arc::new(AtomicBool::new(false));
     let stop_accept = stop.clone();
+    let conns = Arc::new(Mutex::new(Vec::new()));
+    let conns_accept = conns.clone();
     let accept_thread = std::thread::spawn(move || {
         let mut conn_id = 0u64;
         loop {
@@ -561,11 +660,18 @@ pub fn spawn_tcp_dealer_multi(
                 Ok(Some((stream, _))) => {
                     // The connection itself is served blocking.
                     let _ = stream.set_nonblocking(false);
+                    if let Ok(dup) = stream.try_clone() {
+                        conns_accept.lock().unwrap().push(dup);
+                    }
                     conn_id += 1;
                     let registry = registry.clone();
                     let mut rng = Rng::new(seed ^ conn_id.wrapping_mul(0x9E3779B97F4A7C15));
                     std::thread::spawn(move || {
-                        let framed = Framed::new(Box::new(TcpChannel::new(stream)));
+                        let chan: Box<dyn Channel> = Box::new(TcpChannel::new(stream));
+                        let framed = match psk {
+                            Some(key) => Framed::with_psk(chan, key),
+                            None => Framed::new(chan),
+                        };
                         let _ = serve_connection(framed, &registry, &mut rng, deal_threads);
                     });
                 }
@@ -573,7 +679,7 @@ pub fn spawn_tcp_dealer_multi(
             }
         }
     });
-    Ok(DealerHandle { addr: local, stop, accept_thread: Some(accept_thread) })
+    Ok(DealerHandle { addr: local, stop, accept_thread: Some(accept_thread), conns })
 }
 
 /// Single-model [`spawn_tcp_dealer_multi`] (seq namespace = `seed`).
@@ -746,6 +852,34 @@ mod tests {
         let t = std::time::Instant::now();
         handle.stop();
         assert!(t.elapsed() < Duration::from_secs(5), "stop() hung");
+    }
+
+    #[test]
+    fn psk_dealer_serves_keyed_peers_and_rejects_others() {
+        let plan = tiny_plan(1);
+        let fp = fp_of(&plan);
+        let psk = [0x5Au8; 16];
+        let reg = ModelRegistry::single(plan.clone(), 11);
+        let handle =
+            spawn_tcp_dealer_multi_psk("127.0.0.1:0", reg, 11, 1, Some(psk)).expect("bind");
+        let addr = handle.addr().to_string();
+        let registry = ModelRegistry::single(plan, 11);
+
+        // Matching key: full handshake + a layer round.
+        let mut ok = RemoteDealer::connect_tcp_psk(&addr, registry.clone(), Some(psk)).unwrap();
+        let layers = ok.fetch_layers(fp, 0, &[0]).unwrap();
+        assert_eq!(layers.len(), 1);
+        ok.close();
+
+        // Wrong key: the dealer's MAC check fails on our Hello, it drops
+        // the connection, and our reply read sees EOF — handshake error.
+        // (Key-present-vs-absent mismatches also fail closed but may
+        // first wait out a read timeout; those directions are pinned
+        // fast over MemChannel in the frame tests.)
+        let mut wrong = psk;
+        wrong[0] ^= 1;
+        assert!(RemoteDealer::connect_tcp_psk(&addr, registry, Some(wrong)).is_err());
+        handle.stop();
     }
 
     #[test]

@@ -15,6 +15,21 @@
 //! codec `VERSION` was bumped in the same revision, making the break
 //! explicit at the handshake for any peer that gets that far.
 //!
+//! **Authenticated frames (dealer links):** a [`Framed`] built with
+//! [`Framed::with_psk`] appends a 16-byte AES-128-CMAC tag
+//! ([`super::auth`]) after the CRC, keyed by a pre-shared key and
+//! covering the same `MSG_TYPE | LEN | payload` bytes, and requires the
+//! tag on every received frame. The two sides must agree: a keyed
+//! sender talking to a plain receiver leaves 16 stray tag bytes in the
+//! stream (the next header read lands inside them → type/CRC error),
+//! and a plain sender talking to a keyed receiver has the next frame's
+//! header consumed as a bogus tag (→ MAC mismatch naming the PSK).
+//! Either way the link fails closed at the first frame — in practice
+//! the handshake — rather than ever delivering unauthenticated
+//! payloads. The client-facing serving tier ([`crate::net`]) stays
+//! un-keyed; the PSK is a dealer-link control (see [`super::auth`] for
+//! the threat model).
+//!
 //! The byte transport underneath is the [`Channel`] trait with two
 //! implementations: [`MemChannel`] (in-process duplex over byte queues,
 //! for tests and single-process demos) and [`TcpChannel`] (blocking
@@ -23,6 +38,7 @@
 //! LEN fields, short streams, and CRC mismatches all surface as
 //! [`crate::util::error::Result`] errors — never panics.
 
+use super::auth::{tags_equal, Cmac};
 use crate::util::error::{Context, Error, Result};
 use crate::{bail, ensure};
 use std::io::{Read, Write};
@@ -38,6 +54,10 @@ pub const FRAME_HEADER_BYTES: usize = 5;
 
 /// Trailing CRC bytes following the payload.
 pub const FRAME_CRC_BYTES: usize = 4;
+
+/// Trailing MAC tag bytes on an authenticated ([`Framed::with_psk`])
+/// link, appended after the CRC.
+pub const FRAME_TAG_BYTES: usize = super::auth::TAG_BYTES;
 
 /// Message types of the dealer protocol (see [`super::dealer`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -173,6 +193,7 @@ pub fn encode_frame(msg_type: MsgType, payload: &[u8]) -> Result<Vec<u8>> {
 /// coordinator's offline-traffic ledger.
 pub struct Framed {
     chan: Box<dyn Channel>,
+    mac: Option<Cmac>,
     bytes_sent: u64,
     bytes_received: u64,
     max_frame_received: u64,
@@ -180,12 +201,30 @@ pub struct Framed {
 
 impl Framed {
     pub fn new(chan: Box<dyn Channel>) -> Self {
-        Self { chan, bytes_sent: 0, bytes_received: 0, max_frame_received: 0 }
+        Self { chan, mac: None, bytes_sent: 0, bytes_received: 0, max_frame_received: 0 }
     }
 
-    /// Send one frame (header + payload + CRC in a single write).
+    /// An authenticated framing layer: every sent frame carries an
+    /// AES-128-CMAC tag keyed by `psk` over `MSG_TYPE | LEN | payload`,
+    /// and every received frame must carry a valid one.
+    pub fn with_psk(chan: Box<dyn Channel>, psk: [u8; 16]) -> Self {
+        Self {
+            chan,
+            mac: Some(Cmac::new(psk)),
+            bytes_sent: 0,
+            bytes_received: 0,
+            max_frame_received: 0,
+        }
+    }
+
+    /// Send one frame (header + payload + CRC — plus the MAC tag on a
+    /// keyed link — in a single write).
     pub fn send(&mut self, msg_type: MsgType, payload: &[u8]) -> Result<()> {
-        let buf = encode_frame(msg_type, payload)?;
+        let mut buf = encode_frame(msg_type, payload)?;
+        if let Some(mac) = &self.mac {
+            let tag = mac.tag(&buf[..buf.len() - FRAME_CRC_BYTES]);
+            buf.extend_from_slice(&tag);
+        }
         self.chan.send_bytes(&buf)?;
         self.bytes_sent += buf.len() as u64;
         Ok(())
@@ -216,7 +255,19 @@ impl Framed {
             "frame CRC mismatch ({:?}, {len} B payload)",
             msg_type
         );
-        let frame_bytes = (FRAME_HEADER_BYTES + len + FRAME_CRC_BYTES) as u64;
+        let mut tag_bytes = 0u64;
+        if let Some(mac) = &self.mac {
+            let mut tag = [0u8; FRAME_TAG_BYTES];
+            self.chan.recv_exact(&mut tag)?;
+            let want_tag = mac.tag_parts(&[&header, &payload]);
+            ensure!(
+                tags_equal(&tag, &want_tag),
+                "frame MAC mismatch ({:?}, {len} B payload) — PSK disagreement or tampering",
+                msg_type
+            );
+            tag_bytes = FRAME_TAG_BYTES as u64;
+        }
+        let frame_bytes = (FRAME_HEADER_BYTES + len + FRAME_CRC_BYTES) as u64 + tag_bytes;
         self.bytes_received += frame_bytes;
         self.max_frame_received = self.max_frame_received.max(frame_bytes);
         Ok(Frame { msg_type, payload })
@@ -433,6 +484,62 @@ mod tests {
         a.send_bytes(&raw).unwrap();
         drop(a);
         assert!(Framed::new(Box::new(b)).recv().is_err());
+    }
+
+    #[test]
+    fn psk_roundtrip_and_byte_accounting() {
+        let (a, b) = MemChannel::pair();
+        let psk = [7u8; 16];
+        let mut a = Framed::with_psk(Box::new(a), psk);
+        let mut b = Framed::with_psk(Box::new(b), psk);
+        a.send(MsgType::Hello, b"manifest").unwrap();
+        let f = b.recv().unwrap();
+        assert_eq!(f.msg_type, MsgType::Hello);
+        assert_eq!(f.payload, b"manifest");
+        // 9-byte plain overhead + 8-byte payload + 16-byte tag.
+        assert_eq!(a.bytes_sent(), 33);
+        assert_eq!(b.bytes_received(), a.bytes_sent());
+    }
+
+    #[test]
+    fn psk_mismatch_is_rejected_as_mac_error() {
+        let (a, b) = MemChannel::pair();
+        let mut a = Framed::with_psk(Box::new(a), [1u8; 16]);
+        let mut b = Framed::with_psk(Box::new(b), [2u8; 16]);
+        a.send(MsgType::Hello, b"manifest").unwrap();
+        let err = b.recv().unwrap_err();
+        assert!(err.to_string().contains("PSK"), "{err}");
+    }
+
+    #[test]
+    fn plain_sender_to_keyed_receiver_is_rejected() {
+        let (a, b) = MemChannel::pair();
+        let mut a = Framed::new(Box::new(a));
+        let mut b = Framed::with_psk(Box::new(b), [3u8; 16]);
+        // Two back-to-back frames: the keyed receiver consumes the second
+        // frame's first 16 bytes as the missing tag and must reject.
+        a.send(MsgType::Hello, b"manifest").unwrap();
+        a.send(MsgType::Bye, b"").unwrap();
+        let err = b.recv().unwrap_err();
+        assert!(err.to_string().contains("PSK"), "{err}");
+    }
+
+    #[test]
+    fn keyed_sender_to_plain_receiver_fails_on_next_frame() {
+        let (a, b) = MemChannel::pair();
+        let mut a = Framed::with_psk(Box::new(a), [4u8; 16]);
+        let mut b = Framed::new(Box::new(b));
+        a.send(MsgType::Hello, b"manifest").unwrap();
+        a.send(MsgType::Bye, b"").unwrap();
+        // Close the sender so a stray-tag byte that happens to parse as
+        // a plausible header errors (peer closed) instead of blocking.
+        drop(a);
+        // First frame parses (tag not yet consumed)…
+        let f = b.recv().unwrap();
+        assert_eq!(f.msg_type, MsgType::Hello);
+        // …but the stray tag bytes desynchronize the stream: the next
+        // header read lands inside the tag and the link fails closed.
+        assert!(b.recv().is_err());
     }
 
     #[test]

@@ -24,6 +24,16 @@
 //! [`frame::MemChannel`] (in-process duplex, tests/demos) or
 //! [`frame::TcpChannel`] (blocking `std::net::TcpStream`).
 //!
+//! Dealer links can additionally be **authenticated** with a pre-shared
+//! key ([`frame::Framed::with_psk`]): each frame then carries a trailing
+//! 16-byte AES-128-CMAC tag ([`auth`]) over the same `MSG_TYPE | LEN |
+//! payload` bytes. The CRC stays (cheap corruption triage); the tag is
+//! what makes forgery infeasible. Key disagreement — either direction —
+//! fails the link closed at the first frame, i.e. at the handshake. The
+//! dealer remains *trusted* for material correctness (it knows every
+//! secret it deals); the PSK authenticates the transport between hosts,
+//! not the dealing party — see [`auth`] for the full threat-model note.
+//!
 //! ## Message types ([`frame::MsgType`])
 //!
 //! | type          | dir            | payload                                |
@@ -79,15 +89,17 @@
 //! and layer shapes must match the local plan. Decoders return
 //! [`crate::util::error::Result`] — corrupt input never panics.
 
+pub mod auth;
 pub mod codec;
 pub mod dealer;
 pub mod frame;
 
+pub use auth::{parse_psk_hex, Cmac};
 pub use codec::{
     decode_manifest_set, decode_session, encode_manifest_set, encode_session, SessionManifest,
 };
 pub use dealer::{
     spawn_mem_dealer, spawn_mem_dealer_multi, spawn_tcp_dealer, spawn_tcp_dealer_multi,
-    DealerHandle, RemoteDealer,
+    spawn_tcp_dealer_multi_psk, DealerHandle, RemoteDealer,
 };
 pub use frame::{Channel, Framed, MemChannel, MsgType, TcpChannel};

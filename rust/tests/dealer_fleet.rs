@@ -1,0 +1,259 @@
+//! Integration tests for the multi-dealer refill fleet: real TCP
+//! dealers, claim partitioning, mid-run dealer death, and PSK-
+//! authenticated links.
+//!
+//! The load-bearing property throughout is seq-addressed dealing
+//! purity: entry `(model, bank, seq)` is a pure function of the model's
+//! registry base seed, so a bank filled by three dealers must be
+//! byte-identical to one filled by a single dealer — and to the inline
+//! deal — seq for seq. That purity is what makes work stealing and
+//! failure handoff safe, and it is what these tests pin end to end.
+
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::coordinator::{
+    DealerEndpoint, MaterialPool, ModelConfig, ModelRegistry, PiService, PoolTuning,
+    RefillSource, ServiceConfig,
+};
+use circa::field::Fp;
+use circa::protocol::linear::{LinearOp, Matrix};
+use circa::protocol::server::{offline_network_mt, run_inference, session_rng, NetworkPlan};
+use circa::util::Rng;
+use circa::wire::dealer::spawn_tcp_dealer_multi_psk;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tiny_plan() -> Arc<NetworkPlan> {
+    let mut rng = Rng::new(1);
+    let linears: Vec<Arc<dyn LinearOp>> = vec![
+        Arc::new(Matrix::random(4, 6, 10, &mut rng)),
+        Arc::new(Matrix::random(3, 4, 10, &mut rng)),
+    ];
+    Arc::new(NetworkPlan::unscaled(linears, ReluVariant::BaselineRelu))
+}
+
+fn other_plan() -> Arc<NetworkPlan> {
+    let mut rng = Rng::new(2);
+    let linears: Vec<Arc<dyn LinearOp>> = vec![
+        Arc::new(Matrix::random(5, 6, 10, &mut rng)),
+        Arc::new(Matrix::random(3, 5, 10, &mut rng)),
+    ];
+    Arc::new(NetworkPlan::unscaled(
+        linears,
+        ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero },
+    ))
+}
+
+/// Two-model registry shared by every dealer and the coordinator (same
+/// process, same `Arc` — the manifest-set handshake still verifies it).
+fn fleet_registry() -> (Arc<ModelRegistry>, u64, u64) {
+    let mut reg = ModelRegistry::new();
+    let fa = reg.register(tiny_plan(), 0xA11CE, 1.0).unwrap();
+    let fb = reg.register(other_plan(), 0xB0B, 1.0).unwrap();
+    (Arc::new(reg), fa, fb)
+}
+
+fn input() -> Vec<Fp> {
+    (0..6).map(|i| Fp::from_i64(800 + 7 * i)).collect()
+}
+
+/// Banks reached target, so the remote-claim ledger must be fully
+/// resolved: no live tickets, no in-flight units anywhere.
+fn assert_ledger_quiescent(pool: &MaterialPool) {
+    assert_eq!(pool.outstanding_claims(), (0, 0), "claim records outstanding");
+    assert_eq!(pool.in_flight_total(), 0, "in-flight units outstanding");
+}
+
+/// Lease every banked seq of `model` and pin it bit-for-bit against the
+/// inline deal from the same `(base_seed, seq)` session RNG.
+fn assert_leases_match_inline(pool: &MaterialPool, model: u64, base_seed: u64, n: usize) {
+    let plan = pool.registry().get(model).unwrap().plan.clone();
+    let mut rng = Rng::new(99);
+    let x = input();
+    for seq in 0..n as u64 {
+        let lease = pool.lease_model(model, &mut rng);
+        assert!(!lease.was_dry, "model {model:#x} seq {seq} leased dry");
+        let (client, server, offline_bytes) =
+            offline_network_mt(&plan, &mut session_rng(base_seed, seq), 1);
+        assert_eq!(lease.session.offline_bytes, offline_bytes, "model {model:#x} seq {seq}");
+        let (fleet_logits, _) = run_inference(&lease.session.client, &lease.session.server, &x);
+        let (inline_logits, _) = run_inference(&client, &server, &x);
+        assert_eq!(fleet_logits, inline_logits, "model {model:#x} seq {seq}");
+    }
+}
+
+#[test]
+fn three_dealer_fleet_banks_bit_identical_to_single_dealer() {
+    // One dealer vs a three-dealer fleet over real TCP sockets: both
+    // pools must fill, and every leased seq of every model must be
+    // bit-identical to the inline deal (hence to each other) — the
+    // partitioning across links is unobservable in the material.
+    let (registry, fa, fb) = fleet_registry();
+    let handles: Vec<_> = (0..3)
+        .map(|i| {
+            spawn_tcp_dealer_multi_psk(
+                "127.0.0.1:0",
+                registry.clone(),
+                0xD0 + i,
+                1,
+                None,
+            )
+            .expect("bind dealer")
+        })
+        .collect();
+    let addrs: Vec<String> = handles.iter().map(|h| h.addr().to_string()).collect();
+
+    let target = 4;
+    let single = MaterialPool::start_multi(
+        registry.clone(),
+        target,
+        1,
+        RefillSource::remote(
+            vec![DealerEndpoint::tcp(&addrs[0], registry.clone(), None)],
+            2,
+        ),
+        None,
+        1,
+    );
+    let endpoints: Vec<DealerEndpoint> =
+        addrs.iter().map(|a| DealerEndpoint::tcp(a, registry.clone(), None)).collect();
+    let fleet = MaterialPool::start_multi(
+        registry.clone(),
+        target,
+        3,
+        RefillSource::remote(endpoints, 2),
+        None,
+        1,
+    );
+    single.wait_ready(target);
+    fleet.wait_ready(target);
+    assert_eq!(single.banked(), target);
+    assert_eq!(fleet.banked(), target);
+    assert_ledger_quiescent(&single);
+    assert_ledger_quiescent(&fleet);
+    assert_eq!(fleet.link_states().len(), 3, "one fleet link per endpoint");
+
+    for (fp, seed) in [(fa, 0xA11CEu64), (fb, 0xB0B)] {
+        assert_leases_match_inline(&single, fp, seed, target);
+        assert_leases_match_inline(&fleet, fp, seed, target);
+    }
+    assert_eq!(single.fingerprint_drops(), 0);
+    assert_eq!(fleet.fingerprint_drops(), 0);
+    single.shutdown();
+    fleet.shutdown();
+    for h in handles {
+        h.stop();
+    }
+}
+
+#[test]
+fn dealer_killed_mid_run_hands_off_and_fleet_completes() {
+    // Two live TCP dealers; one is killed (sockets severed, listener
+    // down) while the pool is refilling. The surviving link must absorb
+    // the dead link's claims — via EOF-triggered failure handoff or the
+    // steal path — and fill every bank to target with zero lost and
+    // zero double-staged seqs: the ledger ends exactly resolved and
+    // every leased seq is bit-identical to the inline deal.
+    let (registry, fa, fb) = fleet_registry();
+    let h0 = spawn_tcp_dealer_multi_psk("127.0.0.1:0", registry.clone(), 0xE0, 1, None)
+        .expect("bind dealer 0");
+    let h1 = spawn_tcp_dealer_multi_psk("127.0.0.1:0", registry.clone(), 0xE1, 1, None)
+        .expect("bind dealer 1");
+    let addr0 = h0.addr().to_string();
+    let addr1 = h1.addr().to_string();
+
+    let target = 6;
+    let endpoints = vec![
+        DealerEndpoint::tcp(&addr0, registry.clone(), None),
+        DealerEndpoint::tcp(&addr1, registry.clone(), None),
+    ];
+    // Short steal_after: even a claim stranded in a severed socket's
+    // read is re-issued quickly.
+    let tuning = PoolTuning {
+        steal_after: Duration::from_millis(150),
+        demand_half_life: Duration::from_secs(10),
+    };
+    let pool = MaterialPool::start_multi_tuned(
+        registry.clone(),
+        target,
+        2,
+        RefillSource::remote(endpoints, 2),
+        None,
+        1,
+        tuning,
+    );
+
+    // Let the refill get underway on both links, then kill dealer 1.
+    pool.wait_ready(2);
+    h1.kill();
+
+    // The fleet must still reach target from the survivor alone.
+    pool.wait_ready(target);
+    assert_eq!(pool.banked(), target);
+    assert_ledger_quiescent(&pool);
+
+    // Exactness: seqs 0..target lease in order, each bit-identical to
+    // the inline deal — no seq was lost to the dead dealer and none was
+    // staged twice (a duplicate would have tripped the claim
+    // accounting before ever assembling).
+    for (fp, seed) in [(fa, 0xA11CEu64), (fb, 0xB0B)] {
+        assert_leases_match_inline(&pool, fp, seed, target);
+    }
+    assert_eq!(pool.fingerprint_drops(), 0);
+    pool.shutdown();
+    h0.stop();
+}
+
+#[test]
+fn psk_fleet_serves_end_to_end_through_the_service() {
+    // Service-level plumbing: ServiceConfig.dealer_addrs +
+    // ServiceConfig.dealer_psk stand up a two-link authenticated fleet,
+    // warm both models' banks over it, and serve mixed traffic.
+    let key = [0x42u8; 16];
+    let (registry, _, _) = fleet_registry();
+    let h0 = spawn_tcp_dealer_multi_psk("127.0.0.1:0", registry.clone(), 0xF0, 1, Some(key))
+        .expect("bind dealer 0");
+    let h1 = spawn_tcp_dealer_multi_psk("127.0.0.1:0", registry.clone(), 0xF1, 1, Some(key))
+        .expect("bind dealer 1");
+    let dealer_addrs = vec![h0.addr().to_string(), h1.addr().to_string()];
+
+    let models: Vec<(Arc<NetworkPlan>, ModelConfig)> = registry
+        .entries()
+        .iter()
+        .map(|e| {
+            (e.plan.clone(), ModelConfig { base_seed: Some(e.base_seed), demand: e.demand })
+        })
+        .collect();
+    let svc = PiService::start_multi(models, ServiceConfig {
+        workers: 2,
+        pool_target: 4,
+        pool_dealers: 2,
+        dealer_addrs,
+        dealer_psk: Some(key),
+        ..Default::default()
+    })
+    .expect("start service over PSK fleet");
+    svc.warmup(2);
+    let fps = svc.models();
+    assert_eq!(fps.len(), 2);
+
+    let rxs: Vec<_> = (0..6)
+        .map(|i| {
+            let m = i % fps.len();
+            (m, svc.submit_to(fps[m], input()).expect("known model"))
+        })
+        .collect();
+    for (m, rx) in rxs {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.model, fps[m], "response carries its model fingerprint");
+        assert!(!resp.logits.is_empty());
+    }
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.links.len(), 2, "one metrics row per fleet link");
+    assert!(
+        snap.links.iter().map(|l| l.fetches).sum::<u64>() >= 1,
+        "warmup refilled over the authenticated links"
+    );
+    svc.shutdown();
+    h0.stop();
+    h1.stop();
+}

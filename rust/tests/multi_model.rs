@@ -79,7 +79,7 @@ fn two_models_over_one_tcp_dealer_bit_match_inline_single_model_deals() {
         registry.clone(),
         3,
         2,
-        RefillSource::Remote { connect, batch: 2 },
+        RefillSource::remote_single(connect, 2),
         Some(metrics.clone()),
         1,
     );
@@ -232,7 +232,7 @@ fn cross_model_layer_batch_is_dropped_and_counted_never_staged() {
         registry,
         2,
         1,
-        RefillSource::Remote { connect, batch: 2 },
+        RefillSource::remote_single(connect, 2),
         Some(metrics.clone()),
         1,
     );

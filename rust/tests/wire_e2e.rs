@@ -168,7 +168,7 @@ fn tcp_dealer_refills_pool_and_serves() {
         4,
         2,
         3,
-        RefillSource::Remote { connect, batch: 2 },
+        RefillSource::remote_single(connect, 2),
         Some(metrics.clone()),
         1,
     );
@@ -221,7 +221,7 @@ fn tcp_streaming_layer_refill_matches_inline_whole_session_deals() {
         3,
         2,
         9,
-        RefillSource::Remote { connect, batch: 2 },
+        RefillSource::remote_single(connect, 2),
         Some(metrics.clone()),
         1,
     );
