@@ -79,6 +79,12 @@
 //!   to multiplex thousands of in-flight inferences from one thread.
 //!   Used by `examples/serve_pi.rs` (in-process or `--listen` network
 //!   mode) and the `circa serve` CLI.
+//!
+//! The hot paths in [`pool`] and [`service`] hold shard mutexes; the
+//! repo lint (`cargo run -p circa-lint -- check`, blocking in CI)
+//! enforces that no blocking call — socket I/O, channel `recv`,
+//! `sleep` — happens while a guard is live. The pattern to follow is
+//! copy-out-then-drop; see `docs/INVARIANTS.md` for the rule statement.
 
 pub mod batcher;
 pub mod metrics;

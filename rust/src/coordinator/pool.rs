@@ -1606,8 +1606,8 @@ mod tests {
                     std::thread::spawn(move || {
                         let mut framed = Framed::new(Box::new(dealer_end));
                         if framed.recv().is_ok() {
-                            let _ = framed
-                                .send(MsgType::Hello, &codec::encode_manifest_set(&manifests));
+                            let set = codec::encode_manifest_set(&manifests).unwrap();
+                            let _ = framed.send(MsgType::Hello, &set);
                         }
                         // Dropped here: every subsequent fetch on this
                         // link fails at the transport.

@@ -16,7 +16,8 @@
 //! the caller must drop the connection (there is no resync marker in
 //! the format).
 
-use crate::util::error::Result;
+use crate::util::bytes::le_u32;
+use crate::util::error::{Context, Result};
 use crate::wire::frame::{crc32, Frame, MsgType, FRAME_CRC_BYTES, FRAME_HEADER_BYTES};
 use crate::{bail, ensure};
 
@@ -57,9 +58,11 @@ impl FrameBuf {
             return Ok(None);
         }
         let start = self.pos;
-        let msg_type = MsgType::from_u8(self.buf[start])?;
-        let len =
-            u32::from_le_bytes(self.buf[start + 1..start + 5].try_into().unwrap()) as usize;
+        let header =
+            self.buf.get(start..start + FRAME_HEADER_BYTES).context("frame header range")?;
+        let (type_byte, len_bytes) = header.split_at(1);
+        let msg_type = MsgType::from_u8(type_byte.first().copied().context("empty header")?)?;
+        let len = le_u32(len_bytes) as usize;
         if len > self.max_len {
             bail!("oversized frame LEN {len} (connection cap {})", self.max_len);
         }
@@ -70,10 +73,14 @@ impl FrameBuf {
         }
         let crc_off = start + FRAME_HEADER_BYTES + len;
         // CRC covers header + payload, exactly like the blocking path.
-        let want = crc32(&self.buf[start..crc_off]);
-        let got = u32::from_le_bytes(self.buf[crc_off..crc_off + 4].try_into().unwrap());
+        let want = crc32(self.buf.get(start..crc_off).context("frame body range")?);
+        let got = le_u32(self.buf.get(crc_off..crc_off + 4).context("frame CRC range")?);
         ensure!(got == want, "frame CRC mismatch ({msg_type:?}, {len} B payload)");
-        let payload = self.buf[start + FRAME_HEADER_BYTES..crc_off].to_vec();
+        let payload = self
+            .buf
+            .get(start + FRAME_HEADER_BYTES..crc_off)
+            .context("frame payload range")?
+            .to_vec();
         self.pos += total;
         self.compact();
         Ok(Some(Frame { msg_type, payload }))

@@ -34,6 +34,12 @@
 //!   [`crate::coordinator::service::ResponseHandle`]s.
 //! * [`client`] — [`client::PiClient`], the blocking client used by the
 //!   `pi_client` load generator and the two-process tests.
+//!
+//! The untrusted-input guarantees in [`proto`] and [`frames`]
+//! (no panics, no truncating length casts, tag namespaces unique and
+//! decode-covered) and the reactor's no-blocking-under-lock rule are
+//! enforced by the repo lint (`cargo run -p circa-lint -- check`,
+//! blocking in CI) — see `docs/INVARIANTS.md`.
 
 pub mod accept;
 pub mod admit;

@@ -33,7 +33,7 @@
 
 use crate::ensure;
 use crate::field::{Fp, PRIME};
-use crate::util::bytes::{Reader, Writer};
+use crate::util::bytes::{le_u32, Reader, Writer};
 use crate::util::error::{Context, Result};
 
 /// Protocol magic (`b"CIRP"`, little-endian) — distinct from the dealer
@@ -122,12 +122,12 @@ fn put_fp_vec(w: &mut Writer, v: &[Fp]) {
 }
 
 fn get_fp_vec(r: &mut Reader) -> Result<Vec<Fp>> {
-    let n = r.u64()? as usize;
+    let n = r.len_u64()?;
     ensure!(n <= MAX_VEC_ELEMS, "field vector of {n} elements exceeds cap {MAX_VEC_ELEMS}");
     let raw = r.take(n.checked_mul(4).context("fp vec length overflows")?)?;
     raw.chunks_exact(4)
         .map(|c| {
-            let v = u32::from_le_bytes(c.try_into().unwrap()) as u64;
+            let v = le_u32(c) as u64;
             ensure!(v < PRIME, "field element {v} out of range");
             Ok(Fp::new(v))
         })
@@ -166,17 +166,19 @@ pub fn decode_client_hello(payload: &[u8]) -> Result<()> {
 }
 
 /// Server → client hello payload: version + model advertisements.
-pub fn encode_server_hello(hello: &ServerHello) -> Vec<u8> {
+/// Fallible since the advertisement count field is `u32` (lint rule R5:
+/// length fields are checked, never truncated with `as`).
+pub fn encode_server_hello(hello: &ServerHello) -> Result<Vec<u8>> {
     let mut w = Writer::new();
     w.u32(PROTO_MAGIC);
     w.u16(PROTO_VERSION);
-    w.u32(hello.models.len() as u32);
+    w.u32(u32::try_from(hello.models.len()).context("model ad count overflows u32")?);
     for ad in &hello.models {
         w.u64(ad.fingerprint);
         w.u32(ad.in_dim);
         w.u32(ad.out_dim);
     }
-    w.buf
+    Ok(w.buf)
 }
 
 pub fn decode_server_hello(payload: &[u8]) -> Result<ServerHello> {
@@ -291,7 +293,7 @@ mod tests {
                 ModelAd { fingerprint: 0x1234, in_dim: 6, out_dim: 3 },
             ],
         };
-        assert_eq!(decode_server_hello(&encode_server_hello(&hello)).unwrap(), hello);
+        assert_eq!(decode_server_hello(&encode_server_hello(&hello).unwrap()).unwrap(), hello);
 
         // Wrong magic / version skew / trailing bytes all reject.
         let mut bad = encode_client_hello();
@@ -300,7 +302,7 @@ mod tests {
         let mut skew = encode_client_hello();
         skew[4] = PROTO_VERSION as u8 + 1;
         assert!(decode_client_hello(&skew).unwrap_err().to_string().contains("version"));
-        let mut trailing = encode_server_hello(&hello);
+        let mut trailing = encode_server_hello(&hello).unwrap();
         trailing.push(0);
         assert!(decode_server_hello(&trailing).is_err());
     }

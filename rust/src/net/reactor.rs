@@ -141,7 +141,7 @@ impl Reactor {
                 out_dim: e.plan.linears.last().expect("non-empty plan").out_dim() as u32,
             })
             .collect();
-        let hello_reply = proto::encode_server_hello(&ServerHello { models: ads });
+        let hello_reply = proto::encode_server_hello(&ServerHello { models: ads })?;
         let thread = {
             let stats = stats.clone();
             let stop = stop.clone();

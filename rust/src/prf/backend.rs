@@ -131,8 +131,17 @@ impl BatchCipher {
 /// little-endian state byte string), so outputs are bit-identical.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "aes")]
+// SAFETY: contract — the caller must have verified `aes` support via
+// cpuid before calling (the only call site is gated by
+// `Backend::available`); executing `aesenc` on a CPU without the
+// feature is undefined behavior, not merely a SIGILL.
 unsafe fn encrypt_many_ni(rk: &[u8; 176], blocks: &mut [u128]) {
     use std::arch::x86_64::*;
+    // SAFETY: pointer validity — round-key loads read 16 B at offsets
+    // 0, 16, ..., 160 of the 176-B `rk` array; block loads/stores use
+    // `chunk.as_ptr().add(i)` with `i < chunk.len()`, so every 16-B
+    // access stays inside the borrowed slice. `loadu`/`storeu` carry
+    // no alignment requirement.
     let mut keys = [_mm_setzero_si128(); 11];
     for (i, k) in keys.iter_mut().enumerate() {
         *k = _mm_loadu_si128(rk.as_ptr().add(16 * i) as *const __m128i);

@@ -3,9 +3,53 @@
 //! `serde` is not in the offline vendor set, so artifacts (weights,
 //! datasets) and protocol messages use this explicit little-endian format.
 //! The Python side (`python/compile/aot.py`) writes the same layouts.
+//!
+//! This module sits on the untrusted-input decode path, so it is held to
+//! the repo's **decode-no-panic** invariant (`docs/INVARIANTS.md`, rule
+//! R1, enforced by `circa-lint`): no `unwrap`/`expect`/indexing — every
+//! failure is an `Err`, and the [`le_u16`]/[`le_u32`]/[`le_u64`]/
+//! [`le_u128`] assemblers below exist so callers never need a panicking
+//! slice-to-array conversion.
 
-use crate::bail;
 use crate::util::error::{Context, Result};
+
+/// Assemble a little-endian `u16` from up to 2 bytes (missing high bytes
+/// read as zero). The copy loop compiles to a plain load; unlike
+/// `try_into().unwrap()` it has no panic path on a short slice.
+pub fn le_u16(b: &[u8]) -> u16 {
+    let mut out = [0u8; 2];
+    for (o, &x) in out.iter_mut().zip(b) {
+        *o = x;
+    }
+    u16::from_le_bytes(out)
+}
+
+/// Assemble a little-endian `u32` from up to 4 bytes (see [`le_u16`]).
+pub fn le_u32(b: &[u8]) -> u32 {
+    let mut out = [0u8; 4];
+    for (o, &x) in out.iter_mut().zip(b) {
+        *o = x;
+    }
+    u32::from_le_bytes(out)
+}
+
+/// Assemble a little-endian `u64` from up to 8 bytes (see [`le_u16`]).
+pub fn le_u64(b: &[u8]) -> u64 {
+    let mut out = [0u8; 8];
+    for (o, &x) in out.iter_mut().zip(b) {
+        *o = x;
+    }
+    u64::from_le_bytes(out)
+}
+
+/// Assemble a little-endian `u128` from up to 16 bytes (see [`le_u16`]).
+pub fn le_u128(b: &[u8]) -> u128 {
+    let mut out = [0u8; 16];
+    for (o, &x) in out.iter_mut().zip(b) {
+        *o = x;
+    }
+    u128::from_le_bytes(out)
+}
 
 /// A cursor over a byte slice with checked little-endian reads.
 pub struct Reader<'a> {
@@ -23,85 +67,98 @@ impl<'a> Reader<'a> {
     }
 
     pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.remaining() < n {
-            bail!("short read: want {n} bytes, have {}", self.remaining());
-        }
-        let out = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+        let end = self.pos.checked_add(n).context("read range overflows usize")?;
+        let out = self
+            .buf
+            .get(self.pos..end)
+            .with_context(|| format!("short read: want {n} bytes, have {}", self.remaining()))?;
+        self.pos = end;
         Ok(out)
     }
 
     pub fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        self.take(1)?.first().copied().context("empty read")
     }
 
     pub fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(le_u16(self.take(2)?))
     }
 
     pub fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(le_u32(self.take(4)?))
     }
 
     pub fn i32(&mut self) -> Result<i32> {
-        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(le_u32(self.take(4)?) as i32)
     }
 
     pub fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(le_u64(self.take(8)?))
     }
 
     pub fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(f32::from_bits(le_u32(self.take(4)?)))
     }
 
     pub fn u128(&mut self) -> Result<u128> {
-        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+        Ok(le_u128(self.take(16)?))
+    }
+
+    /// Read a `u64` length prefix and check that it fits in `usize`. On
+    /// 32-bit targets a hostile 8-byte length would otherwise truncate
+    /// silently before any of the size guards run (lint rule R5).
+    pub fn len_u64(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        usize::try_from(n).with_context(|| format!("length {n} exceeds usize"))
     }
 
     /// Length-prefixed element count with overflow-checked byte sizing —
     /// the guard every untrusted vec read goes through: an absurd length
     /// fails in `take` before any allocation happens.
     fn vec_bytes(&mut self, elem_bytes: usize) -> Result<(usize, &'a [u8])> {
-        let n = self.u64()? as usize;
+        let n = self.len_u64()?;
         let nbytes = n.checked_mul(elem_bytes).context("vec length overflows")?;
         Ok((n, self.take(nbytes)?))
     }
 
     pub fn i32_vec(&mut self) -> Result<Vec<i32>> {
         let (_, raw) = self.vec_bytes(4)?;
-        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(raw.chunks_exact(4).map(|c| le_u32(c) as i32).collect())
     }
 
     pub fn f32_vec(&mut self) -> Result<Vec<f32>> {
         let (_, raw) = self.vec_bytes(4)?;
-        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(raw.chunks_exact(4).map(|c| f32::from_bits(le_u32(c))).collect())
     }
 
     /// Length-prefixed `u128` vector (the wire shape of label arenas and
     /// free-XOR deltas).
     pub fn u128_vec(&mut self) -> Result<Vec<u128>> {
         let (_, raw) = self.vec_bytes(16)?;
-        Ok(raw.chunks_exact(16).map(|c| u128::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(raw.chunks_exact(16).map(le_u128).collect())
     }
 
     /// Length-prefixed raw bytes, borrowed straight out of the input
     /// buffer (zero-copy; the caller decides whether to own them).
     pub fn byte_slice(&mut self) -> Result<&'a [u8]> {
-        let n = self.u64()? as usize;
+        let n = self.len_u64()?;
         self.take(n)
     }
 
     /// Length-prefixed bit-packed bool vector (LSB-first within each
     /// byte) — the wire shape of decode-bit buffers.
     pub fn bool_vec(&mut self) -> Result<Vec<bool>> {
-        let n = self.u64()? as usize;
+        let n = self.len_u64()?;
         let raw = self.take(n.div_ceil(8))?;
-        Ok((0..n).map(|i| raw[i / 8] >> (i % 8) & 1 == 1).collect())
+        Ok(raw
+            .iter()
+            .flat_map(|&byte| (0..8).map(move |bit| byte >> bit & 1 == 1))
+            .take(n)
+            .collect())
     }
 
     pub fn string(&mut self) -> Result<String> {
-        let n = self.u64()? as usize;
+        let n = self.len_u64()?;
         let raw = self.take(n)?;
         String::from_utf8(raw.to_vec()).context("invalid utf8 in string field")
     }
@@ -235,6 +292,18 @@ mod tests {
     fn short_read_errors() {
         let mut r = Reader::new(&[1, 2]);
         assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn le_assemblers_match_from_le_bytes() {
+        assert_eq!(le_u16(&[0x01, 0x02]), 0x0201);
+        assert_eq!(le_u32(&[0x01, 0x02, 0x03, 0x04]), 0x0403_0201);
+        assert_eq!(le_u64(&[1, 2, 3, 4, 5, 6, 7, 8]), u64::from_le_bytes([1, 2, 3, 4, 5, 6, 7, 8]));
+        let b: [u8; 16] = [9, 8, 7, 6, 5, 4, 3, 2, 1, 0, 11, 12, 13, 14, 15, 16];
+        assert_eq!(le_u128(&b), u128::from_le_bytes(b));
+        // Short input zero-pads the missing high bytes instead of panicking.
+        assert_eq!(le_u32(&[0xFF]), 0xFF);
+        assert_eq!(le_u64(&[]), 0);
     }
 
     #[test]

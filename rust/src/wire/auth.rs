@@ -46,12 +46,14 @@ pub const TAG_BYTES: usize = 16;
 fn dbl(b: &[u8; 16]) -> [u8; 16] {
     let mut out = [0u8; 16];
     let mut carry = 0u8;
-    for i in (0..16).rev() {
-        out[i] = (b[i] << 1) | carry;
-        carry = b[i] >> 7;
+    for (o, &x) in out.iter_mut().zip(b.iter()).rev() {
+        *o = (x << 1) | carry;
+        carry = x >> 7;
     }
     if carry == 1 {
-        out[15] ^= 0x87;
+        if let Some(low) = out.last_mut() {
+            *low ^= 0x87;
+        }
     }
     out
 }
@@ -87,7 +89,11 @@ impl Cmac {
         let mut seen = 0usize;
         for part in parts {
             for &byte in *part {
-                block[fill] = byte;
+                // `fill < 16` on entry: a full block is either flushed
+                // below or is the final block, after which no byte follows.
+                if let Some(slot) = block.get_mut(fill) {
+                    *slot = byte;
+                }
                 fill += 1;
                 seen += 1;
                 // Flush every complete block except the final one (the
@@ -107,8 +113,12 @@ impl Cmac {
                 *l = *b ^ *k;
             }
         } else {
-            last[..fill].copy_from_slice(&block[..fill]);
-            last[fill] = 0x80;
+            for (l, b) in last.iter_mut().zip(block.iter().take(fill)) {
+                *l = *b;
+            }
+            if let Some(slot) = last.get_mut(fill) {
+                *slot = 0x80;
+            }
             for (l, k) in last.iter_mut().zip(&self.k2) {
                 *l ^= *k;
             }
@@ -137,20 +147,28 @@ pub fn tags_equal(a: &[u8; 16], b: &[u8; 16]) -> bool {
     diff == 0
 }
 
-/// Parse a 32-hex-char pre-shared key (the `--psk` CLI format).
+/// Parse a 32-hex-char pre-shared key (the `--psk` CLI format). Works on
+/// raw bytes so a multi-byte UTF-8 input can never land a slice on a
+/// char boundary — non-hex bytes are an error, never a panic.
 pub fn parse_psk_hex(s: &str) -> Result<[u8; 16]> {
-    let s = s.trim();
+    fn nibble(c: u8) -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            other => bail!("PSK is not hex (byte {other:#04x})"),
+        }
+    }
+    let hex = s.trim().as_bytes();
     ensure!(
-        s.len() == 32,
+        hex.len() == 32,
         "PSK must be 32 hex chars (128 bits), got {} chars",
-        s.len()
+        hex.len()
     );
     let mut key = [0u8; 16];
-    for (i, byte) in key.iter_mut().enumerate() {
-        let pair = &s[2 * i..2 * i + 2];
-        match u8::from_str_radix(pair, 16) {
-            Ok(v) => *byte = v,
-            Err(_) => bail!("PSK is not hex at chars {}..{} ({pair:?})", 2 * i, 2 * i + 2),
+    for (byte, pair) in key.iter_mut().zip(hex.chunks_exact(2)) {
+        if let &[hi, lo] = pair {
+            *byte = (nibble(hi)? << 4) | nibble(lo)?;
         }
     }
     Ok(key)

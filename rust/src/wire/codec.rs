@@ -33,7 +33,7 @@ use crate::prf::{Delta, Label};
 use crate::protocol::client::{ClientLayer, ClientNet};
 use crate::protocol::offline::{ClientReluMaterial, ServerReluMaterial};
 use crate::protocol::server::{LinearSlot, LinearSpine, NetworkPlan, ServerLayer, ServerNet};
-use crate::util::bytes::{Reader, Writer};
+use crate::util::bytes::{le_u128, le_u32, Reader, Writer};
 use crate::util::error::{Context, Result};
 use crate::{bail, ensure};
 
@@ -66,11 +66,11 @@ fn put_fp_vec(w: &mut Writer, v: &[Fp]) {
 }
 
 fn get_fp_vec(r: &mut Reader) -> Result<Vec<Fp>> {
-    let n = r.u64()? as usize;
+    let n = r.len_u64()?;
     let raw = r.take(n.checked_mul(4).context("fp vec length overflows")?)?;
     raw.chunks_exact(4)
         .map(|c| {
-            let v = u32::from_le_bytes(c.try_into().unwrap()) as u64;
+            let v = le_u32(c) as u64;
             ensure!(v < PRIME, "field element {v} out of range");
             Ok(Fp::new(v))
         })
@@ -92,22 +92,20 @@ fn get_label_vec(r: &mut Reader) -> Result<Vec<Label>> {
 fn put_table_vec(w: &mut Writer, v: &[[Label; 2]]) {
     w.u64(v.len() as u64);
     w.buf.reserve(v.len() * 32);
-    for pair in v {
-        w.u128(pair[0].0);
-        w.u128(pair[1].0);
+    for &[lo, hi] in v {
+        w.u128(lo.0);
+        w.u128(hi.0);
     }
 }
 
 fn get_table_vec(r: &mut Reader) -> Result<Vec<[Label; 2]>> {
-    let n = r.u64()? as usize;
+    let n = r.len_u64()?;
     let raw = r.take(n.checked_mul(32).context("table vec length overflows")?)?;
     Ok(raw
         .chunks_exact(32)
         .map(|c| {
-            [
-                Label(u128::from_le_bytes(c[..16].try_into().unwrap())),
-                Label(u128::from_le_bytes(c[16..].try_into().unwrap())),
-            ]
+            let (lo, hi) = c.split_at(16);
+            [Label(le_u128(lo)), Label(le_u128(hi))]
         })
         .collect())
 }
@@ -178,8 +176,11 @@ pub fn get_variant(r: &mut Reader) -> Result<ReluVariant> {
 /// tables | decode bits`. The circuit itself stays off the wire.
 pub fn put_gc_batch(w: &mut Writer, b: &LayerGcBatch) {
     w.u64(b.len() as u64);
-    w.u32(b.and_stride() as u32);
-    w.u32(b.out_stride() as u32);
+    // lint:allow(r5): strides come from the local circuit template (tens of
+    // gates per ReLU), bounded far below u32 — never from wire input.
+    let (and_stride, out_stride) = (b.and_stride() as u32, b.out_stride() as u32);
+    w.u32(and_stride);
+    w.u32(out_stride);
     put_table_vec(w, b.tables());
     w.bool_vec(b.output_decode());
 }
@@ -187,7 +188,7 @@ pub fn put_gc_batch(w: &mut Writer, b: &LayerGcBatch) {
 /// Decode a layer's garbled tables against the variant's circuit
 /// template, validating every stride.
 pub fn get_gc_batch(r: &mut Reader, spec: &VariantSpec) -> Result<LayerGcBatch> {
-    let n = r.u64()? as usize;
+    let n = r.len_u64()?;
     let and_stride = r.u32()? as usize;
     let out_stride = r.u32()? as usize;
     let circuit = spec.build_circuit();
@@ -220,7 +221,7 @@ pub fn put_encoding_batch(w: &mut Writer, e: &LayerEncodingBatch) {
 }
 
 pub fn get_encoding_batch(r: &mut Reader, spec: &VariantSpec) -> Result<LayerEncodingBatch> {
-    let stride = r.u64()? as usize;
+    let stride = r.len_u64()?;
     ensure!(
         stride == spec.n_inputs(),
         "encoding stride {stride} != {} inputs for {:?}",
@@ -249,7 +250,13 @@ pub fn put_triples(w: &mut Writer, triples: &[TripleShare]) {
 pub fn get_triples(r: &mut Reader) -> Result<Vec<TripleShare>> {
     let flat = get_fp_vec(r)?;
     ensure!(flat.len() % 3 == 0, "triple column length {} not divisible by 3", flat.len());
-    Ok(flat.chunks_exact(3).map(|c| TripleShare { a: c[0], b: c[1], ab: c[2] }).collect())
+    let mut out = Vec::with_capacity(flat.len() / 3);
+    for c in flat.chunks_exact(3) {
+        if let &[a, b, ab] = c {
+            out.push(TripleShare { a, b, ab });
+        }
+    }
+    Ok(out)
 }
 
 // ------------------------------------------------------- layer materials
@@ -354,7 +361,8 @@ pub fn get_layer_batch(
         plan.n_relu_layers()
     );
     let seq = r.u64()?;
-    let want_n = plan.linears[li].out_dim();
+    let want_n =
+        plan.linears.get(li).with_context(|| format!("layer {li} out of plan"))?.out_dim();
     let cm = get_client_relu(r)?;
     ensure!(
         cm.variant() == plan.variant,
@@ -395,7 +403,7 @@ pub fn put_spine(w: &mut Writer, fingerprint: u64, seq: u64, spine: &LinearSpine
 pub fn get_spine(r: &mut Reader, plan: &NetworkPlan) -> Result<(u64, u64, LinearSpine)> {
     let fingerprint = r.u64()?;
     let seq = r.u64()?;
-    let n = r.u64()? as usize;
+    let n = r.len_u64()?;
     ensure!(n == plan.linears.len(), "spine {n} slots != plan {}", plan.linears.len());
     let mut slots = Vec::with_capacity(n);
     for (li, op) in plan.linears.iter().enumerate() {
@@ -537,26 +545,24 @@ impl SessionManifest {
         ensure!(version == VERSION, "unsupported wire version {version} (want {VERSION})");
         let body_start = bytes.len() - r.remaining();
         let variant = get_variant(&mut r)?;
-        let n_dims = r.u64()? as usize;
+        let n_dims = r.len_u64()?;
         let raw = r.take(n_dims.checked_mul(8).context("dims length overflows")?)?;
         let dims: Vec<(u32, u32)> = raw
             .chunks_exact(8)
             .map(|c| {
-                (
-                    u32::from_le_bytes(c[..4].try_into().unwrap()),
-                    u32::from_le_bytes(c[4..].try_into().unwrap()),
-                )
+                let (i, o) = c.split_at(4);
+                (le_u32(i), le_u32(o))
             })
             .collect();
-        let n_rescale = r.u64()? as usize;
+        let n_rescale = r.len_u64()?;
         let raw = r.take(n_rescale.checked_mul(4).context("rescale length overflows")?)?;
-        let rescale_bits: Vec<u32> =
-            raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+        let rescale_bits: Vec<u32> = raw.chunks_exact(4).map(le_u32).collect();
         let weight_hash = r.u64()?;
         let body_end = bytes.len() - r.remaining();
         let fingerprint = r.u64()?;
         ensure!(r.remaining() == 0, "trailing bytes after manifest");
-        let want = fnv1a64(&bytes[body_start..body_end]);
+        let body = bytes.get(body_start..body_end).context("manifest body range")?;
+        let want = fnv1a64(body);
         ensure!(fingerprint == want, "manifest fingerprint mismatch");
         Ok(SessionManifest { variant, dims, rescale_bits, weight_hash, fingerprint })
     }
@@ -566,17 +572,20 @@ impl SessionManifest {
 /// manifest) × count`. Each entry is a full [`SessionManifest::encode`]
 /// payload, so every per-manifest validation (magic, version,
 /// fingerprint-covers-body) applies to every set member on decode.
-pub fn encode_manifest_set(set: &[SessionManifest]) -> Vec<u8> {
+/// Fallible since the count and per-entry length fields are `u32` (lint
+/// rule R5: length fields are checked, never truncated with `as`).
+pub fn encode_manifest_set(set: &[SessionManifest]) -> Result<Vec<u8>> {
     let mut w = Writer::new();
     w.u32(MAGIC);
     w.u16(VERSION);
-    w.u32(set.len() as u32);
+    let count = u32::try_from(set.len()).context("manifest count overflows u32")?;
+    w.u32(count);
     for m in set {
         let bytes = m.encode();
-        w.u32(bytes.len() as u32);
+        w.u32(u32::try_from(bytes.len()).context("manifest length overflows u32")?);
         w.buf.extend_from_slice(&bytes);
     }
-    w.buf
+    Ok(w.buf)
 }
 
 /// Decode and validate a handshake manifest set (at least one manifest,
@@ -656,27 +665,28 @@ pub fn decode_session(bytes: &[u8], plan: &NetworkPlan) -> Result<Session> {
     let mut r = Reader::new(bytes);
 
     // --- Client net: Linear, Relu, Linear, ..., Linear. ---
-    let n_client = r.u64()? as usize;
+    let n_client = r.len_u64()?;
     ensure!(n_client == want_layers, "client net {n_client} layers != plan {want_layers}");
     let mut client_layers = Vec::with_capacity(want_layers);
     for idx in 0..n_client {
         let tag = r.u8()?;
         let li = idx / 2;
+        let op = plan.linears.get(li).with_context(|| format!("layer {li} out of plan"))?;
         if idx % 2 == 0 {
             ensure!(tag == LAYER_LINEAR, "client layer {idx}: expected linear tag, got {tag}");
             let mask = get_fp_vec(&mut r)?;
             ensure!(
-                mask.len() == plan.linears[li].in_dim(),
+                mask.len() == op.in_dim(),
                 "client linear {li}: mask dim {} != {}",
                 mask.len(),
-                plan.linears[li].in_dim()
+                op.in_dim()
             );
             let x_share = get_fp_vec(&mut r)?;
             ensure!(
-                x_share.len() == plan.linears[li].out_dim(),
+                x_share.len() == op.out_dim(),
                 "client linear {li}: share dim {} != {}",
                 x_share.len(),
-                plan.linears[li].out_dim()
+                op.out_dim()
             );
             client_layers.push(ClientLayer::Linear { r: mask, x_share });
         } else {
@@ -689,32 +699,33 @@ pub fn decode_session(bytes: &[u8], plan: &NetworkPlan) -> Result<Session> {
                 plan.variant
             );
             ensure!(
-                m.n() == plan.linears[li].out_dim(),
+                m.n() == op.out_dim(),
                 "client relu {li}: {} ReLUs != {}",
                 m.n(),
-                plan.linears[li].out_dim()
+                op.out_dim()
             );
             client_layers.push(ClientLayer::Relu(Box::new(m)));
         }
     }
 
     // --- Server net: same alternation, ops re-attached from the plan. ---
-    let n_server = r.u64()? as usize;
+    let n_server = r.len_u64()?;
     ensure!(n_server == want_layers, "server net {n_server} layers != plan {want_layers}");
     let mut server_layers = Vec::with_capacity(want_layers);
     for idx in 0..n_server {
         let tag = r.u8()?;
         let li = idx / 2;
+        let op = plan.linears.get(li).with_context(|| format!("layer {li} out of plan"))?;
         if idx % 2 == 0 {
             ensure!(tag == LAYER_LINEAR, "server layer {idx}: expected linear tag, got {tag}");
             let blind = get_fp_vec(&mut r)?;
             ensure!(
-                blind.len() == plan.linears[li].out_dim(),
+                blind.len() == op.out_dim(),
                 "server linear {li}: blind dim {} != {}",
                 blind.len(),
-                plan.linears[li].out_dim()
+                op.out_dim()
             );
-            server_layers.push(ServerLayer::Linear { op: plan.linears[li].clone(), s: blind });
+            server_layers.push(ServerLayer::Linear { op: std::sync::Arc::clone(op), s: blind });
         } else {
             ensure!(tag == LAYER_RELU, "server layer {idx}: expected relu tag, got {tag}");
             let mat = get_server_relu(&mut r)?;
@@ -725,10 +736,10 @@ pub fn decode_session(bytes: &[u8], plan: &NetworkPlan) -> Result<Session> {
                 plan.variant
             );
             ensure!(
-                mat.n() == plan.linears[li].out_dim(),
+                mat.n() == op.out_dim(),
                 "server relu {li}: {} ReLUs != {}",
                 mat.n(),
-                plan.linears[li].out_dim()
+                op.out_dim()
             );
             let rescale = r.u32()?;
             ensure!(
@@ -963,13 +974,13 @@ mod tests {
         };
         let a = mk(1, circa_variant(12));
         let b = mk(1, ReluVariant::BaselineRelu);
-        let bytes = encode_manifest_set(&[a.clone(), b.clone()]);
+        let bytes = encode_manifest_set(&[a.clone(), b.clone()]).unwrap();
         let set = decode_manifest_set(&bytes).unwrap();
         assert_eq!(set, vec![a.clone(), b]);
 
         // Empty sets, duplicates, and truncation are rejected.
-        assert!(decode_manifest_set(&encode_manifest_set(&[])).is_err());
-        assert!(decode_manifest_set(&encode_manifest_set(&[a.clone(), a])).is_err());
+        assert!(decode_manifest_set(&encode_manifest_set(&[]).unwrap()).is_err());
+        assert!(decode_manifest_set(&encode_manifest_set(&[a.clone(), a]).unwrap()).is_err());
         for cut in (0..bytes.len()).step_by(9) {
             assert!(decode_manifest_set(&bytes[..cut]).is_err(), "cut={cut}");
         }

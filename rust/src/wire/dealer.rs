@@ -193,7 +193,7 @@ pub fn serve_connection(
                 let _ = framed.send(MsgType::Error, msg.as_bytes());
                 bail!("{msg}");
             }
-            framed.send(MsgType::Hello, &codec::encode_manifest_set(&local_set))?;
+            framed.send(MsgType::Hello, &codec::encode_manifest_set(&local_set)?)?;
         }
         Err(e) => {
             let _ = framed.send(MsgType::Error, e.to_string().as_bytes());
@@ -317,7 +317,7 @@ impl RemoteDealer {
     fn connect_framed(mut framed: Framed, registry: Arc<ModelRegistry>) -> Result<RemoteDealer> {
         ensure!(!registry.is_empty(), "local registry is empty");
         let local = registry.manifests();
-        framed.send(MsgType::Hello, &codec::encode_manifest_set(&local))?;
+        framed.send(MsgType::Hello, &codec::encode_manifest_set(&local)?)?;
         let reply = framed.recv()?;
         match reply.msg_type {
             MsgType::Hello => {
@@ -923,7 +923,9 @@ mod tests {
         let (chan, dealer_thread) = spawn_mem_dealer(plan.clone(), 5, 1);
         let mut framed = Framed::new(chan);
         let manifest = SessionManifest::of_plan(&plan);
-        framed.send(MsgType::Hello, &codec::encode_manifest_set(&[manifest])).unwrap();
+        framed
+            .send(MsgType::Hello, &codec::encode_manifest_set(&[manifest]).unwrap())
+            .unwrap();
         assert_eq!(framed.recv().unwrap().msg_type, MsgType::Hello);
         // Zero-count request is a protocol violation; the dealer drops us.
         let mut w = Writer::new();

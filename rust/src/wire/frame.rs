@@ -39,6 +39,7 @@
 //! [`crate::util::error::Result`] errors — never panics.
 
 use super::auth::{tags_equal, Cmac};
+use crate::util::bytes::le_u32;
 use crate::util::error::{Context, Error, Result};
 use crate::{bail, ensure};
 use std::io::{Read, Write};
@@ -150,6 +151,8 @@ const fn crc_table() -> [u32; 256] {
             c = if c & 1 == 1 { CRC_POLY ^ (c >> 1) } else { c >> 1 };
             k += 1;
         }
+        // lint:allow(r1): const-context table build — an out-of-bounds
+        // index here is a compile error, never a runtime panic.
         table[i] = c;
         i += 1;
     }
@@ -164,7 +167,10 @@ const CRC_INIT: u32 = 0xFFFF_FFFF;
 /// receive path checksum header and payload without concatenating them.
 fn crc32_feed(mut state: u32, data: &[u8]) -> u32 {
     for &b in data {
-        state = CRC_TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+        // The `& 0xFF` mask proves the index < 256, so the `unwrap_or`
+        // arm is dead; the KAT test pins the register semantics.
+        let entry = CRC_TABLE.get(((state ^ b as u32) & 0xFF) as usize).copied().unwrap_or(0);
+        state = entry ^ (state >> 8);
     }
     state
 }
@@ -179,9 +185,10 @@ pub fn crc32(data: &[u8]) -> u32 {
 /// path and the nonblocking reactor write buffers ([`crate::net`]).
 pub fn encode_frame(msg_type: MsgType, payload: &[u8]) -> Result<Vec<u8>> {
     ensure!(payload.len() <= MAX_FRAME_LEN, "frame payload too large: {}", payload.len());
+    let len32 = u32::try_from(payload.len()).context("frame LEN overflows u32")?;
     let mut buf = Vec::with_capacity(FRAME_HEADER_BYTES + payload.len() + FRAME_CRC_BYTES);
     buf.push(msg_type as u8);
-    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&len32.to_le_bytes());
     buf.extend_from_slice(payload);
     // CRC covers header + payload (everything written so far).
     let crc = crc32(&buf);
@@ -222,7 +229,8 @@ impl Framed {
     pub fn send(&mut self, msg_type: MsgType, payload: &[u8]) -> Result<()> {
         let mut buf = encode_frame(msg_type, payload)?;
         if let Some(mac) = &self.mac {
-            let tag = mac.tag(&buf[..buf.len() - FRAME_CRC_BYTES]);
+            let body_len = buf.len().saturating_sub(FRAME_CRC_BYTES);
+            let tag = mac.tag(buf.get(..body_len).unwrap_or_default());
             buf.extend_from_slice(&tag);
         }
         self.chan.send_bytes(&buf)?;
@@ -235,8 +243,9 @@ impl Framed {
     pub fn recv(&mut self) -> Result<Frame> {
         let mut header = [0u8; FRAME_HEADER_BYTES];
         self.chan.recv_exact(&mut header)?;
-        let msg_type = MsgType::from_u8(header[0])?;
-        let len = u32::from_le_bytes(header[1..5].try_into().unwrap()) as usize;
+        let (type_byte, len_bytes) = header.split_at(1);
+        let msg_type = MsgType::from_u8(type_byte.first().copied().context("empty header")?)?;
+        let len = le_u32(len_bytes) as usize;
         ensure!(len <= MAX_FRAME_LEN, "oversized frame LEN {len}");
         // Grow the payload in bounded steps so a corrupt LEN with no data
         // behind it fails after at most one step's allocation.
@@ -245,7 +254,7 @@ impl Framed {
         while payload.len() < len {
             let start = payload.len();
             payload.resize(start + RECV_STEP.min(len - start), 0);
-            self.chan.recv_exact(&mut payload[start..])?;
+            self.chan.recv_exact(payload.get_mut(start..).context("frame read range")?)?;
         }
         let mut crc = [0u8; FRAME_CRC_BYTES];
         self.chan.recv_exact(&mut crc)?;
@@ -325,8 +334,9 @@ impl Channel for MemChannel {
                 continue;
             }
             let take = (self.pending.len() - self.pos).min(out.len() - filled);
-            out[filled..filled + take]
-                .copy_from_slice(&self.pending[self.pos..self.pos + take]);
+            let src = self.pending.get(self.pos..self.pos + take).context("pending range")?;
+            let dst = out.get_mut(filled..filled + take).context("out range")?;
+            dst.copy_from_slice(src);
             self.pos += take;
             filled += take;
         }

@@ -88,6 +88,13 @@
 //! field elements are range-checked, deltas must carry their color bit,
 //! and layer shapes must match the local plan. Decoders return
 //! [`crate::util::error::Result`] — corrupt input never panics.
+//!
+//! These properties are enforced statically, not just by convention:
+//! the repo lint (`cargo run -p circa-lint -- check`, blocking in CI)
+//! forbids panicking calls, bare indexing, and truncating length casts
+//! in the decode paths here, and checks the wire constants for
+//! duplicate values and missing decoder arms. See `docs/INVARIANTS.md`
+//! for the full rule statements and the waiver policy.
 
 pub mod auth;
 pub mod codec;

@@ -132,10 +132,8 @@ fn spawn_lying_dealer(registry: Arc<ModelRegistry>, fb: u64) -> Box<dyn Channel>
         if hello.msg_type != MsgType::Hello {
             return;
         }
-        if framed
-            .send(MsgType::Hello, &codec::encode_manifest_set(&registry.manifests()))
-            .is_err()
-        {
+        let set = codec::encode_manifest_set(&registry.manifests()).unwrap();
+        if framed.send(MsgType::Hello, &set).is_err() {
             return;
         }
         let entry_b = registry.get(fb).expect("model B registered");

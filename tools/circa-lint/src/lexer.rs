@@ -1,0 +1,377 @@
+//! A line-aware token stream for Rust source — just enough lexing for
+//! the lint rules, with no external parser. Comments and string/char
+//! literal *contents* are consumed, never tokenized as code, so a
+//! `panic!` inside a doc comment or an error message can never trip a
+//! rule. Every token carries its 1-based source line for reporting and
+//! for matching against line-scoped waivers.
+
+/// Token kind. The lexer is deliberately coarse: multi-character
+/// operators arrive as consecutive [`Tok::Punct`] tokens (`==` is two
+/// `=`), which is exactly what the pattern-matching rules want.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (`unwrap`, `let`, `unsafe`, ...).
+    Ident(String),
+    /// Numeric literal as written (`12`, `0xFF`, `1_000u64`).
+    Num(String),
+    /// Any string literal flavor (`"…"`, `r#"…"#`, `b"…"`).
+    Str,
+    /// Char or byte-char literal (`'a'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// One punctuation character.
+    Punct(char),
+}
+
+/// One token plus the line it starts on.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+impl Token {
+    /// The identifier text, if this is an identifier.
+    pub fn ident(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// True when this token is the punctuation character `c`.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.tok == Tok::Punct(c)
+    }
+}
+
+/// Numeric value of a `Tok::Num`, handling `_` separators, `0x`/`0o`/
+/// `0b` prefixes, and trailing type suffixes. `None` for floats or
+/// anything else unparseable.
+pub fn num_value(text: &str) -> Option<u128> {
+    let clean: String = text.chars().filter(|c| *c != '_').collect();
+    let (radix, digits) = if let Some(d) = clean.strip_prefix("0x") {
+        (16, d)
+    } else if let Some(d) = clean.strip_prefix("0o") {
+        (8, d)
+    } else if let Some(d) = clean.strip_prefix("0b") {
+        (2, d)
+    } else {
+        (10, clean.as_str())
+    };
+    // Strip a type suffix (`u8`, `usize`, `i64`, ...) if present.
+    let end = digits
+        .find(|c: char| !c.is_digit(radix))
+        .unwrap_or(digits.len());
+    let (digits, suffix) = digits.split_at(end);
+    if digits.is_empty()
+        || !(suffix.is_empty() || suffix.starts_with('u') || suffix.starts_with('i'))
+    {
+        return None;
+    }
+    u128::from_str_radix(digits, radix).ok()
+}
+
+/// Lex `src` into a token stream.
+pub fn lex(src: &str) -> Vec<Token> {
+    let lexer = Lexer {
+        chars: src.chars().collect(),
+        i: 0,
+        line: 1,
+        toks: Vec::new(),
+    };
+    lexer.run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    i: usize,
+    line: usize,
+    toks: Vec<Token>,
+}
+
+impl Lexer {
+    fn run(mut self) -> Vec<Token> {
+        while self.i < self.chars.len() {
+            let c = self.chars[self.i];
+            match c {
+                '\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                _ if c.is_whitespace() => self.i += 1,
+                '/' if self.peek(1) == Some('/') => self.skip_line_comment(),
+                '/' if self.peek(1) == Some('*') => self.skip_block_comment(),
+                '"' => {
+                    self.push(Tok::Str);
+                    self.i += 1;
+                    self.skip_string_body();
+                }
+                '\'' => self.lifetime_or_char(),
+                _ if c.is_alphabetic() || c == '_' => self.word(),
+                _ if c.is_ascii_digit() => self.number(),
+                _ => {
+                    self.push(Tok::Punct(c));
+                    self.i += 1;
+                }
+            }
+        }
+        self.toks
+    }
+
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn push(&mut self, tok: Tok) {
+        self.toks.push(Token {
+            tok,
+            line: self.line,
+        });
+    }
+
+    fn skip_line_comment(&mut self) {
+        while self.i < self.chars.len() && self.chars[self.i] != '\n' {
+            self.i += 1;
+        }
+    }
+
+    fn skip_block_comment(&mut self) {
+        let mut depth = 1usize;
+        self.i += 2;
+        while self.i < self.chars.len() && depth > 0 {
+            match (self.chars[self.i], self.peek(1)) {
+                ('/', Some('*')) => {
+                    depth += 1;
+                    self.i += 2;
+                }
+                ('*', Some('/')) => {
+                    depth -= 1;
+                    self.i += 2;
+                }
+                ('\n', _) => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// Consume a plain (escaped) string body; `self.i` is at the first
+    /// content char.
+    fn skip_string_body(&mut self) {
+        while self.i < self.chars.len() {
+            match self.chars[self.i] {
+                '\\' => self.i += 2,
+                '"' => {
+                    self.i += 1;
+                    return;
+                }
+                '\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// Consume a raw string body; `self.i` is at the first `#` or the
+    /// opening quote.
+    fn skip_raw_string_body(&mut self) {
+        let mut hashes = 0usize;
+        while self.peek(0) == Some('#') {
+            hashes += 1;
+            self.i += 1;
+        }
+        if self.peek(0) != Some('"') {
+            return;
+        }
+        self.i += 1;
+        while self.i < self.chars.len() {
+            match self.chars[self.i] {
+                '\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                '"' => {
+                    let mut matched = 0usize;
+                    while matched < hashes && self.peek(1 + matched) == Some('#') {
+                        matched += 1;
+                    }
+                    self.i += 1;
+                    if matched == hashes {
+                        self.i += hashes;
+                        return;
+                    }
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// `'a` (lifetime) vs `'x'` / `'\n'` (char literal).
+    fn lifetime_or_char(&mut self) {
+        let next = self.peek(1).unwrap_or(' ');
+        let is_lifetime = (next.is_alphabetic() || next == '_') && self.peek(2) != Some('\'');
+        if is_lifetime {
+            self.push(Tok::Lifetime);
+            self.i += 1;
+            while self.peek(0).is_some_and(|c| c.is_alphanumeric() || c == '_') {
+                self.i += 1;
+            }
+        } else {
+            self.push(Tok::Char);
+            self.i += 1;
+            if self.peek(0) == Some('\\') {
+                self.i += 2; // the backslash and the escape head
+            } else {
+                self.i += 1;
+            }
+            // Tolerates multi-char escapes (\x41, \u{…}) by scanning to
+            // the closing quote.
+            while self.i < self.chars.len() && self.chars[self.i] != '\'' {
+                if self.chars[self.i] == '\n' {
+                    self.line += 1;
+                }
+                self.i += 1;
+            }
+            self.i += 1;
+        }
+    }
+
+    /// Identifier, keyword, or a string/char literal behind a `r`/`b`/
+    /// `br` prefix.
+    fn word(&mut self) {
+        let start = self.i;
+        while self.peek(0).is_some_and(|c| c.is_alphanumeric() || c == '_') {
+            self.i += 1;
+        }
+        let word: String = self.chars[start..self.i].iter().collect();
+        let next = self.peek(0);
+        let raw_string_follows =
+            next == Some('"') || (next == Some('#') && self.raw_hashes_then_quote());
+        match (word.as_str(), next) {
+            ("r" | "br", _) if raw_string_follows => {
+                self.push(Tok::Str);
+                self.skip_raw_string_body();
+            }
+            ("b", Some('"')) => {
+                self.push(Tok::Str);
+                self.i += 1;
+                self.skip_string_body();
+            }
+            ("b", Some('\'')) => {
+                // Byte-char literal: reuse the char path past the `b`.
+                self.lifetime_or_char();
+            }
+            ("r", Some('#')) => {
+                // Raw identifier `r#ident`.
+                self.i += 1;
+                let s = self.i;
+                while self.peek(0).is_some_and(|c| c.is_alphanumeric() || c == '_') {
+                    self.i += 1;
+                }
+                let ident: String = self.chars[s..self.i].iter().collect();
+                self.push(Tok::Ident(ident));
+            }
+            _ => self.push(Tok::Ident(word)),
+        }
+    }
+
+    /// After a `#`-prefixed position, do hashes lead to a `"` (raw
+    /// string) rather than an identifier (raw ident)?
+    fn raw_hashes_then_quote(&self) -> bool {
+        let mut k = 0usize;
+        while self.peek(k) == Some('#') {
+            k += 1;
+        }
+        k > 0 && self.peek(k) == Some('"')
+    }
+
+    fn number(&mut self) {
+        let start = self.i;
+        while self.peek(0).is_some_and(|c| c.is_alphanumeric() || c == '_') {
+            self.i += 1;
+        }
+        // Fractional part — only when a digit follows the dot, so `0..n`
+        // ranges and `1.max(x)` method calls stay separate tokens.
+        if self.peek(0) == Some('.') && self.peek(1).is_some_and(|c| c.is_ascii_digit()) {
+            self.i += 1;
+            while self.peek(0).is_some_and(|c| c.is_alphanumeric() || c == '_') {
+                self.i += 1;
+            }
+        }
+        let text: String = self.chars[start..self.i].iter().collect();
+        self.push(Tok::Num(text));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_code() {
+        let src = r##"
+            // unwrap() in a comment
+            /* panic! in /* a nested */ block */
+            let s = "unwrap() in a string";
+            let r = r#"expect( in a raw string"#;
+            let b = b"assert! bytes";
+            real_ident();
+        "##;
+        let ids = idents(src);
+        let banned = ["unwrap", "panic", "expect"];
+        assert!(!ids.iter().any(|s| banned.contains(&s.as_str())));
+        assert!(ids.iter().any(|s| s == "real_ident"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes = toks.iter().filter(|t| t.tok == Tok::Lifetime).count();
+        let chars = toks.iter().filter(|t| t.tok == Tok::Char).count();
+        assert_eq!((lifetimes, chars), (2, 1));
+    }
+
+    #[test]
+    fn lines_track_through_multiline_constructs() {
+        let src = "let a = \"x\ny\";\nlet b = 1; /* c\nc */ let d = 2;";
+        let toks = lex(src);
+        let line_of = |name: &str| {
+            let tok = toks.iter().find(|t| t.ident() == Some(name));
+            tok.map(|t| t.line)
+        };
+        assert_eq!(line_of("b"), Some(3));
+        assert_eq!(line_of("d"), Some(4));
+    }
+
+    #[test]
+    fn num_values_parse() {
+        assert_eq!(num_value("12"), Some(12));
+        assert_eq!(num_value("0xFF"), Some(255));
+        assert_eq!(num_value("1_000u64"), Some(1000));
+        assert_eq!(num_value("0b1010"), Some(10));
+        assert_eq!(num_value("1.5"), None);
+    }
+
+    #[test]
+    fn ranges_and_floats_disambiguate() {
+        let toks = lex("a[0..n]; let x = 1.5;");
+        assert!(toks.iter().any(|t| t.tok == Tok::Num("1.5".into())));
+        assert!(toks.iter().any(|t| t.tok == Tok::Num("0".into())));
+    }
+}

@@ -1,0 +1,27 @@
+//! circa-lint: repo-native static analysis for the circa workspace.
+//!
+//! Five rules, one purpose — keep the properties the test suite cannot
+//! cheaply express from regressing silently:
+//!
+//! * **r1 decode-no-panic** — modules that parse untrusted bytes
+//!   ([`rules::R1_MODULES`]) must not contain `unwrap`/`expect`,
+//!   panicking macros, or bare indexing outside `#[cfg(test)]`.
+//! * **r2 lock discipline** — hot-path modules ([`rules::R2_MODULES`])
+//!   must not hold a `.lock()` guard across a blocking call.
+//! * **r3 unsafe audit** — `unsafe` only in [`rules::R3_ALLOWLIST`],
+//!   always with an adjacent `// SAFETY:` comment.
+//! * **r4 wire-constant drift** — message-type discriminants stay
+//!   unique and decode-covered; MAGIC/VERSION preambles are compared,
+//!   not just written.
+//! * **r5 length-cast safety** — no truncating `as` casts on
+//!   length-derived values in decode modules.
+//!
+//! Findings print as `file:line rule message`. A finding can be waived
+//! in place with `// lint:allow(rule): reason` — the reason is
+//! mandatory and the repo-wide budget is [`rules::MAX_WAIVERS`].
+//! Policy and rationale live in `docs/INVARIANTS.md`.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{check_source, Finding, Report, Waiver, MAX_WAIVERS};

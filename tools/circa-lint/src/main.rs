@@ -1,0 +1,97 @@
+//! CLI: `circa-lint check [repo-root]` walks `rust/src/**/*.rs`, runs
+//! every rule, prints findings as `file:line rule message`, and exits
+//! nonzero when any unwaived finding (or waiver-policy violation)
+//! remains. CI runs this as a blocking job.
+
+use circa_lint::{check_source, MAX_WAIVERS};
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("check") => check(args.get(1).map(String::as_str).unwrap_or(".")),
+        _ => {
+            eprintln!("usage: circa-lint check [repo-root]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn check(root: &str) -> ExitCode {
+    let root = Path::new(root);
+    let src_root = root.join("rust").join("src");
+    if !src_root.is_dir() {
+        eprintln!(
+            "circa-lint: {} has no rust/src — run from the repo root",
+            root.display()
+        );
+        return ExitCode::from(2);
+    }
+    let mut files = Vec::new();
+    if let Err(e) = collect_rs_files(&src_root, &mut files) {
+        eprintln!("circa-lint: walking {}: {e}", src_root.display());
+        return ExitCode::from(2);
+    }
+    files.sort();
+    let mut failures = 0usize;
+    let mut waived = 0usize;
+    let mut waivers = 0usize;
+    for path in &files {
+        let src = match std::fs::read_to_string(path) {
+            Ok(src) => src,
+            Err(e) => {
+                eprintln!("circa-lint: reading {}: {e}", path.display());
+                failures += 1;
+                continue;
+            }
+        };
+        let rel = path.strip_prefix(root).unwrap_or(path);
+        let rel = rel.display().to_string().replace('\\', "/");
+        let report = check_source(&rel, &src);
+        for f in &report.findings {
+            println!("{f}");
+            failures += 1;
+        }
+        for f in &report.waived {
+            println!("{f} [waived]");
+            waived += 1;
+        }
+        for w in &report.waivers {
+            waivers += 1;
+            if w.reason_empty {
+                println!(
+                    "{rel}:{} waiver `lint:allow({})` has no reason — every waiver must say why",
+                    w.line, w.rule
+                );
+                failures += 1;
+            }
+        }
+    }
+    if waivers > MAX_WAIVERS {
+        println!("waiver budget exceeded: {waivers} in tree, budget {MAX_WAIVERS}");
+        failures += 1;
+    }
+    println!(
+        "circa-lint: {} files checked, {failures} failure(s), {waived} waived, \
+         {waivers}/{MAX_WAIVERS} waivers",
+        files.len()
+    );
+    if failures == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

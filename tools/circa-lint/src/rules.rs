@@ -1,0 +1,864 @@
+//! The five lint rules, run over the token stream of one file.
+//!
+//! Rule IDs (used in findings and `lint:allow` waivers):
+//!
+//! * `r1` — decode-no-panic: no `unwrap`/`expect`/panicking macro/bare
+//!   indexing in untrusted-input modules.
+//! * `r2` — lock discipline: no blocking call while a `.lock()` guard
+//!   is live in the hot coordinator/reactor/dealer modules.
+//! * `r3` — unsafe audit: `unsafe` only in the allowlist, and always
+//!   with an adjacent `// SAFETY:` comment.
+//! * `r4` — wire-constant drift: discriminant uniqueness, decode-arm
+//!   coverage, and compared-not-just-written MAGIC/VERSION consts.
+//! * `r5` — length-cast safety: no truncating `as` cast on
+//!   length-derived values in decode modules.
+//!
+//! See `docs/INVARIANTS.md` for the full statements and waiver policy.
+
+use crate::lexer::{lex, num_value, Tok, Token};
+
+/// Modules whose non-test code handles untrusted bytes (rules r1 + r5).
+pub const R1_MODULES: &[&str] = &[
+    "wire/codec.rs",
+    "wire/frame.rs",
+    "wire/auth.rs",
+    "net/proto.rs",
+    "net/frames.rs",
+    "util/bytes.rs",
+];
+
+/// Modules whose `.lock()` scopes must stay free of blocking calls.
+pub const R2_MODULES: &[&str] = &[
+    "coordinator/pool.rs",
+    "coordinator/service.rs",
+    "net/reactor.rs",
+    "wire/dealer.rs",
+];
+
+/// The only files allowed to contain `unsafe` at all.
+pub const R3_ALLOWLIST: &[&str] = &["prf/backend.rs"];
+
+/// Repo-wide budget for `lint:allow` waivers (enforced by the CLI).
+pub const MAX_WAIVERS: usize = 5;
+
+/// One reported violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let Finding { file, line, rule, message } = self;
+        write!(f, "{file}:{line} {rule} {message}")
+    }
+}
+
+/// A `// lint:allow(rule): reason` comment. A full-line waiver covers
+/// itself, any directly following comment lines, and the first code
+/// line after them; a trailing waiver covers its own line only.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub rule: String,
+    pub line: usize,
+    pub last_covered: usize,
+    pub reason_empty: bool,
+}
+
+/// Everything the engine learned about one file.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Violations not covered by any waiver — these fail the build.
+    pub findings: Vec<Finding>,
+    /// Violations silenced by a waiver (still counted and printed).
+    pub waived: Vec<Finding>,
+    /// All waivers present in the file, matched or not.
+    pub waivers: Vec<Waiver>,
+}
+
+fn in_set(path: &str, set: &[&str]) -> bool {
+    set.iter().any(|m| path.ends_with(m))
+}
+
+fn r4_applies(path: &str) -> bool {
+    path.contains("wire/") || path.ends_with("net/proto.rs")
+}
+
+/// Run every applicable rule over `src`, reported under `path` (repo-
+/// relative, `/`-separated — the suffix decides which rules apply).
+pub fn check_source(path: &str, src: &str) -> Report {
+    let norm = path.replace('\\', "/");
+    let toks = lex(src);
+    let lines: Vec<&str> = src.lines().collect();
+    let waivers = parse_waivers(&lines);
+    let in_test = test_mask(&toks);
+    let mut found = Vec::new();
+    if in_set(&norm, R1_MODULES) {
+        r1_no_panic(&norm, &toks, &in_test, &mut found);
+        r5_length_casts(&norm, &toks, &in_test, &mut found);
+    }
+    if in_set(&norm, R2_MODULES) {
+        r2_lock_discipline(&norm, &toks, &in_test, &mut found);
+    }
+    r3_unsafe_audit(&norm, &toks, &lines, &mut found);
+    if r4_applies(&norm) {
+        r4_wire_constants(&norm, &toks, &mut found);
+    }
+    found.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    let mut report = Report {
+        waivers,
+        ..Report::default()
+    };
+    for f in found {
+        let waived = report
+            .waivers
+            .iter()
+            .any(|w| w.rule == f.rule && f.line >= w.line && f.line <= w.last_covered);
+        if waived {
+            report.waived.push(f);
+        } else {
+            report.findings.push(f);
+        }
+    }
+    report
+}
+
+/// Parse `lint:allow` waivers out of the raw comment text. The marker
+/// must start the comment (`// lint:allow(r1): reason`), so prose that
+/// merely *mentions* the syntax never creates a waiver.
+fn parse_waivers(lines: &[&str]) -> Vec<Waiver> {
+    let mut out = Vec::new();
+    for (idx, raw) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let Some(slash) = raw.find("//") else { continue };
+        let text = raw[slash + 2..].trim_start_matches(['/', '!']).trim_start();
+        let Some(rest) = text.strip_prefix("lint:allow(") else { continue };
+        let Some(close) = rest.find(')') else { continue };
+        let rule = rest[..close].trim().to_ascii_lowercase();
+        let reason = rest[close + 1..].strip_prefix(':').map(str::trim).unwrap_or("");
+        let has_code_before = !raw[..slash].trim().is_empty();
+        let last_covered = if has_code_before {
+            lineno
+        } else {
+            // Skip the rest of the comment block, cover the first code
+            // line after it.
+            let mut j = lineno; // 0-based index of the next line
+            while j < lines.len() && lines[j].trim_start().starts_with("//") {
+                j += 1;
+            }
+            if j < lines.len() {
+                j + 1
+            } else {
+                lines.len()
+            }
+        };
+        out.push(Waiver {
+            rule,
+            line: lineno,
+            last_covered,
+            reason_empty: reason.is_empty(),
+        });
+    }
+    out
+}
+
+/// Token mask: `true` where the token sits inside a `#[cfg(test)]` or
+/// `#[test]` item (attribute through the matching close brace).
+fn test_mask(toks: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0;
+    while i < toks.len() {
+        if !test_attr_at(toks, i) {
+            i += 1;
+            continue;
+        }
+        // Find the item's opening brace (a `;` first means no body).
+        let mut j = i;
+        let mut open = None;
+        while j < toks.len() {
+            match &toks[j].tok {
+                Tok::Punct('{') => {
+                    open = Some(j);
+                    break;
+                }
+                Tok::Punct(';') => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(open) = open else {
+            i = j + 1;
+            continue;
+        };
+        let mut depth = 0usize;
+        let mut k = open;
+        while k < toks.len() {
+            match &toks[k].tok {
+                Tok::Punct('{') => depth += 1,
+                Tok::Punct('}') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        let end = k.min(toks.len() - 1);
+        for m in mask.iter_mut().take(end + 1).skip(i) {
+            *m = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+/// Does `#[cfg(test)]` or `#[test]` start at token `i`?
+fn test_attr_at(toks: &[Token], i: usize) -> bool {
+    if !toks[i].is_punct('#') || !toks.get(i + 1).is_some_and(|t| t.is_punct('[')) {
+        return false;
+    }
+    match toks.get(i + 2).and_then(Token::ident) {
+        Some("test") => toks.get(i + 3).is_some_and(|t| t.is_punct(']')),
+        Some("cfg") => {
+            toks.get(i + 3).is_some_and(|t| t.is_punct('('))
+                && toks.get(i + 4).and_then(Token::ident) == Some("test")
+        }
+        _ => false,
+    }
+}
+
+// ---------------------------------------------------------------- r1
+
+const R1_BANNED_CALLS: &[&str] = &[
+    "unwrap",
+    "unwrap_err",
+    "unwrap_unchecked",
+    "expect",
+    "expect_err",
+];
+
+const R1_BANNED_MACROS: &[&str] = &[
+    "panic",
+    "unreachable",
+    "todo",
+    "unimplemented",
+    "assert",
+    "assert_eq",
+    "assert_ne",
+    "debug_assert",
+    "debug_assert_eq",
+    "debug_assert_ne",
+];
+
+/// Keywords that can directly precede a `[` without it being indexing
+/// (patterns, array types, array literals). Space-separated word list.
+const NON_EXPR_KEYWORDS: &str =
+    "let mut ref in if else match return break continue as move while loop for impl dyn fn pub use const static struct enum mod unsafe where crate super type trait await box";
+
+/// Does the token end an expression, so that a following `[` indexes it?
+fn ends_expr(t: &Token) -> bool {
+    match &t.tok {
+        Tok::Ident(w) => !NON_EXPR_KEYWORDS.split_whitespace().any(|k| k == w),
+        Tok::Num(_) | Tok::Str => true,
+        Tok::Punct(')') | Tok::Punct(']') | Tok::Punct('?') => true,
+        _ => false,
+    }
+}
+
+fn r1_no_panic(file: &str, toks: &[Token], in_test: &[bool], out: &mut Vec<Finding>) {
+    for (i, t) in toks.iter().enumerate() {
+        if in_test[i] {
+            continue;
+        }
+        match &t.tok {
+            Tok::Ident(w) => {
+                let next = |c| toks.get(i + 1).is_some_and(|t: &Token| t.is_punct(c));
+                let after_dot = i > 0 && toks[i - 1].is_punct('.');
+                if R1_BANNED_CALLS.contains(&w.as_str()) && next('(') && after_dot {
+                    out.push(Finding {
+                        file: file.into(),
+                        line: t.line,
+                        rule: "r1",
+                        message: format!(
+                            "`.{w}()` can panic on untrusted input; propagate an error instead"
+                        ),
+                    });
+                } else if R1_BANNED_MACROS.contains(&w.as_str()) && next('!') {
+                    out.push(Finding {
+                        file: file.into(),
+                        line: t.line,
+                        rule: "r1",
+                        message: format!("`{w}!` is forbidden in decode paths; return an error"),
+                    });
+                }
+            }
+            Tok::Punct('[') if i > 0 && ends_expr(&toks[i - 1]) => {
+                out.push(Finding {
+                    file: file.into(),
+                    line: t.line,
+                    rule: "r1",
+                    message: "bare indexing/slicing can panic; use `.get(..)` and an error".into(),
+                });
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------- r2
+
+const R2_BLOCKING: &[&str] = &[
+    "read",
+    "write",
+    "read_exact",
+    "write_all",
+    "read_to_end",
+    "recv",
+    "recv_timeout",
+    "connect",
+    "sleep",
+    "accept",
+    "join",
+];
+
+/// Lock-free atomic RMW ops — *not* blocking, despite the `fetch`
+/// prefix that catches fences like `fetch_material`.
+const ATOMIC_RMW: &[&str] = &[
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_nand",
+    "fetch_min",
+    "fetch_max",
+    "fetch_update",
+];
+
+fn is_blocking_call(w: &str) -> bool {
+    R2_BLOCKING.contains(&w) || (w.starts_with("fetch") && !ATOMIC_RMW.contains(&w))
+}
+
+fn r2_lock_discipline(file: &str, toks: &[Token], in_test: &[bool], out: &mut Vec<Finding>) {
+    for i in 0..toks.len() {
+        if in_test[i]
+            || toks[i].ident() != Some("lock")
+            || i == 0
+            || !toks[i - 1].is_punct('.')
+            || !toks.get(i + 1).is_some_and(|t| t.is_punct('('))
+        {
+            continue;
+        }
+        let guard_line = toks[i].line;
+        let binder = let_binder(toks, i);
+        let end = match &binder {
+            Some(b) => let_scope_end(toks, i, b),
+            None => temporary_scope_end(toks, i),
+        };
+        let mut j = i + 2; // past `lock (`
+        while j < end {
+            if let Some(w) = toks[j].ident() {
+                if !in_test[j]
+                    && is_blocking_call(w)
+                    && toks.get(j + 1).is_some_and(|t| t.is_punct('('))
+                {
+                    out.push(Finding {
+                        file: file.into(),
+                        line: toks[j].line,
+                        rule: "r2",
+                        message: format!(
+                            "blocking `{w}()` while the `.lock()` guard from line {guard_line} \
+                             is live; drop the guard first"
+                        ),
+                    });
+                }
+            }
+            j += 1;
+        }
+    }
+}
+
+/// If the statement containing token `i` is a `let` (or `if let`/
+/// `while let`) binding, the name the guard is bound to. `None` for
+/// statement temporaries and for the discarded `_` binding.
+fn let_binder(toks: &[Token], i: usize) -> Option<String> {
+    let mut s = i;
+    while s > 0 {
+        match &toks[s - 1].tok {
+            Tok::Punct(';') | Tok::Punct('{') | Tok::Punct('}') => break,
+            _ => s -= 1,
+        }
+    }
+    let starts_let = toks[s].ident() == Some("let")
+        || (matches!(toks[s].ident(), Some("if") | Some("while"))
+            && toks.get(s + 1).and_then(Token::ident) == Some("let"));
+    if !starts_let {
+        return None;
+    }
+    // Last identifier before the (single) `=`: covers `let mut g`,
+    // `let Ok(g)`, and `if let Ok(mut g)` alike.
+    let mut binder = None;
+    let mut k = s;
+    while k < i {
+        if toks[k].is_punct('=') && !toks.get(k + 1).is_some_and(|t| t.is_punct('=')) {
+            break;
+        }
+        if let Some(w) = toks[k].ident() {
+            if !matches!(w, "let" | "mut" | "if" | "while" | "ref") {
+                binder = Some(w.to_string());
+            }
+        }
+        k += 1;
+    }
+    binder.filter(|b| b.as_str() != "_")
+}
+
+/// Scope end (exclusive token index) for a guard bound by `let`: the
+/// first `drop(binder)` after the lock, or the close of the enclosing
+/// block.
+fn let_scope_end(toks: &[Token], i: usize, binder: &str) -> usize {
+    let mut depth = 0i32;
+    let mut j = i + 1;
+    while j < toks.len() {
+        match &toks[j].tok {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                depth -= 1;
+                if depth < 0 {
+                    return j;
+                }
+            }
+            Tok::Ident(w)
+                if w == "drop"
+                    && toks.get(j + 1).is_some_and(|t| t.is_punct('('))
+                    && toks.get(j + 2).and_then(Token::ident) == Some(binder)
+                    && toks.get(j + 3).is_some_and(|t| t.is_punct(')')) =>
+            {
+                return j;
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+/// Scope end for a guard that is a statement temporary: the statement's
+/// `;`, extended through the body when the statement is a block header
+/// (`if let Ok(g) = x.lock() { … }`).
+fn temporary_scope_end(toks: &[Token], i: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = i + 1;
+    while j < toks.len() {
+        match &toks[j].tok {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                depth -= 1;
+                if depth <= 0 {
+                    return j;
+                }
+            }
+            Tok::Punct(';') if depth == 0 => return j,
+            _ => {}
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+// ---------------------------------------------------------------- r3
+
+fn r3_unsafe_audit(file: &str, toks: &[Token], lines: &[&str], out: &mut Vec<Finding>) {
+    for t in toks {
+        if t.ident() != Some("unsafe") {
+            continue;
+        }
+        if !in_set(file, R3_ALLOWLIST) {
+            out.push(Finding {
+                file: file.into(),
+                line: t.line,
+                rule: "r3",
+                message: format!(
+                    "`unsafe` outside the audited allowlist ({})",
+                    R3_ALLOWLIST.join(", ")
+                ),
+            });
+        }
+        if !has_safety_comment(lines, t.line) {
+            out.push(Finding {
+                file: file.into(),
+                line: t.line,
+                rule: "r3",
+                message: "`unsafe` without an adjacent `// SAFETY:` comment".into(),
+            });
+        }
+    }
+}
+
+/// A `SAFETY:` marker on the same line, or anywhere in the contiguous
+/// comment/attribute block directly above it (bounded look-back).
+fn has_safety_comment(lines: &[&str], line: usize) -> bool {
+    if lines.get(line - 1).is_some_and(|s| s.contains("SAFETY:")) {
+        return true;
+    }
+    let mut j = line - 1; // 0-based index of the line above
+    let mut looked = 0;
+    while j >= 1 && looked < 12 {
+        let s = lines[j - 1].trim_start();
+        if !(s.starts_with("//") || s.starts_with("#[") || s.starts_with("#!")) {
+            return false;
+        }
+        if s.contains("SAFETY:") {
+            return true;
+        }
+        j -= 1;
+        looked += 1;
+    }
+    false
+}
+
+// ---------------------------------------------------------------- r4
+
+/// Known u8 tag-constant namespaces (per-prefix value uniqueness +
+/// decode-use required).
+const R4_TAG_PREFIXES: &[&str] = &["MODE_", "LAYER_", "REQ_", "KIND_"];
+
+#[derive(Debug)]
+struct ConstDecl {
+    name: String,
+    ty: Option<String>,
+    value: Option<u128>,
+    line: usize,
+    /// Token index of the name in its declaration (excluded from uses).
+    name_idx: usize,
+}
+
+fn r4_wire_constants(file: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    r4_enums(file, toks, out);
+    let consts = collect_consts(toks);
+    for c in &consts {
+        if (c.name.contains("MAGIC") || c.name.contains("VERSION"))
+            && !has_comparison_use(toks, &c.name, c.name_idx)
+        {
+            out.push(Finding {
+                file: file.into(),
+                line: c.line,
+                rule: "r4",
+                message: format!(
+                    "`{}` is never compared on a decode path — wire preambles must be \
+                     checked, not just written",
+                    c.name
+                ),
+            });
+        }
+    }
+    // u8 tag namespaces: value uniqueness per prefix + decode use.
+    for prefix in R4_TAG_PREFIXES {
+        let group: Vec<&ConstDecl> = consts
+            .iter()
+            .filter(|c| c.name.starts_with(prefix) && c.ty.as_deref() == Some("u8"))
+            .collect();
+        for (a, b) in pairs(&group) {
+            if a.value.is_some() && a.value == b.value {
+                out.push(Finding {
+                    file: file.into(),
+                    line: b.line,
+                    rule: "r4",
+                    message: format!(
+                        "tag `{}` duplicates the value of `{}` in the `{prefix}*` namespace",
+                        b.name, a.name
+                    ),
+                });
+            }
+        }
+        for c in &group {
+            if !has_decode_use(toks, &c.name, c.name_idx) {
+                out.push(Finding {
+                    file: file.into(),
+                    line: c.line,
+                    rule: "r4",
+                    message: format!(
+                        "tag `{}` has no decode use (match arm or comparison) — encode and \
+                         decode have drifted",
+                        c.name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn pairs<'a, T>(xs: &'a [&'a T]) -> Vec<(&'a T, &'a T)> {
+    let mut out = Vec::new();
+    for (i, a) in xs.iter().enumerate() {
+        for b in xs.iter().skip(i + 1) {
+            out.push((*a, *b));
+        }
+    }
+    out
+}
+
+/// Enum discriminant uniqueness + `from_u8` decode-arm coverage.
+fn r4_enums(file: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    let from_u8_body = fn_body_range(toks, "from_u8");
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].ident() != Some("enum") {
+            i += 1;
+            continue;
+        }
+        let name = toks.get(i + 1).and_then(Token::ident).unwrap_or("?").to_string();
+        let Some(open) = find_punct(toks, i, '{') else {
+            i += 1;
+            continue;
+        };
+        let close = match_brace(toks, open);
+        // Variants with explicit discriminants at body depth 1:
+        // `Ident = <num>` where the `=` is not `==`.
+        let mut variants: Vec<(String, u128, usize)> = Vec::new();
+        let mut depth = 0i32;
+        for j in open..close {
+            match &toks[j].tok {
+                Tok::Punct('{') => depth += 1,
+                Tok::Punct('}') => depth -= 1,
+                Tok::Ident(v) if depth == 1 => {
+                    if toks.get(j + 1).is_some_and(|t| t.is_punct('='))
+                        && !toks.get(j + 2).is_some_and(|t| t.is_punct('='))
+                    {
+                        if let Some(Tok::Num(n)) = toks.get(j + 2).map(|t| &t.tok) {
+                            if let Some(val) = num_value(n) {
+                                variants.push((v.clone(), val, toks[j].line));
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        for (a, b) in pairs(&variants.iter().collect::<Vec<_>>()) {
+            if a.1 == b.1 {
+                out.push(Finding {
+                    file: file.into(),
+                    line: b.2,
+                    rule: "r4",
+                    message: format!(
+                        "enum {name}: variants {} and {} share discriminant {}",
+                        a.0, b.0, a.1
+                    ),
+                });
+            }
+        }
+        if let Some((fs, fe)) = from_u8_body {
+            if !variants.is_empty() {
+                for (v, val, line) in &variants {
+                    if !arm_covers(toks, fs, fe, *val, v) {
+                        out.push(Finding {
+                            file: file.into(),
+                            line: *line,
+                            rule: "r4",
+                            message: format!(
+                                "enum {name}: variant {v} (= {val}) has no matching decode \
+                                 arm in from_u8"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        i = close + 1;
+    }
+}
+
+/// Is there a `val => … Variant` arm inside the token range?
+fn arm_covers(toks: &[Token], fs: usize, fe: usize, val: u128, variant: &str) -> bool {
+    for j in fs..fe {
+        let Tok::Num(n) = &toks[j].tok else { continue };
+        if num_value(n) != Some(val)
+            || !toks.get(j + 1).is_some_and(|t| t.is_punct('='))
+            || !toks.get(j + 2).is_some_and(|t| t.is_punct('>'))
+        {
+            continue;
+        }
+        let arm_end = (j + 12).min(fe);
+        if toks[j + 3..arm_end].iter().any(|t| t.ident() == Some(variant)) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Token range (exclusive of the closing brace) of `fn <name>`'s body.
+fn fn_body_range(toks: &[Token], name: &str) -> Option<(usize, usize)> {
+    for i in 0..toks.len() {
+        if toks[i].ident() == Some("fn") && toks.get(i + 1).and_then(Token::ident) == Some(name) {
+            let open = find_punct(toks, i, '{')?;
+            return Some((open, match_brace(toks, open)));
+        }
+    }
+    None
+}
+
+fn find_punct(toks: &[Token], from: usize, c: char) -> Option<usize> {
+    (from..toks.len()).find(|&j| toks[j].is_punct(c))
+}
+
+/// Index of the `}` matching the `{` at `open` (or the last token).
+fn match_brace(toks: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    for j in open..toks.len() {
+        match &toks[j].tok {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+fn collect_consts(toks: &[Token]) -> Vec<ConstDecl> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 2 < toks.len() {
+        if toks[i].ident() == Some("const") && toks.get(i + 2).is_some_and(|t| t.is_punct(':')) {
+            if let Some(name) = toks.get(i + 1).and_then(Token::ident) {
+                // ALL_CAPS names only (skips `const fn`, generics).
+                if name.chars().all(|c| c.is_ascii_uppercase() || c == '_' || c.is_ascii_digit()) {
+                    let ty = toks.get(i + 3).and_then(Token::ident).map(str::to_string);
+                    // First numeric literal after the `=`, if any.
+                    let mut value = None;
+                    let mut j = i + 3;
+                    while j < toks.len() && !toks[j].is_punct(';') {
+                        if toks[j].is_punct('=') {
+                            if let Some(Tok::Num(n)) = toks.get(j + 1).map(|t| &t.tok) {
+                                value = num_value(n);
+                            }
+                            break;
+                        }
+                        j += 1;
+                    }
+                    out.push(ConstDecl {
+                        name: name.to_string(),
+                        ty,
+                        value,
+                        line: toks[i].line,
+                        name_idx: i + 1,
+                    });
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Is `name` used in an `==`/`!=` comparison anywhere besides its
+/// declaration?
+fn has_comparison_use(toks: &[Token], name: &str, decl_idx: usize) -> bool {
+    occurrences(toks, name, decl_idx).any(|i| adjacent_comparison(toks, i))
+}
+
+/// Is `name` used as a match arm or in a comparison besides its
+/// declaration? (Test-code uses count: coverage is coverage.)
+fn has_decode_use(toks: &[Token], name: &str, decl_idx: usize) -> bool {
+    occurrences(toks, name, decl_idx).any(|i| {
+        adjacent_comparison(toks, i)
+            || (toks.get(i + 1).is_some_and(|t| t.is_punct('='))
+                && toks.get(i + 2).is_some_and(|t| t.is_punct('>')))
+    })
+}
+
+fn occurrences<'a>(
+    toks: &'a [Token],
+    name: &'a str,
+    decl_idx: usize,
+) -> impl Iterator<Item = usize> + 'a {
+    (0..toks.len()).filter(move |&i| i != decl_idx && toks[i].ident() == Some(name))
+}
+
+/// `== NAME`, `NAME ==`, `!= NAME`, or `NAME !=` at token `i`.
+fn adjacent_comparison(toks: &[Token], i: usize) -> bool {
+    let before = i >= 2
+        && toks[i - 1].is_punct('=')
+        && (toks[i - 2].is_punct('=') || toks[i - 2].is_punct('!'));
+    let after = toks.get(i + 1).is_some_and(|t| t.is_punct('=') || t.is_punct('!'))
+        && toks.get(i + 2).is_some_and(|t| t.is_punct('='));
+    before || after
+}
+
+// ---------------------------------------------------------------- r5
+
+const R5_CAST_TARGETS: &[&str] = &["u8", "u16", "u32", "usize"];
+
+/// Punctuation that ends the backward walk over the cast's source
+/// expression (statement/operator boundaries).
+const R5_STOPS: &str = ";{},=<>+-*/|&^!:";
+
+fn r5_length_casts(file: &str, toks: &[Token], in_test: &[bool], out: &mut Vec<Finding>) {
+    for i in 0..toks.len() {
+        if in_test[i] || toks[i].ident() != Some("as") {
+            continue;
+        }
+        let Some(target) = toks.get(i + 1).and_then(Token::ident) else { continue };
+        if !R5_CAST_TARGETS.contains(&target) {
+            continue;
+        }
+        if let Some(marker) = length_marker_backward(toks, i) {
+            out.push(Finding {
+                file: file.into(),
+                line: toks[i].line,
+                rule: "r5",
+                message: format!(
+                    "truncating `as {target}` on length-derived `{marker}`; use \
+                     `try_from`/checked conversion"
+                ),
+            });
+        }
+    }
+}
+
+/// Walk the cast's source expression backward looking for a length-ish
+/// marker: `.len()`, `.u64()`, anything containing `stride`, or a
+/// `*_len` identifier.
+fn length_marker_backward(toks: &[Token], cast_idx: usize) -> Option<String> {
+    let mut depth = 0i32;
+    let mut j = cast_idx;
+    let mut steps = 0;
+    while j > 0 && steps < 24 {
+        j -= 1;
+        steps += 1;
+        match &toks[j].tok {
+            Tok::Punct(')') | Tok::Punct(']') => depth += 1,
+            Tok::Punct('(') | Tok::Punct('[') => {
+                depth -= 1;
+                if depth < 0 {
+                    return None;
+                }
+            }
+            Tok::Punct(c) if depth == 0 && R5_STOPS.contains(*c) => return None,
+            Tok::Ident(w) => {
+                let after_dot = j > 0 && toks[j - 1].is_punct('.');
+                if ((w == "len" || w == "u64") && after_dot)
+                    || w.contains("stride")
+                    || w.ends_with("_len")
+                {
+                    return Some(w.clone());
+                }
+                if w == "return" || w == "let" {
+                    return None;
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}

@@ -1,0 +1,30 @@
+// Clean decode code: every access is checked, every failure is an
+// error value. The rule must stay silent here.
+
+pub fn decode(bytes: &[u8]) -> Result<u32, String> {
+    let first = bytes.first().copied().ok_or("empty input")?;
+    let tail = bytes.get(1..5).ok_or("short input")?;
+    let mut word = [0u8; 4];
+    for (o, &x) in word.iter_mut().zip(tail) {
+        *o = x;
+    }
+    let n = u32::from_le_bytes(word);
+    if n == 0 {
+        return Err("zero length".to_string());
+    }
+    // Allowed: unwrap_or and friends never panic.
+    let fallback = bytes.get(9).copied().unwrap_or(0);
+    Ok(n + first as u32 + fallback as u32)
+}
+
+pub fn pattern_brackets(bytes: &[u8]) -> u8 {
+    // `[` in patterns, types, and literals is not indexing.
+    let arr: [u8; 2] = [1, 2];
+    if let [a, b] = bytes {
+        return a ^ b;
+    }
+    match bytes {
+        [x, ..] => *x,
+        [] => arr.iter().sum(),
+    }
+}

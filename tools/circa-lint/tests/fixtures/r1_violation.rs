@@ -1,0 +1,32 @@
+// Seeded r1 violations: every panic avenue the rule must catch, plus a
+// test module whose identical code must NOT be flagged.
+
+pub fn decode(bytes: &[u8]) -> u32 {
+    let first = bytes[0];
+    let tail = &bytes[1..5];
+    let word: [u8; 4] = tail.try_into().unwrap();
+    let n = u32::from_le_bytes(word);
+    if n == 0 {
+        panic!("zero length");
+    }
+    assert!(first != 0xFF);
+    n + first as u32
+}
+
+pub fn lookup(map: &std::collections::HashMap<u32, u32>, k: u32) -> u32 {
+    *map.get(&k).expect("key must exist")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_code_may_unwrap_and_index() {
+        let v = vec![1u8, 2, 3, 4, 5];
+        assert_eq!(decode(&v), u32::from_le_bytes([2, 3, 4, 5]) + 1);
+        let x = v[0];
+        assert_eq!(Some(x).unwrap(), 1);
+        panic!("even this is fine in tests");
+    }
+}

@@ -1,0 +1,40 @@
+// Lock usage the rule must accept: guards dropped before blocking,
+// block-scoped guards, and atomic RMW ops that only share the `fetch`
+// prefix with blocking fences.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+pub struct Pool {
+    state: Arc<Mutex<Vec<u64>>>,
+    drops: AtomicU64,
+}
+
+impl Pool {
+    /// Guard explicitly dropped before the sleep.
+    pub fn refill(&self) {
+        let mut state = self.state.lock().unwrap();
+        state.push(1);
+        drop(state);
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    /// Guard confined to an inner block; recv happens after it closes.
+    pub fn drain(&self, rx: &std::sync::mpsc::Receiver<u64>) {
+        let pending = {
+            let state = self.state.lock().unwrap();
+            state.len()
+        };
+        if pending == 0 {
+            let _ = rx.recv_timeout(Duration::from_millis(5));
+        }
+    }
+
+    /// Atomic fetch_add under the lock is not a blocking call.
+    pub fn count(&self) {
+        let mut state = self.state.lock().unwrap();
+        self.drops.fetch_add(1, Ordering::Relaxed);
+        state.push(self.drops.load(Ordering::Relaxed));
+    }
+}

@@ -1,0 +1,37 @@
+// Seeded r2 violations: guards held across blocking calls, in each
+// binding shape the rule understands.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+pub struct Pool {
+    state: Arc<Mutex<Vec<u64>>>,
+}
+
+impl Pool {
+    /// let-bound guard, blocking sleep before it is dropped.
+    pub fn refill_sleepy(&self) {
+        let mut state = self.state.lock().unwrap();
+        state.push(1);
+        std::thread::sleep(Duration::from_millis(10));
+        state.push(2);
+    }
+
+    /// Statement-temporary guard inside an `if let` header: the guard
+    /// lives for the whole body, including the recv.
+    pub fn drain(&self, rx: &std::sync::mpsc::Receiver<u64>) {
+        if let Ok(mut state) = self.state.lock() {
+            if let Ok(v) = rx.recv() {
+                state.push(v);
+            }
+        }
+    }
+
+    /// Guard live across a socket connect.
+    pub fn dial(&self, addr: &str) -> std::io::Result<()> {
+        let state = self.state.lock().unwrap();
+        let _stream = std::net::TcpStream::connect(addr)?;
+        drop(state);
+        Ok(())
+    }
+}

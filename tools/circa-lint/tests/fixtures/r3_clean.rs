@@ -1,0 +1,22 @@
+// Clean r3 usage (checked under the allowlisted prf/backend.rs path):
+// every unsafe site carries an adjacent SAFETY comment.
+
+pub fn first_block(v: &[u128]) -> u128 {
+    // SAFETY: `v` is non-empty by the caller's contract and the pointer
+    // is derived from a live slice borrow.
+    unsafe { *v.as_ptr() }
+}
+
+#[target_feature(enable = "aes")]
+// SAFETY: callers must verify the `aes` cpuid bit before dispatching
+// here; the only call site is feature-gated.
+unsafe fn kernel(blocks: &mut [u128]) {
+    for b in blocks {
+        *b ^= 1;
+    }
+}
+
+pub fn run(blocks: &mut [u128]) {
+    // SAFETY: guarded by the same cpuid check the dispatcher performs.
+    unsafe { kernel(blocks) }
+}

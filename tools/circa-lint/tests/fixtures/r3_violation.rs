@@ -1,0 +1,7 @@
+// Seeded r3 violations: an unsafe block with no SAFETY comment, in a
+// module that is not on the unsafe allowlist.
+
+pub fn transmute_len(v: &[u32]) -> usize {
+    let p = v.as_ptr();
+    unsafe { p.add(v.len()).offset_from(p) as usize }
+}

@@ -1,0 +1,39 @@
+// Clean r4 file: unique discriminants, full decode coverage, compared
+// preamble constants, and a healthy tag namespace.
+
+pub const MAGIC: u32 = 0x43495243;
+pub const VERSION: u16 = 2;
+
+pub const REQ_ALPHA: u8 = 0;
+pub const REQ_BETA: u8 = 1;
+
+pub enum MsgType {
+    Hello = 1,
+    Data = 2,
+    Bye = 3,
+}
+
+impl MsgType {
+    pub fn from_u8(v: u8) -> Result<MsgType, String> {
+        match v {
+            1 => Ok(MsgType::Hello),
+            2 => Ok(MsgType::Data),
+            3 => Ok(MsgType::Bye),
+            other => Err(format!("unknown message type {other}")),
+        }
+    }
+}
+
+pub fn decode_preamble(magic: u32, version: u16, kind: u8) -> Result<u8, String> {
+    if magic != MAGIC {
+        return Err("bad magic".to_string());
+    }
+    if version != VERSION {
+        return Err("bad version".to_string());
+    }
+    match kind {
+        REQ_ALPHA => Ok(0),
+        REQ_BETA => Ok(1),
+        other => Err(format!("unknown request kind {other}")),
+    }
+}

@@ -1,0 +1,35 @@
+// Seeded r4 violations: duplicate discriminants, a variant without a
+// decode arm, a MAGIC that is written but never compared, and a tag
+// namespace with a value collision.
+
+pub const MAGIC: u32 = 0x43495243;
+
+pub const REQ_ALPHA: u8 = 0;
+pub const REQ_BETA: u8 = 0;
+
+pub enum MsgType {
+    Hello = 1,
+    Data = 2,
+    Bye = 2,
+    Probe = 4,
+}
+
+impl MsgType {
+    pub fn from_u8(v: u8) -> Result<MsgType, String> {
+        match v {
+            1 => Ok(MsgType::Hello),
+            2 => Ok(MsgType::Data),
+            other => Err(format!("unknown message type {other}")),
+        }
+    }
+}
+
+pub fn encode(kind: u8) -> Vec<u8> {
+    let mut out = vec![MAGIC as u8];
+    match kind {
+        REQ_ALPHA => out.push(1),
+        REQ_BETA => out.push(2),
+        _ => {}
+    }
+    out
+}

@@ -1,0 +1,15 @@
+// Clean r5 usage: checked conversions for length-derived values, plus
+// casts the rule must leave alone (widening, non-length sources).
+
+pub fn encode(payload: &[u8]) -> Result<Vec<u8>, String> {
+    let mut out = Vec::new();
+    let len32 = u32::try_from(payload.len()).map_err(|_| "len overflows u32".to_string())?;
+    out.extend_from_slice(&len32.to_le_bytes());
+    Ok(out)
+}
+
+pub fn widen(len_bytes: &[u8; 4], flags: u8) -> u64 {
+    // Widening a fixed 4-byte field and a flag byte is not truncation.
+    let word = u32::from_le_bytes(*len_bytes) as u64;
+    word + flags as u64 + (len_bytes.len() as u64)
+}

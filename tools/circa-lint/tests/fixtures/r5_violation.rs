@@ -1,0 +1,18 @@
+// Seeded r5 violations: truncating casts on length-derived values.
+
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub fn encode(payload: &[u8], out_stride: u64, w: &mut Writer) {
+    w.u32(payload.len() as u32);
+    w.u32(out_stride as u32);
+    let body_len: u64 = 9;
+    w.u32(body_len as u32);
+}

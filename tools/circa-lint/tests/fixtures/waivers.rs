@@ -1,0 +1,25 @@
+// Waiver semantics: a matching waiver silences its finding (and is
+// counted), a waiver for a different rule does not, and a waiver
+// without a reason is itself a policy violation.
+
+pub fn const_table() -> [u8; 4] {
+    let mut table = [0u8; 4];
+    let mut i = 0;
+    while i < 4 {
+        // lint:allow(r1): bounded by the loop condition — an index here
+        // can never exceed the fixed table size.
+        table[i] = i as u8;
+        i += 1;
+    }
+    table
+}
+
+pub fn wrong_rule_waiver(bytes: &[u8]) -> u8 {
+    // lint:allow(r5): this waiver names the wrong rule for the line.
+    bytes[0]
+}
+
+pub fn no_reason(bytes: &[u8]) -> u8 {
+    // lint:allow(r1):
+    bytes[1]
+}

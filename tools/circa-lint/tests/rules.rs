@@ -1,0 +1,177 @@
+//! Fixture tests: every rule fires on its seeded violation file, stays
+//! silent on the clean twin, and waivers silence exactly what they
+//! cover. Fixtures live under `tests/fixtures/` and are checked under
+//! *virtual* repo paths, since the module path decides which rules apply.
+
+use circa_lint::{check_source, Report};
+
+fn rules_of(report: &Report) -> Vec<&'static str> {
+    report.findings.iter().map(|f| f.rule).collect()
+}
+
+fn only_rule(report: &Report, rule: &str) -> bool {
+    report.findings.iter().all(|f| f.rule == rule)
+}
+
+fn has_msg(report: &Report, needle: &str) -> bool {
+    report.findings.iter().any(|f| f.message.contains(needle))
+}
+
+#[test]
+fn r1_fires_on_seeded_violations() {
+    let report = check_source(
+        "rust/src/wire/codec.rs",
+        include_str!("fixtures/r1_violation.rs"),
+    );
+    assert!(only_rule(&report, "r1"), "{:?}", report.findings);
+    // Indexing, slicing, unwrap, panic!, assert!, expect.
+    assert_eq!(rules_of(&report).len(), 6, "{:?}", report.findings);
+}
+
+#[test]
+fn r1_ignores_test_code() {
+    let src = include_str!("fixtures/r1_violation.rs");
+    let report = check_source("rust/src/wire/codec.rs", src);
+    // The #[cfg(test)] module repeats every violation; none of its
+    // lines may be reported.
+    let test_mod = src.lines().position(|l| l.contains("#[cfg(test)]"));
+    let test_mod_line = test_mod.expect("fixture has a test module") + 1;
+    assert!(
+        report.findings.iter().all(|f| f.line < test_mod_line),
+        "test-module lines were flagged: {:?}",
+        report.findings
+    );
+}
+
+#[test]
+fn r1_silent_on_clean_code() {
+    let report = check_source(
+        "rust/src/wire/codec.rs",
+        include_str!("fixtures/r1_clean.rs"),
+    );
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+}
+
+#[test]
+fn r1_does_not_apply_outside_decode_modules() {
+    let report = check_source(
+        "rust/src/protocol/relu.rs",
+        include_str!("fixtures/r1_violation.rs"),
+    );
+    assert!(
+        report.findings.iter().all(|f| f.rule != "r1"),
+        "r1 must be scoped to decode modules: {:?}",
+        report.findings
+    );
+}
+
+#[test]
+fn r2_fires_on_guard_across_blocking_calls() {
+    let report = check_source(
+        "rust/src/coordinator/pool.rs",
+        include_str!("fixtures/r2_violation.rs"),
+    );
+    assert!(only_rule(&report, "r2"), "{:?}", report.findings);
+    // sleep in refill_sleepy, recv in drain, connect in dial.
+    assert_eq!(rules_of(&report).len(), 3, "{:?}", report.findings);
+    assert!(has_msg(&report, "`sleep()`"));
+    assert!(has_msg(&report, "`recv()`"));
+    assert!(has_msg(&report, "`connect()`"));
+}
+
+#[test]
+fn r2_silent_on_disciplined_locks() {
+    let report = check_source(
+        "rust/src/coordinator/pool.rs",
+        include_str!("fixtures/r2_clean.rs"),
+    );
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+}
+
+#[test]
+fn r3_fires_outside_allowlist_and_without_safety() {
+    let report = check_source(
+        "rust/src/gc/table.rs",
+        include_str!("fixtures/r3_violation.rs"),
+    );
+    assert_eq!(rules_of(&report), vec!["r3", "r3"], "{:?}", report.findings);
+}
+
+#[test]
+fn r3_silent_on_documented_allowlisted_unsafe() {
+    let report = check_source(
+        "rust/src/prf/backend.rs",
+        include_str!("fixtures/r3_clean.rs"),
+    );
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+}
+
+#[test]
+fn r4_fires_on_constant_drift() {
+    let report = check_source(
+        "rust/src/wire/frame.rs",
+        include_str!("fixtures/r4_violation.rs"),
+    );
+    assert!(only_rule(&report, "r4"), "{:?}", report.findings);
+    assert!(has_msg(&report, "share discriminant"));
+    assert!(has_msg(&report, "no matching decode arm"));
+    assert!(has_msg(&report, "never compared"));
+    assert!(has_msg(&report, "duplicates the value"));
+}
+
+#[test]
+fn r4_silent_on_consistent_constants() {
+    let report = check_source(
+        "rust/src/wire/frame.rs",
+        include_str!("fixtures/r4_clean.rs"),
+    );
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+}
+
+#[test]
+fn r5_fires_on_truncating_length_casts() {
+    let report = check_source(
+        "rust/src/wire/codec.rs",
+        include_str!("fixtures/r5_violation.rs"),
+    );
+    assert_eq!(rules_of(&report), vec!["r5", "r5", "r5"], "{:?}", report.findings);
+}
+
+#[test]
+fn r5_silent_on_checked_and_widening_conversions() {
+    let report = check_source(
+        "rust/src/wire/codec.rs",
+        include_str!("fixtures/r5_clean.rs"),
+    );
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+}
+
+#[test]
+fn waivers_silence_exactly_what_they_cover() {
+    let report = check_source(
+        "rust/src/wire/codec.rs",
+        include_str!("fixtures/waivers.rs"),
+    );
+    // Matching waivers absorb the table indexing and the no-reason
+    // indexing; the wrong-rule waiver absorbs nothing.
+    assert_eq!(report.waived.len(), 2, "waived: {:?}", report.waived);
+    assert_eq!(report.findings.len(), 1, "{:?}", report.findings);
+    assert_eq!(report.findings[0].rule, "r1");
+    assert_eq!(report.waivers.len(), 3);
+    let no_reason = report.waivers.iter().filter(|w| w.reason_empty).count();
+    assert_eq!(no_reason, 1, "exactly one waiver is missing its reason");
+}
+
+#[test]
+fn findings_format_as_file_line_rule_message() {
+    let report = check_source(
+        "rust/src/wire/codec.rs",
+        include_str!("fixtures/r5_violation.rs"),
+    );
+    let first = report.findings.first().expect("fixture has findings");
+    let line = first.to_string();
+    assert!(
+        line.starts_with("rust/src/wire/codec.rs:") && line.contains(" r5 "),
+        "{line}"
+    );
+}
