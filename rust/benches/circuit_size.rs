@@ -1,0 +1,132 @@
+//! Circuit material squeeze: per-variant gate counts and bytes-per-ReLU
+//! before/after the hash-consing CSE build + `Circuit::optimize` pass,
+//! template-cache economics (cold build vs memoized `Arc` lookup, hit
+//! rate), and the dealer-side effect (offline deal ReLUs/s with cached
+//! templates). Results land in `BENCH_circuit_size.json`.
+
+use circa::bench_harness::print_row;
+use circa::bench_harness::tables::write_bench_json;
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::circuits::template;
+use circa::field::Fp;
+use circa::gc::size::CircuitCost;
+use circa::protocol::offline::{circa_variant, offline_relu_layer};
+use circa::ss::SharePair;
+use circa::util::{Rng, Timer};
+
+const REPS: usize = 3;
+
+fn variants() -> Vec<(String, ReluVariant)> {
+    vec![
+        ("baseline".into(), ReluVariant::BaselineRelu),
+        ("naive_sign".into(), ReluVariant::NaiveSign),
+        ("stoch_pz".into(), ReluVariant::StochasticSign { mode: FaultMode::PosZero }),
+        ("circa_k0".into(), circa_variant(0)),
+        ("circa_k8".into(), circa_variant(8)),
+        ("circa_k12".into(), circa_variant(12)),
+    ]
+}
+
+fn main() {
+    println!("=== circuit material squeeze (naive seed build vs CSE + optimize) ===\n");
+    let widths = [12, 10, 10, 8, 12, 12, 8];
+    print_row(
+        &["variant", "AND b/a", "gates b/a", "-AND%", "B/ReLU b", "B/ReLU a", "saved B"]
+            .map(String::from),
+        &widths,
+    );
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    for (name, v) in variants() {
+        let spec = v.spec();
+        let before = CircuitCost::of(&spec.build_circuit_naive());
+        let after = CircuitCost::of(&spec.build_circuit());
+        assert!(after.n_and <= before.n_and, "{name}: AND regression");
+        assert!(after.n_gates() < before.n_gates(), "{name}: gate regression");
+        let and_red = 100.0 * (before.n_and - after.n_and) as f64 / before.n_and as f64;
+        print_row(
+            &[
+                name.clone(),
+                format!("{}/{}", before.n_and, after.n_and),
+                format!("{}/{}", before.n_gates(), after.n_gates()),
+                format!("{and_red:.1}"),
+                format!("{}", before.total_bytes()),
+                format!("{}", after.total_bytes()),
+                format!("{}", before.total_bytes() - after.total_bytes()),
+            ],
+            &widths,
+        );
+        for (key, val) in [
+            ("and_naive", before.n_and as f64),
+            ("and_opt", after.n_and as f64),
+            ("gates_naive", before.n_gates() as f64),
+            ("gates_opt", after.n_gates() as f64),
+            ("bytes_per_relu_naive", before.total_bytes() as f64),
+            ("bytes_per_relu_opt", after.total_bytes() as f64),
+            ("and_reduction_pct", and_red),
+        ] {
+            results.push((format!("{name}.{key}"), val));
+        }
+    }
+
+    // Template-cache economics: cold build (CSE + optimize) vs memoized
+    // Arc lookup. build_circuit() bypasses the cache, so the loop above
+    // left it cold — the first circuit() call below is the true miss.
+    let spec = circa_variant(12).spec();
+    let mut cold_s = f64::MAX;
+    for _ in 0..REPS {
+        let t = Timer::new();
+        let c = spec.build_circuit();
+        std::hint::black_box(&c);
+        cold_s = cold_s.min(t.elapsed_s());
+    }
+    let _warm = spec.circuit();
+    let lookups = 10_000usize;
+    let t2 = Timer::new();
+    for _ in 0..lookups {
+        let c = spec.circuit();
+        std::hint::black_box(&c);
+    }
+    let lookup_s = t2.elapsed_s() / lookups as f64;
+    let ts = template::stats();
+    println!(
+        "\ntemplate cache: cold build {:.1} us, cached lookup {:.3} us ({:.0}x), \
+         {} hits / {} misses (hit rate {:.4})",
+        cold_s * 1e6,
+        lookup_s * 1e6,
+        cold_s / lookup_s.max(1e-12),
+        ts.hits,
+        ts.misses,
+        ts.hit_rate()
+    );
+    results.push(("template_cold_build_us".into(), cold_s * 1e6));
+    results.push(("template_cached_lookup_us".into(), lookup_s * 1e6));
+    results.push(("template_cache_hit_rate".into(), ts.hit_rate()));
+
+    // Dealer throughput with cached optimized templates: a full offline
+    // ReLU-layer deal (garble + encode + triples bookkeeping).
+    let n = std::env::var("SIZE_RELUS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024usize)
+        .max(1);
+    let mut rng = Rng::new(0x512E);
+    let xc: Vec<Fp> = (0..n)
+        .map(|i| SharePair::share(Fp::from_i64(500 + i as i64), &mut rng).client)
+        .collect();
+    let mut deal_s = f64::MAX;
+    for _ in 0..REPS {
+        let t = Timer::new();
+        let (cm, sm) = offline_relu_layer(circa_variant(12), &xc, &mut rng);
+        std::hint::black_box((&cm, &sm));
+        deal_s = deal_s.min(t.elapsed_s());
+    }
+    let relus_per_s = n as f64 / deal_s;
+    println!("offline deal (circa_k12, cached templates): {relus_per_s:.0} ReLUs/s (n = {n})");
+    results.push(("deal_relus_per_s".into(), relus_per_s));
+    results.push(("n_relus".into(), n as f64));
+
+    let entries: Vec<(&str, f64)> = results.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    write_bench_json("BENCH_circuit_size.json", &entries);
+    println!("\n(wrote bench_out/BENCH_circuit_size.json)");
+}

@@ -99,7 +99,7 @@ fn bench_variant(name: &str, variant: ReluVariant, n: usize, results: &mut Vec<(
 /// `LayerGcBatch::garble_chunked`).
 fn bench_parallel_garble(n: usize, results: &mut Vec<(String, f64)>) {
     let spec = circa_variant(12).spec();
-    let circuit = spec.build_circuit();
+    let circuit = spec.circuit();
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
     let time_with = |t: usize| {
         let mut rng = Rng::new(0x9A8B);

@@ -31,7 +31,7 @@ fn main() {
     );
     for v in variants {
         let spec = v.spec();
-        let c = spec.build_circuit();
+        let c = spec.circuit();
         let cost = CircuitCost::of(&c);
         let srv_base = spec.server_input_base();
         println!(
@@ -45,6 +45,40 @@ fn main() {
             cost.total_bytes()
         );
     }
+
+    // Before/after the material squeeze: the seed's naive build vs the
+    // CSE-built + optimized template each deal actually garbles.
+    println!(
+        "\n{:<22} {:>11} {:>11} {:>11} {:>11} {:>11} {:>9}",
+        "optimizer", "ANDs b/a", "XORs b/a", "NOTs b/a", "gates b/a", "bytes b/a", "saved B"
+    );
+    for v in variants {
+        let spec = v.spec();
+        let before = CircuitCost::of(&spec.build_circuit_naive());
+        let after = CircuitCost::of(&spec.build_circuit());
+        println!(
+            "{:<22} {:>5}/{:<5} {:>5}/{:<5} {:>5}/{:<5} {:>5}/{:<5} {:>5}/{:<5} {:>9}",
+            v.name(),
+            before.n_and,
+            after.n_and,
+            before.n_xor,
+            after.n_xor,
+            before.n_not,
+            after.n_not,
+            before.n_gates(),
+            after.n_gates(),
+            before.total_bytes(),
+            after.total_bytes(),
+            before.total_bytes() - after.total_bytes()
+        );
+    }
+    let ts = circa::circuits::template::stats();
+    println!(
+        "\ntemplate cache: {} hits / {} misses (hit rate {:.2})",
+        ts.hits,
+        ts.misses,
+        ts.hit_rate()
+    );
 
     // Live trace: garble + evaluate one truncated stochastic sign.
     println!("\n--- live garble/evaluate trace (~sign_{k}, x = -5000) ---");

@@ -12,12 +12,16 @@
 //! [`spec`] carries the shared input/output conventions, the
 //! [`spec::ReluVariant`] enum, and the resolved [`spec::VariantSpec`]
 //! behavior table the protocol layers dispatch through (circuit builder,
-//! input layout, `k`, and both parties' bit encoders).
+//! input layout, `k`, and both parties' bit encoders). [`template`]
+//! memoizes the optimized circuit per variant shape as a process-wide
+//! `Arc<Circuit>` cache, so layer deals and material decodes never
+//! rebuild a circuit.
 
 pub mod relu_gc;
 pub mod sign_gc;
 pub mod spec;
 pub mod stoch_sign_gc;
+pub mod template;
 pub mod trunc_sign_gc;
 
 pub use spec::{FaultMode, ReluVariant, VariantSpec};

@@ -21,8 +21,14 @@ pub const N_SERVER_INPUTS: usize = FIELD_BITS; // ⟨x⟩_s
 
 /// Build the Fig. 2(a) circuit. Output: m-bit bus of `ReLU(x) − r mod p`.
 pub fn build() -> Circuit {
+    build_with(Builder::new())
+}
+
+/// Build with a caller-supplied (fresh) builder — lets equivalence and
+/// gate-count tests construct the pre-CSE reference via
+/// [`Builder::new_naive`].
+pub fn build_with(mut bld: Builder) -> Circuit {
     let m = FIELD_BITS;
-    let mut bld = Builder::new();
     let xc = bld.input_bus(m); // client share
     let r = bld.input_bus(m); // client randomness
     let xs = bld.input_bus(m); // server share

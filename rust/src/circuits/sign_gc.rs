@@ -21,8 +21,14 @@ pub const N_SERVER_INPUTS: usize = FIELD_BITS;
 
 /// Build the Fig. 2(b) circuit. Output: m-bit bus of `⟨v⟩_s = sign(x) − r`.
 pub fn build() -> Circuit {
+    build_with(Builder::new())
+}
+
+/// Build with a caller-supplied (fresh) builder — lets equivalence and
+/// gate-count tests construct the pre-CSE reference via
+/// [`Builder::new_naive`].
+pub fn build_with(mut bld: Builder) -> Circuit {
     let m = FIELD_BITS;
-    let mut bld = Builder::new();
     let xc = bld.input_bus(m);
     let neg_r = bld.input_bus(m); // −r mod p, precomputed by client
     let one_minus_r = bld.input_bus(m); // 1−r mod p, precomputed by client

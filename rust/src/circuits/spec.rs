@@ -128,16 +128,44 @@ impl VariantSpec {
     }
 
     /// Build the variant's circuit (one template per *layer* — every ReLU
-    /// in a layer garbles the same structure with fresh labels).
+    /// in a layer garbles the same structure with fresh labels): the
+    /// hash-consing CSE build followed by [`Circuit::optimize`]. Hot
+    /// paths should prefer [`VariantSpec::circuit`], which memoizes this
+    /// per process.
     pub fn build_circuit(&self) -> Circuit {
-        match self.variant {
+        let raw = match self.variant {
             ReluVariant::BaselineRelu => super::relu_gc::build(),
             ReluVariant::NaiveSign => super::sign_gc::build(),
             ReluVariant::StochasticSign { mode } => super::stoch_sign_gc::build(mode),
             ReluVariant::TruncatedSign { k, mode } => {
                 super::stoch_sign_gc::build_truncated(k, mode)
             }
+        };
+        raw.optimize()
+    }
+
+    /// The pre-CSE, pre-optimizer circuit the seed builder produced —
+    /// the reference point for equivalence and gate-count regression
+    /// tests (identical `eval_plain`, never fewer gates).
+    pub fn build_circuit_naive(&self) -> Circuit {
+        use crate::gc::build::Builder;
+        match self.variant {
+            ReluVariant::BaselineRelu => super::relu_gc::build_with(Builder::new_naive()),
+            ReluVariant::NaiveSign => super::sign_gc::build_with(Builder::new_naive()),
+            ReluVariant::StochasticSign { mode } => {
+                super::stoch_sign_gc::build_truncated_with(0, mode, Builder::new_naive())
+            }
+            ReluVariant::TruncatedSign { k, mode } => {
+                super::stoch_sign_gc::build_truncated_with(k, mode, Builder::new_naive())
+            }
         }
+    }
+
+    /// The process-wide memoized `Arc` of [`VariantSpec::build_circuit`]
+    /// (see [`super::template`]): per-layer deals and material decodes
+    /// share one template instead of rebuilding per call.
+    pub fn circuit(&self) -> std::sync::Arc<Circuit> {
+        super::template::circuit_for(self)
     }
 
     /// The client's GC input bits for one ReLU, given its offline-known

@@ -44,11 +44,17 @@ pub fn build(mode: FaultMode) -> Circuit {
 /// Build the Eq. 3 circuit for truncation `k` (shares pre-truncated by
 /// the parties, so the comparator buses are `m−k` bits wide).
 pub fn build_truncated(k: u32, mode: FaultMode) -> Circuit {
+    build_truncated_with(k, mode, Builder::new())
+}
+
+/// Build with a caller-supplied (fresh) builder — lets equivalence and
+/// gate-count tests construct the pre-CSE reference via
+/// [`Builder::new_naive`].
+pub fn build_truncated_with(k: u32, mode: FaultMode, mut bld: Builder) -> Circuit {
     let m = FIELD_BITS;
     let k = k as usize;
     assert!(k < m, "truncation must leave at least one bit");
     let w = m - k;
-    let mut bld = Builder::new();
     let neg_xc_t = bld.input_bus(w); // ⌊p − ⟨x⟩_c⌋_k, truncated by client
     let neg_r = bld.input_bus(m);
     let one_minus_r = bld.input_bus(m);

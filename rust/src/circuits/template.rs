@@ -1,0 +1,116 @@
+//! Process-wide memoized circuit templates.
+//!
+//! A layer deal garbles thousands of ReLUs against *one* circuit
+//! structure, and a decode of remote material rebuilds the same circuit
+//! to derive strides — so the circuit for a [`ReluVariant`] is a pure
+//! function of the variant shape and worth building exactly once per
+//! process. [`circuit_for`] hands out `Arc<Circuit>` clones of the
+//! CSE-built, [`Circuit::optimize`]d template; `gc::batch::LayerGcBatch`
+//! holds the shared `Arc` instead of a cloned circuit.
+//!
+//! This module sits on the decode path (`wire/codec.rs` resolves strides
+//! through it for untrusted input), so it is covered by circa-lint r1:
+//! no panicking calls — the lock is taken poison-tolerantly and the map
+//! is only ever accessed through non-indexing APIs.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::spec::{ReluVariant, VariantSpec};
+use crate::gc::circuit::Circuit;
+
+static CACHE: OnceLock<Mutex<HashMap<ReluVariant, Arc<Circuit>>>> = OnceLock::new();
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+static RAW_FOR_TESTS: AtomicBool = AtomicBool::new(false);
+
+/// Cache hit/miss counters since process start (for benches and metrics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TemplateStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl TemplateStats {
+    /// Fraction of lookups served from the cache (1.0 when no lookups).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The memoized optimized circuit for a variant shape. First lookup per
+/// variant builds (CSE builder + optimizer) and caches; later lookups
+/// are a map probe returning a shared `Arc`.
+pub fn circuit_for(spec: &VariantSpec) -> Arc<Circuit> {
+    if RAW_FOR_TESTS.load(Ordering::Relaxed) {
+        // Equivalence-test mode: fresh pre-CSE, pre-optimizer circuits,
+        // bypassing (and not polluting) the cache.
+        return Arc::new(spec.build_circuit_naive());
+    }
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = match cache.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    if let Some(c) = map.get(&spec.variant) {
+        HITS.fetch_add(1, Ordering::Relaxed);
+        return Arc::clone(c);
+    }
+    MISSES.fetch_add(1, Ordering::Relaxed);
+    let built = Arc::new(spec.build_circuit());
+    map.insert(spec.variant, Arc::clone(&built));
+    built
+}
+
+/// Snapshot the lookup counters.
+pub fn stats() -> TemplateStats {
+    TemplateStats {
+        hits: HITS.load(Ordering::Relaxed),
+        misses: MISSES.load(Ordering::Relaxed),
+    }
+}
+
+/// Test/bench hook: when enabled, [`circuit_for`] returns freshly built
+/// naive (pre-CSE, unoptimized) circuits, so end-to-end tests can run the
+/// whole protocol "before" the optimizer and pin bit-identical logits
+/// against the optimized path. Process-global — tests that flip it must
+/// serialize among themselves.
+pub fn set_raw_templates_for_tests(on: bool) {
+    RAW_FOR_TESTS.store(on, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuits::spec::FaultMode;
+
+    #[test]
+    fn lookups_share_one_arc_per_variant() {
+        let spec = ReluVariant::StochasticSign { mode: FaultMode::NegPass }.spec();
+        let a = circuit_for(&spec);
+        let b = circuit_for(&spec);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.validate().is_ok());
+        // Cached content matches a fresh optimized build.
+        let fresh = spec.build_circuit();
+        assert_eq!(a.wires, fresh.wires);
+        assert_eq!(a.outputs, fresh.outputs);
+    }
+
+    #[test]
+    fn stats_move_on_lookup() {
+        let spec = ReluVariant::TruncatedSign { k: 8, mode: FaultMode::PosZero }.spec();
+        let before = stats();
+        let _a = circuit_for(&spec);
+        let _b = circuit_for(&spec);
+        let after = stats();
+        assert!(after.hits + after.misses >= before.hits + before.misses + 2);
+        assert!(after.hits > before.hits, "second lookup must hit");
+    }
+}

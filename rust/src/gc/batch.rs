@@ -8,7 +8,7 @@
 //! allocations and pointer chasing for material that is structurally one
 //! buffer. This module flattens it:
 //!
-//! * [`LayerGcBatch`] — one shared [`Circuit`] plus one contiguous
+//! * [`LayerGcBatch`] — one shared `Arc<Circuit>` template plus one contiguous
 //!   ciphertext buffer (`n × and_stride` table entries) and one
 //!   contiguous decode-bit buffer, with strided per-ReLU views;
 //! * [`LayerEncodingBatch`] — one contiguous `label0` arena
@@ -19,6 +19,8 @@
 //! outer stride loop, reusing one wire-label scratch buffer across the
 //! whole layer — allocations drop from O(#ReLU) to O(#layer), and byte
 //! accounting falls out of `buffer.len()`.
+
+use std::sync::Arc;
 
 use super::circuit::Circuit;
 use super::eval;
@@ -36,8 +38,11 @@ pub const GARBLE_CHUNK: usize = 128;
 /// One layer's garbled tables: a single [`Circuit`] template and one
 /// contiguous table/decode buffer with fixed per-ReLU strides.
 pub struct LayerGcBatch {
-    /// The shared circuit template (one per layer, not per ReLU).
-    pub circuit: Circuit,
+    /// The shared circuit template (one per layer, not per ReLU) —
+    /// typically the process-wide memoized `Arc` from
+    /// `circuits::template`, so batches across layers/sessions share one
+    /// allocation instead of cloning the circuit per batch.
+    pub circuit: Arc<Circuit>,
     /// AND gates per instance — the table stride.
     and_stride: usize,
     /// Output bits per instance — the decode stride.
@@ -53,7 +58,7 @@ pub struct LayerGcBatch {
 impl LayerGcBatch {
     /// An empty batch for `n` ReLUs of `circuit` (filled by
     /// [`LayerGcBatch::garble_next`]).
-    pub fn new(circuit: Circuit, n: usize) -> Self {
+    pub fn new(circuit: Arc<Circuit>, n: usize) -> Self {
         let and_stride = circuit.n_and();
         let out_stride = circuit.outputs.len();
         Self {
@@ -119,7 +124,7 @@ impl LayerGcBatch {
         let n_groups = n_threads.max(1).min(n_chunks);
         let chunks_per_group = n_chunks.div_ceil(n_groups);
 
-        let circuit = &self.circuit;
+        let circuit: &Circuit = &self.circuit;
         let mut tables = &mut self.tables[base * and_stride..];
         let mut decode = &mut self.output_decode[base * out_stride..];
         let mut label0 = &mut enc.label0[base * in_stride..];
@@ -168,7 +173,7 @@ impl LayerGcBatch {
     /// structural invariant (untrusted input — returns `Err`, never
     /// panics).
     pub fn from_parts(
-        circuit: Circuit,
+        circuit: Arc<Circuit>,
         n: usize,
         tables: Vec<[Label; 2]>,
         output_decode: Vec<bool>,
@@ -317,9 +322,13 @@ pub fn eval_layer_colors_multi(
         assert_eq!(req.gc.n, n, "request arity");
         assert_eq!(req.gc.and_stride, tmpl.and_stride, "shared template");
         assert_eq!(req.gc.out_stride, m, "shared template");
-        assert_eq!(req.gc.circuit.n_inputs, tmpl.circuit.n_inputs, "shared template");
-        assert_eq!(req.gc.circuit.wires.len(), tmpl.circuit.wires.len(), "shared template");
-        debug_assert!(req.gc.circuit.wires == tmpl.circuit.wires, "shared template");
+        // Memoized templates make this a pointer compare in the common
+        // case; the structural checks remain for batches built elsewhere.
+        if !Arc::ptr_eq(&req.gc.circuit, &tmpl.circuit) {
+            assert_eq!(req.gc.circuit.n_inputs, tmpl.circuit.n_inputs, "shared template");
+            assert_eq!(req.gc.circuit.wires.len(), tmpl.circuit.wires.len(), "shared template");
+            debug_assert!(req.gc.circuit.wires == tmpl.circuit.wires, "shared template");
+        }
         if n == 0 {
             assert!(
                 req.client_labels.is_empty() && req.server_labels.is_empty(),
@@ -457,14 +466,14 @@ mod tests {
     use crate::gc::build::{u64_to_bits, Builder};
     use crate::gc::garble::garble_with_scratch;
 
-    fn adder_circuit(m: usize) -> Circuit {
+    fn adder_circuit(m: usize) -> Arc<Circuit> {
         let mut bld = Builder::new();
         let a = bld.input_bus(m);
         let b = bld.input_bus(m);
         let (s, carry) = bld.add(&a, &b);
         bld.output_bus(&s);
         bld.output(carry);
-        bld.build()
+        Arc::new(bld.build())
     }
 
     #[test]
@@ -558,7 +567,7 @@ mod tests {
     /// Garble `n` instances of `circuit` and encode fresh pseudo-random
     /// inputs split 8/8 into client/server arenas.
     fn dealt_request(
-        circuit: &Circuit,
+        circuit: &Arc<Circuit>,
         n: usize,
         seed: u64,
     ) -> (LayerGcBatch, Vec<Label>, Vec<Label>) {
@@ -630,7 +639,7 @@ mod tests {
     }
 
     fn garble_chunked_with(
-        circuit: &Circuit,
+        circuit: &Arc<Circuit>,
         n: usize,
         threads: usize,
         seed: u64,

@@ -1,4 +1,5 @@
-//! Circuit builder with constant folding and m-bit bus combinators.
+//! Hash-consing circuit builder with constant folding and m-bit bus
+//! combinators.
 //!
 //! All arithmetic components use the 1-AND-per-bit constructions that the
 //! free-XOR cost model rewards:
@@ -11,6 +12,36 @@
 //! constants (the prime `p`, the threshold `p/2`, a constant-zero MUX arm)
 //! shed AND gates automatically — this is where the baseline ReLU GC's
 //! cost goes and where Circa's variants win.
+//!
+//! # Common-subexpression elimination
+//!
+//! On top of constant folding the default builder hash-conses every gate:
+//!
+//! * every wire is normalized to a canonical `(base, parity)` pair, where
+//!   `parity` records an odd number of NOTs over `base` — so `not` never
+//!   duplicates a negation (`not(not(x))` folds back to `x` for free) and
+//!   parity-aware folds fire where plain structural equality cannot:
+//!   `and(x, ¬x) = 0`, `and(x, x) = x`, `xor(x, ¬x) = 1`;
+//! * `xor`/`and` consult a structural cache keyed on the commutatively
+//!   normalized operands (`min`, `max` of the canonical forms), so a
+//!   repeated gate returns the existing wire instead of re-pushing — the
+//!   ripple carry/borrow chains in [`Builder::add`]/[`Builder::sub`] and
+//!   the per-bit MUX diffs share `x⊕c`-style subterms across positions;
+//! * `xor` additionally cancels one shared leg: `(u⊕v)⊕u = v`, and
+//!   `(u⊕v)⊕(u⊕t) = v⊕t` — this is what collapses the
+//!   "subtract-then-MUX-the-difference" pattern in the Fig. 2 circuits,
+//!   where `(z−p)_i ⊕ z_i` reduces to the borrow chain already built;
+//! * `mux` folds a negated selector into an arm swap (`¬s ? a : b` =
+//!   `s ? b : a`), so comparator outputs drive MUXes by their base wire
+//!   and the intermediate NOT dies (reclaimed by [`Circuit::optimize`]).
+//!
+//! [`Builder::new_naive`] disables all of the above beyond the seed's
+//! original constant folds; it exists so tests and benches can build the
+//! pre-CSE reference circuit and prove `eval_plain` equivalence.
+//!
+//! [`Circuit::optimize`]: super::circuit::Circuit::optimize
+
+use std::collections::HashMap;
 
 use super::circuit::{Circuit, WireDef, WireId};
 
@@ -25,20 +56,95 @@ pub enum Bit {
 pub type Bus = Vec<Bit>;
 
 /// Incremental circuit builder.
-#[derive(Default)]
 pub struct Builder {
     circuit: Circuit,
+    /// Hash-consing on (true, default) or seed-faithful naive mode (false).
+    cse: bool,
+    /// Canonical `(base wire, negation parity)` per wire id.
+    norm: Vec<(WireId, bool)>,
+    /// `(min base, max base)` → existing XOR wire.
+    xor_cache: HashMap<(WireId, WireId), WireId>,
+    /// Packed sorted `(base, parity)` operand pair → existing AND wire.
+    and_cache: HashMap<(u64, u64), WireId>,
+    /// base → its materialized NOT wire.
+    not_cache: HashMap<WireId, WireId>,
+    /// Wire id of input 0 (anchor for constant outputs).
+    first_input: Option<WireId>,
+    /// Cached constant-output anchors (`input0 ⊕ input0` and its NOT).
+    const_zero: Option<WireId>,
+    const_one: Option<WireId>,
+}
+
+impl Default for Builder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn pack(base: WireId, parity: bool) -> u64 {
+    ((base as u64) << 1) | parity as u64
 }
 
 impl Builder {
+    /// Builder with hash-consing CSE enabled (the production default).
     pub fn new() -> Self {
-        Self::default()
+        Self::with_cse(true)
+    }
+
+    /// Builder that replicates the seed's behavior exactly: constant
+    /// folding and the `x⊕x`/`x·x` identities only, every other gate
+    /// pushed verbatim. Reference point for equivalence and gate-count
+    /// regression tests.
+    pub fn new_naive() -> Self {
+        Self::with_cse(false)
+    }
+
+    fn with_cse(cse: bool) -> Self {
+        Self {
+            circuit: Circuit::default(),
+            cse,
+            norm: Vec::new(),
+            xor_cache: HashMap::new(),
+            and_cache: HashMap::new(),
+            not_cache: HashMap::new(),
+            first_input: None,
+            const_zero: None,
+            const_one: None,
+        }
     }
 
     fn push(&mut self, def: WireDef) -> WireId {
         let id = self.circuit.wires.len() as WireId;
         self.circuit.wires.push(def);
+        // Maintain canonical forms even in naive mode (cheap, keeps the
+        // invariant `norm.len() == wires.len()` unconditional).
+        let n = match def {
+            WireDef::Not(a) => {
+                let (b, p) = self.norm[a as usize];
+                (b, !p)
+            }
+            _ => (id, false),
+        };
+        self.norm.push(n);
         id
+    }
+
+    fn norm_of(&self, w: WireId) -> (WireId, bool) {
+        self.norm[w as usize]
+    }
+
+    /// Wire carrying `base ⊕ parity`, materializing (and memoizing) a NOT
+    /// wire only when the parity is set.
+    fn wire_for(&mut self, base: WireId, parity: bool) -> WireId {
+        if !parity {
+            return base;
+        }
+        if let Some(&w) = self.not_cache.get(&base) {
+            return w;
+        }
+        let w = self.push(WireDef::Not(base));
+        self.not_cache.insert(base, w);
+        w
     }
 
     /// Allocate one input bit. Inputs must be allocated in order but may
@@ -46,7 +152,11 @@ impl Builder {
     pub fn input(&mut self) -> Bit {
         let k = self.circuit.n_inputs;
         self.circuit.n_inputs += 1;
-        Bit::Wire(self.push(WireDef::Input(k)))
+        let id = self.push(WireDef::Input(k));
+        if self.first_input.is_none() {
+            self.first_input = Some(id);
+        }
+        Bit::Wire(id)
     }
 
     /// Allocate an m-bit little-endian input bus.
@@ -65,13 +175,72 @@ impl Builder {
             (Bit::Const(false), w) | (w, Bit::Const(false)) => w,
             (Bit::Const(true), w) | (w, Bit::Const(true)) => self.not(w),
             (Bit::Wire(x), Bit::Wire(y)) => {
-                if x == y {
-                    Bit::Const(false)
-                } else {
-                    Bit::Wire(self.push(WireDef::Xor(x, y)))
+                if !self.cse {
+                    return if x == y {
+                        Bit::Const(false)
+                    } else {
+                        Bit::Wire(self.push(WireDef::Xor(x, y)))
+                    };
+                }
+                let (bx, px) = self.norm_of(x);
+                let (by, py) = self.norm_of(y);
+                let parity = px ^ py;
+                if bx == by {
+                    // x ⊕ x = 0, x ⊕ ¬x = 1.
+                    return Bit::Const(parity);
+                }
+                match self.xor_bases(bx, by) {
+                    Bit::Const(c) => Bit::Const(c ^ parity),
+                    Bit::Wire(w) => {
+                        let (bw, bp) = self.norm_of(w);
+                        Bit::Wire(self.wire_for(bw, bp ^ parity))
+                    }
                 }
             }
         }
+    }
+
+    /// XOR of two distinct parity-free base wires: shared-leg cancellation
+    /// first, then the structural cache.
+    fn xor_bases(&mut self, bx: WireId, by: WireId) -> Bit {
+        if let WireDef::Xor(u, v) = self.circuit.wires[bx as usize] {
+            // (u ⊕ v) ⊕ u = v.
+            if u == by {
+                return Bit::Wire(v);
+            }
+            if v == by {
+                return Bit::Wire(u);
+            }
+            if let WireDef::Xor(s, t) = self.circuit.wires[by as usize] {
+                // (u ⊕ v) ⊕ (s ⊕ t) with one shared leg: recurse on the rest.
+                if u == s {
+                    return self.xor(Bit::Wire(v), Bit::Wire(t));
+                }
+                if u == t {
+                    return self.xor(Bit::Wire(v), Bit::Wire(s));
+                }
+                if v == s {
+                    return self.xor(Bit::Wire(u), Bit::Wire(t));
+                }
+                if v == t {
+                    return self.xor(Bit::Wire(u), Bit::Wire(s));
+                }
+            }
+        } else if let WireDef::Xor(s, t) = self.circuit.wires[by as usize] {
+            if s == bx {
+                return Bit::Wire(t);
+            }
+            if t == bx {
+                return Bit::Wire(s);
+            }
+        }
+        let key = if bx < by { (bx, by) } else { (by, bx) };
+        if let Some(&w) = self.xor_cache.get(&key) {
+            return Bit::Wire(w);
+        }
+        let w = self.push(WireDef::Xor(key.0, key.1));
+        self.xor_cache.insert(key, w);
+        Bit::Wire(w)
     }
 
     pub fn and(&mut self, a: Bit, b: Bit) -> Bit {
@@ -80,11 +249,34 @@ impl Builder {
             (Bit::Const(false), _) | (_, Bit::Const(false)) => Bit::Const(false),
             (Bit::Const(true), w) | (w, Bit::Const(true)) => w,
             (Bit::Wire(x), Bit::Wire(y)) => {
-                if x == y {
-                    Bit::Wire(x)
-                } else {
-                    Bit::Wire(self.push(WireDef::And(x, y)))
+                if !self.cse {
+                    return if x == y {
+                        Bit::Wire(x)
+                    } else {
+                        Bit::Wire(self.push(WireDef::And(x, y)))
+                    };
                 }
+                let (bx, px) = self.norm_of(x);
+                let (by, py) = self.norm_of(y);
+                if bx == by {
+                    // x · x = x, x · ¬x = 0.
+                    return if px == py {
+                        Bit::Wire(self.wire_for(bx, px))
+                    } else {
+                        Bit::Const(false)
+                    };
+                }
+                let (ka, kb) = (pack(bx, px), pack(by, py));
+                let key = if ka < kb { (ka, kb) } else { (kb, ka) };
+                if let Some(&w) = self.and_cache.get(&key) {
+                    return Bit::Wire(w);
+                }
+                let wa = self.wire_for(bx, px);
+                let wb = self.wire_for(by, py);
+                let (lo, hi) = if wa < wb { (wa, wb) } else { (wb, wa) };
+                let w = self.push(WireDef::And(lo, hi));
+                self.and_cache.insert(key, w);
+                Bit::Wire(w)
             }
         }
     }
@@ -92,7 +284,13 @@ impl Builder {
     pub fn not(&mut self, a: Bit) -> Bit {
         match a {
             Bit::Const(x) => Bit::Const(!x),
-            Bit::Wire(w) => Bit::Wire(self.push(WireDef::Not(w))),
+            Bit::Wire(w) => {
+                if !self.cse {
+                    return Bit::Wire(self.push(WireDef::Not(w)));
+                }
+                let (b, p) = self.norm_of(w);
+                Bit::Wire(self.wire_for(b, !p))
+            }
         }
     }
 
@@ -106,6 +304,20 @@ impl Builder {
 
     /// 2:1 MUX: `s ? a : b` at one AND.
     pub fn mux(&mut self, s: Bit, a: Bit, b: Bit) -> Bit {
+        // ¬s ? a : b  ==  s ? b : a — folding the selector's negation into
+        // an arm swap keeps the AND keyed on the base wire; the NOT it
+        // replaces dies unless something else reads it.
+        let (s, a, b) = match s {
+            Bit::Wire(w) if self.cse => {
+                let (bs, ps) = self.norm_of(w);
+                if ps {
+                    (Bit::Wire(bs), b, a)
+                } else {
+                    (s, a, b)
+                }
+            }
+            _ => (s, a, b),
+        };
         let d = self.xor(a, b);
         let t = self.and(s, d);
         self.xor(t, b)
@@ -211,22 +423,35 @@ impl Builder {
 
     /// Turn a Bit into a concrete wire id. Constant outputs need an anchor
     /// wire: we synthesize them from input 0 (x ⊕ x = 0) — valid because
-    /// every real circuit here has at least one input.
+    /// every real circuit here has at least one input. The anchor and both
+    /// constant wires are cached on first use, so repeated constant
+    /// outputs share wires instead of re-scanning and re-pushing.
     fn materialize(&mut self, b: Bit) -> WireId {
         match b {
             Bit::Wire(w) => w,
             Bit::Const(c) => {
-                assert!(self.circuit.n_inputs > 0, "constant output in inputless circuit");
-                // Find wire id of input 0: it is the first Input def.
-                let w0 = self
-                    .circuit
-                    .wires
-                    .iter()
-                    .position(|w| matches!(w, WireDef::Input(0)))
-                    .expect("input 0 exists") as WireId;
-                let zero = self.push(WireDef::Xor(w0, w0));
+                let zero = match self.const_zero {
+                    Some(z) => z,
+                    None => {
+                        assert!(
+                            self.circuit.n_inputs > 0,
+                            "constant output in inputless circuit"
+                        );
+                        let w0 = self.first_input.expect("input 0 exists");
+                        let z = self.push(WireDef::Xor(w0, w0));
+                        self.const_zero = Some(z);
+                        z
+                    }
+                };
                 if c {
-                    self.push(WireDef::Not(zero))
+                    match self.const_one {
+                        Some(o) => o,
+                        None => {
+                            let o = self.push(WireDef::Not(zero));
+                            self.const_one = Some(o);
+                            o
+                        }
+                    }
                 } else {
                     zero
                 }
@@ -424,10 +649,123 @@ mod tests {
     }
 
     #[test]
+    fn repeated_constant_outputs_share_anchor_wires() {
+        let mut bld = Builder::new();
+        let a = bld.input();
+        bld.output(a);
+        for _ in 0..8 {
+            bld.output(Bit::Const(true));
+            bld.output(Bit::Const(false));
+        }
+        let c = bld.build();
+        // 1 input + 1 zero anchor + 1 NOT — not one anchor per constant.
+        assert_eq!(c.wires.len(), 3);
+        let mut want = vec![false];
+        for _ in 0..8 {
+            want.push(true);
+            want.push(false);
+        }
+        assert_eq!(c.eval_plain(&[false]), want);
+    }
+
+    #[test]
     fn xor_self_folds_to_zero() {
         let mut bld = Builder::new();
         let a = bld.input();
         let z = bld.xor(a, a);
         assert_eq!(z, Bit::Const(false));
+    }
+
+    #[test]
+    fn repeated_gates_are_hash_consed() {
+        let mut bld = Builder::new();
+        let a = bld.input();
+        let b = bld.input();
+        let x1 = bld.xor(a, b);
+        let x2 = bld.xor(b, a); // commuted repeat
+        assert_eq!(x1, x2);
+        let t1 = bld.and(a, b);
+        let t2 = bld.and(b, a);
+        assert_eq!(t1, t2);
+        bld.output(x1);
+        bld.output(t1);
+        let c = bld.build();
+        assert_eq!(c.n_xor(), 1);
+        assert_eq!(c.n_and(), 1);
+    }
+
+    #[test]
+    fn double_negation_folds() {
+        let mut bld = Builder::new();
+        let a = bld.input();
+        let n = bld.not(a);
+        let nn = bld.not(n);
+        assert_eq!(nn, a);
+        // Repeated NOT of the same wire is also memoized.
+        let n2 = bld.not(a);
+        assert_eq!(n, n2);
+    }
+
+    #[test]
+    fn parity_aware_folds() {
+        let mut bld = Builder::new();
+        let a = bld.input();
+        let na = bld.not(a);
+        assert_eq!(bld.and(a, na), Bit::Const(false));
+        assert_eq!(bld.xor(a, na), Bit::Const(true));
+        assert_eq!(bld.and(na, na), na);
+    }
+
+    #[test]
+    fn xor_shared_leg_cancels() {
+        let mut bld = Builder::new();
+        let a = bld.input();
+        let b = bld.input();
+        let t = bld.input();
+        let ab = bld.xor(a, b);
+        // (a⊕b)⊕b = a, (a⊕b)⊕a = b: no new gate.
+        assert_eq!(bld.xor(ab, b), a);
+        assert_eq!(bld.xor(ab, a), b);
+        // (a⊕b)⊕(a⊕t) = b⊕t.
+        let at = bld.xor(a, t);
+        let bt = bld.xor(b, t);
+        assert_eq!(bld.xor(ab, at), bt);
+    }
+
+    #[test]
+    fn negated_selector_mux_swaps_arms() {
+        let mut bld = Builder::new();
+        let s = bld.input();
+        let a = bld.input();
+        let b = bld.input();
+        let ns = bld.not(s);
+        let o = bld.mux(ns, a, b);
+        bld.output(o);
+        let c = bld.build().optimize();
+        // The NOT was folded into an arm swap and then reclaimed.
+        assert_eq!(c.n_and(), 1);
+        assert!(!c.wires.iter().any(|w| matches!(w, WireDef::Not(_))));
+        for s in [false, true] {
+            for a in [false, true] {
+                for b in [false, true] {
+                    let out = c.eval_plain(&[s, a, b]);
+                    assert_eq!(out[0], if !s { a } else { b }, "{s} {a} {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn naive_builder_skips_cse() {
+        let mut bld = Builder::new_naive();
+        let a = bld.input();
+        let b = bld.input();
+        let x1 = bld.xor(a, b);
+        let x2 = bld.xor(a, b);
+        assert_ne!(x1, x2);
+        bld.output(x1);
+        bld.output(x2);
+        let c = bld.build();
+        assert_eq!(c.n_xor(), 2);
     }
 }

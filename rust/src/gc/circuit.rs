@@ -39,6 +39,97 @@ impl Circuit {
         self.wires.iter().filter(|w| matches!(w, WireDef::Xor(_, _))).count()
     }
 
+    /// Number of NOT gates (free: label-semantics flip).
+    pub fn n_not(&self) -> usize {
+        self.wires.iter().filter(|w| matches!(w, WireDef::Not(_))).count()
+    }
+
+    /// Total gate count (everything that is not an input wire).
+    pub fn n_gates(&self) -> usize {
+        self.wires.len() - self.n_inputs as usize
+    }
+
+    /// Material-squeeze pass over a built circuit: output-reachability
+    /// dead-wire elimination, duplicate-gate elimination (commutatively
+    /// normalized — a safety net for circuits assembled outside the
+    /// hash-consing builder), and topological compaction with a wire-id
+    /// remap (outputs rewritten).
+    ///
+    /// All `Input` wires are kept in order regardless of liveness: the
+    /// protocol's label encoders address inputs positionally, so the input
+    /// layout is part of the circuit's external contract. `eval_plain` on
+    /// the result is pointwise identical to the original and `validate()`
+    /// holds whenever it held on the input.
+    pub fn optimize(&self) -> Circuit {
+        let n = self.wires.len();
+        // 1. Liveness: everything reachable from an output.
+        let mut live = vec![false; n];
+        let mut stack: Vec<WireId> = self.outputs.clone();
+        while let Some(w) = stack.pop() {
+            let i = w as usize;
+            if live[i] {
+                continue;
+            }
+            live[i] = true;
+            match self.wires[i] {
+                WireDef::Input(_) => {}
+                WireDef::Xor(a, b) | WireDef::And(a, b) => {
+                    stack.push(a);
+                    stack.push(b);
+                }
+                WireDef::Not(a) => stack.push(a),
+            }
+        }
+        // 2. Forward pass: compact live wires (plus all inputs), dedup
+        //    structurally identical gates, remap operand ids.
+        let mut map: Vec<WireId> = vec![0; n];
+        let mut wires: Vec<WireDef> = Vec::with_capacity(n);
+        let mut seen: std::collections::HashMap<(u8, WireId, WireId), WireId> =
+            std::collections::HashMap::new();
+        for (i, def) in self.wires.iter().enumerate() {
+            let is_input = matches!(def, WireDef::Input(_));
+            if !live[i] && !is_input {
+                continue;
+            }
+            let new_def = match *def {
+                WireDef::Input(k) => WireDef::Input(k),
+                WireDef::Xor(a, b) => {
+                    let (a, b) = (map[a as usize], map[b as usize]);
+                    WireDef::Xor(a.min(b), a.max(b))
+                }
+                WireDef::And(a, b) => {
+                    let (a, b) = (map[a as usize], map[b as usize]);
+                    WireDef::And(a.min(b), a.max(b))
+                }
+                WireDef::Not(a) => WireDef::Not(map[a as usize]),
+            };
+            let id = if is_input {
+                let id = wires.len() as WireId;
+                wires.push(new_def);
+                id
+            } else {
+                let key = match new_def {
+                    WireDef::Input(_) => unreachable!("inputs handled above"),
+                    WireDef::Xor(a, b) => (1u8, a, b),
+                    WireDef::And(a, b) => (2u8, a, b),
+                    WireDef::Not(a) => (3u8, a, 0),
+                };
+                match seen.get(&key) {
+                    Some(&e) => e,
+                    None => {
+                        let id = wires.len() as WireId;
+                        wires.push(new_def);
+                        seen.insert(key, id);
+                        id
+                    }
+                }
+            };
+            map[i] = id;
+        }
+        let outputs = self.outputs.iter().map(|&o| map[o as usize]).collect();
+        Circuit { wires, n_inputs: self.n_inputs, outputs }
+    }
+
     /// Plain (insecure) evaluation — the correctness oracle for the
     /// garbling engine and for the Fig. 2 circuits.
     pub fn eval_plain(&self, inputs: &[bool]) -> Vec<bool> {
@@ -154,5 +245,66 @@ mod tests {
     #[should_panic]
     fn eval_wrong_arity_panics() {
         xor_and_circuit().eval_plain(&[true]);
+    }
+
+    #[test]
+    fn optimize_drops_dead_wires_keeps_inputs() {
+        // Dead: And(0,1) at 3 and the unused Input(2) must survive anyway.
+        let c = Circuit {
+            wires: vec![
+                WireDef::Input(0),
+                WireDef::Input(1),
+                WireDef::Xor(0, 1),
+                WireDef::And(0, 1),
+                WireDef::Input(2),
+                WireDef::Not(2),
+            ],
+            n_inputs: 3,
+            outputs: vec![5],
+        };
+        let o = c.optimize();
+        assert!(o.validate().is_ok());
+        assert_eq!(o.n_inputs, 3);
+        assert_eq!(o.n_and(), 0);
+        assert_eq!(o.n_xor(), 0);
+        assert_eq!(o.n_not(), 1);
+        assert_eq!(o.n_gates(), 1);
+        for bits in 0..8u32 {
+            let inp: Vec<bool> = (0..3).map(|i| (bits >> i) & 1 == 1).collect();
+            assert_eq!(c.eval_plain(&inp), o.eval_plain(&inp));
+        }
+    }
+
+    #[test]
+    fn optimize_dedups_commuted_gates() {
+        let c = Circuit {
+            wires: vec![
+                WireDef::Input(0),
+                WireDef::Input(1),
+                WireDef::And(0, 1),
+                WireDef::And(1, 0),
+                WireDef::Xor(2, 3),
+                WireDef::Xor(3, 2),
+                WireDef::Xor(4, 5),
+            ],
+            n_inputs: 2,
+            outputs: vec![2, 3, 6],
+        };
+        let o = c.optimize();
+        assert!(o.validate().is_ok());
+        assert_eq!(o.n_and(), 1, "commuted AND repeat must dedup");
+        for bits in 0..4u32 {
+            let inp: Vec<bool> = (0..2).map(|i| (bits >> i) & 1 == 1).collect();
+            assert_eq!(c.eval_plain(&inp), o.eval_plain(&inp));
+        }
+    }
+
+    #[test]
+    fn optimize_is_idempotent() {
+        let c = xor_and_circuit();
+        let o1 = c.optimize();
+        let o2 = o1.optimize();
+        assert_eq!(o1.wires, o2.wires);
+        assert_eq!(o1.outputs, o2.outputs);
     }
 }

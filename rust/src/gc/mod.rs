@@ -1,18 +1,28 @@
-//! Boolean garbled circuits: IR, combinators, garbling engine.
+//! Boolean garbled circuits: IR, combinators, optimizer, garbling engine.
 //!
 //! This is the substrate the paper's Fig. 2 circuits are built on:
 //!
 //! * [`circuit`] — topologically-ordered gate IR (`XOR`/`AND`/`NOT`) with a
-//!   plain evaluator for testing.
+//!   plain evaluator for testing, plus [`circuit::Circuit::optimize`]:
+//!   output-reachability dead-wire elimination, duplicate-gate
+//!   elimination, and topological compaction with an output remap —
+//!   `eval_plain`-preserving by construction, pinned by
+//!   `tests/circuit_opt.rs`.
 //! * [`build`] — bus combinators (ripple adders/subtractors at 1 AND/bit,
-//!   comparators, MUXes) with automatic constant folding, so circuits that
-//!   compare against public constants (`p`, `p/2`) get cheaper for free.
+//!   comparators, MUXes) with constant folding *and* hash-consing CSE:
+//!   parity-normalized wires, commutatively keyed gate caches, one-level
+//!   XOR cancellation — repeated subterms come back as existing wires
+//!   instead of fresh gates, so circuits comparing against public
+//!   constants (`p`, `p/2`) and sharing ripple-chain subterms get
+//!   cheaper for free. `Builder::new_naive` keeps the seed's pre-CSE
+//!   behavior as the test reference.
 //! * [`garble`] / [`eval`] — free-XOR + point-and-permute + half-gates
 //!   (2 ciphertexts = 32 bytes per AND gate; XOR and NOT are free).
-//! * [`batch`] — layer-level SoA material: one circuit template + one
+//! * [`batch`] — layer-level SoA material: one shared `Arc<Circuit>`
+//!   template (memoized per variant by `circuits::template`) + one
 //!   contiguous table/label buffer per ReLU layer with strided per-ReLU
 //!   views (the offline material's at-rest representation).
-//! * [`size`] — byte accounting used for Fig. 5.
+//! * [`size`] — byte accounting used for Fig. 5 (post-optimizer counts).
 
 pub mod batch;
 pub mod build;

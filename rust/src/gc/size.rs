@@ -6,6 +6,18 @@
 //! (delivered directly for garbler inputs, via OT for evaluator inputs —
 //! the OT-extension asymptote is ~2 labels/bit, tracked separately in
 //! [`crate::ot`]).
+//!
+//! The Fig. 5 storage gap is therefore exactly `32 × ΔAND + 16 × Δinputs`
+//! per ReLU between variants — the stochastic sign drops the mod-p
+//! reconstruction's AND columns, truncation `k` shaves `k` comparator
+//! ANDs *and* `2k` input labels. Since the material-squeeze round these
+//! counts are measured on the *post-optimizer* templates (hash-consing
+//! CSE build + [`Circuit::optimize`] — see [`super::build`]): the
+//! baseline ReLU sheds a couple of ANDs of structural duplication on top
+//! of constant folding, while the lean stochastic circuits were already
+//! duplicate-free, so the paper's relative storage ratios hold with the
+//! absolute bytes a touch smaller. `benches/circuit_size.rs` records the
+//! per-variant before/after counts.
 
 use super::circuit::Circuit;
 
@@ -16,6 +28,9 @@ pub struct CircuitCost {
     pub n_outputs: usize,
     pub n_and: usize,
     pub n_xor: usize,
+    /// Free like XOR, but counted: NOTs are where the optimizer's
+    /// dead-wire elimination shows up.
+    pub n_not: usize,
 }
 
 /// Bytes per AND gate under half-gates garbling.
@@ -31,7 +46,13 @@ impl CircuitCost {
             n_outputs: c.outputs.len(),
             n_and: c.n_and(),
             n_xor: c.n_xor(),
+            n_not: c.n_not(),
         }
+    }
+
+    /// Total gates (AND + XOR + NOT).
+    pub fn n_gates(&self) -> usize {
+        self.n_and + self.n_xor + self.n_not
     }
 
     /// Garbled-table bytes (the dominant, reuse-proof storage).

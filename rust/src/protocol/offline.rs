@@ -149,7 +149,9 @@ pub fn offline_relu_layer_mt(
 ) -> (ClientReluMaterial, ServerReluMaterial) {
     let n = xc.len();
     let spec = variant.spec();
-    let circuit = spec.build_circuit();
+    // Memoized optimized template — one build per variant per process,
+    // shared by every layer batch via `Arc`.
+    let circuit = spec.circuit();
 
     // Column forks, drawn from the parent in this fixed order — the
     // schedule contract that `tests/batch_equivalence.rs` re-derives.

@@ -49,8 +49,13 @@ pub const MAGIC: u32 = u32::from_le_bytes(*b"CIRW");
 /// ([`SessionManifest::weight_hash`], folded into the fingerprint), and
 /// `Request`, `RequestLayers`, `LayerBatch`, and `Spine` payloads lead
 /// with the model fingerprint so one connection serves any registered
-/// plan.
-pub const VERSION: u16 = 3;
+/// plan. v4 (one-time, material-squeeze round): circuit templates are
+/// CSE-built and [`crate::gc::circuit::Circuit::optimize`]d, so the
+/// garbled-table strides both ends derive from `VariantSpec` shrank —
+/// same encodings, different material layout, hence the bump (a v3
+/// dealer's tables would fail the stride cross-check with a confusing
+/// error instead of a clean version mismatch).
+pub const VERSION: u16 = 4;
 
 /// Upper bound on manifests per handshake set (decode guard).
 pub const MAX_MANIFESTS: u32 = 1024;
@@ -191,7 +196,9 @@ pub fn get_gc_batch(r: &mut Reader, spec: &VariantSpec) -> Result<LayerGcBatch> 
     let n = r.len_u64()?;
     let and_stride = r.u32()? as usize;
     let out_stride = r.u32()? as usize;
-    let circuit = spec.build_circuit();
+    // Memoized template lookup (`circuits::template`): decode validates
+    // strides against the shared optimized circuit without a rebuild.
+    let circuit = spec.circuit();
     ensure!(
         and_stride == circuit.n_and(),
         "and stride {and_stride} != circuit {} for {:?}",

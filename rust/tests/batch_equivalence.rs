@@ -20,6 +20,14 @@
 //! produce equal material and therefore equal transcripts; any
 //! divergence in the batched data plane shows up as a share or byte
 //! mismatch.
+//!
+//! **Third one-time note (circuit material squeeze):** circuit templates
+//! are now CSE-built and `Circuit::optimize`d, so the garbled material
+//! is smaller than the seed's. No byte constants live in this file and
+//! the RNG schedule draws per *input wire* (never per gate), so both the
+//! reference (`spec.build_circuit()`) and the batched path (the memoized
+//! `spec.circuit()` template, identical content by construction) shifted
+//! together — the equivalence here is unaffected.
 
 use circa::beaver::{self, TripleShare};
 use circa::circuits::spec::{FaultMode, ReluVariant};

@@ -1,0 +1,296 @@
+//! Contract tests for the circuit-level material squeeze (hash-consing
+//! CSE builder + `Circuit::optimize` + memoized templates):
+//!
+//! * every builder combinator agrees exhaustively with the naive (seed)
+//!   builder at small widths;
+//! * every `ReluVariant` circuit (all modes, k ∈ {0, 8, 12}) agrees with
+//!   its naive build on randomized encoder-shaped and uniform inputs;
+//! * the gate-count regression guard: the optimized AND count never
+//!   exceeds the seed count (hard fail), total gates strictly shrink for
+//!   every variant, and the baseline ReLU sheds ANDs outright;
+//! * leased-session inference logits are bit-identical with the
+//!   optimizer on and off (the protocol's RNG schedule never depends on
+//!   gate structure — only the garbled material's shape does).
+
+use circa::circuits::spec::{FaultMode, ReluVariant};
+use circa::circuits::{template, trunc_sign_gc};
+use circa::field::Fp;
+use circa::gc::build::{u64_to_bits, Bit, Builder};
+use circa::gc::circuit::Circuit;
+use circa::protocol::linear::{LinearOp, Matrix};
+use circa::protocol::server::{offline_network_mt, run_inference, session_rng, NetworkPlan};
+use circa::util::Rng;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Serializes the tests that read or flip the process-global template
+/// state (the raw-templates hook and the cache-content assertions).
+fn template_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let m = LOCK.get_or_init(|| Mutex::new(()));
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn all_variants() -> Vec<ReluVariant> {
+    let mut v = vec![
+        ReluVariant::BaselineRelu,
+        ReluVariant::NaiveSign,
+        ReluVariant::StochasticSign { mode: FaultMode::PosZero },
+        ReluVariant::StochasticSign { mode: FaultMode::NegPass },
+    ];
+    for k in [0u32, 8, 12] {
+        v.push(ReluVariant::TruncatedSign { k, mode: FaultMode::PosZero });
+        v.push(ReluVariant::TruncatedSign { k, mode: FaultMode::NegPass });
+    }
+    v
+}
+
+fn exhaustive_agree(cse: &Circuit, naive: &Circuit, n_inputs: usize, what: &str) {
+    assert_eq!(cse.n_inputs, naive.n_inputs, "{what}: input arity");
+    assert!(cse.validate().is_ok(), "{what}: cse validate");
+    assert!(naive.validate().is_ok(), "{what}: naive validate");
+    let opt = cse.optimize();
+    assert!(opt.validate().is_ok(), "{what}: optimized validate");
+    for bits in 0u64..(1 << n_inputs) {
+        let inputs = u64_to_bits(bits, n_inputs);
+        let want = naive.eval_plain(&inputs);
+        assert_eq!(cse.eval_plain(&inputs), want, "{what}: cse inputs={bits:#x}");
+        assert_eq!(opt.eval_plain(&inputs), want, "{what}: optimized inputs={bits:#x}");
+    }
+}
+
+/// Build the same component with the CSE and naive builders and compare
+/// exhaustively (raw CSE circuit *and* its optimized form).
+fn check_component(what: &str, n_inputs: usize, f: impl Fn(&mut Builder)) {
+    let mut cse = Builder::new();
+    f(&mut cse);
+    let mut naive = Builder::new_naive();
+    f(&mut naive);
+    exhaustive_agree(&cse.build(), &naive.build(), n_inputs, what);
+}
+
+#[test]
+fn combinators_agree_with_naive_builder_exhaustively() {
+    let w = 3usize;
+    check_component("add", 2 * w, |b| {
+        let x = b.input_bus(w);
+        let y = b.input_bus(w);
+        let (s, c) = b.add(&x, &y);
+        b.output_bus(&s);
+        b.output(c);
+    });
+    check_component("sub", 2 * w, |b| {
+        let x = b.input_bus(w);
+        let y = b.input_bus(w);
+        let (d, bw) = b.sub(&x, &y);
+        b.output_bus(&d);
+        b.output(bw);
+    });
+    check_component("cmp", 2 * w, |b| {
+        let x = b.input_bus(w);
+        let y = b.input_bus(w);
+        let geq = b.geq(&x, &y);
+        let gt = b.gt(&x, &y);
+        let leq = b.leq(&x, &y);
+        b.output(geq);
+        b.output(gt);
+        b.output(leq);
+    });
+    check_component("mux_bus", 1 + 2 * w, |b| {
+        let s = b.input();
+        let x = b.input_bus(w);
+        let y = b.input_bus(w);
+        let o = b.mux_bus(s, &x, &y);
+        b.output_bus(&o);
+        // Negated selector too (exercises the arm-swap rewrite).
+        let ns = b.not(s);
+        let o2 = b.mux_bus(ns, &x, &y);
+        b.output_bus(&o2);
+    });
+    check_component("or_chain", 4, |b| {
+        let x = b.input_bus(4);
+        let mut acc = x[0];
+        for &bit in &x[1..] {
+            acc = b.or(acc, bit);
+        }
+        b.output(acc);
+        // Same chain again: should be free under CSE, same value always.
+        let mut acc2 = x[0];
+        for &bit in &x[1..] {
+            acc2 = b.or(acc2, bit);
+        }
+        b.output(acc2);
+    });
+    // Composite in the Fig. 2 shape: add a constant, subtract, compare
+    // against a constant, MUX the difference — the exact pattern the
+    // one-level XOR cancellation targets.
+    check_component("const_sub_mux", 2 * w, |b| {
+        let x = b.input_bus(w);
+        let y = b.input_bus(w);
+        let (z, zc) = b.add(&x, &y);
+        let mut z_ext = z;
+        z_ext.push(zc);
+        let p = b.const_bus(0b101, w + 1);
+        let (z_minus_p, no_borrow) = b.sub(&z_ext, &p);
+        let wrap = b.not(no_borrow);
+        let sel = b.mux_bus(wrap, &z_minus_p[..w], &z_ext[..w]);
+        b.output_bus(&sel);
+        let half = b.const_bus(0b011, w);
+        let is_neg = b.geq(&sel, &half);
+        let zero = b.const_bus(0, w);
+        let relu = b.mux_bus(is_neg, &zero, &sel);
+        b.output_bus(&relu);
+    });
+    // Constant outputs ride through materialize's cached anchors.
+    check_component("const_outputs", 2, |b| {
+        let x = b.input();
+        let y = b.input();
+        let t = b.and(x, y);
+        b.output(t);
+        b.output(Bit::Const(true));
+        b.output(Bit::Const(false));
+        b.output(Bit::Const(true));
+    });
+}
+
+/// Random full-width agreement for every variant: naive build vs CSE
+/// build vs optimized vs the memoized template.
+#[test]
+fn variant_circuits_agree_with_naive_build_randomized() {
+    let _guard = template_lock();
+    let mut rng = Rng::new(0xC1AC);
+    for variant in all_variants() {
+        let spec = variant.spec();
+        let naive = spec.build_circuit_naive();
+        let opt = spec.build_circuit();
+        let cached = spec.circuit();
+        assert_eq!(naive.n_inputs, opt.n_inputs, "{variant:?}: input arity");
+        assert_eq!(cached.wires, opt.wires, "{variant:?}: cache content");
+        assert_eq!(cached.outputs, opt.outputs, "{variant:?}: cache outputs");
+        let n_in = spec.n_inputs();
+        for iter in 0..200 {
+            // Half encoder-shaped inputs (valid field shares), half
+            // uniform bit patterns (the circuits are total functions).
+            let inputs: Vec<bool> = if iter % 2 == 0 {
+                let xc = circa::field::random_fp(&mut rng);
+                let xs = circa::field::random_fp(&mut rng);
+                let rv = circa::field::random_fp(&mut rng);
+                let rout = circa::field::random_fp(&mut rng);
+                let mut bits = spec.client_bits(xc, rv, rout);
+                bits.extend(spec.server_bits(xs));
+                bits
+            } else {
+                (0..n_in).map(|_| rng.bool()).collect()
+            };
+            let want = naive.eval_plain(&inputs);
+            assert_eq!(opt.eval_plain(&inputs), want, "{variant:?} iter={iter}");
+        }
+    }
+}
+
+/// Gate-count regression guard. Hard-fails if any variant's optimized
+/// AND count regresses past its seed (naive) count, if total gates stop
+/// strictly shrinking, or if the truncated formula bound breaks; logs
+/// the full per-variant table for review.
+#[test]
+fn gate_counts_never_regress_past_seed() {
+    let mut table = String::from(
+        "\nvariant                         AND naive/opt   XOR naive/opt   NOT naive/opt   gates naive/opt\n",
+    );
+    for variant in all_variants() {
+        let spec = variant.spec();
+        let naive = spec.build_circuit_naive();
+        let opt = spec.build_circuit();
+        table.push_str(&format!(
+            "{:<30} {:>6}/{:<6} {:>7}/{:<7} {:>7}/{:<7} {:>8}/{:<8}\n",
+            format!("{variant:?}"),
+            naive.n_and(),
+            opt.n_and(),
+            naive.n_xor(),
+            opt.n_xor(),
+            naive.n_not(),
+            opt.n_not(),
+            naive.n_gates(),
+            opt.n_gates(),
+        ));
+        assert!(
+            opt.n_and() <= naive.n_and(),
+            "{variant:?}: optimized ANDs {} regressed past seed {}{table}",
+            opt.n_and(),
+            naive.n_and()
+        );
+        assert!(
+            opt.n_gates() < naive.n_gates(),
+            "{variant:?}: optimized gates {} not strictly below seed {}{table}",
+            opt.n_gates(),
+            naive.n_gates()
+        );
+        // Builds are deterministic: the dealt material layout is a pure
+        // function of the variant.
+        let again = spec.build_circuit();
+        assert_eq!(again.wires, opt.wires, "{variant:?}: non-deterministic build");
+        // The optimizer is a fixpoint on its own output.
+        let twice = opt.optimize();
+        assert_eq!(twice.wires, opt.wires, "{variant:?}: optimize not idempotent");
+        if let ReluVariant::TruncatedSign { k, .. } = variant {
+            assert!(
+                opt.n_and() <= trunc_sign_gc::expected_ands(k),
+                "{variant:?}: ANDs exceed the Eq. 3 formula bound"
+            );
+        }
+    }
+    let baseline = ReluVariant::BaselineRelu.spec();
+    assert!(
+        baseline.build_circuit().n_and() < baseline.build_circuit_naive().n_and(),
+        "baseline ReLU must shed AND gates under CSE{table}"
+    );
+    eprintln!("{table}");
+}
+
+/// 6 → 5 → relu → 5 → 4 → relu → 4 → 3 synthetic plan (the
+/// `tests/online_batch.rs` shape).
+fn plan(variant: ReluVariant, seed: u64) -> NetworkPlan {
+    let mut rng = Rng::new(seed);
+    let linears: Vec<Arc<dyn LinearOp>> = vec![
+        Arc::new(Matrix::random(5, 6, 20, &mut rng)),
+        Arc::new(Matrix::random(4, 5, 20, &mut rng)),
+        Arc::new(Matrix::random(3, 4, 20, &mut rng)),
+    ];
+    NetworkPlan { linears, variant, rescale_bits: Vec::new() }
+}
+
+/// End-to-end: lease sessions and run inference with raw (pre-CSE,
+/// unoptimized) templates, then again from the same seeds with the
+/// optimized templates. The offline RNG schedule draws per *input wire*
+/// and per scalar column — never per gate — so logits must be
+/// bit-identical; only the garbled material shrinks.
+#[test]
+fn leased_session_logits_bit_identical_before_and_after_optimizer() {
+    let _guard = template_lock();
+    let variants = [
+        ReluVariant::BaselineRelu,
+        ReluVariant::NaiveSign,
+        ReluVariant::StochasticSign { mode: FaultMode::NegPass },
+        ReluVariant::TruncatedSign { k: 12, mode: FaultMode::PosZero },
+    ];
+    for (vi, variant) in variants.into_iter().enumerate() {
+        let p = plan(variant, 77 + vi as u64);
+        let input: Vec<Fp> = (0..6).map(|j| Fp::from_i64(900 + 7 * j)).collect();
+
+        let run = |raw: bool| {
+            template::set_raw_templates_for_tests(raw);
+            let out: Vec<_> = (0..2u64)
+                .map(|seq| {
+                    let (cn, sn, _) =
+                        offline_network_mt(&p, &mut session_rng(0xBEEF + vi as u64, seq), 1);
+                    let (logits, _) = run_inference(&cn, &sn, &input);
+                    logits
+                })
+                .collect();
+            template::set_raw_templates_for_tests(false);
+            out
+        };
+        let before = run(true);
+        let after = run(false);
+        assert_eq!(before, after, "{variant:?}: logits changed across the optimizer");
+    }
+}

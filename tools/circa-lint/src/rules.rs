@@ -25,6 +25,10 @@ pub const R1_MODULES: &[&str] = &[
     "net/proto.rs",
     "net/frames.rs",
     "util/bytes.rs",
+    // Not a decode path, but held to the same no-panic bar: the
+    // process-wide template cache sits under every serving-tier deal,
+    // and a poisoned or panicking lookup would take the dealer down.
+    "circuits/template.rs",
 ];
 
 /// Modules whose `.lock()` scopes must stay free of blocking calls.
